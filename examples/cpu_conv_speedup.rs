@@ -1,0 +1,31 @@
+//! The paper's CPU experiment (Fig. 6) as a runnable demo: measure
+//! baseline vs HiKonv on 1-D convolutions, the UltraNet final layer, and
+//! the bitwidth sweep. Set HIKONV_BENCH_QUICK=1 for a fast pass.
+//!
+//! ```bash
+//! cargo run --release --example cpu_conv_speedup
+//! ```
+
+use hikonv::bench::BenchConfig;
+use hikonv::experiments::fig6;
+
+fn main() {
+    let config = BenchConfig::from_env();
+
+    let (t, rows) = fig6::fig6a(config);
+    print!("{}", t.render());
+    let mean: f64 =
+        rows.iter().map(fig6::LatencyRow::speedup).sum::<f64>() / rows.len() as f64;
+    println!("mean 1-D speedup: {mean:.2}x (paper: ~3.17x at 4-bit)\n");
+
+    let (t, rows) = fig6::fig6b(config);
+    print!("{}", t.render());
+    println!(
+        "DNN layer speedup: {:.2}x (paper: ~3x at 4-bit)\n",
+        rows[0].speedup()
+    );
+
+    let (t, rows) = fig6::fig6c(config);
+    print!("{}", t.render());
+    println!("1-bit speedup: {:.2}x (paper: 8.6x)", rows[0].speedup());
+}

@@ -1,0 +1,45 @@
+//! Design-space exploration (the paper's §III-C analysis): sweep (p, q)
+//! for several multipliers, print the Fig.-5 surfaces, the Pareto frontier
+//! and the port-utilization picture.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use hikonv::theory::{
+    explore, pareto_points, surface, AccumMode, Multiplier, Signedness,
+};
+use hikonv::util::table::Table;
+
+fn main() {
+    for mult in [Multiplier::DSP48E2, Multiplier::CPU32, Multiplier::CPU64] {
+        let srf = surface(mult, Signedness::Unsigned, AccumMode::Single);
+        print!("{}", srf.to_table().render());
+
+        let points = explore(mult, 8, Signedness::Unsigned, AccumMode::Single);
+        let front = pareto_points(&points);
+        let mut t = Table::new(
+            &format!(
+                "Pareto frontier {}x{} (precision vs throughput)",
+                mult.bit_a, mult.bit_b
+            ),
+            &["p", "q", "S", "N", "K", "ops/cycle", "A util", "B util"],
+        );
+        for f in front {
+            t.row(hikonv::cells!(
+                f.dp.p,
+                f.dp.q,
+                f.dp.s,
+                f.dp.n,
+                f.dp.k,
+                f.ops,
+                format!("{:.0}%", f.dp.util_a() * 100.0),
+                format!("{:.0}%", f.dp.util_b() * 100.0)
+            ));
+        }
+        print!("{}", t.render());
+        println!();
+    }
+    println!("note: binary points where the paper's stated N violates Eq. 7");
+    println!("are reported by the strict solver — see DESIGN.md §3.");
+}

@@ -1,0 +1,99 @@
+//! END-TO-END DRIVER (DESIGN.md §4 "E2E"): the full three-layer system on a
+//! real small workload.
+//!
+//! Streams synthetic DAC-SDC-style frames through the L3 coordinator into
+//! the **PJRT-compiled UltraNet-tiny artifact** — the L2 JAX graph whose
+//! conv layers are the L1 Pallas kernels — and reports fps + latency
+//! percentiles; then repeats with the native CPU HiKonv engine and the
+//! baseline engine for comparison, including the ARM-feeder-capped run
+//! that reproduces Table II's measured-vs-potential split.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ultranet_serve
+//! ```
+
+use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
+use hikonv::coordinator::{serve, InferBackend, ServeConfig};
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::runtime::{artifacts, artifacts_dir, Runtime};
+use hikonv::theory::Multiplier;
+use std::time::Duration;
+
+fn config(frames: u64, cap: Option<f64>) -> ServeConfig {
+    ServeConfig {
+        frames,
+        source_fps_cap: cap,
+        queue_depth: 8,
+        max_batch: 4,
+        linger: Duration::from_millis(1),
+        seed: 7,
+        bits: 4,
+    }
+}
+
+fn main() {
+    let model = ultranet_tiny();
+    let frames = std::env::var("HIKONV_SERVE_FRAMES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48u64);
+
+    // --- PJRT backend: the AOT three-layer path ---------------------------
+    if artifacts_dir().join(artifacts::ULTRANET_TINY).exists() {
+        let rt = Runtime::cpu().expect("PJRT client");
+        println!("PJRT platform: {}", rt.platform());
+        let loaded = rt.load_artifact(artifacts::ULTRANET_TINY).unwrap();
+        let backend: Box<dyn InferBackend> =
+            Box::new(PjrtBackend::new(loaded, model.input, model.output_dims()));
+        let report = serve(backend, &config(frames, None));
+        println!("--- PJRT (L1 Pallas kernels via L2 JAX, AOT) ---");
+        print!("{}", report.render());
+        println!();
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT backend)\n");
+    }
+
+    // --- native CPU engines ------------------------------------------------
+    for (label, kind) in [
+        ("baseline 6-loop nest", EngineKind::Baseline),
+        ("HiKonv packed engine", EngineKind::HiKonv(Multiplier::CPU32)),
+    ] {
+        let runner =
+            CpuRunner::new(model.clone(), random_weights(&model, 7), kind).unwrap();
+        let report = serve(Box::new(CpuBackend::new(runner)), &config(frames, None));
+        println!("--- {label} ---");
+        print!("{}", report.render());
+        println!();
+    }
+
+    // --- parallel worker pool (scales the HiKonv engine across cores) ------
+    for workers in [2usize, 4] {
+        let pool = hikonv::coordinator::ParallelCpuBackend::new(
+            model.clone(),
+            random_weights(&model, 7),
+            EngineKind::HiKonv(Multiplier::CPU32),
+            workers,
+        )
+        .unwrap();
+        let report = serve(Box::new(pool), &config(frames, None));
+        println!("--- HiKonv pool, {workers} workers (scales with available cores; this");
+        println!("    host has {}) ---", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+        print!("{}", report.render());
+        println!();
+    }
+
+    // --- the ARM-feeder bottleneck (Table II's 401-vs-588 situation) -------
+    let runner = CpuRunner::new(
+        model.clone(),
+        random_weights(&model, 7),
+        EngineKind::HiKonv(Multiplier::CPU32),
+    )
+    .unwrap();
+    let capped = serve(
+        Box::new(CpuBackend::new(runner)),
+        &config(frames, Some(30.0)),
+    );
+    println!("--- HiKonv with a 30-fps feeder cap (ARM-bottleneck analogue) ---");
+    print!("{}", capped.render());
+}

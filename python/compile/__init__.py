@@ -1,0 +1,1 @@
+"""HiKonv compile path (build-time only; never imported at runtime)."""

@@ -1,0 +1,103 @@
+"""AOT compile path: lower the L2 graphs (with L1 Pallas kernels inlined)
+to HLO **text** artifacts the Rust runtime loads via PJRT.
+
+HLO text, not serialized protos: jax >= 0.5 emits 64-bit instruction ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids
+(/opt/xla-example/README.md). Runs once at build time (`make artifacts`).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # packed words are int64 lanes
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import hikonv  # noqa: E402
+from .kernels.design import solve_unsigned  # noqa: E402
+from .kernels.ref import conv1d_ref  # noqa: E402
+
+# Fixed shapes for the standalone conv1d artifacts.
+CONV1D_LEN = 4096
+CONV1D_TAPS = 3
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_conv1d_hikonv():
+    dp = solve_unsigned(32, 32, 4, 4)
+
+    def fn(f, g):
+        return (hikonv.hikonv_conv1d(f, g, dp),)
+
+    spec_f = jax.ShapeDtypeStruct((CONV1D_LEN,), jnp.int32)
+    spec_g = jax.ShapeDtypeStruct((CONV1D_TAPS,), jnp.int32)
+    return jax.jit(fn).lower(spec_f, spec_g)
+
+
+def lower_conv1d_ref():
+    def fn(f, g):
+        return (conv1d_ref(f, g),)
+
+    spec_f = jax.ShapeDtypeStruct((CONV1D_LEN,), jnp.int32)
+    spec_g = jax.ShapeDtypeStruct((CONV1D_TAPS,), jnp.int32)
+    return jax.jit(fn).lower(spec_f, spec_g)
+
+
+def lower_ultranet():
+    spec = jax.ShapeDtypeStruct(model.ULTRANET_INPUT, jnp.int32)
+    return jax.jit(model.ultranet_forward).lower(spec)
+
+
+def lower_ultranet_tiny():
+    spec = jax.ShapeDtypeStruct(model.ULTRANET_TINY_INPUT, jnp.int32)
+    return jax.jit(model.ultranet_tiny_forward).lower(spec)
+
+
+ARTIFACTS = {
+    "hikonv_conv1d.hlo.txt": lower_conv1d_hikonv,
+    "ref_conv1d.hlo.txt": lower_conv1d_ref,
+    "ultranet_tiny.hlo.txt": lower_ultranet_tiny,
+    "ultranet.hlo.txt": lower_ultranet,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="build a single artifact by filename"
+    )
+    # Back-compat with the scaffold Makefile (--out <file> builds everything
+    # into that file's directory).
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    for name, build in ARTIFACTS.items():
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(build())
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {len(text):>10} chars  {path}")
+
+
+if __name__ == "__main__":
+    main()

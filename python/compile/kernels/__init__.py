@@ -1,0 +1,1 @@
+"""HiKonv L1 kernels (Pallas) and their pure-jnp oracles."""

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: quantized conv2d as an im2col x packed-MXU matmul.
+
+The UltraNet layers (L2) call this. The matmul accumulates int32 levels;
+blocking follows MXU-friendly tiles (128x128 output blocks with the full
+contraction axis resident — UltraNet contractions are at most 64*9=576
+lanes, comfortably VMEM-sized).
+
+interpret=True as everywhere (see hikonv.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import im2col
+
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+def int_matmul(x, w):
+    """(M, C) int32 x (C, N) int32 -> (M, N) int32 via a Pallas matmul."""
+    m, c = x.shape
+    c2, n = w.shape
+    assert c == c2
+    grid = (pl.cdiv(m, BLOCK_M), pl.cdiv(n, BLOCK_N))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((c, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x, w)
+
+
+def conv2d(x, wts, pad: int):
+    """Quantized conv layer: x (Ci, H, W) int32, wts (Co, Ci, k, k) int32,
+    same padding, stride 1 -> (Co, H, W) int32 accumulators."""
+    co, ci, k, _ = wts.shape
+    _, h, w = x.shape
+    patches = im2col(x, k, pad).astype(jnp.int32)  # (H*W, Ci*k*k)
+    wmat = wts.reshape(co, ci * k * k).T.astype(jnp.int32)  # (Ci*k*k, Co)
+    out = int_matmul(patches, wmat)  # (H*W, Co)
+    return out.T.reshape(co, h, w)

@@ -1,0 +1,97 @@
+"""HiKonv design-point solver (Python mirror of rust/src/theory/solver.rs).
+
+Unsigned operands only on this side (the L1 kernels process unsigned
+activation/weight levels; signed handling lives in the Rust engines).
+Values pinned against the Rust solver in python/tests/test_design.py.
+"""
+
+from dataclasses import dataclass
+
+
+def bits_for(v: int) -> int:
+    """Number of bits to represent non-negative v (bits_for(0) == 1)."""
+    return max(v.bit_length(), 1)
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    bit_a: int
+    bit_b: int
+    p: int
+    q: int
+    m: int  # accumulation depth (Extended mode, m*K products per segment)
+    s: int
+    n: int
+    k: int
+
+    @property
+    def gb(self) -> int:
+        base = self.q if self.p == 1 else (self.p if self.q == 1 else self.p + self.q)
+        return self.s - base
+
+    @property
+    def ops_per_mult(self) -> int:
+        return self.n * self.k + (self.n - 1) * (self.k - 1)
+
+    @property
+    def segments(self) -> int:
+        return self.n + self.k - 1
+
+
+def solve_unsigned(
+    bit_a: int, bit_b: int, p: int, q: int, m: int = 1, lane_bits: int = 63
+) -> DesignPoint:
+    """Throughput-maximal design point under Eqs. 6-8 with exact guard
+    sizing, Extended accumulation (m*K products per segment).
+
+    `lane_bits` is the TPU adaptation (DESIGN.md §Hardware-Adaptation): the
+    packed product lives in a signed int64 lane, so the S*(N+K-1) product
+    bits must fit 63 bits. This only affects p=q=2 on a 32x32 multiplier
+    (N=K=6 -> N=K=5); every point the paper evaluates is unchanged.
+    """
+    assert 1 <= p <= bit_a and 1 <= q <= bit_b
+    best = None
+    for s in range(1, bit_a + bit_b + 1):
+        n = (bit_a - p) // s + 1
+        k = (bit_b - q) // s + 1
+        terms = m * k
+        required = bits_for(terms * (2**p - 1) * (2**q - 1))
+        if s < required:
+            continue
+        if s * (n + k - 1) > lane_bits:
+            continue
+        dp = DesignPoint(bit_a, bit_b, p, q, m, s, n, k)
+        key = (dp.ops_per_mult, -s, n)
+        if best is None or key > best[0]:
+            best = (key, dp)
+        if n == 1 and k == 1:
+            break
+    assert best is not None, "no feasible slice width"
+    return best[1]
+
+
+def solve_signed(
+    bit_a: int, bit_b: int, p: int, q: int, m: int = 1, lane_bits: int = 63
+) -> DesignPoint:
+    """Signed-operand design point: segments hold two's-complement partial
+    sums, so S covers the worst-case magnitude plus a sign bit (mirrors
+    rust/src/theory/solver.rs `Signedness::Signed`)."""
+    assert 1 <= p <= bit_a and 1 <= q <= bit_b
+    best = None
+    maxmag = 2 ** (p - 1) * 2 ** (q - 1)
+    for s in range(1, bit_a + bit_b + 1):
+        n = (bit_a - p) // s + 1
+        k = (bit_b - q) // s + 1
+        required = bits_for(m * k * maxmag) + 1
+        if s < required:
+            continue
+        if s * (n + k - 1) > lane_bits:
+            continue
+        dp = DesignPoint(bit_a, bit_b, p, q, m, s, n, k)
+        key = (dp.ops_per_mult, -s, n)
+        if best is None or key > best[0]:
+            best = (key, dp)
+        if n == 1 and k == 1:
+            break
+    assert best is not None, "no feasible slice width"
+    return best[1]

@@ -1,0 +1,154 @@
+"""L1 Pallas kernel: the HiKonv packed 1-D convolution (Theorems 1-2).
+
+TPU adaptation of the paper's bit-management (DESIGN.md §Hardware-
+Adaptation): quantized operands are *lane-packed* into wide integer words
+in VMEM, one wide multiply per `F_{N,K}` block replaces N·K MACs, and the
+product is segmented back into convolution outputs. BlockSpec tiles the
+chunk axis so HBM<->VMEM traffic moves packed words (~1/N of the unpacked
+bytes).
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what
+`aot.py` exports for the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .design import DesignPoint, solve_unsigned
+
+# Chunk-axis tile for the packed-multiply kernel (VMEM-sized: 256 packed
+# words x (N + segments) int64 lanes stays far under typical VMEM budgets).
+BLOCK_X = 256
+
+
+def pack_word(vals, s: int):
+    """Pack a trailing axis of unsigned values into one int64 word each:
+    `A = sum v[i] * 2^(S*i)` (Eq. 11)."""
+    n = vals.shape[-1]
+    powers = (jnp.int64(1) << (s * jnp.arange(n, dtype=jnp.int64)))
+    return jnp.sum(vals.astype(jnp.int64) * powers, axis=-1)
+
+
+def _fnk_kernel(chunks_ref, b_ref, segs_ref, *, s: int, n: int, nseg: int):
+    """Pallas body: pack N-value chunks, one wide multiply against the packed
+    kernel word, segment the product (Thm. 1)."""
+    chunks = chunks_ref[...].astype(jnp.int64)  # (bx, N)
+    powers = (jnp.int64(1) << (s * jnp.arange(n, dtype=jnp.int64)))
+    a = jnp.sum(chunks * powers[None, :], axis=1)  # (bx,)
+    prod = a * b_ref[0]  # the single wide multiplication
+    mask = (jnp.int64(1) << s) - 1
+    segs = [(prod >> (s * j)) & mask for j in range(nseg)]
+    segs_ref[...] = jnp.stack(segs, axis=1).astype(jnp.int32)
+
+
+def fnk_segments(chunks, packed_g, dp: DesignPoint):
+    """Run the packed-multiply kernel over all chunks: (X, N) int32 chunks ->
+    (X, N+K-1) int32 convolution segments."""
+    x = chunks.shape[0]
+    nseg = dp.segments
+    grid = (pl.cdiv(x, BLOCK_X),)
+    kernel = functools.partial(_fnk_kernel, s=dp.s, n=dp.n, nseg=nseg)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_X, dp.n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_X, nseg), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x, nseg), jnp.int32),
+        interpret=True,
+    )(chunks, packed_g)
+
+
+def hikonv_conv1d(f, g, dp: DesignPoint):
+    """Full HiKonv 1-D convolution `f * g` (unsigned levels).
+
+    `g` must have at most K taps (kernel chunking for longer filters lives
+    in the Rust engine; the DNN kernels the model uses are 1x1/3x3 rows).
+    Returns len(f) + len(g) - 1 outputs, int32.
+    """
+    l = f.shape[0]
+    glen = g.shape[0]
+    assert glen <= dp.k, f"kernel of {glen} taps exceeds K={dp.k}"
+    xchunks = -(-l // dp.n)  # ceil
+    fpad = jnp.pad(f, (0, xchunks * dp.n - l))
+    chunks = fpad.reshape(xchunks, dp.n)
+    packed_g = pack_word(g, dp.s).reshape(1)
+    segs = fnk_segments(chunks, packed_g, dp)
+    # Overlap-add (Thm. 2): y[x*N + j] += segs[x, j].
+    y = jnp.zeros(xchunks * dp.n + dp.k - 1, dtype=jnp.int32)
+    xs = dp.n * jnp.arange(xchunks)
+    for j in range(dp.segments):
+        y = y.at[xs + j].add(segs[:, j])
+    return y[: l + glen - 1]
+
+
+def hikonv_conv1d_4bit(f, g):
+    """The paper's CPU design point (32x32, p=q=4): S=10, N=3, K=3."""
+    dp = solve_unsigned(32, 32, 4, 4)
+    assert (dp.s, dp.n, dp.k) == (10, 3, 3)
+    return hikonv_conv1d(f, g, dp)
+
+
+def _fnk_kernel_signed(chunks_ref, b_ref, segs_ref, *, s: int, n: int, nseg: int):
+    """Signed Pallas body: Eq.-13 segmentation — sign-extend each S-bit
+    field and add back the carry bit just below it."""
+    chunks = chunks_ref[...].astype(jnp.int64)
+    powers = (jnp.int64(1) << (s * jnp.arange(n, dtype=jnp.int64)))
+    # Wrapping sum == Eq.-13 borrow recursion (packing mod 2^64).
+    a = jnp.sum(chunks * powers[None, :], axis=1)
+    prod = a * b_ref[0]
+    mask = (jnp.int64(1) << s) - 1
+    sign = jnp.int64(1) << (s - 1)
+    segs = []
+    for j in range(nseg):
+        raw = (prod >> (s * j)) & mask
+        se = raw - ((raw & sign) << 1)  # sign-extend S bits
+        carry = ((prod >> (s * j - 1)) & 1) if j > 0 else jnp.int64(0)
+        segs.append(se + carry)
+    segs_ref[...] = jnp.stack(segs, axis=1).astype(jnp.int32)
+
+
+def fnk_segments_signed(chunks, packed_g, dp: DesignPoint):
+    """Signed variant of `fnk_segments`."""
+    x = chunks.shape[0]
+    nseg = dp.segments
+    grid = (pl.cdiv(x, BLOCK_X),)
+    kernel = functools.partial(_fnk_kernel_signed, s=dp.s, n=dp.n, nseg=nseg)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_X, dp.n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_X, nseg), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x, nseg), jnp.int32),
+        interpret=True,
+    )(chunks, packed_g)
+
+
+def hikonv_conv1d_signed(f, g, dp: DesignPoint):
+    """Signed HiKonv 1-D convolution (two's-complement levels; Eq. 13).
+
+    Mirrors `hikonv_conv1d`; the design point must come from
+    `design.solve_signed` so the slices carry a sign bit.
+    """
+    l = f.shape[0]
+    glen = g.shape[0]
+    assert glen <= dp.k, f"kernel of {glen} taps exceeds K={dp.k}"
+    xchunks = -(-l // dp.n)
+    fpad = jnp.pad(f, (0, xchunks * dp.n - l))
+    chunks = fpad.reshape(xchunks, dp.n)
+    packed_g = pack_word(g, dp.s).reshape(1)
+    segs = fnk_segments_signed(chunks, packed_g, dp)
+    y = jnp.zeros(xchunks * dp.n + dp.k - 1, dtype=jnp.int32)
+    xs = dp.n * jnp.arange(xchunks)
+    for j in range(dp.segments):
+        y = y.at[xs + j].add(segs[:, j])
+    return y[: l + glen - 1]

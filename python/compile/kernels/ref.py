@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These are the ground truth every Pallas kernel is pytest-checked against
+(the same role `conv/reference.rs` plays for the Rust engines).
+"""
+
+import jax.numpy as jnp
+
+
+def conv1d_ref(f, g):
+    """Full 1-D convolution (Eq. 3): len(f) + len(g) - 1 outputs, int32."""
+    return jnp.convolve(
+        f.astype(jnp.int64), g.astype(jnp.int64), mode="full"
+    ).astype(jnp.int32)
+
+
+def im2col(x, k: int, pad: int):
+    """Unfold (C, H, W) into (H*W, C*k*k) patches for a same-padded
+    k x k convolution (stride 1)."""
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(xp[:, dy : dy + h, dx : dx + w])
+    patches = jnp.stack(cols, axis=1)  # (C, k*k, H, W)
+    return patches.reshape(c * k * k, h * w).T
+
+
+def conv2d_ref(x, wts, pad: int):
+    """Quantized conv layer oracle: x (Ci, H, W) int, wts (Co, Ci, k, k) int.
+    Same padding, stride 1. Returns (Co, H, W) int32 accumulators."""
+    co, ci, k, _ = wts.shape
+    _, h, w = x.shape
+    patches = im2col(x, k, pad).astype(jnp.int64)  # (H*W, Ci*k*k)
+    wmat = wts.reshape(co, ci * k * k).astype(jnp.int64)  # (Co, Ci*k*k)
+    out = patches @ wmat.T  # (H*W, Co)
+    return out.T.reshape(co, h, w).astype(jnp.int32)
+
+
+def requantize_ref(acc, shift: int, bits: int):
+    """ReLU + right-shift requantization to unsigned `bits` levels."""
+    hi = (1 << bits) - 1
+    return jnp.clip(jnp.maximum(acc, 0) >> shift, 0, hi)
+
+
+def maxpool2_ref(x):
+    """2x2 max pool (stride 2) over (C, H, W)."""
+    c, h, w = x.shape
+    return x.reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))

@@ -1,0 +1,124 @@
+"""L2: UltraNet forward graphs in JAX, calling the L1 Pallas kernels.
+
+Weights are synthetic (seeded numpy) and baked into the graph as constants
+so the AOT artifact is self-contained — the Rust serving path feeds only
+the quantized frame. Architecture mirrors rust/src/models/ultranet.rs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv2d
+from .kernels.ref import maxpool2_ref, requantize_ref
+
+# (name, ci, co, k, pool_after). Spatial dims follow from the input.
+ULTRANET_LAYERS = [
+    ("conv1", 3, 16, 3, True),
+    ("conv2", 16, 32, 3, True),
+    ("conv3", 32, 64, 3, True),
+    ("conv4", 64, 64, 3, True),
+    ("conv5", 64, 64, 3, False),
+    ("conv6", 64, 64, 3, False),
+    ("conv7", 64, 64, 3, False),
+    ("conv8", 64, 64, 3, False),
+    ("head", 64, 36, 1, False),
+]
+
+ULTRANET_TINY_LAYERS = [
+    ("conv1", 3, 16, 3, True),
+    ("conv2", 16, 32, 3, True),
+    ("conv3", 32, 64, 3, True),
+    ("conv4", 64, 64, 3, False),
+    ("head", 64, 36, 1, False),
+]
+
+ULTRANET_INPUT = (3, 160, 320)
+ULTRANET_TINY_INPUT = (3, 40, 80)
+
+A_BITS = 4
+W_BITS = 4
+
+
+def synthetic_weights(layers, seed: int):
+    """Seeded signed 4-bit weights for every layer."""
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (W_BITS - 1)), 2 ** (W_BITS - 1) - 1
+    return [
+        rng.integers(lo, hi + 1, size=(co, ci, k, k), dtype=np.int32)
+        for (_, ci, co, k, _) in layers
+    ]
+
+
+def _np_conv2d(x, wts, pad):
+    """Pure-numpy same-padded conv (calibration only — numpy keeps this
+    immune to an enclosing jit trace)."""
+    co, ci, k, _ = wts.shape
+    _, h, w = x.shape
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    cols = [xp[:, dy : dy + h, dx : dx + w] for dy in range(k) for dx in range(k)]
+    patches = np.stack(cols, axis=1).reshape(ci * k * k, h * w)
+    out = wts.reshape(co, ci * k * k).astype(np.int64) @ patches.astype(np.int64)
+    return out.reshape(co, h, w)
+
+
+def calibrate_shifts(layers, weights, input_shape, seed: int = 99):
+    """Per-layer requantization shifts: run one random frame and size each
+    shift so the layer's max accumulator maps into the 4-bit activation
+    range (mirrors the Rust runner's calibration pass). Numpy-only; the
+    shifts become constants in the AOT graph."""
+    rng = np.random.default_rng(seed)
+    act = rng.integers(0, 2**A_BITS, size=input_shape, dtype=np.int64)
+    shifts = []
+    target = (1 << A_BITS) - 1
+    for i, ((_name, _ci, _co, k, pool), wts) in enumerate(zip(layers, weights)):
+        acc = _np_conv2d(act, np.asarray(wts), pad=k // 2)
+        maxacc = int(np.abs(acc).max())
+        shift = 0
+        while (maxacc >> shift) > target:
+            shift += 1
+        shifts.append(shift)
+        if i + 1 < len(layers):
+            act = np.clip(np.maximum(acc, 0) >> shift, 0, target)
+            if pool:
+                c, h, w = act.shape
+                act = act.reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))
+    return shifts
+
+
+_SHIFT_CACHE = {}
+
+
+def _shifts_for(name, layers, weights, input_shape):
+    if name not in _SHIFT_CACHE:
+        _SHIFT_CACHE[name] = calibrate_shifts(layers, weights, input_shape)
+    return _SHIFT_CACHE[name]
+
+
+def forward(frame, layers, weights, shifts):
+    """Quantized forward pass: frame (C, H, W) int32 4-bit levels ->
+    head accumulators (36, H', W') int32."""
+    act = frame.astype(jnp.int32)
+    for (i, ((_, _ci, _co, k, pool), wts)) in enumerate(zip(layers, weights)):
+        acc = conv2d(act, jnp.asarray(wts), pad=k // 2)
+        if i + 1 == len(layers):
+            return acc
+        act = requantize_ref(acc, shifts[i], A_BITS).astype(jnp.int32)
+        if pool:
+            act = maxpool2_ref(act)
+    return act
+
+
+def ultranet_forward(frame):
+    """Full UltraNet: (3, 160, 320) int32 -> (36, 10, 20) int32 tuple."""
+    weights = synthetic_weights(ULTRANET_LAYERS, seed=2020)
+    shifts = _shifts_for("ultranet", ULTRANET_LAYERS, weights, ULTRANET_INPUT)
+    return (forward(frame, ULTRANET_LAYERS, weights, shifts),)
+
+
+def ultranet_tiny_forward(frame):
+    """UltraNet-tiny: (3, 40, 80) int32 -> (36, 5, 10) int32 tuple."""
+    weights = synthetic_weights(ULTRANET_TINY_LAYERS, seed=2020)
+    shifts = _shifts_for(
+        "ultranet_tiny", ULTRANET_TINY_LAYERS, weights, ULTRANET_TINY_INPUT
+    )
+    return (forward(frame, ULTRANET_TINY_LAYERS, weights, shifts),)

@@ -1,0 +1,33 @@
+"""AOT lowering: every artifact lowers to parseable HLO text with the
+expected entry signature (the contract the Rust runtime depends on)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot
+
+
+def test_conv1d_artifacts_lower():
+    text = aot.to_hlo_text(aot.lower_conv1d_hikonv())
+    assert "ENTRY" in text
+    assert "s32[4096]" in text  # input f
+    assert "s32[3]" in text  # kernel g
+    ref = aot.to_hlo_text(aot.lower_conv1d_ref())
+    assert "ENTRY" in ref
+
+
+def test_ultranet_tiny_lowers():
+    text = aot.to_hlo_text(aot.lower_ultranet_tiny())
+    assert "ENTRY" in text
+    assert "s32[3,40,80]" in text
+    assert "s32[36,5,10]" in text
+
+
+def test_artifact_registry_complete():
+    assert set(aot.ARTIFACTS) == {
+        "hikonv_conv1d.hlo.txt",
+        "ref_conv1d.hlo.txt",
+        "ultranet_tiny.hlo.txt",
+        "ultranet.hlo.txt",
+    }

@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas HiKonv conv vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and bitwidths — the core correctness signal for
+the compile path (mirrors rust/src/conv/conv1d.rs property tests).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hikonv
+from compile.kernels.design import solve_unsigned
+from compile.kernels.ref import conv1d_ref
+
+
+def random_levels(rng, bits, n):
+    return jnp.asarray(
+        rng.integers(0, 2**bits, size=n, dtype=np.int64), dtype=jnp.int32
+    )
+
+
+def test_paper_cpu_design_point():
+    dp = solve_unsigned(32, 32, 4, 4)
+    assert (dp.s, dp.n, dp.k, dp.gb) == (10, 3, 3, 2)
+    assert dp.ops_per_mult == 13
+
+
+def test_dsp_design_points():
+    dp = solve_unsigned(27, 18, 4, 4)
+    assert (dp.s, dp.n, dp.k) == (9, 3, 2)
+    assert dp.ops_per_mult == 8
+    # strict binary optimum (DESIGN.md §3)
+    dp1 = solve_unsigned(27, 18, 1, 1)
+    assert dp1.ops_per_mult == 94
+
+
+def test_pack_word_matches_definition():
+    vals = jnp.asarray([3, 5, 1], dtype=jnp.int32)
+    assert int(hikonv.pack_word(vals, 4)) == 3 + 5 * 16 + 256
+
+
+def test_4bit_kernel_matches_reference():
+    rng = np.random.default_rng(0)
+    f = random_levels(rng, 4, 1000)
+    g = random_levels(rng, 4, 3)
+    got = hikonv.hikonv_conv1d_4bit(f, g)
+    want = conv1d_ref(f, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_worst_case_guard_bits():
+    dp = solve_unsigned(32, 32, 4, 4)
+    f = jnp.full((500,), 15, dtype=jnp.int32)
+    g = jnp.full((3,), 15, dtype=jnp.int32)
+    got = hikonv.hikonv_conv1d(f, g, dp)
+    want = conv1d_ref(f, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(min_value=1, max_value=8),
+    flen=st.integers(min_value=1, max_value=700),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_kernel_matches_reference(bits, flen, seed):
+    dp = solve_unsigned(32, 32, bits, bits)
+    rng = np.random.default_rng(seed)
+    f = random_levels(rng, bits, flen)
+    glen = rng.integers(1, dp.k + 1)
+    g = random_levels(rng, bits, glen)
+    got = hikonv.hikonv_conv1d(f, g, dp)
+    want = conv1d_ref(f, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bits=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_dsp48e2_points(bits, seed):
+    """The 27x18 DSP design points also hold on the lane-packed kernel."""
+    dp = solve_unsigned(27, 18, bits, bits)
+    rng = np.random.default_rng(seed)
+    f = random_levels(rng, bits, 300)
+    g = random_levels(rng, bits, dp.k)
+    got = hikonv.hikonv_conv1d(f, g, dp)
+    want = conv1d_ref(f, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_input_shorter_than_one_chunk():
+    dp = solve_unsigned(32, 32, 4, 4)
+    f = jnp.asarray([7, 2], dtype=jnp.int32)
+    g = jnp.asarray([3, 1, 5], dtype=jnp.int32)
+    got = hikonv.hikonv_conv1d(f, g, dp)
+    want = conv1d_ref(f, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_longer_than_k_rejected():
+    dp = solve_unsigned(32, 32, 4, 4)
+    f = jnp.zeros(16, dtype=jnp.int32)
+    g = jnp.zeros(dp.k + 1, dtype=jnp.int32)
+    with pytest.raises(AssertionError):
+        hikonv.hikonv_conv1d(f, g, dp)
+
+
+def random_signed_levels(rng, bits, n):
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1)
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64), dtype=jnp.int32)
+
+
+def test_signed_design_point_has_sign_headroom():
+    from compile.kernels.design import solve_signed
+
+    dp = solve_signed(32, 32, 4, 4)
+    # Signed 4-bit needs one more slice bit than unsigned at equal terms.
+    assert dp.s >= 10
+    assert dp.n >= 2 and dp.k >= 2
+
+
+def test_signed_kernel_matches_reference():
+    from compile.kernels.design import solve_signed
+
+    dp = solve_signed(32, 32, 4, 4)
+    rng = np.random.default_rng(7)
+    f = random_signed_levels(rng, 4, 777)
+    g = random_signed_levels(rng, 4, dp.k)
+    got = hikonv.hikonv_conv1d_signed(f, g, dp)
+    want = conv1d_ref(f, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_signed_worst_case_extremes():
+    from compile.kernels.design import solve_signed
+
+    dp = solve_signed(32, 32, 4, 4)
+    f = jnp.full((300,), -8, dtype=jnp.int32)
+    g = jnp.full((dp.k,), -8, dtype=jnp.int32)
+    got = hikonv.hikonv_conv1d_signed(f, g, dp)
+    want = conv1d_ref(f, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bits=st.integers(min_value=2, max_value=7),
+    flen=st.integers(min_value=1, max_value=400),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_signed_kernel_matches_reference(bits, flen, seed):
+    from compile.kernels.design import solve_signed
+
+    dp = solve_signed(32, 32, bits, bits)
+    rng = np.random.default_rng(seed)
+    f = random_signed_levels(rng, bits, flen)
+    glen = rng.integers(1, dp.k + 1)
+    g = random_signed_levels(rng, bits, glen)
+    got = hikonv.hikonv_conv1d_signed(f, g, dp)
+    want = conv1d_ref(f, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,79 @@
+"""L2 model correctness: Pallas conv2d vs oracle, UltraNet shapes/determinism."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.conv2d import conv2d, int_matmul
+from compile.kernels.ref import conv2d_ref, maxpool2_ref, requantize_ref
+
+
+def test_int_matmul_matches_jnp():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 16, size=(50, 27), dtype=np.int64), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, size=(27, 20), dtype=np.int64), jnp.int32)
+    got = int_matmul(x, w)
+    want = (x.astype(jnp.int64) @ w.astype(jnp.int64)).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ci=st.integers(min_value=1, max_value=8),
+    co=st.integers(min_value=1, max_value=8),
+    h=st.integers(min_value=3, max_value=10),
+    w=st.integers(min_value=3, max_value=12),
+    k=st.sampled_from([1, 3]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_conv2d_matches_oracle(ci, co, h, w, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 16, size=(ci, h, w), dtype=np.int64), jnp.int32)
+    wts = jnp.asarray(
+        rng.integers(-8, 8, size=(co, ci, k, k), dtype=np.int64), jnp.int32
+    )
+    got = conv2d(x, wts, pad=k // 2)
+    want = conv2d_ref(x, wts, pad=k // 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requantize_and_pool():
+    acc = jnp.asarray([[-3, 40], [16, 7]], dtype=jnp.int32).reshape(1, 2, 2)
+    q = requantize_ref(acc, 1, 4)
+    assert q.max() <= 15 and q.min() >= 0
+    pooled = maxpool2_ref(q)
+    assert pooled.shape == (1, 1, 1)
+    assert int(pooled[0, 0, 0]) == 15  # clip(40>>1)=15
+
+
+def test_ultranet_tiny_shapes_and_determinism():
+    rng = np.random.default_rng(3)
+    frame = jnp.asarray(
+        rng.integers(0, 16, size=model.ULTRANET_TINY_INPUT, dtype=np.int64),
+        jnp.int32,
+    )
+    out1 = model.ultranet_tiny_forward(frame)[0]
+    out2 = model.ultranet_tiny_forward(frame)[0]
+    assert out1.shape == (36, 5, 10)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert np.asarray(out1).any(), "all-zero head output is suspicious"
+
+
+def test_ultranet_layer_table_is_consistent():
+    # chained channel counts
+    for (prev, nxt) in zip(model.ULTRANET_LAYERS, model.ULTRANET_LAYERS[1:]):
+        assert prev[2] == nxt[1], f"{prev} -> {nxt}"
+    assert model.ULTRANET_LAYERS[0][1] == model.ULTRANET_INPUT[0]
+    # total MACs match the Rust model's pinned value
+    c, h, w = model.ULTRANET_INPUT
+    total = 0
+    for (_, ci, co, k, pool) in model.ULTRANET_LAYERS:
+        total += co * h * w * ci * k * k
+        if pool:
+            h, w = h // 2, w // 2
+    assert total == 199_526_400, total

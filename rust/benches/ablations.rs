@@ -1,0 +1,6 @@
+//! Ablation benches over the repo's design choices (not a paper artifact).
+use hikonv::bench::BenchConfig;
+fn main() {
+    let (table, _rows) = hikonv::experiments::ablations::run(BenchConfig::from_env());
+    print!("{}", table.render());
+}

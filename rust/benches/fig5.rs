@@ -1,0 +1,7 @@
+//! Bench target regenerating Figure 5 (throughput surfaces). Pure
+//! arithmetic — reported as tables rather than timings.
+fn main() {
+    let fig5 = hikonv::experiments::fig5::run();
+    print!("{}", fig5.render());
+    println!("{}", fig5.to_json().to_string_pretty());
+}

@@ -1,0 +1,8 @@
+//! Bench target regenerating Figure 6a (1-D conv latency, baseline vs
+//! HiKonv, four input x kernel combinations at 4-bit).
+use hikonv::bench::BenchConfig;
+fn main() {
+    let (table, rows) = hikonv::experiments::fig6::fig6a(BenchConfig::from_env());
+    print!("{}", table.render());
+    println!("{}", hikonv::experiments::fig6::rows_to_json(&rows).to_string_pretty());
+}

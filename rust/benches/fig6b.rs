@@ -1,0 +1,7 @@
+//! Bench target regenerating Figure 6b (UltraNet final conv layer latency).
+use hikonv::bench::BenchConfig;
+fn main() {
+    let (table, rows) = hikonv::experiments::fig6::fig6b(BenchConfig::from_env());
+    print!("{}", table.render());
+    println!("{}", hikonv::experiments::fig6::rows_to_json(&rows).to_string_pretty());
+}

@@ -1,0 +1,7 @@
+//! Bench target regenerating Figure 6c (speedup vs bitwidth sweep).
+use hikonv::bench::BenchConfig;
+fn main() {
+    let (table, rows) = hikonv::experiments::fig6::fig6c(BenchConfig::from_env());
+    print!("{}", table.render());
+    println!("{}", hikonv::experiments::fig6::rows_to_json(&rows).to_string_pretty());
+}

@@ -1,0 +1,6 @@
+//! Bench target regenerating Table I (BNN resource comparison).
+fn main() {
+    let t1 = hikonv::experiments::table1::run();
+    print!("{}", t1.render());
+    println!("{}", t1.to_json().to_string_pretty());
+}

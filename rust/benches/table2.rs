@@ -1,0 +1,6 @@
+//! Bench target regenerating Table II (UltraNet fps / DSP efficiency).
+fn main() {
+    let t2 = hikonv::experiments::table2::run();
+    print!("{}", t2.render());
+    println!("{}", t2.to_json().to_string_pretty());
+}

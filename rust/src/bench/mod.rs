@@ -1,0 +1,206 @@
+//! Criterion-lite micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warm-up, adaptive iteration-count calibration, robust statistics
+//! (median / MAD) and paper-style table output. Used by every target under
+//! `rust/benches/` (all declared with `harness = false`).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Configuration for a benchmark run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warm-up time budget in seconds.
+    pub warmup_s: f64,
+    /// Measurement time budget in seconds.
+    pub measure_s: f64,
+    /// Number of samples to split the measurement budget into.
+    pub samples: usize,
+    /// Hard minimum iterations per sample.
+    pub min_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_s: 0.25,
+            measure_s: 1.0,
+            samples: 20,
+            min_iters: 1,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for CI / `cargo test` smoke usage.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_s: 0.02,
+            measure_s: 0.08,
+            samples: 8,
+            min_iters: 1,
+        }
+    }
+
+    /// Honour `HIKONV_BENCH_QUICK=1` for fast smoke runs of the bench suite.
+    pub fn from_env() -> Self {
+        if std::env::var("HIKONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration timing statistics in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration nanoseconds summary across samples.
+    pub ns: Summary,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        self.ns.median
+    }
+
+    /// Throughput in "items"/s given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.ns.median * 1e-9)
+    }
+
+    pub fn display_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} /iter  (±{:>8}, n={})",
+            self.name,
+            fmt_ns(self.ns.median),
+            fmt_ns(self.ns.mad),
+            self.ns.n
+        )
+    }
+}
+
+/// Pretty-print nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+/// (std::hint::black_box is stable since 1.66.)
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A named group of benchmarks sharing one config, mirroring criterion's API
+/// shape: `Bencher::new("group").bench("name", || work())`.
+pub struct Bencher {
+    group: String,
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Bencher {
+        Bencher::with_config(group, BenchConfig::from_env())
+    }
+
+    pub fn with_config(group: &str, config: BenchConfig) -> Bencher {
+        eprintln!("-- bench group: {group} --");
+        Bencher {
+            group: group.to_string(),
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, printing and recording the result.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warm-up and iteration-count calibration.
+        let t0 = Instant::now();
+        let mut iters_done: u64 = 0;
+        while t0.elapsed().as_secs_f64() < self.config.warmup_s || iters_done == 0 {
+            black_box(f());
+            iters_done += 1;
+            if iters_done > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter_est = t0.elapsed().as_secs_f64() / iters_done as f64;
+        let per_sample_budget = self.config.measure_s / self.config.samples as f64;
+        let iters = ((per_sample_budget / per_iter_est.max(1e-9)) as u64)
+            .max(self.config.min_iters);
+
+        let mut samples = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+        }
+        let result = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            ns: Summary::from(&samples),
+            iters_per_sample: iters,
+        };
+        eprintln!("   {}", result.display_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Ratio of two previously-recorded benchmarks' medians (a / b).
+    pub fn ratio(&self, name_a: &str, name_b: &str) -> Option<f64> {
+        let find = |n: &str| {
+            self.results
+                .iter()
+                .find(|r| r.name.ends_with(n))
+                .map(|r| r.ns.median)
+        };
+        Some(find(name_a)? / find(name_b)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let mut b = Bencher::with_config("test", BenchConfig::quick());
+        let r = b.bench("sum", || (0..100u64).sum::<u64>());
+        assert!(r.ns.median > 0.0);
+        assert!(r.ns.median < 1e8); // a 100-element sum is far below 100ms
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn ratio_of_known_workloads() {
+        let mut b = Bencher::with_config("test", BenchConfig::quick());
+        b.bench("small", || (0..100u64).map(black_box).sum::<u64>());
+        b.bench("large", || (0..20_000u64).map(black_box).sum::<u64>());
+        let ratio = b.ratio("large", "small").unwrap();
+        assert!(ratio > 5.0, "20000/100 elements should be >5x: {ratio}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

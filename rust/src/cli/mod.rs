@@ -1,0 +1,186 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> --flag value --switch positional...` with
+//! typed accessors, defaults and generated help text.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option for help generation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// Parsed arguments for a subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token (if not a flag) is the subcommand.
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` terminates flag parsing
+                    out.positionals.extend(it.map(|s| s.clone()));
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    out.flags
+                        .insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+            || self.flags.get(switch).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> Result<u32, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected float, got '{v}'")),
+        }
+    }
+}
+
+/// Render help text from a subcommand table.
+pub fn render_help(binary: &str, subcommands: &[(&str, &str, &[OptSpec])]) -> String {
+    let mut out = format!("usage: {binary} <subcommand> [options]\n\nsubcommands:\n");
+    for (name, help, opts) in subcommands {
+        out.push_str(&format!("  {name:<14} {help}\n"));
+        for o in opts.iter() {
+            let d = o
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            let flag = if o.is_switch {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            out.push_str(&format!("      {flag:<22} {}{d}\n", o.help));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&argv("dse --bit-a 27 --bit-b=18 --csv extra")).unwrap();
+        assert_eq!(a.subcommand, "dse");
+        assert_eq!(a.get("bit-a"), Some("27"));
+        assert_eq!(a.get("bit-b"), Some("18"));
+        assert!(a.has("csv") || a.get("csv").is_some());
+        assert!(a.positionals.contains(&"extra".to_string()) || a.get("csv") == Some("extra"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&argv("x --n 42 --f 2.5")).unwrap();
+        assert_eq!(a.get_u32("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_u32("missing", 7).unwrap(), 7);
+        assert!(Args::parse(&argv("x --n abc")).unwrap().get_u32("n", 0).is_err());
+    }
+
+    #[test]
+    fn switch_without_value() {
+        let a = Args::parse(&argv("run --verbose --out file.json")).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("out"), Some("file.json"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = Args::parse(&argv("run -- --not-a-flag")).unwrap();
+        assert_eq!(a.positionals, vec!["--not-a-flag".to_string()]);
+    }
+
+    #[test]
+    fn help_renders() {
+        let opts = [OptSpec {
+            name: "bit-a",
+            help: "multiplier A width",
+            default: Some("32"),
+            is_switch: false,
+        }];
+        let h = render_help("hikonv", &[("dse", "design-space exploration", &opts)]);
+        assert!(h.contains("dse"));
+        assert!(h.contains("--bit-a"));
+        assert!(h.contains("default: 32"));
+    }
+}

@@ -1,0 +1,606 @@
+//! HiKonv 1-D convolution: Theorem 1 (`F_{N,K}` in one wide multiplication)
+//! and Theorem 2 (`F_{X·N,K}` overlap-add in the packed domain, Fig. 4).
+//!
+//! The engine packs `N` feature values into multiplicand `A` and `K` kernel
+//! values into multiplicand `B`; one `A×B` yields `N+K-1` convolution
+//! segments (Thm. 1). Long inputs stream through an accumulator word: each
+//! round adds the new product onto the pending overlap (`K-1` segments),
+//! emits `N` finished outputs and arithmetic-shifts the accumulator down
+//! (Thm. 2 — the paper's "shift previous partial result / add" pattern,
+//! done here with exact two's-complement semantics).
+//!
+//! Kernels longer than `K` are split into `ceil(len/K)` packed chunks whose
+//! partial convolutions are summed at output offsets `j·K` (the same
+//! extension Thm. 2 applies to `f`, applied to `g`).
+
+use crate::theory::{AccumMode, DesignPoint, Signedness};
+
+/// Word abstraction so the same streaming core runs in `i64` (the paper's
+/// 32×32 CPU multiplier — product and accumulator fit 64 bits) and `i128`
+/// (up to 64×64 multipliers).
+trait ProdWord: Copy {
+    #[allow(dead_code)] // used by the impl macro's shift arithmetic
+    const BITS: u32;
+    fn zero() -> Self;
+    fn from_i64(v: i64) -> Self;
+    fn wadd(self, o: Self) -> Self;
+    fn wmul(self, o: Self) -> Self;
+    fn shl(self, s: u32) -> Self;
+    /// Arithmetic shift right (keeps the packed tail exact for negatives).
+    fn sar(self, s: u32) -> Self;
+    fn bit(self, pos: u32) -> i64;
+    fn low_seg_signed(self, s: u32) -> i64;
+    fn low_seg_unsigned(self, s: u32) -> i64;
+}
+
+macro_rules! impl_prod_word {
+    ($t:ty, $bits:expr) => {
+        impl ProdWord for $t {
+            const BITS: u32 = $bits;
+            #[inline(always)]
+            fn zero() -> Self {
+                0
+            }
+            #[inline(always)]
+            fn from_i64(v: i64) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn wadd(self, o: Self) -> Self {
+                self.wrapping_add(o)
+            }
+            #[inline(always)]
+            fn wmul(self, o: Self) -> Self {
+                self.wrapping_mul(o)
+            }
+            #[inline(always)]
+            fn shl(self, s: u32) -> Self {
+                self.wrapping_shl(s)
+            }
+            #[inline(always)]
+            fn sar(self, s: u32) -> Self {
+                self.wrapping_shr(s) // arithmetic: $t is signed
+            }
+            #[inline(always)]
+            fn bit(self, pos: u32) -> i64 {
+                ((self >> pos) & 1) as i64
+            }
+            #[inline(always)]
+            fn low_seg_signed(self, s: u32) -> i64 {
+                let sh = Self::BITS - s;
+                ((self.wrapping_shl(sh)) >> sh) as i64
+            }
+            #[inline(always)]
+            fn low_seg_unsigned(self, s: u32) -> i64 {
+                (self & ((1 << s) - 1)) as i64
+            }
+        }
+    };
+}
+
+impl_prod_word!(i64, 64);
+impl_prod_word!(i128, 128);
+
+/// Pack a chunk of values into a word (wrapping sum `Σ v·2^(S·i)`; equals
+/// Eq. 11 for unsigned and Eq. 13 for signed inputs — see `packing`).
+#[inline(always)]
+fn pack_word<W: ProdWord>(vals: &[i64], s: u32) -> W {
+    let mut w = W::zero();
+    // Pack from the top slice down: one shift + add per value.
+    for &v in vals.iter().rev() {
+        w = w.shl(s).wadd(W::from_i64(v));
+    }
+    w
+}
+
+/// One packed kernel chunk.
+#[derive(Clone, Debug)]
+struct KernelChunk<W> {
+    packed: W,
+    len: usize,
+    /// Output offset of this chunk's partial convolution (`j·K`).
+    offset: usize,
+}
+
+/// The HiKonv 1-D convolution engine for a fixed kernel.
+#[derive(Clone, Debug)]
+pub struct Conv1dHiKonv {
+    dp: DesignPoint,
+    kernel: Vec<i64>,
+    chunks64: Vec<KernelChunk<i64>>,
+    chunks128: Vec<KernelChunk<i128>>,
+    use64: bool,
+    signed: bool,
+}
+
+impl Conv1dHiKonv {
+    /// Build an engine. `dp` must be solved with [`AccumMode::Extended`]
+    /// (long-input overlap-add accumulates up to `K` products per segment).
+    pub fn new(dp: DesignPoint, kernel: &[i64]) -> Result<Conv1dHiKonv, String> {
+        if kernel.is_empty() {
+            return Err("empty kernel".into());
+        }
+        if !matches!(dp.accum, AccumMode::Extended { .. }) {
+            return Err("Conv1dHiKonv requires an Extended-mode design point (Thm. 2 guard bits)".into());
+        }
+        dp.validate()?;
+        let signed = !matches!(dp.signedness, Signedness::Unsigned);
+        // The i64 path needs every packed word and accumulator to fit:
+        // (N+K-1) segments of S bits, plus 1 sign bit headroom.
+        let seg_bits = dp.s * (dp.n as u32 + dp.k as u32 - 1);
+        let use64 = seg_bits + 1 <= 64;
+        let mut chunks64 = Vec::new();
+        let mut chunks128 = Vec::new();
+        for (j, ch) in kernel.chunks(dp.k).enumerate() {
+            chunks64.push(KernelChunk {
+                packed: pack_word::<i64>(ch, dp.s.min(63)),
+                len: ch.len(),
+                offset: j * dp.k,
+            });
+            chunks128.push(KernelChunk {
+                packed: pack_word::<i128>(ch, dp.s),
+                len: ch.len(),
+                offset: j * dp.k,
+            });
+        }
+        Ok(Conv1dHiKonv {
+            dp,
+            kernel: kernel.to_vec(),
+            chunks64,
+            chunks128,
+            use64,
+            signed,
+        })
+    }
+
+    pub fn design_point(&self) -> &DesignPoint {
+        &self.dp
+    }
+
+    pub fn kernel(&self) -> &[i64] {
+        &self.kernel
+    }
+
+    /// Full 1-D convolution `f * kernel` (`f.len() + kernel.len() - 1` outputs).
+    pub fn conv(&self, f: &[i64]) -> Vec<i64> {
+        let mut out = vec![0i64; f.len() + self.kernel.len() - 1];
+        self.conv_into(f, &mut out);
+        out
+    }
+
+    /// Convolve into a caller-provided buffer (accumulates with `+=`, so the
+    /// caller can fold multiple rows — used by the Thm.-3 layer engine).
+    ///
+    /// Features are packed inline during the stream (fused, unrolled for
+    /// the design point's `N`); kernels were packed at engine build time
+    /// (the paper's "features packed at runtime, kernels offline", §IV-A).
+    pub fn conv_into(&self, f: &[i64], out: &mut [i64]) {
+        if f.is_empty() {
+            return;
+        }
+        assert!(
+            out.len() >= f.len() + self.kernel.len() - 1,
+            "output buffer too small"
+        );
+        if self.use64 {
+            for ch in &self.chunks64 {
+                fused_conv::<i64>(f, ch.packed, ch.len, &self.dp, self.signed, &mut out[ch.offset..]);
+            }
+        } else {
+            for ch in &self.chunks128 {
+                fused_conv::<i128>(f, ch.packed, ch.len, &self.dp, self.signed, &mut out[ch.offset..]);
+            }
+        }
+    }
+}
+
+/// Const-generic acc-domain core: the Thm.-2 packed-domain overlap-add
+/// with the pack and emit loops fully unrolled for the design point's `N`
+/// (§Perf: the accumulator chain emits only `N` segments per chunk, which
+/// beats per-product segmentation whenever `K > 1`).
+fn fused_conv_acc<W: ProdWord, const N: usize>(
+    f: &[i64],
+    packed_g: W,
+    g_len: usize,
+    s: u32,
+    signed: bool,
+    out: &mut [i64],
+) {
+    let conv_len = f.len() + g_len - 1;
+    let full = f.len() / N;
+    let mut acc = W::zero();
+    let mut carry: i64 = 0;
+    let mut m = 0usize;
+    for x in 0..full {
+        let chunk = &f[x * N..x * N + N];
+        let mut a = W::zero();
+        for i in (0..N).rev() {
+            a = a.shl(s).wadd(W::from_i64(chunk[i]));
+        }
+        let sum = acc.wadd(a.wmul(packed_g));
+        let mut w = sum;
+        let dst = &mut out[m..m + N];
+        if signed {
+            for slot in dst.iter_mut() {
+                *slot += w.low_seg_signed(s) + carry;
+                carry = w.bit(s - 1);
+                w = w.sar(s);
+            }
+        } else {
+            for slot in dst.iter_mut() {
+                *slot += w.low_seg_unsigned(s);
+                w = w.sar(s);
+            }
+        }
+        m += N;
+        acc = sum.sar(s * N as u32);
+    }
+    // Tail chunk folds into the flush word.
+    let rem = &f[full * N..];
+    if !rem.is_empty() {
+        let mut a = W::zero();
+        for &v in rem.iter().rev() {
+            a = a.shl(s).wadd(W::from_i64(v));
+        }
+        acc = acc.wadd(a.wmul(packed_g));
+    }
+    let mut w = acc;
+    while m < conv_len {
+        if signed {
+            out[m] += w.low_seg_signed(s) + carry;
+            carry = w.bit(s - 1);
+        } else {
+            out[m] += w.low_seg_unsigned(s);
+        }
+        w = w.sar(s);
+        m += 1;
+    }
+}
+
+/// Fused single-kernel-chunk core: packs each feature chunk inline (one
+/// shift+add per operand), multiplies, emits — a single pass over `f`
+/// with no intermediate buffer. The main loop body is branch-light:
+/// full chunks emit exactly `n` outputs via slice iterators.
+fn fused_conv<W: ProdWord>(
+    f: &[i64],
+    packed_g: W,
+    g_len: usize,
+    dp: &DesignPoint,
+    signed: bool,
+    out: &mut [i64],
+) {
+    // Dispatch hot N values to fully-unrolled const instantiations.
+    match dp.n {
+        2 => return fused_conv_acc::<W, 2>(f, packed_g, g_len, dp.s, signed, out),
+        3 => return fused_conv_acc::<W, 3>(f, packed_g, g_len, dp.s, signed, out),
+        4 => return fused_conv_acc::<W, 4>(f, packed_g, g_len, dp.s, signed, out),
+        5 => return fused_conv_acc::<W, 5>(f, packed_g, g_len, dp.s, signed, out),
+        6 => return fused_conv_acc::<W, 6>(f, packed_g, g_len, dp.s, signed, out),
+        7 => return fused_conv_acc::<W, 7>(f, packed_g, g_len, dp.s, signed, out),
+        8 => return fused_conv_acc::<W, 8>(f, packed_g, g_len, dp.s, signed, out),
+        9 => return fused_conv_acc::<W, 9>(f, packed_g, g_len, dp.s, signed, out),
+        _ => {}
+    }
+    let s = dp.s;
+    let n = dp.n;
+    let conv_len = f.len() + g_len - 1;
+    let full = f.len() / n;
+    let mut acc = W::zero();
+    let mut carry: i64 = 0;
+    let mut m = 0usize;
+    for x in 0..full {
+        let chunk = &f[x * n..x * n + n];
+        let mut a = W::zero();
+        for &v in chunk.iter().rev() {
+            a = a.shl(s).wadd(W::from_i64(v));
+        }
+        let sum = acc.wadd(a.wmul(packed_g));
+        let mut w = sum;
+        // m + n <= full*n <= f.len() <= conv_len: emit exactly n.
+        if signed {
+            for slot in &mut out[m..m + n] {
+                *slot += w.low_seg_signed(s) + carry;
+                carry = w.bit(s - 1);
+                w = w.sar(s);
+            }
+        } else {
+            for slot in &mut out[m..m + n] {
+                *slot += w.low_seg_unsigned(s);
+                w = w.sar(s);
+            }
+        }
+        m += n;
+        acc = sum.sar(s * n as u32);
+    }
+    // Tail chunk (f.len() not a multiple of N) folds into the flush word.
+    let rem = &f[full * n..];
+    if !rem.is_empty() {
+        let mut a = W::zero();
+        for &v in rem.iter().rev() {
+            a = a.shl(s).wadd(W::from_i64(v));
+        }
+        acc = acc.wadd(a.wmul(packed_g));
+    }
+    // Flush remaining segments (tail outputs + K-1 overlap).
+    let mut w = acc;
+    while m < conv_len {
+        if signed {
+            out[m] += w.low_seg_signed(s) + carry;
+            carry = w.bit(s - 1);
+        } else {
+            out[m] += w.low_seg_unsigned(s);
+        }
+        w = w.sar(s);
+        m += 1;
+    }
+}
+
+/// Single-block `F_{N,K}` primitive (Theorem 1): convolve at most `N`
+/// features with at most `K` kernel values using exactly one wide
+/// multiplication; returns the `n+k-1` segments.
+pub fn fnk_block(f: &[i64], g: &[i64], dp: &DesignPoint) -> Vec<i64> {
+    assert!(f.len() <= dp.n && g.len() <= dp.k, "block exceeds (N, K)");
+    assert!(!f.is_empty() && !g.is_empty());
+    let a: i128 = pack_word(f, dp.s);
+    let b: i128 = pack_word(g, dp.s);
+    let prod = a.wrapping_mul(b);
+    let count = f.len() + g.len() - 1;
+    if matches!(dp.signedness, Signedness::Unsigned) {
+        crate::packing::segment_unsigned(prod as u128, dp.s, count)
+            .into_iter()
+            .collect()
+    } else {
+        crate::packing::segment_signed(prod as u128, dp.s, count)
+    }
+}
+
+/// Convenience: one-shot HiKonv convolution (engine construction included).
+pub fn conv1d_hikonv(f: &[i64], g: &[i64], dp: &DesignPoint) -> Vec<i64> {
+    Conv1dHiKonv::new(*dp, g).expect("valid design point").conv(f)
+}
+
+/// The baseline the paper compares against (re-export for benches).
+pub use super::reference::conv1d_ref as conv1d_baseline;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference::conv1d_ref;
+    use crate::testing::{assert_seq_eq, check, default_cases};
+    use crate::theory::{solve, Multiplier, Signedness};
+    use crate::util::rng::Rng;
+
+    fn dp_cpu_4bit() -> DesignPoint {
+        solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fnk_block_matches_reference() {
+        let dp = solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        let f = [12, 5, 9];
+        let g = [3, 14, 7];
+        let y = fnk_block(&f[..dp.n.min(3)], &g[..dp.k.min(3)], &dp);
+        let r = conv1d_ref(&f[..dp.n.min(3)], &g[..dp.k.min(3)]);
+        assert_seq_eq(&y, &r).unwrap();
+    }
+
+    #[test]
+    fn paper_cpu_design_point_long_input() {
+        let dp = dp_cpu_4bit();
+        let mut rng = Rng::new(1);
+        let f = rng.quant_unsigned_vec(4, 1000);
+        let g = rng.quant_unsigned_vec(4, 3);
+        assert_seq_eq(&conv1d_hikonv(&f, &g, &dp), &conv1d_ref(&f, &g)).unwrap();
+    }
+
+    #[test]
+    fn input_not_multiple_of_n() {
+        let dp = dp_cpu_4bit();
+        let mut rng = Rng::new(2);
+        for len in [1usize, 2, 3, 4, 5, 7, 31, 100, 101] {
+            let f = rng.quant_unsigned_vec(4, len);
+            let g = rng.quant_unsigned_vec(4, 3);
+            assert_seq_eq(&conv1d_hikonv(&f, &g, &dp), &conv1d_ref(&f, &g)).unwrap();
+        }
+    }
+
+    #[test]
+    fn kernel_longer_than_k_is_chunked() {
+        let dp = dp_cpu_4bit();
+        let mut rng = Rng::new(3);
+        for klen in [4usize, 5, 6, 9, 16] {
+            let f = rng.quant_unsigned_vec(4, 64);
+            let g = rng.quant_unsigned_vec(4, klen);
+            assert_seq_eq(&conv1d_hikonv(&f, &g, &dp), &conv1d_ref(&f, &g)).unwrap();
+        }
+    }
+
+    #[test]
+    fn signed_engine_matches_reference() {
+        let dp = solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::Signed,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap();
+        let mut rng = Rng::new(4);
+        for len in [1usize, 5, 50, 257] {
+            let f = rng.quant_signed_vec(4, len);
+            let g = rng.quant_signed_vec(4, dp.k.min(3));
+            assert_seq_eq(&conv1d_hikonv(&f, &g, &dp), &conv1d_ref(&f, &g)).unwrap();
+        }
+    }
+
+    #[test]
+    fn mixed_signedness_matches_reference() {
+        let dp = solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::UnsignedBySigned,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap();
+        let mut rng = Rng::new(5);
+        let f = rng.quant_unsigned_vec(4, 200);
+        let g = rng.quant_signed_vec(4, dp.k);
+        assert_seq_eq(&conv1d_hikonv(&f, &g, &dp), &conv1d_ref(&f, &g)).unwrap();
+    }
+
+    #[test]
+    fn i64_and_i128_paths_agree() {
+        // 32x32 4-bit uses the i64 path; force i128 via a 64x64 multiplier.
+        let mut rng = Rng::new(6);
+        let f = rng.quant_unsigned_vec(4, 300);
+        let g = rng.quant_unsigned_vec(4, 3);
+        let dp64 = solve(
+            Multiplier::CPU64,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap();
+        let dp32 = dp_cpu_4bit();
+        let a = conv1d_hikonv(&f, &g, &dp32);
+        let b = conv1d_hikonv(&f, &g, &dp64);
+        assert_seq_eq(&a, &b).unwrap();
+        assert_seq_eq(&a, &conv1d_ref(&f, &g)).unwrap();
+    }
+
+    #[test]
+    fn property_all_bitwidths_match_reference() {
+        check(
+            "hikonv conv1d == reference over p=q in 1..=8, both signedness",
+            0x44,
+            default_cases(),
+            |rng: &mut Rng, size| {
+                let bits = 1 + rng.below(8) as u32;
+                let signed = rng.below(2) == 1;
+                let flen = 1 + rng.below((size as u64 * 4).max(1)) as usize;
+                let klen = 1 + rng.below(8) as usize;
+                let (f, g) = if signed && bits > 1 {
+                    (
+                        rng.quant_signed_vec(bits, flen),
+                        rng.quant_signed_vec(bits, klen),
+                    )
+                } else {
+                    (
+                        rng.quant_unsigned_vec(bits, flen),
+                        rng.quant_unsigned_vec(bits, klen),
+                    )
+                };
+                (bits, signed && bits > 1, f, g)
+            },
+            |(bits, signed, f, g)| {
+                let sgn = if *signed {
+                    Signedness::Signed
+                } else {
+                    Signedness::Unsigned
+                };
+                let dp = solve(
+                    Multiplier::CPU32,
+                    *bits,
+                    *bits,
+                    sgn,
+                    AccumMode::Extended { m: 1 },
+                )
+                .map_err(|e| e.to_string())?;
+                assert_seq_eq(&conv1d_hikonv(f, g, &dp), &conv1d_ref(f, g))
+            },
+        );
+    }
+
+    #[test]
+    fn property_dsp48e2_points_match_reference() {
+        check(
+            "hikonv conv1d on 27x18 DSP points == reference",
+            0x55,
+            default_cases() / 2,
+            |rng: &mut Rng, size| {
+                let bits = 1 + rng.below(6) as u32;
+                let flen = 1 + rng.below((size as u64 * 2).max(1)) as usize;
+                (
+                    bits,
+                    rng.quant_unsigned_vec(bits, flen),
+                    rng.quant_unsigned_vec(bits, 3),
+                )
+            },
+            |(bits, f, g)| {
+                let dp = solve(
+                    Multiplier::DSP48E2,
+                    *bits,
+                    *bits,
+                    Signedness::Unsigned,
+                    AccumMode::Extended { m: 1 },
+                )
+                .map_err(|e| e.to_string())?;
+                assert_seq_eq(&conv1d_hikonv(f, g, &dp), &conv1d_ref(f, g))
+            },
+        );
+    }
+
+    #[test]
+    fn extreme_values_stress_guard_bits() {
+        // All operands at max magnitude: the exact worst case the guard-bit
+        // sizing must absorb.
+        let dp = dp_cpu_4bit();
+        let f = vec![15i64; 500];
+        let g = vec![15i64; 3];
+        assert_seq_eq(&conv1d_hikonv(&f, &g, &dp), &conv1d_ref(&f, &g)).unwrap();
+
+        let dps = solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::Signed,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap();
+        let f = vec![-8i64; 500];
+        let g = vec![-8i64; dps.k];
+        assert_seq_eq(&conv1d_hikonv(&f, &g, &dps), &conv1d_ref(&f, &g)).unwrap();
+    }
+
+    #[test]
+    fn engine_rejects_single_mode() {
+        let dp = solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        assert!(Conv1dHiKonv::new(dp, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn conv_into_accumulates() {
+        let dp = dp_cpu_4bit();
+        let eng = Conv1dHiKonv::new(dp, &[1, 2, 3]).unwrap();
+        let f = [1i64, 0, 0, 2];
+        let mut out = vec![100i64; f.len() + 2];
+        eng.conv_into(&f, &mut out);
+        let r = conv1d_ref(&f, &[1, 2, 3]);
+        for (o, r) in out.iter().zip(&r) {
+            assert_eq!(*o, 100 + r);
+        }
+    }
+}

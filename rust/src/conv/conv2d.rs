@@ -1,0 +1,504 @@
+//! Theorem 3: a DNN convolution layer computed from HiKonv 1-D convolutions,
+//! with packed-domain channel accumulation (§III-B "DNN Convolution").
+//!
+//! For every `(c_o, h)` output row the engine accumulates, *in the packed
+//! domain*, the products of all `(c_i, k_h)` row-pairs of a channel block
+//! before segmenting once — amortizing the bit-management cost over
+//! `block·K` row convolutions. The guard bits are sized by the solver with
+//! `AccumMode::Extended { m = block·K }`, matching the paper's
+//! `G_b = ceil(log2(M·min(K,N)))` channel-accumulation rule.
+
+use super::reference::ConvShape;
+use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness};
+
+/// Configuration for a HiKonv DNN layer engine.
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dSpec {
+    pub shape: ConvShape,
+    pub mult: Multiplier,
+    /// Feature (activation) bitwidth `p` and kernel (weight) bitwidth `q`.
+    pub p: u32,
+    pub q: u32,
+    pub signedness: Signedness,
+}
+
+/// HiKonv layer engine with pre-packed weights ("kernels are packed offline
+/// before the processing starts", §IV-A).
+#[derive(Clone, Debug)]
+pub struct Conv2dHiKonv {
+    spec: Conv2dSpec,
+    dp: DesignPoint,
+    /// Channels accumulated per packed-domain block.
+    channel_block: usize,
+    /// Packed (reversed) weight rows: `[co][ci][kh]`, each one word.
+    packed_w: Vec<i128>,
+    /// Number of packed feature chunks per input row.
+    chunks_per_row: usize,
+    signed: bool,
+}
+
+impl Conv2dHiKonv {
+    /// Build the engine, choosing the deepest channel block the guard bits
+    /// support (capped at `C_i`) that still keeps `N >= 2`.
+    pub fn new(spec: Conv2dSpec, weights: &[i64]) -> Result<Conv2dHiKonv, String> {
+        let (block, dp) = choose_channel_block(&spec)?;
+        Self::build(spec, weights, block, dp)
+    }
+
+    /// Build with an explicit channel block (ablation / tuning hook). The
+    /// guard bits are solved for the requested depth; errors if infeasible.
+    pub fn with_block(
+        spec: Conv2dSpec,
+        weights: &[i64],
+        block: usize,
+    ) -> Result<Conv2dHiKonv, String> {
+        assert!(block >= 1 && block <= spec.shape.ci);
+        let m = (block * spec.shape.k) as u64;
+        let dp = solve(
+            spec.mult,
+            spec.p,
+            spec.q,
+            spec.signedness,
+            AccumMode::Extended { m },
+        )
+        .map_err(|e| e.to_string())?;
+        Self::build(spec, weights, block, dp)
+    }
+
+    fn build(
+        spec: Conv2dSpec,
+        weights: &[i64],
+        block: usize,
+        dp: DesignPoint,
+    ) -> Result<Conv2dHiKonv, String> {
+        let sh = spec.shape;
+        assert_eq!(weights.len(), sh.weight_len(), "weight length mismatch");
+        let signed = !matches!(spec.signedness, Signedness::Unsigned);
+
+        // Pack reversed weight rows: g[k'] = W[co][ci][kh][K-1-k'] (Eq. 20).
+        let mut packed_w = Vec::with_capacity(sh.co * sh.ci * sh.k);
+        let mut rev = vec![0i64; sh.k];
+        for co in 0..sh.co {
+            for ci in 0..sh.ci {
+                for kh in 0..sh.k {
+                    let base = ((co * sh.ci + ci) * sh.k + kh) * sh.k;
+                    for kw in 0..sh.k {
+                        rev[kw] = weights[base + sh.k - 1 - kw];
+                    }
+                    packed_w.push(pack_i128(&rev, dp.s));
+                }
+            }
+        }
+        Ok(Conv2dHiKonv {
+            spec,
+            dp,
+            channel_block: block,
+            packed_w,
+            chunks_per_row: sh.wi.div_ceil(dp.n),
+            signed,
+        })
+    }
+
+    pub fn design_point(&self) -> &DesignPoint {
+        &self.dp
+    }
+
+    pub fn channel_block(&self) -> usize {
+        self.channel_block
+    }
+
+    /// Wide multiplications needed per forward pass (for DSP-efficiency
+    /// accounting): `co·ho·ci·k·ceil(wi/n)`.
+    pub fn wide_muls_per_pass(&self) -> u64 {
+        let sh = self.spec.shape;
+        (sh.co * sh.ho() * sh.ci * sh.k * self.chunks_per_row) as u64
+    }
+
+    /// Run the layer. Input `[ci][h][w]`, output `[co][h][w]` row-major.
+    pub fn conv(&self, input: &[i64]) -> Vec<i64> {
+        let sh = self.spec.shape;
+        assert_eq!(input.len(), sh.input_len(), "input length mismatch");
+        let (ho, wo, wi, k) = (sh.ho(), sh.wo(), sh.wi, sh.k);
+        let s = self.dp.s;
+        let n = self.dp.n;
+        let x_chunks = self.chunks_per_row;
+
+        // Runtime feature packing, once per input row (shared across co).
+        let mut packed_in = vec![0i128; sh.ci * sh.hi * x_chunks];
+        for ci in 0..sh.ci {
+            for h in 0..sh.hi {
+                let row = &input[(ci * sh.hi + h) * wi..(ci * sh.hi + h) * wi + wi];
+                let base = (ci * sh.hi + h) * x_chunks;
+                for (x, chunk) in row.chunks(n).enumerate() {
+                    packed_in[base + x] = pack_i128(chunk, s);
+                }
+            }
+        }
+
+        let conv_len = wi + k - 1;
+        let mut out = vec![0i64; sh.output_len()];
+        let mut seg_buf = vec![0i64; conv_len];
+        for co in 0..sh.co {
+            for h in 0..ho {
+                let out_row = &mut out[(co * ho + h) * wo..(co * ho + h) * wo + wo];
+                for block_start in (0..sh.ci).step_by(self.channel_block) {
+                    let block_end = (block_start + self.channel_block).min(sh.ci);
+                    // Streaming overlap-add of the packed-domain sum over
+                    // (ci in block, kh): one segmentation pass per block.
+                    seg_buf.iter_mut().for_each(|v| *v = 0);
+                    let mut acc: i128 = 0;
+                    let mut carry: i64 = 0;
+                    let mut m = 0usize;
+                    for x in 0..x_chunks {
+                        let mut sum = acc;
+                        for ci in block_start..block_end {
+                            let wbase = (co * sh.ci + ci) * k;
+                            let ibase = (ci * sh.hi + h) * x_chunks;
+                            for kh in 0..k {
+                                let a = packed_in[ibase + kh * x_chunks + x];
+                                sum = sum
+                                    .wrapping_add(a.wrapping_mul(self.packed_w[wbase + kh]));
+                            }
+                        }
+                        let emit = n.min(conv_len - m);
+                        let mut w = sum;
+                        if self.signed {
+                            for _ in 0..emit {
+                                seg_buf[m] = seg_i128_signed(w, s) + carry;
+                                carry = ((w >> (s - 1)) & 1) as i64;
+                                w >>= s;
+                                m += 1;
+                            }
+                        } else {
+                            for _ in 0..emit {
+                                seg_buf[m] = (w & ((1i128 << s) - 1)) as i64;
+                                w >>= s;
+                                m += 1;
+                            }
+                        }
+                        if emit < n {
+                            break;
+                        }
+                        acc = sum >> (s * n as u32);
+                    }
+                    // Flush pending overlap segments.
+                    let mut w = acc;
+                    while m < conv_len {
+                        if self.signed {
+                            seg_buf[m] = seg_i128_signed(w, s) + carry;
+                            carry = ((w >> (s - 1)) & 1) as i64;
+                        } else {
+                            seg_buf[m] = (w & ((1i128 << s) - 1)) as i64;
+                        }
+                        w >>= s;
+                        m += 1;
+                    }
+                    // y[w + K - 1] accumulates into O[co][h][w] (Eq. 18).
+                    for w_out in 0..wo {
+                        out_row[w_out] += seg_buf[w_out + k - 1];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Pick the deepest channel block whose guard bits keep `N >= 2`, searching
+/// downward from `C_i`; returns the block and its design point.
+fn choose_channel_block(spec: &Conv2dSpec) -> Result<(usize, DesignPoint), String> {
+    let sh = spec.shape;
+    let mut best: Option<(usize, DesignPoint, u64)> = None;
+    let mut block = sh.ci.max(1);
+    loop {
+        let m = (block * sh.k) as u64;
+        if let Ok(dp) = solve(
+            spec.mult,
+            spec.p,
+            spec.q,
+            spec.signedness,
+            AccumMode::Extended { m },
+        ) {
+            if dp.n >= 2 || block == 1 {
+                // Cost: wide muls (fixed per layout) + segmentation passes.
+                let x = sh.wi.div_ceil(dp.n) as u64;
+                let muls = (sh.ci * sh.k) as u64 * x;
+                let segs = (sh.ci.div_ceil(block)) as u64 * x * (dp.n as u64 + sh.k as u64);
+                let cost = muls * 2 + segs;
+                if best.map(|(_, _, c)| cost < c).unwrap_or(true) {
+                    best = Some((block, dp, cost));
+                }
+            }
+        }
+        if block == 1 {
+            break;
+        }
+        block = block / 2;
+    }
+    best.map(|(b, dp, _)| (b, dp))
+        .ok_or_else(|| "no feasible channel block".to_string())
+}
+
+#[inline(always)]
+fn pack_i128(vals: &[i64], s: u32) -> i128 {
+    let mut w: i128 = 0;
+    for &v in vals.iter().rev() {
+        w = (w << s).wrapping_add(v as i128);
+    }
+    w
+}
+
+#[inline(always)]
+fn seg_i128_signed(w: i128, s: u32) -> i64 {
+    let sh = 128 - s;
+    ((w << sh) >> sh) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference::conv2d_ref;
+    use crate::testing::{assert_seq_eq, check, default_cases};
+    use crate::util::rng::Rng;
+
+    fn random_layer(
+        rng: &mut Rng,
+        shape: ConvShape,
+        p: u32,
+        q: u32,
+        signed: bool,
+    ) -> (Vec<i64>, Vec<i64>) {
+        let input = if signed {
+            rng.quant_signed_vec(p, shape.input_len())
+        } else {
+            rng.quant_unsigned_vec(p, shape.input_len())
+        };
+        let weights = if signed {
+            rng.quant_signed_vec(q, shape.weight_len())
+        } else {
+            rng.quant_unsigned_vec(q, shape.weight_len())
+        };
+        (input, weights)
+    }
+
+    fn check_layer(shape: ConvShape, p: u32, q: u32, signedness: Signedness, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let signed_in = matches!(signedness, Signedness::Signed);
+        let signed_w = !matches!(signedness, Signedness::Unsigned);
+        let input = if signed_in {
+            rng.quant_signed_vec(p, shape.input_len())
+        } else {
+            rng.quant_unsigned_vec(p, shape.input_len())
+        };
+        let weights = if signed_w {
+            rng.quant_signed_vec(q, shape.weight_len())
+        } else {
+            rng.quant_unsigned_vec(q, shape.weight_len())
+        };
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p,
+            q,
+            signedness,
+        };
+        let eng = Conv2dHiKonv::new(spec, &weights).unwrap();
+        let got = eng.conv(&input);
+        let want = conv2d_ref(&input, &weights, shape);
+        assert_seq_eq(&got, &want).unwrap();
+    }
+
+    #[test]
+    fn small_layer_unsigned() {
+        check_layer(
+            ConvShape {
+                ci: 3,
+                co: 2,
+                hi: 6,
+                wi: 9,
+                k: 3,
+            },
+            4,
+            4,
+            Signedness::Unsigned,
+            10,
+        );
+    }
+
+    #[test]
+    fn small_layer_signed() {
+        check_layer(
+            ConvShape {
+                ci: 3,
+                co: 2,
+                hi: 6,
+                wi: 9,
+                k: 3,
+            },
+            4,
+            4,
+            Signedness::Signed,
+            11,
+        );
+    }
+
+    #[test]
+    fn w4a4_dnn_case_unsigned_by_signed() {
+        // The UltraNet case: unsigned 4-bit activations × signed 4-bit weights.
+        check_layer(
+            ConvShape {
+                ci: 8,
+                co: 4,
+                hi: 8,
+                wi: 16,
+                k: 3,
+            },
+            4,
+            4,
+            Signedness::UnsignedBySigned,
+            12,
+        );
+    }
+
+    #[test]
+    fn kernel_1x1() {
+        check_layer(
+            ConvShape {
+                ci: 4,
+                co: 4,
+                hi: 5,
+                wi: 7,
+                k: 1,
+            },
+            4,
+            4,
+            Signedness::UnsignedBySigned,
+            13,
+        );
+    }
+
+    #[test]
+    fn kernel_5x5() {
+        check_layer(
+            ConvShape {
+                ci: 2,
+                co: 2,
+                hi: 7,
+                wi: 11,
+                k: 5,
+            },
+            3,
+            3,
+            Signedness::Unsigned,
+            14,
+        );
+    }
+
+    #[test]
+    fn binary_layer() {
+        check_layer(
+            ConvShape {
+                ci: 4,
+                co: 3,
+                hi: 6,
+                wi: 12,
+                k: 3,
+            },
+            1,
+            1,
+            Signedness::Unsigned,
+            15,
+        );
+    }
+
+    #[test]
+    fn width_not_multiple_of_n() {
+        for wi in [3usize, 4, 5, 10, 13] {
+            check_layer(
+                ConvShape {
+                    ci: 2,
+                    co: 2,
+                    hi: 4,
+                    wi,
+                    k: 3,
+                },
+                4,
+                4,
+                Signedness::Unsigned,
+                16 + wi as u64,
+            );
+        }
+    }
+
+    #[test]
+    fn deep_channel_count_blocks_correctly() {
+        // ci = 64 exceeds any feasible single guard budget: forces blocking.
+        let shape = ConvShape {
+            ci: 64,
+            co: 1,
+            hi: 4,
+            wi: 8,
+            k: 3,
+        };
+        check_layer(shape, 4, 4, Signedness::UnsignedBySigned, 17);
+    }
+
+    #[test]
+    fn property_random_shapes_match_reference() {
+        check(
+            "hikonv conv2d == reference over random shapes",
+            0x66,
+            (default_cases() / 8).max(8),
+            |rng: &mut Rng, _size| {
+                let k = [1usize, 3, 5][rng.below(3) as usize];
+                let shape = ConvShape {
+                    ci: 1 + rng.below(6) as usize,
+                    co: 1 + rng.below(4) as usize,
+                    hi: k + rng.below(5) as usize,
+                    wi: k + rng.below(12) as usize,
+                    k,
+                };
+                let p = 1 + rng.below(5) as u32;
+                let q = 1 + rng.below(5) as u32;
+                let (input, weights) = random_layer(rng, shape, p, q, false);
+                (shape, p, q, input, weights)
+            },
+            |(shape, p, q, input, weights)| {
+                let spec = Conv2dSpec {
+                    shape: *shape,
+                    mult: Multiplier::CPU32,
+                    p: *p,
+                    q: *q,
+                    signedness: Signedness::Unsigned,
+                };
+                let eng = Conv2dHiKonv::new(spec, weights).map_err(|e| e)?;
+                assert_seq_eq(&eng.conv(input), &conv2d_ref(input, weights, *shape))
+            },
+        );
+    }
+
+    #[test]
+    fn wide_muls_accounting() {
+        let shape = ConvShape {
+            ci: 4,
+            co: 2,
+            hi: 5,
+            wi: 9,
+            k: 3,
+        };
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::Unsigned,
+        };
+        let weights = vec![1i64; shape.weight_len()];
+        let eng = Conv2dHiKonv::new(spec, &weights).unwrap();
+        let n = eng.design_point().n;
+        assert_eq!(
+            eng.wide_muls_per_pass(),
+            (2 * 3 * 4 * 3 * shape.wi.div_ceil(n)) as u64
+        );
+    }
+}

@@ -1,0 +1,211 @@
+//! HiKonv beyond convolution: packed dot products and quantized matmul.
+//!
+//! The paper's conclusion (§VI) positions HiKonv as a general technique
+//! for "efficient DNN processing"; fully-connected layers and attention
+//! are dot products, not convolutions. A dot product is the *middle
+//! segment* of an `F_{N,N}` block when one operand is packed in reverse:
+//!
+//! ```text
+//! A = Σ x[i]·2^(S·i),  B = Σ y[N-1-j]·2^(S·j)
+//! Prod segment N-1 = Σ_{i+j=N-1} x[i]·y[N-1-j] = Σ_i x[i]·y[i]
+//! ```
+//!
+//! so one wide multiplication computes an `N`-term partial dot product.
+//! Longer vectors accumulate in the integer domain (the segment value is
+//! already a sum, so the guard sizing is the Extended rule with `m`
+//! covering the cross-block accumulation depth — we segment per block and
+//! accumulate in i64, which removes that constraint entirely).
+
+use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness, SolveError};
+
+/// A HiKonv dot-product engine for a fixed design point.
+#[derive(Clone, Copy, Debug)]
+pub struct DotHiKonv {
+    dp: DesignPoint,
+    /// Terms per wide multiplication: `min(N, K)`.
+    block: usize,
+}
+
+impl DotHiKonv {
+    /// Solve a dot-product design point for a multiplier and bitwidths.
+    pub fn new(
+        mult: Multiplier,
+        p: u32,
+        q: u32,
+        signedness: Signedness,
+    ) -> Result<DotHiKonv, SolveError> {
+        // Single-block guard sizing suffices: segments are extracted per
+        // block and accumulated as ordinary integers.
+        let dp = solve(mult, p, q, signedness, AccumMode::Single)?;
+        Ok(DotHiKonv {
+            dp,
+            block: dp.n.min(dp.k),
+        })
+    }
+
+    pub fn design_point(&self) -> &DesignPoint {
+        &self.dp
+    }
+
+    /// Terms folded into one wide multiplication.
+    pub fn terms_per_mult(&self) -> usize {
+        self.block
+    }
+
+    /// Exact dot product `Σ x[i]·y[i]` of quantized vectors.
+    pub fn dot(&self, x: &[i64], y: &[i64]) -> i64 {
+        assert_eq!(x.len(), y.len(), "length mismatch");
+        let s = self.dp.s;
+        let b = self.block;
+        let signed = !matches!(self.dp.signedness, Signedness::Unsigned);
+        let mut acc: i64 = 0;
+        let mut i = 0;
+        while i + b <= x.len() {
+            let mut a: i128 = 0;
+            let mut w: i128 = 0;
+            // A forward, B reversed: middle segment is the dot product.
+            for j in (0..b).rev() {
+                a = (a << s).wrapping_add(x[i + j] as i128);
+                w = (w << s).wrapping_add(y[i + b - 1 - j] as i128);
+            }
+            let prod = a.wrapping_mul(w);
+            let mid = prod >> (s * (b as u32 - 1));
+            let seg = if signed {
+                let sh = 128 - s;
+                let lo = ((mid << sh) >> sh) as i64;
+                // carry correction from the bit below the middle segment
+                let carry = if b > 1 {
+                    ((prod >> (s * (b as u32 - 1) - 1)) & 1) as i64
+                } else {
+                    0
+                };
+                lo + carry
+            } else {
+                (mid & ((1i128 << s) - 1)) as i64
+            };
+            acc += seg;
+            i += b;
+        }
+        // Scalar tail.
+        for j in i..x.len() {
+            acc += x[j] * y[j];
+        }
+        acc
+    }
+
+    /// Quantized matrix multiply: `a` is (m × k) row-major, `b_t` is the
+    /// **transposed** right operand (n × k row-major, i.e. rows are the
+    /// columns of B). Returns (m × n) row-major i64.
+    pub fn matmul(&self, a: &[i64], b_t: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b_t.len(), n * k);
+        let mut out = vec![0i64; m * n];
+        for row in 0..m {
+            let ar = &a[row * k..row * k + k];
+            for col in 0..n {
+                out[row * n + col] = self.dot(ar, &b_t[col * k..col * k + k]);
+            }
+        }
+        out
+    }
+}
+
+/// Reference dot product.
+pub fn dot_ref(x: &[i64], y: &[i64]) -> i64 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, default_cases};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn unsigned_dot_matches_reference() {
+        let eng = DotHiKonv::new(Multiplier::CPU32, 4, 4, Signedness::Unsigned).unwrap();
+        assert!(eng.terms_per_mult() >= 2);
+        let mut rng = Rng::new(61);
+        for len in [1usize, 2, 3, 7, 64, 257] {
+            let x = rng.quant_unsigned_vec(4, len);
+            let y = rng.quant_unsigned_vec(4, len);
+            assert_eq!(eng.dot(&x, &y), dot_ref(&x, &y), "len={len}");
+        }
+    }
+
+    #[test]
+    fn signed_dot_matches_reference() {
+        let eng = DotHiKonv::new(Multiplier::CPU32, 4, 4, Signedness::Signed).unwrap();
+        let mut rng = Rng::new(62);
+        for len in [1usize, 5, 33, 100] {
+            let x = rng.quant_signed_vec(4, len);
+            let y = rng.quant_signed_vec(4, len);
+            assert_eq!(eng.dot(&x, &y), dot_ref(&x, &y), "len={len}");
+        }
+    }
+
+    #[test]
+    fn binary_dot_is_popcount_like() {
+        let eng = DotHiKonv::new(Multiplier::CPU64, 1, 1, Signedness::Unsigned).unwrap();
+        let mut rng = Rng::new(63);
+        let x = rng.quant_unsigned_vec(1, 500);
+        let y = rng.quant_unsigned_vec(1, 500);
+        assert_eq!(eng.dot(&x, &y), dot_ref(&x, &y));
+        // Binary dot folds many terms per multiplication.
+        assert!(eng.terms_per_mult() >= 8);
+    }
+
+    #[test]
+    fn matmul_matches_reference() {
+        let eng =
+            DotHiKonv::new(Multiplier::CPU32, 4, 4, Signedness::UnsignedBySigned).unwrap();
+        let (m, k, n) = (5usize, 37usize, 4usize);
+        let mut rng = Rng::new(64);
+        let a = rng.quant_unsigned_vec(4, m * k);
+        let bt = rng.quant_signed_vec(4, n * k);
+        let got = eng.matmul(&a, &bt, m, k, n);
+        for row in 0..m {
+            for col in 0..n {
+                let want = dot_ref(&a[row * k..(row + 1) * k], &bt[col * k..(col + 1) * k]);
+                assert_eq!(got[row * n + col], want);
+            }
+        }
+    }
+
+    #[test]
+    fn property_dot_all_bitwidths() {
+        check(
+            "hikonv dot == reference across bitwidths/signedness",
+            0xD07,
+            default_cases(),
+            |rng: &mut Rng, size| {
+                let bits = 1 + rng.below(8) as u32;
+                let signed = rng.below(2) == 1 && bits > 1;
+                let len = 1 + rng.below((size as u64 * 4).max(2)) as usize;
+                let (x, y) = if signed {
+                    (rng.quant_signed_vec(bits, len), rng.quant_signed_vec(bits, len))
+                } else {
+                    (
+                        rng.quant_unsigned_vec(bits, len),
+                        rng.quant_unsigned_vec(bits, len),
+                    )
+                };
+                (bits, signed, x, y)
+            },
+            |(bits, signed, x, y)| {
+                let sgn = if *signed {
+                    Signedness::Signed
+                } else {
+                    Signedness::Unsigned
+                };
+                let eng = DotHiKonv::new(Multiplier::CPU32, *bits, *bits, sgn)
+                    .map_err(|e| e.to_string())?;
+                if eng.dot(x, y) == dot_ref(x, y) {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch at bits={bits}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Convolution engines: baseline references and the HiKonv packed engines.
+//!
+//! * [`reference`] — nested-loop 1-D and DNN-layer convolutions (the
+//!   baselines measured in Fig. 6).
+//! * [`conv1d`] — Theorem 1 (`F_{N,K}` by one wide multiplication) and
+//!   Theorem 2 (`F_{X·N,K}` overlap-add in the packed domain, Fig. 4),
+//!   including the `u64` fast path for the paper's 32×32 CPU setting.
+//! * [`conv2d`] — Theorem 3: a DNN convolution layer computed from 1-D
+//!   HiKonv convolutions, with optional packed-domain channel accumulation
+//!   (§III-B "DNN Convolution").
+
+pub mod conv1d;
+pub mod conv2d;
+pub mod dot;
+pub mod reference;
+
+pub use conv1d::{conv1d_hikonv, Conv1dHiKonv};
+pub use conv2d::{Conv2dHiKonv, Conv2dSpec};
+pub use dot::{dot_ref, DotHiKonv};
+pub use reference::{conv1d_ref, conv2d_ref};

@@ -1,0 +1,154 @@
+//! Baseline nested-loop convolutions — the Fig. 6 comparison points and the
+//! correctness oracles for every HiKonv engine.
+
+/// Conventional 1-D discrete convolution (Eq. 3): the paper's baseline
+/// "2-level nested loops — the outer loop scans through the input vector,
+/// the inner loop scans through the kernel vector".
+///
+/// Output has `f.len() + g.len() - 1` elements.
+pub fn conv1d_ref(f: &[i64], g: &[i64]) -> Vec<i64> {
+    if f.is_empty() || g.is_empty() {
+        return Vec::new();
+    }
+    let mut y = vec![0i64; f.len() + g.len() - 1];
+    for (n, &fv) in f.iter().enumerate() {
+        for (k, &gv) in g.iter().enumerate() {
+            y[n + k] += fv * gv;
+        }
+    }
+    y
+}
+
+/// Shape metadata for a DNN convolution layer (valid padding, stride 1,
+/// square kernel — the paper's Eq. 17 setting with `H_i = H_o + K - 1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub ci: usize,
+    pub co: usize,
+    pub hi: usize,
+    pub wi: usize,
+    pub k: usize,
+}
+
+impl ConvShape {
+    pub fn ho(&self) -> usize {
+        self.hi - self.k + 1
+    }
+    pub fn wo(&self) -> usize {
+        self.wi - self.k + 1
+    }
+    pub fn input_len(&self) -> usize {
+        self.ci * self.hi * self.wi
+    }
+    pub fn weight_len(&self) -> usize {
+        self.co * self.ci * self.k * self.k
+    }
+    pub fn output_len(&self) -> usize {
+        self.co * self.ho() * self.wo()
+    }
+    /// Multiply-accumulate operations for the layer.
+    pub fn macs(&self) -> u64 {
+        (self.co * self.ho() * self.wo() * self.ci * self.k * self.k) as u64
+    }
+}
+
+/// Conventional DNN convolution layer (Eq. 17): the 6-level nested loop
+/// baseline of Fig. 6b. Layouts: input `[ci][h][w]`, weights
+/// `[co][ci][kh][kw]`, output `[co][h][w]`, all row-major.
+pub fn conv2d_ref(input: &[i64], weights: &[i64], shape: ConvShape) -> Vec<i64> {
+    assert_eq!(input.len(), shape.input_len(), "input length mismatch");
+    assert_eq!(weights.len(), shape.weight_len(), "weight length mismatch");
+    let (ho, wo) = (shape.ho(), shape.wo());
+    let mut out = vec![0i64; shape.output_len()];
+    for co in 0..shape.co {
+        for h in 0..ho {
+            for w in 0..wo {
+                let mut acc = 0i64;
+                for ci in 0..shape.ci {
+                    for kh in 0..shape.k {
+                        let irow = (ci * shape.hi + h + kh) * shape.wi + w;
+                        let wrow = ((co * shape.ci + ci) * shape.k + kh) * shape.k;
+                        for kw in 0..shape.k {
+                            acc += input[irow + kw] * weights[wrow + kw];
+                        }
+                    }
+                }
+                out[(co * ho + h) * wo + w] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1d_identity_kernel() {
+        assert_eq!(conv1d_ref(&[1, 2, 3], &[1]), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn conv1d_known_values() {
+        // [1,2,3] * [4,5] = [4, 13, 22, 15]
+        assert_eq!(conv1d_ref(&[1, 2, 3], &[4, 5]), vec![4, 13, 22, 15]);
+    }
+
+    #[test]
+    fn conv1d_commutes() {
+        let f = [3, -1, 4, 1, -5, 9, 2];
+        let g = [-6, 5, 3];
+        assert_eq!(conv1d_ref(&f, &g), conv1d_ref(&g, &f));
+    }
+
+    #[test]
+    fn conv1d_empty() {
+        assert!(conv1d_ref(&[], &[1]).is_empty());
+        assert!(conv1d_ref(&[1], &[]).is_empty());
+    }
+
+    #[test]
+    fn conv2d_shapes() {
+        let s = ConvShape {
+            ci: 2,
+            co: 3,
+            hi: 5,
+            wi: 7,
+            k: 3,
+        };
+        assert_eq!(s.ho(), 3);
+        assert_eq!(s.wo(), 5);
+        assert_eq!(s.macs(), (3 * 3 * 5 * 2 * 9) as u64);
+    }
+
+    #[test]
+    fn conv2d_single_pixel_identity() {
+        // 1x1 kernel of value 2 doubles the input.
+        let s = ConvShape {
+            ci: 1,
+            co: 1,
+            hi: 2,
+            wi: 2,
+            k: 1,
+        };
+        let out = conv2d_ref(&[1, 2, 3, 4], &[2], s);
+        assert_eq!(out, vec![2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn conv2d_sums_channels() {
+        // Two input channels, all-ones 2x2 kernel on 2x2 input -> each
+        // output (1 pixel) = sum of all inputs over both channels.
+        let s = ConvShape {
+            ci: 2,
+            co: 1,
+            hi: 2,
+            wi: 2,
+            k: 2,
+        };
+        let input = [1, 2, 3, 4, 10, 20, 30, 40];
+        let weights = [1i64; 8];
+        assert_eq!(conv2d_ref(&input, &weights, s), vec![110]);
+    }
+}

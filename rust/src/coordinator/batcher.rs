@@ -1,0 +1,119 @@
+//! Dynamic batcher: groups queued frames ahead of inference.
+//!
+//! Classic serving pattern: block for the first frame, then opportunistically
+//! drain up to `max_batch - 1` more that are already queued (bounded by a
+//! linger deadline) — small batches under light load, full batches under
+//! backlog, no added tail latency when the queue is empty.
+
+use super::pipeline::Frame;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+pub struct Batcher {
+    pub max_batch: usize,
+    /// Max time to wait for follow-up frames once one is in hand.
+    pub linger: Duration,
+}
+
+impl Default for Batcher {
+    fn default() -> Self {
+        Batcher {
+            max_batch: 4,
+            linger: Duration::from_millis(2),
+        }
+    }
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, linger: Duration) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher { max_batch, linger }
+    }
+
+    /// Pull the next batch. Returns `None` when the channel is closed and
+    /// drained.
+    pub fn next_batch(&self, rx: &Receiver<Frame>) -> Option<Vec<Frame>> {
+        let first = rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.linger;
+        while batch.len() < self.max_batch {
+            match rx.try_recv() {
+                Ok(f) => batch.push(f),
+                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Empty) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(f) => batch.push(f),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+    use std::time::Instant;
+
+    fn frame(id: u64) -> Frame {
+        Frame {
+            id,
+            levels: vec![],
+            created: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn drains_queued_frames_up_to_max() {
+        let (tx, rx) = sync_channel(16);
+        for i in 0..6 {
+            tx.send(frame(i)).unwrap();
+        }
+        let b = Batcher::new(4, Duration::from_millis(1));
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        let batch2 = b.next_batch(&rx).unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn returns_none_when_closed() {
+        let (tx, rx) = sync_channel::<Frame>(4);
+        drop(tx);
+        let b = Batcher::default();
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn single_frame_under_light_load() {
+        let (tx, rx) = sync_channel(4);
+        tx.send(frame(0)).unwrap();
+        let b = Batcher::new(8, Duration::from_millis(1));
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        drop(tx);
+    }
+
+    #[test]
+    fn lingers_for_stragglers() {
+        let (tx, rx) = sync_channel(4);
+        tx.send(frame(0)).unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(3));
+            let _ = tx.send(frame(1));
+        });
+        let b = Batcher::new(4, Duration::from_millis(50));
+        let batch = b.next_batch(&rx).unwrap();
+        t.join().unwrap();
+        assert_eq!(batch.len(), 2, "straggler should make the batch");
+    }
+}

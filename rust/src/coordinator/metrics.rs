@@ -1,0 +1,122 @@
+//! Serving metrics: throughput, end-to-end latency, per-stage timing.
+
+use crate::util::stats::LatencyHistogram;
+use std::time::Duration;
+
+/// Accumulated timing for one pipeline stage.
+#[derive(Clone, Debug, Default)]
+pub struct StageMetrics {
+    pub name: String,
+    pub busy: Duration,
+    pub items: u64,
+}
+
+impl StageMetrics {
+    pub fn new(name: &str) -> StageMetrics {
+        StageMetrics {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record(&mut self, busy: Duration, items: u64) {
+        self.busy += busy;
+        self.items += items;
+    }
+
+    /// Mean busy time per item in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        if self.items == 0 {
+            0.0
+        } else {
+            self.busy.as_secs_f64() * 1e6 / self.items as f64
+        }
+    }
+}
+
+/// Final report of a serve run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub backend: String,
+    pub frames: u64,
+    pub wall_s: f64,
+    pub fps: f64,
+    pub latency: LatencyHistogram,
+    pub stages: Vec<StageMetrics>,
+    pub batches: u64,
+    pub mean_batch: f64,
+}
+
+impl ServeReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "backend={} frames={} wall={:.3}s fps={:.1}\n",
+            self.backend, self.frames, self.wall_s, self.fps
+        ));
+        out.push_str(&format!(
+            "latency: mean={:.1}us p50<={}us p95<={}us p99<={}us max={}us\n",
+            self.latency.mean_us(),
+            self.latency.percentile_us(50.0),
+            self.latency.percentile_us(95.0),
+            self.latency.percentile_us(99.0),
+            self.latency.max_us(),
+        ));
+        out.push_str(&format!(
+            "batching: {} batches, mean size {:.2}\n",
+            self.batches, self.mean_batch
+        ));
+        for s in &self.stages {
+            out.push_str(&format!(
+                "stage {:<12} {:>10.1} us/item over {} items\n",
+                s.name,
+                s.mean_us(),
+                s.items
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj()
+            .set("backend", self.backend.as_str())
+            .set("frames", self.frames as i64)
+            .set("wall_s", self.wall_s)
+            .set("fps", self.fps)
+            .set("latency_p50_us", self.latency.percentile_us(50.0) as i64)
+            .set("latency_p99_us", self.latency.percentile_us(99.0) as i64)
+            .set("mean_batch", self.mean_batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_mean() {
+        let mut s = StageMetrics::new("infer");
+        s.record(Duration::from_micros(100), 2);
+        s.record(Duration::from_micros(300), 2);
+        assert!((s.mean_us() - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn report_renders_and_jsons() {
+        let mut lat = LatencyHistogram::new();
+        lat.record_us(100);
+        let r = ServeReport {
+            backend: "test".into(),
+            frames: 10,
+            wall_s: 1.0,
+            fps: 10.0,
+            latency: lat,
+            stages: vec![StageMetrics::new("infer")],
+            batches: 5,
+            mean_batch: 2.0,
+        };
+        assert!(r.render().contains("fps=10.0"));
+        assert!(r.to_json().to_string().contains("\"fps\":10"));
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator: the streaming serving pipeline of the paper's FPGA
+//! deployment, rebuilt as a threaded Rust runtime.
+//!
+//! DAC-SDC setting: a feeder (the ARM core in the paper) produces frames;
+//! the accelerator (here: a CPU HiKonv engine or a PJRT-compiled artifact)
+//! runs quantized inference; a postprocess stage decodes detections.
+//! Stages are threads connected by bounded channels (backpressure), the
+//! feeder can be rate-capped to reproduce the paper's ARM bottleneck, and
+//! the batcher groups frames ahead of inference.
+//!
+//! tokio is unavailable offline; std threads + `mpsc::sync_channel` provide
+//! the same bounded-queue semantics for this pipeline depth.
+
+pub mod batcher;
+pub mod parallel;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+pub mod source;
+
+pub use batcher::Batcher;
+pub use parallel::ParallelCpuBackend;
+pub use metrics::{ServeReport, StageMetrics};
+pub use pipeline::{Frame, InferBackend};
+pub use server::{serve, ServeConfig};
+pub use source::FrameSource;

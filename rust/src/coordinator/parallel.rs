@@ -1,0 +1,185 @@
+//! Multi-worker CPU inference pool: shards batches across persistent
+//! worker threads, each owning its own engine instance, and reassembles
+//! results in order. (The PJRT backend stays single-threaded — its client
+//! is `Rc`-internal; CPU engines are plain data and parallelize freely.)
+
+use super::pipeline::{Detection, Frame, InferBackend};
+use crate::models::{CpuRunner, EngineKind, ModelWeights};
+use crate::models::layer::ModelSpec;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum Job {
+    Frame(usize, Frame),
+    Stop,
+}
+
+/// A pool of `workers` threads each running a [`CpuRunner`].
+pub struct ParallelCpuBackend {
+    label: String,
+    dims: (usize, usize, usize),
+    job_tx: Sender<Job>,
+    res_rx: Receiver<(usize, Detection)>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl ParallelCpuBackend {
+    /// Build the pool; every worker constructs its own runner from the
+    /// same model/weights (calibration is deterministic, so all workers
+    /// are bit-identical).
+    pub fn new(
+        model: ModelSpec,
+        weights: ModelWeights,
+        kind: EngineKind,
+        workers: usize,
+    ) -> Result<ParallelCpuBackend, String> {
+        assert!(workers >= 1);
+        let (job_tx, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = channel::<(usize, Detection)>();
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let runner = CpuRunner::new(model.clone(), weights.clone(), kind)?;
+            let rx = Arc::clone(&job_rx);
+            let tx = res_tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().expect("job queue poisoned");
+                    guard.recv()
+                };
+                match job {
+                    Ok(Job::Frame(idx, frame)) => {
+                        let head = runner.infer(&frame.levels);
+                        let det = Detection {
+                            frame_id: frame.id,
+                            cell: runner.decode(&head),
+                        };
+                        if tx.send((idx, det)).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(Job::Stop) | Err(_) => return,
+                }
+            }));
+        }
+        Ok(ParallelCpuBackend {
+            label: format!("cpu-parallel-{workers}x-{kind:?}").to_lowercase(),
+            dims: model.input,
+            job_tx,
+            res_rx,
+            handles,
+            workers,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl InferBackend for ParallelCpuBackend {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn input_dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        for (idx, frame) in frames.iter().enumerate() {
+            self.job_tx
+                .send(Job::Frame(idx, frame.clone()))
+                .expect("worker pool gone");
+        }
+        let mut slots: Vec<Option<Detection>> = vec![None; frames.len()];
+        for _ in 0..frames.len() {
+            let (idx, det) = self.res_rx.recv().expect("worker died mid-batch");
+            slots[idx] = Some(det);
+        }
+        slots.into_iter().map(|d| d.expect("missing result")).collect()
+    }
+}
+
+impl Drop for ParallelCpuBackend {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.job_tx.send(Job::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::CpuBackend;
+    use crate::models::ultranet::ultranet_tiny;
+    use crate::models::random_weights;
+    use crate::theory::Multiplier;
+    use std::time::Instant;
+
+    fn frames(n: usize, dims: (usize, usize, usize)) -> Vec<Frame> {
+        let (c, h, w) = dims;
+        let mut rng = crate::util::rng::Rng::new(71);
+        (0..n)
+            .map(|id| Frame {
+                id: id as u64,
+                levels: rng.quant_unsigned_vec(4, c * h * w),
+                created: Instant::now(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_in_order() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 21);
+        let kind = EngineKind::HiKonv(Multiplier::CPU32);
+        let mut serial = CpuBackend::new(
+            CpuRunner::new(model.clone(), weights.clone(), kind).unwrap(),
+        );
+        let mut pool = ParallelCpuBackend::new(model.clone(), weights, kind, 3).unwrap();
+        let fs = frames(7, model.input);
+        let a = serial.infer_batch(&fs);
+        let b = pool.infer_batch(&fs);
+        assert_eq!(a, b);
+        // Order is by input position even though workers race.
+        for (i, det) in b.iter().enumerate() {
+            assert_eq!(det.frame_id, i as u64);
+        }
+    }
+
+    #[test]
+    fn pool_survives_multiple_batches_and_drops_cleanly() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 22);
+        let mut pool =
+            ParallelCpuBackend::new(model.clone(), weights, EngineKind::Baseline, 2).unwrap();
+        for _ in 0..3 {
+            let fs = frames(4, model.input);
+            assert_eq!(pool.infer_batch(&fs).len(), 4);
+        }
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 23);
+        let mut pool = ParallelCpuBackend::new(
+            model.clone(),
+            weights,
+            EngineKind::HiKonv(Multiplier::CPU32),
+            1,
+        )
+        .unwrap();
+        assert_eq!(pool.workers(), 1);
+        let fs = frames(2, model.input);
+        assert_eq!(pool.infer_batch(&fs).len(), 2);
+    }
+}

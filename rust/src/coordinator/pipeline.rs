@@ -1,0 +1,165 @@
+//! Pipeline data types and the inference-backend abstraction.
+
+use std::time::Instant;
+
+/// A quantized frame flowing through the pipeline.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub id: u64,
+    /// Quantized activation levels, `[c][h][w]` row-major.
+    pub levels: Vec<i64>,
+    /// Enqueue timestamp (latency measurement origin).
+    pub created: Instant,
+}
+
+/// A decoded detection result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Detection {
+    pub frame_id: u64,
+    /// Peak-response grid cell (y, x).
+    pub cell: (usize, usize),
+}
+
+/// An inference backend consuming batches of frames.
+///
+/// Not `Send`: the PJRT client is single-threaded (`Rc` internally); the
+/// serve loop therefore runs inference on the calling thread and only the
+/// frame source runs on its own thread.
+pub trait InferBackend {
+    fn name(&self) -> &str;
+    /// Input dims the backend expects (`c`, `h`, `w`).
+    fn input_dims(&self) -> (usize, usize, usize);
+    /// Run a batch, returning one detection per frame (in order).
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection>;
+}
+
+/// CPU backend over the model runner (baseline or HiKonv engines).
+pub struct CpuBackend {
+    runner: crate::models::CpuRunner,
+    label: String,
+}
+
+impl CpuBackend {
+    pub fn new(runner: crate::models::CpuRunner) -> CpuBackend {
+        let label = format!("cpu-{:?}", runner.kind()).to_lowercase();
+        CpuBackend { runner, label }
+    }
+}
+
+impl InferBackend for CpuBackend {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn input_dims(&self) -> (usize, usize, usize) {
+        self.runner.model().input
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        frames
+            .iter()
+            .map(|f| {
+                let head = self.runner.infer(&f.levels);
+                Detection {
+                    frame_id: f.id,
+                    cell: self.runner.decode(&head),
+                }
+            })
+            .collect()
+    }
+}
+
+/// PJRT backend: runs the AOT-compiled UltraNet artifact (L2 graph with the
+/// L1 Pallas kernels lowered in). Python is *not* involved here.
+pub struct PjrtBackend {
+    model: crate::runtime::LoadedModel,
+    dims: (usize, usize, usize),
+    out_dims: (usize, usize, usize),
+}
+
+impl PjrtBackend {
+    pub fn new(
+        model: crate::runtime::LoadedModel,
+        dims: (usize, usize, usize),
+        out_dims: (usize, usize, usize),
+    ) -> PjrtBackend {
+        PjrtBackend {
+            model,
+            dims,
+            out_dims,
+        }
+    }
+
+    fn decode(&self, head: &[i32]) -> (usize, usize) {
+        let (co, h, w) = self.out_dims;
+        let mut best = (0usize, 0usize);
+        let mut best_v = i64::MIN;
+        for y in 0..h {
+            for x in 0..w {
+                let mut v = 0i64;
+                for c in 0..co {
+                    v += (head[(c * h + y) * w + x] as i64).abs();
+                }
+                if v > best_v {
+                    best_v = v;
+                    best = (y, x);
+                }
+            }
+        }
+        best
+    }
+}
+
+impl InferBackend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt-ultranet"
+    }
+
+    fn input_dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        let (c, h, w) = self.dims;
+        frames
+            .iter()
+            .map(|f| {
+                let input: Vec<i32> = f.levels.iter().map(|&v| v as i32).collect();
+                let outs = self
+                    .model
+                    .run_i32(&[(input, vec![c as i64, h as i64, w as i64])])
+                    .expect("pjrt execution");
+                Detection {
+                    frame_id: f.id,
+                    cell: self.decode(&outs[0]),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{random_weights, CpuRunner, EngineKind};
+
+    #[test]
+    fn cpu_backend_runs_batches() {
+        let model = crate::models::ultranet::ultranet_tiny();
+        let weights = random_weights(&model, 3);
+        let runner = CpuRunner::new(model.clone(), weights, EngineKind::Baseline).unwrap();
+        let mut backend = CpuBackend::new(runner);
+        let (c, h, w) = backend.input_dims();
+        let frames: Vec<Frame> = (0..3)
+            .map(|id| Frame {
+                id,
+                levels: vec![(id as i64) % 16; c * h * w],
+                created: Instant::now(),
+            })
+            .collect();
+        let dets = backend.infer_batch(&frames);
+        assert_eq!(dets.len(), 3);
+        assert_eq!(dets[0].frame_id, 0);
+        assert_eq!(dets[2].frame_id, 2);
+    }
+}

@@ -1,0 +1,182 @@
+//! The serve loop: source thread → bounded queue → batcher + inference →
+//! postprocess/metrics.
+
+use super::batcher::Batcher;
+use super::metrics::{ServeReport, StageMetrics};
+use super::pipeline::{Frame, InferBackend};
+use super::source::FrameSource;
+use crate::util::stats::LatencyHistogram;
+use std::sync::mpsc::sync_channel;
+use std::time::{Duration, Instant};
+
+/// Serve-run configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Total frames to stream.
+    pub frames: u64,
+    /// Feeder rate cap in fps (None = as fast as possible) — the paper's
+    /// ARM bottleneck.
+    pub source_fps_cap: Option<f64>,
+    /// Bounded queue depth between source and inference (backpressure).
+    pub queue_depth: usize,
+    /// Dynamic batching limit.
+    pub max_batch: usize,
+    /// Batch linger.
+    pub linger: Duration,
+    /// RNG seed for the synthetic source.
+    pub seed: u64,
+    /// Activation bits for quantization.
+    pub bits: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            frames: 64,
+            source_fps_cap: None,
+            queue_depth: 8,
+            max_batch: 4,
+            linger: Duration::from_millis(2),
+            seed: 7,
+            bits: 4,
+        }
+    }
+}
+
+/// Run the pipeline to completion and report metrics.
+pub fn serve(mut backend: Box<dyn InferBackend>, config: &ServeConfig) -> ServeReport {
+    let dims = backend.input_dims();
+    let (tx, rx) = sync_channel::<Frame>(config.queue_depth);
+    let cfg = config.clone();
+
+    let producer = std::thread::spawn(move || {
+        let mut src = FrameSource::new(cfg.seed, dims, cfg.bits, cfg.source_fps_cap);
+        let mut busy = Duration::ZERO;
+        for _ in 0..cfg.frames {
+            let t = Instant::now();
+            let frame = src.next_frame();
+            busy += t.elapsed();
+            if tx.send(frame).is_err() {
+                break; // consumer gone
+            }
+        }
+        busy
+    });
+
+    let batcher = Batcher::new(config.max_batch, config.linger);
+    let mut latency = LatencyHistogram::new();
+    let mut infer_stage = StageMetrics::new("infer");
+    let mut post_stage = StageMetrics::new("postprocess");
+    let mut batches = 0u64;
+    let mut frames_done = 0u64;
+    let t0 = Instant::now();
+    while let Some(batch) = batcher.next_batch(&rx) {
+        let t = Instant::now();
+        let detections = backend.infer_batch(&batch);
+        infer_stage.record(t.elapsed(), batch.len() as u64);
+
+        let t = Instant::now();
+        assert_eq!(detections.len(), batch.len(), "backend dropped frames");
+        for (frame, det) in batch.iter().zip(&detections) {
+            assert_eq!(frame.id, det.frame_id, "frame/detection misordered");
+            latency.record_us(frame.created.elapsed().as_micros() as u64);
+        }
+        post_stage.record(t.elapsed(), batch.len() as u64);
+        batches += 1;
+        frames_done += batch.len() as u64;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let source_busy = producer.join().expect("source thread");
+    let mut source_stage = StageMetrics::new("source");
+    source_stage.record(source_busy, frames_done);
+
+    ServeReport {
+        backend: backend.name().to_string(),
+        frames: frames_done,
+        wall_s,
+        fps: frames_done as f64 / wall_s.max(1e-9),
+        latency,
+        stages: vec![source_stage, infer_stage, post_stage],
+        batches,
+        mean_batch: frames_done as f64 / batches.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{CpuBackend, Detection};
+    use crate::models::{random_weights, ultranet::ultranet_tiny, CpuRunner, EngineKind};
+    use crate::theory::Multiplier;
+
+    /// A trivially fast backend for pipeline-mechanics tests.
+    struct EchoBackend;
+    impl InferBackend for EchoBackend {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn input_dims(&self) -> (usize, usize, usize) {
+            (1, 2, 2)
+        }
+        fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+            frames
+                .iter()
+                .map(|f| Detection {
+                    frame_id: f.id,
+                    cell: (0, 0),
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn serves_all_frames_exactly_once() {
+        let report = serve(
+            Box::new(EchoBackend),
+            &ServeConfig {
+                frames: 100,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.frames, 100);
+        assert_eq!(report.latency.count(), 100);
+        assert!(report.fps > 0.0);
+    }
+
+    #[test]
+    fn feeder_cap_bounds_fps() {
+        let report = serve(
+            Box::new(EchoBackend),
+            &ServeConfig {
+                frames: 50,
+                source_fps_cap: Some(500.0),
+                ..Default::default()
+            },
+        );
+        // Even an instant backend cannot exceed the feeder rate by much.
+        assert!(
+            report.fps < 650.0,
+            "fps {} should be feeder-bound near 500",
+            report.fps
+        );
+    }
+
+    #[test]
+    fn hikonv_backend_end_to_end() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 5);
+        let runner =
+            CpuRunner::new(model, weights, EngineKind::HiKonv(Multiplier::CPU32)).unwrap();
+        let report = serve(
+            Box::new(CpuBackend::new(runner)),
+            &ServeConfig {
+                frames: 4,
+                max_batch: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.frames, 4);
+        assert!(report.stages.iter().any(|s| s.name == "infer" && s.items == 4));
+    }
+}

@@ -1,0 +1,94 @@
+//! Synthetic frame source with optional rate cap (the ARM-feeder model).
+//!
+//! The DAC-SDC dataset is not redistributable; throughput and latency
+//! depend only on frame dims and arrival rate, so a seeded synthetic
+//! source preserves the experiment (DESIGN.md §2).
+
+use super::pipeline::Frame;
+use crate::quant::tensor::quantize_u8_image;
+use crate::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// Produces quantized frames, optionally capped at `fps_cap` frames/s.
+pub struct FrameSource {
+    rng: Rng,
+    dims: (usize, usize, usize),
+    bits: u32,
+    fps_cap: Option<f64>,
+    next_id: u64,
+    t0: Instant,
+}
+
+impl FrameSource {
+    pub fn new(seed: u64, dims: (usize, usize, usize), bits: u32, fps_cap: Option<f64>) -> Self {
+        FrameSource {
+            rng: Rng::new(seed),
+            dims,
+            bits,
+            fps_cap,
+            next_id: 0,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Produce the next frame, sleeping to honour the rate cap.
+    pub fn next_frame(&mut self) -> Frame {
+        if let Some(cap) = self.fps_cap {
+            // Pace frames on the global schedule id/cap (not inter-frame
+            // sleeps) so jitter doesn't accumulate.
+            let due = self.t0 + Duration::from_secs_f64(self.next_id as f64 / cap);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let (c, h, w) = self.dims;
+        let pixels = self.rng.bytes(c * h * w);
+        let levels = quantize_u8_image(&pixels, self.bits);
+        let frame = Frame {
+            id: self.next_id,
+            levels,
+            created: Instant::now(),
+        };
+        self.next_id += 1;
+        frame
+    }
+
+    pub fn produced(&self) -> u64 {
+        self.next_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_have_right_shape_and_range() {
+        let mut s = FrameSource::new(1, (3, 4, 8), 4, None);
+        let f = s.next_frame();
+        assert_eq!(f.levels.len(), 3 * 4 * 8);
+        assert!(f.levels.iter().all(|&v| (0..16).contains(&v)));
+        assert_eq!(f.id, 0);
+        assert_eq!(s.next_frame().id, 1);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = FrameSource::new(9, (1, 4, 4), 4, None);
+        let mut b = FrameSource::new(9, (1, 4, 4), 4, None);
+        assert_eq!(a.next_frame().levels, b.next_frame().levels);
+    }
+
+    #[test]
+    fn rate_cap_paces_production() {
+        let mut s = FrameSource::new(2, (1, 2, 2), 4, Some(200.0));
+        let t0 = Instant::now();
+        for _ in 0..20 {
+            s.next_frame();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        // 20 frames at 200 fps should take >= ~95 ms.
+        assert!(dt >= 0.08, "paced too fast: {dt}s");
+    }
+}

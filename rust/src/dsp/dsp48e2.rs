@@ -1,0 +1,351 @@
+//! Bit-accurate functional model of the Xilinx DSP48E2 slice.
+//!
+//! Models the datapath HiKonv uses: a signed 27×18 multiplier feeding a
+//! 48-bit ALU that can add the C port or the cascaded `PCIN` of a
+//! neighbouring slice, with a registered 48-bit accumulator `P`.
+//! Port widths are enforced by wrapping to the declared bit counts, exactly
+//! as the silicon truncates.
+//!
+//! The model exists so that every analytic claim in [`super::bnn`] and
+//! [`super::perf_model`] is backed by an *executable* check: the HiKonv
+//! packings counted there are run through this model and compared against
+//! the reference convolution (see tests and `rust/tests/properties.rs`).
+
+/// Operation selected for the ALU stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AluOp {
+    /// `P = A*B + C`
+    MultAddC,
+    /// `P = P + A*B` (accumulate)
+    MultAccum,
+    /// `P = A*B + PCIN` (cascade from the previous slice)
+    MultAddCascade,
+}
+
+/// Functional DSP48E2 slice.
+#[derive(Clone, Debug, Default)]
+pub struct Dsp48e2 {
+    /// 48-bit accumulator register (sign-extended into i64).
+    p: i64,
+    /// Cycle counter (each `step` = one clock at full pipelining).
+    cycles: u64,
+    /// Sticky flag: set if any port input exceeded its declared width.
+    saturated_input: bool,
+}
+
+impl Dsp48e2 {
+    pub const A_BITS: u32 = 27;
+    pub const B_BITS: u32 = 18;
+    pub const C_BITS: u32 = 48;
+    pub const P_BITS: u32 = 48;
+
+    pub fn new() -> Dsp48e2 {
+        Dsp48e2::default()
+    }
+
+    /// Wrap `v` to a signed `bits`-bit value (hardware port truncation).
+    #[inline]
+    fn wrap(v: i64, bits: u32) -> i64 {
+        let sh = 64 - bits;
+        (v << sh) >> sh
+    }
+
+    /// True if `v` fits the signed `bits`-bit port without truncation.
+    #[inline]
+    pub fn fits(v: i64, bits: u32) -> bool {
+        Self::wrap(v, bits) == v
+    }
+
+    /// One clock: multiply the wrapped ports and run the ALU stage.
+    /// Returns the new `P` value.
+    pub fn step(&mut self, a: i64, b: i64, c: i64, op: AluOp) -> i64 {
+        if !Self::fits(a, Self::A_BITS) || !Self::fits(b, Self::B_BITS) {
+            self.saturated_input = true;
+        }
+        let aw = Self::wrap(a, Self::A_BITS);
+        let bw = Self::wrap(b, Self::B_BITS);
+        let prod = aw.wrapping_mul(bw); // 45-bit product fits i64 exactly
+        let sum = match op {
+            AluOp::MultAddC => prod.wrapping_add(Self::wrap(c, Self::C_BITS)),
+            AluOp::MultAccum => prod.wrapping_add(self.p),
+            AluOp::MultAddCascade => prod.wrapping_add(Self::wrap(c, Self::P_BITS)),
+        };
+        self.p = Self::wrap(sum, Self::P_BITS);
+        self.cycles += 1;
+        self.p
+    }
+
+    pub fn p(&self) -> i64 {
+        self.p
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Whether any input ever exceeded its port width (a design bug).
+    pub fn input_overflowed(&self) -> bool {
+        self.saturated_input
+    }
+
+    pub fn reset(&mut self) {
+        self.p = 0;
+    }
+}
+
+/// Execute a HiKonv `F_{N,K}` block on one DSP48E2: pack `f` (≤N values)
+/// into the 27-bit A port and `g` (≤K values) into the 18-bit B port,
+/// multiply once, segment the 45-bit product from `P`.
+///
+/// Returns the `f.len()+g.len()-1` convolution outputs, or an error if the
+/// packing does not fit the ports (design-point mismatch).
+pub fn hikonv_fnk_on_dsp(
+    dsp: &mut Dsp48e2,
+    f: &[i64],
+    g: &[i64],
+    s: u32,
+    signed: bool,
+) -> Result<Vec<i64>, String> {
+    let a = pack_port(f, s);
+    let b = pack_port(g, s);
+    if !Dsp48e2::fits(a, Dsp48e2::A_BITS) {
+        return Err(format!("packed A = {a} exceeds 27 bits"));
+    }
+    if !Dsp48e2::fits(b, Dsp48e2::B_BITS) {
+        return Err(format!("packed B = {b} exceeds 18 bits"));
+    }
+    dsp.reset();
+    let p = dsp.step(a, b, 0, AluOp::MultAddC);
+    let count = f.len() + g.len() - 1;
+    let out = if signed {
+        crate::packing::segment_signed(p as i128 as u128, s, count)
+    } else {
+        crate::packing::segment_unsigned(p as i128 as u128, s, count)
+    };
+    Ok(out)
+}
+
+/// Execute an `M`-deep channel accumulation through the DSP cascade: each
+/// `(f_i, g_i)` pair runs on a cascaded slice, products summed via `PCIN`
+/// (§III-B channel-wise accumulation). Returns the segmented totals.
+pub fn hikonv_cascade_on_dsp(
+    pairs: &[(Vec<i64>, Vec<i64>)],
+    s: u32,
+    signed: bool,
+) -> Result<Vec<i64>, String> {
+    assert!(!pairs.is_empty());
+    let count = pairs
+        .iter()
+        .map(|(f, g)| f.len() + g.len() - 1)
+        .max()
+        .unwrap();
+    let mut cascade: i64 = 0;
+    for (f, g) in pairs {
+        let a = pack_port(f, s);
+        let b = pack_port(g, s);
+        if !Dsp48e2::fits(a, Dsp48e2::A_BITS) || !Dsp48e2::fits(b, Dsp48e2::B_BITS) {
+            return Err("cascade packing exceeds port width".into());
+        }
+        let mut dsp = Dsp48e2::new();
+        cascade = dsp.step(a, b, cascade, AluOp::MultAddCascade);
+    }
+    let out = if signed {
+        crate::packing::segment_signed(cascade as i128 as u128, s, count)
+    } else {
+        crate::packing::segment_unsigned(cascade as i128 as u128, s, count)
+    };
+    Ok(out)
+}
+
+fn pack_port(vals: &[i64], s: u32) -> i64 {
+    let mut w: i64 = 0;
+    for &v in vals.iter().rev() {
+        w = (w << s).wrapping_add(v);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv1d_ref;
+    use crate::testing::{assert_seq_eq, check, default_cases};
+    use crate::theory::{solve, AccumMode, Multiplier, Signedness};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn multiplier_is_signed_and_wraps() {
+        let mut d = Dsp48e2::new();
+        assert_eq!(d.step(-3, 5, 0, AluOp::MultAddC), -15);
+        // A port wraps at 27 bits: +2^26 exceeds the signed range and
+        // wraps to -2^26 (and the overflow flag records the misuse).
+        d.reset();
+        let p = d.step(1 << 26, 1, 0, AluOp::MultAddC);
+        assert_eq!(p, -(1 << 26));
+        assert!(d.input_overflowed());
+    }
+
+    #[test]
+    fn overflow_flag_set_on_wide_input() {
+        let mut d = Dsp48e2::new();
+        d.step(1 << 27, 1, 0, AluOp::MultAddC);
+        assert!(d.input_overflowed());
+    }
+
+    #[test]
+    fn accumulate_mode() {
+        let mut d = Dsp48e2::new();
+        d.step(3, 4, 0, AluOp::MultAddC);
+        d.step(5, 6, 0, AluOp::MultAccum);
+        assert_eq!(d.p(), 42);
+        assert_eq!(d.cycles(), 2);
+    }
+
+    #[test]
+    fn p_register_wraps_at_48_bits() {
+        let mut d = Dsp48e2::new();
+        // (2^26-1) * (2^17-1) repeatedly accumulates past 2^47.
+        for _ in 0..40 {
+            d.step((1 << 26) - 1, (1 << 17) - 1, 0, AluOp::MultAccum);
+        }
+        assert!(Dsp48e2::fits(d.p(), 48));
+    }
+
+    #[test]
+    fn paper_4bit_point_runs_exactly_on_dsp() {
+        // S=9, N=3, K=2 (the "eight ops in one cycle" claim, §III-C).
+        let dp = solve(
+            Multiplier::DSP48E2_UNSIGNED,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        let mut rng = Rng::new(21);
+        let mut dsp = Dsp48e2::new();
+        for _ in 0..200 {
+            let f = rng.quant_unsigned_vec(4, dp.n);
+            let g = rng.quant_unsigned_vec(4, dp.k);
+            let y = hikonv_fnk_on_dsp(&mut dsp, &f, &g, dp.s, false).unwrap();
+            assert_seq_eq(&y, &conv1d_ref(&f, &g)).unwrap();
+        }
+        assert!(!dsp.input_overflowed());
+        assert_eq!(dsp.cycles(), 200); // one cycle per F_{3,2} = 8 ops/cycle
+    }
+
+    #[test]
+    fn binary_point_runs_exactly_on_dsp() {
+        let dp = solve(
+            Multiplier::DSP48E2_UNSIGNED,
+            1,
+            1,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        assert_eq!((dp.n, dp.k), (9, 6));
+        let mut rng = Rng::new(22);
+        let mut dsp = Dsp48e2::new();
+        for _ in 0..200 {
+            let f = rng.quant_unsigned_vec(1, dp.n);
+            let g = rng.quant_unsigned_vec(1, dp.k);
+            let y = hikonv_fnk_on_dsp(&mut dsp, &f, &g, dp.s, false).unwrap();
+            assert_seq_eq(&y, &conv1d_ref(&f, &g)).unwrap();
+        }
+    }
+
+    #[test]
+    fn signed_point_runs_exactly_on_dsp() {
+        let dp = solve(
+            Multiplier::DSP48E2,
+            4,
+            4,
+            Signedness::Signed,
+            AccumMode::Single,
+        )
+        .unwrap();
+        let mut rng = Rng::new(23);
+        let mut dsp = Dsp48e2::new();
+        for _ in 0..200 {
+            let f = rng.quant_signed_vec(4, dp.n);
+            let g = rng.quant_signed_vec(4, dp.k);
+            let y = hikonv_fnk_on_dsp(&mut dsp, &f, &g, dp.s, true).unwrap();
+            assert_seq_eq(&y, &conv1d_ref(&f, &g)).unwrap();
+        }
+    }
+
+    #[test]
+    fn cascade_channel_accumulation_matches_reference() {
+        // M=4 channel accumulation of F_{N,K} blocks through PCIN.
+        let m = 4u64;
+        let dp = solve(
+            Multiplier::DSP48E2_UNSIGNED,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Extended { m },
+        )
+        .unwrap();
+        let mut rng = Rng::new(24);
+        for _ in 0..50 {
+            let pairs: Vec<(Vec<i64>, Vec<i64>)> = (0..m)
+                .map(|_| {
+                    (
+                        rng.quant_unsigned_vec(4, dp.n),
+                        rng.quant_unsigned_vec(4, dp.k),
+                    )
+                })
+                .collect();
+            let got = hikonv_cascade_on_dsp(&pairs, dp.s, false).unwrap();
+            let mut want = vec![0i64; dp.n + dp.k - 1];
+            for (f, g) in &pairs {
+                for (i, v) in conv1d_ref(f, g).iter().enumerate() {
+                    want[i] += v;
+                }
+            }
+            assert_seq_eq(&got, &want).unwrap();
+        }
+    }
+
+    #[test]
+    fn property_all_dsp_design_points_are_exact() {
+        check(
+            "every feasible 27x18 design point computes exact F_{N,K} on the DSP model",
+            0x77,
+            default_cases() / 2,
+            |rng: &mut Rng, _| {
+                let p = 1 + rng.below(8) as u32;
+                let q = 1 + rng.below(8) as u32;
+                let signed = rng.below(2) == 1 && p > 1 && q > 1;
+                (p, q, signed, rng.next_u64())
+            },
+            |&(p, q, signed, seed)| {
+                let sgn = if signed {
+                    Signedness::Signed
+                } else {
+                    Signedness::Unsigned
+                };
+                let mult = if signed {
+                    Multiplier::DSP48E2
+                } else {
+                    Multiplier::DSP48E2_UNSIGNED
+                };
+                let dp = solve(mult, p, q, sgn, AccumMode::Single)
+                    .map_err(|e| e.to_string())?;
+                let mut rng = Rng::new(seed);
+                let (f, g) = if signed {
+                    (rng.quant_signed_vec(p, dp.n), rng.quant_signed_vec(q, dp.k))
+                } else {
+                    (
+                        rng.quant_unsigned_vec(p, dp.n),
+                        rng.quant_unsigned_vec(q, dp.k),
+                    )
+                };
+                let mut dsp = Dsp48e2::new();
+                let y = hikonv_fnk_on_dsp(&mut dsp, &f, &g, dp.s, signed)?;
+                assert_seq_eq(&y, &conv1d_ref(&f, &g))
+            },
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! FPGA substrate: the pieces the paper's hardware evaluation (§IV-B) runs
+//! on, rebuilt in software.
+//!
+//! * [`dsp48e2`] — bit-accurate functional model of the Xilinx DSP48E2
+//!   slice (27×18 signed multiplier, 48-bit ALU/accumulator, cascade input).
+//!   HiKonv packings are *executed* on this model and checked against the
+//!   reference convolution, so every resource/throughput number the analytic
+//!   models report corresponds to a computation proven exact.
+//! * [`resource`] — first-principles LUT cost models (XNOR/popcount binary
+//!   MACs, S-bit correction adders, shift/segment networks) calibrated to
+//!   Table I's synthesis results.
+//! * [`bnn`] — the Table-I experiment: BNN-LUT vs BNN-HiKonv design points
+//!   across concurrency.
+//! * [`perf_model`] — the Table-II experiment: UltraNet on a 360-DSP
+//!   Ultra96, baseline (1 DSP = 2 packed MACs) vs HiKonv, with the ARM
+//!   feeder bottleneck.
+
+pub mod bnn;
+pub mod dsp48e2;
+pub mod perf_model;
+pub mod resource;
+
+pub use bnn::{bnn_hikonv_design, bnn_lut_design, table1_rows, BnnDesign, Table1Row};
+pub use dsp48e2::Dsp48e2;
+pub use perf_model::{ultranet_perf, PerfModelInput, PerfReport};

@@ -1,0 +1,301 @@
+//! Table-II experiment: UltraNet on the Ultra96 (360 DSP48E2), baseline
+//! vs HiKonv.
+//!
+//! The model is a layer-pipelined dataflow accelerator (the UltraNet
+//! design): every conv layer gets a DSP allocation proportional to its
+//! work, and the frame rate is set by the slowest stage. The baseline
+//! packs 2 INT4 MACs per DSP per cycle (the synthesis-native INT4 trick);
+//! HiKonv packs an `F_{N,K}` block per DSP per cycle (N=3, K=2 at 4-bit),
+//! kernel rows of 3 taps split into ceil(3/2)=2 chunks.
+//!
+//! Calibration: a single system-efficiency factor `eta` (memory stalls,
+//! boundary effects, pipeline fill) is fitted once so the *baseline*
+//! reproduces the paper's measured 248 fps, then held fixed for HiKonv —
+//! so the HiKonv/baseline ratio is a model *output*, not an input.
+//! The ARM feeder cap reproduces the paper's measured-vs-potential split
+//! (401 fps measured, 588 fps with the feeder bottleneck removed).
+
+use crate::models::layer::ModelSpec;
+use crate::theory::{solve, AccumMode, Multiplier, Signedness};
+use crate::util::div_ceil;
+
+/// Inputs of the FPGA performance model.
+#[derive(Clone, Debug)]
+pub struct PerfModelInput {
+    pub model: ModelSpec,
+    /// DSP budget on the device (Ultra96: 360).
+    pub dsp_budget: usize,
+    /// Accelerator clock (UltraNet runs at ~220 MHz).
+    pub freq_mhz: f64,
+    /// Frames/s the ARM core can feed (None = unconstrained).
+    pub arm_feed_fps_cap: Option<f64>,
+    /// MACs per DSP per cycle for the baseline (native INT4 packing: 2).
+    pub baseline_macs_per_dsp: f64,
+    /// System efficiency factor (see module docs). `calibrate_eta` fits it.
+    pub eta: f64,
+}
+
+impl PerfModelInput {
+    /// The paper's Ultra96 setting with `eta` fitted to the baseline's
+    /// measured 248 fps.
+    pub fn ultra96(model: ModelSpec) -> PerfModelInput {
+        let mut input = PerfModelInput {
+            model,
+            dsp_budget: 360,
+            freq_mhz: 220.0,
+            arm_feed_fps_cap: Some(ARM_FEED_FPS),
+            baseline_macs_per_dsp: 2.0,
+            eta: 1.0,
+        };
+        input.eta = calibrate_eta(&input, PAPER_BASELINE_FPS);
+        input
+    }
+}
+
+/// Paper constants used for calibration targets.
+pub const PAPER_BASELINE_FPS: f64 = 248.0;
+/// ARM feeder ceiling fitted to the paper's measured 401 fps.
+pub const ARM_FEED_FPS: f64 = 401.0;
+
+/// One accelerator variant's predicted performance.
+#[derive(Clone, Copy, Debug)]
+pub struct VariantPerf {
+    pub dsps_used: usize,
+    /// Compute-bound frame rate (feeder unconstrained).
+    pub fps_uncapped: f64,
+    /// Deliverable frame rate after the ARM feeder cap.
+    pub fps: f64,
+    /// Giga-ops/s per DSP at the *uncapped* rate (DSP efficiency as the
+    /// paper reports it for the bottleneck-free case).
+    pub gops_per_dsp_uncapped: f64,
+    /// Gops/DSP at the delivered rate.
+    pub gops_per_dsp: f64,
+    /// Approximate LUT overhead of the conv engines.
+    pub luts: u64,
+}
+
+/// The Table-II report.
+#[derive(Clone, Copy, Debug)]
+pub struct PerfReport {
+    pub baseline: VariantPerf,
+    pub hikonv: VariantPerf,
+}
+
+impl PerfReport {
+    pub fn throughput_ratio_uncapped(&self) -> f64 {
+        self.hikonv.fps_uncapped / self.baseline.fps
+    }
+    pub fn throughput_ratio(&self) -> f64 {
+        self.hikonv.fps / self.baseline.fps
+    }
+    pub fn dsp_eff_ratio_uncapped(&self) -> f64 {
+        self.hikonv.gops_per_dsp_uncapped / self.baseline.gops_per_dsp
+    }
+}
+
+/// Wide multiplications per frame for a HiKonv mapping of the model: each
+/// kernel row of `k` taps splits into `ceil(k/K)` packed chunks and each
+/// output row of `wo` pixels into `ceil(wi/N)` feature chunks.
+fn hikonv_muls_per_layer(model: &ModelSpec, n: usize, kk: usize) -> Vec<u64> {
+    model
+        .layers
+        .iter()
+        .map(|l| {
+            let sh = l.padded_shape();
+            let chunks_w = div_ceil(sh.wi, n) as u64;
+            let chunks_k = div_ceil(l.k, kk) as u64;
+            (l.co * sh.ho() * l.ci * l.k) as u64 * chunks_w * chunks_k
+        })
+        .collect()
+}
+
+/// Baseline "muls" per layer: MACs / macs_per_dsp.
+fn baseline_muls_per_layer(model: &ModelSpec, macs_per_dsp: f64) -> Vec<u64> {
+    model
+        .layers
+        .iter()
+        .map(|l| (l.macs() as f64 / macs_per_dsp).ceil() as u64)
+        .collect()
+}
+
+/// Allocate an integer DSP count per layer (≥1) proportional to work and
+/// return (used, bottleneck cycles-per-frame).
+fn allocate(muls: &[u64], budget: usize) -> (usize, f64) {
+    let total: u64 = muls.iter().sum();
+    let mut alloc: Vec<usize> = muls
+        .iter()
+        .map(|&m| (((m as f64 / total as f64) * budget as f64).floor() as usize).max(1))
+        .collect();
+    // Greedy: spend leftover budget on the current bottleneck stage.
+    let used: usize = alloc.iter().sum();
+    let mut left = budget.saturating_sub(used);
+    while left > 0 {
+        let (worst, _) = alloc
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (i, muls[i] as f64 / d as f64))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        alloc[worst] += 1;
+        left -= 1;
+    }
+    // Trim allocations that no longer help (stage already faster than the
+    // bottleneck with one fewer DSP) — models the paper's 327-of-360 usage.
+    let bottleneck = |alloc: &[usize]| {
+        alloc
+            .iter()
+            .zip(muls)
+            .map(|(&d, &m)| m as f64 / d as f64)
+            .fold(0.0f64, f64::max)
+    };
+    let mut changed = true;
+    while changed {
+        changed = false;
+        let current = bottleneck(&alloc);
+        for i in 0..alloc.len() {
+            while alloc[i] > 1 && muls[i] as f64 / (alloc[i] - 1) as f64 <= current {
+                alloc[i] -= 1;
+                changed = true;
+            }
+        }
+    }
+    (alloc.iter().sum(), bottleneck(&alloc))
+}
+
+/// Fit `eta` so the baseline model reproduces `target_fps`.
+pub fn calibrate_eta(input: &PerfModelInput, target_fps: f64) -> f64 {
+    let muls = baseline_muls_per_layer(&input.model, input.baseline_macs_per_dsp);
+    let (_, cycles) = allocate(&muls, input.dsp_budget);
+    let fps_ideal = input.freq_mhz * 1e6 / cycles;
+    (target_fps / fps_ideal).min(1.0)
+}
+
+/// Run the Table-II model.
+pub fn ultranet_perf(input: &PerfModelInput) -> PerfReport {
+    let total_ops = input.model.total_ops() as f64;
+
+    // Baseline variant.
+    let base_muls = baseline_muls_per_layer(&input.model, input.baseline_macs_per_dsp);
+    let (base_dsps, base_cycles) = allocate(&base_muls, input.dsp_budget);
+    let base_fps_raw = input.eta * input.freq_mhz * 1e6 / base_cycles;
+    let base_fps = input
+        .arm_feed_fps_cap
+        .map(|c| base_fps_raw.min(c))
+        .unwrap_or(base_fps_raw);
+    let baseline = VariantPerf {
+        dsps_used: base_dsps,
+        fps_uncapped: base_fps_raw,
+        fps: base_fps,
+        gops_per_dsp_uncapped: total_ops * base_fps_raw / base_dsps as f64 / 1e9,
+        gops_per_dsp: total_ops * base_fps / base_dsps as f64 / 1e9,
+        luts: 4_300, // paper-reported conv-engine LUTs for the original design
+    };
+
+    // HiKonv variant: the 4-bit DSP design point (S=9, N=3, K=2).
+    let dp = solve(
+        Multiplier::DSP48E2_UNSIGNED,
+        4,
+        4,
+        Signedness::UnsignedBySigned,
+        AccumMode::Single,
+    )
+    .expect("4-bit DSP point");
+    let hik_muls = hikonv_muls_per_layer(&input.model, dp.n, dp.k);
+    let (hik_dsps, hik_cycles) = allocate(&hik_muls, input.dsp_budget);
+    let hik_fps_raw = input.eta * input.freq_mhz * 1e6 / hik_cycles;
+    let hik_fps = input
+        .arm_feed_fps_cap
+        .map(|c| hik_fps_raw.min(c))
+        .unwrap_or(hik_fps_raw);
+    // LUT overhead: packing/segmentation glue shared per PE (8-DSP groups).
+    let wrapper = super::resource::hikonv_dsp_wrapper_cost(dp.n, dp.k, dp.s, dp.segments());
+    let hikonv = VariantPerf {
+        dsps_used: hik_dsps,
+        fps_uncapped: hik_fps_raw,
+        fps: hik_fps,
+        gops_per_dsp_uncapped: total_ops * hik_fps_raw / hik_dsps as f64 / 1e9,
+        gops_per_dsp: total_ops * hik_fps / hik_dsps as f64 / 1e9,
+        luts: 4_300 + (hik_dsps as u64 / 8) * wrapper / 2,
+    };
+    PerfReport { baseline, hikonv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ultranet::ultranet;
+
+    fn report() -> PerfReport {
+        ultranet_perf(&PerfModelInput::ultra96(ultranet()))
+    }
+
+    #[test]
+    fn baseline_matches_calibration_target() {
+        let r = report();
+        assert!(
+            (r.baseline.fps - PAPER_BASELINE_FPS).abs() < 2.0,
+            "baseline fps {}",
+            r.baseline.fps
+        );
+        // Paper: 0.289 Gops/DSP for the baseline.
+        assert!(
+            (r.baseline.gops_per_dsp - 0.289).abs() < 0.05,
+            "baseline Gops/DSP {}",
+            r.baseline.gops_per_dsp
+        );
+    }
+
+    #[test]
+    fn hikonv_is_feeder_capped_like_the_paper() {
+        let r = report();
+        // Measured fps hits the ARM cap (paper: 401).
+        assert!(
+            (r.hikonv.fps - ARM_FEED_FPS).abs() < 2.0,
+            "hikonv fps {}",
+            r.hikonv.fps
+        );
+        // Uncapped beats capped (paper: 588 > 401).
+        assert!(r.hikonv.fps_uncapped > r.hikonv.fps);
+    }
+
+    #[test]
+    fn headline_ratios_in_paper_band() {
+        let r = report();
+        // Paper: 2.37x throughput (uncapped vs baseline 248).
+        let thr = r.throughput_ratio_uncapped();
+        assert!(
+            (1.9..=3.0).contains(&thr),
+            "throughput ratio {thr} outside the paper band (2.37x claim)"
+        );
+        // Paper: 2.61x DSP efficiency.
+        let eff = r.dsp_eff_ratio_uncapped();
+        assert!(
+            (2.0..=3.3).contains(&eff),
+            "DSP-eff ratio {eff} outside the paper band (2.61x claim)"
+        );
+    }
+
+    #[test]
+    fn dsp_usage_within_budget_and_realistic() {
+        let r = report();
+        assert!(r.hikonv.dsps_used <= 360, "{}", r.hikonv.dsps_used);
+        assert!(r.baseline.dsps_used <= 360, "{}", r.baseline.dsps_used);
+        assert!(r.hikonv.dsps_used > 200, "unrealistically few DSPs");
+    }
+
+    #[test]
+    fn hikonv_spends_more_luts() {
+        let r = report();
+        assert!(r.hikonv.luts > r.baseline.luts);
+        assert!(r.hikonv.luts < 3 * r.baseline.luts, "LUT overhead blew up");
+    }
+
+    #[test]
+    fn removing_the_cap_raises_measured_fps() {
+        let mut input = PerfModelInput::ultra96(ultranet());
+        input.arm_feed_fps_cap = None;
+        let r = ultranet_perf(&input);
+        assert!(r.hikonv.fps > ARM_FEED_FPS);
+        assert_eq!(r.hikonv.fps, r.hikonv.fps_uncapped);
+    }
+}

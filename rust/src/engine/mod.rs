@@ -1,0 +1,122 @@
+//! Pluggable convolution-engine abstraction used by benches and the
+//! coordinator: the same layer can run on the baseline loop nest, the
+//! HiKonv packed engine, or (whole-model) a PJRT-compiled artifact.
+
+use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use crate::conv::reference::{conv2d_ref, ConvShape};
+use crate::theory::{Multiplier, Signedness};
+
+/// A layer-level convolution engine with bound weights.
+pub trait ConvEngine: Send {
+    /// Engine name for reports.
+    fn name(&self) -> &str;
+    /// Execute the layer on `[ci][h][w]` activations.
+    fn conv(&self, input: &[i64]) -> Vec<i64>;
+    /// The layer shape this engine was built for.
+    fn shape(&self) -> ConvShape;
+}
+
+/// Baseline 6-loop engine (Eq. 17).
+pub struct BaselineEngine {
+    shape: ConvShape,
+    weights: Vec<i64>,
+}
+
+impl BaselineEngine {
+    pub fn new(shape: ConvShape, weights: Vec<i64>) -> BaselineEngine {
+        assert_eq!(weights.len(), shape.weight_len());
+        BaselineEngine { shape, weights }
+    }
+}
+
+impl ConvEngine for BaselineEngine {
+    fn name(&self) -> &str {
+        "baseline"
+    }
+    fn conv(&self, input: &[i64]) -> Vec<i64> {
+        conv2d_ref(input, &self.weights, self.shape)
+    }
+    fn shape(&self) -> ConvShape {
+        self.shape
+    }
+}
+
+/// HiKonv packed engine (Thms. 1–3).
+pub struct HiKonvEngine {
+    inner: Conv2dHiKonv,
+    shape: ConvShape,
+}
+
+impl HiKonvEngine {
+    pub fn new(
+        shape: ConvShape,
+        weights: Vec<i64>,
+        mult: Multiplier,
+        p: u32,
+        q: u32,
+        signedness: Signedness,
+    ) -> Result<HiKonvEngine, String> {
+        let spec = Conv2dSpec {
+            shape,
+            mult,
+            p,
+            q,
+            signedness,
+        };
+        Ok(HiKonvEngine {
+            inner: Conv2dHiKonv::new(spec, &weights)?,
+            shape,
+        })
+    }
+}
+
+impl ConvEngine for HiKonvEngine {
+    fn name(&self) -> &str {
+        "hikonv"
+    }
+    fn conv(&self, input: &[i64]) -> Vec<i64> {
+        self.inner.conv(input)
+    }
+    fn shape(&self) -> ConvShape {
+        self.shape
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_seq_eq;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn engines_agree_via_trait_objects() {
+        let shape = ConvShape {
+            ci: 4,
+            co: 3,
+            hi: 6,
+            wi: 10,
+            k: 3,
+        };
+        let mut rng = Rng::new(41);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let engines: Vec<Box<dyn ConvEngine>> = vec![
+            Box::new(BaselineEngine::new(shape, weights.clone())),
+            Box::new(
+                HiKonvEngine::new(
+                    shape,
+                    weights,
+                    Multiplier::CPU32,
+                    4,
+                    4,
+                    Signedness::UnsignedBySigned,
+                )
+                .unwrap(),
+            ),
+        ];
+        let outputs: Vec<Vec<i64>> = engines.iter().map(|e| e.conv(&input)).collect();
+        assert_seq_eq(&outputs[0], &outputs[1]).unwrap();
+        assert_eq!(engines[0].name(), "baseline");
+        assert_eq!(engines[1].shape(), shape);
+    }
+}

@@ -1,0 +1,239 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Packed-domain channel accumulation depth** (Thm.-3 engine):
+//!    block = 1 (segment per (ci, kh) pair) vs the auto-chosen deep block.
+//! 2. **Lane width**: i64-constrained design point vs the unconstrained
+//!    (i128-path) optimum at p=q=2 — more ops/mult is not always faster.
+//! 3. **Signed vs unsigned operands** on CPU (§IV-A's observation that
+//!    sign handling costs extra bit-ops).
+//! 4. **Dot-product engine** (the §VI extension) vs scalar MACs.
+
+use crate::bench::{BenchConfig, Bencher};
+use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use crate::conv::dot::{dot_ref, DotHiKonv};
+use crate::conv::conv1d::Conv1dHiKonv;
+use crate::conv::reference::ConvShape;
+use crate::theory::{solve, solve_for_lane, AccumMode, Multiplier, Signedness};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// One ablation row: variant label, ns/iter, relative factor to the first
+/// variant in its group.
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub group: String,
+    pub variant: String,
+    pub ns: f64,
+    pub rel: f64,
+}
+
+pub fn run(config: BenchConfig) -> (Table, Vec<AblationRow>) {
+    let mut bencher = Bencher::with_config("ablations", config);
+    let mut rows: Vec<AblationRow> = Vec::new();
+    let push = |rows: &mut Vec<AblationRow>, group: &str, variant: &str, ns: f64| {
+        let base = rows
+            .iter()
+            .find(|r| r.group == group)
+            .map(|r| r.ns)
+            .unwrap_or(ns);
+        rows.push(AblationRow {
+            group: group.to_string(),
+            variant: variant.to_string(),
+            ns,
+            rel: ns / base,
+        });
+    };
+
+    // 1. channel-block depth on a 64-channel layer.
+    {
+        let shape = ConvShape {
+            ci: 64,
+            co: 8,
+            hi: 12,
+            wi: 22,
+            k: 3,
+        };
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let mut rng = Rng::new(0xAB1);
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let shallow = Conv2dHiKonv::with_block(spec, &weights, 1).unwrap();
+        let auto = Conv2dHiKonv::new(spec, &weights).unwrap();
+        assert_eq!(shallow.conv(&input), auto.conv(&input));
+        let ns1 = bencher
+            .bench("channel-block/1", || shallow.conv(&input))
+            .median_ns();
+        push(&mut rows, "channel-block", "block=1 (segment per row-pair)", ns1);
+        let ns2 = bencher
+            .bench(
+                &format!("channel-block/{}", auto.channel_block()),
+                || auto.conv(&input),
+            )
+            .median_ns();
+        push(
+            &mut rows,
+            "channel-block",
+            &format!("block={} (auto, packed-domain)", auto.channel_block()),
+            ns2,
+        );
+    }
+
+    // 2. lane width at p=q=2 (unconstrained N=K=6 needs i128).
+    {
+        let mut rng = Rng::new(0xAB2);
+        let f = rng.quant_unsigned_vec(2, 8192);
+        let g = rng.quant_unsigned_vec(2, 3);
+        let wide = solve(
+            Multiplier::CPU32,
+            2,
+            2,
+            Signedness::Unsigned,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap();
+        let lane = solve_for_lane(
+            Multiplier::CPU32,
+            2,
+            2,
+            Signedness::Unsigned,
+            AccumMode::Extended { m: 1 },
+            64,
+        )
+        .unwrap();
+        let e_wide = Conv1dHiKonv::new(wide, &g).unwrap();
+        let e_lane = Conv1dHiKonv::new(lane, &g).unwrap();
+        assert_eq!(e_wide.conv(&f), e_lane.conv(&f));
+        let ns1 = bencher
+            .bench(
+                &format!("lane/i128 N={} ops={}", wide.n, wide.ops_per_mult()),
+                || e_wide.conv(&f),
+            )
+            .median_ns();
+        push(
+            &mut rows,
+            "lane",
+            &format!("unconstrained (N={}, {} ops/mult, i128)", wide.n, wide.ops_per_mult()),
+            ns1,
+        );
+        let ns2 = bencher
+            .bench(
+                &format!("lane/i64 N={} ops={}", lane.n, lane.ops_per_mult()),
+                || e_lane.conv(&f),
+            )
+            .median_ns();
+        push(
+            &mut rows,
+            "lane",
+            &format!("i64-constrained (N={}, {} ops/mult)", lane.n, lane.ops_per_mult()),
+            ns2,
+        );
+    }
+
+    // 3. unsigned vs signed at 4-bit (CPU sign-handling overhead, §IV-A).
+    {
+        let mut rng = Rng::new(0xAB3);
+        let fu = rng.quant_unsigned_vec(4, 8192);
+        let gu = rng.quant_unsigned_vec(4, 3);
+        let fs = rng.quant_signed_vec(4, 8192);
+        let gs = rng.quant_signed_vec(4, 3);
+        let dpu = solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap();
+        let dps = solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::Signed,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap();
+        let eu = Conv1dHiKonv::new(dpu, &gu).unwrap();
+        let es = Conv1dHiKonv::new(dps, &gs).unwrap();
+        let ns1 = bencher.bench("signedness/unsigned", || eu.conv(&fu)).median_ns();
+        push(&mut rows, "signedness", "unsigned (Eq. 11/12)", ns1);
+        let ns2 = bencher.bench("signedness/signed", || es.conv(&fs)).median_ns();
+        push(
+            &mut rows,
+            "signedness",
+            "signed (Eq. 13 carry-corrected)",
+            ns2,
+        );
+    }
+
+    // 4. dot product: scalar MACs vs packed middle-segment extraction.
+    {
+        let mut rng = Rng::new(0xAB4);
+        let x = rng.quant_unsigned_vec(4, 8192);
+        let y = rng.quant_unsigned_vec(4, 8192);
+        let eng = DotHiKonv::new(Multiplier::CPU32, 4, 4, Signedness::Unsigned).unwrap();
+        assert_eq!(eng.dot(&x, &y), dot_ref(&x, &y));
+        let ns1 = bencher
+            .bench("dot/scalar", || dot_ref(&x, &y))
+            .median_ns();
+        push(&mut rows, "dot", "scalar MAC loop", ns1);
+        let ns2 = bencher
+            .bench(
+                &format!("dot/hikonv x{}", eng.terms_per_mult()),
+                || eng.dot(&x, &y),
+            )
+            .median_ns();
+        push(
+            &mut rows,
+            "dot",
+            &format!("HiKonv middle-segment ({} terms/mult)", eng.terms_per_mult()),
+            ns2,
+        );
+    }
+
+    let mut t = Table::new(
+        "Ablations (relative time; <1.0 means the variant is faster than its group baseline)",
+        &["group", "variant", "time", "relative"],
+    );
+    for r in &rows {
+        t.row(crate::cells!(
+            r.group,
+            r.variant,
+            crate::bench::fmt_ns(r.ns),
+            format!("{:.2}", r.rel)
+        ));
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_run_and_deep_blocking_wins() {
+        let (t, rows) = run(BenchConfig::quick());
+        assert!(t.n_rows() >= 8);
+        // Packed-domain channel accumulation must beat per-pair segmentation.
+        let auto = rows
+            .iter()
+            .find(|r| r.group == "channel-block" && r.variant.contains("auto"))
+            .unwrap();
+        assert!(
+            auto.rel < 0.95,
+            "deep blocking should win: rel={}",
+            auto.rel
+        );
+        // The i64-constrained lane must beat the i128 path at p=q=2.
+        let lane = rows
+            .iter()
+            .find(|r| r.group == "lane" && r.variant.contains("i64"))
+            .unwrap();
+        assert!(lane.rel < 1.0, "i64 lane should win: rel={}", lane.rel);
+    }
+}

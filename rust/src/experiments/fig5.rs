@@ -1,0 +1,113 @@
+//! Figure 5: achievable ops/cycle surfaces over (p, q) for the 27×18 DSP
+//! (panel a) and a 32×32 CPU multiplier (panel b).
+
+use crate::theory::{paper_figure5_claims, surface, AccumMode, Multiplier, Signedness, Surface};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Both panels plus the paper-claim comparison.
+pub struct Fig5 {
+    pub dsp: Surface,
+    pub cpu: Surface,
+}
+
+/// Compute both Figure-5 panels.
+pub fn run() -> Fig5 {
+    Fig5 {
+        dsp: surface(
+            Multiplier::DSP48E2,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        ),
+        cpu: surface(Multiplier::CPU32, Signedness::Unsigned, AccumMode::Single),
+    }
+}
+
+impl Fig5 {
+    /// Render both panels and the claim-vs-strict comparison.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.dsp.to_table().render());
+        out.push('\n');
+        out.push_str(&self.cpu.to_table().render());
+        out.push('\n');
+        out.push_str(&self.claims_table().render());
+        out
+    }
+
+    /// Paper-stated points vs the strict solver (see DESIGN.md §3).
+    pub fn claims_table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig.5 paper claims vs strict Eq.6-8 solver",
+            &[
+                "multiplier", "p", "q", "paper N", "paper K", "paper ops",
+                "strict N", "strict K", "strict S", "strict ops", "consistent",
+            ],
+        );
+        for c in paper_figure5_claims() {
+            let srf = if c.mult.bit_a == 27 { &self.dsp } else { &self.cpu };
+            let dp = srf.point(c.p, c.q);
+            t.row(crate::cells!(
+                format!("{}x{}", c.mult.bit_a, c.mult.bit_b),
+                c.p,
+                c.q,
+                c.n,
+                c.k,
+                c.ops,
+                dp.n,
+                dp.k,
+                dp.s,
+                dp.ops_per_mult(),
+                if c.consistent_with_eq7_8 { "yes" } else { "no (Eq.7)" }
+            ));
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        let grid = |s: &Surface| {
+            Json::Array(
+                (1..=8u32)
+                    .map(|p| {
+                        Json::Array((1..=8u32).map(|q| Json::Int(s.ops(p, q) as i64)).collect())
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj()
+            .set("dsp_27x18_ops", grid(&self.dsp))
+            .set("cpu_32x32_ops", grid(&self.cpu))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_points_of_both_panels() {
+        let f = run();
+        assert_eq!(f.dsp.ops(4, 4), 8); // paper: 8 ops/cycle @ 4-bit DSP
+        assert_eq!(f.cpu.ops(4, 4), 13); // paper: 13 ops/cycle @ 4-bit 32x32
+        assert_eq!(f.dsp.ops(1, 1), 94); // strict binary optimum (paper: 60)
+        assert_eq!(f.cpu.ops(1, 1), 113); // strict binary optimum (paper: 128)
+    }
+
+    #[test]
+    fn render_includes_everything() {
+        let s = run().render();
+        assert!(s.contains("27x18"));
+        assert!(s.contains("32x32"));
+        assert!(s.contains("no (Eq.7)"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = run().to_json();
+        let grid = j.get("dsp_27x18_ops").unwrap();
+        match grid {
+            Json::Array(rows) => assert_eq!(rows.len(), 8),
+            _ => panic!("expected array"),
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Figure 6: CPU latency experiments.
+//!
+//! * (a) 1-D convolution, baseline nested loops vs HiKonv, four
+//!   input×kernel combinations at p=q=4 on the 32×32 multiplier.
+//! * (b) DNN convolution layer (UltraNet's final 3×3 conv, Thm.-3 loop
+//!   nest) at p=q=4.
+//! * (c) 1-D convolution speedup across bitwidths 1..8 (p=q), where the
+//!   paper reports ≈3× at 4-bit growing to 8.6× at 1-bit.
+
+use crate::bench::{BenchConfig, Bencher};
+use crate::conv::conv1d::Conv1dHiKonv;
+use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use crate::conv::reference::{conv1d_ref, conv2d_ref};
+use crate::models::ultranet::ultranet_final_layer;
+use crate::theory::{solve, solve_for_lane, AccumMode, Multiplier, Signedness};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// One measured comparison row.
+#[derive(Clone, Debug)]
+pub struct LatencyRow {
+    pub label: String,
+    pub baseline_ns: f64,
+    pub hikonv_ns: f64,
+}
+
+impl LatencyRow {
+    pub fn speedup(&self) -> f64 {
+        self.baseline_ns / self.hikonv_ns
+    }
+}
+
+fn table(title: &str, rows: &[LatencyRow]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["workload", "baseline", "hikonv", "speedup"],
+    );
+    for r in rows {
+        t.row(crate::cells!(
+            r.label,
+            crate::bench::fmt_ns(r.baseline_ns),
+            crate::bench::fmt_ns(r.hikonv_ns),
+            format!("{:.2}x", r.speedup())
+        ));
+    }
+    t
+}
+
+pub fn rows_to_json(rows: &[LatencyRow]) -> Json {
+    Json::Array(
+        rows.iter()
+            .map(|r| {
+                Json::obj()
+                    .set("label", r.label.as_str())
+                    .set("baseline_ns", r.baseline_ns)
+                    .set("hikonv_ns", r.hikonv_ns)
+                    .set("speedup", r.speedup())
+            })
+            .collect(),
+    )
+}
+
+/// Fig. 6a: the four input×kernel combinations at p=q=4.
+pub fn fig6a(config: BenchConfig) -> (Table, Vec<LatencyRow>) {
+    // Kernel lengths representative of conv kernels (3) and longer filter
+    // banks (9); two input lengths — the paper's "four combinations".
+    let combos = [(4096usize, 3usize), (4096, 9), (16384, 3), (16384, 9)];
+    let dp = solve(
+        Multiplier::CPU32,
+        4,
+        4,
+        Signedness::Unsigned,
+        AccumMode::Extended { m: 1 },
+    )
+    .unwrap();
+    let mut bencher = Bencher::with_config("fig6a", config);
+    let mut rows = Vec::new();
+    for (flen, klen) in combos {
+        let mut rng = Rng::new(0xF16A ^ (flen as u64) ^ (klen as u64) << 20);
+        let f = rng.quant_unsigned_vec(4, flen);
+        let g = rng.quant_unsigned_vec(4, klen);
+        let base = bencher
+            .bench(&format!("baseline/{flen}x{klen}"), || conv1d_ref(&f, &g))
+            .median_ns();
+        let eng = Conv1dHiKonv::new(dp, &g).unwrap();
+        let hik = bencher
+            .bench(&format!("hikonv/{flen}x{klen}"), || eng.conv(&f))
+            .median_ns();
+        rows.push(LatencyRow {
+            label: format!("1-D conv {flen} * {klen} (4-bit)"),
+            baseline_ns: base,
+            hikonv_ns: hik,
+        });
+    }
+    (table("Fig.6a 1-D convolution latency (CPU)", &rows), rows)
+}
+
+/// Fig. 6b: the UltraNet final conv layer (Thm. 3).
+pub fn fig6b(config: BenchConfig) -> (Table, Vec<LatencyRow>) {
+    let layer = ultranet_final_layer();
+    let shape = layer.padded_shape();
+    let mut rng = Rng::new(0xF16B);
+    let input = rng.quant_unsigned_vec(4, shape.input_len());
+    let weights = rng.quant_signed_vec(4, shape.weight_len());
+    let mut bencher = Bencher::with_config("fig6b", config);
+    let base = bencher
+        .bench("baseline/ultranet-final", || {
+            conv2d_ref(&input, &weights, shape)
+        })
+        .median_ns();
+    let eng = Conv2dHiKonv::new(
+        Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        },
+        &weights,
+    )
+    .unwrap();
+    let hik = bencher
+        .bench("hikonv/ultranet-final", || eng.conv(&input))
+        .median_ns();
+    let rows = vec![LatencyRow {
+        label: format!(
+            "UltraNet final layer {}x{}x{} k{} (4-bit)",
+            layer.ci, layer.hi, layer.wi, layer.k
+        ),
+        baseline_ns: base,
+        hikonv_ns: hik,
+    }];
+    (table("Fig.6b DNN conv layer latency (CPU)", &rows), rows)
+}
+
+/// Fig. 6c: speedup vs bitwidth (p=q in 1..=8), 1-D convolution.
+pub fn fig6c(config: BenchConfig) -> (Table, Vec<LatencyRow>) {
+    let flen = 8192usize;
+    let klen = 8usize; // fills K at every bitwidth (K=8 at 1-bit)
+    let mut bencher = Bencher::with_config("fig6c", config);
+    let mut rows = Vec::new();
+    for bits in 1..=8u32 {
+        // Lane-constrained point: keep the packed product within the i64
+        // fast path (only changes p=q=2: N=K=6 -> 5; see §Perf).
+        let dp = solve_for_lane(
+            Multiplier::CPU32,
+            bits,
+            bits,
+            Signedness::Unsigned,
+            AccumMode::Extended { m: 1 },
+            64,
+        )
+        .unwrap();
+        let mut rng = Rng::new(0xF16C + bits as u64);
+        let f = rng.quant_unsigned_vec(bits, flen);
+        let g = rng.quant_unsigned_vec(bits, klen);
+        let base = bencher
+            .bench(&format!("baseline/{bits}bit"), || conv1d_ref(&f, &g))
+            .median_ns();
+        let eng = Conv1dHiKonv::new(dp, &g).unwrap();
+        let hik = bencher
+            .bench(&format!("hikonv/{bits}bit"), || eng.conv(&f))
+            .median_ns();
+        rows.push(LatencyRow {
+            label: format!("{bits}-bit (N={}, K={}, S={})", dp.n, dp.k, dp.s),
+            baseline_ns: base,
+            hikonv_ns: hik,
+        });
+    }
+    (
+        table("Fig.6c 1-D conv speedup vs bitwidth (CPU)", &rows),
+        rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6a_hikonv_wins_all_combos() {
+        let (_t, rows) = fig6a(BenchConfig::quick());
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.speedup() > 1.2,
+                "expected HiKonv win on {}: {:.2}x",
+                r.label,
+                r.speedup()
+            );
+        }
+    }
+
+    #[test]
+    fn fig6b_hikonv_wins_dnn_layer() {
+        let (_t, rows) = fig6b(BenchConfig::quick());
+        assert!(rows[0].speedup() > 1.2, "{:.2}x", rows[0].speedup());
+    }
+
+    #[test]
+    fn fig6c_speedup_grows_as_bits_shrink() {
+        let (_t, rows) = fig6c(BenchConfig::quick());
+        assert_eq!(rows.len(), 8);
+        let s1 = rows[0].speedup();
+        let s8 = rows[7].speedup();
+        assert!(
+            s1 > s8,
+            "1-bit speedup ({s1:.2}x) should exceed 8-bit ({s8:.2}x)"
+        );
+        assert!(s1 > 2.0, "1-bit speedup too small: {s1:.2}x");
+    }
+}

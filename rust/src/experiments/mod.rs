@@ -1,0 +1,23 @@
+//! Regenerators for every table and figure in the paper's evaluation:
+//!
+//! | id | paper artifact | module |
+//! |----|----------------|--------|
+//! | fig5 | throughput surfaces (27×18, 32×32) | [`fig5`] |
+//! | fig6a | CPU 1-D conv latency, baseline vs HiKonv | [`fig6`] |
+//! | fig6b | CPU DNN-layer latency (UltraNet final conv) | [`fig6`] |
+//! | fig6c | 1-D conv speedup vs bitwidth 1..8 | [`fig6`] |
+//! | table1 | BNN-LUT vs BNN-HiKonv resources | [`table1`] |
+//! | table2 | UltraNet fps / DSP efficiency | [`table2`] |
+//!
+//! Plus [`ablations`] — non-paper ablation benches over the design
+//! choices (channel-block depth, lane width, signedness, dot products).
+//!
+//! Each regenerator prints the paper-style rows and returns structured
+//! results; `rust/benches/*.rs` are thin wrappers, and `hikonv <exp>` runs
+//! them from the CLI. EXPERIMENTS.md records paper-vs-measured.
+
+pub mod ablations;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;

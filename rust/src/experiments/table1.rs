@@ -1,0 +1,118 @@
+//! Table I: binary convolution resource utilization — BNN-LUT vs
+//! BNN-HiKonv across concurrency, with the paper's numbers side by side.
+
+use crate::dsp::bnn::{table1_rows, Table1Row};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Paper values: (concurrency, BNN-LUT LUTs, HiKonv LUTs, DSPs, DSP thro).
+pub const PAPER_TABLE1: [(usize, u64, u64, usize, u64); 5] = [
+    (336, 3371, 2672, 16, 21),
+    (576, 4987, 2536, 32, 18),
+    (960, 7764, 3369, 64, 15),
+    (1536, 12078, 3587, 128, 12),
+    (3072, 23607, 9319, 256, 12),
+];
+
+pub struct Table1 {
+    pub rows: Vec<Table1Row>,
+}
+
+pub fn run() -> Table1 {
+    Table1 { rows: table1_rows() }
+}
+
+impl Table1 {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Table I: binary convolution resources (model vs paper)",
+            &[
+                "concurrent MACs",
+                "BNN-LUT LUTs",
+                "paper",
+                "HiKonv LUTs",
+                "paper",
+                "DSPs",
+                "DSP thro",
+                "paper",
+                "LUT/DSP",
+                "paper",
+            ],
+        );
+        let paper_lut_per_dsp = [43.7, 76.6, 68.7, 65.4, 55.8];
+        for (i, r) in self.rows.iter().enumerate() {
+            let (pc, plut, phik, pdsp, pthro) = PAPER_TABLE1[i];
+            assert_eq!(r.concurrency, pc);
+            assert_eq!(r.hikonv_dsps, pdsp);
+            t.row(crate::cells!(
+                r.concurrency,
+                r.lut_only_luts,
+                plut,
+                r.hikonv_luts,
+                phik,
+                r.hikonv_dsps,
+                r.dsp_throughput,
+                pthro,
+                format!("{:.1}", r.lut_per_dsp),
+                paper_lut_per_dsp[i]
+            ));
+        }
+        t.render()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Array(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("concurrency", r.concurrency)
+                        .set("lut_only_luts", r.lut_only_luts as i64)
+                        .set("hikonv_luts", r.hikonv_luts as i64)
+                        .set("dsps", r.hikonv_dsps)
+                        .set("dsp_throughput", r.dsp_throughput as i64)
+                        .set("lut_per_dsp", r.lut_per_dsp)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrency_dsp_throughput_columns_exact() {
+        let t = run();
+        for (r, (pc, _, _, pdsp, pthro)) in t.rows.iter().zip(PAPER_TABLE1) {
+            assert_eq!(r.concurrency, pc);
+            assert_eq!(r.hikonv_dsps, pdsp);
+            assert_eq!(r.dsp_throughput, pthro);
+        }
+    }
+
+    #[test]
+    fn lut_model_within_band_of_paper() {
+        // LUT columns are synthesis-dependent; the model must land within
+        // 2x on every row and within 35% on the BNN-LUT column.
+        let t = run();
+        for (r, (_, plut, phik, _, _)) in t.rows.iter().zip(PAPER_TABLE1) {
+            let lut_err = (r.lut_only_luts as f64 - plut as f64).abs() / plut as f64;
+            assert!(lut_err < 0.35, "BNN-LUT {0} vs paper {plut}", r.lut_only_luts);
+            let ratio = r.hikonv_luts as f64 / phik as f64;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "HiKonv LUTs {0} vs paper {phik}",
+                r.hikonv_luts
+            );
+        }
+    }
+
+    #[test]
+    fn renders_with_paper_columns() {
+        let s = run().render();
+        assert!(s.contains("3072"));
+        assert!(s.contains("23607"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Table II: UltraNet resource and performance — baseline vs HiKonv on the
+//! Ultra96, from the calibrated FPGA performance model.
+
+use crate::dsp::perf_model::{ultranet_perf, PerfModelInput, PerfReport};
+use crate::models::ultranet::ultranet;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Paper values.
+pub struct PaperTable2;
+impl PaperTable2 {
+    pub const BASELINE_FPS: f64 = 248.0;
+    pub const BASELINE_GOPS_DSP: f64 = 0.289;
+    pub const BASELINE_DSP: usize = 360;
+    pub const HIKONV_FPS_MEASURED: f64 = 401.0;
+    pub const HIKONV_FPS_UNCAPPED: f64 = 588.0;
+    pub const HIKONV_GOPS_DSP_MEASURED: f64 = 0.514;
+    pub const HIKONV_GOPS_DSP_UNCAPPED: f64 = 0.753;
+    pub const HIKONV_DSP: usize = 327;
+}
+
+pub struct Table2 {
+    pub report: PerfReport,
+}
+
+pub fn run() -> Table2 {
+    Table2 {
+        report: ultranet_perf(&PerfModelInput::ultra96(ultranet())),
+    }
+}
+
+impl Table2 {
+    pub fn render(&self) -> String {
+        let r = &self.report;
+        let mut t = Table::new(
+            "Table II: UltraNet resource and performance (model vs paper)",
+            &["variant", "DSP", "paper", "fps", "paper", "Gops/DSP", "paper"],
+        );
+        t.row(crate::cells!(
+            "UltraNet (baseline)",
+            r.baseline.dsps_used,
+            PaperTable2::BASELINE_DSP,
+            format!("{:.0}", r.baseline.fps),
+            PaperTable2::BASELINE_FPS,
+            format!("{:.3}", r.baseline.gops_per_dsp),
+            PaperTable2::BASELINE_GOPS_DSP
+        ));
+        t.row(crate::cells!(
+            "UltraNet-HiKonv",
+            r.hikonv.dsps_used,
+            PaperTable2::HIKONV_DSP,
+            format!("{:.0}/{:.0}", r.hikonv.fps, r.hikonv.fps_uncapped),
+            format!(
+                "{:.0}/{:.0}",
+                PaperTable2::HIKONV_FPS_MEASURED,
+                PaperTable2::HIKONV_FPS_UNCAPPED
+            ),
+            format!(
+                "{:.3}/{:.3}",
+                r.hikonv.gops_per_dsp,
+                r.hikonv.gops_per_dsp_uncapped
+            ),
+            format!(
+                "{}/{}",
+                PaperTable2::HIKONV_GOPS_DSP_MEASURED,
+                PaperTable2::HIKONV_GOPS_DSP_UNCAPPED
+            )
+        ));
+        let mut out = t.render();
+        out.push_str(&format!(
+            "headline ratios: throughput {:.2}x (paper 2.37x), DSP efficiency {:.2}x (paper 2.61x)\n",
+            self.report.throughput_ratio_uncapped(),
+            self.report.dsp_eff_ratio_uncapped()
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let r = &self.report;
+        Json::obj()
+            .set(
+                "baseline",
+                Json::obj()
+                    .set("dsps", r.baseline.dsps_used)
+                    .set("fps", r.baseline.fps)
+                    .set("gops_per_dsp", r.baseline.gops_per_dsp),
+            )
+            .set(
+                "hikonv",
+                Json::obj()
+                    .set("dsps", r.hikonv.dsps_used)
+                    .set("fps", r.hikonv.fps)
+                    .set("fps_uncapped", r.hikonv.fps_uncapped)
+                    .set("gops_per_dsp", r.hikonv.gops_per_dsp)
+                    .set("gops_per_dsp_uncapped", r.hikonv.gops_per_dsp_uncapped),
+            )
+            .set("throughput_ratio", r.throughput_ratio_uncapped())
+            .set("dsp_eff_ratio", r.dsp_eff_ratio_uncapped())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_both_variants_with_ratios() {
+        let s = run().render();
+        assert!(s.contains("UltraNet (baseline)"));
+        assert!(s.contains("UltraNet-HiKonv"));
+        assert!(s.contains("paper 2.37x"));
+    }
+
+    #[test]
+    fn json_has_headline_fields() {
+        let j = run().to_json();
+        assert!(j.get("throughput_ratio").is_some());
+        assert!(j.get("hikonv").unwrap().get("fps_uncapped").is_some());
+    }
+}

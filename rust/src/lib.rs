@@ -1,0 +1,52 @@
+//! # HiKonv — high-throughput quantized convolution on full-bitwidth multipliers
+//!
+//! Reproduction of *HiKonv: High Throughput Quantized Convolution With Novel
+//! Bit-wise Management and Computation* (Liu, Chen, Ganesh, Pan, Xiong, Chen —
+//! CS.DC 2021).
+//!
+//! HiKonv packs many low-bitwidth (1–8 bit) convolution operands into the two
+//! inputs of a single full-bitwidth multiplier so one multiplication computes
+//! `N·K` products and `(N-1)·(K-1)` additions of a 1-D convolution, with guard
+//! bits and signed bit-management making the result exact (Theorems 1–3 of the
+//! paper).
+//!
+//! ## Crate layout
+//!
+//! * [`theory`] — design-point solver (slice width `S`, operand counts `N`,`K`,
+//!   guard bits `G_b`), throughput model and design-space exploration (Fig. 5).
+//! * [`packing`] — bit-exact packing/segmentation for unsigned (Eq. 11–12) and
+//!   signed (Eq. 13) operands.
+//! * [`conv`] — the convolution engines: nested-loop reference, `F_{N,K}`
+//!   single-multiply unit (Thm. 1), `F_{X·N,K}` overlap-add extension (Thm. 2)
+//!   and the full DNN convolution layer (Thm. 3).
+//! * [`quant`] — quantized tensor types and quantizers.
+//! * [`dsp`] — the FPGA substrate: a bit-accurate DSP48E2 functional model,
+//!   LUT resource model and the UltraNet performance model (Tables I & II).
+//! * [`models`] — UltraNet (DAC-SDC 2020 champion) layer table and CPU runner.
+//! * [`engine`] — pluggable convolution-engine abstraction.
+//! * [`runtime`] — PJRT client: loads AOT-compiled HLO artifacts from the
+//!   JAX/Pallas compile path and executes them from Rust.
+//! * [`coordinator`] — the streaming serving pipeline (frame source →
+//!   quantize → infer → postprocess) with batching and metrics.
+//! * [`experiments`] — regenerators for every table and figure of the paper.
+//! * [`bench`], [`testing`], [`util`], [`cli`] — self-built substrates
+//!   (criterion-lite harness, property testing, RNG/JSON/tables, CLI parsing);
+//!   the build image has no network access so these are implemented in-crate.
+
+pub mod bench;
+pub mod cli;
+pub mod conv;
+pub mod coordinator;
+pub mod dsp;
+pub mod engine;
+pub mod experiments;
+pub mod models;
+pub mod packing;
+pub mod quant;
+pub mod runtime;
+pub mod testing;
+pub mod theory;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,267 @@
+//! `hikonv` — CLI for the HiKonv reproduction.
+//!
+//! Subcommands map to the paper's experiments plus utility tools:
+//!
+//! ```text
+//! hikonv solve   --bit-a 27 --bit-b 18 --p 4 --q 4 [--signed] [--m 1]
+//! hikonv dse     --bit-a 32 --bit-b 32            design-space exploration
+//! hikonv fig5 | fig6a | fig6b | fig6c | table1 | table2
+//! hikonv serve   --backend hikonv|baseline|pjrt --frames 64 [--fps-cap 401]
+//! hikonv run-model --engine hikonv|baseline      one UltraNet-tiny inference
+//! ```
+
+use hikonv::bench::BenchConfig;
+use hikonv::cli::{render_help, Args, OptSpec};
+use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
+use hikonv::coordinator::ParallelCpuBackend;
+use hikonv::coordinator::{serve, ServeConfig};
+use hikonv::experiments::{fig5, fig6, table1, table2};
+use hikonv::models::{random_weights, ultranet, CpuRunner, EngineKind};
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::runtime::{artifacts, Runtime};
+use hikonv::theory::{
+    explore, pareto_points, solve, AccumMode, Multiplier, Signedness,
+};
+use hikonv::util::table::Table;
+use std::time::Duration;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print!("{}", help());
+            Ok(())
+        }
+        "solve" => cmd_solve(args),
+        "dse" => cmd_dse(args),
+        "fig5" => {
+            print!("{}", fig5::run().render());
+            Ok(())
+        }
+        "fig6a" => {
+            let (t, _) = fig6::fig6a(BenchConfig::from_env());
+            print!("{}", t.render());
+            Ok(())
+        }
+        "fig6b" => {
+            let (t, _) = fig6::fig6b(BenchConfig::from_env());
+            print!("{}", t.render());
+            Ok(())
+        }
+        "fig6c" => {
+            let (t, _) = fig6::fig6c(BenchConfig::from_env());
+            print!("{}", t.render());
+            Ok(())
+        }
+        "table1" => {
+            print!("{}", table1::run().render());
+            Ok(())
+        }
+        "table2" => {
+            print!("{}", table2::run().render());
+            Ok(())
+        }
+        "serve" => cmd_serve(args),
+        "run-model" => cmd_run_model(args),
+        other => Err(format!("unknown subcommand '{other}'\n\n{}", help())),
+    }
+}
+
+fn parse_signedness(args: &Args) -> Signedness {
+    if args.has("signed") {
+        Signedness::Signed
+    } else if args.has("mixed") {
+        Signedness::UnsignedBySigned
+    } else {
+        Signedness::Unsigned
+    }
+}
+
+fn cmd_solve(args: &Args) -> Result<(), String> {
+    let mult = Multiplier::new(args.get_u32("bit-a", 32)?, args.get_u32("bit-b", 32)?);
+    let p = args.get_u32("p", 4)?;
+    let q = args.get_u32("q", 4)?;
+    let m = args.get_u64("m", 1)?;
+    let accum = if args.has("single") {
+        AccumMode::Single
+    } else {
+        AccumMode::Extended { m }
+    };
+    let dp = solve(mult, p, q, parse_signedness(args), accum).map_err(|e| e.to_string())?;
+    println!(
+        "design point for {}x{} multiplier, p={p}, q={q}:",
+        mult.bit_a, mult.bit_b
+    );
+    println!(
+        "  S={} N={} K={} Gb={}  -> {} ops/mult ({} MACs + {} adds), {} segments",
+        dp.s,
+        dp.n,
+        dp.k,
+        dp.gb,
+        dp.ops_per_mult(),
+        dp.macs_per_mult(),
+        dp.ops_per_mult() - dp.macs_per_mult(),
+        dp.segments()
+    );
+    println!(
+        "  port utilization: A {:.0}%  B {:.0}%",
+        dp.util_a() * 100.0,
+        dp.util_b() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<(), String> {
+    let mult = Multiplier::new(args.get_u32("bit-a", 32)?, args.get_u32("bit-b", 32)?);
+    let max_bits = args.get_u32("max-bits", 8)?;
+    let points = explore(mult, max_bits, parse_signedness(args), AccumMode::Single);
+    let mut t = Table::new(
+        &format!("DSE {}x{} (p=q diagonal)", mult.bit_a, mult.bit_b),
+        &["p=q", "S", "N", "K", "ops/cycle", "ops*p*q"],
+    );
+    for d in points.iter().filter(|d| d.dp.p == d.dp.q) {
+        t.row(hikonv::cells!(
+            d.dp.p,
+            d.dp.s,
+            d.dp.n,
+            d.dp.k,
+            d.ops,
+            d.info_throughput
+        ));
+    }
+    print!("{}", t.render());
+    let front = pareto_points(&points);
+    println!("pareto frontier (precision p*q vs ops/cycle):");
+    for f in front {
+        println!(
+            "  p={} q={} -> {} ops/cycle (S={}, N={}, K={})",
+            f.dp.p, f.dp.q, f.ops, f.dp.s, f.dp.n, f.dp.k
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let backend_name = args.get_or("backend", "hikonv");
+    let frames = args.get_u64("frames", 64)?;
+    let fps_cap = match args.get("fps-cap") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| "bad --fps-cap")?),
+        None => None,
+    };
+    let config = ServeConfig {
+        frames,
+        source_fps_cap: fps_cap,
+        queue_depth: args.get_usize("queue-depth", 8)?,
+        max_batch: args.get_usize("batch", 4)?,
+        linger: Duration::from_millis(args.get_u64("linger-ms", 2)?),
+        seed: args.get_u64("seed", 7)?,
+        bits: 4,
+    };
+    let full = args.has("full-model");
+    let workers = args.get_usize("workers", 1)?;
+    let model = if full { ultranet() } else { ultranet_tiny() };
+    let cpu_backend = |kind: EngineKind| -> Result<Box<dyn hikonv::coordinator::InferBackend>, String> {
+        let weights = random_weights(&model, config.seed);
+        if workers > 1 {
+            Ok(Box::new(ParallelCpuBackend::new(
+                model.clone(),
+                weights,
+                kind,
+                workers,
+            )?))
+        } else {
+            Ok(Box::new(CpuBackend::new(CpuRunner::new(
+                model.clone(),
+                weights,
+                kind,
+            )?)))
+        }
+    };
+    let backend: Box<dyn hikonv::coordinator::InferBackend> = match backend_name.as_str() {
+        "baseline" => cpu_backend(EngineKind::Baseline)?,
+        "hikonv" => cpu_backend(EngineKind::HiKonv(Multiplier::CPU32))?,
+        "pjrt" => {
+            let rt = Runtime::cpu().map_err(|e| e.to_string())?;
+            let name = if full {
+                artifacts::ULTRANET
+            } else {
+                artifacts::ULTRANET_TINY
+            };
+            let loaded = rt.load_artifact(name).map_err(|e| e.to_string())?;
+            let out_dims = model.output_dims();
+            Box::new(PjrtBackend::new(loaded, model.input, out_dims))
+        }
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    let report = serve(backend, &config);
+    print!("{}", report.render());
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
+fn cmd_run_model(args: &Args) -> Result<(), String> {
+    let engine = match args.get_or("engine", "hikonv").as_str() {
+        "baseline" => EngineKind::Baseline,
+        "hikonv" => EngineKind::HiKonv(Multiplier::CPU32),
+        other => return Err(format!("unknown engine '{other}'")),
+    };
+    let model = if args.has("full-model") {
+        ultranet()
+    } else {
+        ultranet_tiny()
+    };
+    let weights = random_weights(&model, args.get_u64("seed", 7)?);
+    let runner = CpuRunner::new(model.clone(), weights, engine)?;
+    let (c, h, w) = model.input;
+    let mut rng = hikonv::util::rng::Rng::new(1);
+    let frame = rng.quant_unsigned_vec(4, c * h * w);
+    let (out, dt) = hikonv::util::timer::time(|| runner.infer(&frame));
+    let cell = runner.decode(&out);
+    println!(
+        "{} ({:?}): {:.2} ms/frame, detection cell {:?}",
+        model.name,
+        engine,
+        dt * 1e3,
+        cell
+    );
+    Ok(())
+}
+
+fn help() -> String {
+    let none: &[OptSpec] = &[];
+    render_help(
+        "hikonv",
+        &[
+            ("solve", "resolve one HiKonv design point", none),
+            ("dse", "design-space exploration over bitwidths", none),
+            ("fig5", "throughput surfaces (paper Fig. 5)", none),
+            ("fig6a", "1-D conv latency, baseline vs HiKonv", none),
+            ("fig6b", "DNN layer latency, baseline vs HiKonv", none),
+            ("fig6c", "speedup vs bitwidth sweep", none),
+            ("table1", "BNN resource comparison (paper Table I)", none),
+            ("table2", "UltraNet fps / DSP efficiency (paper Table II)", none),
+            ("serve", "run the streaming serving pipeline", none),
+            ("run-model", "single UltraNet inference on CPU engines", none),
+        ],
+    )
+}

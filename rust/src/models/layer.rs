@@ -1,0 +1,229 @@
+//! Layer descriptors for quantized CNN models.
+
+use crate::conv::reference::ConvShape;
+
+/// One convolution layer (same-padding, stride 1), optionally followed by a
+/// 2×2 max-pool — the only structures UltraNet uses.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    pub name: String,
+    pub ci: usize,
+    pub co: usize,
+    /// Input spatial dims *to this layer*.
+    pub hi: usize,
+    pub wi: usize,
+    /// Square kernel size.
+    pub k: usize,
+    /// Symmetric zero padding (k/2 for same-size output).
+    pub pad: usize,
+    /// 2×2 max-pool after activation?
+    pub pool_after: bool,
+    /// Activation bitwidth (unsigned) and weight bitwidth (signed).
+    pub a_bits: u32,
+    pub w_bits: u32,
+}
+
+impl ConvLayer {
+    /// Output spatial dims of the conv (before any pool).
+    pub fn conv_out(&self) -> (usize, usize) {
+        (
+            self.hi + 2 * self.pad - self.k + 1,
+            self.wi + 2 * self.pad - self.k + 1,
+        )
+    }
+
+    /// Output dims after the optional pool.
+    pub fn out(&self) -> (usize, usize) {
+        let (h, w) = self.conv_out();
+        if self.pool_after {
+            (h / 2, w / 2)
+        } else {
+            (h, w)
+        }
+    }
+
+    /// The padded valid-convolution shape fed to the engines.
+    pub fn padded_shape(&self) -> ConvShape {
+        ConvShape {
+            ci: self.ci,
+            co: self.co,
+            hi: self.hi + 2 * self.pad,
+            wi: self.wi + 2 * self.pad,
+            k: self.k,
+        }
+    }
+
+    /// MACs for one forward pass of this layer.
+    pub fn macs(&self) -> u64 {
+        let (ho, wo) = self.conv_out();
+        (self.co * ho * wo * self.ci * self.k * self.k) as u64
+    }
+
+    pub fn weight_len(&self) -> usize {
+        self.co * self.ci * self.k * self.k
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.ci * self.hi * self.wi
+    }
+}
+
+/// A sequential conv model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Input planes × H × W (pre-quantization image dims).
+    pub input: (usize, usize, usize),
+    pub layers: Vec<ConvLayer>,
+}
+
+impl ModelSpec {
+    /// Total MACs per forward pass.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total ops (each MAC = multiply + add, the paper's convention).
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+
+    /// Verify inter-layer shape consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        let (mut c, mut h, mut w) = self.input;
+        for l in &self.layers {
+            if (l.ci, l.hi, l.wi) != (c, h, w) {
+                return Err(format!(
+                    "layer {} expects {}x{}x{}, gets {}x{}x{}",
+                    l.name, l.ci, l.hi, l.wi, c, h, w
+                ));
+            }
+            let (ho, wo) = l.out();
+            c = l.co;
+            h = ho;
+            w = wo;
+        }
+        Ok(())
+    }
+
+    /// Output dims of the final layer.
+    pub fn output_dims(&self) -> (usize, usize, usize) {
+        let last = self.layers.last().expect("non-empty model");
+        let (h, w) = last.out();
+        (last.co, h, w)
+    }
+}
+
+/// 2×2 max-pool (stride 2) over an `[c][h][w]` level tensor.
+pub fn maxpool2(input: &[i64], c: usize, h: usize, w: usize) -> Vec<i64> {
+    assert_eq!(input.len(), c * h * w);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = vec![i64::MIN; c * ho * wo];
+    for ci in 0..c {
+        for y in 0..ho {
+            for x in 0..wo {
+                let mut m = i64::MIN;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(input[(ci * h + 2 * y + dy) * w + 2 * x + dx]);
+                    }
+                }
+                out[(ci * ho + y) * wo + x] = m;
+            }
+        }
+    }
+    out
+}
+
+/// Zero-pad an `[c][h][w]` tensor symmetrically by `pad` on each spatial side.
+pub fn pad2d(input: &[i64], c: usize, h: usize, w: usize, pad: usize) -> Vec<i64> {
+    assert_eq!(input.len(), c * h * w);
+    if pad == 0 {
+        return input.to_vec();
+    }
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let mut out = vec![0i64; c * hp * wp];
+    for ci in 0..c {
+        for y in 0..h {
+            let src = (ci * h + y) * w;
+            let dst = (ci * hp + y + pad) * wp + pad;
+            out[dst..dst + w].copy_from_slice(&input[src..src + w]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(ci: usize, co: usize, hi: usize, wi: usize, k: usize, pool: bool) -> ConvLayer {
+        ConvLayer {
+            name: "t".into(),
+            ci,
+            co,
+            hi,
+            wi,
+            k,
+            pad: k / 2,
+            pool_after: pool,
+            a_bits: 4,
+            w_bits: 4,
+        }
+    }
+
+    #[test]
+    fn same_padding_preserves_dims() {
+        let l = layer(3, 16, 160, 320, 3, false);
+        assert_eq!(l.conv_out(), (160, 320));
+        assert_eq!(l.padded_shape().ho(), 160);
+    }
+
+    #[test]
+    fn pool_halves() {
+        let l = layer(3, 16, 160, 320, 3, true);
+        assert_eq!(l.out(), (80, 160));
+    }
+
+    #[test]
+    fn macs_formula() {
+        let l = layer(3, 16, 160, 320, 3, false);
+        assert_eq!(l.macs(), 160 * 320 * 16 * 3 * 9);
+    }
+
+    #[test]
+    fn model_validation_catches_mismatch() {
+        let m = ModelSpec {
+            name: "bad".into(),
+            input: (3, 8, 8),
+            layers: vec![layer(3, 4, 8, 8, 3, true), layer(4, 4, 8, 8, 3, false)],
+        };
+        assert!(m.validate().is_err());
+        let good = ModelSpec {
+            name: "good".into(),
+            input: (3, 8, 8),
+            layers: vec![layer(3, 4, 8, 8, 3, true), layer(4, 4, 4, 4, 3, false)],
+        };
+        good.validate().unwrap();
+    }
+
+    #[test]
+    fn maxpool_takes_max() {
+        // 1 channel, 4x4
+        let x: Vec<i64> = (0..16).collect();
+        let y = maxpool2(&x, 1, 4, 4);
+        assert_eq!(y, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn pad_places_values() {
+        let x = vec![1i64, 2, 3, 4]; // 1x2x2
+        let y = pad2d(&x, 1, 2, 2, 1);
+        assert_eq!(y.len(), 16);
+        assert_eq!(y[5], 1);
+        assert_eq!(y[6], 2);
+        assert_eq!(y[9], 3);
+        assert_eq!(y[10], 4);
+        assert_eq!(y[0], 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Quantized model zoo: UltraNet (the DAC-SDC 2020 champion the paper
+//! evaluates end-to-end) plus the layer descriptors and the CPU runner
+//! that executes it over pluggable convolution engines.
+
+pub mod layer;
+pub mod runner;
+pub mod ultranet;
+
+pub use layer::{ConvLayer, ModelSpec};
+pub use runner::{random_weights, CpuRunner, EngineKind, ModelWeights};
+pub use ultranet::{ultranet, ultranet_final_layer, ULTRANET_INPUT};

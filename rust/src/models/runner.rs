@@ -1,0 +1,253 @@
+//! CPU inference runner: executes a quantized conv model over pluggable
+//! convolution engines (baseline nested loops vs HiKonv packed engines).
+
+use super::layer::{maxpool2, pad2d, ModelSpec};
+use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use crate::conv::reference::conv2d_ref;
+use crate::quant::{QTensor, Shape};
+use crate::theory::{Multiplier, Signedness};
+use crate::util::rng::Rng;
+
+/// Which convolution engine executes the layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Conventional 6-loop nest (Eq. 17) — the Fig. 6 baseline.
+    Baseline,
+    /// HiKonv packed engine (Thm. 3) on a given multiplier.
+    HiKonv(Multiplier),
+}
+
+/// Per-layer weights (+ requantization shifts calibrated at load).
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub tensors: Vec<QTensor>,
+    /// Right-shift per layer mapping accumulator -> next activation levels.
+    pub requant_shift: Vec<u32>,
+}
+
+/// Generate deterministic synthetic weights for a model (signed `w_bits`
+/// levels). Real DAC-SDC weights are unavailable; throughput/latency depend
+/// only on shapes (DESIGN.md §2).
+pub fn random_weights(model: &ModelSpec, seed: u64) -> ModelWeights {
+    let mut rng = Rng::new(seed);
+    let mut tensors = Vec::with_capacity(model.layers.len());
+    for l in &model.layers {
+        let levels = rng.quant_signed_vec(l.w_bits, l.weight_len());
+        tensors.push(
+            QTensor::from_levels(
+                Shape(vec![l.co, l.ci, l.k, l.k]),
+                &levels,
+                l.w_bits,
+                true,
+                1.0 / 64.0,
+            )
+            .expect("in-range levels"),
+        );
+    }
+    // Requant shifts are calibrated on first inference; start conservative.
+    let requant_shift = model.layers.iter().map(|_| 0u32).collect();
+    ModelWeights {
+        tensors,
+        requant_shift,
+    }
+}
+
+/// The runner: owns prebuilt per-layer engines.
+pub struct CpuRunner {
+    model: ModelSpec,
+    weights: ModelWeights,
+    kind: EngineKind,
+    hikonv: Vec<Option<Conv2dHiKonv>>,
+}
+
+impl CpuRunner {
+    pub fn new(
+        model: ModelSpec,
+        mut weights: ModelWeights,
+        kind: EngineKind,
+    ) -> Result<CpuRunner, String> {
+        model.validate()?;
+        let mut hikonv = Vec::new();
+        if let EngineKind::HiKonv(mult) = kind {
+            for (l, w) in model.layers.iter().zip(&weights.tensors) {
+                let spec = Conv2dSpec {
+                    shape: l.padded_shape(),
+                    mult,
+                    p: l.a_bits,
+                    q: l.w_bits,
+                    signedness: Signedness::UnsignedBySigned,
+                };
+                hikonv.push(Some(Conv2dHiKonv::new(spec, &w.to_i64())?));
+            }
+        } else {
+            hikonv = model.layers.iter().map(|_| None).collect();
+        }
+        // Calibrate requant shifts with a mid-gray frame so both engines
+        // produce identical activation flows.
+        let mut runner = CpuRunner {
+            model,
+            weights: weights.clone(),
+            kind,
+            hikonv,
+        };
+        runner.calibrate();
+        weights.requant_shift = runner.weights.requant_shift.clone();
+        Ok(runner)
+    }
+
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    fn calibrate(&mut self) {
+        let (c, h, w) = self.model.input;
+        let frame = vec![8i64; c * h * w]; // mid-gray 4-bit levels
+        let mut act = frame;
+        let (mut ci, mut hi, mut wi) = self.model.input;
+        let mut shifts = Vec::with_capacity(self.model.layers.len());
+        for (idx, l) in self.model.layers.clone().iter().enumerate() {
+            let acc = self.run_layer_raw(idx, &act);
+            let maxabs = acc.iter().map(|v| v.abs()).max().unwrap_or(1).max(1);
+            // Map the observed accumulator range onto 0..(2^a_bits - 1).
+            let target = (1i64 << l.a_bits) - 1;
+            let mut shift = 0u32;
+            while (maxabs >> shift) > target {
+                shift += 1;
+            }
+            shifts.push(shift);
+            let (ho, wo) = l.conv_out();
+            act = requantize(&acc, shift, l.a_bits);
+            if l.pool_after {
+                act = maxpool2(&act, l.co, ho, wo);
+            }
+            ci = l.co;
+            let (h2, w2) = l.out();
+            hi = h2;
+            wi = w2;
+        }
+        let _ = (ci, hi, wi);
+        self.weights.requant_shift = shifts;
+    }
+
+    /// Raw accumulator output of layer `idx` on activations `act`.
+    fn run_layer_raw(&self, idx: usize, act: &[i64]) -> Vec<i64> {
+        let l = &self.model.layers[idx];
+        let padded = pad2d(act, l.ci, l.hi, l.wi, l.pad);
+        match (&self.kind, &self.hikonv[idx]) {
+            (EngineKind::Baseline, _) => {
+                conv2d_ref(&padded, &self.weights.tensors[idx].to_i64(), l.padded_shape())
+            }
+            (EngineKind::HiKonv(_), Some(eng)) => eng.conv(&padded),
+            _ => unreachable!("hikonv engine missing"),
+        }
+    }
+
+    /// Full forward pass on a quantized frame (`[c][h][w]` 4-bit levels).
+    /// Returns the head's raw accumulator map `[co][h][w]`.
+    pub fn infer(&self, frame: &[i64]) -> Vec<i64> {
+        let (c, h, w) = self.model.input;
+        assert_eq!(frame.len(), c * h * w, "frame dims mismatch");
+        let mut act = frame.to_vec();
+        for (idx, l) in self.model.layers.iter().enumerate() {
+            let acc = self.run_layer_raw(idx, &act);
+            if idx + 1 == self.model.layers.len() {
+                return acc; // raw head output
+            }
+            let (ho, wo) = l.conv_out();
+            act = requantize(&acc, self.weights.requant_shift[idx], l.a_bits);
+            if l.pool_after {
+                act = maxpool2(&act, l.co, ho, wo);
+            }
+        }
+        act
+    }
+
+    /// Detection decode: argmax cell of the head map (DAC-SDC reports a
+    /// single box; we report the peak-response grid cell).
+    pub fn decode(&self, head: &[i64]) -> (usize, usize) {
+        let (co, h, w) = self.model.output_dims();
+        let mut best = (0usize, 0usize);
+        let mut best_v = i64::MIN;
+        for y in 0..h {
+            for x in 0..w {
+                let mut v = 0i64;
+                for c in 0..co {
+                    v += head[(c * h + y) * w + x].abs();
+                }
+                if v > best_v {
+                    best_v = v;
+                    best = (y, x);
+                }
+            }
+        }
+        best
+    }
+}
+
+/// ReLU + right-shift requantization to unsigned `bits` levels.
+pub fn requantize(acc: &[i64], shift: u32, bits: u32) -> Vec<i64> {
+    let hi = (1i64 << bits) - 1;
+    acc.iter()
+        .map(|&v| (v.max(0) >> shift).min(hi))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ultranet::ultranet_tiny;
+    use crate::testing::assert_seq_eq;
+
+    #[test]
+    fn baseline_and_hikonv_agree_end_to_end() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 77);
+        let base = CpuRunner::new(model.clone(), weights.clone(), EngineKind::Baseline).unwrap();
+        let hik = CpuRunner::new(
+            model.clone(),
+            weights,
+            EngineKind::HiKonv(Multiplier::CPU32),
+        )
+        .unwrap();
+        let (c, h, w) = model.input;
+        let mut rng = Rng::new(1234);
+        for _ in 0..2 {
+            let frame = rng.quant_unsigned_vec(4, c * h * w);
+            let a = base.infer(&frame);
+            let b = hik.infer(&frame);
+            assert_seq_eq(&a, &b).unwrap();
+            assert_eq!(base.decode(&a), hik.decode(&b));
+        }
+    }
+
+    #[test]
+    fn requantize_clamps_and_relus() {
+        assert_eq!(requantize(&[-5, 0, 31, 1000], 1, 4), vec![0, 0, 15, 15]);
+        assert_eq!(requantize(&[16], 2, 4), vec![4]);
+    }
+
+    #[test]
+    fn infer_output_dims() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 7);
+        let r = CpuRunner::new(model.clone(), weights, EngineKind::Baseline).unwrap();
+        let (c, h, w) = model.input;
+        let out = r.infer(&vec![5i64; c * h * w]);
+        let (co, ho, wo) = model.output_dims();
+        assert_eq!(out.len(), co * ho * wo);
+    }
+
+    #[test]
+    fn calibration_produces_bounded_activations() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 9);
+        let r = CpuRunner::new(model, weights, EngineKind::Baseline).unwrap();
+        for &s in &r.weights.requant_shift {
+            assert!(s < 32, "shift {s} unreasonable");
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! UltraNet — the DAC-SDC 2020 champion object detector the paper evaluates
+//! (§IV-B "Complete model").
+//!
+//! Architecture per the released design (github.com/heheda365/ultra_net):
+//! a VGG-style W4A4 backbone on 160×320 drone imagery — four
+//! conv3x3+maxpool stages (16/32/64/64 channels) then four conv3x3 layers
+//! at 10×20, and a 1×1 YOLO-style head. All weights/activations 4-bit
+//! (first-layer input is the 4-bit-quantized image).
+//!
+//! Total: ~199.6M MACs/frame ≈ 399M ops, matching the ops/frame implied by
+//! the paper's Table II (0.289 Gops/DSP·360 DSP ÷ 248 fps ≈ 420M ops).
+
+use super::layer::{ConvLayer, ModelSpec};
+
+/// UltraNet input: 3×160×320.
+pub const ULTRANET_INPUT: (usize, usize, usize) = (3, 160, 320);
+
+fn conv(
+    name: &str,
+    ci: usize,
+    co: usize,
+    hi: usize,
+    wi: usize,
+    k: usize,
+    pool: bool,
+) -> ConvLayer {
+    ConvLayer {
+        name: name.to_string(),
+        ci,
+        co,
+        hi,
+        wi,
+        k,
+        pad: k / 2,
+        pool_after: pool,
+        a_bits: 4,
+        w_bits: 4,
+    }
+}
+
+/// Build the UltraNet model spec.
+pub fn ultranet() -> ModelSpec {
+    let m = ModelSpec {
+        name: "UltraNet".into(),
+        input: ULTRANET_INPUT,
+        layers: vec![
+            conv("conv1", 3, 16, 160, 320, 3, true),
+            conv("conv2", 16, 32, 80, 160, 3, true),
+            conv("conv3", 32, 64, 40, 80, 3, true),
+            conv("conv4", 64, 64, 20, 40, 3, true),
+            conv("conv5", 64, 64, 10, 20, 3, false),
+            conv("conv6", 64, 64, 10, 20, 3, false),
+            conv("conv7", 64, 64, 10, 20, 3, false),
+            conv("conv8", 64, 64, 10, 20, 3, false),
+            conv("head", 64, 36, 10, 20, 1, false),
+        ],
+    };
+    debug_assert!(m.validate().is_ok());
+    m
+}
+
+/// The final *convolutional* layer of UltraNet — the layer the paper's CPU
+/// experiment (Fig. 6b) embeds in the 6-level nested loop.
+pub fn ultranet_final_layer() -> ConvLayer {
+    ultranet().layers[7].clone() // conv8: 64->64 3x3 @ 10x20
+}
+
+/// A reduced-size UltraNet (quarter spatial resolution) for fast tests and
+/// the serving integration tests.
+pub fn ultranet_tiny() -> ModelSpec {
+    let m = ModelSpec {
+        name: "UltraNet-tiny".into(),
+        input: (3, 40, 80),
+        layers: vec![
+            conv("conv1", 3, 16, 40, 80, 3, true),
+            conv("conv2", 16, 32, 20, 40, 3, true),
+            conv("conv3", 32, 64, 10, 20, 3, true),
+            conv("conv4", 64, 64, 5, 10, 3, false),
+            conv("head", 64, 36, 5, 10, 1, false),
+        ],
+    };
+    debug_assert!(m.validate().is_ok());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ultranet_validates() {
+        ultranet().validate().unwrap();
+        ultranet_tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn ultranet_mac_count_matches_paper_scale() {
+        let macs = ultranet().total_macs();
+        // ~199.6M MACs; Table II implies ~210M (0.289*360/248 GOPS/frame /2).
+        assert!(
+            (150_000_000..260_000_000).contains(&macs),
+            "MACs = {macs} out of the paper-consistent range"
+        );
+        // Exact value pinned so architecture edits are deliberate.
+        assert_eq!(macs, 199_526_400, "macs={macs}");
+    }
+
+    #[test]
+    fn output_is_yolo_grid() {
+        let (c, h, w) = ultranet().output_dims();
+        assert_eq!((c, h, w), (36, 10, 20));
+    }
+
+    #[test]
+    fn final_layer_shape() {
+        let l = ultranet_final_layer();
+        assert_eq!((l.ci, l.co, l.k), (64, 64, 3));
+        assert_eq!((l.hi, l.wi), (10, 20));
+    }
+}

@@ -1,0 +1,86 @@
+//! Bit-exact operand packing and product segmentation (§III-A).
+//!
+//! All arithmetic is done in `u128` with two's-complement (wrapping)
+//! semantics, which exactly models a hardware multiplier of up to 128
+//! product bits (64×64). A specialized `u64` fast path lives in
+//! [`crate::conv::conv1d`] for the 32×32 CPU case the paper measures.
+//!
+//! * Unsigned packing/segmentation: Eq. 11 / Eq. 12.
+//! * Signed packing (borrow-propagating) and segmentation
+//!   (carry-correcting): Eq. 13.
+//!
+//! Invariant (property-tested): for values within the design point's
+//! bitwidths, `pack` is exactly `Σ v[i] · 2^(S·i) (mod 2^128)`, and
+//! `segment(pack(f) · pack(g))` returns the 1-D convolution `f * g`
+//! segment-exactly (Theorem 1).
+
+mod signed;
+mod unsigned;
+
+pub use signed::{pack_signed, pack_signed_recursive, segment_signed, segment_signed_into};
+pub use unsigned::{pack_unsigned, segment_unsigned, segment_unsigned_into};
+
+/// Wrapping-sum packing specification: `Σ v[i]·2^(S·i) mod 2^128`.
+///
+/// This is the *mathematical definition* both packers must agree with
+/// (for unsigned values they trivially coincide with bit assignment;
+/// for signed values Eq. 13's borrow recursion reproduces it — verified
+/// by property test `signed_pack_equals_wrapping_sum`).
+pub fn pack_spec(vals: &[i64], s: u32) -> u128 {
+    let mut acc: u128 = 0;
+    for (i, &v) in vals.iter().enumerate() {
+        let shift = s as usize * i;
+        debug_assert!(shift < 128, "packed word exceeds 128 bits");
+        acc = acc.wrapping_add((v as i128 as u128).wrapping_shl(shift as u32));
+    }
+    acc
+}
+
+/// Mask of the low `s` bits.
+#[inline]
+pub fn low_mask(s: u32) -> u128 {
+    if s >= 128 {
+        u128::MAX
+    } else {
+        (1u128 << s) - 1
+    }
+}
+
+/// Sign-extend the low `s` bits of `v` to i64.
+#[inline]
+pub fn sign_extend(v: u128, s: u32) -> i64 {
+    debug_assert!(s >= 1 && s <= 64);
+    let v = (v & low_mask(s)) as u64;
+    let shift = 64 - s;
+    ((v << shift) as i64) >> shift
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_mask_widths() {
+        assert_eq!(low_mask(1), 1);
+        assert_eq!(low_mask(4), 0xF);
+        assert_eq!(low_mask(64), u64::MAX as u128);
+        assert_eq!(low_mask(128), u128::MAX);
+    }
+
+    #[test]
+    fn sign_extend_cases() {
+        assert_eq!(sign_extend(0xF, 4), -1);
+        assert_eq!(sign_extend(0x7, 4), 7);
+        assert_eq!(sign_extend(0x8, 4), -8);
+        assert_eq!(sign_extend(0x1F0, 4), 0); // only low 4 bits considered
+        assert_eq!(sign_extend(u64::MAX as u128, 64), -1);
+    }
+
+    #[test]
+    fn pack_spec_simple() {
+        // 3 + 5*16 + 1*256 with S=4
+        assert_eq!(pack_spec(&[3, 5, 1], 4), 3 + 5 * 16 + 256);
+        // negative values wrap (two's complement)
+        assert_eq!(pack_spec(&[-1], 4), u128::MAX);
+    }
+}

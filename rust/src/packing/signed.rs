@@ -1,0 +1,170 @@
+//! Signed packing and segmentation (Eq. 13, Fig. 3).
+//!
+//! Two's-complement packing of negative values would corrupt neighbouring
+//! slices (the sign extension of slice `n` adds `-1` to every higher slice).
+//! Eq. 13 compensates during packing by subtracting the previous slice's MSB
+//! (a borrow), and during segmentation by *adding back* the bit just below
+//! each segment (a carry):
+//!
+//! ```text
+//! A[S(n+1)-1:Sn] = f[n] - A[S·n - 1]        (n > 0)
+//! y[m]           = Prod[S(m+1)-1:S·m] + Prod[S·m - 1]   (m > 0, signed)
+//! ```
+
+use super::{low_mask, pack_spec, sign_extend};
+
+/// Signed packing via the hardware-friendly Eq.-13 recursion
+/// (concatenation + per-slice borrow, exactly as an FPGA would build it
+/// with `S`-bit slices and a 1-bit decrementer).
+///
+/// Eq. 13 produces the `S·len`-bit port word; hardware sign-extends it to
+/// the multiplier width. We sign-extend to 128 bits here so the result is
+/// bit-identical to [`pack_signed`] (the wrapping-sum definition) and can
+/// be fed to the same wide multiplication.
+pub fn pack_signed_recursive(vals: &[i64], s: u32) -> u128 {
+    debug_assert!(vals.len() * s as usize <= 128, "packed word exceeds 128 bits");
+    let mask = low_mask(s);
+    let mut word: u128 = 0;
+    let mut prev_msb: i64 = 0;
+    for (i, &v) in vals.iter().enumerate() {
+        let slice = ((v - prev_msb) as i128 as u128) & mask; // S-bit two's complement
+        word |= slice << (s as usize * i);
+        prev_msb = ((slice >> (s - 1)) & 1) as i64;
+    }
+    // Sign-extend the S·len-bit port word to the full multiplier width.
+    let total = s as usize * vals.len();
+    if total > 0 && total < 128 && (word >> (total - 1)) & 1 == 1 {
+        word |= u128::MAX << total;
+    }
+    word
+}
+
+/// Signed packing via the mathematical definition `Σ v[i]·2^(S·i)`.
+/// Equal to [`pack_signed_recursive`] for in-range values (property-tested);
+/// this form is what the CPU fast path uses (adds are cheaper than the
+/// slice-wise recursion in software).
+pub fn pack_signed(vals: &[i64], s: u32) -> u128 {
+    pack_spec(vals, s)
+}
+
+/// Segment `count` signed outputs out of a product word (Eq. 13):
+/// each segment is sign-extended from `s` bits, then corrected by the
+/// carry bit just below it.
+pub fn segment_signed(prod: u128, s: u32, count: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(count);
+    let mut w = prod;
+    let mut carry: i64 = 0;
+    for _ in 0..count {
+        out.push(sign_extend(w, s) + carry);
+        carry = ((w >> (s - 1)) & 1) as i64;
+        w >>= s;
+    }
+    out
+}
+
+/// Allocation-free variant of [`segment_signed`].
+#[inline]
+pub fn segment_signed_into(prod: u128, s: u32, out: &mut [i64]) {
+    let mut w = prod;
+    let mut carry: i64 = 0;
+    for slot in out.iter_mut() {
+        *slot = sign_extend(w, s) + carry;
+        carry = ((w >> (s - 1)) & 1) as i64;
+        w >>= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_seq_eq, check, default_cases};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recursive_matches_wrapping_sum() {
+        // Worked example from Fig. 3 discussion: negative first element.
+        let vals = vec![-3, 2, -1, 0];
+        assert_eq!(pack_signed_recursive(&vals, 8), pack_signed(&vals, 8));
+    }
+
+    #[test]
+    fn pack_then_segment_roundtrips() {
+        let vals = vec![-8, 7, -1, 0, 3];
+        // A lone packed word is "Prod of f * [1]": segmentation must recover it.
+        let w = pack_signed(&vals, 9);
+        assert_seq_eq(&segment_signed(w, 9, 5), &vals).unwrap();
+    }
+
+    #[test]
+    fn signed_multiplication_is_a_convolution() {
+        // p=q=4 signed, terms=2 -> S >= 9; use S=10.
+        let f = vec![-2, 3];
+        let g = vec![2, 1];
+        let a = pack_signed(&f, 10);
+        let b = pack_signed(&g, 10);
+        let y = segment_signed(a.wrapping_mul(b), 10, 3);
+        assert_seq_eq(&y, &[-4, -2 + 6, 3]).unwrap();
+    }
+
+    #[test]
+    fn property_recursion_equals_spec() {
+        check(
+            "signed pack Eq.13 == wrapping sum",
+            0x22,
+            default_cases(),
+            |rng: &mut Rng, size| {
+                let s = 6 + rng.below(10) as u32;
+                let n = 1 + rng.below((128 / s as u64).min(size as u64 + 1)) as usize;
+                let bits = 1 + rng.below((s - 2).min(8) as u64) as u32;
+                (s, rng.quant_signed_vec(bits, n))
+            },
+            |(s, vals)| {
+                if pack_signed_recursive(vals, *s) == pack_signed(vals, *s) {
+                    Ok(())
+                } else {
+                    Err("recursive != spec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        check(
+            "signed pack/segment roundtrip",
+            0x33,
+            default_cases(),
+            |rng: &mut Rng, size| {
+                let s = 6 + rng.below(10) as u32;
+                let n = 1 + rng.below((128 / s as u64).min(size as u64 + 1)) as usize;
+                // Keep payload 2 bits under S so the lone word is in segment range.
+                let bits = 1 + rng.below((s - 2).min(8) as u64) as u32;
+                (s, rng.quant_signed_vec(bits, n))
+            },
+            |(s, vals)| {
+                let w = pack_signed(vals, *s);
+                assert_seq_eq(&segment_signed(w, *s, vals.len()), vals)
+            },
+        );
+    }
+
+    #[test]
+    fn segment_into_matches_alloc() {
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let vals = rng.quant_signed_vec(4, 5);
+            let w = pack_signed(&vals, 11);
+            let alloc = segment_signed(w, 11, 5);
+            let mut buf = [0i64; 5];
+            segment_signed_into(w, 11, &mut buf);
+            assert_eq!(alloc.as_slice(), &buf);
+        }
+    }
+
+    #[test]
+    fn all_negative_extreme() {
+        let vals = vec![-8i64; 10];
+        let w = pack_signed(&vals, 10);
+        assert_seq_eq(&segment_signed(w, 10, 10), &vals).unwrap();
+    }
+}

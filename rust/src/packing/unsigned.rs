@@ -1,0 +1,110 @@
+//! Unsigned packing (Eq. 11) and segmentation (Eq. 12).
+
+use super::{low_mask, pack_spec};
+
+/// Pack unsigned quantized values into slices of width `s` (Eq. 11):
+/// `A[S(n+1)-1 : S·n] = f[n]`.
+///
+/// Every value must satisfy `0 <= v < 2^s` (the solver guarantees
+/// `2^p - 1` payloads plus guard bits fit).
+pub fn pack_unsigned(vals: &[i64], s: u32) -> u128 {
+    debug_assert!(vals.len() * s as usize <= 128, "packed word exceeds 128 bits");
+    let mut word: u128 = 0;
+    for (i, &v) in vals.iter().enumerate() {
+        debug_assert!(
+            v >= 0 && (v as u128) <= low_mask(s),
+            "value {v} out of unsigned slice range (S={s})"
+        );
+        word |= (v as u128) << (s as usize * i);
+    }
+    debug_assert_eq!(word, pack_spec(vals, s), "Eq.11 must equal the wrapping sum");
+    word
+}
+
+/// Segment `count` unsigned outputs out of a product word (Eq. 12):
+/// `y[m] = Prod[S(m+1)-1 : S·m]`.
+pub fn segment_unsigned(prod: u128, s: u32, count: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(count);
+    let mask = low_mask(s);
+    let mut w = prod;
+    for _ in 0..count {
+        out.push((w & mask) as i64);
+        w >>= s;
+    }
+    out
+}
+
+/// Write segments into an existing buffer (allocation-free hot path).
+#[inline]
+pub fn segment_unsigned_into(prod: u128, s: u32, out: &mut [i64]) {
+    let mask = low_mask(s);
+    let mut w = prod;
+    for slot in out.iter_mut() {
+        *slot = (w & mask) as i64;
+        w >>= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_seq_eq, check, default_cases};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_then_segment_roundtrips() {
+        let vals = vec![3, 0, 15, 7, 1];
+        let w = pack_unsigned(&vals, 9);
+        assert_seq_eq(&segment_unsigned(w, 9, 5), &vals).unwrap();
+    }
+
+    #[test]
+    fn single_multiplication_is_a_convolution() {
+        // The worked DSP example: p=q=4 unsigned, S=9, N=3, K=2.
+        let f = vec![12, 5, 9];
+        let g = vec![3, 14];
+        let a = pack_unsigned(&f, 9);
+        let b = pack_unsigned(&g, 9);
+        let y = segment_unsigned(a.wrapping_mul(b), 9, 4);
+        // y = f * g: [36, 12*14+5*3, 5*14+9*3, 9*14]
+        assert_seq_eq(&y, &[36, 183, 97, 126]).unwrap();
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        check(
+            "unsigned pack/segment roundtrip",
+            0x11,
+            default_cases(),
+            |rng: &mut Rng, size| {
+                let s = 4 + rng.below(12) as u32; // S in [4, 16)
+                let n = 1 + rng.below((128 / s as u64).min(size as u64 + 1)) as usize;
+                let bits = 1 + rng.below(s.min(8) as u64) as u32;
+                (s, rng.quant_unsigned_vec(bits, n))
+            },
+            |(s, vals)| {
+                let w = pack_unsigned(vals, *s);
+                assert_seq_eq(&segment_unsigned(w, *s, vals.len()), vals)
+            },
+        );
+    }
+
+    #[test]
+    fn segment_into_matches_alloc() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let vals = rng.quant_unsigned_vec(4, 6);
+            let w = pack_unsigned(&vals, 10);
+            let alloc = segment_unsigned(w, 10, 6);
+            let mut buf = [0i64; 6];
+            segment_unsigned_into(w, 10, &mut buf);
+            assert_eq!(alloc.as_slice(), &buf);
+        }
+    }
+
+    #[test]
+    fn empty_pack_is_zero() {
+        assert_eq!(pack_unsigned(&[], 8), 0);
+        assert!(segment_unsigned(0, 8, 0).is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Quantized tensors and quantizers (W4A4 UltraNet-style).
+//!
+//! Values are stored as `i8` with an associated bitwidth and signedness;
+//! a float scale maps levels back to real values. Only what quantized
+//! inference needs — training-time quantizer design is out of scope
+//! (the paper takes quantized models as given).
+
+pub mod tensor;
+
+pub use tensor::{QTensor, Quantizer, Shape};

@@ -1,0 +1,209 @@
+//! Quantized tensor storage and uniform quantizers.
+
+/// Tensor shape (row-major, up to 4 dims: `[n][c][h][w]` conventions).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+/// A quantized integer tensor: `bits`-bit levels stored in `i8`, with a
+/// uniform scale (`real ≈ level · scale`).
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub shape: Shape,
+    pub data: Vec<i8>,
+    pub bits: u32,
+    pub signed: bool,
+    pub scale: f32,
+}
+
+impl QTensor {
+    pub fn zeros(shape: Shape, bits: u32, signed: bool) -> QTensor {
+        assert!((1..=8).contains(&bits));
+        let n = shape.numel();
+        QTensor {
+            shape,
+            data: vec![0; n],
+            bits,
+            signed,
+            scale: 1.0,
+        }
+    }
+
+    /// Valid level range for this tensor's (bits, signed).
+    pub fn level_range(&self) -> (i64, i64) {
+        level_range(self.bits, self.signed)
+    }
+
+    /// Widen levels into an i64 working buffer (what the conv engines eat).
+    pub fn to_i64(&self) -> Vec<i64> {
+        self.data.iter().map(|&v| v as i64).collect()
+    }
+
+    /// Build from raw levels, checking range.
+    pub fn from_levels(
+        shape: Shape,
+        levels: &[i64],
+        bits: u32,
+        signed: bool,
+        scale: f32,
+    ) -> Result<QTensor, String> {
+        if shape.numel() != levels.len() {
+            return Err(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape.dims(),
+                shape.numel(),
+                levels.len()
+            ));
+        }
+        let (lo, hi) = level_range(bits, signed);
+        let mut data = Vec::with_capacity(levels.len());
+        for &v in levels {
+            if v < lo || v > hi {
+                return Err(format!("level {v} outside [{lo}, {hi}] for {bits}-bit"));
+            }
+            data.push(v as i8);
+        }
+        Ok(QTensor {
+            shape,
+            data,
+            bits,
+            signed,
+            scale,
+        })
+    }
+
+    /// Dequantize to f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32 * self.scale).collect()
+    }
+}
+
+fn level_range(bits: u32, signed: bool) -> (i64, i64) {
+    if signed {
+        (-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+    } else {
+        (0, (1 << bits) - 1)
+    }
+}
+
+/// Uniform symmetric/affine quantizer: floats -> levels.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub signed: bool,
+    pub scale: f32,
+}
+
+impl Quantizer {
+    /// Choose a scale covering `[-absmax, absmax]` (signed) or
+    /// `[0, absmax]` (unsigned).
+    pub fn fit(values: &[f32], bits: u32, signed: bool) -> Quantizer {
+        let absmax = values
+            .iter()
+            .fold(0f32, |m, &v| m.max(if signed { v.abs() } else { v.max(0.0) }));
+        let (_, hi) = level_range(bits, signed);
+        let scale = if absmax == 0.0 { 1.0 } else { absmax / hi as f32 };
+        Quantizer {
+            bits,
+            signed,
+            scale,
+        }
+    }
+
+    /// Quantize one value to its level (round-to-nearest, clamped).
+    pub fn level(&self, v: f32) -> i64 {
+        let (lo, hi) = level_range(self.bits, self.signed);
+        let l = (v / self.scale).round() as i64;
+        l.clamp(lo, hi)
+    }
+
+    /// Quantize a slice into a tensor.
+    pub fn quantize(&self, values: &[f32], shape: Shape) -> QTensor {
+        assert_eq!(values.len(), shape.numel());
+        let data = values.iter().map(|&v| self.level(v) as i8).collect();
+        QTensor {
+            shape,
+            data,
+            bits: self.bits,
+            signed: self.signed,
+            scale: self.scale,
+        }
+    }
+}
+
+/// Quantize a `u8` image channel-plane (0..=255) to unsigned `bits` levels —
+/// the coordinator's preprocessing stage.
+pub fn quantize_u8_image(pixels: &[u8], bits: u32) -> Vec<i64> {
+    let shift = 8 - bits;
+    pixels.iter().map(|&p| (p >> shift) as i64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ranges() {
+        assert_eq!(level_range(4, true), (-8, 7));
+        assert_eq!(level_range(4, false), (0, 15));
+        assert_eq!(level_range(1, false), (0, 1));
+        assert_eq!(level_range(8, true), (-128, 127));
+    }
+
+    #[test]
+    fn from_levels_validates_range() {
+        let s = Shape(vec![2, 2]);
+        assert!(QTensor::from_levels(s.clone(), &[0, 15, 7, 3], 4, false, 1.0).is_ok());
+        assert!(QTensor::from_levels(s.clone(), &[0, 16, 7, 3], 4, false, 1.0).is_err());
+        assert!(QTensor::from_levels(s, &[0, 1], 4, false, 1.0).is_err());
+    }
+
+    #[test]
+    fn quantizer_roundtrip_error_bounded() {
+        let vals: Vec<f32> = (-20..=20).map(|i| i as f32 / 3.0).collect();
+        let q = Quantizer::fit(&vals, 4, true);
+        for &v in &vals {
+            let rec = q.level(v) as f32 * q.scale;
+            assert!((rec - v).abs() <= q.scale / 2.0 + 1e-6, "v={v} rec={rec}");
+        }
+    }
+
+    #[test]
+    fn quantizer_clamps() {
+        let q = Quantizer {
+            bits: 4,
+            signed: true,
+            scale: 1.0,
+        };
+        assert_eq!(q.level(100.0), 7);
+        assert_eq!(q.level(-100.0), -8);
+    }
+
+    #[test]
+    fn unsigned_fit_ignores_negatives() {
+        let q = Quantizer::fit(&[-5.0, 3.0], 4, false);
+        assert_eq!(q.level(3.0), 15);
+        assert_eq!(q.level(-1.0), 0);
+    }
+
+    #[test]
+    fn image_quantization() {
+        let img = [0u8, 128, 255];
+        assert_eq!(quantize_u8_image(&img, 4), vec![0, 8, 15]);
+        assert_eq!(quantize_u8_image(&img, 1), vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn dequantize_applies_scale() {
+        let t = QTensor::from_levels(Shape(vec![2]), &[2, -2], 4, true, 0.5).unwrap();
+        assert_eq!(t.dequantize(), vec![1.0, -1.0]);
+    }
+}

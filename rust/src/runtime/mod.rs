@@ -1,0 +1,177 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by the
+//! Python compile path (`python/compile/aot.py`) and executes them from
+//! the Rust request path.
+//!
+//! Interchange format is **HLO text** — jax ≥ 0.5 serialized protos carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Python never runs at serving time: `make artifacts` is a build step.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Standard artifact names emitted by `python/compile/aot.py`.
+pub mod artifacts {
+    /// UltraNet-tiny forward pass (the serving integration model).
+    pub const ULTRANET_TINY: &str = "ultranet_tiny.hlo.txt";
+    /// Full UltraNet forward pass.
+    pub const ULTRANET: &str = "ultranet.hlo.txt";
+    /// Packed HiKonv 1-D convolution kernel (fixed shapes).
+    pub const HIKONV_CONV1D: &str = "hikonv_conv1d.hlo.txt";
+    /// Reference (unpacked) 1-D convolution for cross-checking.
+    pub const REF_CONV1D: &str = "ref_conv1d.hlo.txt";
+}
+
+/// Locate the artifacts directory: `$HIKONV_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("HIKONV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A PJRT CPU runtime holding compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled model.
+pub struct LoadedModel {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        Ok(LoadedModel {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+
+    /// Load a named artifact from the artifacts directory.
+    pub fn load_artifact(&self, name: &str) -> Result<LoadedModel> {
+        let path = artifacts_dir().join(name);
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            ));
+        }
+        self.load_hlo_text(&path)
+    }
+}
+
+impl LoadedModel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 inputs; returns all tuple outputs flattened to f32
+    /// vectors (jax lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result: {e}"))?;
+        parts
+            .into_iter()
+            .map(|l| {
+                // Convert whatever element type came back into f32.
+                let l = l
+                    .convert(xla::PrimitiveType::F32)
+                    .map_err(|e| anyhow!("convert: {e}"))?;
+                l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+            })
+            .collect()
+    }
+
+    /// Execute with i32 inputs (quantized levels); outputs converted to i32.
+    pub fn run_i32(&self, inputs: &[(Vec<i32>, Vec<i64>)]) -> Result<Vec<Vec<i32>>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        parts
+            .into_iter()
+            .map(|l| {
+                let l = l
+                    .convert(xla::PrimitiveType::S32)
+                    .map_err(|e| anyhow!("convert: {e}"))?;
+                l.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-heavy tests live in rust/tests/runtime_pjrt.rs (they need the
+    // artifacts built). Here: pure-path logic only.
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("HIKONV_ARTIFACTS", "/tmp/hikonv-artifacts-test");
+        assert_eq!(
+            artifacts_dir(),
+            PathBuf::from("/tmp/hikonv-artifacts-test")
+        );
+        std::env::remove_var("HIKONV_ARTIFACTS");
+        assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn artifact_names_are_stable() {
+        assert_eq!(artifacts::ULTRANET, "ultranet.hlo.txt");
+        assert_eq!(artifacts::HIKONV_CONV1D, "hikonv_conv1d.hlo.txt");
+    }
+}

@@ -1,0 +1,115 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! Seeded generators + failure shrinking for the invariants the paper's
+//! theorems assert: packing/segmentation round-trips, multiply-equals-conv,
+//! guard-bit sufficiency, solver bound tightness.
+
+use crate::util::rng::Rng;
+
+/// Number of cases each property runs (override with HIKONV_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("HIKONV_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `prop` against `cases` random inputs produced by `gen`.
+///
+/// On failure, attempts a simple size-based shrink: the generator is re-run
+/// with progressively smaller "size" hints and the smallest failing case is
+/// reported in the panic message.
+pub fn check<T: std::fmt::Debug + Clone>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        // Ramp the size hint so early cases are small (cheap shrink proxy).
+        let size = 1 + case * 64 / cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink attempt: retry small sizes with fresh randomness to find
+            // a more minimal counterexample for the report.
+            let mut minimal = (format!("{input:?}"), msg.clone());
+            let mut shrink_rng = Rng::new(seed ^ 0xDEAD_BEEF);
+            for s in 1..=8usize {
+                for _ in 0..64 {
+                    let candidate = gen(&mut shrink_rng, s);
+                    if let Err(m) = prop(&candidate) {
+                        minimal = (format!("{candidate:?}"), m);
+                        break;
+                    }
+                }
+                if minimal.0.len() < format!("{input:?}").len() {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case}/{cases}\n  counterexample: {}\n  reason: {}",
+                minimal.0, minimal.1
+            );
+        }
+    }
+}
+
+/// Assert two i64 slices are equal with a useful diff message.
+pub fn assert_seq_eq(a: &[i64], b: &[i64]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x != y {
+            return Err(format!(
+                "index {i}: {x} != {y} (context a[{lo}..{hi}]={:?}, b[{lo}..{hi}]={:?})",
+                &a[i.saturating_sub(2)..(i + 3).min(a.len())],
+                &b[i.saturating_sub(2)..(i + 3).min(b.len())],
+                lo = i.saturating_sub(2),
+                hi = (i + 3).min(a.len()),
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "reverse-involution",
+            1,
+            64,
+            |rng, size| rng.quant_signed_vec(8, size),
+            |v| {
+                let mut r = v.clone();
+                r.reverse();
+                r.reverse();
+                assert_seq_eq(v, &r)
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check(
+            "always-fails",
+            2,
+            8,
+            |rng, size| rng.quant_signed_vec(4, size.max(1)),
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn seq_eq_reports_index() {
+        let e = assert_seq_eq(&[1, 2, 3], &[1, 9, 3]).unwrap_err();
+        assert!(e.contains("index 1"), "{e}");
+    }
+}

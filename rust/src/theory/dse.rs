@@ -1,0 +1,119 @@
+//! Design-space exploration over quantization bitwidths (§III-C's
+//! "different optimal design points in choosing the quantization bitwidth
+//! for a given arithmetic processing unit").
+
+use super::solver::{solve, AccumMode, DesignPoint, Signedness};
+use super::Multiplier;
+
+/// One explored point: a bitwidth choice and its achievable throughput.
+#[derive(Clone, Copy, Debug)]
+pub struct DsePoint {
+    pub dp: DesignPoint,
+    /// ops/cycle on this multiplier.
+    pub ops: u64,
+    /// ops/cycle normalized by the precision carried (ops × p × q): a proxy
+    /// for "useful information throughput" that penalizes over-quantizing.
+    pub info_throughput: u64,
+}
+
+/// Explore all (p, q) in `[1, max_bits]²` for one multiplier.
+pub fn explore(
+    mult: Multiplier,
+    max_bits: u32,
+    signedness: Signedness,
+    accum: AccumMode,
+) -> Vec<DsePoint> {
+    let mut out = Vec::new();
+    for p in 1..=max_bits {
+        for q in 1..=max_bits {
+            if let Ok(dp) = solve(mult, p, q, signedness, accum) {
+                let ops = dp.ops_per_mult();
+                out.push(DsePoint {
+                    dp,
+                    ops,
+                    info_throughput: ops * p as u64 * q as u64,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Pareto frontier over (precision = p·q, ops): points where no other point
+/// has both >= precision and > ops. These are the "optimal design points"
+/// a model/hardware co-design would choose from.
+pub fn pareto_points(points: &[DsePoint]) -> Vec<DsePoint> {
+    let mut frontier: Vec<DsePoint> = Vec::new();
+    for &cand in points {
+        let cprec = cand.dp.p as u64 * cand.dp.q as u64;
+        let dominated = points.iter().any(|o| {
+            let oprec = o.dp.p as u64 * o.dp.q as u64;
+            (oprec > cprec && o.ops >= cand.ops) || (oprec >= cprec && o.ops > cand.ops)
+        });
+        if !dominated {
+            frontier.push(cand);
+        }
+    }
+    frontier.sort_by_key(|d| (d.dp.p, d.dp.q));
+    frontier.dedup_by_key(|d| (d.dp.p, d.dp.q));
+    frontier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explore_covers_grid() {
+        let pts = explore(
+            Multiplier::CPU32,
+            8,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        );
+        assert_eq!(pts.len(), 64);
+    }
+
+    #[test]
+    fn pareto_nonempty_and_undominated() {
+        let pts = explore(
+            Multiplier::DSP48E2,
+            8,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        );
+        let front = pareto_points(&pts);
+        assert!(!front.is_empty());
+        for f in &front {
+            let fprec = f.dp.p as u64 * f.dp.q as u64;
+            for o in &pts {
+                let oprec = o.dp.p as u64 * o.dp.q as u64;
+                assert!(
+                    !(oprec > fprec && o.ops > f.ops),
+                    "{f:?} dominated by {o:?}"
+                );
+            }
+        }
+        // 8x8 (full precision within byte) is always on the frontier.
+        assert!(front.iter().any(|f| f.dp.p == 8 && f.dp.q == 8));
+    }
+
+    #[test]
+    fn info_throughput_peaks_mid_range() {
+        // With a 64-bit multiplier, some multi-bit point must beat binary on
+        // information throughput (ops × p × q).
+        let pts = explore(
+            Multiplier::CPU64,
+            8,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        );
+        let binary = pts
+            .iter()
+            .find(|d| d.dp.p == 1 && d.dp.q == 1)
+            .unwrap()
+            .info_throughput;
+        let best = pts.iter().map(|d| d.info_throughput).max().unwrap();
+        assert!(best > binary);
+    }
+}

@@ -1,0 +1,72 @@
+//! Design-point theory: slice sizing, guard bits, throughput bounds (§III).
+//!
+//! Given a multiplier of `Bit_A × Bit_B` and operand sequences quantized to
+//! `p` and `q` bits, HiKonv packs `N` operands into `A` and `K` into `B`
+//! with slice width `S` (Eq. 6) subject to
+//!
+//! ```text
+//! p + (N-1)·S <= Bit_A        (Eq. 7)
+//! q + (K-1)·S <= Bit_B        (Eq. 8)
+//! ```
+//!
+//! and guard bits `G_b` sized to the deepest per-segment accumulation
+//! (`ceil(log2(M · min(K,N)))` for a single block, §III-A; `ceil(log2 K)`
+//! under the Thm.-2 extension; `ceil(log2(M·min(K,N)))` for `M`-channel
+//! accumulation, §III-B). The solver below computes the guard requirement
+//! from *exact* worst-case magnitudes rather than the log approximation, so
+//! overflow-freedom is provable and property-tested.
+
+mod solver;
+mod throughput;
+mod dse;
+
+pub use dse::{explore, pareto_points, DsePoint};
+pub use solver::{solve, solve_all, solve_for_lane, AccumMode, DesignPoint, Signedness, SolveError};
+pub use throughput::{paper_figure5_claims, surface, PaperClaim, Surface};
+
+/// A hardware multiplier description.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Multiplier {
+    /// Width in bits of input port A (the wider port on a DSP48E2: 27).
+    pub bit_a: u32,
+    /// Width in bits of input port B (18 on a DSP48E2).
+    pub bit_b: u32,
+}
+
+impl Multiplier {
+    pub const fn new(bit_a: u32, bit_b: u32) -> Multiplier {
+        Multiplier { bit_a, bit_b }
+    }
+
+    /// Xilinx DSP48E2 multiplier: 27 × 18 (signed).
+    pub const DSP48E2: Multiplier = Multiplier::new(27, 18);
+
+    /// DSP48E2 capacity for *unsigned* payloads: the ports are signed, so
+    /// unsigned packings must leave the MSB clear (the INT4 white-paper
+    /// practice). Use this when executing unsigned packings on the
+    /// [`crate::dsp::Dsp48e2`] functional model.
+    pub const DSP48E2_UNSIGNED: Multiplier = Multiplier::new(26, 17);
+
+    /// A 32-bit CPU ALU multiplier (32 × 32 -> 64).
+    pub const CPU32: Multiplier = Multiplier::new(32, 32);
+
+    /// A 64-bit CPU ALU multiplier (64 × 64 -> 128).
+    pub const CPU64: Multiplier = Multiplier::new(64, 64);
+
+    /// Product register width.
+    pub fn prod_bits(&self) -> u32 {
+        self.bit_a + self.bit_b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplier_constants() {
+        assert_eq!(Multiplier::DSP48E2.prod_bits(), 45);
+        assert_eq!(Multiplier::CPU32.prod_bits(), 64);
+        assert_eq!(Multiplier::CPU64.prod_bits(), 128);
+    }
+}

@@ -1,0 +1,483 @@
+//! The HiKonv design-point solver (Theorem 1 + guard-bit sizing).
+//!
+//! For every feasible slice width `S` it derives `N` and `K` from Eqs. 7–8,
+//! checks that `S` holds the exact worst-case per-segment accumulation, and
+//! returns the throughput-maximal self-consistent point.
+//!
+//! The paper sizes guard bits with `G_b = ceil(log2(M·min(K,N)))` (and the
+//! Eq.-6 special cases for binary operands); we compute the requirement from
+//! exact worst-case magnitudes, which coincides with the paper's formula for
+//! every design point the paper actually evaluates (see DESIGN.md §3 for the
+//! two Figure-5 binary points where the paper's stated `N` violates Eq. 7).
+
+use super::Multiplier;
+use crate::util::bits_for;
+
+/// Operand signedness for the two sequences (feature `f`, kernel `g`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signedness {
+    /// Both sequences unsigned: `f in [0, 2^p)`, `g in [0, 2^q)`.
+    Unsigned,
+    /// Both sequences signed two's-complement: `f in [-2^(p-1), 2^(p-1))`.
+    Signed,
+    /// Unsigned features, signed kernels (the common W-signed/A-unsigned DNN case).
+    UnsignedBySigned,
+}
+
+/// How deeply segments are accumulated, which sets the guard-bit requirement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccumMode {
+    /// One `F_{N,K}` block only: each segment sums at most `min(N,K)` products.
+    Single,
+    /// Thm.-2 overlap-add over a long sequence (and/or `m`-deep channel
+    /// accumulation, §III-B): each segment sums up to `m·K` products.
+    Extended { m: u64 },
+}
+
+impl AccumMode {
+    /// Worst-case number of products accumulated into a single segment.
+    pub fn terms(&self, n: usize, k: usize) -> u64 {
+        match *self {
+            AccumMode::Single => n.min(k) as u64,
+            AccumMode::Extended { m } => {
+                assert!(m >= 1, "channel accumulation depth must be >= 1");
+                m * k as u64
+            }
+        }
+    }
+}
+
+/// A fully-resolved HiKonv design point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DesignPoint {
+    pub mult: Multiplier,
+    /// Feature bitwidth `p` and kernel bitwidth `q`.
+    pub p: u32,
+    pub q: u32,
+    pub signedness: Signedness,
+    pub accum: AccumMode,
+    /// Slice width in bits (Eq. 6 incl. guard bits).
+    pub s: u32,
+    /// Operands of `f` packed into A (Eq. 7).
+    pub n: usize,
+    /// Operands of `g` packed into B (Eq. 8).
+    pub k: usize,
+    /// Guard bits `G_b = S - (effective operand bits)` per Eq. 6.
+    pub gb: u32,
+}
+
+impl DesignPoint {
+    /// Equivalent conventional ops per multiplication:
+    /// `N·K` multiplications + `(N-1)(K-1)` additions (§III-C).
+    pub fn ops_per_mult(&self) -> u64 {
+        let (n, k) = (self.n as u64, self.k as u64);
+        n * k + (n - 1) * (k - 1)
+    }
+
+    /// Multiplications (MACs) per wide multiplication.
+    pub fn macs_per_mult(&self) -> u64 {
+        self.n as u64 * self.k as u64
+    }
+
+    /// Number of output segments `N + K - 1` (Thm. 1).
+    pub fn segments(&self) -> usize {
+        self.n + self.k - 1
+    }
+
+    /// Fraction of the A port actually carrying payload+guard.
+    pub fn util_a(&self) -> f64 {
+        (self.p + (self.n as u32 - 1) * self.s) as f64 / self.mult.bit_a as f64
+    }
+
+    /// Fraction of the B port actually carrying payload+guard.
+    pub fn util_b(&self) -> f64 {
+        (self.q + (self.k as u32 - 1) * self.s) as f64 / self.mult.bit_b as f64
+    }
+
+    /// Exact worst-case magnitude bounds of a single product `f[n]·g[k]`.
+    fn product_bounds(p: u32, q: u32, signedness: Signedness) -> (i128, i128) {
+        match signedness {
+            Signedness::Unsigned => {
+                let fmax = (1i128 << p) - 1;
+                let gmax = (1i128 << q) - 1;
+                (0, fmax * gmax)
+            }
+            Signedness::Signed => {
+                let fneg = -(1i128 << (p - 1));
+                let fpos = (1i128 << (p - 1)) - 1;
+                let gneg = -(1i128 << (q - 1));
+                let gpos = (1i128 << (q - 1)) - 1;
+                // min product: most-negative × most-positive
+                let min = (fneg * gpos).min(fpos * gneg);
+                let max = (fneg * gneg).max(fpos * gpos);
+                (min, max)
+            }
+            Signedness::UnsignedBySigned => {
+                let fmax = (1i128 << p) - 1;
+                let gneg = -(1i128 << (q - 1));
+                let gpos = (1i128 << (q - 1)) - 1;
+                (fmax * gneg, fmax * gpos)
+            }
+        }
+    }
+
+    /// Minimal slice width able to hold `terms` accumulated products.
+    pub fn required_slice_bits(
+        p: u32,
+        q: u32,
+        signedness: Signedness,
+        terms: u64,
+    ) -> u32 {
+        let (pmin, pmax) = Self::product_bounds(p, q, signedness);
+        let smin = pmin * terms as i128;
+        let smax = pmax * terms as i128;
+        if smin == 0 {
+            // Unsigned segment: need S with 2^S - 1 >= smax.
+            bits_for(smax as u128)
+        } else {
+            // Signed segment: need 2^(S-1) > smax and 2^(S-1) >= -smin.
+            let mag = smax.max(-smin) as u128;
+            bits_for(mag) + 1
+        }
+    }
+
+    /// Validate all paper constraints hold for this point (used by tests).
+    pub fn validate(&self) -> Result<(), String> {
+        let s = self.s;
+        if self.p + (self.n as u32 - 1) * s > self.mult.bit_a {
+            return Err(format!("Eq.7 violated: p + (N-1)S > Bit_A for {self:?}"));
+        }
+        if self.q + (self.k as u32 - 1) * s > self.mult.bit_b {
+            return Err(format!("Eq.8 violated: q + (K-1)S > Bit_B for {self:?}"));
+        }
+        let req = Self::required_slice_bits(
+            self.p,
+            self.q,
+            self.signedness,
+            self.accum.terms(self.n, self.k),
+        );
+        if s < req {
+            return Err(format!("guard bits insufficient: S={s} < required {req}"));
+        }
+        Ok(())
+    }
+}
+
+/// Errors from the solver.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SolveError {
+    /// Operand wider than a port: no packing exists.
+    OperandTooWide { p: u32, q: u32, bit_a: u32, bit_b: u32 },
+    /// No slice width satisfies the guard-bit requirement.
+    Infeasible,
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::OperandTooWide { p, q, bit_a, bit_b } => write!(
+                f,
+                "operands ({p}-bit, {q}-bit) do not fit multiplier {bit_a}x{bit_b}"
+            ),
+            SolveError::Infeasible => write!(f, "no feasible slice width"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// Enumerate every self-consistent design point (one per feasible `S`).
+pub fn solve_all(
+    mult: Multiplier,
+    p: u32,
+    q: u32,
+    signedness: Signedness,
+    accum: AccumMode,
+) -> Result<Vec<DesignPoint>, SolveError> {
+    assert!((1..=16).contains(&p) && (1..=16).contains(&q), "p,q in 1..=16");
+    if p > mult.bit_a || q > mult.bit_b {
+        return Err(SolveError::OperandTooWide {
+            p,
+            q,
+            bit_a: mult.bit_a,
+            bit_b: mult.bit_b,
+        });
+    }
+    let mut points = Vec::new();
+    // S can never usefully exceed what a single-operand-per-port needs.
+    for s in 1..=mult.prod_bits() {
+        let n = ((mult.bit_a - p) / s + 1) as usize;
+        let k = ((mult.bit_b - q) / s + 1) as usize;
+        let req = DesignPoint::required_slice_bits(p, q, signedness, accum.terms(n, k));
+        if s < req {
+            continue;
+        }
+        // `gb` per Eq. 6 conventions: S = p + q + Gb in the general case,
+        // S = q + Gb when p == 1, S = p + Gb when q == 1.
+        let base = if p == 1 {
+            q
+        } else if q == 1 {
+            p
+        } else {
+            p + q
+        };
+        let gb = s.saturating_sub(base);
+        let dp = DesignPoint {
+            mult,
+            p,
+            q,
+            signedness,
+            accum,
+            s,
+            n,
+            k,
+            gb,
+        };
+        debug_assert!(dp.validate().is_ok(), "{:?}", dp.validate());
+        points.push(dp);
+        if n == 1 && k == 1 {
+            break; // larger S only degrades further
+        }
+    }
+    if points.is_empty() {
+        return Err(SolveError::Infeasible);
+    }
+    Ok(points)
+}
+
+/// Solve for the throughput-maximal design point.
+///
+/// Ties on `ops_per_mult` are broken toward the smaller `S` (denser packing,
+/// fewer wasted bits) and then larger `N` (fewer wide multiplications per
+/// output for long inputs).
+pub fn solve(
+    mult: Multiplier,
+    p: u32,
+    q: u32,
+    signedness: Signedness,
+    accum: AccumMode,
+) -> Result<DesignPoint, SolveError> {
+    let all = solve_all(mult, p, q, signedness, accum)?;
+    Ok(all
+        .into_iter()
+        .max_by(|a, b| {
+            a.ops_per_mult()
+                .cmp(&b.ops_per_mult())
+                .then(b.s.cmp(&a.s)) // prefer the smaller slice (denser packing)
+                .then(a.n.cmp(&b.n))
+        })
+        .expect("non-empty"))
+}
+
+/// Like [`solve`], but constrained so the packed product (all
+/// `S·(N+K-1)` bits plus a sign bit) fits a software lane of `lane_bits`
+/// (e.g. 64 for the i64 fast path, matching the int64 lanes the L1 Pallas
+/// kernel uses). Among lane-feasible points, picks the throughput maximum.
+pub fn solve_for_lane(
+    mult: Multiplier,
+    p: u32,
+    q: u32,
+    signedness: Signedness,
+    accum: AccumMode,
+    lane_bits: u32,
+) -> Result<DesignPoint, SolveError> {
+    let all = solve_all(mult, p, q, signedness, accum)?;
+    all.into_iter()
+        .filter(|dp| dp.s * dp.segments() as u32 + 1 <= lane_bits)
+        .max_by(|a, b| {
+            a.ops_per_mult()
+                .cmp(&b.ops_per_mult())
+                .then(b.s.cmp(&a.s))
+                .then(a.n.cmp(&b.n))
+        })
+        .ok_or(SolveError::Infeasible)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's CPU design point (§IV-A): 32×32 multiplier, p=q=4
+    /// unsigned, extended 1-D conv => N=3, K=3, G_b=2, S=10.
+    #[test]
+    fn paper_cpu_point_32x32_4bit() {
+        let dp = solve(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Extended { m: 1 },
+        )
+        .unwrap();
+        assert_eq!(dp.s, 10, "{dp:?}");
+        assert_eq!(dp.n, 3);
+        assert_eq!(dp.k, 3);
+        assert_eq!(dp.gb, 2);
+        assert_eq!(dp.ops_per_mult(), 13); // paper Fig. 5b @ 4-bit
+    }
+
+    /// The paper's DSP48E2 4-bit point (§III-C): S=9, N=3, K=2, 8 ops/cycle.
+    #[test]
+    fn paper_dsp_point_27x18_4bit() {
+        let dp = solve(
+            Multiplier::DSP48E2,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        assert_eq!(dp.s, 9, "{dp:?}");
+        assert_eq!(dp.n, 3);
+        assert_eq!(dp.k, 2);
+        assert_eq!(dp.gb, 1);
+        assert_eq!(dp.ops_per_mult(), 8); // "eight convolution operations"
+        assert_eq!(dp.macs_per_mult(), 6);
+    }
+
+    /// Strict-solver binary points (see DESIGN.md §3: the paper's stated
+    /// N=9/K=4 (60 ops) and N=9/K=8 (128 ops) violate Eq. 7; the strict
+    /// optimum under the paper's own constraints is below).
+    #[test]
+    fn strict_binary_points() {
+        let dsp = solve(
+            Multiplier::DSP48E2,
+            1,
+            1,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        assert_eq!((dsp.s, dsp.n, dsp.k), (3, 9, 6), "{dsp:?}");
+        assert_eq!(dsp.ops_per_mult(), 94);
+
+        let cpu = solve(
+            Multiplier::CPU32,
+            1,
+            1,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        assert_eq!((cpu.s, cpu.n, cpu.k), (4, 8, 8), "{cpu:?}");
+        assert_eq!(cpu.ops_per_mult(), 113);
+    }
+
+    #[test]
+    fn all_points_validate() {
+        for mult in [Multiplier::DSP48E2, Multiplier::CPU32, Multiplier::CPU64] {
+            for p in 1..=8 {
+                for q in 1..=8 {
+                    for sg in [
+                        Signedness::Unsigned,
+                        Signedness::Signed,
+                        Signedness::UnsignedBySigned,
+                    ] {
+                        for accum in [AccumMode::Single, AccumMode::Extended { m: 4 }] {
+                            let pts = solve_all(mult, p, q, sg, accum).unwrap();
+                            assert!(!pts.is_empty());
+                            for dp in pts {
+                                dp.validate().unwrap();
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signed_needs_wider_slices_than_unsigned_sometimes() {
+        let u = solve(Multiplier::CPU32, 4, 4, Signedness::Unsigned, AccumMode::Single)
+            .unwrap();
+        let s = solve(Multiplier::CPU32, 4, 4, Signedness::Signed, AccumMode::Single)
+            .unwrap();
+        // Signed never packs more ops than unsigned at equal settings.
+        assert!(s.ops_per_mult() <= u.ops_per_mult());
+    }
+
+    #[test]
+    fn deeper_accumulation_reduces_throughput() {
+        let mut last = u64::MAX;
+        for m in [1u64, 4, 16, 64] {
+            let dp = solve(
+                Multiplier::DSP48E2,
+                1,
+                1,
+                Signedness::Unsigned,
+                AccumMode::Extended { m },
+            )
+            .unwrap();
+            assert!(dp.ops_per_mult() <= last, "m={m} {dp:?}");
+            last = dp.ops_per_mult();
+        }
+    }
+
+    #[test]
+    fn operand_too_wide_is_an_error() {
+        let e = solve(
+            Multiplier::new(8, 8),
+            12,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SolveError::OperandTooWide { .. }));
+        assert!(e.to_string().contains("12-bit"));
+    }
+
+    #[test]
+    fn degenerate_single_slot_still_works() {
+        // Operands that almost fill the ports: N = K = 1 (no speedup, valid).
+        let dp = solve(
+            Multiplier::new(8, 8),
+            8,
+            8,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        assert_eq!((dp.n, dp.k), (1, 1));
+        assert_eq!(dp.ops_per_mult(), 1);
+        assert_eq!(dp.segments(), 1);
+    }
+
+    #[test]
+    fn required_slice_bits_examples() {
+        // 4x4 unsigned, 2 terms: 2*15*15 = 450 -> 9 bits (paper's DSP point).
+        assert_eq!(
+            DesignPoint::required_slice_bits(4, 4, Signedness::Unsigned, 2),
+            9
+        );
+        // 3 terms: 675 -> 10 bits (paper's CPU point).
+        assert_eq!(
+            DesignPoint::required_slice_bits(4, 4, Signedness::Unsigned, 3),
+            10
+        );
+        // binary single product: 1 bit.
+        assert_eq!(
+            DesignPoint::required_slice_bits(1, 1, Signedness::Unsigned, 1),
+            1
+        );
+        // signed 4x4 single product: max |prod| = 64 -> 8 bits.
+        assert_eq!(
+            DesignPoint::required_slice_bits(4, 4, Signedness::Signed, 1),
+            8
+        );
+    }
+
+    #[test]
+    fn port_utilization_in_unit_range() {
+        let dp = solve(
+            Multiplier::DSP48E2,
+            4,
+            4,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        )
+        .unwrap();
+        assert!(dp.util_a() > 0.0 && dp.util_a() <= 1.0);
+        assert!(dp.util_b() > 0.0 && dp.util_b() <= 1.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Throughput surfaces (Figure 5) and the paper's stated claims.
+
+use super::solver::{solve, AccumMode, DesignPoint, Signedness};
+use super::Multiplier;
+use crate::util::table::Table;
+
+/// The (p, q) -> ops/cycle surface for one multiplier (a Figure-5 panel).
+#[derive(Clone, Debug)]
+pub struct Surface {
+    pub mult: Multiplier,
+    pub signedness: Signedness,
+    pub accum: AccumMode,
+    /// `points[p-1][q-1]` is the optimal design point for (p, q).
+    pub points: Vec<Vec<DesignPoint>>,
+}
+
+impl Surface {
+    pub fn ops(&self, p: u32, q: u32) -> u64 {
+        self.points[(p - 1) as usize][(q - 1) as usize].ops_per_mult()
+    }
+
+    pub fn point(&self, p: u32, q: u32) -> &DesignPoint {
+        &self.points[(p - 1) as usize][(q - 1) as usize]
+    }
+
+    /// Render the surface as the paper's z-axis values in an 8x8 table.
+    pub fn to_table(&self) -> Table {
+        let mut header = vec!["p\\q".to_string()];
+        header.extend((1..=8).map(|q| format!("q={q}")));
+        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(
+            &format!(
+                "Fig.5 throughput surface {}x{} (ops/cycle)",
+                self.mult.bit_a, self.mult.bit_b
+            ),
+            &header_refs,
+        );
+        for p in 1..=8u32 {
+            let mut row = vec![format!("p={p}")];
+            row.extend((1..=8u32).map(|q| self.ops(p, q).to_string()));
+            t.row(row);
+        }
+        t
+    }
+}
+
+/// Compute the full 8×8 (p, q) surface for a multiplier.
+pub fn surface(mult: Multiplier, signedness: Signedness, accum: AccumMode) -> Surface {
+    let points = (1..=8u32)
+        .map(|p| {
+            (1..=8u32)
+                .map(|q| solve(mult, p, q, signedness, accum).expect("feasible for p,q<=8"))
+                .collect()
+        })
+        .collect();
+    Surface {
+        mult,
+        signedness,
+        accum,
+        points,
+    }
+}
+
+/// A throughput claim made by the paper, for comparison tables.
+#[derive(Clone, Copy, Debug)]
+pub struct PaperClaim {
+    pub mult: Multiplier,
+    pub p: u32,
+    pub q: u32,
+    /// (N, K) the paper states.
+    pub n: usize,
+    pub k: usize,
+    /// ops/cycle the paper states.
+    pub ops: u64,
+    /// Whether the stated (N, K, S) satisfies the paper's own Eq. 7–8.
+    pub consistent_with_eq7_8: bool,
+}
+
+/// The explicit throughput numbers stated in §I / §III-C / Fig. 5.
+pub fn paper_figure5_claims() -> Vec<PaperClaim> {
+    vec![
+        // "a single 27×18 DSP core can deliver eight convolution operations
+        //  with 4-bit inputs in one cycle" (N=3, K=2, S=9).
+        PaperClaim {
+            mult: Multiplier::DSP48E2,
+            p: 4,
+            q: 4,
+            n: 3,
+            k: 2,
+            ops: 8,
+            consistent_with_eq7_8: true,
+        },
+        // Fig. 5a: binary on 27×18 -> S=4, N=9, K=4, 60 ops. N=9 with S=4
+        // needs 1 + 8*4 = 33 > 27 bits: violates Eq. 7 (see DESIGN.md §3).
+        PaperClaim {
+            mult: Multiplier::DSP48E2,
+            p: 1,
+            q: 1,
+            n: 9,
+            k: 4,
+            ops: 60,
+            consistent_with_eq7_8: false,
+        },
+        // "a single 32-bit processing unit can deliver 128 binarized
+        //  convolution operations" -> N=9, K=8: 1 + 8*4 = 33 > 32.
+        PaperClaim {
+            mult: Multiplier::CPU32,
+            p: 1,
+            q: 1,
+            n: 9,
+            k: 8,
+            ops: 128,
+            consistent_with_eq7_8: false,
+        },
+        // Fig. 5b @ 4-bit: 13 ops (N=3, K=3, S=10) — consistent.
+        PaperClaim {
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            n: 3,
+            k: 3,
+            ops: 13,
+            consistent_with_eq7_8: true,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surface_shape_and_monotonicity() {
+        let s = surface(
+            Multiplier::CPU32,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        );
+        assert_eq!(s.points.len(), 8);
+        assert_eq!(s.points[0].len(), 8);
+        // Throughput decreases (weakly) with wider operands along p = q.
+        let diag: Vec<u64> = (1..=8).map(|b| s.ops(b, b)).collect();
+        for w in diag.windows(2) {
+            assert!(w[0] >= w[1], "diag not monotone: {diag:?}");
+        }
+        // The 8x8 surface always beats 1 op/cycle at 1x1.
+        assert!(s.ops(1, 1) > 50);
+    }
+
+    #[test]
+    fn consistent_paper_claims_match_solver() {
+        for claim in paper_figure5_claims() {
+            let dp = solve(
+                claim.mult,
+                claim.p,
+                claim.q,
+                Signedness::Unsigned,
+                AccumMode::Single,
+            )
+            .unwrap();
+            if claim.consistent_with_eq7_8 {
+                assert_eq!(dp.ops_per_mult(), claim.ops, "claim {claim:?} vs {dp:?}");
+            } else {
+                // The paper's two binary claims use N values that violate
+                // Eq. 7; the strict solver lands elsewhere: it *beats* the
+                // stated 60 ops on 27x18 (94: denser S=3 slices) and falls
+                // short of the stated 128 on 32x32 (113). Pin both so any
+                // solver regression is caught.
+                let strict = dp.ops_per_mult();
+                match (claim.mult.bit_a, claim.mult.bit_b) {
+                    (27, 18) => assert_eq!(strict, 94, "{dp:?}"),
+                    (32, 32) => assert_eq!(strict, 113, "{dp:?}"),
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dsp_4bit_claim_is_the_table_value() {
+        let s = surface(
+            Multiplier::DSP48E2,
+            Signedness::Unsigned,
+            AccumMode::Single,
+        );
+        assert_eq!(s.ops(4, 4), 8);
+        let t = s.to_table();
+        assert_eq!(t.n_rows(), 8);
+        assert!(t.render().contains("27x18"));
+    }
+}

@@ -1,0 +1,73 @@
+//! Small self-contained substrates: RNG, JSON emission, ASCII tables, timing.
+//!
+//! The build environment is fully offline (no crates.io), so utilities that
+//! would normally come from `rand`, `serde_json` or `prettytable` are
+//! implemented here.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+/// Number of bits needed to represent the non-negative value `v`
+/// (`bits_for(0) == 1`, `bits_for(1) == 1`, `bits_for(2) == 2`, ...).
+pub fn bits_for(v: u128) -> u32 {
+    if v == 0 {
+        1
+    } else {
+        128 - v.leading_zeros()
+    }
+}
+
+/// `ceil(log2(v))` for `v >= 1`.
+pub fn ceil_log2(v: u64) -> u32 {
+    assert!(v >= 1, "ceil_log2 of zero");
+    64 - (v - 1).leading_zeros()
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_for_small_values() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 2);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(4), 3);
+        assert_eq!(bits_for(255), 8);
+        assert_eq!(bits_for(256), 9);
+        assert_eq!(bits_for(675), 10); // the paper's CPU design point: S = 10
+    }
+
+    #[test]
+    fn ceil_log2_matches_definition() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        for v in 1u64..1000 {
+            let g = ceil_log2(v);
+            assert!(1u128 << g >= v as u128);
+            if g > 0 {
+                assert!(1u128 << (g - 1) < v as u128);
+            }
+        }
+    }
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 3), 1);
+        assert_eq!(div_ceil(0, 3), 0);
+    }
+}

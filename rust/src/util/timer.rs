@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, elapsed seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// A stopwatch accumulating named spans — used to attribute pipeline time
+/// (pack / multiply / segment / accumulate) during profiling.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    spans: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, attributing its wall time to `name`.
+    pub fn span<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time(f);
+        if let Some(e) = self.spans.iter_mut().find(|(n, _)| n == name) {
+            e.1 += dt;
+        } else {
+            self.spans.push((name.to_string(), dt));
+        }
+        out
+    }
+
+    pub fn total(&self) -> f64 {
+        self.spans.iter().map(|(_, t)| t).sum()
+    }
+
+    pub fn spans(&self) -> &[(String, f64)] {
+        &self.spans
+    }
+
+    /// Render a profile breakdown sorted by descending time.
+    pub fn report(&self) -> String {
+        let total = self.total().max(1e-12);
+        let mut sorted = self.spans.clone();
+        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut out = String::new();
+        for (name, t) in sorted {
+            out.push_str(&format!(
+                "{:<24} {:>10.3} ms  {:>5.1}%\n",
+                name,
+                t * 1e3,
+                t / total * 100.0
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_result() {
+        let (v, dt) = time(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.span("a", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        sw.span("a", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        sw.span("b", || ());
+        assert_eq!(sw.spans().len(), 2);
+        assert!(sw.total() >= 0.002);
+        assert!(sw.report().contains('a'));
+    }
+}

@@ -1,0 +1,171 @@
+//! Cross-module integration: theory → packing → conv engines → DSP model →
+//! models, exercised together the way the experiments use them.
+
+use hikonv::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use hikonv::conv::reference::{conv2d_ref, ConvShape};
+use hikonv::conv::{conv1d_hikonv, conv1d_ref};
+use hikonv::dsp::dsp48e2::hikonv_fnk_on_dsp;
+use hikonv::dsp::Dsp48e2;
+use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::models::ultranet::{ultranet, ultranet_tiny};
+use hikonv::theory::{solve, surface, AccumMode, Multiplier, Signedness};
+use hikonv::util::rng::Rng;
+
+/// The solver's Figure-5 surface points all execute exactly: for every
+/// (p, q) in the 27×18 unsigned surface, the design point's packing runs
+/// on the bit-accurate DSP model and reproduces the reference convolution.
+#[test]
+fn every_dsp_surface_point_executes_exactly() {
+    let mut rng = Rng::new(1);
+    let mut dsp = Dsp48e2::new();
+    for p in 1..=8u32 {
+        for q in 1..=8u32 {
+            let dp = solve(
+                Multiplier::DSP48E2_UNSIGNED,
+                p,
+                q,
+                Signedness::Unsigned,
+                AccumMode::Single,
+            )
+            .unwrap();
+            for _ in 0..10 {
+                let f = rng.quant_unsigned_vec(p, dp.n);
+                let g = rng.quant_unsigned_vec(q, dp.k);
+                let y = hikonv_fnk_on_dsp(&mut dsp, &f, &g, dp.s, false).unwrap();
+                assert_eq!(y, conv1d_ref(&f, &g), "p={p} q={q} {dp:?}");
+            }
+        }
+    }
+    assert!(!dsp.input_overflowed());
+}
+
+/// Throughput model consistency: ops/mult of the solved point equals the
+/// operations the executed convolution actually performs.
+#[test]
+fn throughput_accounting_matches_execution() {
+    let dp = solve(
+        Multiplier::DSP48E2,
+        4,
+        4,
+        Signedness::Unsigned,
+        AccumMode::Single,
+    )
+    .unwrap();
+    // F_{N,K} computes N*K products and (N-1)(K-1) accumulations:
+    let f = vec![1i64; dp.n];
+    let g = vec![1i64; dp.k];
+    let y = conv1d_ref(&f, &g);
+    let mults = dp.n * dp.k;
+    let adds: usize = y.iter().map(|&v| (v as usize).saturating_sub(1)).sum();
+    assert_eq!(dp.ops_per_mult(), (mults + adds) as u64);
+}
+
+/// End-to-end UltraNet-tiny: baseline vs HiKonv runners agree on every
+/// frame of a small stream, and detections are deterministic.
+#[test]
+fn ultranet_tiny_stream_agreement() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 42);
+    let base = CpuRunner::new(model.clone(), weights.clone(), EngineKind::Baseline).unwrap();
+    let hik = CpuRunner::new(
+        model.clone(),
+        weights,
+        EngineKind::HiKonv(Multiplier::CPU32),
+    )
+    .unwrap();
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(2);
+    for frame_i in 0..3 {
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        let a = base.infer(&frame);
+        let b = hik.infer(&frame);
+        assert_eq!(a, b, "frame {frame_i}");
+    }
+}
+
+/// The full UltraNet final layer (Fig. 6b workload) is exact on HiKonv.
+#[test]
+fn ultranet_final_layer_exact() {
+    let layer = &ultranet().layers[7];
+    let shape = layer.padded_shape();
+    let mut rng = Rng::new(3);
+    let input = rng.quant_unsigned_vec(4, shape.input_len());
+    let weights = rng.quant_signed_vec(4, shape.weight_len());
+    let eng = Conv2dHiKonv::new(
+        Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        },
+        &weights,
+    )
+    .unwrap();
+    assert_eq!(eng.conv(&input), conv2d_ref(&input, &weights, shape));
+}
+
+/// 64-bit multiplier engines (the i128 path) handle an 8-bit workload.
+#[test]
+fn cpu64_8bit_end_to_end() {
+    let dp = solve(
+        Multiplier::CPU64,
+        8,
+        8,
+        Signedness::Unsigned,
+        AccumMode::Extended { m: 1 },
+    )
+    .unwrap();
+    let mut rng = Rng::new(4);
+    let f = rng.quant_unsigned_vec(8, 2000);
+    let g = rng.quant_unsigned_vec(8, dp.k);
+    assert_eq!(conv1d_hikonv(&f, &g, &dp), conv1d_ref(&f, &g));
+}
+
+/// Surfaces for the three standard multipliers are internally consistent:
+/// wider hardware never loses throughput at equal (p, q).
+#[test]
+fn wider_multipliers_dominate() {
+    let dsp = surface(
+        Multiplier::DSP48E2,
+        Signedness::Unsigned,
+        AccumMode::Single,
+    );
+    let cpu32 = surface(Multiplier::CPU32, Signedness::Unsigned, AccumMode::Single);
+    let cpu64 = surface(Multiplier::CPU64, Signedness::Unsigned, AccumMode::Single);
+    for p in 1..=8 {
+        for q in 1..=8 {
+            assert!(cpu32.ops(p, q) >= dsp.ops(p, q), "p={p} q={q}");
+            assert!(cpu64.ops(p, q) >= cpu32.ops(p, q), "p={p} q={q}");
+        }
+    }
+}
+
+/// A deep layer exceeding any single guard budget still evaluates exactly
+/// through channel blocking (the §III-B M-map accumulation rule).
+#[test]
+fn deep_channel_layer_via_blocking() {
+    let shape = ConvShape {
+        ci: 128,
+        co: 2,
+        hi: 5,
+        wi: 9,
+        k: 3,
+    };
+    let mut rng = Rng::new(5);
+    let input = rng.quant_unsigned_vec(4, shape.input_len());
+    let weights = rng.quant_signed_vec(4, shape.weight_len());
+    let eng = Conv2dHiKonv::new(
+        Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        },
+        &weights,
+    )
+    .unwrap();
+    assert!(eng.channel_block() >= 1);
+    assert_eq!(eng.conv(&input), conv2d_ref(&input, &weights, shape));
+}

@@ -1,0 +1,114 @@
+//! End-to-end serving pipeline tests: source → batcher → inference →
+//! metrics, on CPU engines and (when artifacts exist) the PJRT backend.
+
+use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
+use hikonv::coordinator::{serve, ServeConfig};
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::runtime::{artifacts, artifacts_dir, Runtime};
+use hikonv::theory::Multiplier;
+use std::time::Duration;
+
+fn config(frames: u64) -> ServeConfig {
+    ServeConfig {
+        frames,
+        source_fps_cap: None,
+        queue_depth: 4,
+        max_batch: 2,
+        linger: Duration::from_millis(1),
+        seed: 11,
+        bits: 4,
+    }
+}
+
+#[test]
+fn cpu_hikonv_pipeline_end_to_end() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 11);
+    let runner = CpuRunner::new(model, weights, EngineKind::HiKonv(Multiplier::CPU32)).unwrap();
+    let report = serve(Box::new(CpuBackend::new(runner)), &config(8));
+    assert_eq!(report.frames, 8);
+    assert!(report.fps > 0.0);
+    assert_eq!(report.latency.count(), 8);
+    assert!(report.mean_batch >= 1.0);
+}
+
+#[test]
+fn baseline_and_hikonv_backends_detect_identically() {
+    // Same seed => same synthetic frames => identical detections expected
+    // because the engines are bit-exact equivalents.
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 13);
+    let base = CpuRunner::new(model.clone(), weights.clone(), EngineKind::Baseline).unwrap();
+    let hik =
+        CpuRunner::new(model.clone(), weights, EngineKind::HiKonv(Multiplier::CPU32)).unwrap();
+    let (c, h, w) = model.input;
+    let mut rng = hikonv::util::rng::Rng::new(17);
+    for _ in 0..3 {
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        let a = base.infer(&frame);
+        let b = hik.infer(&frame);
+        assert_eq!(base.decode(&a), hik.decode(&b));
+    }
+}
+
+#[test]
+fn feeder_cap_reproduces_arm_bottleneck_shape() {
+    // With a feeder cap far below the backend's speed, throughput pins to
+    // the cap — the Table-II "measured 401 fps" situation.
+    struct Fast;
+    impl hikonv::coordinator::InferBackend for Fast {
+        fn name(&self) -> &str {
+            "fast"
+        }
+        fn input_dims(&self) -> (usize, usize, usize) {
+            (1, 2, 2)
+        }
+        fn infer_batch(
+            &mut self,
+            frames: &[hikonv::coordinator::Frame],
+        ) -> Vec<hikonv::coordinator::pipeline::Detection> {
+            frames
+                .iter()
+                .map(|f| hikonv::coordinator::pipeline::Detection {
+                    frame_id: f.id,
+                    cell: (0, 0),
+                })
+                .collect()
+        }
+    }
+    let mut cfg = config(60);
+    cfg.source_fps_cap = Some(300.0);
+    let capped = serve(Box::new(Fast), &cfg);
+    cfg.source_fps_cap = None;
+    let uncapped = serve(Box::new(Fast), &cfg);
+    assert!(
+        capped.fps < uncapped.fps / 3.0,
+        "cap {:.0} vs uncapped {:.0}",
+        capped.fps,
+        uncapped.fps
+    );
+    assert!((250.0..400.0).contains(&capped.fps), "{}", capped.fps);
+}
+
+#[test]
+fn pjrt_backend_pipeline_end_to_end() {
+    if !artifacts_dir().join(artifacts::ULTRANET_TINY).exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let loaded = rt.load_artifact(artifacts::ULTRANET_TINY).unwrap();
+    let model = ultranet_tiny();
+    let backend = PjrtBackend::new(loaded, model.input, model.output_dims());
+    let report = serve(Box::new(backend), &config(6));
+    assert_eq!(report.frames, 6);
+    assert_eq!(report.backend, "pjrt-ultranet");
+    // Determinism: running again with the same seed yields the same count
+    // and a comparable latency profile.
+    let rt2 = Runtime::cpu().unwrap();
+    let loaded2 = rt2.load_artifact(artifacts::ULTRANET_TINY).unwrap();
+    let backend2 = PjrtBackend::new(loaded2, model.input, model.output_dims());
+    let report2 = serve(Box::new(backend2), &config(6));
+    assert_eq!(report2.frames, 6);
+}

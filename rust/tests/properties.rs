@@ -1,0 +1,255 @@
+//! Whole-crate property tests: the paper's theorems as executable
+//! invariants, over randomized multipliers, bitwidths, signedness, shapes.
+
+use hikonv::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use hikonv::conv::reference::{conv2d_ref, ConvShape};
+use hikonv::conv::{conv1d_hikonv, conv1d_ref};
+use hikonv::packing::{pack_signed, pack_signed_recursive, pack_spec, pack_unsigned};
+use hikonv::testing::{assert_seq_eq, check, default_cases};
+use hikonv::theory::{solve, solve_all, AccumMode, DesignPoint, Multiplier, Signedness};
+use hikonv::util::rng::Rng;
+
+/// Theorem 1 over *random multiplier geometries*: any (Bit_A, Bit_B) in
+/// [8, 64]² with any (p, q) produces an exact F_{N,K}.
+#[test]
+fn prop_theorem1_random_multipliers() {
+    check(
+        "Thm.1: random multiplier geometry, single block",
+        0xA1,
+        default_cases(),
+        |rng: &mut Rng, _| {
+            let bit_a = 8 + rng.below(57) as u32;
+            let bit_b = 8 + rng.below(57) as u32;
+            let p = 1 + rng.below(bit_a.min(8) as u64) as u32;
+            let q = 1 + rng.below(bit_b.min(8) as u64) as u32;
+            (bit_a, bit_b, p, q, rng.next_u64())
+        },
+        |&(bit_a, bit_b, p, q, seed)| {
+            let dp = solve(
+                Multiplier::new(bit_a, bit_b),
+                p,
+                q,
+                Signedness::Unsigned,
+                AccumMode::Single,
+            )
+            .map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(seed);
+            let f = rng.quant_unsigned_vec(p, dp.n);
+            let g = rng.quant_unsigned_vec(q, dp.k);
+            let y = hikonv::conv::conv1d::fnk_block(&f, &g, &dp);
+            assert_seq_eq(&y, &conv1d_ref(&f, &g))
+        },
+    );
+}
+
+/// Theorem 2 extension with channel accumulation depth m: guard bits hold
+/// for the *worst-case* all-max inputs.
+#[test]
+fn prop_guard_bits_worst_case() {
+    check(
+        "guard bits absorb worst-case accumulation",
+        0xA2,
+        default_cases() / 2,
+        |rng: &mut Rng, _| {
+            let p = 1 + rng.below(8) as u32;
+            let m = 1 + rng.below(16);
+            (p, m)
+        },
+        |&(p, m)| {
+            let dp = solve(
+                Multiplier::CPU32,
+                p,
+                p,
+                Signedness::Unsigned,
+                AccumMode::Extended { m },
+            )
+            .map_err(|e| e.to_string())?;
+            // m parallel worst-case convolutions summed segment-wise must
+            // still fit: emulate by conv of all-max values, m-fold.
+            let fmax = (1i64 << p) - 1;
+            let f = vec![fmax; 64];
+            let g = vec![fmax; dp.k];
+            let one = conv1d_hikonv(&f, &g, &dp);
+            let want = conv1d_ref(&f, &g);
+            assert_seq_eq(&one, &want)?;
+            // The packed-domain m-fold sum is what conv2d does; covered by
+            // prop_theorem3 below. Here assert the bound arithmetic:
+            let terms = m * dp.k as u64;
+            let max_seg = terms as i128 * (fmax as i128) * (fmax as i128);
+            if max_seg >= (1i128 << dp.s) {
+                return Err(format!("segment bound violated: {max_seg} >= 2^{}", dp.s));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Theorem 3 over random layer shapes *and* random multiplier widths.
+#[test]
+fn prop_theorem3_random_layers() {
+    check(
+        "Thm.3: DNN layer == reference over random shapes/multipliers",
+        0xA3,
+        (default_cases() / 8).max(8),
+        |rng: &mut Rng, _| {
+            let bit = [24u32, 32, 48][rng.below(3) as usize];
+            let k = [1usize, 3][rng.below(2) as usize];
+            let shape = ConvShape {
+                ci: 1 + rng.below(8) as usize,
+                co: 1 + rng.below(3) as usize,
+                hi: k + rng.below(4) as usize,
+                wi: k + rng.below(10) as usize,
+                k,
+            };
+            let p = 1 + rng.below(4) as u32;
+            let q = 1 + rng.below(4) as u32;
+            (bit, shape, p, q, rng.next_u64())
+        },
+        |&(bit, shape, p, q, seed)| {
+            let mut rng = Rng::new(seed);
+            let input = rng.quant_unsigned_vec(p, shape.input_len());
+            let weights = rng.quant_signed_vec(q, shape.weight_len());
+            let eng = Conv2dHiKonv::new(
+                Conv2dSpec {
+                    shape,
+                    mult: Multiplier::new(bit, bit),
+                    p,
+                    q,
+                    signedness: Signedness::UnsignedBySigned,
+                },
+                &weights,
+            )?;
+            assert_seq_eq(&eng.conv(&input), &conv2d_ref(&input, &weights, shape))
+        },
+    );
+}
+
+/// Eq.-13 signed packing equals the wrapping-sum definition for any slice
+/// width and payload.
+#[test]
+fn prop_signed_packing_equivalence() {
+    check(
+        "Eq.13 recursion == wrapping sum",
+        0xA4,
+        default_cases(),
+        |rng: &mut Rng, size| {
+            let s = 4 + rng.below(13) as u32;
+            let n = 1 + rng.below((120 / s as u64).min(size as u64 + 1)) as usize;
+            let bits = 1 + rng.below((s - 1).min(8) as u64) as u32;
+            (s, rng.quant_signed_vec(bits, n))
+        },
+        |(s, vals)| {
+            if pack_signed_recursive(vals, *s) == pack_signed(vals, *s) {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        },
+    );
+}
+
+/// Unsigned packing is the wrapping sum, too (Eq. 11 == definition).
+#[test]
+fn prop_unsigned_packing_is_spec() {
+    check(
+        "Eq.11 == wrapping sum",
+        0xA5,
+        default_cases(),
+        |rng: &mut Rng, size| {
+            let s = 4 + rng.below(13) as u32;
+            let n = 1 + rng.below((120 / s as u64).min(size as u64 + 1)) as usize;
+            let bits = 1 + rng.below(s.min(8) as u64) as u32;
+            (s, rng.quant_unsigned_vec(bits, n))
+        },
+        |(s, vals)| {
+            if pack_unsigned(vals, *s) == pack_spec(vals, *s) {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        },
+    );
+}
+
+/// Solver invariants: every enumerated point validates; the chosen point
+/// maximizes ops; N and K shrink monotonically in S.
+#[test]
+fn prop_solver_invariants() {
+    check(
+        "solver soundness + optimality",
+        0xA6,
+        default_cases(),
+        |rng: &mut Rng, _| {
+            let bit_a = 8 + rng.below(57) as u32;
+            let bit_b = 8 + rng.below(57) as u32;
+            let p = 1 + rng.below(bit_a.min(8) as u64) as u32;
+            let q = 1 + rng.below(bit_b.min(8) as u64) as u32;
+            let signed = rng.below(2) == 1;
+            (bit_a, bit_b, p, q, signed)
+        },
+        |&(bit_a, bit_b, p, q, signed)| {
+            let sgn = if signed {
+                Signedness::Signed
+            } else {
+                Signedness::Unsigned
+            };
+            let mult = Multiplier::new(bit_a, bit_b);
+            let all = solve_all(mult, p, q, sgn, AccumMode::Single)
+                .map_err(|e| e.to_string())?;
+            let best = solve(mult, p, q, sgn, AccumMode::Single)
+                .map_err(|e| e.to_string())?;
+            let max_ops = all.iter().map(DesignPoint::ops_per_mult).max().unwrap();
+            if best.ops_per_mult() != max_ops {
+                return Err(format!(
+                    "solve() not optimal: {} vs {}",
+                    best.ops_per_mult(),
+                    max_ops
+                ));
+            }
+            for dp in &all {
+                dp.validate()?;
+            }
+            for w in all.windows(2) {
+                if w[1].s > w[0].s && (w[1].n > w[0].n || w[1].k > w[0].k) {
+                    return Err("N/K not monotone in S".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Linearity: conv(f1 + f2, g) == conv(f1, g) + conv(f2, g) — exercised on
+/// the packed engine (catches segment-boundary bleed).
+#[test]
+fn prop_linearity_of_packed_conv() {
+    let dp = solve(
+        Multiplier::CPU32,
+        3,
+        3,
+        Signedness::Unsigned,
+        AccumMode::Extended { m: 1 },
+    )
+    .unwrap();
+    check(
+        "packed conv is linear",
+        0xA7,
+        default_cases() / 2,
+        |rng: &mut Rng, size| {
+            let len = 1 + rng.below((size as u64 * 4).max(4)) as usize;
+            (
+                rng.quant_unsigned_vec(2, len), // halves so the sum stays 3-bit
+                rng.quant_unsigned_vec(2, len),
+                rng.quant_unsigned_vec(3, dp.k),
+            )
+        },
+        |(f1, f2, g)| {
+            let sum: Vec<i64> = f1.iter().zip(f2).map(|(a, b)| a + b).collect();
+            let lhs = conv1d_hikonv(&sum, g, &dp);
+            let a = conv1d_hikonv(f1, g, &dp);
+            let b = conv1d_hikonv(f2, g, &dp);
+            let rhs: Vec<i64> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            assert_seq_eq(&lhs, &rhs)
+        },
+    );
+}

@@ -1,0 +1,123 @@
+//! PJRT runtime integration: load the AOT artifacts produced by the Python
+//! compile path and execute them from Rust, cross-checking numerics against
+//! the native engines.
+//!
+//! Requires `make artifacts`. Tests are skipped (with a notice) when the
+//! artifacts are missing so `cargo test` stays runnable pre-build.
+
+use hikonv::conv::conv1d_ref;
+use hikonv::runtime::{artifacts, artifacts_dir, Runtime};
+use hikonv::theory::{solve, AccumMode, Multiplier, Signedness};
+use hikonv::util::rng::Rng;
+
+fn artifacts_present() -> bool {
+    let ok = artifacts_dir().join(artifacts::HIKONV_CONV1D).exists();
+    if !ok {
+        eprintln!("skipping PJRT test: artifacts missing (run `make artifacts`)");
+    }
+    ok
+}
+
+/// The conv1d artifacts' fixed shapes (python/compile/aot.py).
+const LEN: usize = 4096;
+const TAPS: usize = 3;
+
+#[test]
+fn pjrt_client_comes_up() {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn hikonv_conv1d_artifact_matches_native_reference() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_artifact(artifacts::HIKONV_CONV1D).unwrap();
+    let mut rng = Rng::new(101);
+    let f: Vec<i64> = rng.quant_unsigned_vec(4, LEN);
+    let g: Vec<i64> = rng.quant_unsigned_vec(4, TAPS);
+    let fi: Vec<i32> = f.iter().map(|&v| v as i32).collect();
+    let gi: Vec<i32> = g.iter().map(|&v| v as i32).collect();
+    let outs = model
+        .run_i32(&[(fi, vec![LEN as i64]), (gi, vec![TAPS as i64])])
+        .unwrap();
+    let want = conv1d_ref(&f, &g);
+    assert_eq!(outs[0].len(), want.len());
+    for (i, (a, b)) in outs[0].iter().zip(&want).enumerate() {
+        assert_eq!(*a as i64, *b, "index {i}");
+    }
+}
+
+#[test]
+fn hikonv_and_ref_artifacts_agree_with_each_other() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let hik = rt.load_artifact(artifacts::HIKONV_CONV1D).unwrap();
+    let rf = rt.load_artifact(artifacts::REF_CONV1D).unwrap();
+    let mut rng = Rng::new(202);
+    for _ in 0..3 {
+        let f: Vec<i32> = (0..LEN).map(|_| rng.quant_unsigned(4) as i32).collect();
+        let g: Vec<i32> = (0..TAPS).map(|_| rng.quant_unsigned(4) as i32).collect();
+        let a = hik
+            .run_i32(&[(f.clone(), vec![LEN as i64]), (g.clone(), vec![TAPS as i64])])
+            .unwrap();
+        let b = rf
+            .run_i32(&[(f, vec![LEN as i64]), (g, vec![TAPS as i64])])
+            .unwrap();
+        assert_eq!(a[0], b[0]);
+    }
+}
+
+#[test]
+fn hikonv_artifact_matches_native_hikonv_engine() {
+    if !artifacts_present() {
+        return;
+    }
+    // The packed kernel inside the artifact and the Rust packed engine use
+    // the same design point (S=10, N=3, K=3): outputs must be identical.
+    let dp = solve(
+        Multiplier::CPU32,
+        4,
+        4,
+        Signedness::Unsigned,
+        AccumMode::Extended { m: 1 },
+    )
+    .unwrap();
+    assert_eq!((dp.s, dp.n, dp.k), (10, 3, 3));
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_artifact(artifacts::HIKONV_CONV1D).unwrap();
+    let mut rng = Rng::new(303);
+    let f: Vec<i64> = rng.quant_unsigned_vec(4, LEN);
+    let g: Vec<i64> = rng.quant_unsigned_vec(4, TAPS);
+    let native = hikonv::conv::conv1d_hikonv(&f, &g, &dp);
+    let fi: Vec<i32> = f.iter().map(|&v| v as i32).collect();
+    let gi: Vec<i32> = g.iter().map(|&v| v as i32).collect();
+    let outs = model
+        .run_i32(&[(fi, vec![LEN as i64]), (gi, vec![TAPS as i64])])
+        .unwrap();
+    for (a, b) in outs[0].iter().zip(&native) {
+        assert_eq!(*a as i64, *b);
+    }
+}
+
+#[test]
+fn ultranet_tiny_artifact_runs_and_is_deterministic() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_artifact(artifacts::ULTRANET_TINY).unwrap();
+    let mut rng = Rng::new(404);
+    let frame: Vec<i32> = (0..3 * 40 * 80)
+        .map(|_| rng.quant_unsigned(4) as i32)
+        .collect();
+    let a = model.run_i32(&[(frame.clone(), vec![3, 40, 80])]).unwrap();
+    let b = model.run_i32(&[(frame, vec![3, 40, 80])]).unwrap();
+    assert_eq!(a[0].len(), 36 * 5 * 10);
+    assert_eq!(a[0], b[0]);
+    assert!(a[0].iter().any(|&v| v != 0), "all-zero head output");
+}
