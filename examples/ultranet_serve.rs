@@ -40,16 +40,22 @@ fn main() {
         .unwrap_or(48u64);
 
     // --- PJRT backend: the AOT three-layer path ---------------------------
+    // Skips cleanly when the artifacts are absent OR when this is the
+    // default (stub) build without the `pjrt` feature.
     if artifacts_dir().join(artifacts::ULTRANET_TINY).exists() {
-        let rt = Runtime::cpu().expect("PJRT client");
-        println!("PJRT platform: {}", rt.platform());
-        let loaded = rt.load_artifact(artifacts::ULTRANET_TINY).unwrap();
-        let backend: Box<dyn InferBackend> =
-            Box::new(PjrtBackend::new(loaded, model.input, model.output_dims()));
-        let report = serve(backend, &config(frames, None));
-        println!("--- PJRT (L1 Pallas kernels via L2 JAX, AOT) ---");
-        print!("{}", report.render());
-        println!();
+        match Runtime::cpu() {
+            Ok(rt) => {
+                println!("PJRT platform: {}", rt.platform());
+                let loaded = rt.load_artifact(artifacts::ULTRANET_TINY).unwrap();
+                let backend: Box<dyn InferBackend> =
+                    Box::new(PjrtBackend::new(loaded, model.input, model.output_dims()));
+                let report = serve(backend, &config(frames, None));
+                println!("--- PJRT (L1 Pallas kernels via L2 JAX, AOT) ---");
+                print!("{}", report.render());
+                println!();
+            }
+            Err(e) => println!("(PJRT backend unavailable: {e})\n"),
+        }
     } else {
         println!("(artifacts missing — run `make artifacts` for the PJRT backend)\n");
     }
@@ -82,6 +88,18 @@ fn main() {
         print!("{}", report.render());
         println!();
     }
+
+    // --- intra-layer tiled engine (output channels across cores) -----------
+    let tiled = CpuRunner::new(
+        model.clone(),
+        random_weights(&model, 7),
+        EngineKind::HiKonvTiled(Multiplier::CPU32, 0),
+    )
+    .unwrap();
+    let report = serve(Box::new(CpuBackend::new(tiled)), &config(frames, None));
+    println!("--- HiKonv packed+tiled engine (intra-layer, auto-sized pool) ---");
+    print!("{}", report.render());
+    println!();
 
     // --- the ARM-feeder bottleneck (Table II's 401-vs-588 situation) -------
     let runner = CpuRunner::new(

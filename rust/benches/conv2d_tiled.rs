@@ -1,0 +1,122 @@
+//! Bench: conv2d baseline 6-loop nest vs HiKonv packed (Thm. 3) vs
+//! HiKonv packed+tiled (output channels sharded across the thread pool)
+//! on representative UltraNet layer shapes at 4-bit.
+//!
+//! Outputs are cross-checked bit-exact against `conv2d_ref` (and across
+//! thread counts) before any timing. Set `HIKONV_BENCH_QUICK=1` for a CI
+//! smoke pass and `HIKONV_BENCH_OUT=<path>` to record the JSON baseline
+//! (see BENCH_conv2d.json at the repo root).
+
+use hikonv::bench::{BenchConfig, Bencher};
+use hikonv::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use hikonv::conv::reference::conv2d_ref;
+use hikonv::engine::conv2d_tiled;
+use hikonv::exec::{default_threads, ThreadPool};
+use hikonv::models::ultranet;
+use hikonv::theory::{Multiplier, Signedness};
+use hikonv::util::json::Json;
+use hikonv::util::rng::Rng;
+use hikonv::util::table::Table;
+
+fn main() {
+    let config = BenchConfig::from_env();
+    let threads = default_threads();
+    let pool = ThreadPool::new(threads);
+    let model = ultranet();
+    // Representative UltraNet layers: an early wide-image layer, the
+    // mid-network layer and the final conv the paper benches (Fig. 6b).
+    let picks = ["conv2", "conv4", "conv8"];
+    let mut bencher = Bencher::with_config("conv2d_tiled", config);
+    let mut rows = Vec::new();
+    for layer in model.layers.iter().filter(|l| picks.contains(&l.name.as_str())) {
+        let shape = layer.padded_shape();
+        let mut rng = Rng::new(0xC2D7 ^ layer.co as u64);
+        let input = rng.quant_unsigned_vec(layer.a_bits, shape.input_len());
+        let weights = rng.quant_signed_vec(layer.w_bits, shape.weight_len());
+        let eng = Conv2dHiKonv::new(
+            Conv2dSpec {
+                shape,
+                mult: Multiplier::CPU32,
+                p: layer.a_bits,
+                q: layer.w_bits,
+                signedness: Signedness::UnsignedBySigned,
+            },
+            &weights,
+        )
+        .expect("feasible design point");
+
+        // Correctness gate: packed and packed+tiled must be bit-exact vs
+        // the reference before we publish any timing for them.
+        let want = conv2d_ref(&input, &weights, shape);
+        assert_eq!(eng.conv(&input), want, "{} packed mismatch", layer.name);
+        assert_eq!(
+            conv2d_tiled(&eng, &pool, &input),
+            want,
+            "{} tiled mismatch",
+            layer.name
+        );
+        assert_eq!(
+            conv2d_tiled(&eng, &ThreadPool::new(1), &input),
+            want,
+            "{} 1-thread tiled mismatch",
+            layer.name
+        );
+
+        let base = bencher
+            .bench(&format!("baseline/{}", layer.name), || {
+                conv2d_ref(&input, &weights, shape)
+            })
+            .median_ns();
+        let packed = bencher
+            .bench(&format!("packed/{}", layer.name), || eng.conv(&input))
+            .median_ns();
+        let tiled = bencher
+            .bench(&format!("packed+tiled/{}", layer.name), || {
+                conv2d_tiled(&eng, &pool, &input)
+            })
+            .median_ns();
+        rows.push((layer.name.clone(), shape, base, packed, tiled));
+    }
+
+    let mut table = Table::new(
+        &format!("conv2d: baseline vs packed vs packed+tiled ({threads} threads)"),
+        &["layer", "baseline", "packed", "packed+tiled", "packed x", "tiled x"],
+    );
+    let mut json_rows = Vec::new();
+    for (name, shape, base, packed, tiled) in &rows {
+        table.row(hikonv::cells!(
+            name,
+            hikonv::bench::fmt_ns(*base),
+            hikonv::bench::fmt_ns(*packed),
+            hikonv::bench::fmt_ns(*tiled),
+            format!("{:.2}x", base / packed),
+            format!("{:.2}x", base / tiled)
+        ));
+        json_rows.push(
+            Json::obj()
+                .set("layer", name.as_str())
+                .set("ci", shape.ci)
+                .set("co", shape.co)
+                .set("hi", shape.hi)
+                .set("wi", shape.wi)
+                .set("k", shape.k)
+                .set("baseline_ns", *base)
+                .set("packed_ns", *packed)
+                .set("tiled_ns", *tiled)
+                .set("speedup_packed", base / packed)
+                .set("speedup_tiled", base / tiled),
+        );
+    }
+    print!("{}", table.render());
+    let report = Json::obj()
+        .set("bench", "conv2d_tiled")
+        .set("threads", threads)
+        .set("quick", std::env::var("HIKONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false))
+        .set("rows", Json::Array(json_rows));
+    let rendered = report.to_string_pretty();
+    println!("{rendered}");
+    if let Ok(path) = std::env::var("HIKONV_BENCH_OUT") {
+        std::fs::write(&path, format!("{rendered}\n")).expect("write bench baseline");
+        eprintln!("wrote {path}");
+    }
+}

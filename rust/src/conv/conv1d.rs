@@ -13,85 +13,8 @@
 //! partial convolutions are summed at output offsets `j·K` (the same
 //! extension Thm. 2 applies to `f`, applied to `g`).
 
+use super::word::{pack_word, ProdWord};
 use crate::theory::{AccumMode, DesignPoint, Signedness};
-
-/// Word abstraction so the same streaming core runs in `i64` (the paper's
-/// 32×32 CPU multiplier — product and accumulator fit 64 bits) and `i128`
-/// (up to 64×64 multipliers).
-trait ProdWord: Copy {
-    #[allow(dead_code)] // used by the impl macro's shift arithmetic
-    const BITS: u32;
-    fn zero() -> Self;
-    fn from_i64(v: i64) -> Self;
-    fn wadd(self, o: Self) -> Self;
-    fn wmul(self, o: Self) -> Self;
-    fn shl(self, s: u32) -> Self;
-    /// Arithmetic shift right (keeps the packed tail exact for negatives).
-    fn sar(self, s: u32) -> Self;
-    fn bit(self, pos: u32) -> i64;
-    fn low_seg_signed(self, s: u32) -> i64;
-    fn low_seg_unsigned(self, s: u32) -> i64;
-}
-
-macro_rules! impl_prod_word {
-    ($t:ty, $bits:expr) => {
-        impl ProdWord for $t {
-            const BITS: u32 = $bits;
-            #[inline(always)]
-            fn zero() -> Self {
-                0
-            }
-            #[inline(always)]
-            fn from_i64(v: i64) -> Self {
-                v as $t
-            }
-            #[inline(always)]
-            fn wadd(self, o: Self) -> Self {
-                self.wrapping_add(o)
-            }
-            #[inline(always)]
-            fn wmul(self, o: Self) -> Self {
-                self.wrapping_mul(o)
-            }
-            #[inline(always)]
-            fn shl(self, s: u32) -> Self {
-                self.wrapping_shl(s)
-            }
-            #[inline(always)]
-            fn sar(self, s: u32) -> Self {
-                self.wrapping_shr(s) // arithmetic: $t is signed
-            }
-            #[inline(always)]
-            fn bit(self, pos: u32) -> i64 {
-                ((self >> pos) & 1) as i64
-            }
-            #[inline(always)]
-            fn low_seg_signed(self, s: u32) -> i64 {
-                let sh = Self::BITS - s;
-                ((self.wrapping_shl(sh)) >> sh) as i64
-            }
-            #[inline(always)]
-            fn low_seg_unsigned(self, s: u32) -> i64 {
-                (self & ((1 << s) - 1)) as i64
-            }
-        }
-    };
-}
-
-impl_prod_word!(i64, 64);
-impl_prod_word!(i128, 128);
-
-/// Pack a chunk of values into a word (wrapping sum `Σ v·2^(S·i)`; equals
-/// Eq. 11 for unsigned and Eq. 13 for signed inputs — see `packing`).
-#[inline(always)]
-fn pack_word<W: ProdWord>(vals: &[i64], s: u32) -> W {
-    let mut w = W::zero();
-    // Pack from the top slice down: one shift + add per value.
-    for &v in vals.iter().rev() {
-        w = w.shl(s).wadd(W::from_i64(v));
-    }
-    w
-}
 
 /// One packed kernel chunk.
 #[derive(Clone, Debug)]

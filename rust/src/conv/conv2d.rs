@@ -9,6 +9,7 @@
 //! `G_b = ceil(log2(M·min(K,N)))` channel-accumulation rule.
 
 use super::reference::ConvShape;
+use super::word::{pack_word, ProdWord};
 use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness};
 
 /// Configuration for a HiKonv DNN layer engine.
@@ -24,17 +25,33 @@ pub struct Conv2dSpec {
 
 /// HiKonv layer engine with pre-packed weights ("kernels are packed offline
 /// before the processing starts", §IV-A).
+///
+/// Mirrors `conv1d.rs`: when every packed word and accumulator fits 64 bits
+/// (`S·(N+K-1)+1 <= 64` — true for the paper's 32×32 CPU design points) the
+/// whole layer runs in the `i64` fast path; wider points fall back to `i128`.
 #[derive(Clone, Debug)]
 pub struct Conv2dHiKonv {
     spec: Conv2dSpec,
     dp: DesignPoint,
     /// Channels accumulated per packed-domain block.
     channel_block: usize,
-    /// Packed (reversed) weight rows: `[co][ci][kh]`, each one word.
+    /// Packed (reversed) weight rows `[co][ci][kh]`, one word each —
+    /// only the lane selected by `use64` is populated.
     packed_w: Vec<i128>,
+    packed_w64: Vec<i64>,
     /// Number of packed feature chunks per input row.
     chunks_per_row: usize,
+    use64: bool,
     signed: bool,
+}
+
+/// An input feature map packed once into the engine's word lane, shareable
+/// across output-channel tiles (and threads — it is read-only during the
+/// compute phase, so parallel tiles borrow it freely).
+#[derive(Clone, Debug)]
+pub struct PackedInput {
+    w64: Vec<i64>,
+    w128: Vec<i128>,
 }
 
 impl Conv2dHiKonv {
@@ -75,8 +92,22 @@ impl Conv2dHiKonv {
         assert_eq!(weights.len(), sh.weight_len(), "weight length mismatch");
         let signed = !matches!(spec.signedness, Signedness::Unsigned);
 
-        // Pack reversed weight rows: g[k'] = W[co][ci][kh][K-1-k'] (Eq. 20).
-        let mut packed_w = Vec::with_capacity(sh.co * sh.ci * sh.k);
+        // The i64 fast path needs every packed word and accumulator to fit:
+        // (N+K-1) segments of S bits, plus 1 sign bit headroom (same lane
+        // criterion as the conv1d engine).
+        let seg_bits = dp.s * (dp.n as u32 + dp.k as u32 - 1);
+        let use64 = seg_bits + 1 <= 64;
+
+        // Pack reversed weight rows: g[k'] = W[co][ci][kh][K-1-k'] (Eq. 20),
+        // into the active lane only (`use64` implies S <= 63, so the i64
+        // packing never truncates).
+        let mut packed_w = Vec::new();
+        let mut packed_w64 = Vec::new();
+        if use64 {
+            packed_w64.reserve(sh.co * sh.ci * sh.k);
+        } else {
+            packed_w.reserve(sh.co * sh.ci * sh.k);
+        }
         let mut rev = vec![0i64; sh.k];
         for co in 0..sh.co {
             for ci in 0..sh.ci {
@@ -85,7 +116,11 @@ impl Conv2dHiKonv {
                     for kw in 0..sh.k {
                         rev[kw] = weights[base + sh.k - 1 - kw];
                     }
-                    packed_w.push(pack_i128(&rev, dp.s));
+                    if use64 {
+                        packed_w64.push(pack_word::<i64>(&rev, dp.s));
+                    } else {
+                        packed_w.push(pack_word::<i128>(&rev, dp.s));
+                    }
                 }
             }
         }
@@ -94,7 +129,9 @@ impl Conv2dHiKonv {
             dp,
             channel_block: block,
             packed_w,
+            packed_w64,
             chunks_per_row: sh.wi.div_ceil(dp.n),
+            use64,
             signed,
         })
     }
@@ -107,6 +144,19 @@ impl Conv2dHiKonv {
         self.channel_block
     }
 
+    pub fn shape(&self) -> ConvShape {
+        self.spec.shape
+    }
+
+    pub fn spec(&self) -> &Conv2dSpec {
+        &self.spec
+    }
+
+    /// True when the layer runs in the `i64` fast-path lane.
+    pub fn uses_fast_lane(&self) -> bool {
+        self.use64
+    }
+
     /// Wide multiplications needed per forward pass (for DSP-efficiency
     /// accounting): `co·ho·ci·k·ceil(wi/n)`.
     pub fn wide_muls_per_pass(&self) -> u64 {
@@ -114,39 +164,85 @@ impl Conv2dHiKonv {
         (sh.co * sh.ho() * sh.ci * sh.k * self.chunks_per_row) as u64
     }
 
-    /// Run the layer. Input `[ci][h][w]`, output `[co][h][w]` row-major.
-    pub fn conv(&self, input: &[i64]) -> Vec<i64> {
+    /// Pack the input feature map once per inference ("features are packed
+    /// at runtime", §IV-A); the result is shared across output-channel
+    /// tiles, so parallel execution packs exactly once.
+    pub fn pack_input(&self, input: &[i64]) -> PackedInput {
         let sh = self.spec.shape;
         assert_eq!(input.len(), sh.input_len(), "input length mismatch");
-        let (ho, wo, wi, k) = (sh.ho(), sh.wo(), sh.wi, sh.k);
+        if self.use64 {
+            PackedInput {
+                w64: pack_rows::<i64>(input, sh, self.dp.s, self.dp.n, self.chunks_per_row),
+                w128: Vec::new(),
+            }
+        } else {
+            PackedInput {
+                w64: Vec::new(),
+                w128: pack_rows::<i128>(input, sh, self.dp.s, self.dp.n, self.chunks_per_row),
+            }
+        }
+    }
+
+    /// Run the layer. Input `[ci][h][w]`, output `[co][h][w]` row-major.
+    pub fn conv(&self, input: &[i64]) -> Vec<i64> {
+        let packed = self.pack_input(input);
+        let mut out = vec![0i64; self.spec.shape.output_len()];
+        self.conv_co_range(&packed, 0, self.spec.shape.co, &mut out);
+        out
+    }
+
+    /// Compute output channels `[co_start, co_end)` into `out_tile`
+    /// (`(co_end - co_start)·ho·wo` values, accumulated with `+=`) — the
+    /// unit of output-channel tiling. Disjoint ranges write disjoint
+    /// outputs, so tiles run concurrently with bit-identical results
+    /// regardless of scheduling.
+    pub fn conv_co_range(
+        &self,
+        packed: &PackedInput,
+        co_start: usize,
+        co_end: usize,
+        out_tile: &mut [i64],
+    ) {
+        let sh = self.spec.shape;
+        assert!(co_start <= co_end && co_end <= sh.co, "co range out of bounds");
+        assert_eq!(
+            out_tile.len(),
+            (co_end - co_start) * sh.ho() * sh.wo(),
+            "tile length mismatch"
+        );
+        if self.use64 {
+            self.conv_core::<i64>(&packed.w64, &self.packed_w64, co_start, co_end, out_tile);
+        } else {
+            self.conv_core::<i128>(&packed.w128, &self.packed_w, co_start, co_end, out_tile);
+        }
+    }
+
+    /// The streaming Thm.-3 core, generic over the word lane.
+    fn conv_core<W: ProdWord>(
+        &self,
+        packed_in: &[W],
+        packed_w: &[W],
+        co_start: usize,
+        co_end: usize,
+        out_tile: &mut [i64],
+    ) {
+        let sh = self.spec.shape;
+        let (ho, wo, k) = (sh.ho(), sh.wo(), sh.k);
         let s = self.dp.s;
         let n = self.dp.n;
         let x_chunks = self.chunks_per_row;
-
-        // Runtime feature packing, once per input row (shared across co).
-        let mut packed_in = vec![0i128; sh.ci * sh.hi * x_chunks];
-        for ci in 0..sh.ci {
-            for h in 0..sh.hi {
-                let row = &input[(ci * sh.hi + h) * wi..(ci * sh.hi + h) * wi + wi];
-                let base = (ci * sh.hi + h) * x_chunks;
-                for (x, chunk) in row.chunks(n).enumerate() {
-                    packed_in[base + x] = pack_i128(chunk, s);
-                }
-            }
-        }
-
-        let conv_len = wi + k - 1;
-        let mut out = vec![0i64; sh.output_len()];
+        let conv_len = sh.wi + k - 1;
         let mut seg_buf = vec![0i64; conv_len];
-        for co in 0..sh.co {
+        for co in co_start..co_end {
             for h in 0..ho {
-                let out_row = &mut out[(co * ho + h) * wo..(co * ho + h) * wo + wo];
+                let base = ((co - co_start) * ho + h) * wo;
+                let out_row = &mut out_tile[base..base + wo];
                 for block_start in (0..sh.ci).step_by(self.channel_block) {
                     let block_end = (block_start + self.channel_block).min(sh.ci);
                     // Streaming overlap-add of the packed-domain sum over
                     // (ci in block, kh): one segmentation pass per block.
                     seg_buf.iter_mut().for_each(|v| *v = 0);
-                    let mut acc: i128 = 0;
+                    let mut acc = W::zero();
                     let mut carry: i64 = 0;
                     let mut m = 0usize;
                     for x in 0..x_chunks {
@@ -156,41 +252,40 @@ impl Conv2dHiKonv {
                             let ibase = (ci * sh.hi + h) * x_chunks;
                             for kh in 0..k {
                                 let a = packed_in[ibase + kh * x_chunks + x];
-                                sum = sum
-                                    .wrapping_add(a.wrapping_mul(self.packed_w[wbase + kh]));
+                                sum = sum.wadd(a.wmul(packed_w[wbase + kh]));
                             }
                         }
                         let emit = n.min(conv_len - m);
                         let mut w = sum;
                         if self.signed {
                             for _ in 0..emit {
-                                seg_buf[m] = seg_i128_signed(w, s) + carry;
-                                carry = ((w >> (s - 1)) & 1) as i64;
-                                w >>= s;
+                                seg_buf[m] = w.low_seg_signed(s) + carry;
+                                carry = w.bit(s - 1);
+                                w = w.sar(s);
                                 m += 1;
                             }
                         } else {
                             for _ in 0..emit {
-                                seg_buf[m] = (w & ((1i128 << s) - 1)) as i64;
-                                w >>= s;
+                                seg_buf[m] = w.low_seg_unsigned(s);
+                                w = w.sar(s);
                                 m += 1;
                             }
                         }
                         if emit < n {
                             break;
                         }
-                        acc = sum >> (s * n as u32);
+                        acc = sum.sar(s * n as u32);
                     }
                     // Flush pending overlap segments.
                     let mut w = acc;
                     while m < conv_len {
                         if self.signed {
-                            seg_buf[m] = seg_i128_signed(w, s) + carry;
-                            carry = ((w >> (s - 1)) & 1) as i64;
+                            seg_buf[m] = w.low_seg_signed(s) + carry;
+                            carry = w.bit(s - 1);
                         } else {
-                            seg_buf[m] = (w & ((1i128 << s) - 1)) as i64;
+                            seg_buf[m] = w.low_seg_unsigned(s);
                         }
-                        w >>= s;
+                        w = w.sar(s);
                         m += 1;
                     }
                     // y[w + K - 1] accumulates into O[co][h][w] (Eq. 18).
@@ -200,8 +295,29 @@ impl Conv2dHiKonv {
                 }
             }
         }
-        out
     }
+}
+
+/// Pack every input row into `ceil(wi/N)` words of the requested lane.
+fn pack_rows<W: ProdWord>(
+    input: &[i64],
+    sh: ConvShape,
+    s: u32,
+    n: usize,
+    x_chunks: usize,
+) -> Vec<W> {
+    let wi = sh.wi;
+    let mut packed_in = vec![W::zero(); sh.ci * sh.hi * x_chunks];
+    for ci in 0..sh.ci {
+        for h in 0..sh.hi {
+            let row = &input[(ci * sh.hi + h) * wi..(ci * sh.hi + h) * wi + wi];
+            let base = (ci * sh.hi + h) * x_chunks;
+            for (x, chunk) in row.chunks(n).enumerate() {
+                packed_in[base + x] = pack_word::<W>(chunk, s);
+            }
+        }
+    }
+    packed_in
 }
 
 /// Pick the deepest channel block whose guard bits keep `N >= 2`, searching
@@ -237,21 +353,6 @@ fn choose_channel_block(spec: &Conv2dSpec) -> Result<(usize, DesignPoint), Strin
     }
     best.map(|(b, dp, _)| (b, dp))
         .ok_or_else(|| "no feasible channel block".to_string())
-}
-
-#[inline(always)]
-fn pack_i128(vals: &[i64], s: u32) -> i128 {
-    let mut w: i128 = 0;
-    for &v in vals.iter().rev() {
-        w = (w << s).wrapping_add(v as i128);
-    }
-    w
-}
-
-#[inline(always)]
-fn seg_i128_signed(w: i128, s: u32) -> i64 {
-    let sh = 128 - s;
-    ((w << sh) >> sh) as i64
 }
 
 #[cfg(test)]
@@ -475,6 +576,97 @@ mod tests {
                 assert_seq_eq(&eng.conv(input), &conv2d_ref(input, weights, *shape))
             },
         );
+    }
+
+    #[test]
+    fn cpu32_4bit_takes_the_fast_lane() {
+        // The paper's headline CPU point must run in i64, not i128.
+        let shape = ConvShape {
+            ci: 4,
+            co: 2,
+            hi: 5,
+            wi: 9,
+            k: 3,
+        };
+        let mut rng = Rng::new(91);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let eng = Conv2dHiKonv::new(spec, &weights).unwrap();
+        assert!(eng.uses_fast_lane(), "{:?}", eng.design_point());
+    }
+
+    #[test]
+    fn i64_and_i128_lanes_agree() {
+        let shape = ConvShape {
+            ci: 3,
+            co: 3,
+            hi: 6,
+            wi: 11,
+            k: 3,
+        };
+        let mut rng = Rng::new(92);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let mk = |mult| {
+            Conv2dHiKonv::new(
+                Conv2dSpec {
+                    shape,
+                    mult,
+                    p: 4,
+                    q: 4,
+                    signedness: Signedness::UnsignedBySigned,
+                },
+                &weights,
+            )
+            .unwrap()
+        };
+        let e32 = mk(Multiplier::CPU32);
+        let e64 = mk(Multiplier::CPU64);
+        assert!(e32.uses_fast_lane());
+        assert!(!e64.uses_fast_lane());
+        assert_seq_eq(&e32.conv(&input), &e64.conv(&input)).unwrap();
+        assert_seq_eq(&e32.conv(&input), &conv2d_ref(&input, &weights, shape)).unwrap();
+    }
+
+    #[test]
+    fn co_tiles_compose_to_full_conv() {
+        let shape = ConvShape {
+            ci: 4,
+            co: 5,
+            hi: 6,
+            wi: 10,
+            k: 3,
+        };
+        let mut rng = Rng::new(93);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let eng = Conv2dHiKonv::new(
+            Conv2dSpec {
+                shape,
+                mult: Multiplier::CPU32,
+                p: 4,
+                q: 4,
+                signedness: Signedness::UnsignedBySigned,
+            },
+            &weights,
+        )
+        .unwrap();
+        let packed = eng.pack_input(&input);
+        let (ho, wo) = (shape.ho(), shape.wo());
+        let mut out = vec![0i64; shape.output_len()];
+        // Uneven split: tiles of 2, 2 and 1 output channels.
+        for (start, end) in [(0usize, 2usize), (2, 4), (4, 5)] {
+            let tile = &mut out[start * ho * wo..end * ho * wo];
+            eng.conv_co_range(&packed, start, end, tile);
+        }
+        assert_seq_eq(&out, &eng.conv(&input)).unwrap();
+        assert_seq_eq(&out, &conv2d_ref(&input, &weights, shape)).unwrap();
     }
 
     #[test]

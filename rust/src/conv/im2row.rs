@@ -1,0 +1,201 @@
+//! im2row lowering: the convolution layer as a quantized matmul.
+//!
+//! Each output pixel's receptive field is flattened into one row of an
+//! `(H_o·W_o) × (C_i·K²)` matrix; the layer is then `rows × Wᵀ` where `Wᵀ`
+//! is the `C_o × (C_i·K²)` weight matrix. Every dot product runs through
+//! [`DotHiKonv`] packed blocks — one wide multiplication per
+//! `min(N, K)` MAC terms — so convolution and fully-connected-shaped work
+//! (the paper's §VI generalization) share the same packed kernel.
+//!
+//! This trades the Thm.-3 overlap-add reuse for GEMM regularity: it is the
+//! lowering to pick when the same [`DotHiKonv`] engine already serves FC /
+//! attention workloads and one kernel should cover both.
+
+use super::conv2d::Conv2dSpec;
+use super::dot::DotHiKonv;
+
+/// Conv-as-matmul engine over a [`DotHiKonv`] packed dot-product kernel.
+#[derive(Clone, Debug)]
+pub struct Im2RowConv {
+    spec: Conv2dSpec,
+    dot: DotHiKonv,
+    /// Weight rows `[co][ci·k·k]` — the transposed right operand of the
+    /// matmul (this is exactly the `[co][ci][kh][kw]` row-major layout).
+    w_rows: Vec<i64>,
+}
+
+impl Im2RowConv {
+    pub fn new(spec: Conv2dSpec, weights: &[i64]) -> Result<Im2RowConv, String> {
+        let sh = spec.shape;
+        assert_eq!(weights.len(), sh.weight_len(), "weight length mismatch");
+        let dot = DotHiKonv::new(spec.mult, spec.p, spec.q, spec.signedness)
+            .map_err(|e| e.to_string())?;
+        Ok(Im2RowConv {
+            spec,
+            dot,
+            w_rows: weights.to_vec(),
+        })
+    }
+
+    pub fn spec(&self) -> &Conv2dSpec {
+        &self.spec
+    }
+
+    /// The packed dot-product engine (shared with FC-shaped work).
+    pub fn dot_engine(&self) -> &DotHiKonv {
+        &self.dot
+    }
+
+    /// Lower `[ci][h][w]` input to the im2row matrix:
+    /// `(ho·wo)` rows of `ci·k·k` receptive-field values.
+    pub fn im2row(&self, input: &[i64]) -> Vec<i64> {
+        let sh = self.spec.shape;
+        assert_eq!(input.len(), sh.input_len(), "input length mismatch");
+        let (ho, wo, k) = (sh.ho(), sh.wo(), sh.k);
+        let row_len = sh.ci * k * k;
+        let mut rows = vec![0i64; ho * wo * row_len];
+        for h in 0..ho {
+            for w in 0..wo {
+                let base = (h * wo + w) * row_len;
+                let mut j = 0;
+                for ci in 0..sh.ci {
+                    for kh in 0..k {
+                        let src = (ci * sh.hi + h + kh) * sh.wi + w;
+                        rows[base + j..base + j + k].copy_from_slice(&input[src..src + k]);
+                        j += k;
+                    }
+                }
+            }
+        }
+        rows
+    }
+
+    /// Run the layer. Input `[ci][h][w]`, output `[co][h][w]` row-major —
+    /// bit-exact against `conv2d_ref`.
+    pub fn conv(&self, input: &[i64]) -> Vec<i64> {
+        let sh = self.spec.shape;
+        let (ho, wo, k) = (sh.ho(), sh.wo(), sh.k);
+        let rows = self.im2row(input);
+        let m = ho * wo;
+        let kk = sh.ci * k * k;
+        // (ho·wo) × co, pixel-major.
+        let pixel_major = self.dot.matmul(&rows, &self.w_rows, m, kk, sh.co);
+        // Transpose to the engines' [co][h][w] layout.
+        let mut out = vec![0i64; sh.output_len()];
+        for p in 0..m {
+            for co in 0..sh.co {
+                out[co * m + p] = pixel_major[p * sh.co + co];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference::{conv2d_ref, ConvShape};
+    use crate::testing::assert_seq_eq;
+    use crate::theory::{Multiplier, Signedness};
+    use crate::util::rng::Rng;
+
+    fn check_layer(shape: ConvShape, p: u32, q: u32, signedness: Signedness, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let signed_in = matches!(signedness, Signedness::Signed);
+        let signed_w = !matches!(signedness, Signedness::Unsigned);
+        let input = if signed_in {
+            rng.quant_signed_vec(p, shape.input_len())
+        } else {
+            rng.quant_unsigned_vec(p, shape.input_len())
+        };
+        let weights = if signed_w {
+            rng.quant_signed_vec(q, shape.weight_len())
+        } else {
+            rng.quant_unsigned_vec(q, shape.weight_len())
+        };
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p,
+            q,
+            signedness,
+        };
+        let eng = Im2RowConv::new(spec, &weights).unwrap();
+        assert_seq_eq(&eng.conv(&input), &conv2d_ref(&input, &weights, shape)).unwrap();
+    }
+
+    #[test]
+    fn small_layer_all_signedness() {
+        let shape = ConvShape {
+            ci: 3,
+            co: 2,
+            hi: 6,
+            wi: 9,
+            k: 3,
+        };
+        check_layer(shape, 4, 4, Signedness::Unsigned, 20);
+        check_layer(shape, 4, 4, Signedness::Signed, 21);
+        check_layer(shape, 4, 4, Signedness::UnsignedBySigned, 22);
+    }
+
+    #[test]
+    fn kernel_1x1_is_a_pure_matmul() {
+        check_layer(
+            ConvShape {
+                ci: 4,
+                co: 4,
+                hi: 5,
+                wi: 7,
+                k: 1,
+            },
+            4,
+            4,
+            Signedness::UnsignedBySigned,
+            23,
+        );
+    }
+
+    #[test]
+    fn im2row_rows_are_receptive_fields() {
+        let shape = ConvShape {
+            ci: 1,
+            co: 1,
+            hi: 3,
+            wi: 3,
+            k: 2,
+        };
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::Unsigned,
+        };
+        let eng = Im2RowConv::new(spec, &[1, 1, 1, 1]).unwrap();
+        let input: Vec<i64> = (1..=9).collect();
+        let rows = eng.im2row(&input);
+        // First output pixel sees the top-left 2x2 patch.
+        assert_eq!(&rows[0..4], &[1, 2, 4, 5]);
+        // Last output pixel sees the bottom-right 2x2 patch.
+        assert_eq!(&rows[12..16], &[5, 6, 8, 9]);
+    }
+
+    #[test]
+    fn multi_terms_per_mult_at_4bit() {
+        let spec = Conv2dSpec {
+            shape: ConvShape {
+                ci: 2,
+                co: 2,
+                hi: 4,
+                wi: 4,
+                k: 3,
+            },
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::Unsigned,
+        };
+        let eng = Im2RowConv::new(spec, &vec![1i64; 36]).unwrap();
+        assert!(eng.dot_engine().terms_per_mult() >= 2);
+    }
+}

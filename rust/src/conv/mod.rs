@@ -7,14 +7,20 @@
 //!   including the `u64` fast path for the paper's 32×32 CPU setting.
 //! * [`conv2d`] — Theorem 3: a DNN convolution layer computed from 1-D
 //!   HiKonv convolutions, with optional packed-domain channel accumulation
-//!   (§III-B "DNN Convolution").
+//!   (§III-B "DNN Convolution"), an `i64` fast lane mirroring `conv1d`,
+//!   and an output-channel tiling API for multi-core execution.
+//! * [`im2row`] — the layer lowered to a quantized matmul whose dot
+//!   products run through [`dot`]'s packed blocks (FC-shaped reuse).
 
 pub mod conv1d;
 pub mod conv2d;
 pub mod dot;
+pub mod im2row;
 pub mod reference;
+mod word;
 
 pub use conv1d::{conv1d_hikonv, Conv1dHiKonv};
-pub use conv2d::{Conv2dHiKonv, Conv2dSpec};
+pub use conv2d::{Conv2dHiKonv, Conv2dSpec, PackedInput};
 pub use dot::{dot_ref, DotHiKonv};
+pub use im2row::Im2RowConv;
 pub use reference::{conv1d_ref, conv2d_ref};

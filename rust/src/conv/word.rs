@@ -1,0 +1,114 @@
+//! Packed-word arithmetic shared by the HiKonv engines.
+//!
+//! The same streaming cores run in `i64` (the paper's 32×32 CPU multiplier —
+//! product and accumulator fit 64 bits) and `i128` (up to 64×64 multipliers).
+//! [`ProdWord`] abstracts the word so each engine picks the narrowest lane
+//! that holds `S·(N+K-1)+1` bits: the `i64` path is the CPU fast path the
+//! paper's 3.17× 4-bit result relies on.
+
+/// Word abstraction for the packed domain (see module docs).
+pub(crate) trait ProdWord: Copy {
+    #[allow(dead_code)] // used by the impl macro's shift arithmetic
+    const BITS: u32;
+    fn zero() -> Self;
+    fn from_i64(v: i64) -> Self;
+    fn wadd(self, o: Self) -> Self;
+    fn wmul(self, o: Self) -> Self;
+    fn shl(self, s: u32) -> Self;
+    /// Arithmetic shift right (keeps the packed tail exact for negatives).
+    fn sar(self, s: u32) -> Self;
+    fn bit(self, pos: u32) -> i64;
+    fn low_seg_signed(self, s: u32) -> i64;
+    fn low_seg_unsigned(self, s: u32) -> i64;
+}
+
+macro_rules! impl_prod_word {
+    ($t:ty, $bits:expr) => {
+        impl ProdWord for $t {
+            const BITS: u32 = $bits;
+            #[inline(always)]
+            fn zero() -> Self {
+                0
+            }
+            #[inline(always)]
+            fn from_i64(v: i64) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn wadd(self, o: Self) -> Self {
+                self.wrapping_add(o)
+            }
+            #[inline(always)]
+            fn wmul(self, o: Self) -> Self {
+                self.wrapping_mul(o)
+            }
+            #[inline(always)]
+            fn shl(self, s: u32) -> Self {
+                self.wrapping_shl(s)
+            }
+            #[inline(always)]
+            fn sar(self, s: u32) -> Self {
+                self.wrapping_shr(s) // arithmetic: $t is signed
+            }
+            #[inline(always)]
+            fn bit(self, pos: u32) -> i64 {
+                ((self >> pos) & 1) as i64
+            }
+            #[inline(always)]
+            fn low_seg_signed(self, s: u32) -> i64 {
+                let sh = Self::BITS - s;
+                ((self.wrapping_shl(sh)) >> sh) as i64
+            }
+            #[inline(always)]
+            fn low_seg_unsigned(self, s: u32) -> i64 {
+                (self & ((1 << s) - 1)) as i64
+            }
+        }
+    };
+}
+
+impl_prod_word!(i64, 64);
+impl_prod_word!(i128, 128);
+
+/// Pack a chunk of values into a word (wrapping sum `Σ v·2^(S·i)`; equals
+/// Eq. 11 for unsigned and Eq. 13 for signed inputs — see `packing`).
+#[inline(always)]
+pub(crate) fn pack_word<W: ProdWord>(vals: &[i64], s: u32) -> W {
+    let mut w = W::zero();
+    // Pack from the top slice down: one shift + add per value.
+    for &v in vals.iter().rev() {
+        w = w.shl(s).wadd(W::from_i64(v));
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_word_places_segments() {
+        let w: i64 = pack_word(&[3, 5, 7], 8);
+        assert_eq!(w & 0xFF, 3);
+        assert_eq!((w >> 8) & 0xFF, 5);
+        assert_eq!((w >> 16) & 0xFF, 7);
+    }
+
+    #[test]
+    fn i64_and_i128_pack_identically_in_range() {
+        let vals = [1i64, -2, 3, -4];
+        let a: i64 = pack_word(&vals, 12);
+        let b: i128 = pack_word(&vals, 12);
+        // The i64 packing is the low 64 bits of the i128 packing.
+        assert_eq!(a, b as i64);
+    }
+
+    #[test]
+    fn low_segments_roundtrip() {
+        let w: i64 = pack_word(&[9, 0, 2], 10);
+        assert_eq!(w.low_seg_unsigned(10), 9);
+        assert_eq!(w.sar(20).low_seg_unsigned(10), 2);
+        let ws: i128 = pack_word(&[-3], 10);
+        assert_eq!(ws.low_seg_signed(10), -3);
+    }
+}

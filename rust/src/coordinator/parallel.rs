@@ -2,6 +2,12 @@
 //! worker threads, each owning its own engine instance, and reassembles
 //! results in order. (The PJRT backend stays single-threaded — its client
 //! is `Rc`-internal; CPU engines are plain data and parallelize freely.)
+//!
+//! Two axes of parallelism compose here: this pool shards *frames* across
+//! workers, and a worker built with [`EngineKind::HiKonvTiled`] also
+//! shards each layer's *output channels* across its own
+//! [`exec::ThreadPool`](crate::exec::ThreadPool) — use few workers ×
+//! more intra-layer threads for latency, the transpose for throughput.
 
 use super::pipeline::{Detection, Frame, InferBackend};
 use crate::models::{CpuRunner, EngineKind, ModelWeights};
@@ -36,6 +42,16 @@ impl ParallelCpuBackend {
         workers: usize,
     ) -> Result<ParallelCpuBackend, String> {
         assert!(workers >= 1);
+        // An auto-sized (0) intra-layer pool must resolve against the
+        // cores remaining *per worker*, not the whole machine — otherwise
+        // N workers × N-core pools oversubscribe the host N-fold.
+        let kind = match kind {
+            EngineKind::HiKonvTiled(m, 0) if workers > 1 => EngineKind::HiKonvTiled(
+                m,
+                (crate::exec::default_threads() / workers).max(1),
+            ),
+            k => k,
+        };
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (res_tx, res_rx) = channel::<(usize, Detection)>();
@@ -165,6 +181,31 @@ mod tests {
             assert_eq!(pool.infer_batch(&fs).len(), 4);
         }
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn workers_with_intra_layer_tiling_match_serial_detections() {
+        // Frame-level (2 workers) × layer-level (2 threads) parallelism
+        // must not change any detection.
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 24);
+        let mut serial = CpuBackend::new(
+            CpuRunner::new(
+                model.clone(),
+                weights.clone(),
+                EngineKind::HiKonv(Multiplier::CPU32),
+            )
+            .unwrap(),
+        );
+        let mut pool = ParallelCpuBackend::new(
+            model.clone(),
+            weights,
+            EngineKind::HiKonvTiled(Multiplier::CPU32, 2),
+            2,
+        )
+        .unwrap();
+        let fs = frames(5, model.input);
+        assert_eq!(serial.infer_batch(&fs), pool.infer_batch(&fs));
     }
 
     #[test]

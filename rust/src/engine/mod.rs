@@ -1,10 +1,15 @@
 //! Pluggable convolution-engine abstraction used by benches and the
 //! coordinator: the same layer can run on the baseline loop nest, the
-//! HiKonv packed engine, or (whole-model) a PJRT-compiled artifact.
+//! HiKonv packed engine, the parallel tiled engine (output channels
+//! sharded across an [`exec::ThreadPool`](crate::exec::ThreadPool)), the
+//! im2row/matmul lowering, or (whole-model) a PJRT-compiled artifact.
 
 use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use crate::conv::im2row::Im2RowConv;
 use crate::conv::reference::{conv2d_ref, ConvShape};
+use crate::exec::ThreadPool;
 use crate::theory::{Multiplier, Signedness};
+use std::sync::Arc;
 
 /// A layer-level convolution engine with bound weights.
 pub trait ConvEngine: Send {
@@ -82,6 +87,154 @@ impl ConvEngine for HiKonvEngine {
     }
 }
 
+/// Output-channel tile depth for a layer of `co` channels on a pool of
+/// `threads` workers: ~4 tiles per worker for load balance, never below
+/// one channel per tile.
+pub fn tile_co_for(co: usize, threads: usize) -> usize {
+    co.div_ceil((threads * 4).max(1)).max(1)
+}
+
+/// Below this many MACs a layer runs serially even on a multi-thread
+/// pool: the scoped worker spawn/join (~tens of µs per call) amortizes
+/// poorly against sub-100µs tile compute, so tiny layers would get
+/// *slower* tiled (the serve path calls this once per layer per frame).
+const PAR_MIN_MACS: u64 = 100_000;
+
+/// Run one HiKonv conv2d layer tiled over output channels on `pool`:
+/// pack the input once, then shard `[co_start, co_end)` ranges across the
+/// workers. Bit-exact vs `eng.conv` (and `conv2d_ref`) for any thread
+/// count — tiles are disjoint output regions addressed by index, and the
+/// small-layer serial cutoff changes scheduling only, never values.
+pub fn conv2d_tiled(eng: &Conv2dHiKonv, pool: &ThreadPool, input: &[i64]) -> Vec<i64> {
+    let sh = eng.shape();
+    if pool.threads() == 1 || sh.macs() < PAR_MIN_MACS {
+        return eng.conv(input);
+    }
+    let packed = eng.pack_input(input);
+    let (ho, wo) = (sh.ho(), sh.wo());
+    let tile_co = tile_co_for(sh.co, pool.threads());
+    let mut out = vec![0i64; sh.output_len()];
+    pool.par_chunks_mut(&mut out, tile_co * ho * wo, |tile_idx, tile| {
+        let co_start = tile_idx * tile_co;
+        let co_end = (co_start + tile_co).min(sh.co);
+        eng.conv_co_range(&packed, co_start, co_end, tile);
+    });
+    out
+}
+
+/// Parallel tiled HiKonv engine: Thm.-3 packed arithmetic with output
+/// channels sharded across a thread pool (the multi-core extension of the
+/// paper's CPU result).
+pub struct ParallelEngine {
+    inner: Conv2dHiKonv,
+    shape: ConvShape,
+    pool: Arc<ThreadPool>,
+}
+
+impl ParallelEngine {
+    pub fn new(
+        shape: ConvShape,
+        weights: Vec<i64>,
+        mult: Multiplier,
+        p: u32,
+        q: u32,
+        signedness: Signedness,
+        pool: Arc<ThreadPool>,
+    ) -> Result<ParallelEngine, String> {
+        let spec = Conv2dSpec {
+            shape,
+            mult,
+            p,
+            q,
+            signedness,
+        };
+        Ok(ParallelEngine {
+            inner: Conv2dHiKonv::new(spec, &weights)?,
+            shape,
+            pool,
+        })
+    }
+
+    /// Convenience: build with a private pool of `threads` workers
+    /// (0 = auto-size from the machine / `HIKONV_THREADS`).
+    pub fn with_threads(
+        shape: ConvShape,
+        weights: Vec<i64>,
+        mult: Multiplier,
+        p: u32,
+        q: u32,
+        signedness: Signedness,
+        threads: usize,
+    ) -> Result<ParallelEngine, String> {
+        Self::new(
+            shape,
+            weights,
+            mult,
+            p,
+            q,
+            signedness,
+            Arc::new(ThreadPool::auto_sized(threads)),
+        )
+    }
+
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+}
+
+impl ConvEngine for ParallelEngine {
+    fn name(&self) -> &str {
+        "hikonv-tiled"
+    }
+    fn conv(&self, input: &[i64]) -> Vec<i64> {
+        conv2d_tiled(&self.inner, &self.pool, input)
+    }
+    fn shape(&self) -> ConvShape {
+        self.shape
+    }
+}
+
+/// im2row/matmul lowering engine (DotHiKonv packed dot products).
+pub struct Im2RowEngine {
+    inner: Im2RowConv,
+    shape: ConvShape,
+}
+
+impl Im2RowEngine {
+    pub fn new(
+        shape: ConvShape,
+        weights: Vec<i64>,
+        mult: Multiplier,
+        p: u32,
+        q: u32,
+        signedness: Signedness,
+    ) -> Result<Im2RowEngine, String> {
+        let spec = Conv2dSpec {
+            shape,
+            mult,
+            p,
+            q,
+            signedness,
+        };
+        Ok(Im2RowEngine {
+            inner: Im2RowConv::new(spec, &weights)?,
+            shape,
+        })
+    }
+}
+
+impl ConvEngine for Im2RowEngine {
+    fn name(&self) -> &str {
+        "im2row"
+    }
+    fn conv(&self, input: &[i64]) -> Vec<i64> {
+        self.inner.conv(input)
+    }
+    fn shape(&self) -> ConvShape {
+        self.shape
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +271,84 @@ mod tests {
         assert_seq_eq(&outputs[0], &outputs[1]).unwrap();
         assert_eq!(engines[0].name(), "baseline");
         assert_eq!(engines[1].shape(), shape);
+    }
+
+    #[test]
+    fn all_engines_agree_including_tiled_and_im2row() {
+        let shape = ConvShape {
+            ci: 5,
+            co: 7,
+            hi: 8,
+            wi: 13,
+            k: 3,
+        };
+        let mut rng = Rng::new(42);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let sgn = Signedness::UnsignedBySigned;
+        let engines: Vec<Box<dyn ConvEngine>> = vec![
+            Box::new(BaselineEngine::new(shape, weights.clone())),
+            Box::new(
+                HiKonvEngine::new(shape, weights.clone(), Multiplier::CPU32, 4, 4, sgn).unwrap(),
+            ),
+            Box::new(
+                ParallelEngine::with_threads(
+                    shape,
+                    weights.clone(),
+                    Multiplier::CPU32,
+                    4,
+                    4,
+                    sgn,
+                    3,
+                )
+                .unwrap(),
+            ),
+            Box::new(Im2RowEngine::new(shape, weights, Multiplier::CPU32, 4, 4, sgn).unwrap()),
+        ];
+        let reference = engines[0].conv(&input);
+        for e in &engines[1..] {
+            assert_seq_eq(&e.conv(&input), &reference).unwrap();
+        }
+        assert_eq!(engines[2].name(), "hikonv-tiled");
+        assert_eq!(engines[3].name(), "im2row");
+    }
+
+    #[test]
+    fn tiled_output_is_invariant_under_thread_count() {
+        // Large enough to clear the PAR_MIN_MACS serial cutoff, so the
+        // parallel path is what's being tested.
+        let shape = ConvShape {
+            ci: 6,
+            co: 12,
+            hi: 10,
+            wi: 34,
+            k: 3,
+        };
+        assert!(shape.macs() >= PAR_MIN_MACS);
+        let mut rng = Rng::new(43);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let eng = Conv2dHiKonv::new(spec, &weights).unwrap();
+        let serial = conv2d_tiled(&eng, &ThreadPool::new(1), &input);
+        assert_seq_eq(&serial, &eng.conv(&input)).unwrap();
+        for threads in [2usize, 4, 8] {
+            let par = conv2d_tiled(&eng, &ThreadPool::new(threads), &input);
+            assert_seq_eq(&par, &serial).unwrap();
+        }
+    }
+
+    #[test]
+    fn tile_depth_heuristic_bounds() {
+        assert_eq!(tile_co_for(64, 1), 16);
+        assert_eq!(tile_co_for(64, 4), 4);
+        assert_eq!(tile_co_for(3, 8), 1);
+        assert_eq!(tile_co_for(1, 16), 1);
     }
 }

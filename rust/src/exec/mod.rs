@@ -1,0 +1,257 @@
+//! Parallel execution substrate: a self-built chunked thread pool.
+//!
+//! rayon is unavailable offline (same in-crate-substrate policy as `bench`
+//! and `testing`), so intra-layer parallelism runs on this module: a
+//! [`ThreadPool`] that fans work out over `std::thread::scope` workers
+//! pulling from a shared chunk queue.
+//!
+//! Determinism contract: every API assigns each output region to exactly
+//! one task by *index*, never by arrival order. Scheduling decides only
+//! *which thread* computes a region, not *what* is computed, so results
+//! are bit-identical for any thread count — the property the tiled conv2d
+//! engines rely on (and the determinism tests assert).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A chunked work-sharing pool of `threads` workers.
+///
+/// The pool is cheap to construct and hold (workers are scoped per call,
+/// so idle pools consume nothing), `Send + Sync`, and shareable via `Arc`
+/// across engines and serve-path workers.
+#[derive(Clone, Debug)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// A pool with a fixed worker count (clamped to at least 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        ThreadPool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// A pool sized by [`default_threads`] (env override, else hardware).
+    pub fn with_default_parallelism() -> ThreadPool {
+        ThreadPool::new(default_threads())
+    }
+
+    /// The `--threads` convention in one place: `0` means auto-size
+    /// ([`with_default_parallelism`](Self::with_default_parallelism)),
+    /// any other value is an explicit worker count.
+    pub fn auto_sized(threads: usize) -> ThreadPool {
+        if threads == 0 {
+            ThreadPool::with_default_parallelism()
+        } else {
+            ThreadPool::new(threads)
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `tasks` index-addressed jobs across the pool (dynamic
+    /// work-sharing via an atomic cursor). `f(i)` is called exactly once
+    /// for every `i in 0..tasks`, in unspecified order and thread.
+    pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if self.threads == 1 || tasks <= 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let workers = self.threads.min(tasks);
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= tasks {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+            // The calling thread is worker 0.
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks {
+                    break;
+                }
+                f(i);
+            }
+        });
+    }
+
+    /// Split `data` into `chunk_len`-sized tiles and process them across
+    /// the pool: `f(chunk_index, chunk)` with chunk `i` covering
+    /// `data[i*chunk_len ..]` (the last tile may be shorter). Tiles are
+    /// disjoint `&mut` regions, so writes never race and the output is
+    /// deterministic for any thread count.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        if self.threads == 1 || data.len() <= chunk_len {
+            for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, chunk);
+            }
+            return;
+        }
+        // Chunks are queued in reverse so workers pop them in order; never
+        // spawn more workers than there are chunks to pop.
+        let workers = self.threads.min(data.len().div_ceil(chunk_len));
+        let queue: Mutex<Vec<(usize, &mut [T])>> =
+            Mutex::new(data.chunks_mut(chunk_len).enumerate().rev().collect());
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(|| drain_queue(&queue, &f));
+            }
+            drain_queue(&queue, &f);
+        });
+    }
+
+    /// Map `items` to a same-order `Vec` across the pool. Slot `i` is
+    /// written only by the task computing `f(i, &items[i])`, so the result
+    /// order (and content) is independent of scheduling.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let mut out: Vec<Option<R>> = Vec::new();
+        out.resize_with(items.len(), || None);
+        self.par_chunks_mut(&mut out, 1, |i, slot| {
+            slot[0] = Some(f(i, &items[i]));
+        });
+        out.into_iter()
+            .map(|r| r.expect("every slot is filled by its task"))
+            .collect()
+    }
+}
+
+impl Default for ThreadPool {
+    fn default() -> Self {
+        ThreadPool::with_default_parallelism()
+    }
+}
+
+fn drain_queue<T, F>(queue: &Mutex<Vec<(usize, &mut [T])>>, f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    loop {
+        let job = queue.lock().expect("exec queue poisoned").pop();
+        match job {
+            Some((i, chunk)) => f(i, chunk),
+            None => break,
+        }
+    }
+}
+
+/// Worker count: `HIKONV_THREADS` if set (>= 1), else the machine's
+/// available parallelism, else 1.
+pub fn default_threads() -> usize {
+    std::env::var("HIKONV_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_visits_every_index_exactly_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all_tiles() {
+        for threads in [1usize, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut data = vec![0i64; 103];
+            pool.par_chunks_mut(&mut data, 10, |i, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 10 + j) as i64;
+                }
+            });
+            let want: Vec<i64> = (0..103).collect();
+            assert_eq!(data, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_handles_short_tail() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u8; 7];
+        let lens = Mutex::new(Vec::new());
+        pool.par_chunks_mut(&mut data, 3, |i, chunk| {
+            lens.lock().unwrap().push((i, chunk.len()));
+        });
+        let mut got = lens.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 3), (1, 3), (2, 1)]);
+    }
+
+    #[test]
+    fn par_map_is_ordered_and_thread_invariant() {
+        let items: Vec<i64> = (0..61).collect();
+        let serial = ThreadPool::new(1).par_map(&items, |i, v| v * v + i as i64);
+        for threads in [2usize, 5] {
+            let parallel = ThreadPool::new(threads).par_map(&items, |i, v| v * v + i as i64);
+            assert_eq!(serial, parallel, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_and_shareable() {
+        let pool = std::sync::Arc::new(ThreadPool::new(3));
+        let total = AtomicU64::new(0);
+        for _ in 0..4 {
+            pool.run(25, |i| {
+                total.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * (24 * 25 / 2));
+        assert_eq!(pool.threads(), 3);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(ThreadPool::new(0).threads(), 1);
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let pool = ThreadPool::new(4);
+        pool.run(0, |_| panic!("no tasks expected"));
+        let mut empty: [i64; 0] = [];
+        pool.par_chunks_mut(&mut empty, 5, |_, _| panic!("no chunks expected"));
+        let mapped: Vec<i64> = pool.par_map(&[] as &[i64], |_, v| *v);
+        assert!(mapped.is_empty());
+    }
+}

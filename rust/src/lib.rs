@@ -23,7 +23,10 @@
 //! * [`dsp`] — the FPGA substrate: a bit-accurate DSP48E2 functional model,
 //!   LUT resource model and the UltraNet performance model (Tables I & II).
 //! * [`models`] — UltraNet (DAC-SDC 2020 champion) layer table and CPU runner.
-//! * [`engine`] — pluggable convolution-engine abstraction.
+//! * [`engine`] — pluggable convolution-engine abstraction, including the
+//!   parallel tiled engine that shards output channels across cores.
+//! * [`exec`] — self-built chunked thread pool (deterministic `par_chunks`
+//!   style API; rayon is unavailable offline).
 //! * [`runtime`] — PJRT client: loads AOT-compiled HLO artifacts from the
 //!   JAX/Pallas compile path and executes them from Rust.
 //! * [`coordinator`] — the streaming serving pipeline (frame source →
@@ -39,6 +42,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod dsp;
 pub mod engine;
+pub mod exec;
 pub mod experiments;
 pub mod models;
 pub mod packing;

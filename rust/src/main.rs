@@ -6,9 +6,15 @@
 //! hikonv solve   --bit-a 27 --bit-b 18 --p 4 --q 4 [--signed] [--m 1]
 //! hikonv dse     --bit-a 32 --bit-b 32            design-space exploration
 //! hikonv fig5 | fig6a | fig6b | fig6c | table1 | table2
-//! hikonv serve   --backend hikonv|baseline|pjrt --frames 64 [--fps-cap 401]
-//! hikonv run-model --engine hikonv|baseline      one UltraNet-tiny inference
+//! hikonv serve   --backend hikonv|hikonv-tiled|im2row|baseline|pjrt
+//!                --frames 64 [--fps-cap 401] [--workers N] [--threads N]
+//! hikonv run-model --engine hikonv|hikonv-tiled|im2row|baseline
+//!                [--threads N]                 one UltraNet-tiny inference
 //! ```
+//!
+//! `--threads` sets the intra-layer tiling width of the `hikonv-tiled`
+//! engine (0 = auto from the machine / `HIKONV_THREADS`); `--workers`
+//! sets the frame-level worker pool of `serve`. The two compose.
 
 use hikonv::bench::BenchConfig;
 use hikonv::cli::{render_help, Args, OptSpec};
@@ -177,6 +183,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     };
     let full = args.has("full-model");
     let workers = args.get_usize("workers", 1)?;
+    let threads = args.get_usize("threads", 0)?;
     let model = if full { ultranet() } else { ultranet_tiny() };
     let cpu_backend = |kind: EngineKind| -> Result<Box<dyn hikonv::coordinator::InferBackend>, String> {
         let weights = random_weights(&model, config.seed);
@@ -198,6 +205,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let backend: Box<dyn hikonv::coordinator::InferBackend> = match backend_name.as_str() {
         "baseline" => cpu_backend(EngineKind::Baseline)?,
         "hikonv" => cpu_backend(EngineKind::HiKonv(Multiplier::CPU32))?,
+        "hikonv-tiled" => {
+            cpu_backend(EngineKind::HiKonvTiled(Multiplier::CPU32, threads))?
+        }
+        "im2row" => cpu_backend(EngineKind::Im2Row(Multiplier::CPU32))?,
         "pjrt" => {
             let rt = Runtime::cpu().map_err(|e| e.to_string())?;
             let name = if full {
@@ -220,9 +231,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_run_model(args: &Args) -> Result<(), String> {
+    let threads = args.get_usize("threads", 0)?;
     let engine = match args.get_or("engine", "hikonv").as_str() {
         "baseline" => EngineKind::Baseline,
         "hikonv" => EngineKind::HiKonv(Multiplier::CPU32),
+        "hikonv-tiled" => EngineKind::HiKonvTiled(Multiplier::CPU32, threads),
+        "im2row" => EngineKind::Im2Row(Multiplier::CPU32),
         other => return Err(format!("unknown engine '{other}'")),
     };
     let model = if args.has("full-model") {
@@ -249,6 +263,40 @@ fn cmd_run_model(args: &Args) -> Result<(), String> {
 
 fn help() -> String {
     let none: &[OptSpec] = &[];
+    let serve_opts: &[OptSpec] = &[
+        OptSpec {
+            name: "backend",
+            help: "hikonv | hikonv-tiled | im2row | baseline | pjrt",
+            default: Some("hikonv"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "workers",
+            help: "frame-level worker pool size",
+            default: Some("1"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "threads",
+            help: "intra-layer tiling threads (hikonv-tiled; 0 = auto)",
+            default: Some("0"),
+            is_switch: false,
+        },
+    ];
+    let run_model_opts: &[OptSpec] = &[
+        OptSpec {
+            name: "engine",
+            help: "hikonv | hikonv-tiled | im2row | baseline",
+            default: Some("hikonv"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "threads",
+            help: "intra-layer tiling threads (hikonv-tiled; 0 = auto)",
+            default: Some("0"),
+            is_switch: false,
+        },
+    ];
     render_help(
         "hikonv",
         &[
@@ -260,8 +308,8 @@ fn help() -> String {
             ("fig6c", "speedup vs bitwidth sweep", none),
             ("table1", "BNN resource comparison (paper Table I)", none),
             ("table2", "UltraNet fps / DSP efficiency (paper Table II)", none),
-            ("serve", "run the streaming serving pipeline", none),
-            ("run-model", "single UltraNet inference on CPU engines", none),
+            ("serve", "run the streaming serving pipeline", serve_opts),
+            ("run-model", "single UltraNet inference on CPU engines", run_model_opts),
         ],
     )
 }

@@ -1,12 +1,17 @@
 //! CPU inference runner: executes a quantized conv model over pluggable
-//! convolution engines (baseline nested loops vs HiKonv packed engines).
+//! convolution engines (baseline nested loops, HiKonv packed engines —
+//! serial or tiled across a thread pool — and the im2row lowering).
 
 use super::layer::{maxpool2, pad2d, ModelSpec};
 use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use crate::conv::im2row::Im2RowConv;
 use crate::conv::reference::conv2d_ref;
+use crate::engine::conv2d_tiled;
+use crate::exec::ThreadPool;
 use crate::quant::{QTensor, Shape};
 use crate::theory::{Multiplier, Signedness};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Which convolution engine executes the layers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -15,6 +20,18 @@ pub enum EngineKind {
     Baseline,
     /// HiKonv packed engine (Thm. 3) on a given multiplier.
     HiKonv(Multiplier),
+    /// HiKonv packed engine with output channels tiled across a thread
+    /// pool of the given size (0 = auto-size from the machine).
+    HiKonvTiled(Multiplier, usize),
+    /// im2row/matmul lowering over DotHiKonv packed dot products.
+    Im2Row(Multiplier),
+}
+
+/// The per-layer engine bound at runner construction.
+enum LayerEngine {
+    Baseline,
+    HiKonv(Conv2dHiKonv),
+    Im2Row(Im2RowConv),
 }
 
 /// Per-layer weights (+ requantization shifts calibrated at load).
@@ -52,46 +69,59 @@ pub fn random_weights(model: &ModelSpec, seed: u64) -> ModelWeights {
     }
 }
 
-/// The runner: owns prebuilt per-layer engines.
+/// The runner: owns prebuilt per-layer engines (and, for the tiled kind,
+/// the thread pool the layers shard their output channels across).
 pub struct CpuRunner {
     model: ModelSpec,
     weights: ModelWeights,
     kind: EngineKind,
-    hikonv: Vec<Option<Conv2dHiKonv>>,
+    engines: Vec<LayerEngine>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl CpuRunner {
     pub fn new(
         model: ModelSpec,
-        mut weights: ModelWeights,
+        weights: ModelWeights,
         kind: EngineKind,
     ) -> Result<CpuRunner, String> {
         model.validate()?;
-        let mut hikonv = Vec::new();
-        if let EngineKind::HiKonv(mult) = kind {
-            for (l, w) in model.layers.iter().zip(&weights.tensors) {
-                let spec = Conv2dSpec {
-                    shape: l.padded_shape(),
-                    mult,
-                    p: l.a_bits,
-                    q: l.w_bits,
-                    signedness: Signedness::UnsignedBySigned,
-                };
-                hikonv.push(Some(Conv2dHiKonv::new(spec, &w.to_i64())?));
-            }
-        } else {
-            hikonv = model.layers.iter().map(|_| None).collect();
+        let mut engines = Vec::with_capacity(model.layers.len());
+        for (l, w) in model.layers.iter().zip(&weights.tensors) {
+            let spec = Conv2dSpec {
+                shape: l.padded_shape(),
+                mult: match kind {
+                    EngineKind::Baseline => Multiplier::CPU32, // unused
+                    EngineKind::HiKonv(m)
+                    | EngineKind::HiKonvTiled(m, _)
+                    | EngineKind::Im2Row(m) => m,
+                },
+                p: l.a_bits,
+                q: l.w_bits,
+                signedness: Signedness::UnsignedBySigned,
+            };
+            engines.push(match kind {
+                EngineKind::Baseline => LayerEngine::Baseline,
+                EngineKind::HiKonv(_) | EngineKind::HiKonvTiled(..) => {
+                    LayerEngine::HiKonv(Conv2dHiKonv::new(spec, &w.to_i64())?)
+                }
+                EngineKind::Im2Row(_) => LayerEngine::Im2Row(Im2RowConv::new(spec, &w.to_i64())?),
+            });
         }
-        // Calibrate requant shifts with a mid-gray frame so both engines
+        let pool = match kind {
+            EngineKind::HiKonvTiled(_, threads) => Some(Arc::new(ThreadPool::auto_sized(threads))),
+            _ => None,
+        };
+        // Calibrate requant shifts with a mid-gray frame so all engines
         // produce identical activation flows.
         let mut runner = CpuRunner {
             model,
-            weights: weights.clone(),
+            weights,
             kind,
-            hikonv,
+            engines,
+            pool,
         };
         runner.calibrate();
-        weights.requant_shift = runner.weights.requant_shift.clone();
         Ok(runner)
     }
 
@@ -137,12 +167,15 @@ impl CpuRunner {
     fn run_layer_raw(&self, idx: usize, act: &[i64]) -> Vec<i64> {
         let l = &self.model.layers[idx];
         let padded = pad2d(act, l.ci, l.hi, l.wi, l.pad);
-        match (&self.kind, &self.hikonv[idx]) {
-            (EngineKind::Baseline, _) => {
+        match &self.engines[idx] {
+            LayerEngine::Baseline => {
                 conv2d_ref(&padded, &self.weights.tensors[idx].to_i64(), l.padded_shape())
             }
-            (EngineKind::HiKonv(_), Some(eng)) => eng.conv(&padded),
-            _ => unreachable!("hikonv engine missing"),
+            LayerEngine::HiKonv(eng) => match &self.pool {
+                Some(pool) => conv2d_tiled(eng, pool, &padded),
+                None => eng.conv(&padded),
+            },
+            LayerEngine::Im2Row(eng) => eng.conv(&padded),
         }
     }
 
@@ -222,6 +255,53 @@ mod tests {
             assert_seq_eq(&a, &b).unwrap();
             assert_eq!(base.decode(&a), hik.decode(&b));
         }
+    }
+
+    #[test]
+    fn tiled_and_im2row_agree_with_baseline_end_to_end() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 78);
+        let base = CpuRunner::new(model.clone(), weights.clone(), EngineKind::Baseline).unwrap();
+        let tiled = CpuRunner::new(
+            model.clone(),
+            weights.clone(),
+            EngineKind::HiKonvTiled(Multiplier::CPU32, 3),
+        )
+        .unwrap();
+        let im2row = CpuRunner::new(
+            model.clone(),
+            weights,
+            EngineKind::Im2Row(Multiplier::CPU32),
+        )
+        .unwrap();
+        let (c, h, w) = model.input;
+        let mut rng = Rng::new(4321);
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        let a = base.infer(&frame);
+        assert_seq_eq(&a, &tiled.infer(&frame)).unwrap();
+        assert_seq_eq(&a, &im2row.infer(&frame)).unwrap();
+    }
+
+    #[test]
+    fn tiled_inference_is_thread_count_invariant() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 79);
+        let one = CpuRunner::new(
+            model.clone(),
+            weights.clone(),
+            EngineKind::HiKonvTiled(Multiplier::CPU32, 1),
+        )
+        .unwrap();
+        let four = CpuRunner::new(
+            model.clone(),
+            weights,
+            EngineKind::HiKonvTiled(Multiplier::CPU32, 4),
+        )
+        .unwrap();
+        let (c, h, w) = model.input;
+        let mut rng = Rng::new(987);
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        assert_seq_eq(&one.infer(&frame), &four.infer(&frame)).unwrap();
     }
 
     #[test]

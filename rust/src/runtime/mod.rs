@@ -7,9 +7,93 @@
 //! reassigns ids (see /opt/xla-example/README.md).
 //!
 //! Python never runs at serving time: `make artifacts` is a build step.
+//!
+//! ## Offline build
+//!
+//! The `xla` crate (and `anyhow`) cannot be fetched in the offline build
+//! image, so this module is self-contained: errors use the crate-local
+//! [`RuntimeError`] (`anyhow`-style [`Context`] ergonomics by hand), and
+//! the xla-backed implementation is gated behind the `pjrt` cargo feature.
+//! The default build compiles an API-identical stub whose constructors
+//! return a descriptive [`RuntimeError`].
+//!
+//! Re-enabling the real runtime takes two steps (the dependency cannot be
+//! pre-declared: cargo resolves even optional path deps at build time,
+//! which would break the no-vendor offline build): (1) vendor the `xla`
+//! crate and declare it in `rust/Cargo.toml` —
+//! `xla = { path = "vendor/xla", optional = true }` plus
+//! `pjrt = ["dep:xla"]` — then (2) build with `--features pjrt`.
 
-use anyhow::{anyhow, Context, Result};
-use std::path::{Path, PathBuf};
+use std::fmt;
+use std::path::PathBuf;
+
+/// Crate-local error: a root message plus a chain of context strings
+/// (outermost last-added, printed first — matching `anyhow`'s rendering).
+#[derive(Clone, Debug)]
+pub struct RuntimeError {
+    msg: String,
+    chain: Vec<String>,
+}
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError {
+            msg: msg.into(),
+            chain: Vec::new(),
+        }
+    }
+
+    /// Wrap with a higher-level context message.
+    pub fn context(mut self, ctx: impl Into<String>) -> RuntimeError {
+        self.chain.push(ctx.into());
+        self
+    }
+
+    /// The root cause message.
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for ctx in self.chain.iter().rev() {
+            write!(f, "{ctx}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Runtime-flavoured `Result` (the `anyhow::Result` analogue).
+pub type Result<T, E = RuntimeError> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-like extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`RuntimeError`].
+    fn context(self, ctx: impl Into<String>) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl Into<String>) -> Result<T> {
+        self.map_err(|e| RuntimeError::new(e.to_string()).context(ctx))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| RuntimeError::new(e.to_string()).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| RuntimeError::new(ctx))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| RuntimeError::new(f()))
+    }
+}
 
 /// Standard artifact names emitted by `python/compile/aot.py`.
 pub mod artifacts {
@@ -30,133 +114,200 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-/// A PJRT CPU runtime holding compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::{artifacts_dir, Context as _, Result, RuntimeError};
+    use std::path::Path;
 
-/// One compiled model.
-pub struct LoadedModel {
-    name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime { client })
+    /// A PJRT CPU runtime holding compiled executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One compiled model.
+    pub struct LoadedModel {
+        name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Load + compile an HLO-text artifact.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
-        Ok(LoadedModel {
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-            exe,
-        })
-    }
-
-    /// Load a named artifact from the artifacts directory.
-    pub fn load_artifact(&self, name: &str) -> Result<LoadedModel> {
-        let path = artifacts_dir().join(name);
-        if !path.exists() {
-            return Err(anyhow!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
-            ));
+    impl Runtime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::new(format!("PJRT cpu client: {e}")))?;
+            Ok(Runtime { client })
         }
-        self.load_hlo_text(&path)
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| RuntimeError::new(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| RuntimeError::new(format!("compile {}: {e}", path.display())))?;
+            Ok(LoadedModel {
+                name: path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+                exe,
+            })
+        }
+
+        /// Load a named artifact from the artifacts directory.
+        pub fn load_artifact(&self, name: &str) -> Result<LoadedModel> {
+            let path = artifacts_dir().join(name);
+            if !path.exists() {
+                return Err(RuntimeError::new(format!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            self.load_hlo_text(&path)
+        }
+    }
+
+    impl LoadedModel {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with f32 inputs; returns all tuple outputs flattened to
+        /// f32 vectors (jax lowers with `return_tuple=True`).
+        pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+            let literals = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    xla::Literal::vec1(data)
+                        .reshape(dims)
+                        .map_err(|e| RuntimeError::new(format!("reshape to {dims:?}: {e}")))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| RuntimeError::new(format!("execute {}: {e}", self.name)))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError::new(format!("fetch result: {e}")))?;
+            let parts = out
+                .to_tuple()
+                .map_err(|e| RuntimeError::new(format!("untuple result: {e}")))?;
+            parts
+                .into_iter()
+                .map(|l| {
+                    // Convert whatever element type came back into f32.
+                    let l = l
+                        .convert(xla::PrimitiveType::F32)
+                        .map_err(|e| RuntimeError::new(format!("convert: {e}")))?;
+                    l.to_vec::<f32>()
+                        .map_err(|e| RuntimeError::new(format!("to_vec: {e}")))
+                })
+                .collect()
+        }
+
+        /// Execute with i32 inputs (quantized levels); outputs as i32.
+        pub fn run_i32(&self, inputs: &[(Vec<i32>, Vec<i64>)]) -> Result<Vec<Vec<i32>>> {
+            let literals = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    xla::Literal::vec1(data)
+                        .reshape(dims)
+                        .map_err(|e| RuntimeError::new(format!("reshape to {dims:?}: {e}")))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| RuntimeError::new(format!("execute {}: {e}", self.name)))?;
+            let out = result[0][0].to_literal_sync().context("fetch result")?;
+            let parts = out
+                .to_tuple()
+                .map_err(|e| RuntimeError::new(format!("untuple: {e}")))?;
+            parts
+                .into_iter()
+                .map(|l| {
+                    let l = l
+                        .convert(xla::PrimitiveType::S32)
+                        .map_err(|e| RuntimeError::new(format!("convert: {e}")))?;
+                    l.to_vec::<i32>()
+                        .map_err(|e| RuntimeError::new(format!("to_vec: {e}")))
+                })
+                .collect()
+        }
     }
 }
 
-impl LoadedModel {
-    pub fn name(&self) -> &str {
-        &self.name
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{LoadedModel, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::{Result, RuntimeError};
+    use std::path::Path;
+
+    const DISABLED: &str =
+        "PJRT support not compiled in (build with `--features pjrt` and a vendored `xla` crate)";
+
+    /// API-compatible stand-in for the xla-backed runtime; every
+    /// constructor reports that the `pjrt` feature is disabled.
+    pub struct Runtime {
+        _private: (),
     }
 
-    /// Execute with f32 inputs; returns all tuple outputs flattened to f32
-    /// vectors (jax lowers with `return_tuple=True`).
-    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
-        let literals = inputs
-            .iter()
-            .map(|(data, dims)| {
-                xla::Literal::vec1(data)
-                    .reshape(dims)
-                    .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e}"))?;
-        let parts = out
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple result: {e}"))?;
-        parts
-            .into_iter()
-            .map(|l| {
-                // Convert whatever element type came back into f32.
-                let l = l
-                    .convert(xla::PrimitiveType::F32)
-                    .map_err(|e| anyhow!("convert: {e}"))?;
-                l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
-            })
-            .collect()
+    /// One compiled model (never constructible without the `pjrt` feature).
+    pub struct LoadedModel {
+        _private: (),
     }
 
-    /// Execute with i32 inputs (quantized levels); outputs converted to i32.
-    pub fn run_i32(&self, inputs: &[(Vec<i32>, Vec<i64>)]) -> Result<Vec<Vec<i32>>> {
-        let literals = inputs
-            .iter()
-            .map(|(data, dims)| {
-                xla::Literal::vec1(data)
-                    .reshape(dims)
-                    .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
-        parts
-            .into_iter()
-            .map(|l| {
-                let l = l
-                    .convert(xla::PrimitiveType::S32)
-                    .map_err(|e| anyhow!("convert: {e}"))?;
-                l.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))
-            })
-            .collect()
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Err(RuntimeError::new(DISABLED))
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+            Err(RuntimeError::new(DISABLED).context(format!("load {}", path.display())))
+        }
+
+        pub fn load_artifact(&self, name: &str) -> Result<LoadedModel> {
+            Err(RuntimeError::new(DISABLED).context(format!("load artifact {name}")))
+        }
+    }
+
+    impl LoadedModel {
+        pub fn name(&self) -> &str {
+            "pjrt-disabled"
+        }
+
+        pub fn run_f32(&self, _inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+            Err(RuntimeError::new(DISABLED))
+        }
+
+        pub fn run_i32(&self, _inputs: &[(Vec<i32>, Vec<i64>)]) -> Result<Vec<Vec<i32>>> {
+            Err(RuntimeError::new(DISABLED))
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedModel, Runtime};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // PJRT-heavy tests live in rust/tests/runtime_pjrt.rs (they need the
-    // artifacts built). Here: pure-path logic only.
+    // artifacts built and the `pjrt` feature). Here: pure-path logic only.
 
     #[test]
     fn artifacts_dir_env_override() {
@@ -173,5 +324,33 @@ mod tests {
     fn artifact_names_are_stable() {
         assert_eq!(artifacts::ULTRANET, "ultranet.hlo.txt");
         assert_eq!(artifacts::HIKONV_CONV1D, "hikonv_conv1d.hlo.txt");
+    }
+
+    #[test]
+    fn error_renders_context_outermost_first() {
+        let e = RuntimeError::new("root")
+            .context("inner")
+            .context("outer");
+        assert_eq!(e.to_string(), "outer: inner: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn context_trait_wraps_results_and_options() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let wrapped = r.context("formatting");
+        assert!(wrapped.unwrap_err().to_string().starts_with("formatting: "));
+
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.context("missing").unwrap(), 7);
+        let none: Option<u32> = None;
+        assert_eq!(none.with_context(|| "missing".into()).unwrap_err().to_string(), "missing");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_disabled_feature() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

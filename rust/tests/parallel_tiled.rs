@@ -1,0 +1,185 @@
+//! Properties of the parallel tiled execution subsystem: the packed dot
+//! product and the tiled conv2d engine match the scalar references over
+//! the full `(p, q) ∈ 1..=8` bitwidth grid and every signedness, and the
+//! tiled outputs are bit-identical for any thread count.
+
+use hikonv::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use hikonv::conv::dot::{dot_ref, DotHiKonv};
+use hikonv::conv::im2row::Im2RowConv;
+use hikonv::conv::reference::{conv2d_ref, ConvShape};
+use hikonv::engine::conv2d_tiled;
+use hikonv::exec::ThreadPool;
+use hikonv::testing::assert_seq_eq;
+use hikonv::theory::{Multiplier, Signedness};
+use hikonv::util::rng::Rng;
+
+fn gen_vec(rng: &mut Rng, bits: u32, signed: bool, len: usize) -> Vec<i64> {
+    if signed {
+        rng.quant_signed_vec(bits, len)
+    } else {
+        rng.quant_unsigned_vec(bits, len)
+    }
+}
+
+fn signed_operands(sgn: Signedness) -> (bool, bool) {
+    match sgn {
+        Signedness::Unsigned => (false, false),
+        Signedness::Signed => (true, true),
+        Signedness::UnsignedBySigned => (false, true),
+    }
+}
+
+/// `DotHiKonv::dot` equals the scalar dot product for every bitwidth pair
+/// and signedness on the 32×32 CPU multiplier.
+#[test]
+fn dot_matches_reference_over_full_bitwidth_grid() {
+    let mut rng = Rng::new(0x0D07);
+    for p in 1..=8u32 {
+        for q in 1..=8u32 {
+            for sgn in [
+                Signedness::Unsigned,
+                Signedness::Signed,
+                Signedness::UnsignedBySigned,
+            ] {
+                let eng = match DotHiKonv::new(Multiplier::CPU32, p, q, sgn) {
+                    Ok(e) => e,
+                    // A signed 1-bit operand set ({-1, 0}) is degenerate;
+                    // tolerate an infeasible solve only there.
+                    Err(_) if matches!(sgn, Signedness::Signed) && p.min(q) == 1 => continue,
+                    Err(e) => panic!("no dot design point for p={p} q={q} {sgn:?}: {e}"),
+                };
+                let (sx, sy) = signed_operands(sgn);
+                for len in [1usize, 7, 63, 200] {
+                    let x = gen_vec(&mut rng, p, sx, len);
+                    let y = gen_vec(&mut rng, q, sy, len);
+                    assert_eq!(
+                        eng.dot(&x, &y),
+                        dot_ref(&x, &y),
+                        "p={p} q={q} {sgn:?} len={len}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The tiled conv2d path equals `conv2d_ref` over the full `(p, q)` grid
+/// and every signedness. The layer is below the small-layer serial
+/// cutoff, so `conv2d_tiled` covers the serial route while an explicit
+/// uneven `conv_co_range` split covers tile composition at every point.
+#[test]
+fn tiled_conv2d_matches_reference_over_full_bitwidth_grid() {
+    let mut rng = Rng::new(0x711E);
+    let pool = ThreadPool::new(3);
+    let shape = ConvShape {
+        ci: 3,
+        co: 5,
+        hi: 5,
+        wi: 9,
+        k: 3,
+    };
+    for p in 1..=8u32 {
+        for q in 1..=8u32 {
+            for sgn in [
+                Signedness::Unsigned,
+                Signedness::Signed,
+                Signedness::UnsignedBySigned,
+            ] {
+                let (sx, sw) = signed_operands(sgn);
+                let input = gen_vec(&mut rng, p, sx, shape.input_len());
+                let weights = gen_vec(&mut rng, q, sw, shape.weight_len());
+                let spec = Conv2dSpec {
+                    shape,
+                    mult: Multiplier::CPU32,
+                    p,
+                    q,
+                    signedness: sgn,
+                };
+                let eng = match Conv2dHiKonv::new(spec, &weights) {
+                    Ok(e) => e,
+                    Err(_) if matches!(sgn, Signedness::Signed) && p.min(q) == 1 => continue,
+                    Err(e) => panic!("no conv2d design point for p={p} q={q} {sgn:?}: {e}"),
+                };
+                let want = conv2d_ref(&input, &weights, shape);
+                assert_seq_eq(&conv2d_tiled(&eng, &pool, &input), &want)
+                    .unwrap_or_else(|e| panic!("p={p} q={q} {sgn:?}: {e}"));
+                // Uneven explicit tiles: 2 + 2 + 1 output channels.
+                let packed = eng.pack_input(&input);
+                let rows = shape.ho() * shape.wo();
+                let mut out = vec![0i64; shape.output_len()];
+                for (start, end) in [(0usize, 2usize), (2, 4), (4, 5)] {
+                    eng.conv_co_range(&packed, start, end, &mut out[start * rows..end * rows]);
+                }
+                assert_seq_eq(&out, &want)
+                    .unwrap_or_else(|e| panic!("tiles p={p} q={q} {sgn:?}: {e}"));
+            }
+        }
+    }
+}
+
+/// Determinism: 1-thread and N-thread tiled outputs are bit-identical —
+/// and identical to the serial engine — on a layer whose channel count
+/// does not divide evenly into tiles (and which is large enough to take
+/// the parallel path, not the small-layer serial cutoff).
+#[test]
+fn tiled_outputs_invariant_under_thread_count() {
+    let shape = ConvShape {
+        ci: 16,
+        co: 13,
+        hi: 8,
+        wi: 30,
+        k: 3,
+    };
+    assert!(shape.macs() >= 100_000, "shape too small to exercise tiling");
+    let mut rng = Rng::new(0xDE7);
+    let input = rng.quant_unsigned_vec(4, shape.input_len());
+    let weights = rng.quant_signed_vec(4, shape.weight_len());
+    let eng = Conv2dHiKonv::new(
+        Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        },
+        &weights,
+    )
+    .unwrap();
+    let serial = eng.conv(&input);
+    assert_seq_eq(&serial, &conv2d_ref(&input, &weights, shape)).unwrap();
+    for threads in [1usize, 2, 3, 5, 8, 16] {
+        let tiled = conv2d_tiled(&eng, &ThreadPool::new(threads), &input);
+        assert_seq_eq(&tiled, &serial).unwrap_or_else(|e| panic!("threads={threads}: {e}"));
+    }
+}
+
+/// The im2row lowering (DotHiKonv-backed) equals the reference across the
+/// bitwidth diagonal — the FC-shaped reuse path of the tentpole.
+#[test]
+fn im2row_matches_reference_across_bitwidths() {
+    let mut rng = Rng::new(0x1280);
+    let shape = ConvShape {
+        ci: 2,
+        co: 3,
+        hi: 6,
+        wi: 7,
+        k: 3,
+    };
+    for bits in 1..=8u32 {
+        for sgn in [Signedness::Unsigned, Signedness::UnsignedBySigned] {
+            let (sx, sw) = signed_operands(sgn);
+            let input = gen_vec(&mut rng, bits, sx, shape.input_len());
+            let weights = gen_vec(&mut rng, bits, sw, shape.weight_len());
+            let spec = Conv2dSpec {
+                shape,
+                mult: Multiplier::CPU32,
+                p: bits,
+                q: bits,
+                signedness: sgn,
+            };
+            let eng = Im2RowConv::new(spec, &weights).unwrap();
+            assert_seq_eq(&eng.conv(&input), &conv2d_ref(&input, &weights, shape))
+                .unwrap_or_else(|e| panic!("bits={bits} {sgn:?}: {e}"));
+        }
+    }
+}
