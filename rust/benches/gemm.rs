@@ -1,0 +1,224 @@
+//! Bench: the pre-packed GEMM subsystem vs the per-dot-packing kernel it
+//! replaced, on (a) an FC-shaped quantized matmul and (b) a full im2row
+//! UltraNet layer at the paper's 4-bit CPU32 point.
+//!
+//! `per-dot` re-packs both operands inside every dot product — the
+//! implementation `DotHiKonv::matmul` / `Im2RowConv::conv` used before
+//! the `PackedGemm` refactor (`O(m·n·k)` packing). `packed` packs the
+//! right operand once up front and the left operand once per call
+//! (`O((m+n)·k)`); `packed+tiled` additionally shards tiles across the
+//! thread pool. Outputs are cross-checked bit-exact before any timing.
+//!
+//! Set `HIKONV_BENCH_QUICK=1` for a CI smoke pass and
+//! `HIKONV_BENCH_OUT=<path>` to record the JSON baseline (see
+//! BENCH_gemm.json at the repo root).
+
+use hikonv::bench::{BenchConfig, Bencher};
+use hikonv::conv::conv2d::Conv2dSpec;
+use hikonv::conv::dot::{dot_ref, DotHiKonv};
+use hikonv::conv::gemm::PackedGemm;
+use hikonv::conv::im2row::Im2RowConv;
+use hikonv::conv::reference::conv2d_ref;
+use hikonv::engine::im2row_tiled;
+use hikonv::exec::{default_threads, ThreadPool};
+use hikonv::models::ultranet;
+use hikonv::theory::{Multiplier, Signedness};
+use hikonv::util::json::Json;
+use hikonv::util::rng::Rng;
+use hikonv::util::table::Table;
+
+/// The pre-refactor matmul: one `dot` call per output cell, packing both
+/// operands inside every call.
+fn matmul_per_dot(eng: &DotHiKonv, a: &[i64], b_t: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for row in 0..m {
+        let ar = &a[row * k..(row + 1) * k];
+        for col in 0..n {
+            out[row * n + col] = eng.dot(ar, &b_t[col * k..(col + 1) * k]);
+        }
+    }
+    out
+}
+
+/// The pre-refactor im2row layer: materialize the full im2row matrix,
+/// run the per-dot matmul, then transpose pixel-major to co-major.
+fn im2row_conv_per_dot(eng: &Im2RowConv, weights: &[i64], input: &[i64]) -> Vec<i64> {
+    let sh = eng.spec().shape;
+    let (m, kk) = (sh.ho() * sh.wo(), sh.ci * sh.k * sh.k);
+    let rows = eng.im2row(input);
+    let pixel_major = matmul_per_dot(eng.dot_engine(), &rows, weights, m, kk, sh.co);
+    let mut out = vec![0i64; sh.output_len()];
+    for p in 0..m {
+        for co in 0..sh.co {
+            out[co * m + p] = pixel_major[p * sh.co + co];
+        }
+    }
+    out
+}
+
+fn main() {
+    let config = BenchConfig::from_env();
+    let threads = default_threads();
+    let pool = ThreadPool::new(threads);
+    let mut bencher = Bencher::with_config("gemm", config);
+    let mut json_rows = Vec::new();
+    let mut table = Table::new(
+        &format!("gemm: per-dot packing vs pre-packed vs pre-packed+tiled ({threads} threads)"),
+        &["case", "per-dot", "packed", "packed+tiled", "packed x", "tiled x"],
+    );
+
+    // (a) FC-shaped matmul at the 4-bit CPU32 point.
+    {
+        let (m, k, n) = (128usize, 512usize, 64usize);
+        let mut rng = Rng::new(0x6EFC);
+        let a = rng.quant_unsigned_vec(4, m * k);
+        let bt = rng.quant_signed_vec(4, n * k);
+        let dot = DotHiKonv::new(Multiplier::CPU32, 4, 4, Signedness::UnsignedBySigned)
+            .expect("feasible design point");
+        let gemm = PackedGemm::with_design_point(*dot.design_point(), &bt, k, n);
+        assert!(gemm.uses_fast_lane(), "CPU32 4-bit must take the i64 lane");
+
+        // Correctness gate before any timing.
+        let mut want = vec![0i64; m * n];
+        for row in 0..m {
+            for col in 0..n {
+                want[row * n + col] =
+                    dot_ref(&a[row * k..(row + 1) * k], &bt[col * k..(col + 1) * k]);
+            }
+        }
+        assert_eq!(matmul_per_dot(&dot, &a, &bt, m, k, n), want, "per-dot mismatch");
+        assert_eq!(gemm.matmul(&gemm.pack_lhs(&a, m)), want, "packed mismatch");
+        assert_eq!(
+            gemm.matmul_tiled(&gemm.pack_lhs(&a, m), &pool),
+            want,
+            "tiled mismatch"
+        );
+
+        let per_dot = bencher
+            .bench("per-dot/fc", || matmul_per_dot(&dot, &a, &bt, m, k, n))
+            .median_ns();
+        let packed = bencher
+            .bench("packed/fc", || gemm.matmul(&gemm.pack_lhs(&a, m)))
+            .median_ns();
+        let tiled = bencher
+            .bench("packed+tiled/fc", || {
+                gemm.matmul_tiled(&gemm.pack_lhs(&a, m), &pool)
+            })
+            .median_ns();
+        table.row(hikonv::cells!(
+            format!("fc {m}x{k}x{n}"),
+            hikonv::bench::fmt_ns(per_dot),
+            hikonv::bench::fmt_ns(packed),
+            hikonv::bench::fmt_ns(tiled),
+            format!("{:.2}x", per_dot / packed),
+            format!("{:.2}x", per_dot / tiled)
+        ));
+        json_rows.push(
+            Json::obj()
+                .set("case", "fc")
+                .set("m", m)
+                .set("k", k)
+                .set("n", n)
+                .set("per_dot_ns", per_dot)
+                .set("packed_ns", packed)
+                .set("tiled_ns", tiled)
+                .set("speedup_packed", per_dot / packed)
+                .set("speedup_tiled", per_dot / tiled),
+        );
+    }
+
+    // (b) im2row UltraNet layers (the conv the paper benches, Fig. 6b).
+    let model = ultranet();
+    let picks = ["conv4", "conv8"];
+    for layer in model.layers.iter().filter(|l| picks.contains(&l.name.as_str())) {
+        let shape = layer.padded_shape();
+        let mut rng = Rng::new(0x6E2D ^ layer.co as u64);
+        let input = rng.quant_unsigned_vec(layer.a_bits, shape.input_len());
+        let weights = rng.quant_signed_vec(layer.w_bits, shape.weight_len());
+        let eng = Im2RowConv::new(
+            Conv2dSpec {
+                shape,
+                mult: Multiplier::CPU32,
+                p: layer.a_bits,
+                q: layer.w_bits,
+                signedness: Signedness::UnsignedBySigned,
+            },
+            &weights,
+        )
+        .expect("feasible design point");
+
+        // Correctness gate: every path bit-exact vs the 6-loop reference.
+        let want = conv2d_ref(&input, &weights, shape);
+        assert_eq!(
+            im2row_conv_per_dot(&eng, &weights, &input),
+            want,
+            "{} per-dot mismatch",
+            layer.name
+        );
+        assert_eq!(eng.conv(&input), want, "{} packed mismatch", layer.name);
+        assert_eq!(
+            im2row_tiled(&eng, &pool, &input),
+            want,
+            "{} tiled mismatch",
+            layer.name
+        );
+        assert_eq!(
+            im2row_tiled(&eng, &ThreadPool::new(1), &input),
+            want,
+            "{} 1-thread tiled mismatch",
+            layer.name
+        );
+
+        let per_dot = bencher
+            .bench(&format!("per-dot/{}", layer.name), || {
+                im2row_conv_per_dot(&eng, &weights, &input)
+            })
+            .median_ns();
+        let packed = bencher
+            .bench(&format!("packed/{}", layer.name), || eng.conv(&input))
+            .median_ns();
+        let tiled = bencher
+            .bench(&format!("packed+tiled/{}", layer.name), || {
+                im2row_tiled(&eng, &pool, &input)
+            })
+            .median_ns();
+        table.row(hikonv::cells!(
+            format!("im2row {}", layer.name),
+            hikonv::bench::fmt_ns(per_dot),
+            hikonv::bench::fmt_ns(packed),
+            hikonv::bench::fmt_ns(tiled),
+            format!("{:.2}x", per_dot / packed),
+            format!("{:.2}x", per_dot / tiled)
+        ));
+        json_rows.push(
+            Json::obj()
+                .set("case", format!("im2row/{}", layer.name).as_str())
+                .set("ci", shape.ci)
+                .set("co", shape.co)
+                .set("hi", shape.hi)
+                .set("wi", shape.wi)
+                .set("k", shape.k)
+                .set("per_dot_ns", per_dot)
+                .set("packed_ns", packed)
+                .set("tiled_ns", tiled)
+                .set("speedup_packed", per_dot / packed)
+                .set("speedup_tiled", per_dot / tiled),
+        );
+    }
+
+    print!("{}", table.render());
+    let report = Json::obj()
+        .set("bench", "gemm")
+        .set("threads", threads)
+        .set(
+            "quick",
+            std::env::var("HIKONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false),
+        )
+        .set("rows", Json::Array(json_rows));
+    let rendered = report.to_string_pretty();
+    println!("{rendered}");
+    if let Ok(path) = std::env::var("HIKONV_BENCH_OUT") {
+        std::fs::write(&path, format!("{rendered}\n")).expect("write bench baseline");
+        eprintln!("wrote {path}");
+    }
+}

@@ -210,15 +210,28 @@ impl Conv2dHiKonv {
             (co_end - co_start) * sh.ho() * sh.wo(),
             "tile length mismatch"
         );
-        if self.use64 {
-            self.conv_core::<i64>(&packed.w64, &self.packed_w64, co_start, co_end, out_tile);
-        } else {
-            self.conv_core::<i128>(&packed.w128, &self.packed_w, co_start, co_end, out_tile);
+        // Monomorphized dispatch: the word lane AND the signedness are
+        // const parameters, so the segmentation branch is resolved at
+        // compile time instead of inside the inner emit loop.
+        match (self.use64, self.signed) {
+            (true, true) => {
+                self.conv_core::<i64, true>(&packed.w64, &self.packed_w64, co_start, co_end, out_tile)
+            }
+            (true, false) => {
+                self.conv_core::<i64, false>(&packed.w64, &self.packed_w64, co_start, co_end, out_tile)
+            }
+            (false, true) => {
+                self.conv_core::<i128, true>(&packed.w128, &self.packed_w, co_start, co_end, out_tile)
+            }
+            (false, false) => {
+                self.conv_core::<i128, false>(&packed.w128, &self.packed_w, co_start, co_end, out_tile)
+            }
         }
     }
 
-    /// The streaming Thm.-3 core, generic over the word lane.
-    fn conv_core<W: ProdWord>(
+    /// The streaming Thm.-3 core, generic over the word lane and
+    /// monomorphized over signedness.
+    fn conv_core<W: ProdWord, const SIGNED: bool>(
         &self,
         packed_in: &[W],
         packed_w: &[W],
@@ -234,6 +247,9 @@ impl Conv2dHiKonv {
         let conv_len = sh.wi + k - 1;
         let mut seg_buf = vec![0i64; conv_len];
         for co in co_start..co_end {
+            // Weight-row base for this output channel, hoisted so the
+            // `(co·ci)·k` multiply never runs inside the chunk loop.
+            let co_wbase = co * sh.ci * k;
             for h in 0..ho {
                 let base = ((co - co_start) * ho + h) * wo;
                 let out_row = &mut out_tile[base..base + wo];
@@ -248,7 +264,7 @@ impl Conv2dHiKonv {
                     for x in 0..x_chunks {
                         let mut sum = acc;
                         for ci in block_start..block_end {
-                            let wbase = (co * sh.ci + ci) * k;
+                            let wbase = co_wbase + ci * k;
                             let ibase = (ci * sh.hi + h) * x_chunks;
                             for kh in 0..k {
                                 let a = packed_in[ibase + kh * x_chunks + x];
@@ -257,7 +273,7 @@ impl Conv2dHiKonv {
                         }
                         let emit = n.min(conv_len - m);
                         let mut w = sum;
-                        if self.signed {
+                        if SIGNED {
                             for _ in 0..emit {
                                 seg_buf[m] = w.low_seg_signed(s) + carry;
                                 carry = w.bit(s - 1);
@@ -279,7 +295,7 @@ impl Conv2dHiKonv {
                     // Flush pending overlap segments.
                     let mut w = acc;
                     while m < conv_len {
-                        if self.signed {
+                        if SIGNED {
                             seg_buf[m] = w.low_seg_signed(s) + carry;
                             carry = w.bit(s - 1);
                         } else {
@@ -320,13 +336,38 @@ fn pack_rows<W: ProdWord>(
     packed_in
 }
 
-/// Pick the deepest channel block whose guard bits keep `N >= 2`, searching
-/// downward from `C_i`; returns the block and its design point.
+/// Candidate channel-block depths for `ci` input channels: every divisor
+/// of `ci` (blocks that tile the channel dim evenly), a `ci, ci-1, …`
+/// down-sweep capped at [`BLOCK_DOWN_SWEEP`] probes (so odd channel
+/// counts still reach deep non-divisor blocks the halving ladder would
+/// skip), and the halving ladder itself as a backstop for very large
+/// `ci`. Returned deduplicated, descending.
+fn channel_block_candidates(ci: usize) -> Vec<usize> {
+    const BLOCK_DOWN_SWEEP: usize = 64;
+    let mut candidates: Vec<usize> = (1..=ci).filter(|d| ci % d == 0).collect();
+    candidates.extend(ci.saturating_sub(BLOCK_DOWN_SWEEP - 1).max(1)..=ci);
+    let mut block = ci;
+    loop {
+        candidates.push(block);
+        if block <= 1 {
+            break;
+        }
+        block /= 2;
+    }
+    candidates.sort_unstable_by(|a, b| b.cmp(a));
+    candidates.dedup();
+    candidates
+}
+
+/// Pick the channel block (and its design point) minimizing the
+/// wide-mul + segmentation cost model, probing [`channel_block_candidates`]
+/// from the deepest down (ties keep the deeper block, matching the old
+/// halving search); blocks whose guard bits force `N < 2` are rejected
+/// unless no deeper block is feasible at all.
 fn choose_channel_block(spec: &Conv2dSpec) -> Result<(usize, DesignPoint), String> {
     let sh = spec.shape;
     let mut best: Option<(usize, DesignPoint, u64)> = None;
-    let mut block = sh.ci.max(1);
-    loop {
+    for block in channel_block_candidates(sh.ci.max(1)) {
         let m = (block * sh.k) as u64;
         if let Ok(dp) = solve(
             spec.mult,
@@ -346,10 +387,6 @@ fn choose_channel_block(spec: &Conv2dSpec) -> Result<(usize, DesignPoint), Strin
                 }
             }
         }
-        if block == 1 {
-            break;
-        }
-        block = block / 2;
     }
     best.map(|(b, dp, _)| (b, dp))
         .ok_or_else(|| "no feasible channel block".to_string())
@@ -667,6 +704,56 @@ mod tests {
         }
         assert_seq_eq(&out, &eng.conv(&input)).unwrap();
         assert_seq_eq(&out, &conv2d_ref(&input, &weights, shape)).unwrap();
+    }
+
+    #[test]
+    fn block_candidates_cover_divisors_and_down_sweep() {
+        // Divisors beyond the halving ladder must be probed: 12 has
+        // divisor 3 (halvings give 12, 6, 3, 1 — but 4 only via divisors).
+        let c12 = channel_block_candidates(12);
+        for d in [12usize, 6, 4, 3, 2, 1] {
+            assert!(c12.contains(&d), "12: missing {d} in {c12:?}");
+        }
+        // Odd counts reach non-divisor depths through the down-sweep.
+        let c9 = channel_block_candidates(9);
+        for d in [9usize, 8, 7, 6, 5, 4, 3, 2, 1] {
+            assert!(c9.contains(&d), "9: missing {d} in {c9:?}");
+        }
+        // Descending and deduplicated.
+        assert!(c9.windows(2).all(|w| w[0] > w[1]), "{c9:?}");
+        assert_eq!(c9[0], 9);
+        assert_eq!(*c9.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn odd_channel_counts_block_correctly() {
+        // Channel counts with sparse divisor ladders still pick feasible
+        // blocks and stay bit-exact vs the reference.
+        for (ci, seed) in [(7usize, 70u64), (9, 71), (13, 72), (27, 73)] {
+            let shape = ConvShape {
+                ci,
+                co: 2,
+                hi: 5,
+                wi: 9,
+                k: 3,
+            };
+            check_layer(shape, 4, 4, Signedness::UnsignedBySigned, seed);
+            let mut rng = Rng::new(seed ^ 0xB10C);
+            let weights = rng.quant_signed_vec(4, shape.weight_len());
+            let eng = Conv2dHiKonv::new(
+                Conv2dSpec {
+                    shape,
+                    mult: Multiplier::CPU32,
+                    p: 4,
+                    q: 4,
+                    signedness: Signedness::UnsignedBySigned,
+                },
+                &weights,
+            )
+            .unwrap();
+            let block = eng.channel_block();
+            assert!((1..=ci).contains(&block), "ci={ci} block={block}");
+        }
     }
 
     #[test]

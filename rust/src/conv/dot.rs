@@ -16,6 +16,7 @@
 //! covering the cross-block accumulation depth — we segment per block and
 //! accumulate in i64, which removes that constraint entirely).
 
+use super::gemm::PackedGemm;
 use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness, SolveError};
 
 /// A HiKonv dot-product engine for a fixed design point.
@@ -52,7 +53,11 @@ impl DotHiKonv {
         self.block
     }
 
-    /// Exact dot product `Σ x[i]·y[i]` of quantized vectors.
+    /// Exact dot product `Σ x[i]·y[i]` of quantized vectors — the
+    /// scalar-block fallback kernel: both operands are packed inside the
+    /// call, block by block. Hot paths that reuse an operand across many
+    /// dot products should go through [`PackedGemm`] instead, which
+    /// amortizes the packing (`O((m+n)·k)` instead of `O(m·n·k)`).
     pub fn dot(&self, x: &[i64], y: &[i64]) -> i64 {
         assert_eq!(x.len(), y.len(), "length mismatch");
         let s = self.dp.s;
@@ -96,17 +101,19 @@ impl DotHiKonv {
     /// Quantized matrix multiply: `a` is (m × k) row-major, `b_t` is the
     /// **transposed** right operand (n × k row-major, i.e. rows are the
     /// columns of B). Returns (m × n) row-major i64.
+    ///
+    /// Routed through [`PackedGemm`] on this engine's design point: each
+    /// operand is packed exactly once per call — **not** once per dot
+    /// product, as this method originally did. That per-dot-product
+    /// packing is deprecated; and since this convenience method still
+    /// re-packs `b_t` on every call, hold a [`PackedGemm`] (weights
+    /// packed at construction) across calls on hot paths to amortize the
+    /// right-operand packing too.
     pub fn matmul(&self, a: &[i64], b_t: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
         assert_eq!(a.len(), m * k);
         assert_eq!(b_t.len(), n * k);
-        let mut out = vec![0i64; m * n];
-        for row in 0..m {
-            let ar = &a[row * k..row * k + k];
-            for col in 0..n {
-                out[row * n + col] = self.dot(ar, &b_t[col * k..col * k + k]);
-            }
-        }
-        out
+        let gemm = PackedGemm::with_design_point(self.dp, b_t, k, n);
+        gemm.matmul(&gemm.pack_lhs(a, m))
     }
 }
 

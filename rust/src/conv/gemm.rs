@@ -1,0 +1,559 @@
+//! Pre-packed quantized GEMM: the HiKonv dot-product kernel with packing
+//! amortized the way the paper's engines amortize it for convolution
+//! ("kernels are packed offline before the processing starts", §IV-A).
+//!
+//! # Why pre-packing matters
+//!
+//! One wide multiplication of two packed words computes a `b = min(N, K)`
+//! term partial dot product (the middle segment of an `F_{b,b}` block —
+//! see [`super::dot`]). A naive packed matmul that packs inside every dot
+//! product spends
+//!
+//! ```text
+//! pack cost = m·n·⌈k/b⌉·2   word packings   (both operands, every cell)
+//! ```
+//!
+//! while the products themselves only need `m·n·⌈k/b⌉` multiplications —
+//! the packing dominates. Packing each operand *once* instead costs
+//!
+//! ```text
+//! pack cost = (m + n)·⌈k/b⌉   word packings
+//! ```
+//!
+//! amortized over all `m·n` output cells, i.e. `O((m+n)·k)` instead of
+//! `O(m·n·k)` packing work. [`PackedGemm`] packs the right operand
+//! (weights) once at construction and exposes [`PackedLhs`] so callers
+//! pack the left operand (im2row rows / FC activations) once per
+//! inference.
+//!
+//! # Layout and kernel
+//!
+//! The packed right operand is stored **word-major** (`[word][col]`), so
+//! the register-blocked micro-kernel loads one packed A word and streams
+//! it against [`REG_COLS`] contiguous packed B words, amortizing the A
+//! load and keeping the column accumulators in registers. Like the
+//! conv2d engine, the whole GEMM runs in the `i64` fast lane whenever
+//! `S·(N+K−1)+1 ≤ 64` (every 32×32 CPU design point the paper evaluates)
+//! and falls back to `i128` for wider multipliers.
+//!
+//! Row tiles (and, for the co-major im2row path, column tiles) are
+//! disjoint index-addressed output regions, so parallel execution over an
+//! [`exec::ThreadPool`](crate::exec::ThreadPool) is bit-identical for any
+//! thread count — the same determinism contract as `conv2d_tiled`.
+
+use super::word::{pack_word, ProdWord};
+use crate::exec::ThreadPool;
+use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness, SolveError};
+
+/// Output columns computed per packed A-word load in the micro-kernel.
+pub const REG_COLS: usize = 4;
+
+/// Below this many MACs (`m·n·k`) a matmul runs serially even on a
+/// multi-thread pool — the scoped worker spawn/join amortizes poorly
+/// against tiny tiles (same rationale as the conv2d serial cutoff).
+const GEMM_PAR_MIN_MACS: u64 = 100_000;
+
+/// A quantized GEMM engine with the right operand pre-packed.
+///
+/// `C = A·B` where `A` is `m×k` (rows packed per inference via
+/// [`PackedGemm::pack_lhs`] / [`PackedGemm::lhs_builder`]) and `B` is
+/// held transposed (`n` rows of length `k`, packed **reversed** once at
+/// construction so the middle product segment is the dot product).
+#[derive(Clone, Debug)]
+pub struct PackedGemm {
+    dp: DesignPoint,
+    /// Dot-product terms folded into one wide multiplication: `min(N, K)`.
+    block: usize,
+    /// Packed words per operand row: `⌈k/block⌉`.
+    words_per_row: usize,
+    k_dim: usize,
+    n_dim: usize,
+    use64: bool,
+    signed: bool,
+    /// Pre-packed right operand, word-major (`[word][col]`) in the lane
+    /// selected by `use64` — only that lane is populated.
+    rhs64: Vec<i64>,
+    rhs128: Vec<i128>,
+}
+
+/// The left operand packed once per inference, shareable (read-only)
+/// across row/column tiles and threads.
+#[derive(Clone, Debug)]
+pub struct PackedLhs {
+    m: usize,
+    rows_pushed: usize,
+    k_dim: usize,
+    block: usize,
+    words_per_row: usize,
+    s: u32,
+    use64: bool,
+    w64: Vec<i64>,
+    w128: Vec<i128>,
+}
+
+impl PackedLhs {
+    /// Pack the next row (length `k`) forward into `⌈k/block⌉` words.
+    /// Short tail chunks are implicitly zero-padded at the high segments.
+    pub fn push_row(&mut self, row: &[i64]) {
+        assert_eq!(row.len(), self.k_dim, "lhs row length mismatch");
+        assert!(self.rows_pushed < self.m, "more rows than declared");
+        for chunk in row.chunks(self.block) {
+            if self.use64 {
+                self.w64.push(pack_word::<i64>(chunk, self.s));
+            } else {
+                self.w128.push(pack_word::<i128>(chunk, self.s));
+            }
+        }
+        self.rows_pushed += 1;
+    }
+
+    /// Rows packed so far (equals the declared `m` once fully built).
+    pub fn rows(&self) -> usize {
+        self.rows_pushed
+    }
+
+    fn assert_complete(&self) {
+        assert_eq!(
+            self.rows_pushed, self.m,
+            "packed lhs incomplete: {} of {} rows pushed",
+            self.rows_pushed, self.m
+        );
+    }
+}
+
+impl PackedGemm {
+    /// Solve a dot-product design point (single-block guard sizing — the
+    /// middle segment accumulates at most `min(N, K)` products; longer
+    /// vectors accumulate in the integer domain) and pre-pack `b_t`.
+    ///
+    /// `b_t` is the transposed right operand: `n` row-major rows of
+    /// length `k`, i.e. the columns of `B`.
+    pub fn new(
+        mult: Multiplier,
+        p: u32,
+        q: u32,
+        signedness: Signedness,
+        b_t: &[i64],
+        k_dim: usize,
+        n_dim: usize,
+    ) -> Result<PackedGemm, SolveError> {
+        let dp = solve(mult, p, q, signedness, AccumMode::Single)?;
+        Ok(Self::with_design_point(dp, b_t, k_dim, n_dim))
+    }
+
+    /// Build from an already-solved design point (e.g. the one a
+    /// [`DotHiKonv`](super::dot::DotHiKonv) fallback engine carries, so
+    /// the packed and scalar-block paths share exact semantics).
+    pub fn with_design_point(
+        dp: DesignPoint,
+        b_t: &[i64],
+        k_dim: usize,
+        n_dim: usize,
+    ) -> PackedGemm {
+        assert_eq!(b_t.len(), n_dim * k_dim, "rhs length mismatch");
+        let block = dp.n.min(dp.k);
+        let words_per_row = k_dim.div_ceil(block);
+        // Same i64 fast-lane criterion as `Conv2dHiKonv`: every packed
+        // word and product must fit S·(N+K-1) value bits plus a sign bit.
+        let seg_bits = dp.s * (dp.n as u32 + dp.k as u32 - 1);
+        let use64 = seg_bits + 1 <= 64;
+        let signed = !matches!(dp.signedness, Signedness::Unsigned);
+        let (rhs64, rhs128) = if use64 {
+            (pack_rhs::<i64>(b_t, k_dim, n_dim, block, dp.s), Vec::new())
+        } else {
+            (Vec::new(), pack_rhs::<i128>(b_t, k_dim, n_dim, block, dp.s))
+        };
+        PackedGemm {
+            dp,
+            block,
+            words_per_row,
+            k_dim,
+            n_dim,
+            use64,
+            signed,
+            rhs64,
+            rhs128,
+        }
+    }
+
+    pub fn design_point(&self) -> &DesignPoint {
+        &self.dp
+    }
+
+    /// Dot-product terms folded into one wide multiplication.
+    pub fn terms_per_mult(&self) -> usize {
+        self.block
+    }
+
+    /// True when the GEMM runs in the `i64` fast-path lane.
+    pub fn uses_fast_lane(&self) -> bool {
+        self.use64
+    }
+
+    /// Inner (reduction) dimension `k`.
+    pub fn k_dim(&self) -> usize {
+        self.k_dim
+    }
+
+    /// Output columns `n` (rows of the pre-packed transposed operand).
+    pub fn n_dim(&self) -> usize {
+        self.n_dim
+    }
+
+    /// An empty [`PackedLhs`] sized for `m` rows: push rows one at a time
+    /// (streaming construction — no `m×k` matrix needs to exist).
+    pub fn lhs_builder(&self, m: usize) -> PackedLhs {
+        let (mut w64, mut w128) = (Vec::new(), Vec::new());
+        if self.use64 {
+            w64.reserve(m * self.words_per_row);
+        } else {
+            w128.reserve(m * self.words_per_row);
+        }
+        PackedLhs {
+            m,
+            rows_pushed: 0,
+            k_dim: self.k_dim,
+            block: self.block,
+            words_per_row: self.words_per_row,
+            s: self.dp.s,
+            use64: self.use64,
+            w64,
+            w128,
+        }
+    }
+
+    /// Pack an `m×k` row-major left operand in one pass.
+    pub fn pack_lhs(&self, a: &[i64], m: usize) -> PackedLhs {
+        assert_eq!(a.len(), m * self.k_dim, "lhs length mismatch");
+        let mut lhs = self.lhs_builder(m);
+        for row in 0..m {
+            lhs.push_row(&a[row * self.k_dim..(row + 1) * self.k_dim]);
+        }
+        lhs
+    }
+
+    /// Compute output rows `[row_start, row_end)` × all columns into
+    /// `out` (row-major `(row_end-row_start)×n`). Disjoint row ranges
+    /// write disjoint outputs — the unit of row tiling.
+    pub fn rows_into(
+        &self,
+        lhs: &PackedLhs,
+        row_start: usize,
+        row_end: usize,
+        out: &mut [i64],
+    ) {
+        assert!(row_start <= row_end && row_end <= lhs.m, "row range out of bounds");
+        assert_eq!(
+            out.len(),
+            (row_end - row_start) * self.n_dim,
+            "row tile length mismatch"
+        );
+        self.dispatch(lhs, (row_start, row_end), (0, self.n_dim), out, false);
+    }
+
+    /// Compute all rows × output columns `[col_start, col_end)` into
+    /// `out` **column-major** (`(col_end-col_start)×m`, i.e.
+    /// `out[(col-col_start)·m + row]`) — the unit of column tiling for
+    /// the im2row path, which wants `[co][pixel]` output directly.
+    pub fn cols_into(
+        &self,
+        lhs: &PackedLhs,
+        col_start: usize,
+        col_end: usize,
+        out: &mut [i64],
+    ) {
+        assert!(col_start <= col_end && col_end <= self.n_dim, "col range out of bounds");
+        assert_eq!(
+            out.len(),
+            (col_end - col_start) * lhs.m,
+            "col tile length mismatch"
+        );
+        self.dispatch(lhs, (0, lhs.m), (col_start, col_end), out, true);
+    }
+
+    /// Serial matmul: `m×n` row-major output.
+    pub fn matmul(&self, lhs: &PackedLhs) -> Vec<i64> {
+        let mut out = vec![0i64; lhs.m * self.n_dim];
+        self.rows_into(lhs, 0, lhs.m, &mut out);
+        out
+    }
+
+    /// Matmul with row tiles sharded across `pool` (row-major output).
+    /// Bit-identical to [`matmul`](Self::matmul) for any thread count:
+    /// tiles are disjoint index-addressed regions, and the small-matrix
+    /// serial cutoff changes scheduling only, never values.
+    pub fn matmul_tiled(&self, lhs: &PackedLhs, pool: &ThreadPool) -> Vec<i64> {
+        let m = lhs.m;
+        let macs = (m as u64) * (self.n_dim as u64) * (self.k_dim as u64);
+        if pool.threads() == 1 || macs < GEMM_PAR_MIN_MACS || m == 0 || self.n_dim == 0 {
+            return self.matmul(lhs);
+        }
+        // ~4 tiles per worker for load balance, never below one row.
+        let tile_rows = m.div_ceil((pool.threads() * 4).max(1)).max(1);
+        let mut out = vec![0i64; m * self.n_dim];
+        pool.par_chunks_mut(&mut out, tile_rows * self.n_dim, |tile_idx, tile| {
+            let row_start = tile_idx * tile_rows;
+            let row_end = (row_start + tile_rows).min(m);
+            self.rows_into(lhs, row_start, row_end, tile);
+        });
+        out
+    }
+
+    /// Select the (lane × signedness × layout) monomorphized kernel.
+    fn dispatch(
+        &self,
+        lhs: &PackedLhs,
+        rows: (usize, usize),
+        cols: (usize, usize),
+        out: &mut [i64],
+        col_major: bool,
+    ) {
+        lhs.assert_complete();
+        assert_eq!(lhs.use64, self.use64, "lhs packed for a different lane");
+        assert_eq!(lhs.k_dim, self.k_dim, "lhs packed for a different k");
+        assert_eq!(lhs.block, self.block, "lhs packed for a different block");
+        assert_eq!(lhs.s, self.dp.s, "lhs packed for a different slice width");
+        assert_eq!(
+            lhs.words_per_row, self.words_per_row,
+            "lhs packed for a different k/block"
+        );
+        match (self.use64, self.signed, col_major) {
+            (true, true, true) => self.tile_core::<i64, true, true>(&lhs.w64, &self.rhs64, rows, cols, out),
+            (true, true, false) => self.tile_core::<i64, true, false>(&lhs.w64, &self.rhs64, rows, cols, out),
+            (true, false, true) => self.tile_core::<i64, false, true>(&lhs.w64, &self.rhs64, rows, cols, out),
+            (true, false, false) => self.tile_core::<i64, false, false>(&lhs.w64, &self.rhs64, rows, cols, out),
+            (false, true, true) => self.tile_core::<i128, true, true>(&lhs.w128, &self.rhs128, rows, cols, out),
+            (false, true, false) => self.tile_core::<i128, true, false>(&lhs.w128, &self.rhs128, rows, cols, out),
+            (false, false, true) => self.tile_core::<i128, false, true>(&lhs.w128, &self.rhs128, rows, cols, out),
+            (false, false, false) => self.tile_core::<i128, false, false>(&lhs.w128, &self.rhs128, rows, cols, out),
+        }
+    }
+
+    /// The register-blocked micro-kernel: for each output row, each
+    /// packed A word is loaded once and multiplied against up to
+    /// [`REG_COLS`] contiguous packed B words (word-major rhs layout),
+    /// with one segmentation per product and the tile accumulators held
+    /// in a fixed-size array.
+    fn tile_core<W: ProdWord, const SIGNED: bool, const COL_MAJOR: bool>(
+        &self,
+        a_words: &[W],
+        b_words: &[W],
+        (row_start, row_end): (usize, usize),
+        (col_start, col_end): (usize, usize),
+        out: &mut [i64],
+    ) {
+        let s = self.dp.s;
+        let mid_shift = s * (self.block as u32 - 1);
+        let wpr = self.words_per_row;
+        let nrows = row_end - row_start;
+        let ncols = col_end - col_start;
+        for row in row_start..row_end {
+            let arow = &a_words[row * wpr..row * wpr + wpr];
+            let mut col = col_start;
+            while col < col_end {
+                let tile = (col_end - col).min(REG_COLS);
+                let mut acc = [0i64; REG_COLS];
+                for (i, &a) in arow.iter().enumerate() {
+                    let brow = &b_words[i * self.n_dim + col..i * self.n_dim + col + tile];
+                    for (av, &b) in acc.iter_mut().zip(brow) {
+                        *av += mid_segment::<W, SIGNED>(a.wmul(b), s, mid_shift);
+                    }
+                }
+                for (t, &v) in acc.iter().enumerate().take(tile) {
+                    let idx = if COL_MAJOR {
+                        (col + t - col_start) * nrows + (row - row_start)
+                    } else {
+                        (row - row_start) * ncols + (col + t - col_start)
+                    };
+                    out[idx] = v;
+                }
+                col += tile;
+            }
+        }
+    }
+}
+
+/// Extract the middle (`block-1`-th) product segment: the `b`-term
+/// partial dot product. Same algebra as `DotHiKonv::dot`, monomorphized
+/// over signedness (the carry corrects the two's-complement borrow from
+/// the segment below).
+#[inline(always)]
+fn mid_segment<W: ProdWord, const SIGNED: bool>(prod: W, s: u32, mid_shift: u32) -> i64 {
+    let mid = prod.sar(mid_shift);
+    if SIGNED {
+        let carry = if mid_shift > 0 { prod.bit(mid_shift - 1) } else { 0 };
+        mid.low_seg_signed(s) + carry
+    } else {
+        mid.low_seg_unsigned(s)
+    }
+}
+
+/// Pack the transposed right operand word-major: `out[i·n + col]` is
+/// chunk `i` of column `col`, packed **reversed** (`g[j] = y[b-1-j]`) so
+/// the middle product segment is the dot product. Short tail chunks land
+/// at the *high* segment positions (low segments zero), which keeps the
+/// middle-segment index uniform across full and partial chunks.
+fn pack_rhs<W: ProdWord>(
+    b_t: &[i64],
+    k_dim: usize,
+    n_dim: usize,
+    block: usize,
+    s: u32,
+) -> Vec<W> {
+    let wpr = k_dim.div_ceil(block);
+    let mut words = vec![W::zero(); wpr * n_dim];
+    let mut rev = vec![0i64; block];
+    for col in 0..n_dim {
+        let row = &b_t[col * k_dim..(col + 1) * k_dim];
+        for (i, chunk) in row.chunks(block).enumerate() {
+            rev.iter_mut().for_each(|v| *v = 0);
+            for (j, &v) in chunk.iter().enumerate() {
+                rev[block - 1 - j] = v;
+            }
+            words[i * n_dim + col] = pack_word::<W>(&rev, s);
+        }
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::dot::dot_ref;
+    use crate::util::rng::Rng;
+
+    fn ref_matmul(a: &[i64], b_t: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
+        let mut out = vec![0i64; m * n];
+        for row in 0..m {
+            for col in 0..n {
+                out[row * n + col] =
+                    dot_ref(&a[row * k..(row + 1) * k], &b_t[col * k..(col + 1) * k]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_reference() {
+        let (m, k, n) = (7usize, 37usize, 6usize);
+        let mut rng = Rng::new(0x6E3);
+        let a = rng.quant_unsigned_vec(4, m * k);
+        let bt = rng.quant_signed_vec(4, n * k);
+        let gemm = PackedGemm::new(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::UnsignedBySigned,
+            &bt,
+            k,
+            n,
+        )
+        .unwrap();
+        assert!(gemm.terms_per_mult() >= 2);
+        let lhs = gemm.pack_lhs(&a, m);
+        assert_eq!(gemm.matmul(&lhs), ref_matmul(&a, &bt, m, k, n));
+    }
+
+    #[test]
+    fn cpu32_4bit_takes_the_fast_lane() {
+        for sgn in [
+            Signedness::Unsigned,
+            Signedness::Signed,
+            Signedness::UnsignedBySigned,
+        ] {
+            let gemm = PackedGemm::new(Multiplier::CPU32, 4, 4, sgn, &[], 0, 0).unwrap();
+            assert!(gemm.uses_fast_lane(), "{sgn:?}: {:?}", gemm.design_point());
+        }
+    }
+
+    #[test]
+    fn wide_multiplier_falls_back_to_i128() {
+        let mut rng = Rng::new(0x6E4);
+        let (m, k, n) = (3usize, 20usize, 3usize);
+        let a = rng.quant_unsigned_vec(4, m * k);
+        let bt = rng.quant_unsigned_vec(4, n * k);
+        let gemm =
+            PackedGemm::new(Multiplier::CPU64, 4, 4, Signedness::Unsigned, &bt, k, n).unwrap();
+        assert!(!gemm.uses_fast_lane());
+        let lhs = gemm.pack_lhs(&a, m);
+        assert_eq!(gemm.matmul(&lhs), ref_matmul(&a, &bt, m, k, n));
+    }
+
+    #[test]
+    fn col_major_tiles_are_the_transpose() {
+        let (m, k, n) = (5usize, 13usize, 4usize);
+        let mut rng = Rng::new(0x6E5);
+        let a = rng.quant_signed_vec(3, m * k);
+        let bt = rng.quant_signed_vec(3, n * k);
+        let gemm =
+            PackedGemm::new(Multiplier::CPU32, 3, 3, Signedness::Signed, &bt, k, n).unwrap();
+        let lhs = gemm.pack_lhs(&a, m);
+        let row_major = gemm.matmul(&lhs);
+        let mut col_major = vec![0i64; m * n];
+        gemm.cols_into(&lhs, 0, n, &mut col_major);
+        for r in 0..m {
+            for c in 0..n {
+                assert_eq!(col_major[c * m + r], row_major[r * n + c], "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_builder_equals_one_shot_packing() {
+        let (m, k, n) = (4usize, 11usize, 2usize);
+        let mut rng = Rng::new(0x6E6);
+        let a = rng.quant_unsigned_vec(5, m * k);
+        let bt = rng.quant_unsigned_vec(5, n * k);
+        let gemm =
+            PackedGemm::new(Multiplier::CPU32, 5, 5, Signedness::Unsigned, &bt, k, n).unwrap();
+        let mut streamed = gemm.lhs_builder(m);
+        for row in 0..m {
+            streamed.push_row(&a[row * k..(row + 1) * k]);
+        }
+        assert_eq!(gemm.matmul(&streamed), gemm.matmul(&gemm.pack_lhs(&a, m)));
+    }
+
+    #[test]
+    fn matmul_tiled_is_thread_count_invariant() {
+        // Large enough to clear the serial cutoff: 64·40·128 MACs.
+        let (m, k, n) = (64usize, 128usize, 40usize);
+        assert!((m * k * n) as u64 >= GEMM_PAR_MIN_MACS);
+        let mut rng = Rng::new(0x6E7);
+        let a = rng.quant_unsigned_vec(4, m * k);
+        let bt = rng.quant_signed_vec(4, n * k);
+        let gemm = PackedGemm::new(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::UnsignedBySigned,
+            &bt,
+            k,
+            n,
+        )
+        .unwrap();
+        let lhs = gemm.pack_lhs(&a, m);
+        let serial = gemm.matmul(&lhs);
+        assert_eq!(serial, ref_matmul(&a, &bt, m, k, n));
+        for threads in [1usize, 2, 3, 8] {
+            assert_eq!(
+                gemm.matmul_tiled(&lhs, &ThreadPool::new(threads)),
+                serial,
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let gemm =
+            PackedGemm::new(Multiplier::CPU32, 4, 4, Signedness::Unsigned, &[], 0, 0).unwrap();
+        let lhs = gemm.pack_lhs(&[], 0);
+        assert!(gemm.matmul(&lhs).is_empty());
+        assert!(gemm.matmul_tiled(&lhs, &ThreadPool::new(4)).is_empty());
+        // k = 0 with nonzero m, n: all-zero output.
+        let gemm =
+            PackedGemm::new(Multiplier::CPU32, 4, 4, Signedness::Unsigned, &[], 0, 3).unwrap();
+        let lhs = gemm.pack_lhs(&[], 2);
+        assert_eq!(gemm.matmul(&lhs), vec![0i64; 6]);
+    }
+}

@@ -1,27 +1,35 @@
-//! im2row lowering: the convolution layer as a quantized matmul.
+//! im2row lowering: the convolution layer as a quantized matmul over the
+//! pre-packed GEMM subsystem.
 //!
-//! Each output pixel's receptive field is flattened into one row of an
+//! Each output pixel's receptive field is one row of an implicit
 //! `(H_o·W_o) × (C_i·K²)` matrix; the layer is then `rows × Wᵀ` where `Wᵀ`
-//! is the `C_o × (C_i·K²)` weight matrix. Every dot product runs through
-//! [`DotHiKonv`] packed blocks — one wide multiplication per
-//! `min(N, K)` MAC terms — so convolution and fully-connected-shaped work
-//! (the paper's §VI generalization) share the same packed kernel.
+//! is the `C_o × (C_i·K²)` weight matrix. The matmul runs through
+//! [`PackedGemm`]: weights are packed **once at construction** and each
+//! inference packs the activation rows **exactly once** — the im2row
+//! buffer is streamed row-by-row straight into packed words, so the full
+//! activation matrix is never materialized, and the output is written
+//! `[co][h][w]` co-major directly (no final transpose).
 //!
 //! This trades the Thm.-3 overlap-add reuse for GEMM regularity: it is the
-//! lowering to pick when the same [`DotHiKonv`] engine already serves FC /
-//! attention workloads and one kernel should cover both.
+//! lowering to pick when the same packed kernel already serves FC /
+//! attention workloads (the paper's §VI generalization — a 1×1 kernel or a
+//! `1×1` spatial extent makes the layer a pure FC matmul) and one kernel
+//! should cover both. [`DotHiKonv`] is retained as the scalar-block
+//! fallback and design-point surface.
 
 use super::conv2d::Conv2dSpec;
 use super::dot::DotHiKonv;
+use super::gemm::{PackedGemm, PackedLhs};
 
-/// Conv-as-matmul engine over a [`DotHiKonv`] packed dot-product kernel.
+/// Conv-as-matmul engine over the [`PackedGemm`] packed kernel.
 #[derive(Clone, Debug)]
 pub struct Im2RowConv {
     spec: Conv2dSpec,
+    /// Scalar-block fallback engine; also pins the design point the GEMM
+    /// shares, so packed and fallback semantics agree bit-for-bit.
     dot: DotHiKonv,
-    /// Weight rows `[co][ci·k·k]` — the transposed right operand of the
-    /// matmul (this is exactly the `[co][ci][kh][kw]` row-major layout).
-    w_rows: Vec<i64>,
+    /// The pre-packed GEMM: weights packed once here, at construction.
+    gemm: PackedGemm,
 }
 
 impl Im2RowConv {
@@ -30,24 +38,37 @@ impl Im2RowConv {
         assert_eq!(weights.len(), sh.weight_len(), "weight length mismatch");
         let dot = DotHiKonv::new(spec.mult, spec.p, spec.q, spec.signedness)
             .map_err(|e| e.to_string())?;
-        Ok(Im2RowConv {
-            spec,
-            dot,
-            w_rows: weights.to_vec(),
-        })
+        // The `[co][ci][kh][kw]` row-major weight layout is exactly the
+        // transposed right operand: co rows of ci·k·k values.
+        let gemm = PackedGemm::with_design_point(
+            *dot.design_point(),
+            weights,
+            sh.ci * sh.k * sh.k,
+            sh.co,
+        );
+        Ok(Im2RowConv { spec, dot, gemm })
     }
 
     pub fn spec(&self) -> &Conv2dSpec {
         &self.spec
     }
 
-    /// The packed dot-product engine (shared with FC-shaped work).
+    /// The scalar-block fallback dot engine (shared design point).
     pub fn dot_engine(&self) -> &DotHiKonv {
         &self.dot
     }
 
-    /// Lower `[ci][h][w]` input to the im2row matrix:
+    /// The pre-packed GEMM kernel (shared with FC-shaped work).
+    pub fn gemm(&self) -> &PackedGemm {
+        &self.gemm
+    }
+
+    /// Lower `[ci][h][w]` input to the explicit im2row matrix:
     /// `(ho·wo)` rows of `ci·k·k` receptive-field values.
+    ///
+    /// Retained for tests and the per-dot reference/bench path; the
+    /// inference path uses [`pack_pixels`](Self::pack_pixels), which
+    /// never materializes this matrix.
     pub fn im2row(&self, input: &[i64]) -> Vec<i64> {
         let sh = self.spec.shape;
         assert_eq!(input.len(), sh.input_len(), "input length mismatch");
@@ -57,37 +78,78 @@ impl Im2RowConv {
         for h in 0..ho {
             for w in 0..wo {
                 let base = (h * wo + w) * row_len;
-                let mut j = 0;
-                for ci in 0..sh.ci {
-                    for kh in 0..k {
-                        let src = (ci * sh.hi + h + kh) * sh.wi + w;
-                        rows[base + j..base + j + k].copy_from_slice(&input[src..src + k]);
-                        j += k;
-                    }
-                }
+                gather_row(&mut rows[base..base + row_len], input, sh, h, w);
             }
         }
         rows
     }
 
-    /// Run the layer. Input `[ci][h][w]`, output `[co][h][w]` row-major —
-    /// bit-exact against `conv2d_ref`.
-    pub fn conv(&self, input: &[i64]) -> Vec<i64> {
+    /// Pack the input feature map once per inference: each receptive
+    /// field is gathered into a reused row buffer and streamed straight
+    /// into packed words. The result is read-only during compute, so
+    /// column tiles (and threads) borrow it freely.
+    pub fn pack_pixels(&self, input: &[i64]) -> PackedLhs {
         let sh = self.spec.shape;
+        assert_eq!(input.len(), sh.input_len(), "input length mismatch");
         let (ho, wo, k) = (sh.ho(), sh.wo(), sh.k);
-        let rows = self.im2row(input);
-        let m = ho * wo;
-        let kk = sh.ci * k * k;
-        // (ho·wo) × co, pixel-major.
-        let pixel_major = self.dot.matmul(&rows, &self.w_rows, m, kk, sh.co);
-        // Transpose to the engines' [co][h][w] layout.
-        let mut out = vec![0i64; sh.output_len()];
-        for p in 0..m {
-            for co in 0..sh.co {
-                out[co * m + p] = pixel_major[p * sh.co + co];
+        let row_len = sh.ci * k * k;
+        let mut lhs = self.gemm.lhs_builder(ho * wo);
+        let mut row_buf = vec![0i64; row_len];
+        for h in 0..ho {
+            for w in 0..wo {
+                gather_row(&mut row_buf, input, sh, h, w);
+                lhs.push_row(&row_buf);
             }
         }
+        lhs
+    }
+
+    /// Compute output channels `[co_start, co_end)` into `out_tile`
+    /// (`(co_end - co_start)·ho·wo` values, `[co][h][w]` co-major) — the
+    /// unit of output-channel tiling. Disjoint ranges write disjoint
+    /// outputs, so tiles run concurrently with bit-identical results
+    /// regardless of scheduling.
+    pub fn conv_cols(
+        &self,
+        pixels: &PackedLhs,
+        co_start: usize,
+        co_end: usize,
+        out_tile: &mut [i64],
+    ) {
+        self.gemm.cols_into(pixels, co_start, co_end, out_tile);
+    }
+
+    /// Run the layer serially. Input `[ci][h][w]`, output `[co][h][w]`
+    /// row-major — bit-exact against `conv2d_ref`. Exactly one packing
+    /// pass over the input (weights were packed at construction); the
+    /// output is written co-major directly by the column-major kernel.
+    pub fn conv(&self, input: &[i64]) -> Vec<i64> {
+        let sh = self.spec.shape;
+        let pixels = self.pack_pixels(input);
+        let mut out = vec![0i64; sh.output_len()];
+        self.conv_cols(&pixels, 0, sh.co, &mut out);
         out
+    }
+}
+
+/// Gather the receptive field of output pixel `(h, w)` into `row`
+/// (`ci·k·k` values, `[ci][kh][kw]` order — matching the weight rows).
+#[inline]
+fn gather_row(
+    row: &mut [i64],
+    input: &[i64],
+    sh: super::reference::ConvShape,
+    h: usize,
+    w: usize,
+) {
+    let k = sh.k;
+    let mut j = 0;
+    for ci in 0..sh.ci {
+        for kh in 0..k {
+            let src = (ci * sh.hi + h + kh) * sh.wi + w;
+            row[j..j + k].copy_from_slice(&input[src..src + k]);
+            j += k;
+        }
     }
 }
 
@@ -197,5 +259,62 @@ mod tests {
         };
         let eng = Im2RowConv::new(spec, &vec![1i64; 36]).unwrap();
         assert!(eng.dot_engine().terms_per_mult() >= 2);
+        assert_eq!(
+            eng.gemm().terms_per_mult(),
+            eng.dot_engine().terms_per_mult()
+        );
+    }
+
+    #[test]
+    fn cpu32_4bit_layer_takes_the_i64_lane() {
+        // Acceptance point: CPU32 p=q=4 must select the i64 fast lane.
+        let spec = Conv2dSpec {
+            shape: ConvShape {
+                ci: 2,
+                co: 2,
+                hi: 4,
+                wi: 4,
+                k: 3,
+            },
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let mut rng = Rng::new(24);
+        let weights = rng.quant_signed_vec(4, spec.shape.weight_len());
+        let eng = Im2RowConv::new(spec, &weights).unwrap();
+        assert!(eng.gemm().uses_fast_lane(), "{:?}", eng.gemm().design_point());
+    }
+
+    #[test]
+    fn uneven_co_tiles_compose_to_full_conv() {
+        let shape = ConvShape {
+            ci: 3,
+            co: 5,
+            hi: 6,
+            wi: 10,
+            k: 3,
+        };
+        let mut rng = Rng::new(25);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let eng = Im2RowConv::new(spec, &weights).unwrap();
+        let pixels = eng.pack_pixels(&input);
+        let rows = shape.ho() * shape.wo();
+        let mut out = vec![0i64; shape.output_len()];
+        // Uneven split: tiles of 2, 2 and 1 output channels.
+        for (start, end) in [(0usize, 2usize), (2, 4), (4, 5)] {
+            eng.conv_cols(&pixels, start, end, &mut out[start * rows..end * rows]);
+        }
+        assert_seq_eq(&out, &eng.conv(&input)).unwrap();
+        assert_seq_eq(&out, &conv2d_ref(&input, &weights, shape)).unwrap();
     }
 }

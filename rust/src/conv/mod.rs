@@ -9,12 +9,20 @@
 //!   HiKonv convolutions, with optional packed-domain channel accumulation
 //!   (§III-B "DNN Convolution"), an `i64` fast lane mirroring `conv1d`,
 //!   and an output-channel tiling API for multi-core execution.
-//! * [`im2row`] — the layer lowered to a quantized matmul whose dot
-//!   products run through [`dot`]'s packed blocks (FC-shaped reuse).
+//! * [`gemm`] — the pre-packed quantized GEMM subsystem: HiKonv packed
+//!   dot products with `O((m+n)·k)` amortized packing, an `i64` fast
+//!   lane, a register-blocked micro-kernel and row/column tiling for
+//!   parallel execution (the paper's §VI FC/attention generalization).
+//! * [`im2row`] — the layer lowered through [`gemm`]: weights packed at
+//!   construction, activations packed once per inference via a streaming
+//!   im2row buffer, output written co-major directly.
+//! * [`dot`] — the scalar-block packed dot product ([`DotHiKonv`]), kept
+//!   as the fallback kernel and design-point surface for [`gemm`].
 
 pub mod conv1d;
 pub mod conv2d;
 pub mod dot;
+pub mod gemm;
 pub mod im2row;
 pub mod reference;
 mod word;
@@ -22,5 +30,6 @@ mod word;
 pub use conv1d::{conv1d_hikonv, Conv1dHiKonv};
 pub use conv2d::{Conv2dHiKonv, Conv2dSpec, PackedInput};
 pub use dot::{dot_ref, DotHiKonv};
+pub use gemm::{PackedGemm, PackedLhs};
 pub use im2row::Im2RowConv;
 pub use reference::{conv1d_ref, conv2d_ref};

@@ -50,6 +50,10 @@ impl ParallelCpuBackend {
                 m,
                 (crate::exec::default_threads() / workers).max(1),
             ),
+            EngineKind::Im2Row(m, 0) if workers > 1 => EngineKind::Im2Row(
+                m,
+                (crate::exec::default_threads() / workers).max(1),
+            ),
             k => k,
         };
         let (job_tx, job_rx) = channel::<Job>();

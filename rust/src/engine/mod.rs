@@ -2,7 +2,8 @@
 //! coordinator: the same layer can run on the baseline loop nest, the
 //! HiKonv packed engine, the parallel tiled engine (output channels
 //! sharded across an [`exec::ThreadPool`](crate::exec::ThreadPool)), the
-//! im2row/matmul lowering, or (whole-model) a PJRT-compiled artifact.
+//! im2row/pre-packed-GEMM lowering (also pool-tiled, via
+//! [`im2row_tiled`]), or (whole-model) a PJRT-compiled artifact.
 
 use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
 use crate::conv::im2row::Im2RowConv;
@@ -194,10 +195,37 @@ impl ConvEngine for ParallelEngine {
     }
 }
 
-/// im2row/matmul lowering engine (DotHiKonv packed dot products).
+/// Run one im2row/GEMM layer tiled over output channels on `pool`: pack
+/// the pixel rows once (streaming im2row — weights were packed at engine
+/// construction), then shard `[co_start, co_end)` column ranges across
+/// the workers; each tile is a contiguous co-major output region, so no
+/// transpose ever runs. Bit-exact vs `eng.conv` (and `conv2d_ref`) for
+/// any thread count — the same index-addressed determinism contract as
+/// [`conv2d_tiled`].
+pub fn im2row_tiled(eng: &Im2RowConv, pool: &ThreadPool, input: &[i64]) -> Vec<i64> {
+    let sh = eng.spec().shape;
+    if pool.threads() == 1 || sh.macs() < PAR_MIN_MACS {
+        return eng.conv(input);
+    }
+    let pixels = eng.pack_pixels(input);
+    let rows = sh.ho() * sh.wo();
+    let tile_co = tile_co_for(sh.co, pool.threads());
+    let mut out = vec![0i64; sh.output_len()];
+    pool.par_chunks_mut(&mut out, tile_co * rows, |tile_idx, tile| {
+        let co_start = tile_idx * tile_co;
+        let co_end = (co_start + tile_co).min(sh.co);
+        eng.conv_cols(&pixels, co_start, co_end, tile);
+    });
+    out
+}
+
+/// im2row/GEMM lowering engine: weights pre-packed at construction,
+/// activations packed once per inference, output channels sharded across
+/// a thread pool (the FC-shaped counterpart of [`ParallelEngine`]).
 pub struct Im2RowEngine {
     inner: Im2RowConv,
     shape: ConvShape,
+    pool: Arc<ThreadPool>,
 }
 
 impl Im2RowEngine {
@@ -208,6 +236,7 @@ impl Im2RowEngine {
         p: u32,
         q: u32,
         signedness: Signedness,
+        pool: Arc<ThreadPool>,
     ) -> Result<Im2RowEngine, String> {
         let spec = Conv2dSpec {
             shape,
@@ -219,7 +248,34 @@ impl Im2RowEngine {
         Ok(Im2RowEngine {
             inner: Im2RowConv::new(spec, &weights)?,
             shape,
+            pool,
         })
+    }
+
+    /// Convenience: build with a private pool of `threads` workers
+    /// (0 = auto-size from the machine / `HIKONV_THREADS`).
+    pub fn with_threads(
+        shape: ConvShape,
+        weights: Vec<i64>,
+        mult: Multiplier,
+        p: u32,
+        q: u32,
+        signedness: Signedness,
+        threads: usize,
+    ) -> Result<Im2RowEngine, String> {
+        Self::new(
+            shape,
+            weights,
+            mult,
+            p,
+            q,
+            signedness,
+            Arc::new(ThreadPool::auto_sized(threads)),
+        )
+    }
+
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
     }
 }
 
@@ -228,7 +284,7 @@ impl ConvEngine for Im2RowEngine {
         "im2row"
     }
     fn conv(&self, input: &[i64]) -> Vec<i64> {
-        self.inner.conv(input)
+        im2row_tiled(&self.inner, &self.pool, input)
     }
     fn shape(&self) -> ConvShape {
         self.shape
@@ -303,7 +359,10 @@ mod tests {
                 )
                 .unwrap(),
             ),
-            Box::new(Im2RowEngine::new(shape, weights, Multiplier::CPU32, 4, 4, sgn).unwrap()),
+            Box::new(
+                Im2RowEngine::with_threads(shape, weights, Multiplier::CPU32, 4, 4, sgn, 2)
+                    .unwrap(),
+            ),
         ];
         let reference = engines[0].conv(&input);
         for e in &engines[1..] {
@@ -340,6 +399,37 @@ mod tests {
         assert_seq_eq(&serial, &eng.conv(&input)).unwrap();
         for threads in [2usize, 4, 8] {
             let par = conv2d_tiled(&eng, &ThreadPool::new(threads), &input);
+            assert_seq_eq(&par, &serial).unwrap();
+        }
+    }
+
+    #[test]
+    fn im2row_tiled_output_is_invariant_under_thread_count() {
+        // Large enough to clear the PAR_MIN_MACS serial cutoff.
+        let shape = ConvShape {
+            ci: 6,
+            co: 12,
+            hi: 10,
+            wi: 34,
+            k: 3,
+        };
+        assert!(shape.macs() >= PAR_MIN_MACS);
+        let mut rng = Rng::new(44);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let eng = Im2RowConv::new(spec, &weights).unwrap();
+        let serial = im2row_tiled(&eng, &ThreadPool::new(1), &input);
+        assert_seq_eq(&serial, &eng.conv(&input)).unwrap();
+        assert_seq_eq(&serial, &conv2d_ref(&input, &weights, shape)).unwrap();
+        for threads in [2usize, 4, 8] {
+            let par = im2row_tiled(&eng, &ThreadPool::new(threads), &input);
             assert_seq_eq(&par, &serial).unwrap();
         }
     }

@@ -17,8 +17,9 @@
 //! * [`packing`] — bit-exact packing/segmentation for unsigned (Eq. 11–12) and
 //!   signed (Eq. 13) operands.
 //! * [`conv`] — the convolution engines: nested-loop reference, `F_{N,K}`
-//!   single-multiply unit (Thm. 1), `F_{X·N,K}` overlap-add extension (Thm. 2)
-//!   and the full DNN convolution layer (Thm. 3).
+//!   single-multiply unit (Thm. 1), `F_{X·N,K}` overlap-add extension (Thm. 2),
+//!   the full DNN convolution layer (Thm. 3), and the pre-packed quantized
+//!   GEMM subsystem behind the im2row lowering and FC-shaped work (§VI).
 //! * [`quant`] — quantized tensor types and quantizers.
 //! * [`dsp`] — the FPGA substrate: a bit-accurate DSP48E2 functional model,
 //!   LUT resource model and the UltraNet performance model (Tables I & II).

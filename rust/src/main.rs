@@ -13,8 +13,9 @@
 //! ```
 //!
 //! `--threads` sets the intra-layer tiling width of the `hikonv-tiled`
-//! engine (0 = auto from the machine / `HIKONV_THREADS`); `--workers`
-//! sets the frame-level worker pool of `serve`. The two compose.
+//! and `im2row` engines (0 = auto from the machine / `HIKONV_THREADS`);
+//! `--workers` sets the frame-level worker pool of `serve`. The two
+//! compose.
 
 use hikonv::bench::BenchConfig;
 use hikonv::cli::{render_help, Args, OptSpec};
@@ -208,7 +209,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "hikonv-tiled" => {
             cpu_backend(EngineKind::HiKonvTiled(Multiplier::CPU32, threads))?
         }
-        "im2row" => cpu_backend(EngineKind::Im2Row(Multiplier::CPU32))?,
+        "im2row" => cpu_backend(EngineKind::Im2Row(Multiplier::CPU32, threads))?,
         "pjrt" => {
             let rt = Runtime::cpu().map_err(|e| e.to_string())?;
             let name = if full {
@@ -236,7 +237,7 @@ fn cmd_run_model(args: &Args) -> Result<(), String> {
         "baseline" => EngineKind::Baseline,
         "hikonv" => EngineKind::HiKonv(Multiplier::CPU32),
         "hikonv-tiled" => EngineKind::HiKonvTiled(Multiplier::CPU32, threads),
-        "im2row" => EngineKind::Im2Row(Multiplier::CPU32),
+        "im2row" => EngineKind::Im2Row(Multiplier::CPU32, threads),
         other => return Err(format!("unknown engine '{other}'")),
     };
     let model = if args.has("full-model") {
@@ -278,7 +279,7 @@ fn help() -> String {
         },
         OptSpec {
             name: "threads",
-            help: "intra-layer tiling threads (hikonv-tiled; 0 = auto)",
+            help: "intra-layer tiling threads (hikonv-tiled, im2row; 0 = auto)",
             default: Some("0"),
             is_switch: false,
         },
@@ -292,7 +293,7 @@ fn help() -> String {
         },
         OptSpec {
             name: "threads",
-            help: "intra-layer tiling threads (hikonv-tiled; 0 = auto)",
+            help: "intra-layer tiling threads (hikonv-tiled, im2row; 0 = auto)",
             default: Some("0"),
             is_switch: false,
         },

@@ -6,7 +6,7 @@ use super::layer::{maxpool2, pad2d, ModelSpec};
 use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
 use crate::conv::im2row::Im2RowConv;
 use crate::conv::reference::conv2d_ref;
-use crate::engine::conv2d_tiled;
+use crate::engine::{conv2d_tiled, im2row_tiled};
 use crate::exec::ThreadPool;
 use crate::quant::{QTensor, Shape};
 use crate::theory::{Multiplier, Signedness};
@@ -23,8 +23,10 @@ pub enum EngineKind {
     /// HiKonv packed engine with output channels tiled across a thread
     /// pool of the given size (0 = auto-size from the machine).
     HiKonvTiled(Multiplier, usize),
-    /// im2row/matmul lowering over DotHiKonv packed dot products.
-    Im2Row(Multiplier),
+    /// im2row lowering over the pre-packed GEMM kernel, with output
+    /// channels tiled across a thread pool of the given size (0 =
+    /// auto-size from the machine) — covers FC-shaped layers too.
+    Im2Row(Multiplier, usize),
 }
 
 /// The per-layer engine bound at runner construction.
@@ -94,7 +96,7 @@ impl CpuRunner {
                     EngineKind::Baseline => Multiplier::CPU32, // unused
                     EngineKind::HiKonv(m)
                     | EngineKind::HiKonvTiled(m, _)
-                    | EngineKind::Im2Row(m) => m,
+                    | EngineKind::Im2Row(m, _) => m,
                 },
                 p: l.a_bits,
                 q: l.w_bits,
@@ -105,11 +107,13 @@ impl CpuRunner {
                 EngineKind::HiKonv(_) | EngineKind::HiKonvTiled(..) => {
                     LayerEngine::HiKonv(Conv2dHiKonv::new(spec, &w.to_i64())?)
                 }
-                EngineKind::Im2Row(_) => LayerEngine::Im2Row(Im2RowConv::new(spec, &w.to_i64())?),
+                EngineKind::Im2Row(..) => LayerEngine::Im2Row(Im2RowConv::new(spec, &w.to_i64())?),
             });
         }
         let pool = match kind {
-            EngineKind::HiKonvTiled(_, threads) => Some(Arc::new(ThreadPool::auto_sized(threads))),
+            EngineKind::HiKonvTiled(_, threads) | EngineKind::Im2Row(_, threads) => {
+                Some(Arc::new(ThreadPool::auto_sized(threads)))
+            }
             _ => None,
         };
         // Calibrate requant shifts with a mid-gray frame so all engines
@@ -175,7 +179,10 @@ impl CpuRunner {
                 Some(pool) => conv2d_tiled(eng, pool, &padded),
                 None => eng.conv(&padded),
             },
-            LayerEngine::Im2Row(eng) => eng.conv(&padded),
+            LayerEngine::Im2Row(eng) => match &self.pool {
+                Some(pool) => im2row_tiled(eng, pool, &padded),
+                None => eng.conv(&padded),
+            },
         }
     }
 
@@ -271,7 +278,7 @@ mod tests {
         let im2row = CpuRunner::new(
             model.clone(),
             weights,
-            EngineKind::Im2Row(Multiplier::CPU32),
+            EngineKind::Im2Row(Multiplier::CPU32, 2),
         )
         .unwrap();
         let (c, h, w) = model.input;
@@ -300,6 +307,28 @@ mod tests {
         .unwrap();
         let (c, h, w) = model.input;
         let mut rng = Rng::new(987);
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        assert_seq_eq(&one.infer(&frame), &four.infer(&frame)).unwrap();
+    }
+
+    #[test]
+    fn im2row_inference_is_thread_count_invariant() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 80);
+        let one = CpuRunner::new(
+            model.clone(),
+            weights.clone(),
+            EngineKind::Im2Row(Multiplier::CPU32, 1),
+        )
+        .unwrap();
+        let four = CpuRunner::new(
+            model.clone(),
+            weights,
+            EngineKind::Im2Row(Multiplier::CPU32, 4),
+        )
+        .unwrap();
+        let (c, h, w) = model.input;
+        let mut rng = Rng::new(988);
         let frame = rng.quant_unsigned_vec(4, c * h * w);
         assert_seq_eq(&one.infer(&frame), &four.infer(&frame)).unwrap();
     }

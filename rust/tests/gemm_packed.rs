@@ -1,0 +1,255 @@
+//! Properties of the pre-packed GEMM subsystem: `PackedGemm` matches the
+//! `dot_ref`-based reference matmul over the full `(p, q) ∈ 1..=8`
+//! bitwidth × signedness grid, tiled outputs are bit-identical for any
+//! thread count, uneven row/column tiles compose exactly (mirroring
+//! `tests/parallel_tiled.rs`), and the paper's CPU32 4-bit point selects
+//! the `i64` fast lane.
+
+use hikonv::conv::conv2d::Conv2dSpec;
+use hikonv::conv::dot::{dot_ref, DotHiKonv};
+use hikonv::conv::gemm::PackedGemm;
+use hikonv::conv::im2row::Im2RowConv;
+use hikonv::conv::reference::{conv2d_ref, ConvShape};
+use hikonv::engine::im2row_tiled;
+use hikonv::exec::ThreadPool;
+use hikonv::testing::assert_seq_eq;
+use hikonv::theory::{Multiplier, Signedness};
+use hikonv::util::rng::Rng;
+
+fn gen_vec(rng: &mut Rng, bits: u32, signed: bool, len: usize) -> Vec<i64> {
+    if signed {
+        rng.quant_signed_vec(bits, len)
+    } else {
+        rng.quant_unsigned_vec(bits, len)
+    }
+}
+
+fn signed_operands(sgn: Signedness) -> (bool, bool) {
+    match sgn {
+        Signedness::Unsigned => (false, false),
+        Signedness::Signed => (true, true),
+        Signedness::UnsignedBySigned => (false, true),
+    }
+}
+
+fn ref_matmul(a: &[i64], b_t: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for row in 0..m {
+        for col in 0..n {
+            out[row * n + col] =
+                dot_ref(&a[row * k..(row + 1) * k], &b_t[col * k..(col + 1) * k]);
+        }
+    }
+    out
+}
+
+/// `PackedGemm` equals the scalar reference matmul for every bitwidth
+/// pair and signedness on the 32×32 CPU multiplier, including inner
+/// dimensions that don't divide the packing block (tail chunks).
+#[test]
+fn packed_gemm_matches_reference_over_full_bitwidth_grid() {
+    let mut rng = Rng::new(0x6E88);
+    let (m, n) = (5usize, 4usize);
+    for p in 1..=8u32 {
+        for q in 1..=8u32 {
+            for sgn in [
+                Signedness::Unsigned,
+                Signedness::Signed,
+                Signedness::UnsignedBySigned,
+            ] {
+                for k in [1usize, 7, 37] {
+                    let (sa, sb) = signed_operands(sgn);
+                    let a = gen_vec(&mut rng, p, sa, m * k);
+                    let bt = gen_vec(&mut rng, q, sb, n * k);
+                    let gemm = match PackedGemm::new(Multiplier::CPU32, p, q, sgn, &bt, k, n) {
+                        Ok(g) => g,
+                        // A signed 1-bit operand set ({-1, 0}) is
+                        // degenerate; tolerate infeasibility only there.
+                        Err(_) if matches!(sgn, Signedness::Signed) && p.min(q) == 1 => continue,
+                        Err(e) => panic!("no gemm design point for p={p} q={q} {sgn:?}: {e}"),
+                    };
+                    let lhs = gemm.pack_lhs(&a, m);
+                    assert_seq_eq(&gemm.matmul(&lhs), &ref_matmul(&a, &bt, m, k, n))
+                        .unwrap_or_else(|e| panic!("p={p} q={q} {sgn:?} k={k}: {e}"));
+                }
+            }
+        }
+    }
+}
+
+/// Determinism: 1-thread and N-thread tiled matmuls are bit-identical —
+/// and identical to the serial kernel — on a matrix whose row count does
+/// not divide evenly into tiles (and which is large enough to take the
+/// parallel path, not the small-matrix serial cutoff).
+#[test]
+fn matmul_tiled_invariant_under_thread_count() {
+    let (m, k, n) = (67usize, 131usize, 23usize);
+    assert!((m * k * n) as u64 >= 100_000, "matrix too small to exercise tiling");
+    let mut rng = Rng::new(0x6E89);
+    let a = rng.quant_unsigned_vec(4, m * k);
+    let bt = rng.quant_signed_vec(4, n * k);
+    let gemm = PackedGemm::new(
+        Multiplier::CPU32,
+        4,
+        4,
+        Signedness::UnsignedBySigned,
+        &bt,
+        k,
+        n,
+    )
+    .unwrap();
+    let lhs = gemm.pack_lhs(&a, m);
+    let serial = gemm.matmul(&lhs);
+    assert_seq_eq(&serial, &ref_matmul(&a, &bt, m, k, n)).unwrap();
+    for threads in [1usize, 2, 3, 5, 8, 16] {
+        let tiled = gemm.matmul_tiled(&lhs, &ThreadPool::new(threads));
+        assert_seq_eq(&tiled, &serial).unwrap_or_else(|e| panic!("threads={threads}: {e}"));
+    }
+}
+
+/// Uneven explicit row tiles (and column tiles) compose to the full
+/// matmul — the manual counterpart of the pool's chunking.
+#[test]
+fn uneven_tiles_compose_to_full_matmul() {
+    let (m, k, n) = (7usize, 29usize, 5usize);
+    let mut rng = Rng::new(0x6E8A);
+    let a = rng.quant_unsigned_vec(4, m * k);
+    let bt = rng.quant_signed_vec(4, n * k);
+    let gemm = PackedGemm::new(
+        Multiplier::CPU32,
+        4,
+        4,
+        Signedness::UnsignedBySigned,
+        &bt,
+        k,
+        n,
+    )
+    .unwrap();
+    let lhs = gemm.pack_lhs(&a, m);
+    let want = gemm.matmul(&lhs);
+
+    // Row tiles of 3, 3 and 1 rows (row-major regions).
+    let mut by_rows = vec![0i64; m * n];
+    for (start, end) in [(0usize, 3usize), (3, 6), (6, 7)] {
+        gemm.rows_into(&lhs, start, end, &mut by_rows[start * n..end * n]);
+    }
+    assert_seq_eq(&by_rows, &want).unwrap();
+
+    // Column tiles of 2, 2 and 1 columns (col-major regions).
+    let mut by_cols = vec![0i64; m * n];
+    for (start, end) in [(0usize, 2usize), (2, 4), (4, 5)] {
+        gemm.cols_into(&lhs, start, end, &mut by_cols[start * m..end * m]);
+    }
+    for row in 0..m {
+        for col in 0..n {
+            assert_eq!(by_cols[col * m + row], want[row * n + col], "({row},{col})");
+        }
+    }
+}
+
+/// Acceptance point: the paper's headline CPU design point (CPU32,
+/// p = q = 4) must run the GEMM in the `i64` lane, not `i128` — for the
+/// bare kernel and for the im2row layer built on it.
+#[test]
+fn cpu32_4bit_selects_the_i64_lane() {
+    let gemm = PackedGemm::new(
+        Multiplier::CPU32,
+        4,
+        4,
+        Signedness::UnsignedBySigned,
+        &[],
+        0,
+        0,
+    )
+    .unwrap();
+    assert!(gemm.uses_fast_lane(), "{:?}", gemm.design_point());
+
+    let shape = ConvShape {
+        ci: 4,
+        co: 2,
+        hi: 5,
+        wi: 9,
+        k: 3,
+    };
+    let mut rng = Rng::new(0x6E8B);
+    let weights = rng.quant_signed_vec(4, shape.weight_len());
+    let eng = Im2RowConv::new(
+        Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        },
+        &weights,
+    )
+    .unwrap();
+    assert!(eng.gemm().uses_fast_lane(), "{:?}", eng.gemm().design_point());
+    // A wider multiplier overflows the lane criterion and falls back.
+    let wide = PackedGemm::new(Multiplier::CPU64, 4, 4, Signedness::Unsigned, &[], 0, 0).unwrap();
+    assert!(!wide.uses_fast_lane());
+}
+
+/// The legacy `DotHiKonv::matmul` convenience API (now routed through
+/// `PackedGemm`) stays exact against the scalar-block `dot` it falls
+/// back to.
+#[test]
+fn dot_matmul_routing_stays_exact() {
+    let mut rng = Rng::new(0x6E8C);
+    for (p, q, sgn) in [
+        (4u32, 4u32, Signedness::UnsignedBySigned),
+        (3, 5, Signedness::Unsigned),
+        (6, 2, Signedness::Signed),
+    ] {
+        let eng = DotHiKonv::new(Multiplier::CPU32, p, q, sgn).unwrap();
+        let (m, k, n) = (6usize, 41usize, 3usize);
+        let (sa, sb) = signed_operands(sgn);
+        let a = gen_vec(&mut rng, p, sa, m * k);
+        let bt = gen_vec(&mut rng, q, sb, n * k);
+        let got = eng.matmul(&a, &bt, m, k, n);
+        assert_seq_eq(&got, &ref_matmul(&a, &bt, m, k, n)).unwrap();
+        // Scalar-block fallback agreement, dot by dot.
+        for row in 0..m {
+            for col in 0..n {
+                assert_eq!(
+                    got[row * n + col],
+                    eng.dot(&a[row * k..(row + 1) * k], &bt[col * k..(col + 1) * k])
+                );
+            }
+        }
+    }
+}
+
+/// The im2row lowering through the pre-packed GEMM equals the reference
+/// conv and is thread-count invariant on an unevenly-tiling layer.
+#[test]
+fn im2row_tiled_matches_reference_and_is_thread_invariant() {
+    let shape = ConvShape {
+        ci: 16,
+        co: 13,
+        hi: 8,
+        wi: 30,
+        k: 3,
+    };
+    assert!(shape.macs() >= 100_000, "shape too small to exercise tiling");
+    let mut rng = Rng::new(0x6E8D);
+    let input = rng.quant_unsigned_vec(4, shape.input_len());
+    let weights = rng.quant_signed_vec(4, shape.weight_len());
+    let eng = Im2RowConv::new(
+        Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        },
+        &weights,
+    )
+    .unwrap();
+    let serial = eng.conv(&input);
+    assert_seq_eq(&serial, &conv2d_ref(&input, &weights, shape)).unwrap();
+    for threads in [1usize, 2, 3, 5, 8, 16] {
+        let tiled = im2row_tiled(&eng, &ThreadPool::new(threads), &input);
+        assert_seq_eq(&tiled, &serial).unwrap_or_else(|e| panic!("threads={threads}: {e}"));
+    }
+}

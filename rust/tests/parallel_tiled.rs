@@ -153,8 +153,9 @@ fn tiled_outputs_invariant_under_thread_count() {
     }
 }
 
-/// The im2row lowering (DotHiKonv-backed) equals the reference across the
-/// bitwidth diagonal — the FC-shaped reuse path of the tentpole.
+/// The im2row lowering (now PackedGemm-backed) equals the reference
+/// across the bitwidth diagonal — the FC-shaped reuse path (see
+/// `tests/gemm_packed.rs` for the full GEMM property grid).
 #[test]
 fn im2row_matches_reference_across_bitwidths() {
     let mut rng = Rng::new(0x1280);
