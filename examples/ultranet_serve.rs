@@ -84,7 +84,8 @@ fn main() {
         .unwrap();
         let report = serve(Box::new(pool), &config(frames, None));
         println!("--- HiKonv pool, {workers} workers (scales with available cores; this");
-        println!("    host has {}) ---", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        println!("    host has {cores}) ---");
         print!("{}", report.render());
         println!();
     }

@@ -29,7 +29,14 @@ use hikonv::util::table::Table;
 
 /// The pre-refactor matmul: one `dot` call per output cell, packing both
 /// operands inside every call.
-fn matmul_per_dot(eng: &DotHiKonv, a: &[i64], b_t: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
+fn matmul_per_dot(
+    eng: &DotHiKonv,
+    a: &[i64],
+    b_t: &[i64],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i64> {
     let mut out = vec![0i64; m * n];
     for row in 0..m {
         let ar = &a[row * k..(row + 1) * k];

@@ -1,0 +1,110 @@
+//! Bench: end-to-end UltraNet inference — the seed per-layer-allocating
+//! path (`infer_unfused`: pad2d copy-in, fresh accumulator, separate
+//! requantize and maxpool passes) vs the fused arena pipeline (`infer`)
+//! vs fused + batched serving (`infer_batch`, whole frames sharded
+//! across the thread pool with per-worker arena reuse).
+//!
+//! Outputs are cross-checked bit-exact before any timing. Set
+//! `HIKONV_BENCH_QUICK=1` for a CI smoke pass and
+//! `HIKONV_BENCH_OUT=<path>` to record the JSON baseline (see
+//! BENCH_model.json at the repo root).
+
+use hikonv::bench::{fmt_ns, BenchConfig, Bencher};
+use hikonv::models::ultranet::{ultranet, ultranet_tiny};
+use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::testing::assert_seq_eq;
+use hikonv::theory::Multiplier;
+use hikonv::util::json::Json;
+use hikonv::util::rng::Rng;
+use hikonv::util::table::Table;
+
+const BATCH: usize = 8;
+
+fn main() {
+    let config = BenchConfig::from_env();
+    let quick = std::env::var("HIKONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    // Quick mode (CI smoke) runs the reduced model so the whole suite
+    // stays in seconds; full runs measure the real UltraNet.
+    let model = if quick { ultranet_tiny() } else { ultranet() };
+    let weights = random_weights(&model, 7);
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(0xE2E);
+    let frames: Vec<Vec<i64>> = (0..BATCH)
+        .map(|_| rng.quant_unsigned_vec(4, c * h * w))
+        .collect();
+    let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+
+    let mut bencher = Bencher::with_config("model", config);
+    let mut json_rows = Vec::new();
+    let mut table = Table::new(
+        &format!("{}: seed per-layer path vs fused vs fused+batched", model.name),
+        &["engine", "unfused", "fused", "speedup", "batched/frame", "batch x"],
+    );
+
+    for (label, kind) in [
+        ("hikonv", EngineKind::HiKonv(Multiplier::CPU32)),
+        ("hikonv-tiled", EngineKind::HiKonvTiled(Multiplier::CPU32, 0)),
+        ("im2row", EngineKind::Im2Row(Multiplier::CPU32, 0)),
+    ] {
+        let runner = CpuRunner::new(model.clone(), weights.clone(), kind)
+            .expect("feasible engine");
+
+        // Correctness gate before any timing: fused == seed unfused,
+        // batched == per-frame, on every engine benched.
+        let truth = runner.infer_unfused(&frames[0]);
+        assert_seq_eq(&runner.infer(&frames[0]), &truth).expect("fused mismatch");
+        for (f, b) in refs.iter().zip(&runner.infer_batch(&refs)) {
+            assert_seq_eq(b, &runner.infer_unfused(f)).expect("batched mismatch");
+        }
+
+        let unfused = bencher
+            .bench(&format!("unfused/{label}"), || {
+                runner.infer_unfused(&frames[0])
+            })
+            .median_ns();
+        let fused = bencher
+            .bench(&format!("fused/{label}"), || runner.infer(&frames[0]))
+            .median_ns();
+        let batched_total = bencher
+            .bench(&format!("fused+batched/{label}"), || {
+                runner.infer_batch(&refs)
+            })
+            .median_ns();
+        let batched = batched_total / BATCH as f64;
+        table.row(hikonv::cells!(
+            label,
+            fmt_ns(unfused),
+            fmt_ns(fused),
+            format!("{:.2}x", unfused / fused),
+            fmt_ns(batched),
+            format!("{:.2}x", unfused / batched)
+        ));
+        json_rows.push(
+            Json::obj()
+                .set("engine", label)
+                .set("model", model.name.as_str())
+                .set("batch", BATCH)
+                .set("unfused_ns", unfused)
+                .set("fused_ns", fused)
+                .set("batched_per_frame_ns", batched)
+                .set("speedup_fused", unfused / fused)
+                .set("speedup_batched", unfused / batched)
+                .set("fps_fused", 1e9 / fused)
+                .set("fps_batched", 1e9 / batched),
+        );
+    }
+
+    print!("{}", table.render());
+    let report = Json::obj()
+        .set("bench", "model")
+        .set("model", model.name.as_str())
+        .set("threads", hikonv::exec::default_threads())
+        .set("quick", quick)
+        .set("rows", Json::Array(json_rows));
+    let rendered = report.to_string_pretty();
+    println!("{rendered}");
+    if let Ok(path) = std::env::var("HIKONV_BENCH_OUT") {
+        std::fs::write(&path, format!("{rendered}\n")).expect("write bench baseline");
+        eprintln!("wrote {path}");
+    }
+}

@@ -44,7 +44,9 @@ impl Conv1dHiKonv {
             return Err("empty kernel".into());
         }
         if !matches!(dp.accum, AccumMode::Extended { .. }) {
-            return Err("Conv1dHiKonv requires an Extended-mode design point (Thm. 2 guard bits)".into());
+            return Err(
+                "Conv1dHiKonv requires an Extended-mode design point (Thm. 2 guard bits)".into(),
+            );
         }
         dp.validate()?;
         let signed = !matches!(dp.signedness, Signedness::Unsigned);
@@ -107,11 +109,13 @@ impl Conv1dHiKonv {
         );
         if self.use64 {
             for ch in &self.chunks64 {
-                fused_conv::<i64>(f, ch.packed, ch.len, &self.dp, self.signed, &mut out[ch.offset..]);
+                let tail = &mut out[ch.offset..];
+                fused_conv::<i64>(f, ch.packed, ch.len, &self.dp, self.signed, tail);
             }
         } else {
             for ch in &self.chunks128 {
-                fused_conv::<i128>(f, ch.packed, ch.len, &self.dp, self.signed, &mut out[ch.offset..]);
+                let tail = &mut out[ch.offset..];
+                fused_conv::<i128>(f, ch.packed, ch.len, &self.dp, self.signed, tail);
             }
         }
     }

@@ -54,6 +54,17 @@ pub struct PackedInput {
     w128: Vec<i128>,
 }
 
+impl PackedInput {
+    /// An empty buffer for [`Conv2dHiKonv::pack_input_into`]: arenas hold
+    /// one per layer and refill it every frame, reusing the allocation.
+    pub fn empty() -> PackedInput {
+        PackedInput {
+            w64: Vec::new(),
+            w128: Vec::new(),
+        }
+    }
+}
+
 impl Conv2dHiKonv {
     /// Build the engine, choosing the deepest channel block the guard bits
     /// support (capped at `C_i`) that still keeps `N >= 2`.
@@ -168,27 +179,57 @@ impl Conv2dHiKonv {
     /// at runtime", §IV-A); the result is shared across output-channel
     /// tiles, so parallel execution packs exactly once.
     pub fn pack_input(&self, input: &[i64]) -> PackedInput {
+        let mut packed = PackedInput::empty();
+        self.pack_input_into(input, &mut packed);
+        packed
+    }
+
+    /// [`pack_input`](Self::pack_input) into a reused buffer: after the
+    /// first frame the word vector is refilled in place, so steady-state
+    /// packing performs no heap allocation.
+    pub fn pack_input_into(&self, input: &[i64], packed: &mut PackedInput) {
         let sh = self.spec.shape;
         assert_eq!(input.len(), sh.input_len(), "input length mismatch");
         if self.use64 {
-            PackedInput {
-                w64: pack_rows::<i64>(input, sh, self.dp.s, self.dp.n, self.chunks_per_row),
-                w128: Vec::new(),
-            }
+            pack_rows_into::<i64>(
+                &mut packed.w64,
+                input,
+                sh,
+                self.dp.s,
+                self.dp.n,
+                self.chunks_per_row,
+            );
+            packed.w128.clear();
         } else {
-            PackedInput {
-                w64: Vec::new(),
-                w128: pack_rows::<i128>(input, sh, self.dp.s, self.dp.n, self.chunks_per_row),
-            }
+            pack_rows_into::<i128>(
+                &mut packed.w128,
+                input,
+                sh,
+                self.dp.s,
+                self.dp.n,
+                self.chunks_per_row,
+            );
+            packed.w64.clear();
         }
     }
 
     /// Run the layer. Input `[ci][h][w]`, output `[co][h][w]` row-major.
     pub fn conv(&self, input: &[i64]) -> Vec<i64> {
-        let packed = self.pack_input(input);
         let mut out = vec![0i64; self.spec.shape.output_len()];
-        self.conv_co_range(&packed, 0, self.spec.shape.co, &mut out);
+        self.conv_into(input, &mut out);
         out
+    }
+
+    /// Run the layer into a caller-provided buffer (`co·ho·wo`,
+    /// overwritten) — the write-into engine contract the fused model
+    /// pipeline builds on. Packs the input internally; callers that also
+    /// reuse the packed buffer combine [`pack_input_into`](Self::pack_input_into)
+    /// with [`conv_co_range_with`](Self::conv_co_range_with) instead.
+    pub fn conv_into(&self, input: &[i64], out: &mut [i64]) {
+        assert_eq!(out.len(), self.spec.shape.output_len(), "output length mismatch");
+        let packed = self.pack_input(input);
+        out.iter_mut().for_each(|v| *v = 0);
+        self.conv_co_range(&packed, 0, self.spec.shape.co, out);
     }
 
     /// Compute output channels `[co_start, co_end)` into `out_tile`
@@ -204,6 +245,22 @@ impl Conv2dHiKonv {
         out_tile: &mut [i64],
     ) {
         let sh = self.spec.shape;
+        let mut seg_buf = vec![0i64; sh.wi + sh.k - 1];
+        self.conv_co_range_with(packed, co_start, co_end, out_tile, &mut seg_buf);
+    }
+
+    /// [`conv_co_range`](Self::conv_co_range) with caller-provided
+    /// segmentation scratch (at least `wi + k - 1` values) — the
+    /// allocation-free variant the fused pipeline's arena drives.
+    pub fn conv_co_range_with(
+        &self,
+        packed: &PackedInput,
+        co_start: usize,
+        co_end: usize,
+        out_tile: &mut [i64],
+        seg_buf: &mut [i64],
+    ) {
+        let sh = self.spec.shape;
         assert!(co_start <= co_end && co_end <= sh.co, "co range out of bounds");
         assert_eq!(
             out_tile.len(),
@@ -214,23 +271,44 @@ impl Conv2dHiKonv {
         // const parameters, so the segmentation branch is resolved at
         // compile time instead of inside the inner emit loop.
         match (self.use64, self.signed) {
-            (true, true) => {
-                self.conv_core::<i64, true>(&packed.w64, &self.packed_w64, co_start, co_end, out_tile)
-            }
-            (true, false) => {
-                self.conv_core::<i64, false>(&packed.w64, &self.packed_w64, co_start, co_end, out_tile)
-            }
-            (false, true) => {
-                self.conv_core::<i128, true>(&packed.w128, &self.packed_w, co_start, co_end, out_tile)
-            }
-            (false, false) => {
-                self.conv_core::<i128, false>(&packed.w128, &self.packed_w, co_start, co_end, out_tile)
-            }
+            (true, true) => self.conv_core::<i64, true>(
+                &packed.w64,
+                &self.packed_w64,
+                co_start,
+                co_end,
+                out_tile,
+                seg_buf,
+            ),
+            (true, false) => self.conv_core::<i64, false>(
+                &packed.w64,
+                &self.packed_w64,
+                co_start,
+                co_end,
+                out_tile,
+                seg_buf,
+            ),
+            (false, true) => self.conv_core::<i128, true>(
+                &packed.w128,
+                &self.packed_w,
+                co_start,
+                co_end,
+                out_tile,
+                seg_buf,
+            ),
+            (false, false) => self.conv_core::<i128, false>(
+                &packed.w128,
+                &self.packed_w,
+                co_start,
+                co_end,
+                out_tile,
+                seg_buf,
+            ),
         }
     }
 
     /// The streaming Thm.-3 core, generic over the word lane and
     /// monomorphized over signedness.
+    #[allow(clippy::too_many_arguments)]
     fn conv_core<W: ProdWord, const SIGNED: bool>(
         &self,
         packed_in: &[W],
@@ -238,6 +316,7 @@ impl Conv2dHiKonv {
         co_start: usize,
         co_end: usize,
         out_tile: &mut [i64],
+        seg_buf: &mut [i64],
     ) {
         let sh = self.spec.shape;
         let (ho, wo, k) = (sh.ho(), sh.wo(), sh.k);
@@ -245,7 +324,7 @@ impl Conv2dHiKonv {
         let n = self.dp.n;
         let x_chunks = self.chunks_per_row;
         let conv_len = sh.wi + k - 1;
-        let mut seg_buf = vec![0i64; conv_len];
+        let seg_buf = &mut seg_buf[..conv_len];
         for co in co_start..co_end {
             // Weight-row base for this output channel, hoisted so the
             // `(co·ci)·k` multiply never runs inside the chunk loop.
@@ -314,16 +393,20 @@ impl Conv2dHiKonv {
     }
 }
 
-/// Pack every input row into `ceil(wi/N)` words of the requested lane.
-fn pack_rows<W: ProdWord>(
+/// Pack every input row into `ceil(wi/N)` words of the requested lane,
+/// refilling `packed_in` in place (capacity is retained across frames, so
+/// repeated packing of the same shape never reallocates).
+fn pack_rows_into<W: ProdWord>(
+    packed_in: &mut Vec<W>,
     input: &[i64],
     sh: ConvShape,
     s: u32,
     n: usize,
     x_chunks: usize,
-) -> Vec<W> {
+) {
     let wi = sh.wi;
-    let mut packed_in = vec![W::zero(); sh.ci * sh.hi * x_chunks];
+    packed_in.clear();
+    packed_in.resize(sh.ci * sh.hi * x_chunks, W::zero());
     for ci in 0..sh.ci {
         for h in 0..sh.hi {
             let row = &input[(ci * sh.hi + h) * wi..(ci * sh.hi + h) * wi + wi];
@@ -333,7 +416,6 @@ fn pack_rows<W: ProdWord>(
             }
         }
     }
-    packed_in
 }
 
 /// Candidate channel-block depths for `ci` input channels: every divisor
@@ -704,6 +786,46 @@ mod tests {
         }
         assert_seq_eq(&out, &eng.conv(&input)).unwrap();
         assert_seq_eq(&out, &conv2d_ref(&input, &weights, shape)).unwrap();
+    }
+
+    #[test]
+    fn conv_into_and_reused_buffers_match_conv() {
+        let shape = ConvShape {
+            ci: 4,
+            co: 3,
+            hi: 6,
+            wi: 10,
+            k: 3,
+        };
+        let mut rng = Rng::new(94);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let eng = Conv2dHiKonv::new(
+            Conv2dSpec {
+                shape,
+                mult: Multiplier::CPU32,
+                p: 4,
+                q: 4,
+                signedness: Signedness::UnsignedBySigned,
+            },
+            &weights,
+        )
+        .unwrap();
+        let mut packed = PackedInput::empty();
+        let mut out = vec![77i64; shape.output_len()];
+        let mut seg = vec![0i64; shape.wi + shape.k - 1];
+        for frame in 0..3 {
+            let input = rng.quant_unsigned_vec(4, shape.input_len());
+            // conv_into overwrites a stale buffer.
+            eng.conv_into(&input, &mut out);
+            assert_seq_eq(&out, &conv2d_ref(&input, &weights, shape)).unwrap();
+            // The arena path: pack into a reused buffer, run with reused
+            // segmentation scratch.
+            eng.pack_input_into(&input, &mut packed);
+            out.iter_mut().for_each(|v| *v = 0);
+            eng.conv_co_range_with(&packed, 0, shape.co, &mut out, &mut seg);
+            assert_seq_eq(&out, &conv2d_ref(&input, &weights, shape)).unwrap();
+            let _ = frame;
+        }
     }
 
     #[test]

@@ -112,6 +112,15 @@ impl PackedLhs {
         self.rows_pushed
     }
 
+    /// Drop all pushed rows but keep the word capacity: the arena-reuse
+    /// reset. After `clear` the builder accepts `m` fresh rows and, once
+    /// warm, repacking a same-shape frame performs no heap allocation.
+    pub fn clear(&mut self) {
+        self.rows_pushed = 0;
+        self.w64.clear();
+        self.w128.clear();
+    }
+
     fn assert_complete(&self) {
         assert_eq!(
             self.rows_pushed, self.m,
@@ -317,15 +326,22 @@ impl PackedGemm {
             lhs.words_per_row, self.words_per_row,
             "lhs packed for a different k/block"
         );
+        let (a64, b64, a128, b128) = (&lhs.w64, &self.rhs64, &lhs.w128, &self.rhs128);
         match (self.use64, self.signed, col_major) {
-            (true, true, true) => self.tile_core::<i64, true, true>(&lhs.w64, &self.rhs64, rows, cols, out),
-            (true, true, false) => self.tile_core::<i64, true, false>(&lhs.w64, &self.rhs64, rows, cols, out),
-            (true, false, true) => self.tile_core::<i64, false, true>(&lhs.w64, &self.rhs64, rows, cols, out),
-            (true, false, false) => self.tile_core::<i64, false, false>(&lhs.w64, &self.rhs64, rows, cols, out),
-            (false, true, true) => self.tile_core::<i128, true, true>(&lhs.w128, &self.rhs128, rows, cols, out),
-            (false, true, false) => self.tile_core::<i128, true, false>(&lhs.w128, &self.rhs128, rows, cols, out),
-            (false, false, true) => self.tile_core::<i128, false, true>(&lhs.w128, &self.rhs128, rows, cols, out),
-            (false, false, false) => self.tile_core::<i128, false, false>(&lhs.w128, &self.rhs128, rows, cols, out),
+            (true, true, true) => self.tile_core::<i64, true, true>(a64, b64, rows, cols, out),
+            (true, true, false) => self.tile_core::<i64, true, false>(a64, b64, rows, cols, out),
+            (true, false, true) => self.tile_core::<i64, false, true>(a64, b64, rows, cols, out),
+            (true, false, false) => self.tile_core::<i64, false, false>(a64, b64, rows, cols, out),
+            (false, true, true) => self.tile_core::<i128, true, true>(a128, b128, rows, cols, out),
+            (false, true, false) => {
+                self.tile_core::<i128, true, false>(a128, b128, rows, cols, out)
+            }
+            (false, false, true) => {
+                self.tile_core::<i128, false, true>(a128, b128, rows, cols, out)
+            }
+            (false, false, false) => {
+                self.tile_core::<i128, false, false>(a128, b128, rows, cols, out)
+            }
         }
     }
 
@@ -511,6 +527,34 @@ mod tests {
             streamed.push_row(&a[row * k..(row + 1) * k]);
         }
         assert_eq!(gemm.matmul(&streamed), gemm.matmul(&gemm.pack_lhs(&a, m)));
+    }
+
+    #[test]
+    fn cleared_lhs_repacks_identically() {
+        let (m, k, n) = (5usize, 9usize, 3usize);
+        let mut rng = Rng::new(0x6E8);
+        let a = rng.quant_unsigned_vec(4, m * k);
+        let bt = rng.quant_signed_vec(4, n * k);
+        let gemm = PackedGemm::new(
+            Multiplier::CPU32,
+            4,
+            4,
+            Signedness::UnsignedBySigned,
+            &bt,
+            k,
+            n,
+        )
+        .unwrap();
+        let want = gemm.matmul(&gemm.pack_lhs(&a, m));
+        let mut lhs = gemm.lhs_builder(m);
+        for round in 0..3 {
+            lhs.clear();
+            assert_eq!(lhs.rows(), 0, "round {round}");
+            for row in 0..m {
+                lhs.push_row(&a[row * k..(row + 1) * k]);
+            }
+            assert_eq!(gemm.matmul(&lhs), want, "round {round}");
+        }
     }
 
     #[test]

@@ -90,18 +90,29 @@ impl Im2RowConv {
     /// column tiles (and threads) borrow it freely.
     pub fn pack_pixels(&self, input: &[i64]) -> PackedLhs {
         let sh = self.spec.shape;
+        let mut lhs = self.gemm.lhs_builder(sh.ho() * sh.wo());
+        let mut row_buf = vec![0i64; sh.ci * sh.k * sh.k];
+        self.pack_pixels_into(input, &mut lhs, &mut row_buf);
+        lhs
+    }
+
+    /// [`pack_pixels`](Self::pack_pixels) into a reused builder (created
+    /// once via `gemm().lhs_builder(ho·wo)`) with caller-provided gather
+    /// scratch (at least `ci·k²` values): the builder is cleared and
+    /// refilled in place, so steady-state packing performs no heap
+    /// allocation — the arena contract of the fused pipeline.
+    pub fn pack_pixels_into(&self, input: &[i64], lhs: &mut PackedLhs, row_buf: &mut [i64]) {
+        let sh = self.spec.shape;
         assert_eq!(input.len(), sh.input_len(), "input length mismatch");
         let (ho, wo, k) = (sh.ho(), sh.wo(), sh.k);
-        let row_len = sh.ci * k * k;
-        let mut lhs = self.gemm.lhs_builder(ho * wo);
-        let mut row_buf = vec![0i64; row_len];
+        let row_buf = &mut row_buf[..sh.ci * k * k];
+        lhs.clear();
         for h in 0..ho {
             for w in 0..wo {
-                gather_row(&mut row_buf, input, sh, h, w);
-                lhs.push_row(&row_buf);
+                gather_row(row_buf, input, sh, h, w);
+                lhs.push_row(row_buf);
             }
         }
-        lhs
     }
 
     /// Compute output channels `[co_start, co_end)` into `out_tile`
@@ -124,11 +135,20 @@ impl Im2RowConv {
     /// pass over the input (weights were packed at construction); the
     /// output is written co-major directly by the column-major kernel.
     pub fn conv(&self, input: &[i64]) -> Vec<i64> {
+        let mut out = vec![0i64; self.spec.shape.output_len()];
+        self.conv_into(input, &mut out);
+        out
+    }
+
+    /// Run the layer into a caller-provided buffer (`co·ho·wo`,
+    /// overwritten) — the write-into engine contract. Packs the pixels
+    /// internally; callers that also reuse the packed buffer combine
+    /// [`pack_pixels_into`](Self::pack_pixels_into) with
+    /// [`conv_cols`](Self::conv_cols) instead.
+    pub fn conv_into(&self, input: &[i64], out: &mut [i64]) {
         let sh = self.spec.shape;
         let pixels = self.pack_pixels(input);
-        let mut out = vec![0i64; sh.output_len()];
-        self.conv_cols(&pixels, 0, sh.co, &mut out);
-        out
+        self.conv_cols(&pixels, 0, sh.co, out);
     }
 }
 
@@ -285,6 +305,40 @@ mod tests {
         let weights = rng.quant_signed_vec(4, spec.shape.weight_len());
         let eng = Im2RowConv::new(spec, &weights).unwrap();
         assert!(eng.gemm().uses_fast_lane(), "{:?}", eng.gemm().design_point());
+    }
+
+    #[test]
+    fn conv_into_and_reused_builder_match_conv() {
+        let shape = ConvShape {
+            ci: 3,
+            co: 4,
+            hi: 6,
+            wi: 8,
+            k: 3,
+        };
+        let mut rng = Rng::new(26);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let eng = Im2RowConv::new(spec, &weights).unwrap();
+        let mut lhs = eng.gemm().lhs_builder(shape.ho() * shape.wo());
+        let mut row_buf = vec![0i64; shape.ci * shape.k * shape.k];
+        let mut out = vec![55i64; shape.output_len()];
+        for _ in 0..3 {
+            let input = rng.quant_unsigned_vec(4, shape.input_len());
+            let want = conv2d_ref(&input, &weights, shape);
+            eng.conv_into(&input, &mut out);
+            assert_seq_eq(&out, &want).unwrap();
+            // The arena path: reused builder + gather scratch.
+            eng.pack_pixels_into(&input, &mut lhs, &mut row_buf);
+            eng.conv_cols(&lhs, 0, shape.co, &mut out);
+            assert_seq_eq(&out, &want).unwrap();
+        }
     }
 
     #[test]

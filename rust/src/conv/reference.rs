@@ -56,10 +56,19 @@ impl ConvShape {
 /// baseline of Fig. 6b. Layouts: input `[ci][h][w]`, weights
 /// `[co][ci][kh][kw]`, output `[co][h][w]`, all row-major.
 pub fn conv2d_ref(input: &[i64], weights: &[i64], shape: ConvShape) -> Vec<i64> {
+    let mut out = vec![0i64; shape.output_len()];
+    conv2d_ref_into(input, weights, shape, &mut out);
+    out
+}
+
+/// [`conv2d_ref`] writing into a caller-provided buffer (`co·ho·wo`,
+/// overwritten) — the allocation-free variant the fused model pipeline
+/// drives its baseline layers through.
+pub fn conv2d_ref_into(input: &[i64], weights: &[i64], shape: ConvShape, out: &mut [i64]) {
     assert_eq!(input.len(), shape.input_len(), "input length mismatch");
     assert_eq!(weights.len(), shape.weight_len(), "weight length mismatch");
+    assert_eq!(out.len(), shape.output_len(), "output length mismatch");
     let (ho, wo) = (shape.ho(), shape.wo());
-    let mut out = vec![0i64; shape.output_len()];
     for co in 0..shape.co {
         for h in 0..ho {
             for w in 0..wo {
@@ -77,7 +86,6 @@ pub fn conv2d_ref(input: &[i64], weights: &[i64], shape: ConvShape) -> Vec<i64> 
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -133,6 +141,20 @@ mod tests {
             k: 1,
         };
         let out = conv2d_ref(&[1, 2, 3, 4], &[2], s);
+        assert_eq!(out, vec![2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn conv2d_ref_into_overwrites_stale_buffer() {
+        let s = ConvShape {
+            ci: 1,
+            co: 1,
+            hi: 2,
+            wi: 2,
+            k: 1,
+        };
+        let mut out = vec![99i64; 4];
+        conv2d_ref_into(&[1, 2, 3, 4], &[2], s, &mut out);
         assert_eq!(out, vec![2, 4, 6, 8]);
     }
 

@@ -1,7 +1,9 @@
 //! Multi-worker CPU inference pool: shards batches across persistent
-//! worker threads, each owning its own engine instance, and reassembles
-//! results in order. (The PJRT backend stays single-threaded — its client
-//! is `Rc`-internal; CPU engines are plain data and parallelize freely.)
+//! worker threads — one contiguous chunk per worker, each executed as a
+//! batch through the fused runner (`CpuRunner::infer_batch`, so arenas
+//! are reused across a chunk's frames) — and reassembles results in
+//! order. (The PJRT backend stays single-threaded — its client is
+//! `Rc`-internal; CPU engines are plain data and parallelize freely.)
 //!
 //! Two axes of parallelism compose here: this pool shards *frames* across
 //! workers, and a worker built with [`EngineKind::HiKonvTiled`] also
@@ -17,7 +19,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 enum Job {
-    Frame(usize, Frame),
+    /// A contiguous slice of a batch: (start index in the batch, frames).
+    Chunk(usize, Vec<Frame>),
     Stop,
 }
 
@@ -26,7 +29,7 @@ pub struct ParallelCpuBackend {
     label: String,
     dims: (usize, usize, usize),
     job_tx: Sender<Job>,
-    res_rx: Receiver<(usize, Detection)>,
+    res_rx: Receiver<(usize, Vec<Detection>)>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
 }
@@ -58,7 +61,7 @@ impl ParallelCpuBackend {
         };
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let (res_tx, res_rx) = channel::<(usize, Detection)>();
+        let (res_tx, res_rx) = channel::<(usize, Vec<Detection>)>();
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let runner = CpuRunner::new(model.clone(), weights.clone(), kind)?;
@@ -70,13 +73,21 @@ impl ParallelCpuBackend {
                     guard.recv()
                 };
                 match job {
-                    Ok(Job::Frame(idx, frame)) => {
-                        let head = runner.infer(&frame.levels);
-                        let det = Detection {
-                            frame_id: frame.id,
-                            cell: runner.decode(&head),
-                        };
-                        if tx.send((idx, det)).is_err() {
+                    Ok(Job::Chunk(start, frames)) => {
+                        // Run the chunk *as a batch* through the fused
+                        // runner (arena reuse across its frames).
+                        let levels: Vec<&[i64]> =
+                            frames.iter().map(|f| f.levels.as_slice()).collect();
+                        let heads = runner.infer_batch(&levels);
+                        let dets: Vec<Detection> = frames
+                            .iter()
+                            .zip(&heads)
+                            .map(|(f, head)| Detection {
+                                frame_id: f.id,
+                                cell: runner.decode(head),
+                            })
+                            .collect();
+                        if tx.send((start, dets)).is_err() {
                             return;
                         }
                     }
@@ -109,15 +120,26 @@ impl InferBackend for ParallelCpuBackend {
     }
 
     fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
-        for (idx, frame) in frames.iter().enumerate() {
+        if frames.is_empty() {
+            return Vec::new();
+        }
+        // One contiguous chunk per worker: each worker executes its share
+        // as a batch (fused arenas reused across its frames) instead of
+        // pulling frames one at a time.
+        let chunk = frames.len().div_ceil(self.workers);
+        let mut sent = 0usize;
+        for (i, c) in frames.chunks(chunk).enumerate() {
             self.job_tx
-                .send(Job::Frame(idx, frame.clone()))
+                .send(Job::Chunk(i * chunk, c.to_vec()))
                 .expect("worker pool gone");
+            sent += 1;
         }
         let mut slots: Vec<Option<Detection>> = vec![None; frames.len()];
-        for _ in 0..frames.len() {
-            let (idx, det) = self.res_rx.recv().expect("worker died mid-batch");
-            slots[idx] = Some(det);
+        for _ in 0..sent {
+            let (start, dets) = self.res_rx.recv().expect("worker died mid-batch");
+            for (j, det) in dets.into_iter().enumerate() {
+                slots[start + j] = Some(det);
+            }
         }
         slots.into_iter().map(|d| d.expect("missing result")).collect()
     }

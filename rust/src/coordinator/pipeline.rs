@@ -34,6 +34,11 @@ pub trait InferBackend {
 }
 
 /// CPU backend over the model runner (baseline or HiKonv engines).
+///
+/// Batches from the batcher are handed to the runner *as batches*
+/// ([`CpuRunner::infer_batch`](crate::models::CpuRunner::infer_batch)):
+/// pooled engine kinds shard whole frames across the runner's thread
+/// pool with per-worker arena reuse instead of inferring frame-by-frame.
 pub struct CpuBackend {
     runner: crate::models::CpuRunner,
     label: String,
@@ -56,14 +61,14 @@ impl InferBackend for CpuBackend {
     }
 
     fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        let levels: Vec<&[i64]> = frames.iter().map(|f| f.levels.as_slice()).collect();
+        let heads = self.runner.infer_batch(&levels);
         frames
             .iter()
-            .map(|f| {
-                let head = self.runner.infer(&f.levels);
-                Detection {
-                    frame_id: f.id,
-                    cell: self.runner.decode(&head),
-                }
+            .zip(&heads)
+            .map(|(f, head)| Detection {
+                frame_id: f.id,
+                cell: self.runner.decode(head),
             })
             .collect()
     }

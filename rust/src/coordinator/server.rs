@@ -1,5 +1,11 @@
 //! The serve loop: source thread → bounded queue → batcher + inference →
 //! postprocess/metrics.
+//!
+//! Batches assembled by the [`Batcher`] are handed to the backend whole
+//! and executed *as batches*: the CPU backends route them through the
+//! fused `CpuRunner::infer_batch` (frame-level parallelism + arena
+//! reuse), so `--batch`/`--linger-ms` genuinely amortize per-frame
+//! overheads instead of just grouping the accounting.
 
 use super::batcher::Batcher;
 use super::metrics::{ServeReport, StageMetrics};

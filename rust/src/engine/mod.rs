@@ -5,9 +5,10 @@
 //! im2row/pre-packed-GEMM lowering (also pool-tiled, via
 //! [`im2row_tiled`]), or (whole-model) a PJRT-compiled artifact.
 
-use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec, PackedInput};
+use crate::conv::gemm::PackedLhs;
 use crate::conv::im2row::Im2RowConv;
-use crate::conv::reference::{conv2d_ref, ConvShape};
+use crate::conv::reference::{conv2d_ref, conv2d_ref_into, ConvShape};
 use crate::exec::ThreadPool;
 use crate::theory::{Multiplier, Signedness};
 use std::sync::Arc;
@@ -18,6 +19,14 @@ pub trait ConvEngine: Send {
     fn name(&self) -> &str;
     /// Execute the layer on `[ci][h][w]` activations.
     fn conv(&self, input: &[i64]) -> Vec<i64>;
+    /// Execute the layer into a caller-provided buffer (`co·ho·wo`,
+    /// overwritten) — the write-into contract the fused model pipeline
+    /// drives so layer outputs land in arena buffers instead of fresh
+    /// allocations. Engines override the default (which copies through
+    /// [`conv`](Self::conv)) with a genuinely allocation-lean path.
+    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
+        out.copy_from_slice(&self.conv(input));
+    }
     /// The layer shape this engine was built for.
     fn shape(&self) -> ConvShape;
 }
@@ -41,6 +50,9 @@ impl ConvEngine for BaselineEngine {
     }
     fn conv(&self, input: &[i64]) -> Vec<i64> {
         conv2d_ref(input, &self.weights, self.shape)
+    }
+    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
+        conv2d_ref_into(input, &self.weights, self.shape, out);
     }
     fn shape(&self) -> ConvShape {
         self.shape
@@ -83,6 +95,9 @@ impl ConvEngine for HiKonvEngine {
     fn conv(&self, input: &[i64]) -> Vec<i64> {
         self.inner.conv(input)
     }
+    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
+        self.inner.conv_into(input, out);
+    }
     fn shape(&self) -> ConvShape {
         self.shape
     }
@@ -99,7 +114,10 @@ pub fn tile_co_for(co: usize, threads: usize) -> usize {
 /// pool: the scoped worker spawn/join (~tens of µs per call) amortizes
 /// poorly against sub-100µs tile compute, so tiny layers would get
 /// *slower* tiled (the serve path calls this once per layer per frame).
-const PAR_MIN_MACS: u64 = 100_000;
+/// Public so callers holding their own scratch (the fused runner's
+/// arena) can apply the same cutoff and drive the allocation-free
+/// serial path directly.
+pub const PAR_MIN_MACS: u64 = 100_000;
 
 /// Run one HiKonv conv2d layer tiled over output channels on `pool`:
 /// pack the input once, then shard `[co_start, co_end)` ranges across the
@@ -112,15 +130,37 @@ pub fn conv2d_tiled(eng: &Conv2dHiKonv, pool: &ThreadPool, input: &[i64]) -> Vec
         return eng.conv(input);
     }
     let packed = eng.pack_input(input);
+    let mut out = vec![0i64; sh.output_len()];
+    conv2d_tiled_into(eng, pool, &packed, &mut out);
+    out
+}
+
+/// [`conv2d_tiled`] on an already-packed input, writing into a
+/// caller-provided buffer (`co·ho·wo`, overwritten) — the write-into
+/// tiling contract: the fused pipeline packs into its arena once and
+/// shards from there. Applies the same small-layer serial cutoff, so it
+/// stays bit-identical to [`conv2d_tiled`] and `eng.conv`.
+pub fn conv2d_tiled_into(
+    eng: &Conv2dHiKonv,
+    pool: &ThreadPool,
+    packed: &PackedInput,
+    out: &mut [i64],
+) {
+    let sh = eng.shape();
+    assert_eq!(out.len(), sh.output_len(), "output length mismatch");
+    // `conv_co_range` accumulates with `+=`: zero the (reused) buffer.
+    out.iter_mut().for_each(|v| *v = 0);
+    if pool.threads() == 1 || sh.macs() < PAR_MIN_MACS {
+        eng.conv_co_range(packed, 0, sh.co, out);
+        return;
+    }
     let (ho, wo) = (sh.ho(), sh.wo());
     let tile_co = tile_co_for(sh.co, pool.threads());
-    let mut out = vec![0i64; sh.output_len()];
-    pool.par_chunks_mut(&mut out, tile_co * ho * wo, |tile_idx, tile| {
+    pool.par_chunks_mut(out, tile_co * ho * wo, |tile_idx, tile| {
         let co_start = tile_idx * tile_co;
         let co_end = (co_start + tile_co).min(sh.co);
-        eng.conv_co_range(&packed, co_start, co_end, tile);
+        eng.conv_co_range(packed, co_start, co_end, tile);
     });
-    out
 }
 
 /// Parallel tiled HiKonv engine: Thm.-3 packed arithmetic with output
@@ -190,6 +230,10 @@ impl ConvEngine for ParallelEngine {
     fn conv(&self, input: &[i64]) -> Vec<i64> {
         conv2d_tiled(&self.inner, &self.pool, input)
     }
+    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
+        let packed = self.inner.pack_input(input);
+        conv2d_tiled_into(&self.inner, &self.pool, &packed, out);
+    }
     fn shape(&self) -> ConvShape {
         self.shape
     }
@@ -208,15 +252,30 @@ pub fn im2row_tiled(eng: &Im2RowConv, pool: &ThreadPool, input: &[i64]) -> Vec<i
         return eng.conv(input);
     }
     let pixels = eng.pack_pixels(input);
+    let mut out = vec![0i64; sh.output_len()];
+    im2row_tiled_into(eng, pool, &pixels, &mut out);
+    out
+}
+
+/// [`im2row_tiled`] on already-packed pixel rows, writing into a
+/// caller-provided buffer (`co·ho·wo` co-major, overwritten) — the
+/// write-into tiling contract for the im2row/GEMM lowering. Applies the
+/// same small-layer serial cutoff, so it stays bit-identical to
+/// [`im2row_tiled`] and `eng.conv`.
+pub fn im2row_tiled_into(eng: &Im2RowConv, pool: &ThreadPool, pixels: &PackedLhs, out: &mut [i64]) {
+    let sh = eng.spec().shape;
+    assert_eq!(out.len(), sh.output_len(), "output length mismatch");
+    if pool.threads() == 1 || sh.macs() < PAR_MIN_MACS {
+        eng.conv_cols(pixels, 0, sh.co, out);
+        return;
+    }
     let rows = sh.ho() * sh.wo();
     let tile_co = tile_co_for(sh.co, pool.threads());
-    let mut out = vec![0i64; sh.output_len()];
-    pool.par_chunks_mut(&mut out, tile_co * rows, |tile_idx, tile| {
+    pool.par_chunks_mut(out, tile_co * rows, |tile_idx, tile| {
         let co_start = tile_idx * tile_co;
         let co_end = (co_start + tile_co).min(sh.co);
-        eng.conv_cols(&pixels, co_start, co_end, tile);
+        eng.conv_cols(pixels, co_start, co_end, tile);
     });
-    out
 }
 
 /// im2row/GEMM lowering engine: weights pre-packed at construction,
@@ -285,6 +344,10 @@ impl ConvEngine for Im2RowEngine {
     }
     fn conv(&self, input: &[i64]) -> Vec<i64> {
         im2row_tiled(&self.inner, &self.pool, input)
+    }
+    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
+        let pixels = self.inner.pack_pixels(input);
+        im2row_tiled_into(&self.inner, &self.pool, &pixels, out);
     }
     fn shape(&self) -> ConvShape {
         self.shape
@@ -431,6 +494,100 @@ mod tests {
         for threads in [2usize, 4, 8] {
             let par = im2row_tiled(&eng, &ThreadPool::new(threads), &input);
             assert_seq_eq(&par, &serial).unwrap();
+        }
+    }
+
+    #[test]
+    fn conv_into_matches_conv_for_every_engine() {
+        let shape = ConvShape {
+            ci: 5,
+            co: 6,
+            hi: 8,
+            wi: 12,
+            k: 3,
+        };
+        let mut rng = Rng::new(45);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let sgn = Signedness::UnsignedBySigned;
+        let engines: Vec<Box<dyn ConvEngine>> = vec![
+            Box::new(BaselineEngine::new(shape, weights.clone())),
+            Box::new(
+                HiKonvEngine::new(shape, weights.clone(), Multiplier::CPU32, 4, 4, sgn).unwrap(),
+            ),
+            Box::new(
+                ParallelEngine::with_threads(
+                    shape,
+                    weights.clone(),
+                    Multiplier::CPU32,
+                    4,
+                    4,
+                    sgn,
+                    3,
+                )
+                .unwrap(),
+            ),
+            Box::new(
+                Im2RowEngine::with_threads(shape, weights.clone(), Multiplier::CPU32, 4, 4, sgn, 2)
+                    .unwrap(),
+            ),
+        ];
+        let want = conv2d_ref(&input, &weights, shape);
+        let mut out = vec![123i64; shape.output_len()];
+        for e in &engines {
+            out.iter_mut().for_each(|v| *v = 123); // stale contents must be overwritten
+            e.conv_into(&input, &mut out);
+            assert_seq_eq(&out, &want).unwrap();
+            assert_seq_eq(&e.conv(&input), &want).unwrap();
+        }
+    }
+
+    #[test]
+    fn tiled_into_matches_tiled_above_and_below_cutoff() {
+        // One shape above the serial cutoff, one below: both must agree
+        // with the allocating entry points bit-for-bit.
+        for (shape, seed) in [
+            (
+                ConvShape {
+                    ci: 6,
+                    co: 12,
+                    hi: 10,
+                    wi: 34,
+                    k: 3,
+                },
+                46u64,
+            ),
+            (
+                ConvShape {
+                    ci: 2,
+                    co: 3,
+                    hi: 6,
+                    wi: 8,
+                    k: 3,
+                },
+                47,
+            ),
+        ] {
+            let mut rng = Rng::new(seed);
+            let weights = rng.quant_signed_vec(4, shape.weight_len());
+            let input = rng.quant_unsigned_vec(4, shape.input_len());
+            let spec = Conv2dSpec {
+                shape,
+                mult: Multiplier::CPU32,
+                p: 4,
+                q: 4,
+                signedness: Signedness::UnsignedBySigned,
+            };
+            let pool = ThreadPool::new(4);
+            let eng = Conv2dHiKonv::new(spec, &weights).unwrap();
+            let mut out = vec![7i64; shape.output_len()];
+            conv2d_tiled_into(&eng, &pool, &eng.pack_input(&input), &mut out);
+            assert_seq_eq(&out, &conv2d_tiled(&eng, &pool, &input)).unwrap();
+            let im = Im2RowConv::new(spec, &weights).unwrap();
+            let mut out2 = vec![7i64; shape.output_len()];
+            im2row_tiled_into(&im, &pool, &im.pack_pixels(&input), &mut out2);
+            assert_seq_eq(&out2, &im2row_tiled(&im, &pool, &input)).unwrap();
+            assert_seq_eq(&out, &out2).unwrap();
         }
     }
 

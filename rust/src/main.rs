@@ -8,14 +8,16 @@
 //! hikonv fig5 | fig6a | fig6b | fig6c | table1 | table2
 //! hikonv serve   --backend hikonv|hikonv-tiled|im2row|baseline|pjrt
 //!                --frames 64 [--fps-cap 401] [--workers N] [--threads N]
+//!                [--batch N] [--linger-ms MS] [--queue-depth N]
 //! hikonv run-model --engine hikonv|hikonv-tiled|im2row|baseline
-//!                [--threads N]                 one UltraNet-tiny inference
+//!                [--threads N] [--batch N]    one UltraNet-tiny inference
 //! ```
 //!
 //! `--threads` sets the intra-layer tiling width of the `hikonv-tiled`
 //! and `im2row` engines (0 = auto from the machine / `HIKONV_THREADS`);
-//! `--workers` sets the frame-level worker pool of `serve`. The two
-//! compose.
+//! `--workers` sets the frame-level worker pool of `serve`; `--batch` /
+//! `--linger-ms` are the dynamic batcher's knobs (batches are executed
+//! as batches by the fused runner). They all compose.
 
 use hikonv::bench::BenchConfig;
 use hikonv::cli::{render_help, Args, OptSpec};
@@ -186,7 +188,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let workers = args.get_usize("workers", 1)?;
     let threads = args.get_usize("threads", 0)?;
     let model = if full { ultranet() } else { ultranet_tiny() };
-    let cpu_backend = |kind: EngineKind| -> Result<Box<dyn hikonv::coordinator::InferBackend>, String> {
+    type BackendResult = Result<Box<dyn hikonv::coordinator::InferBackend>, String>;
+    let cpu_backend = |kind: EngineKind| -> BackendResult {
         let weights = random_weights(&model, config.seed);
         if workers > 1 {
             Ok(Box::new(ParallelCpuBackend::new(
@@ -249,6 +252,28 @@ fn cmd_run_model(args: &Args) -> Result<(), String> {
     let runner = CpuRunner::new(model.clone(), weights, engine)?;
     let (c, h, w) = model.input;
     let mut rng = hikonv::util::rng::Rng::new(1);
+    let batch = args.get_usize("batch", 1)?.max(1);
+    if batch > 1 {
+        // Fused batched inference: whole frames sharded across the
+        // engine's thread pool, per-worker arenas reused.
+        let frames: Vec<Vec<i64>> = (0..batch)
+            .map(|_| rng.quant_unsigned_vec(4, c * h * w))
+            .collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        let (outs, dt) = hikonv::util::timer::time(|| runner.infer_batch(&refs));
+        let cell = runner.decode(&outs[0]);
+        println!(
+            "{} ({:?}): batch {} in {:.2} ms ({:.2} ms/frame, {:.1} fps), first cell {:?}",
+            model.name,
+            engine,
+            batch,
+            dt * 1e3,
+            dt * 1e3 / batch as f64,
+            batch as f64 / dt.max(1e-9),
+            cell
+        );
+        return Ok(());
+    }
     let frame = rng.quant_unsigned_vec(4, c * h * w);
     let (out, dt) = hikonv::util::timer::time(|| runner.infer(&frame));
     let cell = runner.decode(&out);
@@ -283,6 +308,36 @@ fn help() -> String {
             default: Some("0"),
             is_switch: false,
         },
+        OptSpec {
+            name: "frames",
+            help: "total frames to stream",
+            default: Some("64"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "fps-cap",
+            help: "feeder rate cap in fps (unset = as fast as possible)",
+            default: None,
+            is_switch: false,
+        },
+        OptSpec {
+            name: "batch",
+            help: "dynamic batcher: max frames per batch",
+            default: Some("4"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "linger-ms",
+            help: "dynamic batcher: max wait for follow-up frames (ms)",
+            default: Some("2"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "queue-depth",
+            help: "bounded source→inference queue depth (backpressure)",
+            default: Some("8"),
+            is_switch: false,
+        },
     ];
     let run_model_opts: &[OptSpec] = &[
         OptSpec {
@@ -295,6 +350,12 @@ fn help() -> String {
             name: "threads",
             help: "intra-layer tiling threads (hikonv-tiled, im2row; 0 = auto)",
             default: Some("0"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "batch",
+            help: "frames per fused infer_batch call (1 = single frame)",
+            default: Some("1"),
             is_switch: false,
         },
     ];

@@ -1,6 +1,8 @@
-//! Layer descriptors for quantized CNN models.
+//! Layer descriptors for quantized CNN models, plus the standalone and
+//! fused activation-flow helpers (pad / requantize / max-pool).
 
 use crate::conv::reference::ConvShape;
+use std::borrow::Cow;
 
 /// One convolution layer (same-padding, stride 1), optionally followed by a
 /// 2×2 max-pool — the only structures UltraNet uses.
@@ -135,14 +137,32 @@ pub fn maxpool2(input: &[i64], c: usize, h: usize, w: usize) -> Vec<i64> {
     out
 }
 
-/// Zero-pad an `[c][h][w]` tensor symmetrically by `pad` on each spatial side.
-pub fn pad2d(input: &[i64], c: usize, h: usize, w: usize, pad: usize) -> Vec<i64> {
+/// Zero-pad an `[c][h][w]` tensor symmetrically by `pad` on each spatial
+/// side. Fast path: `pad == 0` borrows the input as-is — no copy (the
+/// entry layer and test helpers hit this constantly).
+pub fn pad2d<'a>(input: &'a [i64], c: usize, h: usize, w: usize, pad: usize) -> Cow<'a, [i64]> {
     assert_eq!(input.len(), c * h * w);
     if pad == 0 {
-        return input.to_vec();
+        return Cow::Borrowed(input);
     }
     let (hp, wp) = (h + 2 * pad, w + 2 * pad);
     let mut out = vec![0i64; c * hp * wp];
+    pad2d_into(input, c, h, w, pad, &mut out);
+    Cow::Owned(out)
+}
+
+/// Copy an unpadded `[c][h][w]` tensor into the *interior* of a padded
+/// buffer (`c × (h+2·pad) × (w+2·pad)`), leaving the border cells
+/// untouched — the arena variant of [`pad2d`]: a once-zeroed buffer whose
+/// interior is fully rewritten every frame stays correctly padded forever.
+pub fn pad2d_into(input: &[i64], c: usize, h: usize, w: usize, pad: usize, out: &mut [i64]) {
+    assert_eq!(input.len(), c * h * w);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    assert_eq!(out.len(), c * hp * wp);
+    if pad == 0 {
+        out.copy_from_slice(input);
+        return;
+    }
     for ci in 0..c {
         for y in 0..h {
             let src = (ci * h + y) * w;
@@ -150,7 +170,57 @@ pub fn pad2d(input: &[i64], c: usize, h: usize, w: usize, pad: usize) -> Vec<i64
             out[dst..dst + w].copy_from_slice(&input[src..src + w]);
         }
     }
-    out
+}
+
+/// The fused inter-layer epilogue: ReLU + right-shift requantization to
+/// unsigned `bits` levels, optionally a 2×2 max-pool (stride 2), written
+/// directly into the interior of the next layer's padded buffer (`dst` is
+/// `c × (h_out+2·pad) × (w_out+2·pad)`; borders are never touched).
+///
+/// Replaces the seed pipeline's three allocating passes
+/// (`requantize` → `maxpool2` → `pad2d`) with one read of `acc` and one
+/// write of `dst`. Pooling is applied *before* the requant clamp here
+/// (one shift per kept value instead of four); the result is bit-identical
+/// because `v ↦ (max(v,0) >> shift).min(hi)` is monotone non-decreasing,
+/// so it commutes with `max` over the pool window.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_epilogue_into(
+    acc: &[i64],
+    shift: u32,
+    bits: u32,
+    c: usize,
+    h: usize,
+    w: usize,
+    pool: bool,
+    dst: &mut [i64],
+    pad: usize,
+) {
+    assert_eq!(acc.len(), c * h * w);
+    let (ho, wo) = if pool { (h / 2, w / 2) } else { (h, w) };
+    let (hp, wp) = (ho + 2 * pad, wo + 2 * pad);
+    assert_eq!(dst.len(), c * hp * wp);
+    let hi = (1i64 << bits) - 1;
+    for ci in 0..c {
+        for y in 0..ho {
+            let drow = (ci * hp + y + pad) * wp + pad;
+            if pool {
+                let r0 = (ci * h + 2 * y) * w;
+                let r1 = r0 + w;
+                for x in 0..wo {
+                    let m = acc[r0 + 2 * x]
+                        .max(acc[r0 + 2 * x + 1])
+                        .max(acc[r1 + 2 * x])
+                        .max(acc[r1 + 2 * x + 1]);
+                    dst[drow + x] = (m.max(0) >> shift).min(hi);
+                }
+            } else {
+                let srow = (ci * h + y) * w;
+                for x in 0..wo {
+                    dst[drow + x] = (acc[srow + x].max(0) >> shift).min(hi);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -225,5 +295,63 @@ mod tests {
         assert_eq!(y[9], 3);
         assert_eq!(y[10], 4);
         assert_eq!(y[0], 0);
+    }
+
+    #[test]
+    fn pad_zero_borrows_without_copy() {
+        let x = vec![1i64, 2, 3, 4];
+        let y = pad2d(&x, 1, 2, 2, 0);
+        assert!(matches!(y, Cow::Borrowed(_)), "pad=0 must not copy");
+        assert_eq!(&y[..], &x[..]);
+        assert!(matches!(pad2d(&x, 1, 2, 2, 1), Cow::Owned(_)));
+    }
+
+    #[test]
+    fn pad_into_only_writes_the_interior() {
+        let x = vec![1i64, 2, 3, 4]; // 1x2x2
+        // Borders pre-set to a sentinel: pad2d_into must not touch them.
+        let mut out = vec![9i64; 16];
+        for i in [5usize, 6, 9, 10] {
+            out[i] = 0;
+        }
+        pad2d_into(&x, 1, 2, 2, 1, &mut out);
+        assert_eq!(out[5], 1);
+        assert_eq!(out[6], 2);
+        assert_eq!(out[9], 3);
+        assert_eq!(out[10], 4);
+        assert_eq!(out[0], 9, "border untouched");
+        assert_eq!(out[15], 9, "border untouched");
+        // pad=0 degenerates to a straight copy.
+        let mut flat = vec![0i64; 4];
+        pad2d_into(&x, 1, 2, 2, 0, &mut flat);
+        assert_eq!(flat, x);
+    }
+
+    #[test]
+    fn fused_epilogue_matches_requant_pool_pad_composition() {
+        use crate::models::runner::requantize;
+        let mut rng = crate::util::rng::Rng::new(0xE91);
+        for (c, h, w, pool, pad, shift) in [
+            (3usize, 4usize, 6usize, true, 1usize, 2u32),
+            (2, 4, 6, false, 1, 0),
+            (1, 2, 2, true, 0, 3),
+            (4, 6, 8, false, 2, 1),
+        ] {
+            // Signed accumulators exercise the ReLU branch.
+            let acc: Vec<i64> = (0..c * h * w).map(|_| rng.below(4000) as i64 - 2000).collect();
+            // Seed composition: requantize, then pool, then pad.
+            let mut want = requantize(&acc, shift, 4);
+            let (mut ho, mut wo) = (h, w);
+            if pool {
+                want = maxpool2(&want, c, h, w);
+                ho = h / 2;
+                wo = w / 2;
+            }
+            let want = pad2d(&want, c, ho, wo, pad).into_owned();
+            // Fused epilogue into a pre-zeroed padded buffer.
+            let mut dst = vec![0i64; c * (ho + 2 * pad) * (wo + 2 * pad)];
+            fused_epilogue_into(&acc, shift, 4, c, h, w, pool, &mut dst, pad);
+            assert_eq!(dst, want, "c={c} h={h} w={w} pool={pool} pad={pad}");
+        }
     }
 }

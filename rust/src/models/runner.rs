@@ -1,17 +1,41 @@
 //! CPU inference runner: executes a quantized conv model over pluggable
 //! convolution engines (baseline nested loops, HiKonv packed engines —
 //! serial or tiled across a thread pool — and the im2row lowering).
+//!
+//! # Fused pipeline
+//!
+//! The seed implementation paid four full-tensor allocations/copies per
+//! layer (`pad2d` copy-in, a fresh accumulator `Vec`, a `requantize`
+//! pass, a `maxpool2` pass). [`CpuRunner::infer`] now runs a *fused*
+//! pipeline instead: a per-runner [`Arena`] holds every buffer a frame
+//! needs — one padded activation buffer per layer (borders zeroed once,
+//! never touched again), one shared accumulator, and per-layer packed
+//! word buffers — all sized once from the [`ModelSpec`] and reused across
+//! frames. Each layer convolves straight out of its padded buffer into
+//! the shared accumulator (via the engines' write-into APIs), and a fused
+//! epilogue ([`fused_epilogue_into`]) applies ReLU + requant-shift +
+//! optional 2×2 max-pool while writing directly into the interior of the
+//! *next* layer's padded buffer. Steady state, serial engines perform
+//! zero heap allocations per [`infer_into`](CpuRunner::infer_into) call
+//! (asserted by `tests/fused_alloc.rs`).
+//!
+//! The seed path is retained as [`CpuRunner::infer_unfused`]: it is the
+//! bit-exactness oracle for the fused pipeline and the baseline of
+//! `benches/model.rs`.
 
-use super::layer::{maxpool2, pad2d, ModelSpec};
-use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec};
+use super::layer::{fused_epilogue_into, maxpool2, pad2d, pad2d_into, ModelSpec};
+use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec, PackedInput};
+use crate::conv::gemm::PackedLhs;
 use crate::conv::im2row::Im2RowConv;
-use crate::conv::reference::conv2d_ref;
-use crate::engine::{conv2d_tiled, im2row_tiled};
+use crate::conv::reference::{conv2d_ref, conv2d_ref_into};
+use crate::engine::{
+    conv2d_tiled, conv2d_tiled_into, im2row_tiled, im2row_tiled_into, PAR_MIN_MACS,
+};
 use crate::exec::ThreadPool;
 use crate::quant::{QTensor, Shape};
 use crate::theory::{Multiplier, Signedness};
 use crate::util::rng::Rng;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Which convolution engine executes the layers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,6 +58,34 @@ enum LayerEngine {
     Baseline,
     HiKonv(Conv2dHiKonv),
     Im2Row(Im2RowConv),
+}
+
+/// Per-layer packed-activation buffer in the engine's word lane.
+enum PackedBuf {
+    None,
+    HiKonv(PackedInput),
+    Im2Row(PackedLhs),
+}
+
+/// Per-inference scratch: every buffer one in-flight frame needs, sized
+/// once from the [`ModelSpec`] and reused across frames. Runners keep a
+/// free-list of arenas (one per concurrent in-flight frame), so steady
+/// state allocates nothing.
+struct Arena {
+    /// One padded activation buffer per layer. The zero borders are
+    /// written here exactly once (at construction); the fused epilogue
+    /// and the frame copy-in only ever write the interior.
+    padded: Vec<Vec<i64>>,
+    /// Shared conv accumulator, sized for the largest layer output.
+    acc: Vec<i64>,
+    /// Per-layer packed activations.
+    packed: Vec<PackedBuf>,
+    /// Segmentation scratch for the Thm.-3 serial core (largest
+    /// `wi + k - 1` over the padded layer shapes).
+    seg: Vec<i64>,
+    /// Receptive-field gather scratch for the im2row path (largest
+    /// `ci·k²`).
+    row: Vec<i64>,
 }
 
 /// Per-layer weights (+ requantization shifts calibrated at load).
@@ -71,14 +123,21 @@ pub fn random_weights(model: &ModelSpec, seed: u64) -> ModelWeights {
     }
 }
 
-/// The runner: owns prebuilt per-layer engines (and, for the tiled kind,
-/// the thread pool the layers shard their output channels across).
+/// The runner: owns prebuilt per-layer engines, the thread pool the tiled
+/// kinds shard across, and a free-list of reusable inference arenas.
 pub struct CpuRunner {
     model: ModelSpec,
     weights: ModelWeights,
     kind: EngineKind,
     engines: Vec<LayerEngine>,
     pool: Option<Arc<ThreadPool>>,
+    /// Raw i64 weights for the fused baseline path (populated for
+    /// [`EngineKind::Baseline`] only; the packed engines carry their own).
+    ref_weights: Vec<Vec<i64>>,
+    /// Arena free-list: `infer` checks one out per frame and returns it,
+    /// so concurrent frames (e.g. [`infer_batch`](Self::infer_batch)
+    /// workers) each get their own and steady state allocates nothing.
+    arenas: Mutex<Vec<Arena>>,
 }
 
 impl CpuRunner {
@@ -116,6 +175,10 @@ impl CpuRunner {
             }
             _ => None,
         };
+        let ref_weights = match kind {
+            EngineKind::Baseline => weights.tensors.iter().map(|t| t.to_i64()).collect(),
+            _ => Vec::new(),
+        };
         // Calibrate requant shifts with a mid-gray frame so all engines
         // produce identical activation flows.
         let mut runner = CpuRunner {
@@ -124,8 +187,14 @@ impl CpuRunner {
             kind,
             engines,
             pool,
+            ref_weights,
+            arenas: Mutex::new(Vec::new()),
         };
         runner.calibrate();
+        // Pre-build one arena so even the first frame runs fused without
+        // sizing work in the latency path.
+        let warm = runner.new_arena();
+        runner.arenas.lock().expect("arena pool poisoned").push(warm);
         Ok(runner)
     }
 
@@ -137,11 +206,58 @@ impl CpuRunner {
         self.kind
     }
 
+    /// Length of the raw head output (`co·ho·wo` of the final layer,
+    /// before any pool) — the size [`infer_into`](Self::infer_into)
+    /// expects its output buffer to have.
+    pub fn head_len(&self) -> usize {
+        let l = self.model.layers.last().expect("non-empty model");
+        let (ho, wo) = l.conv_out();
+        l.co * ho * wo
+    }
+
+    /// Size a fresh arena from the model spec: padded buffers are zeroed
+    /// here once; packed buffers are built empty and filled per frame.
+    fn new_arena(&self) -> Arena {
+        let mut padded = Vec::with_capacity(self.model.layers.len());
+        let mut packed = Vec::with_capacity(self.model.layers.len());
+        let (mut acc_len, mut seg_len, mut row_len) = (1usize, 1usize, 1usize);
+        for (l, eng) in self.model.layers.iter().zip(&self.engines) {
+            let sh = l.padded_shape();
+            padded.push(vec![0i64; sh.input_len()]);
+            let (ho, wo) = l.conv_out();
+            acc_len = acc_len.max(l.co * ho * wo);
+            seg_len = seg_len.max(sh.wi + sh.k - 1);
+            row_len = row_len.max(sh.ci * sh.k * sh.k);
+            packed.push(match eng {
+                LayerEngine::Baseline => PackedBuf::None,
+                LayerEngine::HiKonv(_) => PackedBuf::HiKonv(PackedInput::empty()),
+                LayerEngine::Im2Row(e) => PackedBuf::Im2Row(e.gemm().lhs_builder(ho * wo)),
+            });
+        }
+        Arena {
+            padded,
+            acc: vec![0i64; acc_len],
+            packed,
+            seg: vec![0i64; seg_len],
+            row: vec![0i64; row_len],
+        }
+    }
+
+    /// Check an arena out of the free-list (building one only if every
+    /// cached arena is in flight).
+    fn take_arena(&self) -> Arena {
+        let cached = self.arenas.lock().expect("arena pool poisoned").pop();
+        cached.unwrap_or_else(|| self.new_arena())
+    }
+
+    fn put_arena(&self, arena: Arena) {
+        self.arenas.lock().expect("arena pool poisoned").push(arena);
+    }
+
     fn calibrate(&mut self) {
         let (c, h, w) = self.model.input;
         let frame = vec![8i64; c * h * w]; // mid-gray 4-bit levels
         let mut act = frame;
-        let (mut ci, mut hi, mut wi) = self.model.input;
         let mut shifts = Vec::with_capacity(self.model.layers.len());
         for (idx, l) in self.model.layers.clone().iter().enumerate() {
             let acc = self.run_layer_raw(idx, &act);
@@ -158,16 +274,13 @@ impl CpuRunner {
             if l.pool_after {
                 act = maxpool2(&act, l.co, ho, wo);
             }
-            ci = l.co;
-            let (h2, w2) = l.out();
-            hi = h2;
-            wi = w2;
         }
-        let _ = (ci, hi, wi);
         self.weights.requant_shift = shifts;
     }
 
-    /// Raw accumulator output of layer `idx` on activations `act`.
+    /// Raw accumulator output of layer `idx` on activations `act` — the
+    /// seed per-layer path (allocating); used by calibration and
+    /// [`infer_unfused`](Self::infer_unfused).
     fn run_layer_raw(&self, idx: usize, act: &[i64]) -> Vec<i64> {
         let l = &self.model.layers[idx];
         let padded = pad2d(act, l.ci, l.hi, l.wi, l.pad);
@@ -188,7 +301,129 @@ impl CpuRunner {
 
     /// Full forward pass on a quantized frame (`[c][h][w]` 4-bit levels).
     /// Returns the head's raw accumulator map `[co][h][w]`.
+    ///
+    /// Runs the fused arena pipeline; the only steady-state allocation is
+    /// the returned head `Vec` itself (use [`infer_into`](Self::infer_into)
+    /// to eliminate that too).
     pub fn infer(&self, frame: &[i64]) -> Vec<i64> {
+        let mut out = vec![0i64; self.head_len()];
+        self.infer_into(frame, &mut out);
+        out
+    }
+
+    /// [`infer`](Self::infer) into a caller-provided head buffer
+    /// ([`head_len`](Self::head_len) values). With a warm arena and a
+    /// serial engine this performs **zero heap allocations** — the
+    /// steady-state serving contract (`tests/fused_alloc.rs` asserts it
+    /// with a counting allocator).
+    pub fn infer_into(&self, frame: &[i64], out: &mut [i64]) {
+        assert_eq!(out.len(), self.head_len(), "head buffer length mismatch");
+        let mut arena = self.take_arena();
+        self.infer_with_arena(frame, out, &mut arena, self.pool.as_deref());
+        self.put_arena(arena);
+    }
+
+    /// The fused pipeline body: layer `idx` convolves from
+    /// `arena.padded[idx]` into the shared accumulator, and the fused
+    /// epilogue writes ReLU+requant(+pool) results straight into the
+    /// interior of `arena.padded[idx + 1]`. `pool` is the intra-layer
+    /// tiling pool (`None` ⇒ every layer runs serially — what
+    /// [`infer_batch`](Self::infer_batch) uses under frame-level
+    /// parallelism, where the pool is busy with whole frames).
+    fn infer_with_arena(
+        &self,
+        frame: &[i64],
+        out: &mut [i64],
+        arena: &mut Arena,
+        pool: Option<&ThreadPool>,
+    ) {
+        let (c, h, w) = self.model.input;
+        assert_eq!(frame.len(), c * h * w, "frame dims mismatch");
+        let last = self.model.layers.len() - 1;
+        pad2d_into(frame, c, h, w, self.model.layers[0].pad, &mut arena.padded[0]);
+        for (idx, l) in self.model.layers.iter().enumerate() {
+            let (ho, wo) = l.conv_out();
+            let acc = &mut arena.acc[..l.co * ho * wo];
+            match (&self.engines[idx], &mut arena.packed[idx]) {
+                (LayerEngine::Baseline, _) => {
+                    conv2d_ref_into(
+                        &arena.padded[idx],
+                        &self.ref_weights[idx],
+                        l.padded_shape(),
+                        acc,
+                    );
+                }
+                (LayerEngine::HiKonv(eng), PackedBuf::HiKonv(packed)) => {
+                    eng.pack_input_into(&arena.padded[idx], packed);
+                    match pool {
+                        // The cutoff is applied here (not inside
+                        // conv2d_tiled_into) so sub-cutoff layers use the
+                        // arena's seg scratch instead of allocating one.
+                        Some(p) if p.threads() > 1 && eng.shape().macs() >= PAR_MIN_MACS => {
+                            conv2d_tiled_into(eng, p, packed, acc)
+                        }
+                        _ => {
+                            acc.iter_mut().for_each(|v| *v = 0);
+                            eng.conv_co_range_with(packed, 0, l.co, acc, &mut arena.seg);
+                        }
+                    }
+                }
+                (LayerEngine::Im2Row(eng), PackedBuf::Im2Row(lhs)) => {
+                    eng.pack_pixels_into(&arena.padded[idx], lhs, &mut arena.row);
+                    match pool {
+                        Some(p) if p.threads() > 1 => im2row_tiled_into(eng, p, lhs, acc),
+                        _ => eng.conv_cols(lhs, 0, l.co, acc),
+                    }
+                }
+                _ => unreachable!("arena packed buffer mismatches engine kind"),
+            }
+            if idx == last {
+                out.copy_from_slice(acc);
+                return;
+            }
+            fused_epilogue_into(
+                acc,
+                self.weights.requant_shift[idx],
+                l.a_bits,
+                l.co,
+                ho,
+                wo,
+                l.pool_after,
+                &mut arena.padded[idx + 1],
+                self.model.layers[idx + 1].pad,
+            );
+        }
+    }
+
+    /// Run a batch of frames, returning one head map per frame (same
+    /// order). Whole frames are sharded across the runner's thread pool:
+    /// for the small layers of a detection backbone, output-channel
+    /// tiling loses to per-layer spawn overhead, while frame-level
+    /// parallelism amortizes one spawn over an entire forward pass. Each
+    /// worker checks out its own arena, and every frame's layers run
+    /// serially inside its worker. Engines without a pool (or
+    /// single-frame batches) fall back to a serial loop. Bit-identical
+    /// to calling [`infer`](Self::infer) per frame for any thread count.
+    pub fn infer_batch(&self, frames: &[&[i64]]) -> Vec<Vec<i64>> {
+        match &self.pool {
+            Some(pool) if pool.threads() > 1 && frames.len() > 1 => {
+                pool.par_map(frames, |_, frame| {
+                    let mut out = vec![0i64; self.head_len()];
+                    let mut arena = self.take_arena();
+                    self.infer_with_arena(frame, &mut out, &mut arena, None);
+                    self.put_arena(arena);
+                    out
+                })
+            }
+            _ => frames.iter().map(|f| self.infer(f)).collect(),
+        }
+    }
+
+    /// The seed per-layer forward pass: `pad2d` copy-in, fresh
+    /// accumulator, separate `requantize` and `maxpool2` passes — four
+    /// full-tensor allocations per layer. Retained as the fused
+    /// pipeline's correctness oracle and the `benches/model.rs` baseline.
+    pub fn infer_unfused(&self, frame: &[i64]) -> Vec<i64> {
         let (c, h, w) = self.model.input;
         assert_eq!(frame.len(), c * h * w, "frame dims mismatch");
         let mut act = frame.to_vec();
@@ -265,6 +500,26 @@ mod tests {
     }
 
     #[test]
+    fn fused_infer_matches_the_seed_unfused_path() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 81);
+        let (c, h, w) = model.input;
+        let mut rng = Rng::new(555);
+        for kind in [
+            EngineKind::Baseline,
+            EngineKind::HiKonv(Multiplier::CPU32),
+            EngineKind::HiKonvTiled(Multiplier::CPU32, 2),
+            EngineKind::Im2Row(Multiplier::CPU32, 2),
+        ] {
+            let r = CpuRunner::new(model.clone(), weights.clone(), kind).unwrap();
+            for _ in 0..2 {
+                let frame = rng.quant_unsigned_vec(4, c * h * w);
+                assert_seq_eq(&r.infer(&frame), &r.infer_unfused(&frame)).unwrap();
+            }
+        }
+    }
+
+    #[test]
     fn tiled_and_im2row_agree_with_baseline_end_to_end() {
         let model = ultranet_tiny();
         let weights = random_weights(&model, 78);
@@ -334,6 +589,27 @@ mod tests {
     }
 
     #[test]
+    fn infer_batch_matches_per_frame_infer() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 82);
+        let runner = CpuRunner::new(
+            model.clone(),
+            weights,
+            EngineKind::HiKonvTiled(Multiplier::CPU32, 3),
+        )
+        .unwrap();
+        let (c, h, w) = model.input;
+        let mut rng = Rng::new(989);
+        let frames: Vec<Vec<i64>> = (0..5).map(|_| rng.quant_unsigned_vec(4, c * h * w)).collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        let batched = runner.infer_batch(&refs);
+        assert_eq!(batched.len(), frames.len());
+        for (f, b) in frames.iter().zip(&batched) {
+            assert_seq_eq(b, &runner.infer(f)).unwrap();
+        }
+    }
+
+    #[test]
     fn requantize_clamps_and_relus() {
         assert_eq!(requantize(&[-5, 0, 31, 1000], 1, 4), vec![0, 0, 15, 15]);
         assert_eq!(requantize(&[16], 2, 4), vec![4]);
@@ -348,6 +624,7 @@ mod tests {
         let out = r.infer(&vec![5i64; c * h * w]);
         let (co, ho, wo) = model.output_dims();
         assert_eq!(out.len(), co * ho * wo);
+        assert_eq!(out.len(), r.head_len());
     }
 
     #[test]

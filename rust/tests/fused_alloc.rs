@@ -1,0 +1,91 @@
+//! Steady-state allocation accounting for the fused pipeline: after the
+//! first (warm-up) frame, `CpuRunner::infer_into` on a serial engine must
+//! perform **zero heap allocations** — every buffer comes from the
+//! runner's arena. Asserted with a counting global allocator.
+//!
+//! This file intentionally holds a single test: the counter is global to
+//! the test binary, and a concurrently-running neighbour test would
+//! pollute it.
+
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::theory::Multiplier;
+use hikonv::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Passes every call through to [`System`], counting allocation events
+/// (alloc / alloc_zeroed / grow-realloc) while `COUNTING` is set.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn count_infer_allocs(kind: EngineKind, seed: u64) -> u64 {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, seed);
+    let runner = CpuRunner::new(model.clone(), weights, kind).unwrap();
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(seed ^ 0xA110C);
+    let warm_a = rng.quant_unsigned_vec(4, c * h * w);
+    let warm_b = rng.quant_unsigned_vec(4, c * h * w);
+    let frame = rng.quant_unsigned_vec(4, c * h * w);
+    let mut head = vec![0i64; runner.head_len()];
+    // Warm the arena (first frames may size packed buffers and grow the
+    // free-list's own vector).
+    runner.infer_into(&warm_a, &mut head);
+    runner.infer_into(&warm_b, &mut head);
+    // Steady state: count.
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    runner.infer_into(&frame, &mut head);
+    COUNTING.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_infer_performs_zero_heap_allocations() {
+    // Serial engines only: intra-layer tiling spawns scoped workers per
+    // layer, which inherently allocates (thread stacks, chunk queue) —
+    // the zero-alloc contract is the serial/serving-worker path.
+    for (kind, seed) in [
+        (EngineKind::HiKonv(Multiplier::CPU32), 401u64),
+        (EngineKind::Im2Row(Multiplier::CPU32, 1), 402),
+    ] {
+        let allocs = count_infer_allocs(kind, seed);
+        assert_eq!(
+            allocs, 0,
+            "{kind:?}: steady-state infer_into allocated {allocs} times"
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Fused-pipeline integration tests: the arena-based `CpuRunner::infer`
+//! must be bit-exact vs the seed per-layer path (`infer_unfused`) for
+//! every engine kind × thread count, `infer_batch` must equal N single
+//! inferences, and arena reuse must be deterministic across frames.
+
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::testing::assert_seq_eq;
+use hikonv::theory::Multiplier;
+use hikonv::util::rng::Rng;
+
+fn every_engine_kind() -> Vec<EngineKind> {
+    let m = Multiplier::CPU32;
+    vec![
+        EngineKind::Baseline,
+        EngineKind::HiKonv(m),
+        EngineKind::HiKonvTiled(m, 1),
+        EngineKind::HiKonvTiled(m, 2),
+        EngineKind::HiKonvTiled(m, 4),
+        EngineKind::Im2Row(m, 1),
+        EngineKind::Im2Row(m, 2),
+        EngineKind::Im2Row(m, 4),
+    ]
+}
+
+#[test]
+fn fused_is_bit_exact_vs_seed_for_every_kind_and_thread_count() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 301);
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(0xF05E);
+    let frames: Vec<Vec<i64>> = (0..2).map(|_| rng.quant_unsigned_vec(4, c * h * w)).collect();
+    // The seed path on the baseline engine is the ground truth.
+    let oracle = CpuRunner::new(model.clone(), weights.clone(), EngineKind::Baseline).unwrap();
+    let truths: Vec<Vec<i64>> = frames.iter().map(|f| oracle.infer_unfused(f)).collect();
+    for kind in every_engine_kind() {
+        let r = CpuRunner::new(model.clone(), weights.clone(), kind).unwrap();
+        for (f, truth) in frames.iter().zip(&truths) {
+            let fused = r.infer(f);
+            assert_seq_eq(&fused, truth).unwrap();
+            assert_seq_eq(&fused, &r.infer_unfused(f)).unwrap();
+        }
+    }
+}
+
+#[test]
+fn infer_into_reuses_the_head_buffer() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 302);
+    let r = CpuRunner::new(model.clone(), weights, EngineKind::HiKonv(Multiplier::CPU32)).unwrap();
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(0xF060);
+    let mut out = vec![42i64; r.head_len()];
+    for _ in 0..3 {
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        r.infer_into(&frame, &mut out);
+        assert_seq_eq(&out, &r.infer(&frame)).unwrap();
+    }
+}
+
+#[test]
+fn infer_batch_is_identical_to_n_single_infers() {
+    let model = ultranet_tiny();
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(0xF061);
+    let frames: Vec<Vec<i64>> = (0..6).map(|_| rng.quant_unsigned_vec(4, c * h * w)).collect();
+    let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+    for kind in [
+        // Pooled kinds exercise frame-level parallelism; serial kinds the
+        // fallback loop. All must match per-frame infer exactly.
+        EngineKind::HiKonvTiled(Multiplier::CPU32, 3),
+        EngineKind::Im2Row(Multiplier::CPU32, 2),
+        EngineKind::HiKonv(Multiplier::CPU32),
+        EngineKind::Baseline,
+    ] {
+        let weights = random_weights(&model, 303);
+        let r = CpuRunner::new(model.clone(), weights, kind).unwrap();
+        let batched = r.infer_batch(&refs);
+        assert_eq!(batched.len(), frames.len(), "{kind:?}");
+        for (f, b) in frames.iter().zip(&batched) {
+            assert_seq_eq(b, &r.infer(f)).unwrap();
+        }
+    }
+}
+
+#[test]
+fn infer_batch_edge_sizes() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 304);
+    let r = CpuRunner::new(
+        model.clone(),
+        weights,
+        EngineKind::HiKonvTiled(Multiplier::CPU32, 4),
+    )
+    .unwrap();
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(0xF062);
+    // Empty batch, single frame, and a batch larger than the pool.
+    assert!(r.infer_batch(&[]).is_empty());
+    let one = rng.quant_unsigned_vec(4, c * h * w);
+    assert_seq_eq(&r.infer_batch(&[one.as_slice()])[0], &r.infer(&one)).unwrap();
+    let many: Vec<Vec<i64>> = (0..9).map(|_| rng.quant_unsigned_vec(4, c * h * w)).collect();
+    let refs: Vec<&[i64]> = many.iter().map(|f| f.as_slice()).collect();
+    for (f, b) in many.iter().zip(&r.infer_batch(&refs)) {
+        assert_seq_eq(b, &r.infer(f)).unwrap();
+    }
+}
+
+#[test]
+fn arena_reuse_is_deterministic_across_repeated_frames() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 305);
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(0xF063);
+    let a = rng.quant_unsigned_vec(4, c * h * w);
+    let b = rng.quant_unsigned_vec(4, c * h * w);
+    for kind in [
+        EngineKind::HiKonv(Multiplier::CPU32),
+        EngineKind::Im2Row(Multiplier::CPU32, 1),
+    ] {
+        let r = CpuRunner::new(model.clone(), weights.clone(), kind).unwrap();
+        // Same frame repeatedly: identical outputs (no state bleed).
+        let first = r.infer(&a);
+        for _ in 0..3 {
+            assert_seq_eq(&r.infer(&a), &first).unwrap();
+        }
+        // Interleaving a different frame must not perturb the original:
+        // the arena (padded borders, packed words, accumulator) is fully
+        // rewritten or never read stale.
+        let bb = r.infer(&b);
+        assert_seq_eq(&r.infer(&a), &first).unwrap();
+        assert_seq_eq(&r.infer(&b), &bb).unwrap();
+    }
+}
