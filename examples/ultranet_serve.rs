@@ -14,10 +14,10 @@
 
 use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
 use hikonv::coordinator::{serve, InferBackend, ServeConfig};
+use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::ultranet_tiny;
-use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::models::{random_weights, CpuRunner};
 use hikonv::runtime::{artifacts, artifacts_dir, Runtime};
-use hikonv::theory::Multiplier;
 use std::time::Duration;
 
 fn config(frames: u64, cap: Option<f64>) -> ServeConfig {
@@ -61,12 +61,13 @@ fn main() {
     }
 
     // --- native CPU engines ------------------------------------------------
-    for (label, kind) in [
-        ("baseline 6-loop nest", EngineKind::Baseline),
-        ("HiKonv packed engine", EngineKind::HiKonv(Multiplier::CPU32)),
+    for (label, engine) in [
+        ("baseline 6-loop nest", EngineConfig::named("baseline")),
+        ("HiKonv packed engine", EngineConfig::named("hikonv")),
+        ("auto-planned engine mix", EngineConfig::auto()),
     ] {
         let runner =
-            CpuRunner::new(model.clone(), random_weights(&model, 7), kind).unwrap();
+            CpuRunner::new(model.clone(), random_weights(&model, 7), engine).unwrap();
         let report = serve(Box::new(CpuBackend::new(runner)), &config(frames, None));
         println!("--- {label} ---");
         print!("{}", report.render());
@@ -78,7 +79,7 @@ fn main() {
         let pool = hikonv::coordinator::ParallelCpuBackend::new(
             model.clone(),
             random_weights(&model, 7),
-            EngineKind::HiKonv(Multiplier::CPU32),
+            EngineConfig::named("hikonv"),
             workers,
         )
         .unwrap();
@@ -94,7 +95,7 @@ fn main() {
     let tiled = CpuRunner::new(
         model.clone(),
         random_weights(&model, 7),
-        EngineKind::HiKonvTiled(Multiplier::CPU32, 0),
+        EngineConfig::named("hikonv-tiled"),
     )
     .unwrap();
     let report = serve(Box::new(CpuBackend::new(tiled)), &config(frames, None));
@@ -106,7 +107,7 @@ fn main() {
     let runner = CpuRunner::new(
         model.clone(),
         random_weights(&model, 7),
-        EngineKind::HiKonv(Multiplier::CPU32),
+        EngineConfig::named("hikonv"),
     )
     .unwrap();
     let capped = serve(

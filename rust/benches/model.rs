@@ -2,18 +2,20 @@
 //! path (`infer_unfused`: pad2d copy-in, fresh accumulator, separate
 //! requantize and maxpool passes) vs the fused arena pipeline (`infer`)
 //! vs fused + batched serving (`infer_batch`, whole frames sharded
-//! across the thread pool with per-worker arena reuse).
+//! across the thread pool with per-worker arena reuse), for each single
+//! engine and for the theory-planned `auto` configuration.
 //!
 //! Outputs are cross-checked bit-exact before any timing. Set
-//! `HIKONV_BENCH_QUICK=1` for a CI smoke pass and
-//! `HIKONV_BENCH_OUT=<path>` to record the JSON baseline (see
-//! BENCH_model.json at the repo root).
+//! `HIKONV_BENCH_QUICK=1` for a CI smoke pass, `HIKONV_BENCH_OUT=<path>`
+//! to record the JSON baseline (see BENCH_model.json at the repo root),
+//! and `HIKONV_BENCH_PLAN_OUT=<path>` to record the `auto` run's
+//! per-layer plan (BENCH_plan.json).
 
 use hikonv::bench::{fmt_ns, BenchConfig, Bencher};
+use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::{ultranet, ultranet_tiny};
-use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::models::{random_weights, CpuRunner};
 use hikonv::testing::assert_seq_eq;
-use hikonv::theory::Multiplier;
 use hikonv::util::json::Json;
 use hikonv::util::rng::Rng;
 use hikonv::util::table::Table;
@@ -41,12 +43,16 @@ fn main() {
         &["engine", "unfused", "fused", "speedup", "batched/frame", "batch x"],
     );
 
-    for (label, kind) in [
-        ("hikonv", EngineKind::HiKonv(Multiplier::CPU32)),
-        ("hikonv-tiled", EngineKind::HiKonvTiled(Multiplier::CPU32, 0)),
-        ("im2row", EngineKind::Im2Row(Multiplier::CPU32, 0)),
-    ] {
-        let runner = CpuRunner::new(model.clone(), weights.clone(), kind)
+    let entries: Vec<(&str, EngineConfig)> = vec![
+        ("hikonv", EngineConfig::named("hikonv")),
+        ("hikonv-tiled", EngineConfig::named("hikonv-tiled")),
+        ("im2row", EngineConfig::named("im2row")),
+        // The planner-selected per-layer mix: must be no slower than the
+        // best single-engine row (it may *be* one of them).
+        ("auto", EngineConfig::auto()),
+    ];
+    for (label, engine) in entries {
+        let runner = CpuRunner::new(model.clone(), weights.clone(), engine)
             .expect("feasible engine");
 
         // Correctness gate before any timing: fused == seed unfused,
@@ -55,6 +61,16 @@ fn main() {
         assert_seq_eq(&runner.infer(&frames[0]), &truth).expect("fused mismatch");
         for (f, b) in refs.iter().zip(&runner.infer_batch(&refs)) {
             assert_seq_eq(b, &runner.infer_unfused(f)).expect("batched mismatch");
+        }
+
+        if label == "auto" {
+            // Publish the chosen plan alongside the bench numbers.
+            let rendered = runner.plan().to_json().to_string_pretty();
+            if let Ok(path) = std::env::var("HIKONV_BENCH_PLAN_OUT") {
+                std::fs::write(&path, format!("{rendered}\n")).expect("write plan artifact");
+                eprintln!("wrote {path}");
+            }
+            eprintln!("auto plan: {}", runner.label());
         }
 
         let unfused = bencher
@@ -82,6 +98,7 @@ fn main() {
         json_rows.push(
             Json::obj()
                 .set("engine", label)
+                .set("plan", runner.label())
                 .set("model", model.name.as_str())
                 .set("batch", BATCH)
                 .set("unfused_ns", unfused)

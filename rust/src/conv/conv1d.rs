@@ -52,8 +52,7 @@ impl Conv1dHiKonv {
         let signed = !matches!(dp.signedness, Signedness::Unsigned);
         // The i64 path needs every packed word and accumulator to fit:
         // (N+K-1) segments of S bits, plus 1 sign bit headroom.
-        let seg_bits = dp.s * (dp.n as u32 + dp.k as u32 - 1);
-        let use64 = seg_bits + 1 <= 64;
+        let use64 = dp.fits_lane(64);
         let mut chunks64 = Vec::new();
         let mut chunks128 = Vec::new();
         for (j, ch) in kernel.chunks(dp.k).enumerate() {

@@ -106,8 +106,7 @@ impl Conv2dHiKonv {
         // The i64 fast path needs every packed word and accumulator to fit:
         // (N+K-1) segments of S bits, plus 1 sign bit headroom (same lane
         // criterion as the conv1d engine).
-        let seg_bits = dp.s * (dp.n as u32 + dp.k as u32 - 1);
-        let use64 = seg_bits + 1 <= 64;
+        let use64 = dp.fits_lane(64);
 
         // Pack reversed weight rows: g[k'] = W[co][ci][kh][K-1-k'] (Eq. 20),
         // into the active lane only (`use64` implies S <= 63, so the i64
@@ -441,6 +440,27 @@ fn channel_block_candidates(ci: usize) -> Vec<usize> {
     candidates
 }
 
+/// Resolve the channel block and design point [`Conv2dHiKonv::new`] would
+/// pick for `spec` without building an engine — the scoring hook the
+/// engine planner uses, guaranteed to match the engine's own choice.
+pub fn planned_design(spec: &Conv2dSpec) -> Result<(usize, DesignPoint), String> {
+    choose_channel_block(spec)
+}
+
+/// Cost of one `(c_o, h)` output-row pass under a channel-block layout,
+/// in scalar-op units: wide multiplications (weighted 2 — multiply +
+/// packed add) plus segmentation emits. This is the exact model
+/// `choose_channel_block` minimizes; the engine planner scales it by
+/// `co·ho` so cross-kernel comparisons can never drift from the block
+/// the engine actually builds.
+pub fn row_pass_cost(spec: &Conv2dSpec, block: usize, dp: &DesignPoint) -> u64 {
+    let sh = spec.shape;
+    let x = sh.wi.div_ceil(dp.n) as u64;
+    let muls = (sh.ci * sh.k) as u64 * x;
+    let segs = (sh.ci.div_ceil(block)) as u64 * x * (dp.n as u64 + sh.k as u64);
+    muls * 2 + segs
+}
+
 /// Pick the channel block (and its design point) minimizing the
 /// wide-mul + segmentation cost model, probing [`channel_block_candidates`]
 /// from the deepest down (ties keep the deeper block, matching the old
@@ -460,10 +480,7 @@ fn choose_channel_block(spec: &Conv2dSpec) -> Result<(usize, DesignPoint), Strin
         ) {
             if dp.n >= 2 || block == 1 {
                 // Cost: wide muls (fixed per layout) + segmentation passes.
-                let x = sh.wi.div_ceil(dp.n) as u64;
-                let muls = (sh.ci * sh.k) as u64 * x;
-                let segs = (sh.ci.div_ceil(block)) as u64 * x * (dp.n as u64 + sh.k as u64);
-                let cost = muls * 2 + segs;
+                let cost = row_pass_cost(spec, block, &dp);
                 if best.map(|(_, _, c)| cost < c).unwrap_or(true) {
                     best = Some((block, dp, cost));
                 }

@@ -164,8 +164,7 @@ impl PackedGemm {
         let words_per_row = k_dim.div_ceil(block);
         // Same i64 fast-lane criterion as `Conv2dHiKonv`: every packed
         // word and product must fit S·(N+K-1) value bits plus a sign bit.
-        let seg_bits = dp.s * (dp.n as u32 + dp.k as u32 - 1);
-        let use64 = seg_bits + 1 <= 64;
+        let use64 = dp.fits_lane(64);
         let signed = !matches!(dp.signedness, Signedness::Unsigned);
         let (rhs64, rhs128) = if use64 {
             (pack_rhs::<i64>(b_t, k_dim, n_dim, block, dp.s), Vec::new())

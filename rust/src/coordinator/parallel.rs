@@ -6,14 +6,16 @@
 //! `Rc`-internal; CPU engines are plain data and parallelize freely.)
 //!
 //! Two axes of parallelism compose here: this pool shards *frames* across
-//! workers, and a worker built with [`EngineKind::HiKonvTiled`] also
-//! shards each layer's *output channels* across its own
+//! workers, and a worker built with a pooled kernel (`hikonv-tiled`,
+//! `im2row`, or an `auto` plan containing them) also shards each layer's
+//! *output channels* across its own
 //! [`exec::ThreadPool`](crate::exec::ThreadPool) — use few workers ×
 //! more intra-layer threads for latency, the transpose for throughput.
 
 use super::pipeline::{Detection, Frame, InferBackend};
-use crate::models::{CpuRunner, EngineKind, ModelWeights};
+use crate::engine::EngineConfig;
 use crate::models::layer::ModelSpec;
+use crate::models::{CpuRunner, ModelWeights};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -37,34 +39,28 @@ pub struct ParallelCpuBackend {
 impl ParallelCpuBackend {
     /// Build the pool; every worker constructs its own runner from the
     /// same model/weights (calibration is deterministic, so all workers
-    /// are bit-identical).
+    /// are bit-identical). Accepts any engine configuration (or a legacy
+    /// `EngineKind`, which converts into one).
     pub fn new(
         model: ModelSpec,
         weights: ModelWeights,
-        kind: EngineKind,
+        config: impl Into<EngineConfig>,
         workers: usize,
     ) -> Result<ParallelCpuBackend, String> {
         assert!(workers >= 1);
+        let mut config = config.into();
         // An auto-sized (0) intra-layer pool must resolve against the
         // cores remaining *per worker*, not the whole machine — otherwise
         // N workers × N-core pools oversubscribe the host N-fold.
-        let kind = match kind {
-            EngineKind::HiKonvTiled(m, 0) if workers > 1 => EngineKind::HiKonvTiled(
-                m,
-                (crate::exec::default_threads() / workers).max(1),
-            ),
-            EngineKind::Im2Row(m, 0) if workers > 1 => EngineKind::Im2Row(
-                m,
-                (crate::exec::default_threads() / workers).max(1),
-            ),
-            k => k,
-        };
+        if config.threads == 0 && workers > 1 {
+            config = config.with_threads((crate::exec::default_threads() / workers).max(1));
+        }
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (res_tx, res_rx) = channel::<(usize, Vec<Detection>)>();
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let runner = CpuRunner::new(model.clone(), weights.clone(), kind)?;
+            let runner = CpuRunner::new(model.clone(), weights.clone(), config.clone())?;
             let rx = Arc::clone(&job_rx);
             let tx = res_tx.clone();
             handles.push(std::thread::spawn(move || loop {
@@ -96,7 +92,7 @@ impl ParallelCpuBackend {
             }));
         }
         Ok(ParallelCpuBackend {
-            label: format!("cpu-parallel-{workers}x-{kind:?}").to_lowercase(),
+            label: format!("cpu-parallel-{workers}x-{config}"),
             dims: model.input,
             job_tx,
             res_rx,
@@ -161,7 +157,7 @@ mod tests {
     use super::*;
     use crate::coordinator::pipeline::CpuBackend;
     use crate::models::ultranet::ultranet_tiny;
-    use crate::models::random_weights;
+    use crate::models::{random_weights, EngineKind};
     use crate::theory::Multiplier;
     use std::time::Instant;
 

@@ -46,7 +46,7 @@ pub struct CpuBackend {
 
 impl CpuBackend {
     pub fn new(runner: crate::models::CpuRunner) -> CpuBackend {
-        let label = format!("cpu-{:?}", runner.kind()).to_lowercase();
+        let label = format!("cpu-{}", runner.label());
         CpuBackend { runner, label }
     }
 }

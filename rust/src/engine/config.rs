@@ -1,0 +1,363 @@
+//! Unified engine configuration: one typed builder (and one textual
+//! grammar) that subsumes the old closed `EngineKind` enum and its ad-hoc
+//! `(Multiplier, threads)` tuple plumbing.
+//!
+//! An [`EngineConfig`] names *which* kernel executes each layer (or
+//! `auto`, letting the planner choose per layer from the theory model),
+//! *what* multiplier it packs for, and every tuning knob that used to be
+//! hard-coded: thread budget, operand bitwidths/signedness, output-channel
+//! tile depth, channel-block depth, and the word-lane width the plan's
+//! theory bound is reported against (engines select their own `i64` /
+//! `i128` lane automatically).
+//!
+//! # Grammar
+//!
+//! The same spelling is accepted by `--engine`/`--backend` on the CLI and
+//! by serve configs, and is emitted by [`Display`](std::fmt::Display) so
+//! bench labels and parsed configs can never drift (property-tested
+//! round-trip in `tests/engine_config.rs`):
+//!
+//! ```text
+//! <kernel>[@<A>x<B>][:<key>=<value>[,<key>=<value>]*]
+//!
+//! kernel:  auto | baseline | hikonv | hikonv-tiled | im2row | ...
+//! @AxB:    multiplier ports (default 32x32; named aliases cpu32, cpu64,
+//!          dsp48e2 also parse)
+//! keys:    threads=N    intra-layer tiling threads (0 = auto-size)
+//!          p=N,q=N      operand bitwidth override (must appear together;
+//!                       default: per-layer a_bits/w_bits)
+//!          sign=u|s|us  operand signedness (default us: unsigned
+//!                       activations x signed weights)
+//!          tile-co=N    output-channel tile depth override
+//!          block=N      channel-block depth override (conv2d engine)
+//!          lane=N       word-lane width the reported lane bound is
+//!                       solved against (default 64, the i64 fast lane)
+//!          probe        enable the measured calibration probe in `auto`
+//!                       planning (selection is then timing-based, not
+//!                       deterministic)
+//! ```
+//!
+//! Examples: `auto`, `hikonv-tiled:threads=4`, `im2row@32x32:tile-co=8`,
+//! `hikonv@27x18:p=4,q=4,sign=u`.
+
+use crate::theory::{Multiplier, Signedness};
+use std::fmt;
+use std::str::FromStr;
+
+/// Which kernel the runner binds per layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Let the planner score every registered kernel per layer and pick
+    /// the predicted-fastest one ([`EnginePlan`](super::EnginePlan)).
+    Auto,
+    /// One named kernel (a [`KernelRegistry`](super::KernelRegistry)
+    /// entry) for every layer.
+    Named(String),
+}
+
+/// Unified engine configuration (see the module docs for the grammar).
+///
+/// Build with [`EngineConfig::auto`] / [`EngineConfig::named`] plus the
+/// `with_*` builder methods, or parse the textual form via [`FromStr`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Kernel selection: `auto` or one registry name for all layers.
+    pub kernel: KernelChoice,
+    /// The multiplier the engines pack for (default [`Multiplier::CPU32`]).
+    pub mult: Multiplier,
+    /// Intra-layer tiling threads (0 = auto-size from the machine /
+    /// `HIKONV_THREADS`).
+    pub threads: usize,
+    /// Operand signedness (default: unsigned activations x signed
+    /// weights, the common quantized-DNN case).
+    pub signedness: Signedness,
+    /// Operand bitwidth override `(p, q)`; `None` uses each layer's own
+    /// `a_bits`/`w_bits`.
+    pub bits: Option<(u32, u32)>,
+    /// Output-channel tile depth override; `None` uses the
+    /// [`tile_co_for`](super::tile_co_for) heuristic.
+    pub tile_co: Option<usize>,
+    /// Channel-block depth override for the Thm.-3 conv2d engine; `None`
+    /// lets the engine's cost model choose (clamped to the layer's `ci`).
+    pub channel_block: Option<usize>,
+    /// Software word-lane width in bits the planner's reported
+    /// lane-bound column is solved against (64 = the `i64` fast lane).
+    /// The engines select their own lane automatically
+    /// ([`DesignPoint::fits_lane`](crate::theory::DesignPoint::fits_lane)
+    /// at 64 bits), and the cost models penalize points that fall off
+    /// that real lane regardless of this setting.
+    pub lane_bits: u32,
+    /// Run the measured calibration probe during `auto` planning and
+    /// select by observed time instead of the deterministic cost model.
+    pub probe: bool,
+}
+
+impl Default for EngineConfig {
+    /// The old default engine: serial HiKonv packing on a 32x32 ALU.
+    fn default() -> EngineConfig {
+        EngineConfig::named("hikonv")
+    }
+}
+
+impl EngineConfig {
+    /// Planner-driven configuration: every layer gets the registered
+    /// kernel the theory model predicts fastest on this host.
+    pub fn auto() -> EngineConfig {
+        EngineConfig {
+            kernel: KernelChoice::Auto,
+            mult: Multiplier::CPU32,
+            threads: 0,
+            signedness: Signedness::UnsignedBySigned,
+            bits: None,
+            tile_co: None,
+            channel_block: None,
+            lane_bits: 64,
+            probe: false,
+        }
+    }
+
+    /// One named kernel for every layer (validated against the registry
+    /// when a plan or runner is built).
+    pub fn named(name: &str) -> EngineConfig {
+        EngineConfig {
+            kernel: KernelChoice::Named(name.to_string()),
+            ..EngineConfig::auto()
+        }
+    }
+
+    /// The named kernel, or `None` for `auto`.
+    pub fn kernel_name(&self) -> Option<&str> {
+        match &self.kernel {
+            KernelChoice::Auto => None,
+            KernelChoice::Named(n) => Some(n),
+        }
+    }
+
+    pub fn with_multiplier(mut self, mult: Multiplier) -> EngineConfig {
+        self.mult = mult;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> EngineConfig {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_signedness(mut self, signedness: Signedness) -> EngineConfig {
+        self.signedness = signedness;
+        self
+    }
+
+    pub fn with_bits(mut self, p: u32, q: u32) -> EngineConfig {
+        self.bits = Some((p, q));
+        self
+    }
+
+    pub fn with_tile_co(mut self, tile_co: usize) -> EngineConfig {
+        self.tile_co = Some(tile_co);
+        self
+    }
+
+    pub fn with_channel_block(mut self, block: usize) -> EngineConfig {
+        self.channel_block = Some(block);
+        self
+    }
+
+    pub fn with_lane_bits(mut self, lane_bits: u32) -> EngineConfig {
+        self.lane_bits = lane_bits;
+        self
+    }
+
+    pub fn with_probe(mut self, probe: bool) -> EngineConfig {
+        self.probe = probe;
+        self
+    }
+
+    /// The operand bitwidths for a layer quantized to `a_bits`/`w_bits`:
+    /// the config override when set, the layer's own widths otherwise.
+    pub fn layer_bits(&self, a_bits: u32, w_bits: u32) -> (u32, u32) {
+        self.bits.unwrap_or((a_bits, w_bits))
+    }
+}
+
+impl fmt::Display for EngineConfig {
+    /// The canonical grammar spelling; parsing it back yields an equal
+    /// config (round-trip property-tested). Defaults are omitted.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.kernel {
+            KernelChoice::Auto => f.write_str("auto")?,
+            KernelChoice::Named(n) => f.write_str(n)?,
+        }
+        if self.mult != Multiplier::CPU32 {
+            write!(f, "@{}", self.mult)?;
+        }
+        let mut params: Vec<String> = Vec::new();
+        if self.threads != 0 {
+            params.push(format!("threads={}", self.threads));
+        }
+        if let Some((p, q)) = self.bits {
+            params.push(format!("p={p}"));
+            params.push(format!("q={q}"));
+        }
+        if self.signedness != Signedness::UnsignedBySigned {
+            params.push(format!("sign={}", self.signedness));
+        }
+        if let Some(t) = self.tile_co {
+            params.push(format!("tile-co={t}"));
+        }
+        if let Some(b) = self.channel_block {
+            params.push(format!("block={b}"));
+        }
+        if self.lane_bits != 64 {
+            params.push(format!("lane={}", self.lane_bits));
+        }
+        if self.probe {
+            params.push("probe".to_string());
+        }
+        if !params.is_empty() {
+            write!(f, ":{}", params.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+fn parse_val<T: FromStr>(spec: &str, key: &str, val: &str) -> Result<T, String> {
+    val.trim()
+        .parse()
+        .map_err(|_| format!("engine spec '{spec}': bad value '{val}' for '{key}'"))
+}
+
+impl FromStr for EngineConfig {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<EngineConfig, String> {
+        let spec = s.trim();
+        if spec.is_empty() {
+            return Err("empty engine spec".to_string());
+        }
+        let (head, params) = match spec.split_once(':') {
+            Some((h, p)) => (h, Some(p)),
+            None => (spec, None),
+        };
+        let (name, mult) = match head.split_once('@') {
+            Some((n, m)) => (n.trim(), m.parse::<Multiplier>()?),
+            None => (head.trim(), Multiplier::CPU32),
+        };
+        if name.is_empty() {
+            return Err(format!("engine spec '{spec}': missing kernel name"));
+        }
+        let mut cfg = if name == "auto" {
+            EngineConfig::auto()
+        } else {
+            EngineConfig::named(name)
+        };
+        cfg.mult = mult;
+        let (mut p_bits, mut q_bits) = (None, None);
+        for item in params.unwrap_or("").split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (key, val) = match item.split_once('=') {
+                Some((k, v)) => (k.trim(), Some(v)),
+                None => (item, None),
+            };
+            match (key, val) {
+                ("probe", None) => cfg.probe = true,
+                ("probe", Some(v)) => cfg.probe = parse_val(spec, key, v)?,
+                ("threads", Some(v)) => cfg.threads = parse_val(spec, key, v)?,
+                ("p", Some(v)) => p_bits = Some(parse_val::<u32>(spec, key, v)?),
+                ("q", Some(v)) => q_bits = Some(parse_val::<u32>(spec, key, v)?),
+                ("sign", Some(v)) => cfg.signedness = v.trim().parse()?,
+                ("tile-co", Some(v)) => cfg.tile_co = Some(parse_val(spec, key, v)?),
+                ("block", Some(v)) => cfg.channel_block = Some(parse_val(spec, key, v)?),
+                ("lane", Some(v)) => cfg.lane_bits = parse_val(spec, key, v)?,
+                ("threads" | "p" | "q" | "sign" | "tile-co" | "block" | "lane", None) => {
+                    return Err(format!(
+                        "engine spec '{spec}': parameter '{key}' needs a value"
+                    ));
+                }
+                (other, _) => {
+                    return Err(format!(
+                        "engine spec '{spec}': unknown parameter '{other}' \
+                         (known: threads, p, q, sign, tile-co, block, lane, probe)"
+                    ));
+                }
+            }
+        }
+        match (p_bits, q_bits) {
+            (None, None) => {}
+            (Some(p), Some(q)) => cfg.bits = Some((p, q)),
+            _ => {
+                return Err(format!(
+                    "engine spec '{spec}': p and q must be given together"
+                ));
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_names_parse_with_defaults() {
+        let cfg: EngineConfig = "hikonv".parse().unwrap();
+        assert_eq!(cfg, EngineConfig::named("hikonv"));
+        assert_eq!(cfg.mult, Multiplier::CPU32);
+        assert_eq!(cfg.threads, 0);
+        assert_eq!(cfg.lane_bits, 64);
+        assert!(!cfg.probe);
+        let auto: EngineConfig = "auto".parse().unwrap();
+        assert_eq!(auto.kernel, KernelChoice::Auto);
+        assert_eq!(auto.kernel_name(), None);
+    }
+
+    #[test]
+    fn full_grammar_parses() {
+        let cfg: EngineConfig =
+            "hikonv-tiled@27x18:threads=4,p=3,q=5,sign=u,tile-co=8,block=2,lane=128,probe"
+                .parse()
+                .unwrap();
+        assert_eq!(cfg.kernel_name(), Some("hikonv-tiled"));
+        assert_eq!(cfg.mult, Multiplier::DSP48E2);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.bits, Some((3, 5)));
+        assert_eq!(cfg.signedness, Signedness::Unsigned);
+        assert_eq!(cfg.tile_co, Some(8));
+        assert_eq!(cfg.channel_block, Some(2));
+        assert_eq!(cfg.lane_bits, 128);
+        assert!(cfg.probe);
+    }
+
+    #[test]
+    fn display_omits_defaults_and_round_trips() {
+        assert_eq!(EngineConfig::named("im2row").to_string(), "im2row");
+        assert_eq!(EngineConfig::auto().to_string(), "auto");
+        let cfg = EngineConfig::named("hikonv-tiled")
+            .with_threads(4)
+            .with_multiplier(Multiplier::CPU64)
+            .with_tile_co(8);
+        let rendered = cfg.to_string();
+        assert_eq!(rendered, "hikonv-tiled@64x64:threads=4,tile-co=8");
+        assert_eq!(rendered.parse::<EngineConfig>().unwrap(), cfg);
+    }
+
+    #[test]
+    fn bad_specs_error() {
+        assert!("".parse::<EngineConfig>().is_err());
+        assert!("@32x32".parse::<EngineConfig>().is_err());
+        assert!("hikonv:frobs=2".parse::<EngineConfig>().is_err());
+        assert!("hikonv:threads=abc".parse::<EngineConfig>().is_err());
+        assert!("hikonv:p=4".parse::<EngineConfig>().is_err(), "p without q");
+        assert!("hikonv@1y1".parse::<EngineConfig>().is_err());
+    }
+
+    #[test]
+    fn layer_bits_prefers_override() {
+        assert_eq!(EngineConfig::auto().layer_bits(4, 4), (4, 4));
+        assert_eq!(EngineConfig::auto().with_bits(2, 3).layer_bits(4, 4), (2, 3));
+    }
+}

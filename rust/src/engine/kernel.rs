@@ -1,0 +1,377 @@
+//! The [`ConvKernel`] capability trait: one object-safe contract that
+//! unifies the per-engine triplicate surfaces the runner, coordinator and
+//! CLI used to wire by hand (`conv2d_tiled`/`im2row_tiled`, their `_into`
+//! twins, and the pooled wrapper structs).
+//!
+//! A kernel is a layer-level convolution engine with bound weights. It
+//! executes through exactly two entry points — an allocation-lean
+//! [`conv_into`](ConvKernel::conv_into) that the fused arena pipeline
+//! drives, and an allocating [`conv`](ConvKernel::conv) convenience used
+//! by calibration and the seed/unfused oracle path — and owns its
+//! per-frame working state behind an opaque [`KernelScratch`] so arenas
+//! can pool it without knowing any kernel's internals. New backends
+//! implement this trait and register a factory
+//! ([`KernelFactory`](super::KernelFactory)) instead of being threaded
+//! through runner, coordinator, server and `main.rs` by hand.
+
+use super::{conv2d_tiled_into_depth, im2row_tiled_into_depth, tile_co_for, PAR_MIN_MACS};
+use crate::conv::conv2d::{Conv2dHiKonv, PackedInput};
+use crate::conv::gemm::PackedLhs;
+use crate::conv::im2row::Im2RowConv;
+use crate::conv::reference::{conv2d_ref_into, ConvShape};
+use crate::exec::ThreadPool;
+use std::any::Any;
+
+/// Opaque per-frame working state of one kernel instance (packed words,
+/// gather/segmentation buffers, …). Created once per arena via
+/// [`ConvKernel::new_scratch`] and reused across frames, so steady-state
+/// execution allocates nothing; each kernel downcasts its own type back.
+pub type KernelScratch = Box<dyn Any + Send>;
+
+/// A layer-level convolution kernel with bound weights — the one
+/// object-safe contract every backend implements.
+pub trait ConvKernel: Send + Sync {
+    /// Registry name of the kernel that built this instance.
+    fn name(&self) -> &'static str;
+
+    /// The (padded) layer shape this kernel was built for.
+    fn shape(&self) -> ConvShape;
+
+    /// Fresh per-arena scratch for this kernel.
+    fn new_scratch(&self) -> KernelScratch;
+
+    /// Execute the layer on `[ci][h][w]` activations into a
+    /// caller-provided buffer (`co·ho·wo`, overwritten). `scratch` must
+    /// come from [`new_scratch`](Self::new_scratch) on the same instance;
+    /// `pool` is the intra-layer tiling pool (`None` or a 1-thread pool
+    /// means serial — kernels may also ignore it entirely). With a warmed
+    /// scratch the serial paths perform zero heap allocations.
+    fn conv_into(
+        &self,
+        input: &[i64],
+        out: &mut [i64],
+        scratch: &mut KernelScratch,
+        pool: Option<&ThreadPool>,
+    );
+
+    /// Allocating convenience path (fresh scratch + fresh output) — what
+    /// calibration and the seed/unfused oracle use.
+    fn conv(&self, input: &[i64], pool: Option<&ThreadPool>) -> Vec<i64> {
+        let mut out = vec![0i64; self.shape().output_len()];
+        let mut scratch = self.new_scratch();
+        self.conv_into(input, &mut out, &mut scratch, pool);
+        out
+    }
+}
+
+/// Baseline 6-loop kernel (Eq. 17) — the Fig. 6 reference.
+pub struct BaselineKernel {
+    shape: ConvShape,
+    weights: Vec<i64>,
+}
+
+impl BaselineKernel {
+    pub fn new(shape: ConvShape, weights: Vec<i64>) -> BaselineKernel {
+        assert_eq!(weights.len(), shape.weight_len(), "weight length mismatch");
+        BaselineKernel { shape, weights }
+    }
+}
+
+impl ConvKernel for BaselineKernel {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn shape(&self) -> ConvShape {
+        self.shape
+    }
+
+    fn new_scratch(&self) -> KernelScratch {
+        Box::new(())
+    }
+
+    fn conv_into(
+        &self,
+        input: &[i64],
+        out: &mut [i64],
+        _scratch: &mut KernelScratch,
+        _pool: Option<&ThreadPool>,
+    ) {
+        conv2d_ref_into(input, &self.weights, self.shape, out);
+    }
+}
+
+/// Per-arena working state of [`HiKonvKernel`].
+struct HiKonvScratch {
+    packed: PackedInput,
+    seg: Vec<i64>,
+}
+
+/// HiKonv packed kernel (Thms. 1–3): serial, or with output channels
+/// tiled across the pool (`tiled`) when a layer clears the
+/// [`PAR_MIN_MACS`] cutoff.
+pub struct HiKonvKernel {
+    inner: Conv2dHiKonv,
+    tiled: bool,
+    tile_co: Option<usize>,
+}
+
+impl HiKonvKernel {
+    /// Wrap a built engine. `tile_co` overrides the
+    /// [`tile_co_for`] heuristic when tiling.
+    pub fn new(inner: Conv2dHiKonv, tiled: bool, tile_co: Option<usize>) -> HiKonvKernel {
+        HiKonvKernel {
+            inner,
+            tiled,
+            tile_co,
+        }
+    }
+
+    /// The wrapped Thm.-3 engine (design-point introspection).
+    pub fn engine(&self) -> &Conv2dHiKonv {
+        &self.inner
+    }
+}
+
+impl ConvKernel for HiKonvKernel {
+    fn name(&self) -> &'static str {
+        if self.tiled {
+            "hikonv-tiled"
+        } else {
+            "hikonv"
+        }
+    }
+
+    fn shape(&self) -> ConvShape {
+        self.inner.shape()
+    }
+
+    fn new_scratch(&self) -> KernelScratch {
+        let sh = self.inner.shape();
+        Box::new(HiKonvScratch {
+            packed: PackedInput::empty(),
+            seg: vec![0i64; sh.wi + sh.k - 1],
+        })
+    }
+
+    fn conv_into(
+        &self,
+        input: &[i64],
+        out: &mut [i64],
+        scratch: &mut KernelScratch,
+        pool: Option<&ThreadPool>,
+    ) {
+        let s = scratch
+            .downcast_mut::<HiKonvScratch>()
+            .expect("scratch built by a different kernel");
+        let sh = self.inner.shape();
+        self.inner.pack_input_into(input, &mut s.packed);
+        match pool {
+            // The cutoff is applied here (not only inside the tiling entry
+            // point) so sub-cutoff layers use the arena's segmentation
+            // scratch instead of allocating one.
+            Some(p) if self.tiled && p.threads() > 1 && sh.macs() >= PAR_MIN_MACS => {
+                let depth = self
+                    .tile_co
+                    .unwrap_or_else(|| tile_co_for(sh.co, p.threads()));
+                conv2d_tiled_into_depth(&self.inner, p, &s.packed, depth, out);
+            }
+            _ => {
+                out.iter_mut().for_each(|v| *v = 0);
+                self.inner
+                    .conv_co_range_with(&s.packed, 0, sh.co, out, &mut s.seg);
+            }
+        }
+    }
+}
+
+/// Per-arena working state of [`Im2RowKernel`].
+struct Im2RowScratch {
+    lhs: PackedLhs,
+    row: Vec<i64>,
+}
+
+/// im2row/pre-packed-GEMM kernel: weights packed at construction,
+/// activation rows streamed into packed words per frame, output-channel
+/// tiles sharded across the pool when one is provided.
+pub struct Im2RowKernel {
+    inner: Im2RowConv,
+    tile_co: Option<usize>,
+}
+
+impl Im2RowKernel {
+    /// Wrap a built lowering. `tile_co` overrides the
+    /// [`tile_co_for`] heuristic when tiling.
+    pub fn new(inner: Im2RowConv, tile_co: Option<usize>) -> Im2RowKernel {
+        Im2RowKernel { inner, tile_co }
+    }
+
+    /// The wrapped im2row/GEMM lowering (design-point introspection).
+    pub fn engine(&self) -> &Im2RowConv {
+        &self.inner
+    }
+}
+
+impl ConvKernel for Im2RowKernel {
+    fn name(&self) -> &'static str {
+        "im2row"
+    }
+
+    fn shape(&self) -> ConvShape {
+        self.inner.spec().shape
+    }
+
+    fn new_scratch(&self) -> KernelScratch {
+        let sh = self.inner.spec().shape;
+        Box::new(Im2RowScratch {
+            lhs: self.inner.gemm().lhs_builder(sh.ho() * sh.wo()),
+            row: vec![0i64; sh.ci * sh.k * sh.k],
+        })
+    }
+
+    fn conv_into(
+        &self,
+        input: &[i64],
+        out: &mut [i64],
+        scratch: &mut KernelScratch,
+        pool: Option<&ThreadPool>,
+    ) {
+        let s = scratch
+            .downcast_mut::<Im2RowScratch>()
+            .expect("scratch built by a different kernel");
+        let sh = self.inner.spec().shape;
+        self.inner.pack_pixels_into(input, &mut s.lhs, &mut s.row);
+        match pool {
+            Some(p) if p.threads() > 1 && sh.macs() >= PAR_MIN_MACS => {
+                let depth = self
+                    .tile_co
+                    .unwrap_or_else(|| tile_co_for(sh.co, p.threads()));
+                im2row_tiled_into_depth(&self.inner, p, &s.lhs, depth, out);
+            }
+            _ => self.inner.conv_cols(&s.lhs, 0, sh.co, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv2d::Conv2dSpec;
+    use crate::conv::reference::conv2d_ref;
+    use crate::testing::assert_seq_eq;
+    use crate::theory::{Multiplier, Signedness};
+    use crate::util::rng::Rng;
+
+    fn test_kernels(shape: ConvShape, weights: &[i64]) -> Vec<Box<dyn ConvKernel>> {
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        vec![
+            Box::new(BaselineKernel::new(shape, weights.to_vec())),
+            Box::new(HiKonvKernel::new(
+                Conv2dHiKonv::new(spec, weights).unwrap(),
+                false,
+                None,
+            )),
+            Box::new(HiKonvKernel::new(
+                Conv2dHiKonv::new(spec, weights).unwrap(),
+                true,
+                None,
+            )),
+            Box::new(Im2RowKernel::new(
+                Im2RowConv::new(spec, weights).unwrap(),
+                None,
+            )),
+        ]
+    }
+
+    #[test]
+    fn every_kernel_agrees_with_the_reference_via_trait_objects() {
+        let shape = ConvShape {
+            ci: 5,
+            co: 7,
+            hi: 8,
+            wi: 13,
+            k: 3,
+        };
+        let mut rng = Rng::new(42);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let want = conv2d_ref(&input, &weights, shape);
+        let pool = ThreadPool::new(3);
+        for kernel in test_kernels(shape, &weights) {
+            assert_seq_eq(&kernel.conv(&input, None), &want).unwrap();
+            assert_seq_eq(&kernel.conv(&input, Some(&pool)), &want).unwrap();
+            assert_eq!(kernel.shape(), shape);
+        }
+    }
+
+    #[test]
+    fn conv_into_with_reused_scratch_matches_conv() {
+        // Large enough to clear the PAR_MIN_MACS cutoff so the pooled
+        // branch genuinely runs.
+        let shape = ConvShape {
+            ci: 6,
+            co: 12,
+            hi: 10,
+            wi: 34,
+            k: 3,
+        };
+        assert!(shape.macs() >= PAR_MIN_MACS);
+        let mut rng = Rng::new(43);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let pool = ThreadPool::new(4);
+        for kernel in test_kernels(shape, &weights) {
+            let mut scratch = kernel.new_scratch();
+            let mut out = vec![123i64; shape.output_len()];
+            for _ in 0..3 {
+                let input = rng.quant_unsigned_vec(4, shape.input_len());
+                let want = conv2d_ref(&input, &weights, shape);
+                out.iter_mut().for_each(|v| *v = 123); // stale contents overwritten
+                kernel.conv_into(&input, &mut out, &mut scratch, Some(&pool));
+                assert_seq_eq(&out, &want).unwrap();
+                kernel.conv_into(&input, &mut out, &mut scratch, None);
+                assert_seq_eq(&out, &want).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn tile_depth_override_stays_exact() {
+        let shape = ConvShape {
+            ci: 6,
+            co: 12,
+            hi: 10,
+            wi: 34,
+            k: 3,
+        };
+        let mut rng = Rng::new(44);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let want = conv2d_ref(&input, &weights, shape);
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let pool = ThreadPool::new(4);
+        // Degenerate overrides included: 0 and over-co clamp inside the
+        // tiling entry points.
+        for tile_co in [0usize, 1, 3, 5, 12, 100] {
+            let k1 = HiKonvKernel::new(
+                Conv2dHiKonv::new(spec, &weights).unwrap(),
+                true,
+                Some(tile_co),
+            );
+            assert_seq_eq(&k1.conv(&input, Some(&pool)), &want).unwrap();
+            let k2 = Im2RowKernel::new(Im2RowConv::new(spec, &weights).unwrap(), Some(tile_co));
+            assert_seq_eq(&k2.conv(&input, Some(&pool)), &want).unwrap();
+        }
+    }
+}

@@ -1,113 +1,48 @@
-//! Pluggable convolution-engine abstraction used by benches and the
-//! coordinator: the same layer can run on the baseline loop nest, the
-//! HiKonv packed engine, the parallel tiled engine (output channels
-//! sharded across an [`exec::ThreadPool`](crate::exec::ThreadPool)), the
-//! im2row/pre-packed-GEMM lowering (also pool-tiled, via
-//! [`im2row_tiled`]), or (whole-model) a PJRT-compiled artifact.
+//! Unified engine configuration, kernels and planning.
+//!
+//! Three layers make up the engine API:
+//!
+//! * [`EngineConfig`] — one typed builder (and one textual grammar) for
+//!   everything that used to be the closed `EngineKind` enum plus ad-hoc
+//!   tuples: kernel choice, multiplier, thread budget, bitwidths and
+//!   signedness, tile/block overrides, lane-bound reporting width.
+//! * [`ConvKernel`] + [`KernelRegistry`] — the object-safe capability
+//!   trait every backend implements and the registry it plugs into; the
+//!   runner, coordinator and CLI resolve kernels by name instead of
+//!   hard-wiring engine types through every layer of the stack.
+//! * [`EnginePlan`] — the theory-driven per-layer planner:
+//!   `EngineConfig::auto()` scores every registered kernel per layer
+//!   with the paper's design-point solver and picks the predicted-best
+//!   one, producing an inspectable plan (`hikonv plan`).
+//!
+//! This module also hosts the free-function tiling entry points the
+//! kernels (and benches) share: [`conv2d_tiled`] / [`im2row_tiled`] and
+//! their write-into twins, which shard output channels across an
+//! [`exec::ThreadPool`](crate::exec::ThreadPool).
 
-use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec, PackedInput};
+mod config;
+mod kernel;
+mod planner;
+mod registry;
+
+pub use config::{EngineConfig, KernelChoice};
+pub use kernel::{BaselineKernel, ConvKernel, HiKonvKernel, Im2RowKernel, KernelScratch};
+pub use planner::{EnginePlan, LayerPlan};
+pub use registry::{KernelFactory, KernelRegistry};
+
+use crate::conv::conv2d::{Conv2dHiKonv, PackedInput};
 use crate::conv::gemm::PackedLhs;
 use crate::conv::im2row::Im2RowConv;
-use crate::conv::reference::{conv2d_ref, conv2d_ref_into, ConvShape};
 use crate::exec::ThreadPool;
-use crate::theory::{Multiplier, Signedness};
-use std::sync::Arc;
-
-/// A layer-level convolution engine with bound weights.
-pub trait ConvEngine: Send {
-    /// Engine name for reports.
-    fn name(&self) -> &str;
-    /// Execute the layer on `[ci][h][w]` activations.
-    fn conv(&self, input: &[i64]) -> Vec<i64>;
-    /// Execute the layer into a caller-provided buffer (`co·ho·wo`,
-    /// overwritten) — the write-into contract the fused model pipeline
-    /// drives so layer outputs land in arena buffers instead of fresh
-    /// allocations. Engines override the default (which copies through
-    /// [`conv`](Self::conv)) with a genuinely allocation-lean path.
-    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
-        out.copy_from_slice(&self.conv(input));
-    }
-    /// The layer shape this engine was built for.
-    fn shape(&self) -> ConvShape;
-}
-
-/// Baseline 6-loop engine (Eq. 17).
-pub struct BaselineEngine {
-    shape: ConvShape,
-    weights: Vec<i64>,
-}
-
-impl BaselineEngine {
-    pub fn new(shape: ConvShape, weights: Vec<i64>) -> BaselineEngine {
-        assert_eq!(weights.len(), shape.weight_len());
-        BaselineEngine { shape, weights }
-    }
-}
-
-impl ConvEngine for BaselineEngine {
-    fn name(&self) -> &str {
-        "baseline"
-    }
-    fn conv(&self, input: &[i64]) -> Vec<i64> {
-        conv2d_ref(input, &self.weights, self.shape)
-    }
-    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
-        conv2d_ref_into(input, &self.weights, self.shape, out);
-    }
-    fn shape(&self) -> ConvShape {
-        self.shape
-    }
-}
-
-/// HiKonv packed engine (Thms. 1–3).
-pub struct HiKonvEngine {
-    inner: Conv2dHiKonv,
-    shape: ConvShape,
-}
-
-impl HiKonvEngine {
-    pub fn new(
-        shape: ConvShape,
-        weights: Vec<i64>,
-        mult: Multiplier,
-        p: u32,
-        q: u32,
-        signedness: Signedness,
-    ) -> Result<HiKonvEngine, String> {
-        let spec = Conv2dSpec {
-            shape,
-            mult,
-            p,
-            q,
-            signedness,
-        };
-        Ok(HiKonvEngine {
-            inner: Conv2dHiKonv::new(spec, &weights)?,
-            shape,
-        })
-    }
-}
-
-impl ConvEngine for HiKonvEngine {
-    fn name(&self) -> &str {
-        "hikonv"
-    }
-    fn conv(&self, input: &[i64]) -> Vec<i64> {
-        self.inner.conv(input)
-    }
-    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
-        self.inner.conv_into(input, out);
-    }
-    fn shape(&self) -> ConvShape {
-        self.shape
-    }
-}
 
 /// Output-channel tile depth for a layer of `co` channels on a pool of
 /// `threads` workers: ~4 tiles per worker for load balance, never below
-/// one channel per tile.
+/// one channel per tile. The worker count is clamped to `co` first, so a
+/// degenerate `threads > co` pool yields at most `co` one-channel tiles
+/// (never empty ones) instead of over-splitting.
 pub fn tile_co_for(co: usize, threads: usize) -> usize {
-    co.div_ceil((threads * 4).max(1)).max(1)
+    let workers = threads.clamp(1, co.max(1));
+    co.div_ceil((workers * 4).min(co.max(1))).max(1)
 }
 
 /// Below this many MACs a layer runs serially even on a multi-thread
@@ -116,7 +51,8 @@ pub fn tile_co_for(co: usize, threads: usize) -> usize {
 /// *slower* tiled (the serve path calls this once per layer per frame).
 /// Public so callers holding their own scratch (the fused runner's
 /// arena) can apply the same cutoff and drive the allocation-free
-/// serial path directly.
+/// serial path directly; the planner's cost model charges pooled kernels
+/// the same spawn cost.
 pub const PAR_MIN_MACS: u64 = 100_000;
 
 /// Run one HiKonv conv2d layer tiled over output channels on `pool`:
@@ -146,6 +82,24 @@ pub fn conv2d_tiled_into(
     packed: &PackedInput,
     out: &mut [i64],
 ) {
+    conv2d_tiled_into_depth(
+        eng,
+        pool,
+        packed,
+        tile_co_for(eng.shape().co, pool.threads()),
+        out,
+    );
+}
+
+/// [`conv2d_tiled_into`] with an explicit output-channel tile depth
+/// (`EngineConfig::tile_co` override; clamped to `[1, co]`).
+pub fn conv2d_tiled_into_depth(
+    eng: &Conv2dHiKonv,
+    pool: &ThreadPool,
+    packed: &PackedInput,
+    tile_co: usize,
+    out: &mut [i64],
+) {
     let sh = eng.shape();
     assert_eq!(out.len(), sh.output_len(), "output length mismatch");
     // `conv_co_range` accumulates with `+=`: zero the (reused) buffer.
@@ -155,88 +109,12 @@ pub fn conv2d_tiled_into(
         return;
     }
     let (ho, wo) = (sh.ho(), sh.wo());
-    let tile_co = tile_co_for(sh.co, pool.threads());
+    let tile_co = tile_co.clamp(1, sh.co);
     pool.par_chunks_mut(out, tile_co * ho * wo, |tile_idx, tile| {
         let co_start = tile_idx * tile_co;
         let co_end = (co_start + tile_co).min(sh.co);
         eng.conv_co_range(packed, co_start, co_end, tile);
     });
-}
-
-/// Parallel tiled HiKonv engine: Thm.-3 packed arithmetic with output
-/// channels sharded across a thread pool (the multi-core extension of the
-/// paper's CPU result).
-pub struct ParallelEngine {
-    inner: Conv2dHiKonv,
-    shape: ConvShape,
-    pool: Arc<ThreadPool>,
-}
-
-impl ParallelEngine {
-    pub fn new(
-        shape: ConvShape,
-        weights: Vec<i64>,
-        mult: Multiplier,
-        p: u32,
-        q: u32,
-        signedness: Signedness,
-        pool: Arc<ThreadPool>,
-    ) -> Result<ParallelEngine, String> {
-        let spec = Conv2dSpec {
-            shape,
-            mult,
-            p,
-            q,
-            signedness,
-        };
-        Ok(ParallelEngine {
-            inner: Conv2dHiKonv::new(spec, &weights)?,
-            shape,
-            pool,
-        })
-    }
-
-    /// Convenience: build with a private pool of `threads` workers
-    /// (0 = auto-size from the machine / `HIKONV_THREADS`).
-    pub fn with_threads(
-        shape: ConvShape,
-        weights: Vec<i64>,
-        mult: Multiplier,
-        p: u32,
-        q: u32,
-        signedness: Signedness,
-        threads: usize,
-    ) -> Result<ParallelEngine, String> {
-        Self::new(
-            shape,
-            weights,
-            mult,
-            p,
-            q,
-            signedness,
-            Arc::new(ThreadPool::auto_sized(threads)),
-        )
-    }
-
-    pub fn pool(&self) -> &Arc<ThreadPool> {
-        &self.pool
-    }
-}
-
-impl ConvEngine for ParallelEngine {
-    fn name(&self) -> &str {
-        "hikonv-tiled"
-    }
-    fn conv(&self, input: &[i64]) -> Vec<i64> {
-        conv2d_tiled(&self.inner, &self.pool, input)
-    }
-    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
-        let packed = self.inner.pack_input(input);
-        conv2d_tiled_into(&self.inner, &self.pool, &packed, out);
-    }
-    fn shape(&self) -> ConvShape {
-        self.shape
-    }
 }
 
 /// Run one im2row/GEMM layer tiled over output channels on `pool`: pack
@@ -263,6 +141,24 @@ pub fn im2row_tiled(eng: &Im2RowConv, pool: &ThreadPool, input: &[i64]) -> Vec<i
 /// same small-layer serial cutoff, so it stays bit-identical to
 /// [`im2row_tiled`] and `eng.conv`.
 pub fn im2row_tiled_into(eng: &Im2RowConv, pool: &ThreadPool, pixels: &PackedLhs, out: &mut [i64]) {
+    im2row_tiled_into_depth(
+        eng,
+        pool,
+        pixels,
+        tile_co_for(eng.spec().shape.co, pool.threads()),
+        out,
+    );
+}
+
+/// [`im2row_tiled_into`] with an explicit output-channel tile depth
+/// (`EngineConfig::tile_co` override; clamped to `[1, co]`).
+pub fn im2row_tiled_into_depth(
+    eng: &Im2RowConv,
+    pool: &ThreadPool,
+    pixels: &PackedLhs,
+    tile_co: usize,
+    out: &mut [i64],
+) {
     let sh = eng.spec().shape;
     assert_eq!(out.len(), sh.output_len(), "output length mismatch");
     if pool.threads() == 1 || sh.macs() < PAR_MIN_MACS {
@@ -270,7 +166,7 @@ pub fn im2row_tiled_into(eng: &Im2RowConv, pool: &ThreadPool, pixels: &PackedLhs
         return;
     }
     let rows = sh.ho() * sh.wo();
-    let tile_co = tile_co_for(sh.co, pool.threads());
+    let tile_co = tile_co.clamp(1, sh.co);
     pool.par_chunks_mut(out, tile_co * rows, |tile_idx, tile| {
         let co_start = tile_idx * tile_co;
         let co_end = (co_start + tile_co).min(sh.co);
@@ -278,162 +174,14 @@ pub fn im2row_tiled_into(eng: &Im2RowConv, pool: &ThreadPool, pixels: &PackedLhs
     });
 }
 
-/// im2row/GEMM lowering engine: weights pre-packed at construction,
-/// activations packed once per inference, output channels sharded across
-/// a thread pool (the FC-shaped counterpart of [`ParallelEngine`]).
-pub struct Im2RowEngine {
-    inner: Im2RowConv,
-    shape: ConvShape,
-    pool: Arc<ThreadPool>,
-}
-
-impl Im2RowEngine {
-    pub fn new(
-        shape: ConvShape,
-        weights: Vec<i64>,
-        mult: Multiplier,
-        p: u32,
-        q: u32,
-        signedness: Signedness,
-        pool: Arc<ThreadPool>,
-    ) -> Result<Im2RowEngine, String> {
-        let spec = Conv2dSpec {
-            shape,
-            mult,
-            p,
-            q,
-            signedness,
-        };
-        Ok(Im2RowEngine {
-            inner: Im2RowConv::new(spec, &weights)?,
-            shape,
-            pool,
-        })
-    }
-
-    /// Convenience: build with a private pool of `threads` workers
-    /// (0 = auto-size from the machine / `HIKONV_THREADS`).
-    pub fn with_threads(
-        shape: ConvShape,
-        weights: Vec<i64>,
-        mult: Multiplier,
-        p: u32,
-        q: u32,
-        signedness: Signedness,
-        threads: usize,
-    ) -> Result<Im2RowEngine, String> {
-        Self::new(
-            shape,
-            weights,
-            mult,
-            p,
-            q,
-            signedness,
-            Arc::new(ThreadPool::auto_sized(threads)),
-        )
-    }
-
-    pub fn pool(&self) -> &Arc<ThreadPool> {
-        &self.pool
-    }
-}
-
-impl ConvEngine for Im2RowEngine {
-    fn name(&self) -> &str {
-        "im2row"
-    }
-    fn conv(&self, input: &[i64]) -> Vec<i64> {
-        im2row_tiled(&self.inner, &self.pool, input)
-    }
-    fn conv_into(&self, input: &[i64], out: &mut [i64]) {
-        let pixels = self.inner.pack_pixels(input);
-        im2row_tiled_into(&self.inner, &self.pool, &pixels, out);
-    }
-    fn shape(&self) -> ConvShape {
-        self.shape
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::conv2d::Conv2dSpec;
+    use crate::conv::reference::{conv2d_ref, ConvShape};
     use crate::testing::assert_seq_eq;
+    use crate::theory::{Multiplier, Signedness};
     use crate::util::rng::Rng;
-
-    #[test]
-    fn engines_agree_via_trait_objects() {
-        let shape = ConvShape {
-            ci: 4,
-            co: 3,
-            hi: 6,
-            wi: 10,
-            k: 3,
-        };
-        let mut rng = Rng::new(41);
-        let weights = rng.quant_signed_vec(4, shape.weight_len());
-        let input = rng.quant_unsigned_vec(4, shape.input_len());
-        let engines: Vec<Box<dyn ConvEngine>> = vec![
-            Box::new(BaselineEngine::new(shape, weights.clone())),
-            Box::new(
-                HiKonvEngine::new(
-                    shape,
-                    weights,
-                    Multiplier::CPU32,
-                    4,
-                    4,
-                    Signedness::UnsignedBySigned,
-                )
-                .unwrap(),
-            ),
-        ];
-        let outputs: Vec<Vec<i64>> = engines.iter().map(|e| e.conv(&input)).collect();
-        assert_seq_eq(&outputs[0], &outputs[1]).unwrap();
-        assert_eq!(engines[0].name(), "baseline");
-        assert_eq!(engines[1].shape(), shape);
-    }
-
-    #[test]
-    fn all_engines_agree_including_tiled_and_im2row() {
-        let shape = ConvShape {
-            ci: 5,
-            co: 7,
-            hi: 8,
-            wi: 13,
-            k: 3,
-        };
-        let mut rng = Rng::new(42);
-        let weights = rng.quant_signed_vec(4, shape.weight_len());
-        let input = rng.quant_unsigned_vec(4, shape.input_len());
-        let sgn = Signedness::UnsignedBySigned;
-        let engines: Vec<Box<dyn ConvEngine>> = vec![
-            Box::new(BaselineEngine::new(shape, weights.clone())),
-            Box::new(
-                HiKonvEngine::new(shape, weights.clone(), Multiplier::CPU32, 4, 4, sgn).unwrap(),
-            ),
-            Box::new(
-                ParallelEngine::with_threads(
-                    shape,
-                    weights.clone(),
-                    Multiplier::CPU32,
-                    4,
-                    4,
-                    sgn,
-                    3,
-                )
-                .unwrap(),
-            ),
-            Box::new(
-                Im2RowEngine::with_threads(shape, weights, Multiplier::CPU32, 4, 4, sgn, 2)
-                    .unwrap(),
-            ),
-        ];
-        let reference = engines[0].conv(&input);
-        for e in &engines[1..] {
-            assert_seq_eq(&e.conv(&input), &reference).unwrap();
-        }
-        assert_eq!(engines[2].name(), "hikonv-tiled");
-        assert_eq!(engines[3].name(), "im2row");
-    }
 
     #[test]
     fn tiled_output_is_invariant_under_thread_count() {
@@ -460,7 +208,7 @@ mod tests {
         let eng = Conv2dHiKonv::new(spec, &weights).unwrap();
         let serial = conv2d_tiled(&eng, &ThreadPool::new(1), &input);
         assert_seq_eq(&serial, &eng.conv(&input)).unwrap();
-        for threads in [2usize, 4, 8] {
+        for threads in [2usize, 4, 8, 32] {
             let par = conv2d_tiled(&eng, &ThreadPool::new(threads), &input);
             assert_seq_eq(&par, &serial).unwrap();
         }
@@ -491,54 +239,9 @@ mod tests {
         let serial = im2row_tiled(&eng, &ThreadPool::new(1), &input);
         assert_seq_eq(&serial, &eng.conv(&input)).unwrap();
         assert_seq_eq(&serial, &conv2d_ref(&input, &weights, shape)).unwrap();
-        for threads in [2usize, 4, 8] {
+        for threads in [2usize, 4, 8, 32] {
             let par = im2row_tiled(&eng, &ThreadPool::new(threads), &input);
             assert_seq_eq(&par, &serial).unwrap();
-        }
-    }
-
-    #[test]
-    fn conv_into_matches_conv_for_every_engine() {
-        let shape = ConvShape {
-            ci: 5,
-            co: 6,
-            hi: 8,
-            wi: 12,
-            k: 3,
-        };
-        let mut rng = Rng::new(45);
-        let weights = rng.quant_signed_vec(4, shape.weight_len());
-        let input = rng.quant_unsigned_vec(4, shape.input_len());
-        let sgn = Signedness::UnsignedBySigned;
-        let engines: Vec<Box<dyn ConvEngine>> = vec![
-            Box::new(BaselineEngine::new(shape, weights.clone())),
-            Box::new(
-                HiKonvEngine::new(shape, weights.clone(), Multiplier::CPU32, 4, 4, sgn).unwrap(),
-            ),
-            Box::new(
-                ParallelEngine::with_threads(
-                    shape,
-                    weights.clone(),
-                    Multiplier::CPU32,
-                    4,
-                    4,
-                    sgn,
-                    3,
-                )
-                .unwrap(),
-            ),
-            Box::new(
-                Im2RowEngine::with_threads(shape, weights.clone(), Multiplier::CPU32, 4, 4, sgn, 2)
-                    .unwrap(),
-            ),
-        ];
-        let want = conv2d_ref(&input, &weights, shape);
-        let mut out = vec![123i64; shape.output_len()];
-        for e in &engines {
-            out.iter_mut().for_each(|v| *v = 123); // stale contents must be overwritten
-            e.conv_into(&input, &mut out);
-            assert_seq_eq(&out, &want).unwrap();
-            assert_seq_eq(&e.conv(&input), &want).unwrap();
         }
     }
 
@@ -592,10 +295,57 @@ mod tests {
     }
 
     #[test]
+    fn explicit_tile_depths_compose_exactly() {
+        let shape = ConvShape {
+            ci: 6,
+            co: 12,
+            hi: 10,
+            wi: 34,
+            k: 3,
+        };
+        assert!(shape.macs() >= PAR_MIN_MACS);
+        let mut rng = Rng::new(48);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let want = conv2d_ref(&input, &weights, shape);
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let pool = ThreadPool::new(4);
+        let eng = Conv2dHiKonv::new(spec, &weights).unwrap();
+        let im = Im2RowConv::new(spec, &weights).unwrap();
+        let packed = eng.pack_input(&input);
+        let pixels = im.pack_pixels(&input);
+        // Degenerate depths (0, over-co) are clamped, never panic.
+        for depth in [0usize, 1, 5, 12, 64] {
+            let mut out = vec![9i64; shape.output_len()];
+            conv2d_tiled_into_depth(&eng, &pool, &packed, depth, &mut out);
+            assert_seq_eq(&out, &want).unwrap();
+            im2row_tiled_into_depth(&im, &pool, &pixels, depth, &mut out);
+            assert_seq_eq(&out, &want).unwrap();
+        }
+    }
+
+    #[test]
     fn tile_depth_heuristic_bounds() {
         assert_eq!(tile_co_for(64, 1), 16);
         assert_eq!(tile_co_for(64, 4), 4);
         assert_eq!(tile_co_for(3, 8), 1);
         assert_eq!(tile_co_for(1, 16), 1);
+        // Degenerate inputs clamp instead of panicking or over-splitting:
+        // never more than `co` tiles, never an empty tile.
+        assert_eq!(tile_co_for(0, 4), 1);
+        assert_eq!(tile_co_for(5, 0), 2);
+        for co in [1usize, 3, 7, 64] {
+            for threads in [1usize, 2, 16, 100] {
+                let depth = tile_co_for(co, threads);
+                assert!(depth >= 1);
+                assert!(co.div_ceil(depth) <= co, "co={co} threads={threads}");
+            }
+        }
     }
 }

@@ -1,0 +1,392 @@
+//! The per-layer engine planner: turns an [`EngineConfig`] into an
+//! inspectable [`EnginePlan`] — one kernel choice per layer, scored by
+//! the paper's theory model.
+//!
+//! HiKonv's central claim is that the best bit-slicing configuration
+//! depends on the workload: §III/IV derive, per multiplier and per
+//! (bitwidth, kernel size), how many low-bitwidth convolutions one
+//! full-bitwidth multiplication delivers. The planner puts that math in
+//! charge of backend selection: for every layer it asks each registered
+//! [`KernelFactory`](super::KernelFactory) for its feasibility, its
+//! predicted ops/mult (`theory::solver`), and a deterministic cost in
+//! scalar-op units; `auto` picks the per-layer minimum. The plan also
+//! records the best *lane-feasible* ops/mult
+//! ([`solve_for_lane`](crate::theory::solve_for_lane)) as the theory
+//! upper bound the chosen kernel is compared against.
+//!
+//! Selection is **deterministic** for a fixed model + host signature
+//! (resolved thread count, lane width): planning the same model twice
+//! yields the same plan, which the planner test suite asserts. The
+//! optional measured calibration probe (`probe` in the config grammar)
+//! additionally times every candidate kernel on synthetic data and
+//! selects by observed nanoseconds instead — useful on unfamiliar hosts,
+//! but explicitly not deterministic.
+
+use super::config::{EngineConfig, KernelChoice};
+use super::registry::{KernelFactory, KernelRegistry};
+use crate::exec::{default_threads, ThreadPool};
+use crate::models::layer::{ConvLayer, ModelSpec};
+use crate::theory::{solve_for_lane, AccumMode};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::util::timer;
+
+/// One layer's resolved kernel choice and its predicted numbers.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// Layer name from the [`ModelSpec`].
+    pub layer: String,
+    /// Chosen kernel (a registry name).
+    pub kernel: String,
+    /// MACs per forward pass of this layer.
+    pub macs: u64,
+    /// Predicted equivalent ops per wide multiplication on the chosen
+    /// kernel (the design point the kernel will actually use).
+    pub ops_per_mult: u64,
+    /// Best lane-feasible ops/mult for this layer's bitwidths
+    /// ([`solve_for_lane`] with single-block accumulation — the loosest
+    /// guard-bit requirement any kernel uses, so this upper-bounds every
+    /// backend's achievable `ops_per_mult`).
+    pub lane_bound: u64,
+    /// Deterministic predicted cost in scalar-op units.
+    pub cost: f64,
+    /// Measured nanoseconds per layer execution when the calibration
+    /// probe ran (`None` otherwise).
+    pub probe_ns: Option<f64>,
+}
+
+/// A fully-resolved per-layer execution plan (inspect via
+/// [`render`](EnginePlan::render) or the `plan` CLI subcommand).
+#[derive(Clone, Debug)]
+pub struct EnginePlan {
+    /// The configuration this plan was derived from.
+    pub config: EngineConfig,
+    /// Resolved intra-layer thread budget (part of the host signature).
+    pub threads: usize,
+    /// One entry per model layer, in layer order.
+    pub layers: Vec<LayerPlan>,
+}
+
+impl EnginePlan {
+    /// Plan `model` under `config` against the built-in registry.
+    pub fn plan(model: &ModelSpec, config: &EngineConfig) -> Result<EnginePlan, String> {
+        Self::plan_with(model, config, KernelRegistry::builtin())
+    }
+
+    /// Plan against an explicit registry (custom backends).
+    pub fn plan_with(
+        model: &ModelSpec,
+        config: &EngineConfig,
+        registry: &KernelRegistry,
+    ) -> Result<EnginePlan, String> {
+        model.validate()?;
+        let threads = if config.threads == 0 {
+            default_threads()
+        } else {
+            config.threads
+        };
+        let mut layers = Vec::with_capacity(model.layers.len());
+        for l in &model.layers {
+            let lp = match &config.kernel {
+                KernelChoice::Named(name) => {
+                    let f = registry.resolve(name)?;
+                    f.supports(l, config)?;
+                    layer_plan(l, config, threads, f, None)?
+                }
+                KernelChoice::Auto => auto_pick(l, config, threads, registry)?,
+            };
+            layers.push(lp);
+        }
+        Ok(EnginePlan {
+            config: config.clone(),
+            threads,
+            layers,
+        })
+    }
+
+    /// Host signature the plan is deterministic under.
+    pub fn host(&self) -> String {
+        format!("threads={};lane={}", self.threads, self.config.lane_bits)
+    }
+
+    /// Kernel names in layer order.
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.layers.iter().map(|l| l.kernel.as_str()).collect()
+    }
+
+    /// Compact label: the config spelling for a named kernel, or
+    /// `auto[kernel*count+...]` summarizing the per-layer choices.
+    pub fn summary(&self) -> String {
+        match &self.config.kernel {
+            KernelChoice::Named(_) => self.config.to_string(),
+            KernelChoice::Auto => {
+                let mut counts: Vec<(&str, usize)> = Vec::new();
+                for lp in &self.layers {
+                    if let Some(e) = counts.iter_mut().find(|(n, _)| *n == lp.kernel.as_str()) {
+                        e.1 += 1;
+                    } else {
+                        counts.push((lp.kernel.as_str(), 1));
+                    }
+                }
+                let parts: Vec<String> =
+                    counts.iter().map(|(n, c)| format!("{n}*{c}")).collect();
+                format!("auto[{}]", parts.join("+"))
+            }
+        }
+    }
+
+    /// The per-layer plan table (the `plan` subcommand's output).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "engine plan: {} ({}, multiplier {})",
+                self.summary(),
+                self.host(),
+                self.config.mult
+            ),
+            &[
+                "layer",
+                "kernel",
+                "kMACs",
+                "ops/mult",
+                "lane-best",
+                "pred. Mops",
+                "probe",
+            ],
+        );
+        for lp in &self.layers {
+            t.row(vec![
+                lp.layer.clone(),
+                lp.kernel.clone(),
+                format!("{}", lp.macs / 1000),
+                format!("{}", lp.ops_per_mult),
+                format!("{}", lp.lane_bound),
+                format!("{:.2}", lp.cost / 1e6),
+                match lp.probe_ns {
+                    Some(ns) => format!("{:.1} us", ns / 1e3),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        t.render()
+    }
+
+    /// JSON form (the `BENCH_plan.json` artifact schema).
+    pub fn to_json(&self) -> Json {
+        let mut rows = Vec::with_capacity(self.layers.len());
+        for lp in &self.layers {
+            let mut o = Json::obj()
+                .set("layer", lp.layer.as_str())
+                .set("kernel", lp.kernel.as_str())
+                .set("macs", lp.macs as i64)
+                .set("ops_per_mult", lp.ops_per_mult as i64)
+                .set("lane_bound", lp.lane_bound as i64)
+                .set("predicted_cost", lp.cost);
+            if let Some(ns) = lp.probe_ns {
+                o = o.set("probe_ns", ns);
+            }
+            rows.push(o);
+        }
+        Json::obj()
+            .set("config", self.config.to_string())
+            .set("summary", self.summary())
+            .set("threads", self.threads)
+            .set("host", self.host())
+            .set("layers", Json::Array(rows))
+    }
+}
+
+/// Build one layer's plan entry from a resolved factory.
+fn layer_plan(
+    l: &ConvLayer,
+    cfg: &EngineConfig,
+    threads: usize,
+    f: &dyn KernelFactory,
+    probe_ns: Option<f64>,
+) -> Result<LayerPlan, String> {
+    let (p, q) = cfg.layer_bits(l.a_bits, l.w_bits);
+    // Single-block accumulation has the loosest guard-bit requirement of
+    // any backend (deeper accumulation only shrinks N·K), so this is a
+    // true per-layer upper bound on ops/mult within the word lane.
+    let lane_bound = solve_for_lane(
+        cfg.mult,
+        p,
+        q,
+        cfg.signedness,
+        AccumMode::Single,
+        cfg.lane_bits,
+    )
+    .map(|dp| dp.ops_per_mult())
+    .unwrap_or(1);
+    Ok(LayerPlan {
+        layer: l.name.clone(),
+        kernel: f.name().to_string(),
+        macs: l.macs(),
+        ops_per_mult: f.predicted_ops_per_mult(l, cfg)?,
+        lane_bound,
+        cost: f.predicted_cost(l, cfg, threads)?,
+        probe_ns,
+    })
+}
+
+/// `auto` selection for one layer: minimum predicted cost over the
+/// feasible candidates (registration order breaks ties — deterministic);
+/// with the probe enabled, minimum measured time instead.
+fn auto_pick(
+    l: &ConvLayer,
+    cfg: &EngineConfig,
+    threads: usize,
+    registry: &KernelRegistry,
+) -> Result<LayerPlan, String> {
+    let mut best: Option<(f64, Option<f64>, &dyn KernelFactory)> = None;
+    for f in registry.entries() {
+        if f.supports(l, cfg).is_err() {
+            continue;
+        }
+        let Ok(cost) = f.predicted_cost(l, cfg, threads) else {
+            continue;
+        };
+        // A candidate that fails to build/probe is skipped like one that
+        // fails `supports` — one broken backend must not abort the plan.
+        let probe_ns = if cfg.probe {
+            match probe_layer(l, cfg, threads, f) {
+                Ok(ns) => Some(ns),
+                Err(_) => continue,
+            }
+        } else {
+            None
+        };
+        let score = probe_ns.unwrap_or(cost);
+        if best.map(|(s, _, _)| score < s).unwrap_or(true) {
+            best = Some((score, probe_ns, f));
+        }
+    }
+    let (_, probe_ns, f) =
+        best.ok_or_else(|| format!("no registered kernel supports layer '{}'", l.name))?;
+    layer_plan(l, cfg, threads, f, probe_ns)
+}
+
+/// Time one candidate kernel on deterministic synthetic data: build with
+/// synthetic weights, run once warm, once timed. Returns nanoseconds.
+fn probe_layer(
+    l: &ConvLayer,
+    cfg: &EngineConfig,
+    threads: usize,
+    f: &dyn KernelFactory,
+) -> Result<f64, String> {
+    let (p, q) = cfg.layer_bits(l.a_bits, l.w_bits);
+    let mut rng = Rng::new(0x9106 ^ l.macs());
+    let weights = rng.quant_signed_vec(q, l.weight_len());
+    let sh = l.padded_shape();
+    let input = rng.quant_unsigned_vec(p, sh.input_len());
+    let kernel = f.build(l, &weights, cfg)?;
+    let pool = ThreadPool::new(threads);
+    let pool_opt = f.uses_pool().then_some(&pool);
+    let mut out = vec![0i64; sh.output_len()];
+    let mut scratch = kernel.new_scratch();
+    kernel.conv_into(&input, &mut out, &mut scratch, pool_opt);
+    let (_, dt) = timer::time(|| kernel.conv_into(&input, &mut out, &mut scratch, pool_opt));
+    Ok(dt * 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ultranet::{ultranet, ultranet_tiny};
+
+    #[test]
+    fn named_plans_use_one_kernel_everywhere() {
+        let model = ultranet_tiny();
+        for name in ["baseline", "hikonv", "hikonv-tiled", "im2row"] {
+            let plan = EnginePlan::plan(&model, &EngineConfig::named(name)).unwrap();
+            assert_eq!(plan.layers.len(), model.layers.len());
+            assert!(plan.kernel_names().iter().all(|k| *k == name), "{name}");
+            assert_eq!(plan.summary(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_named_kernel_fails_with_suggestion() {
+        let err = EnginePlan::plan(&ultranet_tiny(), &EngineConfig::named("hikonv-tilde"))
+            .unwrap_err();
+        assert!(err.contains("did you mean 'hikonv-tiled'"), "{err}");
+    }
+
+    #[test]
+    fn auto_prefers_tiled_kernels_on_big_layers_and_serial_on_small() {
+        // Full UltraNet: every layer is multi-100k-MACs, so with threads
+        // available tiling wins everywhere...
+        let model = ultranet();
+        let plan = EnginePlan::plan(&model, &EngineConfig::auto().with_threads(8)).unwrap();
+        assert_eq!(plan.threads, 8);
+        assert_eq!(plan.layers[0].kernel, "hikonv-tiled", "{:?}", plan.layers[0]);
+        // ...while with one thread nothing should plan as tiled (the
+        // spawn charge has no parallel win to pay for it).
+        let serial = EnginePlan::plan(&model, &EngineConfig::auto().with_threads(1)).unwrap();
+        assert!(
+            serial.kernel_names().iter().all(|k| *k != "hikonv-tiled"),
+            "{:?}",
+            serial.kernel_names()
+        );
+        // A sub-cutoff layer must plan serial even with threads to spare.
+        let tiny = ModelSpec {
+            name: "tiny".into(),
+            input: (4, 8, 8),
+            layers: vec![ConvLayer {
+                name: "small".into(),
+                ci: 4,
+                co: 4,
+                hi: 8,
+                wi: 8,
+                k: 3,
+                pad: 1,
+                pool_after: false,
+                a_bits: 4,
+                w_bits: 4,
+            }],
+        };
+        assert!(tiny.layers[0].macs() < crate::engine::PAR_MIN_MACS);
+        let plan = EnginePlan::plan(&tiny, &EngineConfig::auto().with_threads(8)).unwrap();
+        assert_eq!(plan.layers[0].kernel, "hikonv", "{:?}", plan.layers[0]);
+    }
+
+    #[test]
+    fn plan_reports_theory_numbers() {
+        let model = ultranet_tiny();
+        let plan = EnginePlan::plan(&model, &EngineConfig::named("hikonv")).unwrap();
+        for lp in &plan.layers {
+            // The 32x32 CPU point at 4-bit packs multiple ops per mult.
+            assert!(lp.ops_per_mult >= 2, "{lp:?}");
+            assert!(lp.lane_bound >= 1, "{lp:?}");
+            assert!(lp.cost > 0.0);
+            assert!(lp.probe_ns.is_none());
+        }
+        let rendered = plan.render();
+        assert!(rendered.contains("conv1"), "{rendered}");
+        assert!(rendered.contains("hikonv"), "{rendered}");
+        let json = plan.to_json();
+        assert!(json.get("threads").is_some());
+        assert!(json.get("layers").is_some());
+    }
+
+    #[test]
+    fn probe_mode_records_measurements() {
+        let model = ultranet_tiny();
+        let cfg = EngineConfig::auto().with_threads(1).with_probe(true);
+        let plan = EnginePlan::plan(&model, &cfg).unwrap();
+        for lp in &plan.layers {
+            let ns = lp.probe_ns.expect("probe recorded");
+            assert!(ns >= 0.0);
+        }
+    }
+
+    #[test]
+    fn auto_summary_counts_kernels() {
+        let model = ultranet();
+        let plan = EnginePlan::plan(&model, &EngineConfig::auto().with_threads(4)).unwrap();
+        let s = plan.summary();
+        assert!(s.starts_with("auto["), "{s}");
+        assert!(s.contains('*'), "{s}");
+    }
+}

@@ -1,0 +1,597 @@
+//! Kernel registry: the single place a convolution backend plugs into.
+//!
+//! A backend ships a [`KernelFactory`] — feasibility check, theory-driven
+//! scoring hooks, and a builder producing a bound
+//! [`ConvKernel`](super::ConvKernel) — and registers it here. The runner,
+//! planner, coordinator and CLI all resolve kernels through the registry,
+//! so adding a backend is one `register` call instead of a cross-cutting
+//! change. Name lookups that miss return the full list of registered
+//! names plus a nearest-match suggestion (edit distance).
+
+use super::config::EngineConfig;
+use super::kernel::{BaselineKernel, ConvKernel, HiKonvKernel, Im2RowKernel};
+use super::PAR_MIN_MACS;
+use crate::conv::conv2d::{planned_design, row_pass_cost, Conv2dHiKonv, Conv2dSpec};
+use crate::conv::im2row::Im2RowConv;
+use crate::models::layer::ConvLayer;
+use crate::theory::{solve, AccumMode, DesignPoint};
+use std::sync::OnceLock;
+
+/// A registrable convolution backend: feasibility, theory scoring, and
+/// construction of bound [`ConvKernel`] instances.
+pub trait KernelFactory: Send + Sync {
+    /// Unique registry name (the `--engine` spelling).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for help text and the `plan` table.
+    fn describe(&self) -> &'static str;
+
+    /// Whether kernels built by this factory shard work across the
+    /// runner's intra-layer thread pool.
+    fn uses_pool(&self) -> bool {
+        false
+    }
+
+    /// Feasibility of this backend for `layer` under `cfg` (`Err` says
+    /// why not — e.g. operands wider than the multiplier ports).
+    fn supports(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<(), String>;
+
+    /// Theory score: equivalent low-bitwidth convolution ops one wide
+    /// multiplication delivers on this backend (`theory::solver`,
+    /// §III-C) — 1 for the scalar baseline.
+    fn predicted_ops_per_mult(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<u64, String>;
+
+    /// Deterministic cost model in scalar-op units (lower is better):
+    /// what the planner minimizes when `auto` selects per layer.
+    /// `threads` is the resolved intra-layer thread budget.
+    fn predicted_cost(
+        &self,
+        layer: &ConvLayer,
+        cfg: &EngineConfig,
+        threads: usize,
+    ) -> Result<f64, String>;
+
+    /// Build a kernel with bound `weights` (`co·ci·k·k` levels).
+    fn build(
+        &self,
+        layer: &ConvLayer,
+        weights: &[i64],
+        cfg: &EngineConfig,
+    ) -> Result<Box<dyn ConvKernel>, String>;
+}
+
+/// The engine-side `Conv2dSpec` for a layer under a config.
+fn conv_spec(layer: &ConvLayer, cfg: &EngineConfig) -> Conv2dSpec {
+    let (p, q) = cfg.layer_bits(layer.a_bits, layer.w_bits);
+    Conv2dSpec {
+        shape: layer.padded_shape(),
+        mult: cfg.mult,
+        p,
+        q,
+        signedness: cfg.signedness,
+    }
+}
+
+/// The software word lane the built engines actually select against:
+/// `Conv2dHiKonv`, `Im2RowConv`/`PackedGemm` and the conv1d engine all
+/// take the `i64` fast path iff [`DesignPoint::fits_lane`]`(64)`. The
+/// cost models key their wide-lane penalty to this engine truth (not to
+/// `EngineConfig::lane_bits`, which only constrains the reported
+/// lane-bound column), so predicted costs track what will really run.
+const ENGINE_LANE_BITS: u32 = 64;
+
+/// Cost multiplier for points forced onto the double-width (`i128`)
+/// fallback lane.
+const WIDE_LANE_PENALTY: f64 = 4.0;
+
+/// Cost-model charge for the per-layer scoped worker spawn/join of a
+/// pooled kernel, in scalar-op units (calibrated against the
+/// [`PAR_MIN_MACS`] serial cutoff: tiling a layer below the cutoff never
+/// wins).
+const POOL_SPAWN_COST: f64 = 2.0 * PAR_MIN_MACS as f64;
+
+/// The conventional 6-loop nest (Eq. 17).
+struct BaselineFactory;
+
+impl KernelFactory for BaselineFactory {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn describe(&self) -> &'static str {
+        "conventional 6-loop nest (Eq. 17)"
+    }
+
+    fn supports(&self, _layer: &ConvLayer, _cfg: &EngineConfig) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn predicted_ops_per_mult(
+        &self,
+        _layer: &ConvLayer,
+        _cfg: &EngineConfig,
+    ) -> Result<u64, String> {
+        Ok(1)
+    }
+
+    fn predicted_cost(
+        &self,
+        layer: &ConvLayer,
+        _cfg: &EngineConfig,
+        _threads: usize,
+    ) -> Result<f64, String> {
+        // One scalar multiply + one add per MAC.
+        Ok(2.0 * layer.macs() as f64)
+    }
+
+    fn build(
+        &self,
+        layer: &ConvLayer,
+        weights: &[i64],
+        _cfg: &EngineConfig,
+    ) -> Result<Box<dyn ConvKernel>, String> {
+        Ok(Box::new(BaselineKernel::new(
+            layer.padded_shape(),
+            weights.to_vec(),
+        )))
+    }
+}
+
+/// The Thm.-3 packed engine, serial (`hikonv`) or output-channel tiled
+/// across the pool (`hikonv-tiled`).
+struct HiKonvFactory {
+    tiled: bool,
+}
+
+impl HiKonvFactory {
+    /// The channel block + design point the engine will actually use
+    /// (honoring a config override, clamped to the layer's `ci`).
+    fn design(
+        &self,
+        layer: &ConvLayer,
+        cfg: &EngineConfig,
+    ) -> Result<(usize, DesignPoint), String> {
+        let spec = conv_spec(layer, cfg);
+        match cfg.channel_block {
+            Some(b) => {
+                let block = b.clamp(1, spec.shape.ci);
+                let m = (block * spec.shape.k) as u64;
+                let dp = solve(
+                    spec.mult,
+                    spec.p,
+                    spec.q,
+                    spec.signedness,
+                    AccumMode::Extended { m },
+                )
+                .map_err(|e| e.to_string())?;
+                Ok((block, dp))
+            }
+            None => planned_design(&spec),
+        }
+    }
+
+    /// Serial cost: the engine's own per-row wide-mul + segmentation
+    /// model ([`row_pass_cost`], the exact formula `choose_channel_block`
+    /// minimizes) scaled to the whole layer, with the wide (`i128`) lane
+    /// penalized.
+    fn serial_cost(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<f64, String> {
+        let spec = conv_spec(layer, cfg);
+        let (block, dp) = self.design(layer, cfg)?;
+        let sh = spec.shape;
+        let mut cost = (sh.co * sh.ho()) as f64 * row_pass_cost(&spec, block, &dp) as f64;
+        if !dp.fits_lane(ENGINE_LANE_BITS) {
+            cost *= WIDE_LANE_PENALTY;
+        }
+        Ok(cost)
+    }
+}
+
+impl KernelFactory for HiKonvFactory {
+    fn name(&self) -> &'static str {
+        if self.tiled {
+            "hikonv-tiled"
+        } else {
+            "hikonv"
+        }
+    }
+
+    fn describe(&self) -> &'static str {
+        if self.tiled {
+            "HiKonv packed engine, output channels tiled across the pool"
+        } else {
+            "HiKonv packed engine (Thms. 1-3), serial"
+        }
+    }
+
+    fn uses_pool(&self) -> bool {
+        self.tiled
+    }
+
+    fn supports(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<(), String> {
+        self.design(layer, cfg).map(|_| ())
+    }
+
+    fn predicted_ops_per_mult(
+        &self,
+        layer: &ConvLayer,
+        cfg: &EngineConfig,
+    ) -> Result<u64, String> {
+        Ok(self.design(layer, cfg)?.1.ops_per_mult())
+    }
+
+    fn predicted_cost(
+        &self,
+        layer: &ConvLayer,
+        cfg: &EngineConfig,
+        threads: usize,
+    ) -> Result<f64, String> {
+        let serial = self.serial_cost(layer, cfg)?;
+        if !self.tiled {
+            return Ok(serial);
+        }
+        // Tiling pays a per-layer worker spawn; below the serial cutoff
+        // (or without threads) it cannot win, so `auto` plans stay honest
+        // about which layers actually shard.
+        if threads > 1 && layer.macs() >= PAR_MIN_MACS {
+            Ok(serial / threads.min(layer.co) as f64 + POOL_SPAWN_COST)
+        } else {
+            Ok(serial + POOL_SPAWN_COST)
+        }
+    }
+
+    fn build(
+        &self,
+        layer: &ConvLayer,
+        weights: &[i64],
+        cfg: &EngineConfig,
+    ) -> Result<Box<dyn ConvKernel>, String> {
+        let spec = conv_spec(layer, cfg);
+        let eng = match cfg.channel_block {
+            Some(b) => Conv2dHiKonv::with_block(spec, weights, b.clamp(1, spec.shape.ci))?,
+            None => Conv2dHiKonv::new(spec, weights)?,
+        };
+        Ok(Box::new(HiKonvKernel::new(eng, self.tiled, cfg.tile_co)))
+    }
+}
+
+/// The im2row/pre-packed-GEMM lowering.
+struct Im2RowFactory;
+
+impl Im2RowFactory {
+    /// The single-block design point the GEMM kernel will actually use.
+    fn design(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<DesignPoint, String> {
+        let spec = conv_spec(layer, cfg);
+        solve(
+            spec.mult,
+            spec.p,
+            spec.q,
+            spec.signedness,
+            AccumMode::Single,
+        )
+        .map_err(|e| e.to_string())
+    }
+}
+
+impl KernelFactory for Im2RowFactory {
+    fn name(&self) -> &'static str {
+        "im2row"
+    }
+
+    fn describe(&self) -> &'static str {
+        "im2row lowering over the pre-packed GEMM (FC-shaped layers too)"
+    }
+
+    fn uses_pool(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<(), String> {
+        self.design(layer, cfg).map(|_| ())
+    }
+
+    fn predicted_ops_per_mult(
+        &self,
+        layer: &ConvLayer,
+        cfg: &EngineConfig,
+    ) -> Result<u64, String> {
+        Ok(self.design(layer, cfg)?.ops_per_mult())
+    }
+
+    fn predicted_cost(
+        &self,
+        layer: &ConvLayer,
+        cfg: &EngineConfig,
+        threads: usize,
+    ) -> Result<f64, String> {
+        let dp = self.design(layer, cfg)?;
+        let sh = conv_spec(layer, cfg).shape;
+        let rows = (sh.ho() * sh.wo()) as f64;
+        let k_dim = (sh.ci * sh.k * sh.k) as f64;
+        // The GEMM folds `min(N, K)` terms per wide multiplication; the
+        // per-output segment extraction shards with the column tiles,
+        // but the receptive-field gather/packing pass stays on the
+        // calling thread, so only the compute term divides by the pool.
+        let terms = dp.n.min(dp.k) as f64;
+        let muls = rows * sh.co as f64 * (k_dim / terms).ceil();
+        let mut compute = 2.0 * muls + rows * sh.co as f64;
+        if !dp.fits_lane(ENGINE_LANE_BITS) {
+            compute *= WIDE_LANE_PENALTY;
+        }
+        let packing = rows * k_dim;
+        if threads > 1 && layer.macs() >= PAR_MIN_MACS {
+            Ok(compute / threads.min(layer.co) as f64 + packing + POOL_SPAWN_COST)
+        } else {
+            Ok(compute + packing + POOL_SPAWN_COST)
+        }
+    }
+
+    fn build(
+        &self,
+        layer: &ConvLayer,
+        weights: &[i64],
+        cfg: &EngineConfig,
+    ) -> Result<Box<dyn ConvKernel>, String> {
+        let eng = Im2RowConv::new(conv_spec(layer, cfg), weights)?;
+        Ok(Box::new(Im2RowKernel::new(eng, cfg.tile_co)))
+    }
+}
+
+/// An ordered collection of kernel factories. Registration order is the
+/// deterministic tie-break of `auto` planning and the listing order of
+/// error messages/help text.
+pub struct KernelRegistry {
+    entries: Vec<Box<dyn KernelFactory>>,
+}
+
+impl KernelRegistry {
+    /// An empty registry (custom backends register into it).
+    pub fn empty() -> KernelRegistry {
+        KernelRegistry {
+            entries: Vec::new(),
+        }
+    }
+
+    /// The process-wide registry holding the built-in kernels
+    /// (`baseline`, `hikonv`, `hikonv-tiled`, `im2row`).
+    pub fn builtin() -> &'static KernelRegistry {
+        static BUILTIN: OnceLock<KernelRegistry> = OnceLock::new();
+        BUILTIN.get_or_init(|| {
+            let mut r = KernelRegistry::empty();
+            r.register(Box::new(BaselineFactory));
+            r.register(Box::new(HiKonvFactory { tiled: false }));
+            r.register(Box::new(HiKonvFactory { tiled: true }));
+            r.register(Box::new(Im2RowFactory));
+            r
+        })
+    }
+
+    /// Register a backend. Panics on a duplicate name — names are the
+    /// public CLI surface, silent shadowing would be a footgun.
+    pub fn register(&mut self, factory: Box<dyn KernelFactory>) {
+        assert!(
+            self.get(factory.name()).is_none(),
+            "duplicate kernel name '{}'",
+            factory.name()
+        );
+        self.entries.push(factory);
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|f| f.name()).collect()
+    }
+
+    /// All factories, in registration order.
+    pub fn entries(&self) -> impl Iterator<Item = &dyn KernelFactory> {
+        self.entries.iter().map(|b| b.as_ref())
+    }
+
+    /// Exact-name lookup.
+    pub fn get(&self, name: &str) -> Option<&dyn KernelFactory> {
+        self.entries
+            .iter()
+            .find(|f| f.name() == name)
+            .map(|b| b.as_ref())
+    }
+
+    /// Lookup that, on a miss, lists every registered name (plus the
+    /// `auto` planner spelling) and suggests the nearest match — the
+    /// error `--engine`/`--backend` typos get.
+    pub fn resolve(&self, name: &str) -> Result<&dyn KernelFactory, String> {
+        if let Some(f) = self.get(name) {
+            return Ok(f);
+        }
+        // `auto` is not a registry entry (it is the planner), but it is a
+        // valid spelling — list it and let typos of it be suggested too.
+        let mut names = self.names();
+        names.push("auto");
+        let mut msg = format!(
+            "unknown engine '{name}' (valid engines: {})",
+            names.join(", ")
+        );
+        if let Some(best) = nearest(name, &names) {
+            msg.push_str(&format!("; did you mean '{best}'?"));
+        }
+        Err(msg)
+    }
+}
+
+/// Nearest registered name within edit distance 3, if any.
+fn nearest<'a>(name: &str, names: &[&'a str]) -> Option<&'a str> {
+    names
+        .iter()
+        .map(|n| (edit_distance(name, n), *n))
+        .min_by_key(|&(d, _)| d)
+        .filter(|&(d, _)| d <= 3)
+        .map(|(_, n)| n)
+}
+
+/// Levenshtein edit distance (two-row DP).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference::conv2d_ref;
+    use crate::testing::assert_seq_eq;
+    use crate::util::rng::Rng;
+
+    fn layer() -> ConvLayer {
+        ConvLayer {
+            name: "t".into(),
+            ci: 4,
+            co: 6,
+            hi: 8,
+            wi: 12,
+            k: 3,
+            pad: 1,
+            pool_after: false,
+            a_bits: 4,
+            w_bits: 4,
+        }
+    }
+
+    #[test]
+    fn builtin_registry_has_the_four_kernels() {
+        let names = KernelRegistry::builtin().names();
+        assert_eq!(names, vec!["baseline", "hikonv", "hikonv-tiled", "im2row"]);
+    }
+
+    #[test]
+    fn resolve_miss_lists_names_and_suggests() {
+        let err = KernelRegistry::builtin().resolve("hikov").unwrap_err();
+        assert!(err.contains("baseline"), "{err}");
+        assert!(err.contains("im2row"), "{err}");
+        assert!(err.contains("did you mean 'hikonv'"), "{err}");
+        // `auto` is a valid spelling even though it is not a registry
+        // entry: it is listed and typos of it are suggested.
+        let err = KernelRegistry::builtin().resolve("aut").unwrap_err();
+        assert!(err.contains("auto"), "{err}");
+        assert!(err.contains("did you mean 'auto'"), "{err}");
+        // Far-off names get the list but no bogus suggestion.
+        let err = KernelRegistry::builtin().resolve("xyzzy-quux").unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("hikonv", "hikonv"), 0);
+        assert_eq!(edit_distance("hikov", "hikonv"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("im2r0w", "im2row"), 1);
+    }
+
+    #[test]
+    fn every_builtin_factory_builds_an_exact_kernel() {
+        let l = layer();
+        let cfg = EngineConfig::auto();
+        let mut rng = Rng::new(7);
+        let weights = rng.quant_signed_vec(4, l.weight_len());
+        let sh = l.padded_shape();
+        let input = rng.quant_unsigned_vec(4, sh.input_len());
+        let want = conv2d_ref(&input, &weights, sh);
+        for f in KernelRegistry::builtin().entries() {
+            f.supports(&l, &cfg).unwrap();
+            assert!(f.predicted_ops_per_mult(&l, &cfg).unwrap() >= 1);
+            assert!(f.predicted_cost(&l, &cfg, 2).unwrap() > 0.0);
+            let kernel = f.build(&l, &weights, &cfg).unwrap();
+            assert_eq!(kernel.name(), f.name());
+            assert_seq_eq(&kernel.conv(&input, None), &want).unwrap();
+        }
+    }
+
+    #[test]
+    fn packed_kernels_score_above_the_baseline_at_4bit() {
+        let l = layer();
+        let cfg = EngineConfig::auto();
+        let reg = KernelRegistry::builtin();
+        let base = reg.get("baseline").unwrap();
+        for name in ["hikonv", "im2row"] {
+            let f = reg.get(name).unwrap();
+            assert!(
+                f.predicted_ops_per_mult(&l, &cfg).unwrap()
+                    > base.predicted_ops_per_mult(&l, &cfg).unwrap(),
+                "{name}"
+            );
+        }
+        // The serial packed kernel must also out-predict the baseline on
+        // cost (pooled kernels carry a spawn charge that dominates on a
+        // layer this small — that is exactly why `auto` keeps them off
+        // sub-cutoff layers).
+        let hikonv = reg.get("hikonv").unwrap();
+        assert!(
+            hikonv.predicted_cost(&l, &cfg, 1).unwrap()
+                < base.predicted_cost(&l, &cfg, 1).unwrap()
+        );
+    }
+
+    #[test]
+    fn custom_backends_register_and_resolve() {
+        struct EchoFactory;
+        impl KernelFactory for EchoFactory {
+            fn name(&self) -> &'static str {
+                "echo"
+            }
+            fn describe(&self) -> &'static str {
+                "test stub"
+            }
+            fn supports(&self, _l: &ConvLayer, _c: &EngineConfig) -> Result<(), String> {
+                Err("stub".into())
+            }
+            fn predicted_ops_per_mult(
+                &self,
+                _l: &ConvLayer,
+                _c: &EngineConfig,
+            ) -> Result<u64, String> {
+                Ok(1)
+            }
+            fn predicted_cost(
+                &self,
+                _l: &ConvLayer,
+                _c: &EngineConfig,
+                _t: usize,
+            ) -> Result<f64, String> {
+                Ok(1.0)
+            }
+            fn build(
+                &self,
+                _l: &ConvLayer,
+                _w: &[i64],
+                _c: &EngineConfig,
+            ) -> Result<Box<dyn ConvKernel>, String> {
+                Err("stub".into())
+            }
+        }
+        let mut reg = KernelRegistry::empty();
+        reg.register(Box::new(EchoFactory));
+        assert!(reg.resolve("echo").is_ok());
+        assert_eq!(reg.names(), vec!["echo"]);
+    }
+
+    #[test]
+    fn block_override_is_clamped_and_exact() {
+        let l = layer();
+        let cfg = EngineConfig::named("hikonv").with_channel_block(999);
+        let mut rng = Rng::new(9);
+        let weights = rng.quant_signed_vec(4, l.weight_len());
+        let sh = l.padded_shape();
+        let input = rng.quant_unsigned_vec(4, sh.input_len());
+        let f = KernelRegistry::builtin().get("hikonv").unwrap();
+        let kernel = f.build(&l, &weights, &cfg).unwrap();
+        assert_seq_eq(&kernel.conv(&input, None), &conv2d_ref(&input, &weights, sh)).unwrap();
+    }
+}

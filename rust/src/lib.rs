@@ -24,8 +24,11 @@
 //! * [`dsp`] — the FPGA substrate: a bit-accurate DSP48E2 functional model,
 //!   LUT resource model and the UltraNet performance model (Tables I & II).
 //! * [`models`] — UltraNet (DAC-SDC 2020 champion) layer table and CPU runner.
-//! * [`engine`] — pluggable convolution-engine abstraction, including the
-//!   parallel tiled engine that shards output channels across cores.
+//! * [`engine`] — unified engine configuration ([`engine::EngineConfig`]
+//!   builder + textual grammar), the object-safe [`engine::ConvKernel`]
+//!   trait and [`engine::KernelRegistry`] backends plug into, and the
+//!   theory-driven per-layer planner ([`engine::EnginePlan`]), plus the
+//!   tiling entry points that shard output channels across cores.
 //! * [`exec`] — self-built chunked thread pool (deterministic `par_chunks`
 //!   style API; rayon is unavailable offline).
 //! * [`runtime`] — PJRT client: loads AOT-compiled HLO artifacts from the

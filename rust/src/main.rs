@@ -6,27 +6,38 @@
 //! hikonv solve   --bit-a 27 --bit-b 18 --p 4 --q 4 [--signed] [--m 1]
 //! hikonv dse     --bit-a 32 --bit-b 32            design-space exploration
 //! hikonv fig5 | fig6a | fig6b | fig6c | table1 | table2
-//! hikonv serve   --backend hikonv|hikonv-tiled|im2row|baseline|pjrt
+//! hikonv plan    --engine auto [--threads N] [--full-model] [--probe]
+//!                [--dse] [--json]       print the per-layer engine plan
+//! hikonv serve   --backend <engine-spec>|pjrt
 //!                --frames 64 [--fps-cap 401] [--workers N] [--threads N]
 //!                [--batch N] [--linger-ms MS] [--queue-depth N]
-//! hikonv run-model --engine hikonv|hikonv-tiled|im2row|baseline
+//! hikonv run-model --engine <engine-spec>
 //!                [--threads N] [--batch N]    one UltraNet-tiny inference
 //! ```
 //!
-//! `--threads` sets the intra-layer tiling width of the `hikonv-tiled`
-//! and `im2row` engines (0 = auto from the machine / `HIKONV_THREADS`);
-//! `--workers` sets the frame-level worker pool of `serve`; `--batch` /
-//! `--linger-ms` are the dynamic batcher's knobs (batches are executed
-//! as batches by the fused runner). They all compose.
+//! `<engine-spec>` is the unified engine-configuration grammar
+//! (`hikonv::engine::EngineConfig`): `auto` or a registered kernel name,
+//! optionally `@AxB` for the multiplier and `:key=value,...` parameters —
+//! e.g. `auto`, `hikonv-tiled:threads=4`, `im2row:tile-co=8`,
+//! `hikonv@27x18:p=4,q=4,sign=u`. Unknown names list the registered
+//! kernels and suggest the nearest match.
+//!
+//! `--threads` sets the intra-layer tiling width of pooled kernels
+//! (0 = auto from the machine / `HIKONV_THREADS`) and overrides the
+//! spec's `threads=`; `--workers` sets the frame-level worker pool of
+//! `serve`; `--batch` / `--linger-ms` are the dynamic batcher's knobs
+//! (batches are executed as batches by the fused runner). They all
+//! compose.
 
 use hikonv::bench::BenchConfig;
 use hikonv::cli::{render_help, Args, OptSpec};
 use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
 use hikonv::coordinator::ParallelCpuBackend;
 use hikonv::coordinator::{serve, ServeConfig};
+use hikonv::engine::{EngineConfig, EnginePlan, KernelRegistry};
 use hikonv::experiments::{fig5, fig6, table1, table2};
-use hikonv::models::{random_weights, ultranet, CpuRunner, EngineKind};
 use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_weights, ultranet, CpuRunner};
 use hikonv::runtime::{artifacts, Runtime};
 use hikonv::theory::{
     explore, pareto_points, solve, AccumMode, Multiplier, Signedness,
@@ -88,10 +99,31 @@ fn run(args: &Args) -> Result<(), String> {
             print!("{}", table2::run().render());
             Ok(())
         }
+        "plan" => cmd_plan(args),
         "serve" => cmd_serve(args),
         "run-model" => cmd_run_model(args),
         other => Err(format!("unknown subcommand '{other}'\n\n{}", help())),
     }
+}
+
+/// Parse an engine spec from `--<key>` through the unified grammar,
+/// validate named kernels against the registry (so typos fail with the
+/// full name list + nearest-match suggestion), and let an explicit
+/// `--threads`/`--probe` flag override the spec.
+fn parse_engine_spec(args: &Args, key: &str, default: &str) -> Result<EngineConfig, String> {
+    let spec = args.get_or(key, default);
+    let mut config: EngineConfig = spec.parse()?;
+    if let Some(name) = config.kernel_name() {
+        KernelRegistry::builtin().resolve(name)?;
+    }
+    let threads = args.get_usize("threads", 0)?;
+    if threads != 0 {
+        config = config.with_threads(threads);
+    }
+    if args.has("probe") {
+        config = config.with_probe(true);
+    }
+    Ok(config)
 }
 
 fn parse_signedness(args: &Args) -> Signedness {
@@ -186,45 +218,35 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     };
     let full = args.has("full-model");
     let workers = args.get_usize("workers", 1)?;
-    let threads = args.get_usize("threads", 0)?;
     let model = if full { ultranet() } else { ultranet_tiny() };
-    type BackendResult = Result<Box<dyn hikonv::coordinator::InferBackend>, String>;
-    let cpu_backend = |kind: EngineKind| -> BackendResult {
+    let backend: Box<dyn hikonv::coordinator::InferBackend> = if backend_name == "pjrt" {
+        let rt = Runtime::cpu().map_err(|e| e.to_string())?;
+        let name = if full {
+            artifacts::ULTRANET
+        } else {
+            artifacts::ULTRANET_TINY
+        };
+        let loaded = rt.load_artifact(name).map_err(|e| e.to_string())?;
+        let out_dims = model.output_dims();
+        Box::new(PjrtBackend::new(loaded, model.input, out_dims))
+    } else {
+        let engine = parse_engine_spec(args, "backend", "hikonv")
+            .map_err(|e| format!("{e} (or 'pjrt' for the whole-model AOT backend)"))?;
         let weights = random_weights(&model, config.seed);
         if workers > 1 {
-            Ok(Box::new(ParallelCpuBackend::new(
+            Box::new(ParallelCpuBackend::new(
                 model.clone(),
                 weights,
-                kind,
+                engine,
                 workers,
-            )?))
+            )?)
         } else {
-            Ok(Box::new(CpuBackend::new(CpuRunner::new(
+            Box::new(CpuBackend::new(CpuRunner::new(
                 model.clone(),
                 weights,
-                kind,
-            )?)))
+                engine,
+            )?))
         }
-    };
-    let backend: Box<dyn hikonv::coordinator::InferBackend> = match backend_name.as_str() {
-        "baseline" => cpu_backend(EngineKind::Baseline)?,
-        "hikonv" => cpu_backend(EngineKind::HiKonv(Multiplier::CPU32))?,
-        "hikonv-tiled" => {
-            cpu_backend(EngineKind::HiKonvTiled(Multiplier::CPU32, threads))?
-        }
-        "im2row" => cpu_backend(EngineKind::Im2Row(Multiplier::CPU32, threads))?,
-        "pjrt" => {
-            let rt = Runtime::cpu().map_err(|e| e.to_string())?;
-            let name = if full {
-                artifacts::ULTRANET
-            } else {
-                artifacts::ULTRANET_TINY
-            };
-            let loaded = rt.load_artifact(name).map_err(|e| e.to_string())?;
-            let out_dims = model.output_dims();
-            Box::new(PjrtBackend::new(loaded, model.input, out_dims))
-        }
-        other => return Err(format!("unknown backend '{other}'")),
     };
     let report = serve(backend, &config);
     print!("{}", report.render());
@@ -235,14 +257,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_run_model(args: &Args) -> Result<(), String> {
-    let threads = args.get_usize("threads", 0)?;
-    let engine = match args.get_or("engine", "hikonv").as_str() {
-        "baseline" => EngineKind::Baseline,
-        "hikonv" => EngineKind::HiKonv(Multiplier::CPU32),
-        "hikonv-tiled" => EngineKind::HiKonvTiled(Multiplier::CPU32, threads),
-        "im2row" => EngineKind::Im2Row(Multiplier::CPU32, threads),
-        other => return Err(format!("unknown engine '{other}'")),
-    };
+    let engine = parse_engine_spec(args, "engine", "hikonv")?;
     let model = if args.has("full-model") {
         ultranet()
     } else {
@@ -250,6 +265,7 @@ fn cmd_run_model(args: &Args) -> Result<(), String> {
     };
     let weights = random_weights(&model, args.get_u64("seed", 7)?);
     let runner = CpuRunner::new(model.clone(), weights, engine)?;
+    let label = runner.label();
     let (c, h, w) = model.input;
     let mut rng = hikonv::util::rng::Rng::new(1);
     let batch = args.get_usize("batch", 1)?.max(1);
@@ -263,9 +279,8 @@ fn cmd_run_model(args: &Args) -> Result<(), String> {
         let (outs, dt) = hikonv::util::timer::time(|| runner.infer_batch(&refs));
         let cell = runner.decode(&outs[0]);
         println!(
-            "{} ({:?}): batch {} in {:.2} ms ({:.2} ms/frame, {:.1} fps), first cell {:?}",
+            "{} ({label}): batch {} in {:.2} ms ({:.2} ms/frame, {:.1} fps), first cell {:?}",
             model.name,
-            engine,
             batch,
             dt * 1e3,
             dt * 1e3 / batch as f64,
@@ -278,21 +293,84 @@ fn cmd_run_model(args: &Args) -> Result<(), String> {
     let (out, dt) = hikonv::util::timer::time(|| runner.infer(&frame));
     let cell = runner.decode(&out);
     println!(
-        "{} ({:?}): {:.2} ms/frame, detection cell {:?}",
+        "{} ({label}): {:.2} ms/frame, detection cell {:?}",
         model.name,
-        engine,
         dt * 1e3,
         cell
     );
     Ok(())
 }
 
+/// Print the per-layer engine plan (kernel choice + predicted ops/mult
+/// from the theory solver) for a model under an engine spec.
+fn cmd_plan(args: &Args) -> Result<(), String> {
+    let engine = parse_engine_spec(args, "engine", "auto")?;
+    let model = if args.has("full-model") {
+        ultranet()
+    } else {
+        ultranet_tiny()
+    };
+    let plan = EnginePlan::plan(&model, &engine)?;
+    print!("{}", plan.render());
+    if args.has("dse") {
+        // Bitwidth context: what a model/hardware co-design could pick on
+        // this multiplier (§III-C).
+        let points = explore(engine.mult, 8, engine.signedness, AccumMode::Single);
+        println!(
+            "pareto frontier for {} (precision p*q vs ops/mult):",
+            engine.mult
+        );
+        for f in pareto_points(&points) {
+            println!(
+                "  p={} q={} -> {} ops/mult (S={}, N={}, K={})",
+                f.dp.p, f.dp.q, f.ops, f.dp.s, f.dp.n, f.dp.k
+            );
+        }
+    }
+    if args.has("json") {
+        println!("{}", plan.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
 fn help() -> String {
     let none: &[OptSpec] = &[];
+    let plan_opts: &[OptSpec] = &[
+        OptSpec {
+            name: "engine",
+            help: "engine spec: auto | <kernel>[@AxB][:k=v,...]",
+            default: Some("auto"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "threads",
+            help: "intra-layer tiling threads (0 = auto)",
+            default: Some("0"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "probe",
+            help: "time each candidate kernel (selection not deterministic)",
+            default: None,
+            is_switch: true,
+        },
+        OptSpec {
+            name: "dse",
+            help: "also print the bitwidth pareto frontier (Fig. 5)",
+            default: None,
+            is_switch: true,
+        },
+        OptSpec {
+            name: "json",
+            help: "also print the plan as JSON (BENCH_plan.json schema)",
+            default: None,
+            is_switch: true,
+        },
+    ];
     let serve_opts: &[OptSpec] = &[
         OptSpec {
             name: "backend",
-            help: "hikonv | hikonv-tiled | im2row | baseline | pjrt",
+            help: "engine spec (auto | <kernel>[@AxB][:k=v,...]) or pjrt",
             default: Some("hikonv"),
             is_switch: false,
         },
@@ -342,7 +420,7 @@ fn help() -> String {
     let run_model_opts: &[OptSpec] = &[
         OptSpec {
             name: "engine",
-            help: "hikonv | hikonv-tiled | im2row | baseline",
+            help: "engine spec: auto | <kernel>[@AxB][:k=v,...]",
             default: Some("hikonv"),
             is_switch: false,
         },
@@ -370,6 +448,7 @@ fn help() -> String {
             ("fig6c", "speedup vs bitwidth sweep", none),
             ("table1", "BNN resource comparison (paper Table I)", none),
             ("table2", "UltraNet fps / DSP efficiency (paper Table II)", none),
+            ("plan", "print the per-layer engine plan (theory-driven)", plan_opts),
             ("serve", "run the streaming serving pipeline", serve_opts),
             ("run-model", "single UltraNet inference on CPU engines", run_model_opts),
         ],

@@ -1,6 +1,7 @@
 //! Quantized model zoo: UltraNet (the DAC-SDC 2020 champion the paper
 //! evaluates end-to-end) plus the layer descriptors and the CPU runner
-//! that executes it over pluggable convolution engines.
+//! that executes it over registry-resolved convolution kernels, as
+//! directed by an [`EnginePlan`](crate::engine::EnginePlan).
 
 pub mod layer;
 pub mod runner;

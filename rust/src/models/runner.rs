@@ -1,43 +1,45 @@
 //! CPU inference runner: executes a quantized conv model over pluggable
-//! convolution engines (baseline nested loops, HiKonv packed engines —
-//! serial or tiled across a thread pool — and the im2row lowering).
+//! convolution kernels resolved through the engine registry — per layer,
+//! as directed by an [`EnginePlan`] (either one named kernel everywhere
+//! or the theory-driven `auto` per-layer selection).
 //!
 //! # Fused pipeline
 //!
 //! The seed implementation paid four full-tensor allocations/copies per
 //! layer (`pad2d` copy-in, a fresh accumulator `Vec`, a `requantize`
-//! pass, a `maxpool2` pass). [`CpuRunner::infer`] now runs a *fused*
-//! pipeline instead: a per-runner [`Arena`] holds every buffer a frame
+//! pass, a `maxpool2` pass). [`CpuRunner::infer`] runs a *fused*
+//! pipeline instead: a per-runner arena holds every buffer a frame
 //! needs — one padded activation buffer per layer (borders zeroed once,
-//! never touched again), one shared accumulator, and per-layer packed
-//! word buffers — all sized once from the [`ModelSpec`] and reused across
-//! frames. Each layer convolves straight out of its padded buffer into
-//! the shared accumulator (via the engines' write-into APIs), and a fused
-//! epilogue ([`fused_epilogue_into`]) applies ReLU + requant-shift +
-//! optional 2×2 max-pool while writing directly into the interior of the
-//! *next* layer's padded buffer. Steady state, serial engines perform
-//! zero heap allocations per [`infer_into`](CpuRunner::infer_into) call
-//! (asserted by `tests/fused_alloc.rs`).
+//! never touched again), one shared accumulator, and one opaque
+//! [`KernelScratch`] per layer (each kernel's packed words and gather /
+//! segmentation buffers) — all sized once and reused across frames. Each
+//! layer convolves straight out of its padded buffer into the shared
+//! accumulator (via [`ConvKernel::conv_into`]), and a fused epilogue
+//! ([`fused_epilogue_into`]) applies ReLU + requant-shift + optional 2×2
+//! max-pool while writing directly into the interior of the *next*
+//! layer's padded buffer. Steady state, serial kernels perform zero heap
+//! allocations per [`infer_into`](CpuRunner::infer_into) call (asserted
+//! by `tests/fused_alloc.rs`).
 //!
 //! The seed path is retained as [`CpuRunner::infer_unfused`]: it is the
 //! bit-exactness oracle for the fused pipeline and the baseline of
 //! `benches/model.rs`.
 
 use super::layer::{fused_epilogue_into, maxpool2, pad2d, pad2d_into, ModelSpec};
-use crate::conv::conv2d::{Conv2dHiKonv, Conv2dSpec, PackedInput};
-use crate::conv::gemm::PackedLhs;
-use crate::conv::im2row::Im2RowConv;
-use crate::conv::reference::{conv2d_ref, conv2d_ref_into};
 use crate::engine::{
-    conv2d_tiled, conv2d_tiled_into, im2row_tiled, im2row_tiled_into, PAR_MIN_MACS,
+    ConvKernel, EngineConfig, EnginePlan, KernelChoice, KernelRegistry, KernelScratch,
 };
 use crate::exec::ThreadPool;
 use crate::quant::{QTensor, Shape};
-use crate::theory::{Multiplier, Signedness};
+use crate::theory::Multiplier;
 use crate::util::rng::Rng;
 use std::sync::{Arc, Mutex};
 
-/// Which convolution engine executes the layers.
+/// Legacy engine selector, retained **only** as a compatibility shim so
+/// the fused-pipeline oracle tests keep compiling: every variant converts
+/// losslessly into an [`EngineConfig`], which is the real API. New code
+/// (and the CLI/serve paths) should build an `EngineConfig` directly.
+#[doc(hidden)]
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// Conventional 6-loop nest (Eq. 17) — the Fig. 6 baseline.
@@ -47,24 +49,23 @@ pub enum EngineKind {
     /// HiKonv packed engine with output channels tiled across a thread
     /// pool of the given size (0 = auto-size from the machine).
     HiKonvTiled(Multiplier, usize),
-    /// im2row lowering over the pre-packed GEMM kernel, with output
-    /// channels tiled across a thread pool of the given size (0 =
-    /// auto-size from the machine) — covers FC-shaped layers too.
+    /// im2row lowering over the pre-packed GEMM kernel (0 = auto-size).
     Im2Row(Multiplier, usize),
 }
 
-/// The per-layer engine bound at runner construction.
-enum LayerEngine {
-    Baseline,
-    HiKonv(Conv2dHiKonv),
-    Im2Row(Im2RowConv),
-}
-
-/// Per-layer packed-activation buffer in the engine's word lane.
-enum PackedBuf {
-    None,
-    HiKonv(PackedInput),
-    Im2Row(PackedLhs),
+impl From<EngineKind> for EngineConfig {
+    fn from(kind: EngineKind) -> EngineConfig {
+        match kind {
+            EngineKind::Baseline => EngineConfig::named("baseline"),
+            EngineKind::HiKonv(m) => EngineConfig::named("hikonv").with_multiplier(m),
+            EngineKind::HiKonvTiled(m, threads) => EngineConfig::named("hikonv-tiled")
+                .with_multiplier(m)
+                .with_threads(threads),
+            EngineKind::Im2Row(m, threads) => EngineConfig::named("im2row")
+                .with_multiplier(m)
+                .with_threads(threads),
+        }
+    }
 }
 
 /// Per-inference scratch: every buffer one in-flight frame needs, sized
@@ -78,14 +79,9 @@ struct Arena {
     padded: Vec<Vec<i64>>,
     /// Shared conv accumulator, sized for the largest layer output.
     acc: Vec<i64>,
-    /// Per-layer packed activations.
-    packed: Vec<PackedBuf>,
-    /// Segmentation scratch for the Thm.-3 serial core (largest
-    /// `wi + k - 1` over the padded layer shapes).
-    seg: Vec<i64>,
-    /// Receptive-field gather scratch for the im2row path (largest
-    /// `ci·k²`).
-    row: Vec<i64>,
+    /// One opaque kernel scratch per layer (packed words, gather and
+    /// segmentation buffers — whatever that layer's kernel needs).
+    scratch: Vec<KernelScratch>,
 }
 
 /// Per-layer weights (+ requantization shifts calibrated at load).
@@ -123,17 +119,15 @@ pub fn random_weights(model: &ModelSpec, seed: u64) -> ModelWeights {
     }
 }
 
-/// The runner: owns prebuilt per-layer engines, the thread pool the tiled
-/// kinds shard across, and a free-list of reusable inference arenas.
+/// The runner: owns the per-layer kernels its [`EnginePlan`] resolved,
+/// the thread pool pooled kernels shard across, and a free-list of
+/// reusable inference arenas.
 pub struct CpuRunner {
     model: ModelSpec,
     weights: ModelWeights,
-    kind: EngineKind,
-    engines: Vec<LayerEngine>,
+    plan: EnginePlan,
+    kernels: Vec<Box<dyn ConvKernel>>,
     pool: Option<Arc<ThreadPool>>,
-    /// Raw i64 weights for the fused baseline path (populated for
-    /// [`EngineKind::Baseline`] only; the packed engines carry their own).
-    ref_weights: Vec<Vec<i64>>,
     /// Arena free-list: `infer` checks one out per frame and returns it,
     /// so concurrent frames (e.g. [`infer_batch`](Self::infer_batch)
     /// workers) each get their own and steady state allocates nothing.
@@ -141,53 +135,63 @@ pub struct CpuRunner {
 }
 
 impl CpuRunner {
+    /// Build a runner from any engine configuration (or a legacy
+    /// [`EngineKind`], which converts into one): plans the model first,
+    /// then binds one kernel per layer from the registry.
     pub fn new(
         model: ModelSpec,
         weights: ModelWeights,
-        kind: EngineKind,
+        config: impl Into<EngineConfig>,
+    ) -> Result<CpuRunner, String> {
+        let config = config.into();
+        let plan = EnginePlan::plan(&model, &config)?;
+        Self::with_plan(model, weights, plan)
+    }
+
+    /// Build a runner executing an already-resolved plan (e.g. one the
+    /// `plan` subcommand printed, or a plan built against a custom
+    /// registry and re-validated here against the built-in one).
+    pub fn with_plan(
+        model: ModelSpec,
+        weights: ModelWeights,
+        plan: EnginePlan,
     ) -> Result<CpuRunner, String> {
         model.validate()?;
-        let mut engines = Vec::with_capacity(model.layers.len());
-        for (l, w) in model.layers.iter().zip(&weights.tensors) {
-            let spec = Conv2dSpec {
-                shape: l.padded_shape(),
-                mult: match kind {
-                    EngineKind::Baseline => Multiplier::CPU32, // unused
-                    EngineKind::HiKonv(m)
-                    | EngineKind::HiKonvTiled(m, _)
-                    | EngineKind::Im2Row(m, _) => m,
-                },
-                p: l.a_bits,
-                q: l.w_bits,
-                signedness: Signedness::UnsignedBySigned,
-            };
-            engines.push(match kind {
-                EngineKind::Baseline => LayerEngine::Baseline,
-                EngineKind::HiKonv(_) | EngineKind::HiKonvTiled(..) => {
-                    LayerEngine::HiKonv(Conv2dHiKonv::new(spec, &w.to_i64())?)
-                }
-                EngineKind::Im2Row(..) => LayerEngine::Im2Row(Im2RowConv::new(spec, &w.to_i64())?),
-            });
+        if plan.layers.len() != model.layers.len() {
+            return Err(format!(
+                "plan has {} layers, model has {}",
+                plan.layers.len(),
+                model.layers.len()
+            ));
         }
-        let pool = match kind {
-            EngineKind::HiKonvTiled(_, threads) | EngineKind::Im2Row(_, threads) => {
-                Some(Arc::new(ThreadPool::auto_sized(threads)))
-            }
-            _ => None,
-        };
-        let ref_weights = match kind {
-            EngineKind::Baseline => weights.tensors.iter().map(|t| t.to_i64()).collect(),
-            _ => Vec::new(),
+        let registry = KernelRegistry::builtin();
+        let mut kernels: Vec<Box<dyn ConvKernel>> = Vec::with_capacity(model.layers.len());
+        let mut wants_pool = false;
+        for ((l, w), lp) in model.layers.iter().zip(&weights.tensors).zip(&plan.layers) {
+            let factory = registry.resolve(&lp.kernel)?;
+            wants_pool |= factory.uses_pool();
+            kernels.push(factory.build(l, &w.to_i64(), &plan.config)?);
+        }
+        // An `auto` plan owns the whole execution strategy, so it keeps a
+        // pool even when every chosen kernel is serial: frame-level
+        // parallelism (`infer_batch`) must not silently degrade to a
+        // serial loop just because intra-layer tiling didn't pay on any
+        // layer. Named serial configs keep the legacy no-pool behavior
+        // (scoped workers make an idle pool cost nothing either way).
+        wants_pool |= plan.config.kernel == KernelChoice::Auto && plan.threads > 1;
+        let pool = if wants_pool {
+            Some(Arc::new(ThreadPool::new(plan.threads)))
+        } else {
+            None
         };
         // Calibrate requant shifts with a mid-gray frame so all engines
         // produce identical activation flows.
         let mut runner = CpuRunner {
             model,
             weights,
-            kind,
-            engines,
+            plan,
+            kernels,
             pool,
-            ref_weights,
             arenas: Mutex::new(Vec::new()),
         };
         runner.calibrate();
@@ -202,8 +206,20 @@ impl CpuRunner {
         &self.model
     }
 
-    pub fn kind(&self) -> EngineKind {
-        self.kind
+    /// The resolved per-layer plan this runner executes.
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    /// The configuration the plan was derived from.
+    pub fn config(&self) -> &EngineConfig {
+        &self.plan.config
+    }
+
+    /// Compact label for reports (`hikonv-tiled:threads=4`,
+    /// `auto[hikonv-tiled*3+hikonv*2]`, ...).
+    pub fn label(&self) -> String {
+        self.plan.summary()
     }
 
     /// Length of the raw head output (`co·ho·wo` of the final layer,
@@ -216,30 +232,21 @@ impl CpuRunner {
     }
 
     /// Size a fresh arena from the model spec: padded buffers are zeroed
-    /// here once; packed buffers are built empty and filled per frame.
+    /// here once; kernel scratches are built empty and filled per frame.
     fn new_arena(&self) -> Arena {
         let mut padded = Vec::with_capacity(self.model.layers.len());
-        let mut packed = Vec::with_capacity(self.model.layers.len());
-        let (mut acc_len, mut seg_len, mut row_len) = (1usize, 1usize, 1usize);
-        for (l, eng) in self.model.layers.iter().zip(&self.engines) {
-            let sh = l.padded_shape();
-            padded.push(vec![0i64; sh.input_len()]);
+        let mut scratch = Vec::with_capacity(self.model.layers.len());
+        let mut acc_len = 1usize;
+        for (l, kernel) in self.model.layers.iter().zip(&self.kernels) {
+            padded.push(vec![0i64; l.padded_shape().input_len()]);
             let (ho, wo) = l.conv_out();
             acc_len = acc_len.max(l.co * ho * wo);
-            seg_len = seg_len.max(sh.wi + sh.k - 1);
-            row_len = row_len.max(sh.ci * sh.k * sh.k);
-            packed.push(match eng {
-                LayerEngine::Baseline => PackedBuf::None,
-                LayerEngine::HiKonv(_) => PackedBuf::HiKonv(PackedInput::empty()),
-                LayerEngine::Im2Row(e) => PackedBuf::Im2Row(e.gemm().lhs_builder(ho * wo)),
-            });
+            scratch.push(kernel.new_scratch());
         }
         Arena {
             padded,
             acc: vec![0i64; acc_len],
-            packed,
-            seg: vec![0i64; seg_len],
-            row: vec![0i64; row_len],
+            scratch,
         }
     }
 
@@ -284,19 +291,7 @@ impl CpuRunner {
     fn run_layer_raw(&self, idx: usize, act: &[i64]) -> Vec<i64> {
         let l = &self.model.layers[idx];
         let padded = pad2d(act, l.ci, l.hi, l.wi, l.pad);
-        match &self.engines[idx] {
-            LayerEngine::Baseline => {
-                conv2d_ref(&padded, &self.weights.tensors[idx].to_i64(), l.padded_shape())
-            }
-            LayerEngine::HiKonv(eng) => match &self.pool {
-                Some(pool) => conv2d_tiled(eng, pool, &padded),
-                None => eng.conv(&padded),
-            },
-            LayerEngine::Im2Row(eng) => match &self.pool {
-                Some(pool) => im2row_tiled(eng, pool, &padded),
-                None => eng.conv(&padded),
-            },
-        }
+        self.kernels[idx].conv(&padded, self.pool.as_deref())
     }
 
     /// Full forward pass on a quantized frame (`[c][h][w]` 4-bit levels).
@@ -313,7 +308,7 @@ impl CpuRunner {
 
     /// [`infer`](Self::infer) into a caller-provided head buffer
     /// ([`head_len`](Self::head_len) values). With a warm arena and a
-    /// serial engine this performs **zero heap allocations** — the
+    /// serial kernel plan this performs **zero heap allocations** — the
     /// steady-state serving contract (`tests/fused_alloc.rs` asserts it
     /// with a counting allocator).
     pub fn infer_into(&self, frame: &[i64], out: &mut [i64]) {
@@ -344,39 +339,7 @@ impl CpuRunner {
         for (idx, l) in self.model.layers.iter().enumerate() {
             let (ho, wo) = l.conv_out();
             let acc = &mut arena.acc[..l.co * ho * wo];
-            match (&self.engines[idx], &mut arena.packed[idx]) {
-                (LayerEngine::Baseline, _) => {
-                    conv2d_ref_into(
-                        &arena.padded[idx],
-                        &self.ref_weights[idx],
-                        l.padded_shape(),
-                        acc,
-                    );
-                }
-                (LayerEngine::HiKonv(eng), PackedBuf::HiKonv(packed)) => {
-                    eng.pack_input_into(&arena.padded[idx], packed);
-                    match pool {
-                        // The cutoff is applied here (not inside
-                        // conv2d_tiled_into) so sub-cutoff layers use the
-                        // arena's seg scratch instead of allocating one.
-                        Some(p) if p.threads() > 1 && eng.shape().macs() >= PAR_MIN_MACS => {
-                            conv2d_tiled_into(eng, p, packed, acc)
-                        }
-                        _ => {
-                            acc.iter_mut().for_each(|v| *v = 0);
-                            eng.conv_co_range_with(packed, 0, l.co, acc, &mut arena.seg);
-                        }
-                    }
-                }
-                (LayerEngine::Im2Row(eng), PackedBuf::Im2Row(lhs)) => {
-                    eng.pack_pixels_into(&arena.padded[idx], lhs, &mut arena.row);
-                    match pool {
-                        Some(p) if p.threads() > 1 => im2row_tiled_into(eng, p, lhs, acc),
-                        _ => eng.conv_cols(lhs, 0, l.co, acc),
-                    }
-                }
-                _ => unreachable!("arena packed buffer mismatches engine kind"),
-            }
+            self.kernels[idx].conv_into(&arena.padded[idx], acc, &mut arena.scratch[idx], pool);
             if idx == last {
                 out.copy_from_slice(acc);
                 return;
@@ -401,7 +364,7 @@ impl CpuRunner {
     /// tiling loses to per-layer spawn overhead, while frame-level
     /// parallelism amortizes one spawn over an entire forward pass. Each
     /// worker checks out its own arena, and every frame's layers run
-    /// serially inside its worker. Engines without a pool (or
+    /// serially inside its worker. Plans without a pooled kernel (or
     /// single-frame batches) fall back to a serial loop. Bit-identical
     /// to calling [`infer`](Self::infer) per frame for any thread count.
     pub fn infer_batch(&self, frames: &[&[i64]]) -> Vec<Vec<i64>> {
@@ -505,13 +468,14 @@ mod tests {
         let weights = random_weights(&model, 81);
         let (c, h, w) = model.input;
         let mut rng = Rng::new(555);
-        for kind in [
-            EngineKind::Baseline,
-            EngineKind::HiKonv(Multiplier::CPU32),
-            EngineKind::HiKonvTiled(Multiplier::CPU32, 2),
-            EngineKind::Im2Row(Multiplier::CPU32, 2),
+        for config in [
+            EngineConfig::named("baseline"),
+            EngineConfig::named("hikonv"),
+            EngineConfig::named("hikonv-tiled").with_threads(2),
+            EngineConfig::named("im2row").with_threads(2),
+            EngineConfig::auto().with_threads(2),
         ] {
-            let r = CpuRunner::new(model.clone(), weights.clone(), kind).unwrap();
+            let r = CpuRunner::new(model.clone(), weights.clone(), config).unwrap();
             for _ in 0..2 {
                 let frame = rng.quant_unsigned_vec(4, c * h * w);
                 assert_seq_eq(&r.infer(&frame), &r.infer_unfused(&frame)).unwrap();
@@ -607,6 +571,27 @@ mod tests {
         for (f, b) in frames.iter().zip(&batched) {
             assert_seq_eq(b, &runner.infer(f)).unwrap();
         }
+    }
+
+    #[test]
+    fn engine_kind_shim_converts_to_the_expected_configs() {
+        let cfg: EngineConfig = EngineKind::HiKonvTiled(Multiplier::CPU32, 4).into();
+        assert_eq!(cfg.kernel_name(), Some("hikonv-tiled"));
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.to_string(), "hikonv-tiled:threads=4");
+        let cfg: EngineConfig = EngineKind::Baseline.into();
+        assert_eq!(cfg.kernel_name(), Some("baseline"));
+    }
+
+    #[test]
+    fn runner_exposes_its_plan_and_label() {
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 83);
+        let r = CpuRunner::new(model.clone(), weights, EngineConfig::auto().with_threads(2))
+            .unwrap();
+        assert_eq!(r.plan().layers.len(), model.layers.len());
+        assert!(r.label().starts_with("auto["), "{}", r.label());
+        assert_eq!(r.config().threads, 2);
     }
 
     #[test]

@@ -59,6 +59,47 @@ impl Multiplier {
     }
 }
 
+impl std::fmt::Display for Multiplier {
+    /// Canonical spelling `AxB` (e.g. `32x32`, `27x18`) — the form
+    /// [`FromStr`](std::str::FromStr) round-trips, used by the engine
+    /// configuration grammar and bench labels.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.bit_a, self.bit_b)
+    }
+}
+
+impl std::str::FromStr for Multiplier {
+    type Err = String;
+
+    /// Parse `AxB` (e.g. `32x32`) or a named alias (`cpu32`, `cpu64`,
+    /// `dsp48e2`, `dsp48e2-unsigned`).
+    fn from_str(s: &str) -> Result<Multiplier, String> {
+        let norm = s.trim().to_ascii_lowercase();
+        match norm.as_str() {
+            "cpu32" => return Ok(Multiplier::CPU32),
+            "cpu64" => return Ok(Multiplier::CPU64),
+            "dsp48e2" | "dsp" => return Ok(Multiplier::DSP48E2),
+            "dsp48e2-unsigned" => return Ok(Multiplier::DSP48E2_UNSIGNED),
+            _ => {}
+        }
+        let (a, b) = norm.split_once('x').ok_or_else(|| {
+            format!("multiplier '{s}': expected <bits>x<bits> (e.g. 32x32) or cpu32/cpu64/dsp48e2")
+        })?;
+        let bit_a: u32 = a
+            .trim()
+            .parse()
+            .map_err(|_| format!("multiplier '{s}': bad port-A width '{a}'"))?;
+        let bit_b: u32 = b
+            .trim()
+            .parse()
+            .map_err(|_| format!("multiplier '{s}': bad port-B width '{b}'"))?;
+        if bit_a == 0 || bit_b == 0 {
+            return Err(format!("multiplier '{s}': port widths must be >= 1"));
+        }
+        Ok(Multiplier::new(bit_a, bit_b))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +109,24 @@ mod tests {
         assert_eq!(Multiplier::DSP48E2.prod_bits(), 45);
         assert_eq!(Multiplier::CPU32.prod_bits(), 64);
         assert_eq!(Multiplier::CPU64.prod_bits(), 128);
+    }
+
+    #[test]
+    fn multiplier_display_parse_round_trip() {
+        for m in [
+            Multiplier::DSP48E2,
+            Multiplier::DSP48E2_UNSIGNED,
+            Multiplier::CPU32,
+            Multiplier::CPU64,
+            Multiplier::new(17, 43),
+        ] {
+            assert_eq!(m.to_string().parse::<Multiplier>().unwrap(), m);
+        }
+        assert_eq!("cpu32".parse::<Multiplier>().unwrap(), Multiplier::CPU32);
+        assert_eq!("DSP48E2".parse::<Multiplier>().unwrap(), Multiplier::DSP48E2);
+        assert_eq!(" 27x18 ".parse::<Multiplier>().unwrap(), Multiplier::DSP48E2);
+        assert!("32".parse::<Multiplier>().is_err());
+        assert!("0x32".parse::<Multiplier>().is_err());
+        assert!("axb".parse::<Multiplier>().is_err());
     }
 }

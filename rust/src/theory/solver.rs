@@ -24,6 +24,34 @@ pub enum Signedness {
     UnsignedBySigned,
 }
 
+impl std::fmt::Display for Signedness {
+    /// Canonical spelling `u` / `s` / `us` — the form
+    /// [`FromStr`](std::str::FromStr) round-trips, used by the engine
+    /// configuration grammar.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Signedness::Unsigned => "u",
+            Signedness::Signed => "s",
+            Signedness::UnsignedBySigned => "us",
+        })
+    }
+}
+
+impl std::str::FromStr for Signedness {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Signedness, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "u" | "unsigned" => Ok(Signedness::Unsigned),
+            "s" | "signed" => Ok(Signedness::Signed),
+            "us" | "mixed" | "unsigned-by-signed" => Ok(Signedness::UnsignedBySigned),
+            other => Err(format!(
+                "signedness '{other}': expected u (unsigned), s (signed) or us (mixed)"
+            )),
+        }
+    }
+}
+
 /// How deeply segments are accumulated, which sets the guard-bit requirement.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AccumMode {
@@ -82,6 +110,14 @@ impl DesignPoint {
     /// Number of output segments `N + K - 1` (Thm. 1).
     pub fn segments(&self) -> usize {
         self.n + self.k - 1
+    }
+
+    /// Whether the packed product (all `S·(N+K-1)` segment bits plus a
+    /// sign bit) fits a software word lane of `lane_bits` — the `i64`
+    /// fast-lane criterion at 64, shared by [`solve_for_lane`], the
+    /// engines' lane selection and the planner's cost model.
+    pub fn fits_lane(&self, lane_bits: u32) -> bool {
+        self.s * self.segments() as u32 + 1 <= lane_bits
     }
 
     /// Fraction of the A port actually carrying payload+guard.
@@ -283,7 +319,7 @@ pub fn solve_for_lane(
 ) -> Result<DesignPoint, SolveError> {
     let all = solve_all(mult, p, q, signedness, accum)?;
     all.into_iter()
-        .filter(|dp| dp.s * dp.segments() as u32 + 1 <= lane_bits)
+        .filter(|dp| dp.fits_lane(lane_bits))
         .max_by(|a, b| {
             a.ops_per_mult()
                 .cmp(&b.ops_per_mult())
@@ -465,6 +501,19 @@ mod tests {
             DesignPoint::required_slice_bits(4, 4, Signedness::Signed, 1),
             8
         );
+    }
+
+    #[test]
+    fn signedness_display_parse_round_trip() {
+        for sg in [
+            Signedness::Unsigned,
+            Signedness::Signed,
+            Signedness::UnsignedBySigned,
+        ] {
+            assert_eq!(sg.to_string().parse::<Signedness>().unwrap(), sg);
+        }
+        assert_eq!("mixed".parse::<Signedness>().unwrap(), Signedness::UnsignedBySigned);
+        assert!("x".parse::<Signedness>().is_err());
     }
 
     #[test]

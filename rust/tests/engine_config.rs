@@ -1,0 +1,88 @@
+//! `EngineConfig` / `Multiplier` grammar round-trip property tests: the
+//! textual form serve configs and bench JSON labels carry can never
+//! drift from the parser, because `Display` output always parses back to
+//! an equal config.
+
+use hikonv::engine::{EngineConfig, KernelChoice};
+use hikonv::theory::{Multiplier, Signedness};
+use hikonv::util::rng::Rng;
+
+#[test]
+fn multiplier_round_trip_property() {
+    let mut rng = Rng::new(0xC0DE);
+    for _ in 0..500 {
+        let m = Multiplier::new(1 + rng.below(64) as u32, 1 + rng.below(64) as u32);
+        assert_eq!(m.to_string().parse::<Multiplier>().unwrap(), m);
+    }
+}
+
+#[test]
+fn engine_config_round_trip_property() {
+    let mut rng = Rng::new(0x5EED);
+    let names = ["baseline", "hikonv", "hikonv-tiled", "im2row"];
+    let mults = [Multiplier::CPU32, Multiplier::CPU64, Multiplier::DSP48E2];
+    let signs = [
+        Signedness::Unsigned,
+        Signedness::Signed,
+        Signedness::UnsignedBySigned,
+    ];
+    for _ in 0..1000 {
+        let mut cfg = if rng.below(5) == 0 {
+            EngineConfig::auto()
+        } else {
+            EngineConfig::named(names[rng.below(names.len() as u64) as usize])
+        };
+        if rng.below(2) == 0 {
+            cfg = cfg.with_multiplier(mults[rng.below(mults.len() as u64) as usize]);
+        }
+        if rng.below(2) == 0 {
+            cfg = cfg.with_threads(1 + rng.below(64) as usize);
+        }
+        if rng.below(3) == 0 {
+            cfg = cfg.with_bits(1 + rng.below(8) as u32, 1 + rng.below(8) as u32);
+        }
+        if rng.below(3) == 0 {
+            cfg = cfg.with_signedness(signs[rng.below(signs.len() as u64) as usize]);
+        }
+        if rng.below(4) == 0 {
+            cfg = cfg.with_tile_co(1 + rng.below(32) as usize);
+        }
+        if rng.below(4) == 0 {
+            cfg = cfg.with_channel_block(1 + rng.below(64) as usize);
+        }
+        if rng.below(4) == 0 {
+            cfg = cfg.with_lane_bits(if rng.below(2) == 0 { 64 } else { 128 });
+        }
+        if rng.below(4) == 0 {
+            cfg = cfg.with_probe(true);
+        }
+        let rendered = cfg.to_string();
+        let parsed: EngineConfig = rendered
+            .parse()
+            .unwrap_or_else(|e| panic!("'{rendered}' failed to parse back: {e}"));
+        assert_eq!(parsed, cfg, "round trip of '{rendered}'");
+    }
+}
+
+#[test]
+fn legacy_spellings_still_parse() {
+    // The four old `--engine` names are valid one-token specs.
+    for name in ["baseline", "hikonv", "hikonv-tiled", "im2row"] {
+        let cfg: EngineConfig = name.parse().unwrap();
+        assert_eq!(cfg.kernel_name(), Some(name));
+        assert_eq!(cfg.to_string(), name);
+    }
+    assert_eq!(
+        "auto".parse::<EngineConfig>().unwrap().kernel,
+        KernelChoice::Auto
+    );
+}
+
+#[test]
+fn whitespace_and_aliases_normalize() {
+    let a: EngineConfig = " hikonv-tiled@cpu64 : threads=4 , tile-co=8 ".parse().unwrap();
+    let b: EngineConfig = "hikonv-tiled@64x64:threads=4,tile-co=8".parse().unwrap();
+    assert_eq!(a, b);
+    // Canonical re-rendering is stable (idempotent round trip).
+    assert_eq!(a.to_string().parse::<EngineConfig>().unwrap(), a);
+}

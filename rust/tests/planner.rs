@@ -1,0 +1,163 @@
+//! Planner correctness suite: `auto` plans are deterministic for a fixed
+//! model + host signature, every planned layer is bit-exact vs the seed
+//! `infer_unfused` oracle, forced single-backend plans match the legacy
+//! `EngineKind` runners across thread counts, and unknown engine names
+//! fail with the registered-name list plus a nearest-match suggestion.
+
+use hikonv::engine::{EngineConfig, EnginePlan, KernelRegistry};
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::testing::assert_seq_eq;
+use hikonv::theory::Multiplier;
+use hikonv::util::rng::Rng;
+
+#[test]
+fn auto_plan_is_deterministic_for_a_fixed_model_and_host_signature() {
+    let model = ultranet_tiny();
+    for threads in [1usize, 2, 8] {
+        let cfg = EngineConfig::auto().with_threads(threads);
+        let first = EnginePlan::plan(&model, &cfg).unwrap();
+        assert_eq!(first.layers.len(), model.layers.len());
+        assert_eq!(first.threads, threads);
+        for _ in 0..3 {
+            let again = EnginePlan::plan(&model, &cfg).unwrap();
+            assert_eq!(again.kernel_names(), first.kernel_names());
+            assert_eq!(again.host(), first.host());
+            assert_eq!(again.summary(), first.summary());
+        }
+    }
+}
+
+#[test]
+fn auto_runner_is_bit_exact_vs_unfused_and_the_baseline_oracle() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 501);
+    let oracle = CpuRunner::new(
+        model.clone(),
+        weights.clone(),
+        EngineConfig::named("baseline"),
+    )
+    .unwrap();
+    let (c, h, w) = model.input;
+    for threads in [1usize, 2, 4] {
+        let auto = CpuRunner::new(
+            model.clone(),
+            weights.clone(),
+            EngineConfig::auto().with_threads(threads),
+        )
+        .unwrap();
+        let mut rng = Rng::new(0xA070 + threads as u64);
+        for _ in 0..2 {
+            let frame = rng.quant_unsigned_vec(4, c * h * w);
+            let got = auto.infer(&frame);
+            assert_seq_eq(&got, &auto.infer_unfused(&frame)).unwrap();
+            assert_seq_eq(&got, &oracle.infer_unfused(&frame)).unwrap();
+        }
+        // Batched execution (frame-level parallelism is retained for
+        // `auto` plans even when every layer plans serial) stays
+        // bit-identical to per-frame inference.
+        let frames: Vec<Vec<i64>> =
+            (0..4).map(|_| rng.quant_unsigned_vec(4, c * h * w)).collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        for (f, b) in frames.iter().zip(&auto.infer_batch(&refs)) {
+            assert_seq_eq(b, &auto.infer(f)).unwrap();
+        }
+    }
+}
+
+#[test]
+fn forced_single_backend_plans_match_the_legacy_engine_kinds() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 502);
+    let (c, h, w) = model.input;
+    let m = Multiplier::CPU32;
+    let frame = Rng::new(0xF0CA).quant_unsigned_vec(4, c * h * w);
+    for threads in [1usize, 3] {
+        let cases: Vec<(&str, EngineKind)> = vec![
+            ("baseline", EngineKind::Baseline),
+            ("hikonv", EngineKind::HiKonv(m)),
+            ("hikonv-tiled", EngineKind::HiKonvTiled(m, threads)),
+            ("im2row", EngineKind::Im2Row(m, threads)),
+        ];
+        for (spec, kind) in cases {
+            let config: EngineConfig = spec.parse().unwrap();
+            let new = CpuRunner::new(
+                model.clone(),
+                weights.clone(),
+                config.with_threads(threads),
+            )
+            .unwrap();
+            let old = CpuRunner::new(model.clone(), weights.clone(), kind).unwrap();
+            assert_seq_eq(&new.infer(&frame), &old.infer(&frame)).unwrap();
+            // The plan is the single forced kernel on every layer.
+            assert!(
+                new.plan().kernel_names().iter().all(|k| *k == spec),
+                "{spec}: {:?}",
+                new.plan().kernel_names()
+            );
+        }
+    }
+}
+
+#[test]
+fn unknown_engine_names_list_registered_names_and_suggest() {
+    let err = KernelRegistry::builtin().resolve("hikov").unwrap_err();
+    for name in ["baseline", "hikonv", "hikonv-tiled", "im2row"] {
+        assert!(err.contains(name), "{err}");
+    }
+    assert!(err.contains("did you mean 'hikonv'"), "{err}");
+    // The same error surfaces through runner construction from a config.
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 503);
+    let err = CpuRunner::new(model, weights, EngineConfig::named("im2r0w")).unwrap_err();
+    assert!(err.contains("did you mean 'im2row'"), "{err}");
+}
+
+#[test]
+fn tiling_overrides_and_degenerate_thread_counts_stay_exact() {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 504);
+    let oracle = CpuRunner::new(
+        model.clone(),
+        weights.clone(),
+        EngineConfig::named("baseline"),
+    )
+    .unwrap();
+    let (c, h, w) = model.input;
+    let frame = Rng::new(0xF0CB).quant_unsigned_vec(4, c * h * w);
+    let want = oracle.infer(&frame);
+    // Way more threads than any layer has output channels, plus explicit
+    // tile/block overrides (including degenerate ones): still bit-exact.
+    for spec in [
+        "hikonv-tiled:threads=64",
+        "hikonv-tiled:threads=64,tile-co=1",
+        "hikonv-tiled:threads=3,tile-co=1000",
+        "hikonv:block=2",
+        "hikonv:block=1000",
+        "im2row:threads=64,tile-co=1",
+    ] {
+        let config: EngineConfig = spec.parse().unwrap();
+        let r = CpuRunner::new(model.clone(), weights.clone(), config).unwrap();
+        assert_seq_eq(&r.infer(&frame), &want).unwrap();
+        assert_seq_eq(&r.infer_unfused(&frame), &want).unwrap();
+    }
+}
+
+#[test]
+fn plan_table_reports_predicted_ops_per_mult_from_the_solver() {
+    let model = ultranet_tiny();
+    let plan = EnginePlan::plan(&model, &EngineConfig::auto().with_threads(2)).unwrap();
+    let rendered = plan.render();
+    for l in &model.layers {
+        assert!(rendered.contains(&l.name), "missing {}: {rendered}", l.name);
+    }
+    for lp in &plan.layers {
+        // Packed kernels at the 4-bit CPU32 point deliver multiple
+        // equivalent ops per wide multiplication (paper Fig. 5b: 13).
+        assert!(lp.ops_per_mult >= 2, "{lp:?}");
+        assert!(lp.lane_bound >= lp.ops_per_mult, "{lp:?}");
+    }
+    let json = plan.to_json();
+    assert!(json.get("layers").is_some());
+    assert!(json.get("summary").is_some());
+}
