@@ -16,7 +16,7 @@ use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
 use hikonv::coordinator::{serve, InferBackend, ServeConfig};
 use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::ultranet_tiny;
-use hikonv::models::{random_weights, CpuRunner};
+use hikonv::models::{random_graph_weights, random_weights, zoo, CpuRunner, GraphRunner};
 use hikonv::runtime::{artifacts, artifacts_dir, Runtime};
 use std::time::Duration;
 
@@ -101,6 +101,24 @@ fn main() {
     let report = serve(Box::new(CpuBackend::new(tiled)), &config(frames, None));
     println!("--- HiKonv packed+tiled engine (intra-layer, auto-sized pool) ---");
     print!("{}", report.render());
+    println!();
+
+    // --- graph-IR workloads (strided / FC-head / residual / mixed bits) ----
+    println!("--- graph-IR workloads, auto-planned (fused vs oracle checked) ---");
+    for name in ["strided", "fc-head", "residual", "mixed"] {
+        let graph = zoo::build(name).unwrap();
+        let weights = random_graph_weights(&graph, 7).unwrap();
+        let runner = GraphRunner::new(graph.clone(), weights, EngineConfig::auto()).unwrap();
+        let (c, h, w) = graph.input;
+        let frame = hikonv::util::rng::Rng::new(7).quant_unsigned_vec(graph.input_bits, c * h * w);
+        assert_eq!(runner.infer(&frame), runner.infer_oracle(&frame), "{name}");
+        let (_, dt) = hikonv::util::timer::time(|| runner.infer(&frame));
+        println!(
+            "  {name:<10} {:>8.2} ms/frame  plan {}",
+            dt * 1e3,
+            runner.label()
+        );
+    }
     println!();
 
     // --- the ARM-feeder bottleneck (Table II's 401-vs-588 situation) -------

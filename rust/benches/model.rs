@@ -1,26 +1,30 @@
-//! Bench: end-to-end UltraNet inference — the seed per-layer-allocating
-//! path (`infer_unfused`: pad2d copy-in, fresh accumulator, separate
-//! requantize and maxpool passes) vs the fused arena pipeline (`infer`)
-//! vs fused + batched serving (`infer_batch`, whole frames sharded
-//! across the thread pool with per-worker arena reuse), for each single
-//! engine and for the theory-planned `auto` configuration.
+//! Bench: end-to-end model inference — the seed per-layer-allocating
+//! path (`infer_unfused`) vs the fused arena pipeline (`infer`) vs
+//! fused + batched serving (`infer_batch`), for each single engine and
+//! the theory-planned `auto` configuration on UltraNet, plus fused
+//! `auto` rows for the graph-IR workloads (strided downsampling,
+//! FC head, residual block, mixed bitwidths).
 //!
-//! Outputs are cross-checked bit-exact before any timing. Set
-//! `HIKONV_BENCH_QUICK=1` for a CI smoke pass, `HIKONV_BENCH_OUT=<path>`
-//! to record the JSON baseline (see BENCH_model.json at the repo root),
-//! and `HIKONV_BENCH_PLAN_OUT=<path>` to record the `auto` run's
-//! per-layer plan (BENCH_plan.json).
+//! Outputs are cross-checked bit-exact before any timing — the graph
+//! workloads against the kernel-independent strided-reference oracle.
+//! Set `HIKONV_BENCH_QUICK=1` for a CI smoke pass, `HIKONV_BENCH_OUT`
+//! to record the JSON baseline (BENCH_model.json), and
+//! `HIKONV_BENCH_PLAN_OUT` to record the per-op plans of the `auto`
+//! runs — one entry per workload (BENCH_plan.json).
 
 use hikonv::bench::{fmt_ns, BenchConfig, Bencher};
 use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::{ultranet, ultranet_tiny};
-use hikonv::models::{random_weights, CpuRunner};
+use hikonv::models::{random_graph_weights, random_weights, zoo, CpuRunner, GraphRunner};
 use hikonv::testing::assert_seq_eq;
 use hikonv::util::json::Json;
 use hikonv::util::rng::Rng;
 use hikonv::util::table::Table;
 
 const BATCH: usize = 8;
+
+/// Graph-IR workloads benched alongside the UltraNet rows.
+const GRAPH_WORKLOADS: [&str; 4] = ["strided", "fc-head", "residual", "mixed"];
 
 fn main() {
     let config = BenchConfig::from_env();
@@ -38,6 +42,7 @@ fn main() {
 
     let mut bencher = Bencher::with_config("model", config);
     let mut json_rows = Vec::new();
+    let mut plan_entries = Vec::new();
     let mut table = Table::new(
         &format!("{}: seed per-layer path vs fused vs fused+batched", model.name),
         &["engine", "unfused", "fused", "speedup", "batched/frame", "batch x"],
@@ -64,12 +69,11 @@ fn main() {
         }
 
         if label == "auto" {
-            // Publish the chosen plan alongside the bench numbers.
-            let rendered = runner.plan().to_json().to_string_pretty();
-            if let Ok(path) = std::env::var("HIKONV_BENCH_PLAN_OUT") {
-                std::fs::write(&path, format!("{rendered}\n")).expect("write plan artifact");
-                eprintln!("wrote {path}");
-            }
+            plan_entries.push(
+                Json::obj()
+                    .set("workload", model.name.as_str())
+                    .set("plan", runner.plan().to_json()),
+            );
             eprintln!("auto plan: {}", runner.label());
         }
 
@@ -98,6 +102,7 @@ fn main() {
         json_rows.push(
             Json::obj()
                 .set("engine", label)
+                .set("workload", model.name.as_str())
                 .set("plan", runner.label())
                 .set("model", model.name.as_str())
                 .set("batch", BATCH)
@@ -110,8 +115,62 @@ fn main() {
                 .set("fps_batched", 1e9 / batched),
         );
     }
-
     print!("{}", table.render());
+
+    // --- graph-IR workloads: strided / FC-head / residual / mixed ------
+    let mut gtable = Table::new(
+        "graph workloads (auto plan): oracle-checked fused pipeline",
+        &["workload", "unfused", "fused", "speedup", "plan"],
+    );
+    for name in GRAPH_WORKLOADS {
+        let graph = zoo::build(name).expect("builtin workload");
+        let gweights = random_graph_weights(&graph, 7).expect("weights");
+        let runner = GraphRunner::new(graph.clone(), gweights, EngineConfig::auto())
+            .expect("feasible workload");
+        let (c, h, w) = graph.input;
+        let frame = Rng::new(0xE2E ^ name.len() as u64)
+            .quant_unsigned_vec(graph.input_bits, c * h * w);
+        // Correctness gate: fused == node-walk == strided reference.
+        let truth = runner.infer_oracle(&frame);
+        assert_seq_eq(&runner.infer(&frame), &truth).expect("graph fused mismatch");
+        assert_seq_eq(&runner.infer_unfused(&frame), &truth).expect("graph unfused mismatch");
+
+        plan_entries.push(
+            Json::obj()
+                .set("workload", name)
+                .set("plan", runner.plan().to_json()),
+        );
+
+        let unfused = bencher
+            .bench(&format!("graph-unfused/{name}"), || {
+                runner.infer_unfused(&frame)
+            })
+            .median_ns();
+        let fused = bencher
+            .bench(&format!("graph-fused/{name}"), || runner.infer(&frame))
+            .median_ns();
+        gtable.row(hikonv::cells!(
+            name,
+            fmt_ns(unfused),
+            fmt_ns(fused),
+            format!("{:.2}x", unfused / fused),
+            runner.label()
+        ));
+        json_rows.push(
+            Json::obj()
+                .set("engine", "auto")
+                .set("workload", name)
+                .set("plan", runner.label())
+                .set("model", graph.name.as_str())
+                .set("batch", 1)
+                .set("unfused_ns", unfused)
+                .set("fused_ns", fused)
+                .set("speedup_fused", unfused / fused)
+                .set("fps_fused", 1e9 / fused),
+        );
+    }
+    print!("{}", gtable.render());
+
     let report = Json::obj()
         .set("bench", "model")
         .set("model", model.name.as_str())
@@ -122,6 +181,14 @@ fn main() {
     println!("{rendered}");
     if let Ok(path) = std::env::var("HIKONV_BENCH_OUT") {
         std::fs::write(&path, format!("{rendered}\n")).expect("write bench baseline");
+        eprintln!("wrote {path}");
+    }
+    if let Ok(path) = std::env::var("HIKONV_BENCH_PLAN_OUT") {
+        let plans = Json::obj()
+            .set("bench", "plan")
+            .set("workloads", Json::Array(plan_entries));
+        std::fs::write(&path, format!("{}\n", plans.to_string_pretty()))
+            .expect("write plan artifact");
         eprintln!("wrote {path}");
     }
 }

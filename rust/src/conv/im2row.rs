@@ -22,9 +22,16 @@ use super::dot::DotHiKonv;
 use super::gemm::{PackedGemm, PackedLhs};
 
 /// Conv-as-matmul engine over the [`PackedGemm`] packed kernel.
+///
+/// Supports **strided windows** natively: with `stride > 1` the im2row
+/// gather simply samples receptive fields at `(h·stride, w·stride)` — the
+/// GEMM is oblivious, and no dense intermediate is ever computed (unlike
+/// the overlap-add engine, which is stride-1 by construction).
 #[derive(Clone, Debug)]
 pub struct Im2RowConv {
     spec: Conv2dSpec,
+    /// Output sampling stride (1 = dense).
+    stride: usize,
     /// Scalar-block fallback engine; also pins the design point the GEMM
     /// shares, so packed and fallback semantics agree bit-for-bit.
     dot: DotHiKonv,
@@ -34,6 +41,20 @@ pub struct Im2RowConv {
 
 impl Im2RowConv {
     pub fn new(spec: Conv2dSpec, weights: &[i64]) -> Result<Im2RowConv, String> {
+        Self::with_stride(spec, weights, 1)
+    }
+
+    /// Build with an output sampling stride: output pixel `(h, w)` reads
+    /// the receptive field at `(h·stride, w·stride)`. Bit-exact vs
+    /// `conv2d_ref_strided`.
+    pub fn with_stride(
+        spec: Conv2dSpec,
+        weights: &[i64],
+        stride: usize,
+    ) -> Result<Im2RowConv, String> {
+        if stride == 0 {
+            return Err("im2row stride must be >= 1".to_string());
+        }
         let sh = spec.shape;
         assert_eq!(weights.len(), sh.weight_len(), "weight length mismatch");
         let dot = DotHiKonv::new(spec.mult, spec.p, spec.q, spec.signedness)
@@ -46,11 +67,37 @@ impl Im2RowConv {
             sh.ci * sh.k * sh.k,
             sh.co,
         );
-        Ok(Im2RowConv { spec, dot, gemm })
+        Ok(Im2RowConv {
+            spec,
+            stride,
+            dot,
+            gemm,
+        })
     }
 
     pub fn spec(&self) -> &Conv2dSpec {
         &self.spec
+    }
+
+    /// Output sampling stride.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Strided output spatial dims.
+    pub fn out_dims(&self) -> (usize, usize) {
+        super::reference::strided_out(self.spec.shape, self.stride)
+    }
+
+    /// Number of output pixels (= GEMM rows = `ho_s·wo_s`).
+    pub fn rows(&self) -> usize {
+        let (h, w) = self.out_dims();
+        h * w
+    }
+
+    /// Flat output length (`co·ho_s·wo_s`).
+    pub fn out_len(&self) -> usize {
+        self.spec.shape.co * self.rows()
     }
 
     /// The scalar-block fallback dot engine (shared design point).
@@ -72,13 +119,19 @@ impl Im2RowConv {
     pub fn im2row(&self, input: &[i64]) -> Vec<i64> {
         let sh = self.spec.shape;
         assert_eq!(input.len(), sh.input_len(), "input length mismatch");
-        let (ho, wo, k) = (sh.ho(), sh.wo(), sh.k);
-        let row_len = sh.ci * k * k;
+        let (ho, wo) = self.out_dims();
+        let row_len = sh.ci * sh.k * sh.k;
         let mut rows = vec![0i64; ho * wo * row_len];
         for h in 0..ho {
             for w in 0..wo {
                 let base = (h * wo + w) * row_len;
-                gather_row(&mut rows[base..base + row_len], input, sh, h, w);
+                gather_row(
+                    &mut rows[base..base + row_len],
+                    input,
+                    sh,
+                    h * self.stride,
+                    w * self.stride,
+                );
             }
         }
         rows
@@ -90,7 +143,7 @@ impl Im2RowConv {
     /// column tiles (and threads) borrow it freely.
     pub fn pack_pixels(&self, input: &[i64]) -> PackedLhs {
         let sh = self.spec.shape;
-        let mut lhs = self.gemm.lhs_builder(sh.ho() * sh.wo());
+        let mut lhs = self.gemm.lhs_builder(self.rows());
         let mut row_buf = vec![0i64; sh.ci * sh.k * sh.k];
         self.pack_pixels_into(input, &mut lhs, &mut row_buf);
         lhs
@@ -104,12 +157,12 @@ impl Im2RowConv {
     pub fn pack_pixels_into(&self, input: &[i64], lhs: &mut PackedLhs, row_buf: &mut [i64]) {
         let sh = self.spec.shape;
         assert_eq!(input.len(), sh.input_len(), "input length mismatch");
-        let (ho, wo, k) = (sh.ho(), sh.wo(), sh.k);
-        let row_buf = &mut row_buf[..sh.ci * k * k];
+        let (ho, wo) = self.out_dims();
+        let row_buf = &mut row_buf[..sh.ci * sh.k * sh.k];
         lhs.clear();
         for h in 0..ho {
             for w in 0..wo {
-                gather_row(row_buf, input, sh, h, w);
+                gather_row(row_buf, input, sh, h * self.stride, w * self.stride);
                 lhs.push_row(row_buf);
             }
         }
@@ -130,12 +183,13 @@ impl Im2RowConv {
         self.gemm.cols_into(pixels, co_start, co_end, out_tile);
     }
 
-    /// Run the layer serially. Input `[ci][h][w]`, output `[co][h][w]`
-    /// row-major — bit-exact against `conv2d_ref`. Exactly one packing
+    /// Run the layer serially. Input `[ci][h][w]`, output `[co][ho][wo]`
+    /// row-major (strided dims) — bit-exact against `conv2d_ref` at
+    /// stride 1 and `conv2d_ref_strided` otherwise. Exactly one packing
     /// pass over the input (weights were packed at construction); the
     /// output is written co-major directly by the column-major kernel.
     pub fn conv(&self, input: &[i64]) -> Vec<i64> {
-        let mut out = vec![0i64; self.spec.shape.output_len()];
+        let mut out = vec![0i64; self.out_len()];
         self.conv_into(input, &mut out);
         out
     }
@@ -146,9 +200,8 @@ impl Im2RowConv {
     /// [`pack_pixels_into`](Self::pack_pixels_into) with
     /// [`conv_cols`](Self::conv_cols) instead.
     pub fn conv_into(&self, input: &[i64], out: &mut [i64]) {
-        let sh = self.spec.shape;
         let pixels = self.pack_pixels(input);
-        self.conv_cols(&pixels, 0, sh.co, out);
+        self.conv_cols(&pixels, 0, self.spec.shape.co, out);
     }
 }
 
@@ -339,6 +392,43 @@ mod tests {
             eng.conv_cols(&lhs, 0, shape.co, &mut out);
             assert_seq_eq(&out, &want).unwrap();
         }
+    }
+
+    #[test]
+    fn strided_lowering_matches_the_strided_reference() {
+        use crate::conv::reference::conv2d_ref_strided;
+        let shape = ConvShape {
+            ci: 3,
+            co: 4,
+            hi: 9,
+            wi: 11,
+            k: 3,
+        };
+        let mut rng = Rng::new(27);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        for stride in [1usize, 2, 3] {
+            let eng = Im2RowConv::with_stride(spec, &weights, stride).unwrap();
+            assert_eq!(eng.stride(), stride);
+            let want = conv2d_ref_strided(&input, &weights, shape, stride);
+            assert_eq!(eng.out_len(), want.len());
+            assert_seq_eq(&eng.conv(&input), &want).unwrap();
+            // The arena path too: reused builder + gather scratch.
+            let mut lhs = eng.gemm().lhs_builder(eng.rows());
+            let mut row_buf = vec![0i64; shape.ci * shape.k * shape.k];
+            let mut out = vec![7i64; eng.out_len()];
+            eng.pack_pixels_into(&input, &mut lhs, &mut row_buf);
+            eng.conv_cols(&lhs, 0, shape.co, &mut out);
+            assert_seq_eq(&out, &want).unwrap();
+        }
+        assert!(Im2RowConv::with_stride(spec, &weights, 0).is_err());
     }
 
     #[test]

@@ -31,11 +31,15 @@ pub struct ConvShape {
 }
 
 impl ConvShape {
+    /// Output rows. Saturates to 0 (instead of wrapping the `usize`
+    /// subtraction) when `k > hi`; specs are expected to reject such
+    /// degenerate shapes at construction time.
     pub fn ho(&self) -> usize {
-        self.hi - self.k + 1
+        (self.hi + 1).saturating_sub(self.k)
     }
+    /// Output columns (saturating like [`ho`](Self::ho)).
     pub fn wo(&self) -> usize {
-        self.wi - self.k + 1
+        (self.wi + 1).saturating_sub(self.k)
     }
     pub fn input_len(&self) -> usize {
         self.ci * self.hi * self.wi
@@ -76,6 +80,71 @@ pub fn conv2d_ref_into(input: &[i64], weights: &[i64], shape: ConvShape, out: &m
                 for ci in 0..shape.ci {
                     for kh in 0..shape.k {
                         let irow = (ci * shape.hi + h + kh) * shape.wi + w;
+                        let wrow = ((co * shape.ci + ci) * shape.k + kh) * shape.k;
+                        for kw in 0..shape.k {
+                            acc += input[irow + kw] * weights[wrow + kw];
+                        }
+                    }
+                }
+                out[(co * ho + h) * wo + w] = acc;
+            }
+        }
+    }
+}
+
+/// Output dims of a valid convolution over `shape` sampled with `stride`:
+/// `floor((hi - k) / stride) + 1` rows (0 when `k > hi`, never wrapping).
+pub fn strided_out(shape: ConvShape, stride: usize) -> (usize, usize) {
+    assert!(stride >= 1, "stride must be >= 1");
+    let h = if shape.hi < shape.k {
+        0
+    } else {
+        (shape.hi - shape.k) / stride + 1
+    };
+    let w = if shape.wi < shape.k {
+        0
+    } else {
+        (shape.wi - shape.k) / stride + 1
+    };
+    (h, w)
+}
+
+/// Strided DNN convolution reference: [`conv2d_ref`] evaluated only at
+/// output positions `(h·stride, w·stride)` — the oracle every strided
+/// graph op is checked against. `stride == 1` is exactly [`conv2d_ref`].
+pub fn conv2d_ref_strided(
+    input: &[i64],
+    weights: &[i64],
+    shape: ConvShape,
+    stride: usize,
+) -> Vec<i64> {
+    let (ho, wo) = strided_out(shape, stride);
+    let mut out = vec![0i64; shape.co * ho * wo];
+    conv2d_ref_strided_into(input, weights, shape, stride, &mut out);
+    out
+}
+
+/// [`conv2d_ref_strided`] writing into a caller-provided buffer
+/// (`co·ho_s·wo_s`, overwritten).
+pub fn conv2d_ref_strided_into(
+    input: &[i64],
+    weights: &[i64],
+    shape: ConvShape,
+    stride: usize,
+    out: &mut [i64],
+) {
+    assert_eq!(input.len(), shape.input_len(), "input length mismatch");
+    assert_eq!(weights.len(), shape.weight_len(), "weight length mismatch");
+    let (ho, wo) = strided_out(shape, stride);
+    assert_eq!(out.len(), shape.co * ho * wo, "output length mismatch");
+    for co in 0..shape.co {
+        for h in 0..ho {
+            for w in 0..wo {
+                let (hy, wx) = (h * stride, w * stride);
+                let mut acc = 0i64;
+                for ci in 0..shape.ci {
+                    for kh in 0..shape.k {
+                        let irow = (ci * shape.hi + hy + kh) * shape.wi + wx;
                         let wrow = ((co * shape.ci + ci) * shape.k + kh) * shape.k;
                         for kw in 0..shape.k {
                             acc += input[irow + kw] * weights[wrow + kw];
@@ -156,6 +225,53 @@ mod tests {
         let mut out = vec![99i64; 4];
         conv2d_ref_into(&[1, 2, 3, 4], &[2], s, &mut out);
         assert_eq!(out, vec![2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn degenerate_kernel_saturates_instead_of_wrapping() {
+        let s = ConvShape {
+            ci: 1,
+            co: 1,
+            hi: 2,
+            wi: 3,
+            k: 5,
+        };
+        assert_eq!(s.ho(), 0);
+        assert_eq!(s.wo(), 0);
+        assert_eq!(s.output_len(), 0);
+        assert_eq!(strided_out(s, 2), (0, 0));
+    }
+
+    #[test]
+    fn strided_reference_subsamples_the_dense_one() {
+        let s = ConvShape {
+            ci: 2,
+            co: 3,
+            hi: 7,
+            wi: 9,
+            k: 3,
+        };
+        let mut rng = crate::util::rng::Rng::new(0x51D);
+        let input = rng.quant_unsigned_vec(4, s.input_len());
+        let weights = rng.quant_signed_vec(4, s.weight_len());
+        let dense = conv2d_ref(&input, &weights, s);
+        let (ho, wo) = (s.ho(), s.wo());
+        for stride in [1usize, 2, 3] {
+            let got = conv2d_ref_strided(&input, &weights, s, stride);
+            let (hs, ws) = strided_out(s, stride);
+            assert_eq!(got.len(), s.co * hs * ws);
+            for co in 0..s.co {
+                for y in 0..hs {
+                    for x in 0..ws {
+                        assert_eq!(
+                            got[(co * hs + y) * ws + x],
+                            dense[(co * ho + y * stride) * wo + x * stride],
+                            "stride={stride} ({co},{y},{x})"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

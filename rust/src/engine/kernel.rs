@@ -18,7 +18,7 @@ use super::{conv2d_tiled_into_depth, im2row_tiled_into_depth, tile_co_for, PAR_M
 use crate::conv::conv2d::{Conv2dHiKonv, PackedInput};
 use crate::conv::gemm::PackedLhs;
 use crate::conv::im2row::Im2RowConv;
-use crate::conv::reference::{conv2d_ref_into, ConvShape};
+use crate::conv::reference::{conv2d_ref_into, conv2d_ref_strided_into, strided_out, ConvShape};
 use crate::exec::ThreadPool;
 use std::any::Any;
 
@@ -34,17 +34,37 @@ pub trait ConvKernel: Send + Sync {
     /// Registry name of the kernel that built this instance.
     fn name(&self) -> &'static str;
 
-    /// The (padded) layer shape this kernel was built for.
+    /// The (padded) stride-1 layer shape this kernel was built for.
     fn shape(&self) -> ConvShape;
+
+    /// Output sampling stride (1 = dense). Strided units built on
+    /// stride-1-native engines subsample internally.
+    fn stride(&self) -> usize {
+        1
+    }
+
+    /// Strided output spatial dims (`(shape().ho(), shape().wo())` at
+    /// stride 1).
+    fn out_dims(&self) -> (usize, usize) {
+        strided_out(self.shape(), self.stride())
+    }
+
+    /// Flat output length (`co·ho_s·wo_s`) — the buffer size
+    /// [`conv_into`](Self::conv_into) expects.
+    fn out_len(&self) -> usize {
+        let (h, w) = self.out_dims();
+        self.shape().co * h * w
+    }
 
     /// Fresh per-arena scratch for this kernel.
     fn new_scratch(&self) -> KernelScratch;
 
     /// Execute the layer on `[ci][h][w]` activations into a
-    /// caller-provided buffer (`co·ho·wo`, overwritten). `scratch` must
-    /// come from [`new_scratch`](Self::new_scratch) on the same instance;
-    /// `pool` is the intra-layer tiling pool (`None` or a 1-thread pool
-    /// means serial — kernels may also ignore it entirely). With a warmed
+    /// caller-provided buffer ([`out_len`](Self::out_len) values,
+    /// overwritten). `scratch` must come from
+    /// [`new_scratch`](Self::new_scratch) on the same instance; `pool` is
+    /// the intra-layer tiling pool (`None` or a 1-thread pool means
+    /// serial — kernels may also ignore it entirely). With a warmed
     /// scratch the serial paths perform zero heap allocations.
     fn conv_into(
         &self,
@@ -57,23 +77,54 @@ pub trait ConvKernel: Send + Sync {
     /// Allocating convenience path (fresh scratch + fresh output) — what
     /// calibration and the seed/unfused oracle use.
     fn conv(&self, input: &[i64], pool: Option<&ThreadPool>) -> Vec<i64> {
-        let mut out = vec![0i64; self.shape().output_len()];
+        let mut out = vec![0i64; self.out_len()];
         let mut scratch = self.new_scratch();
         self.conv_into(input, &mut out, &mut scratch, pool);
         out
     }
 }
 
-/// Baseline 6-loop kernel (Eq. 17) — the Fig. 6 reference.
+/// Copy every `stride`-th output pixel of a dense `[co][ho][wo]` map into
+/// the strided `[co][ho_s][wo_s]` layout — the subsample adapter that
+/// gives stride-1-native engines (the Thm.-3 overlap-add packing is
+/// inherently dense along a row) exact strided semantics.
+fn subsample_into(full: &[i64], sh: ConvShape, stride: usize, out: &mut [i64]) {
+    let (ho, wo) = (sh.ho(), sh.wo());
+    let (hs, ws) = strided_out(sh, stride);
+    assert_eq!(full.len(), sh.co * ho * wo, "dense buffer length mismatch");
+    assert_eq!(out.len(), sh.co * hs * ws, "strided buffer length mismatch");
+    for co in 0..sh.co {
+        for y in 0..hs {
+            let src = (co * ho + y * stride) * wo;
+            let dst = (co * hs + y) * ws;
+            for x in 0..ws {
+                out[dst + x] = full[src + x * stride];
+            }
+        }
+    }
+}
+
+/// Baseline 6-loop kernel (Eq. 17) — the Fig. 6 reference. Strided units
+/// run the strided reference loop directly (no dense intermediate).
 pub struct BaselineKernel {
     shape: ConvShape,
+    stride: usize,
     weights: Vec<i64>,
 }
 
 impl BaselineKernel {
     pub fn new(shape: ConvShape, weights: Vec<i64>) -> BaselineKernel {
+        Self::with_stride(shape, weights, 1)
+    }
+
+    pub fn with_stride(shape: ConvShape, weights: Vec<i64>, stride: usize) -> BaselineKernel {
         assert_eq!(weights.len(), shape.weight_len(), "weight length mismatch");
-        BaselineKernel { shape, weights }
+        assert!(stride >= 1, "stride must be >= 1");
+        BaselineKernel {
+            shape,
+            stride,
+            weights,
+        }
     }
 }
 
@@ -84,6 +135,10 @@ impl ConvKernel for BaselineKernel {
 
     fn shape(&self) -> ConvShape {
         self.shape
+    }
+
+    fn stride(&self) -> usize {
+        self.stride
     }
 
     fn new_scratch(&self) -> KernelScratch {
@@ -97,7 +152,11 @@ impl ConvKernel for BaselineKernel {
         _scratch: &mut KernelScratch,
         _pool: Option<&ThreadPool>,
     ) {
-        conv2d_ref_into(input, &self.weights, self.shape, out);
+        if self.stride == 1 {
+            conv2d_ref_into(input, &self.weights, self.shape, out);
+        } else {
+            conv2d_ref_strided_into(input, &self.weights, self.shape, self.stride, out);
+        }
     }
 }
 
@@ -105,31 +164,71 @@ impl ConvKernel for BaselineKernel {
 struct HiKonvScratch {
     packed: PackedInput,
     seg: Vec<i64>,
+    /// Dense stride-1 output for the subsample adapter (empty at
+    /// stride 1, where the engine writes the caller's buffer directly).
+    full: Vec<i64>,
 }
 
 /// HiKonv packed kernel (Thms. 1–3): serial, or with output channels
 /// tiled across the pool (`tiled`) when a layer clears the
-/// [`PAR_MIN_MACS`] cutoff.
+/// [`PAR_MIN_MACS`] cutoff. The overlap-add packing is dense along each
+/// row, so strided units compute the full-resolution map into arena
+/// scratch and subsample — exact, at dense cost (which the planner's
+/// cost model charges, steering `auto` toward natively-strided kernels).
 pub struct HiKonvKernel {
     inner: Conv2dHiKonv,
     tiled: bool,
     tile_co: Option<usize>,
+    stride: usize,
 }
 
 impl HiKonvKernel {
     /// Wrap a built engine. `tile_co` overrides the
     /// [`tile_co_for`] heuristic when tiling.
     pub fn new(inner: Conv2dHiKonv, tiled: bool, tile_co: Option<usize>) -> HiKonvKernel {
+        Self::with_stride(inner, tiled, tile_co, 1)
+    }
+
+    /// Wrap with an output sampling stride (subsample adapter).
+    pub fn with_stride(
+        inner: Conv2dHiKonv,
+        tiled: bool,
+        tile_co: Option<usize>,
+        stride: usize,
+    ) -> HiKonvKernel {
+        assert!(stride >= 1, "stride must be >= 1");
         HiKonvKernel {
             inner,
             tiled,
             tile_co,
+            stride,
         }
     }
 
     /// The wrapped Thm.-3 engine (design-point introspection).
     pub fn engine(&self) -> &Conv2dHiKonv {
         &self.inner
+    }
+
+    /// The dense stride-1 pass shared by both stride paths.
+    fn dense_into(&self, s: &mut HiKonvScratch, out: &mut [i64], pool: Option<&ThreadPool>) {
+        let sh = self.inner.shape();
+        match pool {
+            // The cutoff is applied here (not only inside the tiling entry
+            // point) so sub-cutoff layers use the arena's segmentation
+            // scratch instead of allocating one.
+            Some(p) if self.tiled && p.threads() > 1 && sh.macs() >= PAR_MIN_MACS => {
+                let depth = self
+                    .tile_co
+                    .unwrap_or_else(|| tile_co_for(sh.co, p.threads()));
+                conv2d_tiled_into_depth(&self.inner, p, &s.packed, depth, out);
+            }
+            _ => {
+                out.iter_mut().for_each(|v| *v = 0);
+                self.inner
+                    .conv_co_range_with(&s.packed, 0, sh.co, out, &mut s.seg);
+            }
+        }
     }
 }
 
@@ -146,11 +245,21 @@ impl ConvKernel for HiKonvKernel {
         self.inner.shape()
     }
 
+    fn stride(&self) -> usize {
+        self.stride
+    }
+
     fn new_scratch(&self) -> KernelScratch {
         let sh = self.inner.shape();
+        let full = if self.stride == 1 {
+            Vec::new()
+        } else {
+            vec![0i64; sh.output_len()]
+        };
         Box::new(HiKonvScratch {
             packed: PackedInput::empty(),
             seg: vec![0i64; sh.wi + sh.k - 1],
+            full,
         })
     }
 
@@ -164,23 +273,15 @@ impl ConvKernel for HiKonvKernel {
         let s = scratch
             .downcast_mut::<HiKonvScratch>()
             .expect("scratch built by a different kernel");
-        let sh = self.inner.shape();
         self.inner.pack_input_into(input, &mut s.packed);
-        match pool {
-            // The cutoff is applied here (not only inside the tiling entry
-            // point) so sub-cutoff layers use the arena's segmentation
-            // scratch instead of allocating one.
-            Some(p) if self.tiled && p.threads() > 1 && sh.macs() >= PAR_MIN_MACS => {
-                let depth = self
-                    .tile_co
-                    .unwrap_or_else(|| tile_co_for(sh.co, p.threads()));
-                conv2d_tiled_into_depth(&self.inner, p, &s.packed, depth, out);
-            }
-            _ => {
-                out.iter_mut().for_each(|v| *v = 0);
-                self.inner
-                    .conv_co_range_with(&s.packed, 0, sh.co, out, &mut s.seg);
-            }
+        if self.stride == 1 {
+            self.dense_into(s, out, pool);
+        } else {
+            let sh = self.inner.shape();
+            let mut full = std::mem::take(&mut s.full);
+            self.dense_into(s, &mut full, pool);
+            subsample_into(&full, sh, self.stride, out);
+            s.full = full;
         }
     }
 }
@@ -221,10 +322,14 @@ impl ConvKernel for Im2RowKernel {
         self.inner.spec().shape
     }
 
+    fn stride(&self) -> usize {
+        self.inner.stride()
+    }
+
     fn new_scratch(&self) -> KernelScratch {
         let sh = self.inner.spec().shape;
         Box::new(Im2RowScratch {
-            lhs: self.inner.gemm().lhs_builder(sh.ho() * sh.wo()),
+            lhs: self.inner.gemm().lhs_builder(self.inner.rows()),
             row: vec![0i64; sh.ci * sh.k * sh.k],
         })
     }
@@ -336,6 +441,67 @@ mod tests {
                 assert_seq_eq(&out, &want).unwrap();
                 kernel.conv_into(&input, &mut out, &mut scratch, None);
                 assert_seq_eq(&out, &want).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn strided_kernels_match_the_strided_reference() {
+        use crate::conv::reference::conv2d_ref_strided;
+        // Above the PAR_MIN_MACS cutoff so the pooled dense pass of the
+        // subsample adapter genuinely runs.
+        let shape = ConvShape {
+            ci: 6,
+            co: 12,
+            hi: 10,
+            wi: 34,
+            k: 3,
+        };
+        assert!(shape.macs() >= PAR_MIN_MACS);
+        let spec = Conv2dSpec {
+            shape,
+            mult: Multiplier::CPU32,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+        };
+        let mut rng = Rng::new(45);
+        let weights = rng.quant_signed_vec(4, shape.weight_len());
+        let input = rng.quant_unsigned_vec(4, shape.input_len());
+        let pool = ThreadPool::new(3);
+        for stride in [2usize, 3] {
+            let want = conv2d_ref_strided(&input, &weights, shape, stride);
+            let kernels: Vec<Box<dyn ConvKernel>> = vec![
+                Box::new(BaselineKernel::with_stride(shape, weights.to_vec(), stride)),
+                Box::new(HiKonvKernel::with_stride(
+                    Conv2dHiKonv::new(spec, &weights).unwrap(),
+                    false,
+                    None,
+                    stride,
+                )),
+                Box::new(HiKonvKernel::with_stride(
+                    Conv2dHiKonv::new(spec, &weights).unwrap(),
+                    true,
+                    None,
+                    stride,
+                )),
+                Box::new(Im2RowKernel::new(
+                    Im2RowConv::with_stride(spec, &weights, stride).unwrap(),
+                    None,
+                )),
+            ];
+            for kernel in kernels {
+                assert_eq!(kernel.stride(), stride);
+                assert_eq!(kernel.out_len(), want.len());
+                assert_seq_eq(&kernel.conv(&input, None), &want).unwrap();
+                assert_seq_eq(&kernel.conv(&input, Some(&pool)), &want).unwrap();
+                // Reused scratch stays exact across frames.
+                let mut scratch = kernel.new_scratch();
+                let mut out = vec![31i64; kernel.out_len()];
+                for _ in 0..2 {
+                    kernel.conv_into(&input, &mut out, &mut scratch, Some(&pool));
+                    assert_seq_eq(&out, &want).unwrap();
+                }
             }
         }
     }

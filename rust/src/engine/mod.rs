@@ -130,7 +130,7 @@ pub fn im2row_tiled(eng: &Im2RowConv, pool: &ThreadPool, input: &[i64]) -> Vec<i
         return eng.conv(input);
     }
     let pixels = eng.pack_pixels(input);
-    let mut out = vec![0i64; sh.output_len()];
+    let mut out = vec![0i64; eng.out_len()];
     im2row_tiled_into(eng, pool, &pixels, &mut out);
     out
 }
@@ -160,12 +160,12 @@ pub fn im2row_tiled_into_depth(
     out: &mut [i64],
 ) {
     let sh = eng.spec().shape;
-    assert_eq!(out.len(), sh.output_len(), "output length mismatch");
+    assert_eq!(out.len(), eng.out_len(), "output length mismatch");
     if pool.threads() == 1 || sh.macs() < PAR_MIN_MACS {
         eng.conv_cols(pixels, 0, sh.co, out);
         return;
     }
-    let rows = sh.ho() * sh.wo();
+    let rows = eng.rows();
     let tile_co = tile_co.clamp(1, sh.co);
     pool.par_chunks_mut(out, tile_co * rows, |tile_idx, tile| {
         let co_start = tile_idx * tile_co;

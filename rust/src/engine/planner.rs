@@ -25,38 +25,45 @@
 use super::config::{EngineConfig, KernelChoice};
 use super::registry::{KernelFactory, KernelRegistry};
 use crate::exec::{default_threads, ThreadPool};
-use crate::models::layer::{ConvLayer, ModelSpec};
+use crate::models::graph::{ConvUnit, GraphSpec};
+use crate::models::layer::ModelSpec;
 use crate::theory::{solve_for_lane, AccumMode};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 use crate::util::timer;
 
-/// One layer's resolved kernel choice and its predicted numbers.
+/// One op's resolved kernel choice and its predicted numbers.
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
-    /// Layer name from the [`ModelSpec`].
+    /// Op name (a `ModelSpec` layer name or a graph conv/FC node name).
     pub layer: String,
     /// Chosen kernel (a registry name).
     pub kernel: String,
-    /// MACs per forward pass of this layer.
+    /// MACs per forward pass of this op (strided output resolution).
     pub macs: u64,
+    /// Operand bitwidths the design point was solved at — per-op, which
+    /// is what makes heterogeneous mixed-bitwidth plans visible here.
+    pub p: u32,
+    pub q: u32,
+    /// Output sampling stride (1 = dense).
+    pub stride: usize,
     /// Predicted equivalent ops per wide multiplication on the chosen
     /// kernel (the design point the kernel will actually use).
     pub ops_per_mult: u64,
-    /// Best lane-feasible ops/mult for this layer's bitwidths
+    /// Best lane-feasible ops/mult for this op's bitwidths
     /// ([`solve_for_lane`] with single-block accumulation — the loosest
     /// guard-bit requirement any kernel uses, so this upper-bounds every
     /// backend's achievable `ops_per_mult`).
     pub lane_bound: u64,
     /// Deterministic predicted cost in scalar-op units.
     pub cost: f64,
-    /// Measured nanoseconds per layer execution when the calibration
+    /// Measured nanoseconds per op execution when the calibration
     /// probe ran (`None` otherwise).
     pub probe_ns: Option<f64>,
 }
 
-/// A fully-resolved per-layer execution plan (inspect via
+/// A fully-resolved per-op execution plan (inspect via
 /// [`render`](EnginePlan::render) or the `plan` CLI subcommand).
 #[derive(Clone, Debug)]
 pub struct EnginePlan {
@@ -64,37 +71,65 @@ pub struct EnginePlan {
     pub config: EngineConfig,
     /// Resolved intra-layer thread budget (part of the host signature).
     pub threads: usize,
-    /// One entry per model layer, in layer order.
+    /// One entry per conv-shaped op (graph conv/FC node, or `ModelSpec`
+    /// layer), in execution order.
     pub layers: Vec<LayerPlan>,
 }
 
 impl EnginePlan {
-    /// Plan `model` under `config` against the built-in registry.
+    /// Plan a legacy sequential `model` under `config` against the
+    /// built-in registry (each layer lowers to one stride-1 conv unit).
     pub fn plan(model: &ModelSpec, config: &EngineConfig) -> Result<EnginePlan, String> {
         Self::plan_with(model, config, KernelRegistry::builtin())
     }
 
-    /// Plan against an explicit registry (custom backends).
+    /// [`plan`](Self::plan) against an explicit registry (custom
+    /// backends). Lowers through the graph IR — the same path the runner
+    /// executes — so each unit's input activation width comes from its
+    /// incoming edge (the previous layer's requant), never from the
+    /// layer's own `a_bits` field; plan and execution can therefore
+    /// never disagree, even on heterogeneous-`a_bits` specs.
     pub fn plan_with(
         model: &ModelSpec,
         config: &EngineConfig,
         registry: &KernelRegistry,
     ) -> Result<EnginePlan, String> {
         model.validate()?;
+        let graph: GraphSpec = model.clone().into();
+        let info = graph.validate().map_err(|e| e.to_string())?;
+        Self::plan_units(&info.units, config, registry)
+    }
+
+    /// Plan a layer-graph workload: validate the graph, lower its
+    /// conv/FC nodes to [`ConvUnit`]s, and plan per op — each unit's own
+    /// `(a_bits, w_bits)` feeds the theory solver, so mixed-bitwidth
+    /// graphs get genuinely heterogeneous per-op plans.
+    pub fn plan_graph(graph: &GraphSpec, config: &EngineConfig) -> Result<EnginePlan, String> {
+        let info = graph.validate().map_err(|e| e.to_string())?;
+        Self::plan_units(&info.units, config, KernelRegistry::builtin())
+    }
+
+    /// Plan a bare unit list against a registry — the core the model and
+    /// graph entry points share.
+    pub fn plan_units(
+        units: &[ConvUnit],
+        config: &EngineConfig,
+        registry: &KernelRegistry,
+    ) -> Result<EnginePlan, String> {
         let threads = if config.threads == 0 {
             default_threads()
         } else {
             config.threads
         };
-        let mut layers = Vec::with_capacity(model.layers.len());
-        for l in &model.layers {
+        let mut layers = Vec::with_capacity(units.len());
+        for u in units {
             let lp = match &config.kernel {
                 KernelChoice::Named(name) => {
                     let f = registry.resolve(name)?;
-                    f.supports(l, config)?;
-                    layer_plan(l, config, threads, f, None)?
+                    f.supports(u, config)?;
+                    layer_plan(u, config, threads, f, None)?
                 }
-                KernelChoice::Auto => auto_pick(l, config, threads, registry)?,
+                KernelChoice::Auto => auto_pick(u, config, threads, registry)?,
             };
             layers.push(lp);
         }
@@ -136,7 +171,7 @@ impl EnginePlan {
         }
     }
 
-    /// The per-layer plan table (the `plan` subcommand's output).
+    /// The per-op plan table (the `plan` subcommand's output).
     pub fn render(&self) -> String {
         let mut t = Table::new(
             &format!(
@@ -146,8 +181,10 @@ impl EnginePlan {
                 self.config.mult
             ),
             &[
-                "layer",
+                "op",
                 "kernel",
+                "p/q",
+                "stride",
                 "kMACs",
                 "ops/mult",
                 "lane-best",
@@ -159,6 +196,8 @@ impl EnginePlan {
             t.row(vec![
                 lp.layer.clone(),
                 lp.kernel.clone(),
+                format!("{}/{}", lp.p, lp.q),
+                format!("{}", lp.stride),
                 format!("{}", lp.macs / 1000),
                 format!("{}", lp.ops_per_mult),
                 format!("{}", lp.lane_bound),
@@ -179,6 +218,9 @@ impl EnginePlan {
             let mut o = Json::obj()
                 .set("layer", lp.layer.as_str())
                 .set("kernel", lp.kernel.as_str())
+                .set("p", lp.p as i64)
+                .set("q", lp.q as i64)
+                .set("stride", lp.stride as i64)
                 .set("macs", lp.macs as i64)
                 .set("ops_per_mult", lp.ops_per_mult as i64)
                 .set("lane_bound", lp.lane_bound as i64)
@@ -197,18 +239,18 @@ impl EnginePlan {
     }
 }
 
-/// Build one layer's plan entry from a resolved factory.
+/// Build one op's plan entry from a resolved factory.
 fn layer_plan(
-    l: &ConvLayer,
+    u: &ConvUnit,
     cfg: &EngineConfig,
     threads: usize,
     f: &dyn KernelFactory,
     probe_ns: Option<f64>,
 ) -> Result<LayerPlan, String> {
-    let (p, q) = cfg.layer_bits(l.a_bits, l.w_bits);
+    let (p, q) = cfg.layer_bits(u.a_bits, u.w_bits);
     // Single-block accumulation has the loosest guard-bit requirement of
     // any backend (deeper accumulation only shrinks N·K), so this is a
-    // true per-layer upper bound on ops/mult within the word lane.
+    // true per-op upper bound on ops/mult within the word lane.
     let lane_bound = solve_for_lane(
         cfg.mult,
         p,
@@ -220,37 +262,40 @@ fn layer_plan(
     .map(|dp| dp.ops_per_mult())
     .unwrap_or(1);
     Ok(LayerPlan {
-        layer: l.name.clone(),
+        layer: u.name.clone(),
         kernel: f.name().to_string(),
-        macs: l.macs(),
-        ops_per_mult: f.predicted_ops_per_mult(l, cfg)?,
+        macs: u.macs(),
+        p,
+        q,
+        stride: u.stride,
+        ops_per_mult: f.predicted_ops_per_mult(u, cfg)?,
         lane_bound,
-        cost: f.predicted_cost(l, cfg, threads)?,
+        cost: f.predicted_cost(u, cfg, threads)?,
         probe_ns,
     })
 }
 
-/// `auto` selection for one layer: minimum predicted cost over the
+/// `auto` selection for one op: minimum predicted cost over the
 /// feasible candidates (registration order breaks ties — deterministic);
 /// with the probe enabled, minimum measured time instead.
 fn auto_pick(
-    l: &ConvLayer,
+    u: &ConvUnit,
     cfg: &EngineConfig,
     threads: usize,
     registry: &KernelRegistry,
 ) -> Result<LayerPlan, String> {
     let mut best: Option<(f64, Option<f64>, &dyn KernelFactory)> = None;
     for f in registry.entries() {
-        if f.supports(l, cfg).is_err() {
+        if f.supports(u, cfg).is_err() {
             continue;
         }
-        let Ok(cost) = f.predicted_cost(l, cfg, threads) else {
+        let Ok(cost) = f.predicted_cost(u, cfg, threads) else {
             continue;
         };
         // A candidate that fails to build/probe is skipped like one that
         // fails `supports` — one broken backend must not abort the plan.
         let probe_ns = if cfg.probe {
-            match probe_layer(l, cfg, threads, f) {
+            match probe_unit(u, cfg, threads, f) {
                 Ok(ns) => Some(ns),
                 Err(_) => continue,
             }
@@ -263,27 +308,27 @@ fn auto_pick(
         }
     }
     let (_, probe_ns, f) =
-        best.ok_or_else(|| format!("no registered kernel supports layer '{}'", l.name))?;
-    layer_plan(l, cfg, threads, f, probe_ns)
+        best.ok_or_else(|| format!("no registered kernel supports op '{}'", u.name))?;
+    layer_plan(u, cfg, threads, f, probe_ns)
 }
 
 /// Time one candidate kernel on deterministic synthetic data: build with
 /// synthetic weights, run once warm, once timed. Returns nanoseconds.
-fn probe_layer(
-    l: &ConvLayer,
+fn probe_unit(
+    u: &ConvUnit,
     cfg: &EngineConfig,
     threads: usize,
     f: &dyn KernelFactory,
 ) -> Result<f64, String> {
-    let (p, q) = cfg.layer_bits(l.a_bits, l.w_bits);
-    let mut rng = Rng::new(0x9106 ^ l.macs());
-    let weights = rng.quant_signed_vec(q, l.weight_len());
-    let sh = l.padded_shape();
+    let (p, q) = cfg.layer_bits(u.a_bits, u.w_bits);
+    let mut rng = Rng::new(0x9106 ^ u.macs());
+    let weights = rng.quant_signed_vec(q, u.weight_len());
+    let sh = u.padded_shape();
     let input = rng.quant_unsigned_vec(p, sh.input_len());
-    let kernel = f.build(l, &weights, cfg)?;
+    let kernel = f.build(u, &weights, cfg)?;
     let pool = ThreadPool::new(threads);
     let pool_opt = f.uses_pool().then_some(&pool);
-    let mut out = vec![0i64; sh.output_len()];
+    let mut out = vec![0i64; kernel.out_len()];
     let mut scratch = kernel.new_scratch();
     kernel.conv_into(&input, &mut out, &mut scratch, pool_opt);
     let (_, dt) = timer::time(|| kernel.conv_into(&input, &mut out, &mut scratch, pool_opt));
@@ -293,6 +338,7 @@ fn probe_layer(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::layer::ConvLayer;
     use crate::models::ultranet::{ultranet, ultranet_tiny};
 
     #[test]
@@ -388,5 +434,41 @@ mod tests {
         let s = plan.summary();
         assert!(s.starts_with("auto["), "{s}");
         assert!(s.contains('*'), "{s}");
+    }
+
+    #[test]
+    fn graph_plans_are_per_op_and_honor_mixed_bitwidths() {
+        let g = GraphSpec::new("mixed", (3, 16, 16), 8)
+            .conv("wide", 8, 3, 1, 1, 8)
+            .requant(3)
+            .conv("narrow", 8, 3, 1, 1, 3)
+            .requant(4)
+            .fc("head", 10, 4);
+        let plan = EnginePlan::plan_graph(&g, &EngineConfig::auto().with_threads(1)).unwrap();
+        assert_eq!(plan.layers.len(), 3, "{:?}", plan.layers);
+        // Per-op bitwidths flow into the plan entries...
+        assert_eq!((plan.layers[0].p, plan.layers[0].q), (8, 8));
+        assert_eq!((plan.layers[1].p, plan.layers[1].q), (3, 3));
+        // ...and the narrower op packs strictly more ops per wide mult.
+        assert!(
+            plan.layers[1].ops_per_mult > plan.layers[0].ops_per_mult,
+            "{:?}",
+            plan.layers
+        );
+        // Deterministic across replans.
+        let again = EnginePlan::plan_graph(&g, &EngineConfig::auto().with_threads(1)).unwrap();
+        assert_eq!(again.kernel_names(), plan.kernel_names());
+    }
+
+    #[test]
+    fn strided_ops_plan_onto_a_natively_strided_kernel() {
+        // A large stride-2 downsampling conv: the hikonv subsample
+        // adapter is charged dense cost, so `auto` must prefer the
+        // natively-strided im2row lowering (or baseline) for it.
+        let g = GraphSpec::new("down", (16, 64, 64), 4).conv("down", 32, 3, 2, 1, 4);
+        let plan = EnginePlan::plan_graph(&g, &EngineConfig::auto().with_threads(1)).unwrap();
+        assert_eq!(plan.layers[0].stride, 2);
+        assert_ne!(plan.layers[0].kernel, "hikonv", "{:?}", plan.layers[0]);
+        assert_ne!(plan.layers[0].kernel, "hikonv-tiled", "{:?}", plan.layers[0]);
     }
 }

@@ -13,12 +13,16 @@ use super::kernel::{BaselineKernel, ConvKernel, HiKonvKernel, Im2RowKernel};
 use super::PAR_MIN_MACS;
 use crate::conv::conv2d::{planned_design, row_pass_cost, Conv2dHiKonv, Conv2dSpec};
 use crate::conv::im2row::Im2RowConv;
-use crate::models::layer::ConvLayer;
+use crate::models::graph::ConvUnit;
 use crate::theory::{solve, AccumMode, DesignPoint};
 use std::sync::OnceLock;
 
 /// A registrable convolution backend: feasibility, theory scoring, and
-/// construction of bound [`ConvKernel`] instances.
+/// construction of bound [`ConvKernel`] instances. All hooks consume the
+/// graph IR's per-op [`ConvUnit`] descriptor (a whole `ModelSpec` lowers
+/// to units via its `GraphSpec` conversion), so the same backend serves
+/// strided convs, FC matmuls and per-op mixed bitwidths without
+/// layer-API coupling.
 pub trait KernelFactory: Send + Sync {
     /// Unique registry name (the `--engine` spelling).
     fn name(&self) -> &'static str;
@@ -32,21 +36,22 @@ pub trait KernelFactory: Send + Sync {
         false
     }
 
-    /// Feasibility of this backend for `layer` under `cfg` (`Err` says
+    /// Feasibility of this backend for `unit` under `cfg` (`Err` says
     /// why not — e.g. operands wider than the multiplier ports).
-    fn supports(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<(), String>;
+    fn supports(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<(), String>;
 
     /// Theory score: equivalent low-bitwidth convolution ops one wide
     /// multiplication delivers on this backend (`theory::solver`,
-    /// §III-C) — 1 for the scalar baseline.
-    fn predicted_ops_per_mult(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<u64, String>;
+    /// §III-C) — 1 for the scalar baseline. Solved at the unit's own
+    /// `(a_bits, w_bits)`, so mixed-precision graphs get per-op points.
+    fn predicted_ops_per_mult(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<u64, String>;
 
     /// Deterministic cost model in scalar-op units (lower is better):
-    /// what the planner minimizes when `auto` selects per layer.
+    /// what the planner minimizes when `auto` selects per op.
     /// `threads` is the resolved intra-layer thread budget.
     fn predicted_cost(
         &self,
-        layer: &ConvLayer,
+        unit: &ConvUnit,
         cfg: &EngineConfig,
         threads: usize,
     ) -> Result<f64, String>;
@@ -54,17 +59,17 @@ pub trait KernelFactory: Send + Sync {
     /// Build a kernel with bound `weights` (`co·ci·k·k` levels).
     fn build(
         &self,
-        layer: &ConvLayer,
+        unit: &ConvUnit,
         weights: &[i64],
         cfg: &EngineConfig,
     ) -> Result<Box<dyn ConvKernel>, String>;
 }
 
-/// The engine-side `Conv2dSpec` for a layer under a config.
-fn conv_spec(layer: &ConvLayer, cfg: &EngineConfig) -> Conv2dSpec {
-    let (p, q) = cfg.layer_bits(layer.a_bits, layer.w_bits);
+/// The engine-side `Conv2dSpec` for a unit under a config.
+fn conv_spec(unit: &ConvUnit, cfg: &EngineConfig) -> Conv2dSpec {
+    let (p, q) = cfg.layer_bits(unit.a_bits, unit.w_bits);
     Conv2dSpec {
-        shape: layer.padded_shape(),
+        shape: unit.padded_shape(),
         mult: cfg.mult,
         p,
         q,
@@ -102,13 +107,13 @@ impl KernelFactory for BaselineFactory {
         "conventional 6-loop nest (Eq. 17)"
     }
 
-    fn supports(&self, _layer: &ConvLayer, _cfg: &EngineConfig) -> Result<(), String> {
+    fn supports(&self, _unit: &ConvUnit, _cfg: &EngineConfig) -> Result<(), String> {
         Ok(())
     }
 
     fn predicted_ops_per_mult(
         &self,
-        _layer: &ConvLayer,
+        _unit: &ConvUnit,
         _cfg: &EngineConfig,
     ) -> Result<u64, String> {
         Ok(1)
@@ -116,23 +121,25 @@ impl KernelFactory for BaselineFactory {
 
     fn predicted_cost(
         &self,
-        layer: &ConvLayer,
+        unit: &ConvUnit,
         _cfg: &EngineConfig,
         _threads: usize,
     ) -> Result<f64, String> {
-        // One scalar multiply + one add per MAC.
-        Ok(2.0 * layer.macs() as f64)
+        // One scalar multiply + one add per MAC; the baseline loop is
+        // natively strided, so only strided output positions are charged.
+        Ok(2.0 * unit.macs() as f64)
     }
 
     fn build(
         &self,
-        layer: &ConvLayer,
+        unit: &ConvUnit,
         weights: &[i64],
         _cfg: &EngineConfig,
     ) -> Result<Box<dyn ConvKernel>, String> {
-        Ok(Box::new(BaselineKernel::new(
-            layer.padded_shape(),
+        Ok(Box::new(BaselineKernel::with_stride(
+            unit.padded_shape(),
             weights.to_vec(),
+            unit.stride,
         )))
     }
 }
@@ -145,13 +152,9 @@ struct HiKonvFactory {
 
 impl HiKonvFactory {
     /// The channel block + design point the engine will actually use
-    /// (honoring a config override, clamped to the layer's `ci`).
-    fn design(
-        &self,
-        layer: &ConvLayer,
-        cfg: &EngineConfig,
-    ) -> Result<(usize, DesignPoint), String> {
-        let spec = conv_spec(layer, cfg);
+    /// (honoring a config override, clamped to the unit's `ci`).
+    fn design(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<(usize, DesignPoint), String> {
+        let spec = conv_spec(unit, cfg);
         match cfg.channel_block {
             Some(b) => {
                 let block = b.clamp(1, spec.shape.ci);
@@ -173,10 +176,13 @@ impl HiKonvFactory {
     /// Serial cost: the engine's own per-row wide-mul + segmentation
     /// model ([`row_pass_cost`], the exact formula `choose_channel_block`
     /// minimizes) scaled to the whole layer, with the wide (`i128`) lane
-    /// penalized.
-    fn serial_cost(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<f64, String> {
-        let spec = conv_spec(layer, cfg);
-        let (block, dp) = self.design(layer, cfg)?;
+    /// penalized. Charged at **dense stride-1 resolution**: the
+    /// overlap-add engine computes the full map and subsamples for
+    /// `stride > 1`, so the planner honestly prefers natively-strided
+    /// backends on downsampling ops.
+    fn serial_cost(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<f64, String> {
+        let spec = conv_spec(unit, cfg);
+        let (block, dp) = self.design(unit, cfg)?;
         let sh = spec.shape;
         let mut cost = (sh.co * sh.ho()) as f64 * row_pass_cost(&spec, block, &dp) as f64;
         if !dp.fits_lane(ENGINE_LANE_BITS) {
@@ -207,33 +213,30 @@ impl KernelFactory for HiKonvFactory {
         self.tiled
     }
 
-    fn supports(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<(), String> {
-        self.design(layer, cfg).map(|_| ())
+    fn supports(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<(), String> {
+        self.design(unit, cfg).map(|_| ())
     }
 
-    fn predicted_ops_per_mult(
-        &self,
-        layer: &ConvLayer,
-        cfg: &EngineConfig,
-    ) -> Result<u64, String> {
-        Ok(self.design(layer, cfg)?.1.ops_per_mult())
+    fn predicted_ops_per_mult(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<u64, String> {
+        Ok(self.design(unit, cfg)?.1.ops_per_mult())
     }
 
     fn predicted_cost(
         &self,
-        layer: &ConvLayer,
+        unit: &ConvUnit,
         cfg: &EngineConfig,
         threads: usize,
     ) -> Result<f64, String> {
-        let serial = self.serial_cost(layer, cfg)?;
+        let serial = self.serial_cost(unit, cfg)?;
         if !self.tiled {
             return Ok(serial);
         }
         // Tiling pays a per-layer worker spawn; below the serial cutoff
         // (or without threads) it cannot win, so `auto` plans stay honest
-        // about which layers actually shard.
-        if threads > 1 && layer.macs() >= PAR_MIN_MACS {
-            Ok(serial / threads.min(layer.co) as f64 + POOL_SPAWN_COST)
+        // about which layers actually shard. The dense-pass cutoff uses
+        // full-resolution MACs (what the engine really executes).
+        if threads > 1 && unit.full_macs() >= PAR_MIN_MACS {
+            Ok(serial / threads.min(unit.co) as f64 + POOL_SPAWN_COST)
         } else {
             Ok(serial + POOL_SPAWN_COST)
         }
@@ -241,16 +244,21 @@ impl KernelFactory for HiKonvFactory {
 
     fn build(
         &self,
-        layer: &ConvLayer,
+        unit: &ConvUnit,
         weights: &[i64],
         cfg: &EngineConfig,
     ) -> Result<Box<dyn ConvKernel>, String> {
-        let spec = conv_spec(layer, cfg);
+        let spec = conv_spec(unit, cfg);
         let eng = match cfg.channel_block {
             Some(b) => Conv2dHiKonv::with_block(spec, weights, b.clamp(1, spec.shape.ci))?,
             None => Conv2dHiKonv::new(spec, weights)?,
         };
-        Ok(Box::new(HiKonvKernel::new(eng, self.tiled, cfg.tile_co)))
+        Ok(Box::new(HiKonvKernel::with_stride(
+            eng,
+            self.tiled,
+            cfg.tile_co,
+            unit.stride,
+        )))
     }
 }
 
@@ -259,8 +267,8 @@ struct Im2RowFactory;
 
 impl Im2RowFactory {
     /// The single-block design point the GEMM kernel will actually use.
-    fn design(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<DesignPoint, String> {
-        let spec = conv_spec(layer, cfg);
+    fn design(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<DesignPoint, String> {
+        let spec = conv_spec(unit, cfg);
         solve(
             spec.mult,
             spec.p,
@@ -278,34 +286,33 @@ impl KernelFactory for Im2RowFactory {
     }
 
     fn describe(&self) -> &'static str {
-        "im2row lowering over the pre-packed GEMM (FC-shaped layers too)"
+        "im2row lowering over the pre-packed GEMM (strided + FC-shaped ops natively)"
     }
 
     fn uses_pool(&self) -> bool {
         true
     }
 
-    fn supports(&self, layer: &ConvLayer, cfg: &EngineConfig) -> Result<(), String> {
-        self.design(layer, cfg).map(|_| ())
+    fn supports(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<(), String> {
+        self.design(unit, cfg).map(|_| ())
     }
 
-    fn predicted_ops_per_mult(
-        &self,
-        layer: &ConvLayer,
-        cfg: &EngineConfig,
-    ) -> Result<u64, String> {
-        Ok(self.design(layer, cfg)?.ops_per_mult())
+    fn predicted_ops_per_mult(&self, unit: &ConvUnit, cfg: &EngineConfig) -> Result<u64, String> {
+        Ok(self.design(unit, cfg)?.ops_per_mult())
     }
 
     fn predicted_cost(
         &self,
-        layer: &ConvLayer,
+        unit: &ConvUnit,
         cfg: &EngineConfig,
         threads: usize,
     ) -> Result<f64, String> {
-        let dp = self.design(layer, cfg)?;
-        let sh = conv_spec(layer, cfg).shape;
-        let rows = (sh.ho() * sh.wo()) as f64;
+        let dp = self.design(unit, cfg)?;
+        let sh = conv_spec(unit, cfg).shape;
+        // Natively strided: only strided output rows are gathered and
+        // multiplied — the cost scales with the strided pixel count.
+        let (ho_s, wo_s) = unit.conv_out();
+        let rows = (ho_s * wo_s) as f64;
         let k_dim = (sh.ci * sh.k * sh.k) as f64;
         // The GEMM folds `min(N, K)` terms per wide multiplication; the
         // per-output segment extraction shards with the column tiles,
@@ -318,8 +325,8 @@ impl KernelFactory for Im2RowFactory {
             compute *= WIDE_LANE_PENALTY;
         }
         let packing = rows * k_dim;
-        if threads > 1 && layer.macs() >= PAR_MIN_MACS {
-            Ok(compute / threads.min(layer.co) as f64 + packing + POOL_SPAWN_COST)
+        if threads > 1 && unit.full_macs() >= PAR_MIN_MACS {
+            Ok(compute / threads.min(unit.co) as f64 + packing + POOL_SPAWN_COST)
         } else {
             Ok(compute + packing + POOL_SPAWN_COST)
         }
@@ -327,11 +334,11 @@ impl KernelFactory for Im2RowFactory {
 
     fn build(
         &self,
-        layer: &ConvLayer,
+        unit: &ConvUnit,
         weights: &[i64],
         cfg: &EngineConfig,
     ) -> Result<Box<dyn ConvKernel>, String> {
-        let eng = Im2RowConv::new(conv_spec(layer, cfg), weights)?;
+        let eng = Im2RowConv::with_stride(conv_spec(unit, cfg), weights, unit.stride)?;
         Ok(Box::new(Im2RowKernel::new(eng, cfg.tile_co)))
     }
 }
@@ -450,16 +457,16 @@ mod tests {
     use crate::testing::assert_seq_eq;
     use crate::util::rng::Rng;
 
-    fn layer() -> ConvLayer {
-        ConvLayer {
+    fn layer() -> ConvUnit {
+        ConvUnit {
             name: "t".into(),
             ci: 4,
             co: 6,
             hi: 8,
             wi: 12,
             k: 3,
+            stride: 1,
             pad: 1,
-            pool_after: false,
             a_bits: 4,
             w_bits: 4,
         }
@@ -540,6 +547,66 @@ mod tests {
     }
 
     #[test]
+    fn strided_and_fc_units_build_exact_kernels_everywhere() {
+        use crate::conv::reference::conv2d_ref_strided;
+        let cfg = EngineConfig::auto();
+        let mut rng = Rng::new(11);
+        // A stride-2 downsampling unit...
+        let mut strided = layer();
+        strided.stride = 2;
+        let weights = rng.quant_signed_vec(4, strided.weight_len());
+        let sh = strided.padded_shape();
+        let input = rng.quant_unsigned_vec(4, sh.input_len());
+        let want = conv2d_ref_strided(&input, &weights, sh, 2);
+        for f in KernelRegistry::builtin().entries() {
+            f.supports(&strided, &cfg).unwrap();
+            let kernel = f.build(&strided, &weights, &cfg).unwrap();
+            assert_eq!(kernel.out_len(), want.len(), "{}", f.name());
+            crate::testing::assert_seq_eq(&kernel.conv(&input, None), &want).unwrap();
+        }
+        // ...and an FC-shaped unit (k = 1 over a 1x1 spatial extent).
+        let fc = ConvUnit {
+            name: "fc".into(),
+            ci: 24,
+            co: 5,
+            hi: 1,
+            wi: 1,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            a_bits: 4,
+            w_bits: 4,
+        };
+        let fw = rng.quant_signed_vec(4, fc.weight_len());
+        let fin = rng.quant_unsigned_vec(4, fc.padded_shape().input_len());
+        let fwant = crate::conv::reference::conv2d_ref(&fin, &fw, fc.padded_shape());
+        for f in KernelRegistry::builtin().entries() {
+            f.supports(&fc, &cfg).unwrap();
+            let kernel = f.build(&fc, &fw, &cfg).unwrap();
+            crate::testing::assert_seq_eq(&kernel.conv(&fin, None), &fwant).unwrap();
+        }
+    }
+
+    #[test]
+    fn per_unit_bitwidths_change_the_solved_design_point() {
+        let cfg = EngineConfig::auto();
+        let reg = KernelRegistry::builtin();
+        let hikonv = reg.get("hikonv").unwrap();
+        let mut narrow = layer();
+        narrow.a_bits = 2;
+        narrow.w_bits = 2;
+        let mut wide = layer();
+        wide.a_bits = 8;
+        wide.w_bits = 8;
+        let n = hikonv.predicted_ops_per_mult(&narrow, &cfg).unwrap();
+        let w = hikonv.predicted_ops_per_mult(&wide, &cfg).unwrap();
+        assert!(
+            n > w,
+            "narrower operands must pack more ops per mult ({n} vs {w})"
+        );
+    }
+
+    #[test]
     fn custom_backends_register_and_resolve() {
         struct EchoFactory;
         impl KernelFactory for EchoFactory {
@@ -549,19 +616,19 @@ mod tests {
             fn describe(&self) -> &'static str {
                 "test stub"
             }
-            fn supports(&self, _l: &ConvLayer, _c: &EngineConfig) -> Result<(), String> {
+            fn supports(&self, _l: &ConvUnit, _c: &EngineConfig) -> Result<(), String> {
                 Err("stub".into())
             }
             fn predicted_ops_per_mult(
                 &self,
-                _l: &ConvLayer,
+                _l: &ConvUnit,
                 _c: &EngineConfig,
             ) -> Result<u64, String> {
                 Ok(1)
             }
             fn predicted_cost(
                 &self,
-                _l: &ConvLayer,
+                _l: &ConvUnit,
                 _c: &EngineConfig,
                 _t: usize,
             ) -> Result<f64, String> {
@@ -569,7 +636,7 @@ mod tests {
             }
             fn build(
                 &self,
-                _l: &ConvLayer,
+                _l: &ConvUnit,
                 _w: &[i64],
                 _c: &EngineConfig,
             ) -> Result<Box<dyn ConvKernel>, String> {

@@ -23,7 +23,10 @@
 //! * [`quant`] — quantized tensor types and quantizers.
 //! * [`dsp`] — the FPGA substrate: a bit-accurate DSP48E2 functional model,
 //!   LUT resource model and the UltraNet performance model (Tables I & II).
-//! * [`models`] — UltraNet (DAC-SDC 2020 champion) layer table and CPU runner.
+//! * [`models`] — the quantized layer-graph IR (`GraphSpec`/`LayerOp` with
+//!   typed `QType` activation edges), the graph runner that compiles it
+//!   into fused arena step programs, the built-in workload zoo, and the
+//!   UltraNet (DAC-SDC 2020 champion) layer table as a thin shim over it.
 //! * [`engine`] — unified engine configuration ([`engine::EngineConfig`]
 //!   builder + textual grammar), the object-safe [`engine::ConvKernel`]
 //!   trait and [`engine::KernelRegistry`] backends plug into, and the

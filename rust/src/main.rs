@@ -6,14 +6,20 @@
 //! hikonv solve   --bit-a 27 --bit-b 18 --p 4 --q 4 [--signed] [--m 1]
 //! hikonv dse     --bit-a 32 --bit-b 32            design-space exploration
 //! hikonv fig5 | fig6a | fig6b | fig6c | table1 | table2
-//! hikonv plan    --engine auto [--threads N] [--full-model] [--probe]
-//!                [--dse] [--json]       print the per-layer engine plan
+//! hikonv plan    --engine auto [--model <workload>] [--threads N]
+//!                [--probe] [--dse] [--json]  print the per-op engine plan
 //! hikonv serve   --backend <engine-spec>|pjrt
 //!                --frames 64 [--fps-cap 401] [--workers N] [--threads N]
 //!                [--batch N] [--linger-ms MS] [--queue-depth N]
-//! hikonv run-model --engine <engine-spec>
-//!                [--threads N] [--batch N]    one UltraNet-tiny inference
+//! hikonv run-model --engine <engine-spec> [--model <workload>]
+//!                [--threads N] [--batch N]    one graph-workload inference
 //! ```
+//!
+//! `<workload>` is a built-in graph model (`hikonv::models::zoo`):
+//! `ultranet`, `ultranet-tiny` (default), `strided` (stride-2
+//! downsampling convs), `fc-head` (conv backbone + FC classifier),
+//! `residual` (skip connection), `mixed` (heterogeneous per-layer
+//! bitwidths). `--full-model` stays as an alias for `--model ultranet`.
 //!
 //! `<engine-spec>` is the unified engine-configuration grammar
 //! (`hikonv::engine::EngineConfig`): `auto` or a registered kernel name,
@@ -37,7 +43,8 @@ use hikonv::coordinator::{serve, ServeConfig};
 use hikonv::engine::{EngineConfig, EnginePlan, KernelRegistry};
 use hikonv::experiments::{fig5, fig6, table1, table2};
 use hikonv::models::ultranet::ultranet_tiny;
-use hikonv::models::{random_weights, ultranet, CpuRunner};
+use hikonv::models::{random_graph_weights, random_weights, zoo};
+use hikonv::models::{ultranet, CpuRunner, GraphRunner, GraphSpec};
 use hikonv::runtime::{artifacts, Runtime};
 use hikonv::theory::{
     explore, pareto_points, solve, AccumMode, Multiplier, Signedness,
@@ -124,6 +131,17 @@ fn parse_engine_spec(args: &Args, key: &str, default: &str) -> Result<EngineConf
         config = config.with_probe(true);
     }
     Ok(config)
+}
+
+/// Resolve the graph workload named by `--model` (with `--full-model`
+/// kept as an alias for `--model ultranet`).
+fn parse_model(args: &Args) -> Result<GraphSpec, String> {
+    let name = if args.has("full-model") {
+        "ultranet".to_string()
+    } else {
+        args.get_or("model", "ultranet-tiny")
+    };
+    zoo::build(&name)
 }
 
 fn parse_signedness(args: &Args) -> Signedness {
@@ -258,29 +276,25 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
 fn cmd_run_model(args: &Args) -> Result<(), String> {
     let engine = parse_engine_spec(args, "engine", "hikonv")?;
-    let model = if args.has("full-model") {
-        ultranet()
-    } else {
-        ultranet_tiny()
-    };
-    let weights = random_weights(&model, args.get_u64("seed", 7)?);
-    let runner = CpuRunner::new(model.clone(), weights, engine)?;
+    let graph = parse_model(args)?;
+    let weights = random_graph_weights(&graph, args.get_u64("seed", 7)?)?;
+    let runner = GraphRunner::new(graph.clone(), weights, engine)?;
     let label = runner.label();
-    let (c, h, w) = model.input;
+    let (c, h, w) = graph.input;
     let mut rng = hikonv::util::rng::Rng::new(1);
     let batch = args.get_usize("batch", 1)?.max(1);
     if batch > 1 {
         // Fused batched inference: whole frames sharded across the
         // engine's thread pool, per-worker arenas reused.
         let frames: Vec<Vec<i64>> = (0..batch)
-            .map(|_| rng.quant_unsigned_vec(4, c * h * w))
+            .map(|_| rng.quant_unsigned_vec(graph.input_bits, c * h * w))
             .collect();
         let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
         let (outs, dt) = hikonv::util::timer::time(|| runner.infer_batch(&refs));
         let cell = runner.decode(&outs[0]);
         println!(
             "{} ({label}): batch {} in {:.2} ms ({:.2} ms/frame, {:.1} fps), first cell {:?}",
-            model.name,
+            graph.name,
             batch,
             dt * 1e3,
             dt * 1e3 / batch as f64,
@@ -289,28 +303,24 @@ fn cmd_run_model(args: &Args) -> Result<(), String> {
         );
         return Ok(());
     }
-    let frame = rng.quant_unsigned_vec(4, c * h * w);
+    let frame = rng.quant_unsigned_vec(graph.input_bits, c * h * w);
     let (out, dt) = hikonv::util::timer::time(|| runner.infer(&frame));
     let cell = runner.decode(&out);
     println!(
-        "{} ({label}): {:.2} ms/frame, detection cell {:?}",
-        model.name,
+        "{} ({label}): {:.2} ms/frame, peak cell {:?}",
+        graph.name,
         dt * 1e3,
         cell
     );
     Ok(())
 }
 
-/// Print the per-layer engine plan (kernel choice + predicted ops/mult
-/// from the theory solver) for a model under an engine spec.
+/// Print the per-op engine plan (kernel choice + predicted ops/mult
+/// from the theory solver) for a graph workload under an engine spec.
 fn cmd_plan(args: &Args) -> Result<(), String> {
     let engine = parse_engine_spec(args, "engine", "auto")?;
-    let model = if args.has("full-model") {
-        ultranet()
-    } else {
-        ultranet_tiny()
-    };
-    let plan = EnginePlan::plan(&model, &engine)?;
+    let graph = parse_model(args)?;
+    let plan = EnginePlan::plan_graph(&graph, &engine)?;
     print!("{}", plan.render());
     if args.has("dse") {
         // Bitwidth context: what a model/hardware co-design could pick on
@@ -340,6 +350,12 @@ fn help() -> String {
             name: "engine",
             help: "engine spec: auto | <kernel>[@AxB][:k=v,...]",
             default: Some("auto"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "model",
+            help: "graph workload: ultranet | ultranet-tiny | strided | fc-head | residual | mixed",
+            default: Some("ultranet-tiny"),
             is_switch: false,
         },
         OptSpec {
@@ -425,6 +441,12 @@ fn help() -> String {
             is_switch: false,
         },
         OptSpec {
+            name: "model",
+            help: "graph workload: ultranet | ultranet-tiny | strided | fc-head | residual | mixed",
+            default: Some("ultranet-tiny"),
+            is_switch: false,
+        },
+        OptSpec {
             name: "threads",
             help: "intra-layer tiling threads (hikonv-tiled, im2row; 0 = auto)",
             default: Some("0"),
@@ -448,9 +470,9 @@ fn help() -> String {
             ("fig6c", "speedup vs bitwidth sweep", none),
             ("table1", "BNN resource comparison (paper Table I)", none),
             ("table2", "UltraNet fps / DSP efficiency (paper Table II)", none),
-            ("plan", "print the per-layer engine plan (theory-driven)", plan_opts),
+            ("plan", "print the per-op engine plan (theory-driven)", plan_opts),
             ("serve", "run the streaming serving pipeline", serve_opts),
-            ("run-model", "single UltraNet inference on CPU engines", run_model_opts),
+            ("run-model", "single graph-workload inference on CPU engines", run_model_opts),
         ],
     )
 }

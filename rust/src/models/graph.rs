@@ -1,0 +1,661 @@
+//! The quantized layer-graph IR: a [`GraphSpec`] of [`LayerOp`] nodes
+//! with typed [`QType`] activations flowing between them.
+//!
+//! HiKonv's §VI generalization says one bit-packed full-width multiplier
+//! serves *any* convolution-shaped workload — strided convs, FC/attention
+//! matmuls, residual topologies, per-layer mixed bitwidths. The original
+//! [`ModelSpec`](super::layer::ModelSpec) could only express UltraNet's
+//! stride-1 conv→requant→2×2-pool chain; this IR is the general form:
+//!
+//! * [`LayerOp::Conv2d`] — strided/padded convolution (any `stride ≥ 1`).
+//! * [`LayerOp::Fc`] — fully-connected head: flatten + matmul, lowered
+//!   onto the same conv kernels as a 1×1 convolution over a 1×1 spatial
+//!   extent (the pre-packed GEMM path serves it natively).
+//! * [`LayerOp::MaxPool`] / [`LayerOp::AvgPool`] — first-class pooling,
+//!   decoupled from convolution (`k×k` window, stride `k`).
+//! * [`LayerOp::Relu`], [`LayerOp::Requant`] — explicit activation flow
+//!   (`Requant` floors at 0 then right-shifts and clamps, so
+//!   `Relu → Requant ≡ Requant`; the fused epilogue exploits this).
+//! * [`LayerOp::Add`] — residual addition with an earlier node's output.
+//!
+//! [`GraphSpec::validate`] infers every edge's dims and [`QType`]
+//! (bits / signedness / scale) and rejects inconsistent graphs with a
+//! [`RuntimeError`] — including the degenerate `k > hi + 2·pad` case
+//! that would underflow `usize` shape math if left unchecked. Validation
+//! also lowers each compute node to a [`ConvUnit`], the per-op work
+//! descriptor the kernel registry and planner consume: per-unit
+//! bitwidths feed the theory solver, which is what makes heterogeneous
+//! mixed-bitwidth plans possible.
+//!
+//! `ModelSpec` converts losslessly into a `GraphSpec`
+//! (`Conv2d → Requant → [MaxPool 2]` per layer), so the legacy API is a
+//! thin shim over this IR.
+
+use super::layer::ModelSpec;
+use crate::conv::reference::{strided_out, ConvShape};
+use crate::runtime::RuntimeError;
+
+/// Accumulator-edge width marker: conv/add outputs are wide signed
+/// integers, not `bits ≤ 8` levels. 62 leaves headroom in the i64 lane.
+pub const ACC_BITS: u32 = 62;
+
+/// The quantized type of one activation edge: level bitwidth,
+/// signedness, and the (best-effort) real-value scale. Edge types are
+/// inferred by [`GraphSpec::validate`]; the scale is informational —
+/// requantization shifts are calibrated at runtime, which refines it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QType {
+    pub bits: u32,
+    pub signed: bool,
+    pub scale: f32,
+}
+
+impl QType {
+    /// Unsigned levels of `bits` bits (quantized activations).
+    pub fn unsigned(bits: u32) -> QType {
+        QType {
+            bits,
+            signed: false,
+            scale: 1.0,
+        }
+    }
+
+    /// A wide signed accumulator edge (conv/FC/add output).
+    pub fn accumulator(scale: f32) -> QType {
+        QType {
+            bits: ACC_BITS,
+            signed: true,
+            scale,
+        }
+    }
+
+    /// Whether this edge carries narrow quantized levels an engine can
+    /// pack (as opposed to a wide accumulator).
+    pub fn is_narrow(&self) -> bool {
+        self.bits <= 8
+    }
+
+    /// Valid level range for this type.
+    pub fn level_range(&self) -> (i64, i64) {
+        if self.signed {
+            (-(1i64 << (self.bits - 1)), (1i64 << (self.bits - 1)) - 1)
+        } else {
+            (0, (1i64 << self.bits) - 1)
+        }
+    }
+}
+
+/// One operation of the layer graph. Spatial/channel input dims are not
+/// stored on the op — they are inferred edge state ([`GraphSpec::validate`]),
+/// so graphs compose without redundant bookkeeping.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerOp {
+    /// 2-D convolution: `co` output channels, square `k×k` kernel,
+    /// output sampled every `stride` pixels, symmetric zero `pad`.
+    /// Weights are signed `w_bits`-bit levels; the incoming edge must
+    /// carry narrow unsigned levels (requantize first).
+    Conv2d {
+        co: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        w_bits: u32,
+    },
+    /// Fully-connected layer over the flattened input (`ci = c·h·w`),
+    /// lowered onto the conv kernels as a 1×1 conv at 1×1 spatial extent
+    /// — the pre-packed GEMM serves it as a pure matmul.
+    Fc { co: usize, w_bits: u32 },
+    /// `k×k` max-pool, stride `k` (floor semantics on ragged edges).
+    MaxPool { k: usize },
+    /// `k×k` average-pool, stride `k`; window sums floor-divide by `k²`.
+    AvgPool { k: usize },
+    /// Elementwise `max(v, 0)`.
+    Relu,
+    /// ReLU + calibrated right-shift + clamp to unsigned `bits` levels:
+    /// `v ↦ (max(v, 0) >> shift) min (2^bits - 1)`. The shift is
+    /// calibrated per node at runner construction.
+    Requant { bits: u32 },
+    /// Residual addition with the output of earlier node `with`
+    /// (same dims required; output widens by one bit).
+    Add { with: usize },
+}
+
+impl LayerOp {
+    /// Short op mnemonic for tables and auto-generated node names.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            LayerOp::Conv2d { .. } => "conv2d",
+            LayerOp::Fc { .. } => "fc",
+            LayerOp::MaxPool { .. } => "maxpool",
+            LayerOp::AvgPool { .. } => "avgpool",
+            LayerOp::Relu => "relu",
+            LayerOp::Requant { .. } => "requant",
+            LayerOp::Add { .. } => "add",
+        }
+    }
+}
+
+/// One named node of a [`GraphSpec`].
+#[derive(Clone, Debug)]
+pub struct GraphNode {
+    pub name: String,
+    pub op: LayerOp,
+}
+
+/// A linear sequence of [`LayerOp`] nodes (residual edges reference
+/// earlier nodes by index), with the quantized input declared up front.
+///
+/// Build with the chainable helpers ([`conv`](Self::conv),
+/// [`fc`](Self::fc), [`maxpool`](Self::maxpool), [`requant`](Self::requant),
+/// [`add`](Self::add), ...) and check with [`validate`](Self::validate).
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    /// Input planes × H × W.
+    pub input: (usize, usize, usize),
+    /// Bitwidth of the (unsigned) quantized input levels.
+    pub input_bits: u32,
+    pub nodes: Vec<GraphNode>,
+}
+
+impl GraphSpec {
+    pub fn new(name: &str, input: (usize, usize, usize), input_bits: u32) -> GraphSpec {
+        GraphSpec {
+            name: name.to_string(),
+            input,
+            input_bits,
+            nodes: Vec::new(),
+        }
+    }
+
+    fn push(mut self, name: String, op: LayerOp) -> GraphSpec {
+        self.nodes.push(GraphNode { name, op });
+        self
+    }
+
+    fn push_auto(self, op: LayerOp) -> GraphSpec {
+        let name = format!("n{}:{}", self.nodes.len(), op.mnemonic());
+        self.push(name, op)
+    }
+
+    /// Append a named convolution node.
+    pub fn conv(
+        self,
+        name: &str,
+        co: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        w_bits: u32,
+    ) -> GraphSpec {
+        self.push(
+            name.to_string(),
+            LayerOp::Conv2d {
+                co,
+                k,
+                stride,
+                pad,
+                w_bits,
+            },
+        )
+    }
+
+    /// Append a named fully-connected node.
+    pub fn fc(self, name: &str, co: usize, w_bits: u32) -> GraphSpec {
+        self.push(name.to_string(), LayerOp::Fc { co, w_bits })
+    }
+
+    /// Append a `k×k` (stride `k`) max-pool node.
+    pub fn maxpool(self, k: usize) -> GraphSpec {
+        self.push_auto(LayerOp::MaxPool { k })
+    }
+
+    /// Append a `k×k` (stride `k`) average-pool node.
+    pub fn avgpool(self, k: usize) -> GraphSpec {
+        self.push_auto(LayerOp::AvgPool { k })
+    }
+
+    /// Append a ReLU node.
+    pub fn relu(self) -> GraphSpec {
+        self.push_auto(LayerOp::Relu)
+    }
+
+    /// Append a requantization node clamping to unsigned `bits` levels.
+    pub fn requant(self, bits: u32) -> GraphSpec {
+        self.push_auto(LayerOp::Requant { bits })
+    }
+
+    /// Append a residual add with the output of node `with`.
+    pub fn add(self, with: usize) -> GraphSpec {
+        self.push_auto(LayerOp::Add { with })
+    }
+
+    /// Index of the most recently appended node (for [`add`](Self::add)
+    /// references). Panics on an empty graph.
+    pub fn last_node(&self) -> usize {
+        assert!(!self.nodes.is_empty(), "empty graph has no last node");
+        self.nodes.len() - 1
+    }
+
+    /// Total MACs per forward pass (conv/FC units only).
+    pub fn total_macs(&self) -> Result<u64, RuntimeError> {
+        Ok(self.validate()?.units.iter().map(|u| u.macs()).sum())
+    }
+
+    /// Validate the graph: infer every edge's dims + [`QType`], lower
+    /// compute nodes to [`ConvUnit`]s, and reject inconsistencies
+    /// (degenerate kernels, un-requantized conv inputs, mismatched
+    /// residual dims, out-of-range bitwidths) with a [`RuntimeError`].
+    pub fn validate(&self) -> Result<GraphInfo, RuntimeError> {
+        let (c0, h0, w0) = self.input;
+        if c0 == 0 || h0 == 0 || w0 == 0 {
+            return Err(RuntimeError::new(format!(
+                "graph '{}': input dims {}x{}x{} must all be >= 1",
+                self.name, c0, h0, w0
+            )));
+        }
+        if !(1..=8).contains(&self.input_bits) {
+            return Err(RuntimeError::new(format!(
+                "graph '{}': input_bits {} outside 1..=8",
+                self.name, self.input_bits
+            )));
+        }
+        if self.nodes.is_empty() {
+            return Err(RuntimeError::new(format!(
+                "graph '{}' has no nodes",
+                self.name
+            )));
+        }
+        let n = self.nodes.len();
+        let mut nodes: Vec<NodeInfo> = Vec::with_capacity(n);
+        let mut units: Vec<ConvUnit> = Vec::new();
+        let mut unit_of_node: Vec<Option<usize>> = vec![None; n];
+        let mut requant_of_node: Vec<Option<usize>> = vec![None; n];
+        let mut needs_flat = vec![false; n];
+        let mut requant_count = 0usize;
+        let mut dims = self.input;
+        let mut ty = QType::unsigned(self.input_bits);
+        for (i, node) in self.nodes.iter().enumerate() {
+            let fail = |msg: String| {
+                Err(RuntimeError::new(msg)
+                    .context(format!("graph '{}', node {} '{}'", self.name, i, node.name)))
+            };
+            let (c, h, w) = dims;
+            match &node.op {
+                LayerOp::Conv2d {
+                    co,
+                    k,
+                    stride,
+                    pad,
+                    w_bits,
+                } => {
+                    let unit = ConvUnit {
+                        name: node.name.clone(),
+                        ci: c,
+                        co: *co,
+                        hi: h,
+                        wi: w,
+                        k: *k,
+                        stride: *stride,
+                        pad: *pad,
+                        a_bits: ty.bits,
+                        w_bits: *w_bits,
+                    };
+                    if let Err(e) = check_unit(&unit, &ty) {
+                        return fail(e);
+                    }
+                    let (ho, wo) = unit.conv_out();
+                    dims = (*co, ho, wo);
+                    ty = QType::accumulator(ty.scale);
+                    unit_of_node[i] = Some(units.len());
+                    units.push(unit);
+                }
+                LayerOp::Fc { co, w_bits } => {
+                    let unit = ConvUnit {
+                        name: node.name.clone(),
+                        ci: c * h * w,
+                        co: *co,
+                        hi: 1,
+                        wi: 1,
+                        k: 1,
+                        stride: 1,
+                        pad: 0,
+                        a_bits: ty.bits,
+                        w_bits: *w_bits,
+                    };
+                    if let Err(e) = check_unit(&unit, &ty) {
+                        return fail(e);
+                    }
+                    dims = (*co, 1, 1);
+                    ty = QType::accumulator(ty.scale);
+                    unit_of_node[i] = Some(units.len());
+                    units.push(unit);
+                }
+                LayerOp::MaxPool { k } | LayerOp::AvgPool { k } => {
+                    if *k == 0 {
+                        return fail("pool window 0 is invalid".to_string());
+                    }
+                    if *k > h || *k > w {
+                        return fail(format!("pool window {k} exceeds input {h}x{w}"));
+                    }
+                    dims = (c, h / *k, w / *k);
+                    // Max keeps levels; average of same-sign levels stays
+                    // in range too (floor division never widens).
+                }
+                LayerOp::Relu => {
+                    ty.signed = false;
+                }
+                LayerOp::Requant { bits } => {
+                    if !(1..=8).contains(bits) {
+                        return fail(format!("requant bits {bits} outside 1..=8"));
+                    }
+                    ty = QType {
+                        bits: *bits,
+                        signed: false,
+                        scale: ty.scale,
+                    };
+                    requant_of_node[i] = Some(requant_count);
+                    requant_count += 1;
+                }
+                LayerOp::Add { with } => {
+                    if *with >= i {
+                        return fail(format!(
+                            "residual add references node {with}, which is not earlier"
+                        ));
+                    }
+                    let other = &nodes[*with];
+                    if other.dims != dims {
+                        return fail(format!(
+                            "residual add dims mismatch: {:?} vs {:?} (node {})",
+                            dims, other.dims, with
+                        ));
+                    }
+                    needs_flat[*with] = true;
+                    ty = QType {
+                        bits: (ty.bits.max(other.ty.bits) + 1).min(ACC_BITS),
+                        signed: ty.signed || other.ty.signed,
+                        scale: ty.scale,
+                    };
+                }
+            }
+            nodes.push(NodeInfo { dims, ty });
+        }
+        Ok(GraphInfo {
+            nodes,
+            units,
+            unit_of_node,
+            requant_of_node,
+            requant_count,
+            needs_flat,
+        })
+    }
+}
+
+/// Per-unit validity (shared by conv and FC lowering).
+fn check_unit(u: &ConvUnit, input_ty: &QType) -> Result<(), String> {
+    if u.k == 0 {
+        return Err("kernel size 0 is invalid".to_string());
+    }
+    if u.stride == 0 {
+        return Err("stride 0 is invalid".to_string());
+    }
+    if u.co == 0 {
+        return Err("0 output channels is invalid".to_string());
+    }
+    if !(1..=8).contains(&u.w_bits) {
+        return Err(format!("weight bits {} outside 1..=8", u.w_bits));
+    }
+    if u.k > u.hi + 2 * u.pad || u.k > u.wi + 2 * u.pad {
+        // The classic usize-underflow trap: caught here, at
+        // spec-validation time, instead of wrapping inside shape math.
+        return Err(format!(
+            "kernel {} exceeds padded input {}x{} (k > hi + 2*pad)",
+            u.k,
+            u.hi + 2 * u.pad,
+            u.wi + 2 * u.pad
+        ));
+    }
+    if !input_ty.is_narrow() {
+        return Err(format!(
+            "input edge carries a {}-bit accumulator; insert a Requant before this op",
+            input_ty.bits
+        ));
+    }
+    if input_ty.signed {
+        return Err(
+            "input edge carries signed levels; engines pack unsigned activations \
+             (requantize first)"
+                .to_string(),
+        );
+    }
+    Ok(())
+}
+
+/// Inferred per-node output state.
+#[derive(Clone, Debug)]
+pub struct NodeInfo {
+    /// Output planes × H × W of this node.
+    pub dims: (usize, usize, usize),
+    /// Output edge type.
+    pub ty: QType,
+}
+
+/// Everything [`GraphSpec::validate`] infers: per-node dims/types, the
+/// lowered conv-shaped compute units (in node order), and the index maps
+/// the runner's compiler uses.
+#[derive(Clone, Debug)]
+pub struct GraphInfo {
+    /// One entry per graph node.
+    pub nodes: Vec<NodeInfo>,
+    /// Lowered conv/FC compute units, in node order.
+    pub units: Vec<ConvUnit>,
+    /// `node index -> unit index` for conv/FC nodes.
+    pub unit_of_node: Vec<Option<usize>>,
+    /// `node index -> requant slot` for requant nodes (calibrated-shift
+    /// storage order).
+    pub requant_of_node: Vec<Option<usize>>,
+    /// Number of requant nodes (size of the shift table).
+    pub requant_count: usize,
+    /// Nodes whose output a later residual add references (must be
+    /// materialized in a flat buffer).
+    pub needs_flat: Vec<bool>,
+}
+
+impl GraphInfo {
+    /// Output dims of the final node (the head).
+    pub fn output_dims(&self) -> (usize, usize, usize) {
+        self.nodes.last().expect("validated graph is non-empty").dims
+    }
+
+    /// Flat length of the head output.
+    pub fn head_len(&self) -> usize {
+        let (c, h, w) = self.output_dims();
+        c * h * w
+    }
+}
+
+/// A conv-shaped compute unit lowered from a graph node — the per-op
+/// work descriptor every [`KernelFactory`](crate::engine::KernelFactory)
+/// hook (feasibility, theory scoring, cost, build) consumes. FC nodes
+/// lower to `k = 1` units over a 1×1 spatial extent; `a_bits`/`w_bits`
+/// are per-unit, which is what lets the planner pick different design
+/// points (and kernels) for different-precision ops in one graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvUnit {
+    pub name: String,
+    pub ci: usize,
+    pub co: usize,
+    /// Unpadded input spatial dims.
+    pub hi: usize,
+    pub wi: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Activation (input-edge) bitwidth — unsigned levels.
+    pub a_bits: u32,
+    /// Weight bitwidth — signed levels.
+    pub w_bits: u32,
+}
+
+impl ConvUnit {
+    /// Strided output spatial dims.
+    pub fn conv_out(&self) -> (usize, usize) {
+        strided_out(self.padded_shape(), self.stride)
+    }
+
+    /// The padded stride-1 valid-convolution shape fed to the engines.
+    pub fn padded_shape(&self) -> ConvShape {
+        ConvShape {
+            ci: self.ci,
+            co: self.co,
+            hi: self.hi + 2 * self.pad,
+            wi: self.wi + 2 * self.pad,
+            k: self.k,
+        }
+    }
+
+    /// Flat length of this unit's (strided) output.
+    pub fn out_len(&self) -> usize {
+        let (ho, wo) = self.conv_out();
+        self.co * ho * wo
+    }
+
+    /// MACs per forward pass at the strided output resolution.
+    pub fn macs(&self) -> u64 {
+        let (ho, wo) = self.conv_out();
+        (self.co * ho * wo * self.ci * self.k * self.k) as u64
+    }
+
+    /// MACs at full stride-1 resolution — what a stride-1-native engine
+    /// computing densely then subsampling actually performs.
+    pub fn full_macs(&self) -> u64 {
+        self.padded_shape().macs()
+    }
+
+    pub fn weight_len(&self) -> usize {
+        self.co * self.ci * self.k * self.k
+    }
+
+    /// Unpadded input length.
+    pub fn input_len(&self) -> usize {
+        self.ci * self.hi * self.wi
+    }
+}
+
+impl From<ModelSpec> for GraphSpec {
+    /// Lower the legacy sequential spec: every layer becomes
+    /// `Conv2d → Requant(a_bits) → [MaxPool 2]`, except the last layer,
+    /// whose raw accumulator is the head (matching the seed runner).
+    /// `Requant` includes the ReLU floor, so no separate `Relu` node is
+    /// needed — and requant-shift calibration observes the same raw
+    /// accumulator the seed calibration did, keeping the shim bit-exact.
+    fn from(m: ModelSpec) -> GraphSpec {
+        let input_bits = m.layers.first().map(|l| l.a_bits).unwrap_or(4);
+        let mut g = GraphSpec::new(&m.name, m.input, input_bits);
+        let n = m.layers.len();
+        for (i, l) in m.layers.iter().enumerate() {
+            g = g.conv(&l.name, l.co, l.k, 1, l.pad, l.w_bits);
+            if i + 1 < n {
+                g = g.requant(l.a_bits);
+                if l.pool_after {
+                    g = g.maxpool(2);
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ultranet::ultranet_tiny;
+
+    #[test]
+    fn modelspec_lowers_to_the_expected_node_chain() {
+        let model = ultranet_tiny();
+        let g: GraphSpec = model.clone().into();
+        assert_eq!(g.input, model.input);
+        assert_eq!(g.input_bits, 4);
+        let info = g.validate().unwrap();
+        // One conv unit per layer, in order, stride 1.
+        assert_eq!(info.units.len(), model.layers.len());
+        for (u, l) in info.units.iter().zip(&model.layers) {
+            assert_eq!(u.name, l.name);
+            assert_eq!((u.ci, u.co, u.k, u.stride), (l.ci, l.co, l.k, 1));
+            assert_eq!((u.a_bits, u.w_bits), (l.a_bits, l.w_bits));
+        }
+        // Head dims match the legacy spec.
+        assert_eq!(info.output_dims(), model.output_dims());
+        // One requant per non-head layer.
+        assert_eq!(info.requant_count, model.layers.len() - 1);
+    }
+
+    #[test]
+    fn degenerate_kernel_is_a_validation_error_not_a_panic() {
+        let g = GraphSpec::new("bad", (3, 2, 2), 4).conv("huge", 4, 7, 1, 1, 4);
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("k > hi + 2*pad"), "{err}");
+        assert!(err.contains("huge"), "{err}");
+    }
+
+    #[test]
+    fn conv_on_an_accumulator_edge_requires_requant() {
+        let g = GraphSpec::new("acc", (3, 8, 8), 4)
+            .conv("c1", 4, 3, 1, 1, 4)
+            .conv("c2", 4, 3, 1, 1, 4);
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("Requant"), "{err}");
+    }
+
+    #[test]
+    fn residual_add_checks_dims_and_marks_flat() {
+        let good = GraphSpec::new("res", (3, 8, 8), 4)
+            .conv("c1", 4, 3, 1, 1, 4)
+            .requant(4);
+        let saved = good.last_node();
+        let good = good
+            .conv("c2", 4, 3, 1, 1, 4)
+            .requant(4)
+            .add(saved)
+            .requant(4);
+        let info = good.validate().unwrap();
+        assert!(info.needs_flat[saved]);
+        // The add widens by one bit before the final requant narrows.
+        let add_node = info.nodes.len() - 2;
+        assert_eq!(info.nodes[add_node].ty.bits, 5);
+
+        let bad = GraphSpec::new("res-bad", (3, 8, 8), 4)
+            .conv("c1", 4, 3, 1, 1, 4)
+            .requant(4)
+            .maxpool(2)
+            .add(1);
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("dims mismatch"), "{err}");
+    }
+
+    #[test]
+    fn strided_and_fc_dims_infer() {
+        let g = GraphSpec::new("sfc", (3, 40, 80), 4)
+            .conv("down", 16, 3, 2, 1, 4)
+            .requant(4)
+            .fc("head", 10, 4);
+        let info = g.validate().unwrap();
+        assert_eq!(info.nodes[0].dims, (16, 20, 40));
+        assert_eq!(info.output_dims(), (10, 1, 1));
+        // The FC unit flattens the incoming activation map.
+        let fc = &info.units[1];
+        assert_eq!((fc.ci, fc.k, fc.hi, fc.wi), (16 * 20 * 40, 1, 1, 1));
+    }
+
+    #[test]
+    fn qtype_ranges_and_accumulator_marking() {
+        assert_eq!(QType::unsigned(4).level_range(), (0, 15));
+        assert!(QType::unsigned(4).is_narrow());
+        assert!(!QType::accumulator(1.0).is_narrow());
+        let g = GraphSpec::new("t", (1, 4, 4), 4).conv("c", 2, 3, 1, 1, 4);
+        let info = g.validate().unwrap();
+        assert_eq!(info.nodes[0].ty.bits, ACC_BITS);
+        assert!(info.nodes[0].ty.signed);
+    }
+}

@@ -1,0 +1,873 @@
+//! Graph execution: compiles a validated [`GraphSpec`] into a step
+//! program and runs it over registry-resolved kernels with per-runner
+//! buffer arenas — the generalization of the fused `CpuRunner` pipeline
+//! to arbitrary layer graphs.
+//!
+//! # Compilation
+//!
+//! [`GraphRunner::new`] plans the graph per op ([`EnginePlan`]), binds
+//! one [`ConvKernel`] per conv/FC unit (weights widened through **one**
+//! shared [`QTensor::widen_into`] scratch — graph construction allocates
+//! the widening buffer exactly once, asserted by `tests/graph_alloc.rs`),
+//! then compiles the node list into steps:
+//!
+//! * `Conv → [Relu] → Requant → [MaxPool 2]` chains collapse into one
+//!   conv step with a fused epilogue
+//!   ([`fused_epilogue_into`](super::layer::fused_epilogue_into)) that
+//!   writes straight into the **interior of the next conv's padded
+//!   buffer** — the same zero-copy activation flow the `ModelSpec`
+//!   pipeline had, now discovered structurally on the graph.
+//! * Every other op (standalone pools, ReLU, residual adds, requants
+//!   that feed non-conv consumers) runs as its own step over flat
+//!   per-node arena buffers. Nodes referenced by a later
+//!   [`LayerOp::Add`] are materialized; everything else stays fused.
+//!
+//! Steady state, serial kernels: **zero heap allocations** per
+//! [`infer_into`](GraphRunner::infer_into) — all buffers (padded conv
+//! inputs with once-zeroed borders, flat node outputs, the shared
+//! accumulator, per-kernel scratch) live in checked-out arenas.
+//!
+//! # Oracles
+//!
+//! [`infer_unfused`](GraphRunner::infer_unfused) walks the graph node by
+//! node through the bound kernels (the calibration path), and
+//! [`infer_oracle`](GraphRunner::infer_oracle) walks it through the pure
+//! strided reference convolution — the kernel-independent ground truth
+//! every engine configuration is tested against.
+
+use super::graph::{GraphInfo, GraphSpec, LayerOp};
+use super::layer::{avgpool_k, avgpool_k_into, fused_epilogue_into, maxpool_k, maxpool_k_into};
+use super::layer::{pad2d, pad2d_into};
+use super::runner::requantize;
+use crate::conv::reference::conv2d_ref_strided;
+use crate::engine::{
+    ConvKernel, EngineConfig, EnginePlan, KernelChoice, KernelRegistry, KernelScratch,
+};
+use crate::exec::ThreadPool;
+use crate::quant::{QTensor, Shape};
+use crate::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+
+/// Deterministic synthetic weights for a graph: one signed
+/// `w_bits`-level tensor per conv/FC unit, in node order (the same RNG
+/// stream `random_weights` produces for the equivalent `ModelSpec`).
+pub fn random_graph_weights(graph: &GraphSpec, seed: u64) -> Result<Vec<QTensor>, String> {
+    let info = graph.validate().map_err(|e| e.to_string())?;
+    let mut rng = Rng::new(seed);
+    let mut tensors = Vec::with_capacity(info.units.len());
+    for u in &info.units {
+        let levels = rng.quant_signed_vec(u.w_bits, u.weight_len());
+        tensors.push(
+            QTensor::from_levels(
+                Shape(vec![u.co, u.ci, u.k, u.k]),
+                &levels,
+                u.w_bits,
+                true,
+                1.0 / 64.0,
+            )
+            .expect("in-range levels"),
+        );
+    }
+    Ok(tensors)
+}
+
+/// Where a step reads its primary operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Src {
+    /// The caller's input frame.
+    Frame,
+    /// The flat arena buffer of node `n`.
+    Flat(usize),
+    /// This conv step's own padded buffer (the producer already wrote
+    /// its interior).
+    Padded,
+}
+
+/// Where a step writes its (possibly fused) result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dest {
+    /// The flat arena buffer of node `n`.
+    Flat(usize),
+    /// The interior of conv unit `u`'s padded input buffer.
+    Padded(usize),
+    /// The caller's head output buffer.
+    Head,
+}
+
+/// Fused conv epilogue: ReLU + requant shift/clamp (+ 2×2 max-pool).
+#[derive(Clone, Copy, Debug)]
+struct Fuse {
+    /// Calibrated-shift slot of the absorbed requant node.
+    requant: usize,
+    bits: u32,
+    pool: bool,
+}
+
+#[derive(Clone, Debug)]
+enum StepKind {
+    Conv { unit: usize, fuse: Option<Fuse> },
+    Relu,
+    Requant { idx: usize, bits: u32 },
+    MaxPool { k: usize },
+    AvgPool { k: usize },
+    Add { with: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Step {
+    kind: StepKind,
+    src: Src,
+    dst: Dest,
+    /// Dims of the step's primary input operand.
+    in_dims: (usize, usize, usize),
+}
+
+/// Destination for the value produced at node `end`: the head if it is
+/// the last node, the next conv's padded interior when that conv is the
+/// sole consumer, a flat node buffer otherwise.
+fn dest_for(end: usize, n: usize, info: &GraphInfo) -> Dest {
+    if end + 1 == n {
+        Dest::Head
+    } else if !info.needs_flat[end] {
+        match info.unit_of_node[end + 1] {
+            Some(u) => Dest::Padded(u),
+            None => Dest::Flat(end),
+        }
+    } else {
+        Dest::Flat(end)
+    }
+}
+
+fn src_after(d: Dest) -> Src {
+    match d {
+        Dest::Flat(e) => Src::Flat(e),
+        Dest::Padded(_) => Src::Padded,
+        // Head is always the final step; the value is never re-read.
+        Dest::Head => Src::Frame,
+    }
+}
+
+/// Compile the node list into steps (fusing conv epilogues) and mark
+/// which flat node buffers the program actually touches.
+fn compile(graph: &GraphSpec, info: &GraphInfo) -> (Vec<Step>, Vec<bool>) {
+    let n = graph.nodes.len();
+    let mut steps = Vec::new();
+    let mut flat_used = vec![false; n];
+    let mut cur = Src::Frame;
+    let mut cur_dims = graph.input;
+    let mut i = 0;
+    while i < n {
+        match &graph.nodes[i].op {
+            LayerOp::Conv2d { .. } | LayerOp::Fc { .. } => {
+                let unit = info.unit_of_node[i].expect("conv node has a unit");
+                let mut fuse = None;
+                let mut end = i;
+                // Absorb a [Relu] Requant [MaxPool 2] suffix — but only
+                // when no residual add needs the intermediate values
+                // (Relu ∘ Requant ≡ Requant since the requant floors
+                // at 0, and pool-before-requant is bit-exact by
+                // monotonicity — see `fused_epilogue_into`).
+                if !info.needs_flat[i] {
+                    let mut j = i + 1;
+                    if j < n
+                        && matches!(graph.nodes[j].op, LayerOp::Relu)
+                        && !info.needs_flat[j]
+                        && j + 1 < n
+                        && matches!(graph.nodes[j + 1].op, LayerOp::Requant { .. })
+                    {
+                        j += 1;
+                    }
+                    if j < n {
+                        if let LayerOp::Requant { bits } = graph.nodes[j].op {
+                            let mut pool = false;
+                            let mut e = j;
+                            if j + 1 < n
+                                && matches!(graph.nodes[j + 1].op, LayerOp::MaxPool { k: 2 })
+                                && !info.needs_flat[j]
+                            {
+                                pool = true;
+                                e = j + 1;
+                            }
+                            fuse = Some(Fuse {
+                                requant: info.requant_of_node[j].expect("requant slot"),
+                                bits,
+                                pool,
+                            });
+                            end = e;
+                        }
+                    }
+                }
+                let dst = dest_for(end, n, info);
+                if let Dest::Flat(e) = dst {
+                    flat_used[e] = true;
+                }
+                steps.push(Step {
+                    kind: StepKind::Conv { unit, fuse },
+                    src: cur,
+                    dst,
+                    in_dims: cur_dims,
+                });
+                cur_dims = info.nodes[end].dims;
+                cur = src_after(dst);
+                i = end + 1;
+            }
+            op => {
+                let kind = match op {
+                    LayerOp::Relu => StepKind::Relu,
+                    LayerOp::Requant { bits } => StepKind::Requant {
+                        idx: info.requant_of_node[i].expect("requant slot"),
+                        bits: *bits,
+                    },
+                    LayerOp::MaxPool { k } => StepKind::MaxPool { k: *k },
+                    LayerOp::AvgPool { k } => StepKind::AvgPool { k: *k },
+                    LayerOp::Add { with } => {
+                        flat_used[*with] = true;
+                        StepKind::Add { with: *with }
+                    }
+                    LayerOp::Conv2d { .. } | LayerOp::Fc { .. } => {
+                        unreachable!("conv ops handled above")
+                    }
+                };
+                // Elementwise steps write flat buffers (or the head);
+                // only conv epilogues stream into padded interiors.
+                let dst = if i + 1 == n { Dest::Head } else { Dest::Flat(i) };
+                if let Dest::Flat(e) = dst {
+                    flat_used[e] = true;
+                }
+                steps.push(Step {
+                    kind,
+                    src: cur,
+                    dst,
+                    in_dims: cur_dims,
+                });
+                cur_dims = info.nodes[i].dims;
+                cur = src_after(dst);
+                i += 1;
+            }
+        }
+    }
+    (steps, flat_used)
+}
+
+fn add_slices(a: &[i64], b: &[i64], dst: &mut [i64]) {
+    assert_eq!(a.len(), b.len(), "residual add length mismatch");
+    assert_eq!(a.len(), dst.len(), "residual add output length mismatch");
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = x + y;
+    }
+}
+
+/// Per-inference scratch: every buffer one in-flight frame needs, sized
+/// once from the compiled program and reused across frames.
+struct GraphArena {
+    /// Flat output buffer per node (empty for nodes the compiled program
+    /// never materializes — fused intermediates).
+    flat: Vec<Vec<i64>>,
+    /// Padded input buffer per conv unit; zero borders are written here
+    /// exactly once, and only interiors are rewritten per frame.
+    padded: Vec<Vec<i64>>,
+    /// Shared conv accumulator, sized for the largest unit output.
+    acc: Vec<i64>,
+    /// Opaque kernel scratch per conv unit.
+    scratch: Vec<KernelScratch>,
+}
+
+/// The graph runner: a compiled step program, one kernel per conv/FC
+/// unit (as directed by its [`EnginePlan`]), the thread pool pooled
+/// kernels shard across, and a free-list of reusable arenas.
+pub struct GraphRunner {
+    graph: GraphSpec,
+    info: GraphInfo,
+    weights: Vec<QTensor>,
+    plan: EnginePlan,
+    kernels: Vec<Box<dyn ConvKernel>>,
+    /// Calibrated right-shift per requant node (slot order).
+    shifts: Vec<u32>,
+    steps: Vec<Step>,
+    flat_used: Vec<bool>,
+    pool: Option<Arc<ThreadPool>>,
+    arenas: Mutex<Vec<GraphArena>>,
+}
+
+impl GraphRunner {
+    /// Validate + plan + build: one kernel per conv/FC unit resolved
+    /// through the registry, weights widened through a single shared
+    /// scratch, requant shifts calibrated on a mid-gray frame.
+    pub fn new(
+        graph: GraphSpec,
+        weights: Vec<QTensor>,
+        config: impl Into<EngineConfig>,
+    ) -> Result<GraphRunner, String> {
+        let config = config.into();
+        let info = graph.validate().map_err(|e| e.to_string())?;
+        let plan = EnginePlan::plan_units(&info.units, &config, KernelRegistry::builtin())?;
+        Self::with_plan(graph, info, weights, plan)
+    }
+
+    /// Build a runner executing an already-resolved plan (one entry per
+    /// conv/FC unit, e.g. a plan the `plan` subcommand printed).
+    pub fn from_plan(
+        graph: GraphSpec,
+        weights: Vec<QTensor>,
+        plan: EnginePlan,
+    ) -> Result<GraphRunner, String> {
+        let info = graph.validate().map_err(|e| e.to_string())?;
+        if plan.layers.len() != info.units.len() {
+            return Err(format!(
+                "plan has {} ops, graph '{}' has {} conv/FC units",
+                plan.layers.len(),
+                graph.name,
+                info.units.len()
+            ));
+        }
+        Self::with_plan(graph, info, weights, plan)
+    }
+
+    fn with_plan(
+        graph: GraphSpec,
+        info: GraphInfo,
+        weights: Vec<QTensor>,
+        plan: EnginePlan,
+    ) -> Result<GraphRunner, String> {
+        if weights.len() != info.units.len() {
+            return Err(format!(
+                "graph '{}' has {} conv/FC units, got {} weight tensors",
+                graph.name,
+                info.units.len(),
+                weights.len()
+            ));
+        }
+        let registry = KernelRegistry::builtin();
+        let mut kernels: Vec<Box<dyn ConvKernel>> = Vec::with_capacity(info.units.len());
+        let mut wants_pool = false;
+        // One shared widening scratch for the whole graph: weights
+        // widen borrowed (`QTensor::widen_into`) instead of allocating a
+        // fresh `Vec<i64>` per kernel build.
+        let max_w = info.units.iter().map(|u| u.weight_len()).max().unwrap_or(0);
+        let mut wide = vec![0i64; max_w];
+        for ((u, t), lp) in info.units.iter().zip(&weights).zip(&plan.layers) {
+            if t.shape.numel() != u.weight_len() {
+                return Err(format!(
+                    "unit '{}': weight tensor has {} values, wants {}",
+                    u.name,
+                    t.shape.numel(),
+                    u.weight_len()
+                ));
+            }
+            if t.bits != u.w_bits || !t.signed {
+                return Err(format!(
+                    "unit '{}': weights must be signed {}-bit levels (got {}-bit, signed={})",
+                    u.name, u.w_bits, t.bits, t.signed
+                ));
+            }
+            let f = registry.resolve(&lp.kernel)?;
+            wants_pool |= f.uses_pool();
+            let w = &mut wide[..u.weight_len()];
+            t.widen_into(w);
+            kernels.push(f.build(u, w, &plan.config)?);
+        }
+        // Same rationale as the ModelSpec runner: an `auto` plan keeps a
+        // pool even when every chosen kernel is serial, so frame-level
+        // parallelism never silently degrades.
+        wants_pool |= plan.config.kernel == KernelChoice::Auto && plan.threads > 1;
+        let pool = if wants_pool {
+            Some(Arc::new(ThreadPool::new(plan.threads)))
+        } else {
+            None
+        };
+        let (steps, flat_used) = compile(&graph, &info);
+        let mut runner = GraphRunner {
+            graph,
+            info,
+            weights,
+            plan,
+            kernels,
+            shifts: Vec::new(),
+            steps,
+            flat_used,
+            pool,
+            arenas: Mutex::new(Vec::new()),
+        };
+        runner.calibrate();
+        let warm = runner.new_arena();
+        runner.arenas.lock().expect("arena pool poisoned").push(warm);
+        Ok(runner)
+    }
+
+    pub fn graph(&self) -> &GraphSpec {
+        &self.graph
+    }
+
+    /// The resolved per-op plan this runner executes.
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    /// The configuration the plan was derived from.
+    pub fn config(&self) -> &EngineConfig {
+        &self.plan.config
+    }
+
+    /// Compact label for reports (config spelling, or the `auto[...]`
+    /// per-op summary).
+    pub fn label(&self) -> String {
+        self.plan.summary()
+    }
+
+    /// Output dims of the final node.
+    pub fn output_dims(&self) -> (usize, usize, usize) {
+        self.info.output_dims()
+    }
+
+    /// Flat length of the head output — the size
+    /// [`infer_into`](Self::infer_into) expects its buffer to have.
+    pub fn head_len(&self) -> usize {
+        self.info.head_len()
+    }
+
+    /// Calibrated right-shift per requant node, in node order.
+    pub fn requant_shifts(&self) -> &[u32] {
+        &self.shifts
+    }
+
+    /// Size a fresh arena from the compiled program: padded buffers are
+    /// zeroed here once; kernel scratches are built empty and filled per
+    /// frame.
+    fn new_arena(&self) -> GraphArena {
+        let mut flat = Vec::with_capacity(self.info.nodes.len());
+        for (ni, used) in self.info.nodes.iter().zip(&self.flat_used) {
+            if *used {
+                let (c, h, w) = ni.dims;
+                flat.push(vec![0i64; c * h * w]);
+            } else {
+                flat.push(Vec::new());
+            }
+        }
+        let mut padded = Vec::with_capacity(self.info.units.len());
+        let mut scratch = Vec::with_capacity(self.info.units.len());
+        let mut acc_len = 1usize;
+        for (u, kernel) in self.info.units.iter().zip(&self.kernels) {
+            padded.push(vec![0i64; u.padded_shape().input_len()]);
+            acc_len = acc_len.max(kernel.out_len());
+            scratch.push(kernel.new_scratch());
+        }
+        GraphArena {
+            flat,
+            padded,
+            acc: vec![0i64; acc_len],
+            scratch,
+        }
+    }
+
+    fn take_arena(&self) -> GraphArena {
+        let cached = self.arenas.lock().expect("arena pool poisoned").pop();
+        cached.unwrap_or_else(|| self.new_arena())
+    }
+
+    fn put_arena(&self, arena: GraphArena) {
+        self.arenas.lock().expect("arena pool poisoned").push(arena);
+    }
+
+    fn calibrate(&mut self) {
+        let (c, h, w) = self.graph.input;
+        let level = 1i64 << (self.graph.input_bits - 1); // mid-gray
+        let frame = vec![level; c * h * w];
+        let mut shifts = vec![0u32; self.info.requant_count];
+        let _ = self.eval_nodes(&frame, Some(&mut shifts[..]), false);
+        self.shifts = shifts;
+    }
+
+    /// Full forward pass on a quantized frame (`[c][h][w]` levels of
+    /// `input_bits` bits). Returns the head output (the final node's
+    /// value — a raw accumulator map when the graph ends in a conv).
+    pub fn infer(&self, frame: &[i64]) -> Vec<i64> {
+        let mut out = vec![0i64; self.head_len()];
+        self.infer_into(frame, &mut out);
+        out
+    }
+
+    /// [`infer`](Self::infer) into a caller-provided head buffer
+    /// ([`head_len`](Self::head_len) values). With a warm arena and a
+    /// serial kernel plan this performs **zero heap allocations** — the
+    /// steady-state serving contract (`tests/graph_alloc.rs`).
+    pub fn infer_into(&self, frame: &[i64], out: &mut [i64]) {
+        assert_eq!(out.len(), self.head_len(), "head buffer length mismatch");
+        let mut arena = self.take_arena();
+        self.run_steps(frame, out, &mut arena, self.pool.as_deref());
+        self.put_arena(arena);
+    }
+
+    /// Run a batch of frames, one head map per frame (same order).
+    /// Whole frames shard across the runner's pool with per-worker
+    /// arenas; bit-identical to per-frame [`infer`](Self::infer) for any
+    /// thread count.
+    pub fn infer_batch(&self, frames: &[&[i64]]) -> Vec<Vec<i64>> {
+        match &self.pool {
+            Some(pool) if pool.threads() > 1 && frames.len() > 1 => {
+                pool.par_map(frames, |_, frame| {
+                    let mut out = vec![0i64; self.head_len()];
+                    let mut arena = self.take_arena();
+                    self.run_steps(frame, &mut out, &mut arena, None);
+                    self.put_arena(arena);
+                    out
+                })
+            }
+            _ => frames.iter().map(|f| self.infer(f)).collect(),
+        }
+    }
+
+    /// The compiled-step interpreter (fused epilogues, arena buffers).
+    fn run_steps(
+        &self,
+        frame: &[i64],
+        out: &mut [i64],
+        arena: &mut GraphArena,
+        pool: Option<&ThreadPool>,
+    ) {
+        let (c0, h0, w0) = self.graph.input;
+        assert_eq!(frame.len(), c0 * h0 * w0, "frame dims mismatch");
+        for step in &self.steps {
+            match &step.kind {
+                StepKind::Conv { unit, fuse } => {
+                    let u = *unit;
+                    let cu = &self.info.units[u];
+                    match step.src {
+                        Src::Padded => {}
+                        Src::Frame => {
+                            pad2d_into(frame, cu.ci, cu.hi, cu.wi, cu.pad, &mut arena.padded[u]);
+                        }
+                        Src::Flat(p) => {
+                            pad2d_into(
+                                &arena.flat[p],
+                                cu.ci,
+                                cu.hi,
+                                cu.wi,
+                                cu.pad,
+                                &mut arena.padded[u],
+                            );
+                        }
+                    }
+                    let out_len = self.kernels[u].out_len();
+                    self.kernels[u].conv_into(
+                        &arena.padded[u],
+                        &mut arena.acc[..out_len],
+                        &mut arena.scratch[u],
+                        pool,
+                    );
+                    let (ho, wo) = cu.conv_out();
+                    match fuse {
+                        Some(f) => {
+                            let shift = self.shifts[f.requant];
+                            match step.dst {
+                                Dest::Padded(u2) => fused_epilogue_into(
+                                    &arena.acc[..out_len],
+                                    shift,
+                                    f.bits,
+                                    cu.co,
+                                    ho,
+                                    wo,
+                                    f.pool,
+                                    &mut arena.padded[u2],
+                                    self.info.units[u2].pad,
+                                ),
+                                Dest::Flat(e) => fused_epilogue_into(
+                                    &arena.acc[..out_len],
+                                    shift,
+                                    f.bits,
+                                    cu.co,
+                                    ho,
+                                    wo,
+                                    f.pool,
+                                    &mut arena.flat[e],
+                                    0,
+                                ),
+                                Dest::Head => fused_epilogue_into(
+                                    &arena.acc[..out_len],
+                                    shift,
+                                    f.bits,
+                                    cu.co,
+                                    ho,
+                                    wo,
+                                    f.pool,
+                                    out,
+                                    0,
+                                ),
+                            }
+                        }
+                        None => match step.dst {
+                            Dest::Padded(u2) => pad2d_into(
+                                &arena.acc[..out_len],
+                                cu.co,
+                                ho,
+                                wo,
+                                self.info.units[u2].pad,
+                                &mut arena.padded[u2],
+                            ),
+                            Dest::Flat(e) => {
+                                arena.flat[e].copy_from_slice(&arena.acc[..out_len]);
+                            }
+                            Dest::Head => out.copy_from_slice(&arena.acc[..out_len]),
+                        },
+                    }
+                }
+                StepKind::Add { with } => {
+                    let (c, h, w) = step.in_dims;
+                    let len = c * h * w;
+                    match step.dst {
+                        Dest::Flat(e) => {
+                            let (lo, hi) = arena.flat.split_at_mut(e);
+                            let a: &[i64] = match step.src {
+                                Src::Frame => &frame[..len],
+                                Src::Flat(p) => &lo[p][..len],
+                                Src::Padded => unreachable!("elementwise never reads padded"),
+                            };
+                            add_slices(a, &lo[*with][..len], &mut hi[0][..len]);
+                        }
+                        Dest::Head => {
+                            let a: &[i64] = match step.src {
+                                Src::Frame => &frame[..len],
+                                Src::Flat(p) => &arena.flat[p][..len],
+                                Src::Padded => unreachable!("elementwise never reads padded"),
+                            };
+                            add_slices(a, &arena.flat[*with][..len], out);
+                        }
+                        Dest::Padded(_) => unreachable!("add never streams into padded"),
+                    }
+                }
+                kind => {
+                    let (c, h, w) = step.in_dims;
+                    let in_len = c * h * w;
+                    match step.dst {
+                        Dest::Flat(e) => {
+                            let (lo, hi) = arena.flat.split_at_mut(e);
+                            let src: &[i64] = match step.src {
+                                Src::Frame => frame,
+                                Src::Flat(p) => &lo[p],
+                                Src::Padded => unreachable!("elementwise never reads padded"),
+                            };
+                            apply_elementwise(
+                                kind,
+                                &src[..in_len],
+                                c,
+                                h,
+                                w,
+                                &mut hi[0],
+                                &self.shifts,
+                            );
+                        }
+                        Dest::Head => {
+                            let src: &[i64] = match step.src {
+                                Src::Frame => frame,
+                                Src::Flat(p) => &arena.flat[p],
+                                Src::Padded => unreachable!("elementwise never reads padded"),
+                            };
+                            apply_elementwise(kind, &src[..in_len], c, h, w, out, &self.shifts);
+                        }
+                        Dest::Padded(_) => unreachable!("elementwise never streams into padded"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Node-by-node forward pass through the bound kernels — the
+    /// allocating, fusion-free path (calibration and the per-engine
+    /// oracle `infer` is tested against).
+    pub fn infer_unfused(&self, frame: &[i64]) -> Vec<i64> {
+        self.eval_nodes(frame, None, false)
+    }
+
+    /// Node-by-node forward pass through the **pure strided reference
+    /// convolution** — the kernel-independent ground truth.
+    pub fn infer_oracle(&self, frame: &[i64]) -> Vec<i64> {
+        self.eval_nodes(frame, None, true)
+    }
+
+    /// The shared node walker. `calibrating` computes (and stores) a
+    /// fresh shift at every requant node from the observed accumulator
+    /// range; `reference` swaps the bound kernels for `conv2d_ref_strided`.
+    fn eval_nodes(
+        &self,
+        frame: &[i64],
+        mut calibrating: Option<&mut [u32]>,
+        reference: bool,
+    ) -> Vec<i64> {
+        let (c0, h0, w0) = self.graph.input;
+        assert_eq!(frame.len(), c0 * h0 * w0, "frame dims mismatch");
+        let n = self.graph.nodes.len();
+        let mut saved: Vec<Option<Vec<i64>>> = vec![None; n];
+        let mut cur: Vec<i64> = frame.to_vec();
+        let mut dims = self.graph.input;
+        for (i, node) in self.graph.nodes.iter().enumerate() {
+            let (c, h, w) = dims;
+            let next: Vec<i64> = match &node.op {
+                LayerOp::Conv2d { .. } | LayerOp::Fc { .. } => {
+                    let u = self.info.unit_of_node[i].expect("conv node has a unit");
+                    let cu = &self.info.units[u];
+                    let padded = pad2d(&cur, cu.ci, cu.hi, cu.wi, cu.pad);
+                    if reference {
+                        conv2d_ref_strided(
+                            &padded,
+                            &self.weights[u].to_i64(),
+                            cu.padded_shape(),
+                            cu.stride,
+                        )
+                    } else {
+                        self.kernels[u].conv(&padded, self.pool.as_deref())
+                    }
+                }
+                LayerOp::Relu => cur.iter().map(|&v| v.max(0)).collect(),
+                LayerOp::Requant { bits } => {
+                    let ridx = self.info.requant_of_node[i].expect("requant slot");
+                    let shift = match calibrating.as_deref_mut() {
+                        Some(shifts) => {
+                            let maxabs = cur.iter().map(|&v| v.abs()).max().unwrap_or(1).max(1);
+                            let target = (1i64 << *bits) - 1;
+                            let mut s = 0u32;
+                            while (maxabs >> s) > target {
+                                s += 1;
+                            }
+                            shifts[ridx] = s;
+                            s
+                        }
+                        None => self.shifts[ridx],
+                    };
+                    requantize(&cur, shift, *bits)
+                }
+                LayerOp::MaxPool { k } => maxpool_k(&cur, c, h, w, *k),
+                LayerOp::AvgPool { k } => avgpool_k(&cur, c, h, w, *k),
+                LayerOp::Add { with } => {
+                    let other = saved[*with].as_ref().expect("residual source saved");
+                    cur.iter().zip(other).map(|(&x, &y)| x + y).collect()
+                }
+            };
+            if self.info.needs_flat[i] {
+                saved[i] = Some(next.clone());
+            }
+            cur = next;
+            dims = self.info.nodes[i].dims;
+        }
+        cur
+    }
+
+    /// Detection decode: peak-response grid cell of the head map.
+    pub fn decode(&self, head: &[i64]) -> (usize, usize) {
+        let (co, h, w) = self.output_dims();
+        let mut best = (0usize, 0usize);
+        let mut best_v = i64::MIN;
+        for y in 0..h {
+            for x in 0..w {
+                let mut v = 0i64;
+                for c in 0..co {
+                    v += head[(c * h + y) * w + x].abs();
+                }
+                if v > best_v {
+                    best_v = v;
+                    best = (y, x);
+                }
+            }
+        }
+        best
+    }
+}
+
+/// The non-conv, non-add step bodies (dispatch helper of `run_steps`).
+fn apply_elementwise(
+    kind: &StepKind,
+    src: &[i64],
+    c: usize,
+    h: usize,
+    w: usize,
+    dst: &mut [i64],
+    shifts: &[u32],
+) {
+    match kind {
+        StepKind::Relu => {
+            assert_eq!(dst.len(), src.len(), "relu output length mismatch");
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = v.max(0);
+            }
+        }
+        StepKind::Requant { idx, bits } => {
+            assert_eq!(dst.len(), src.len(), "requant output length mismatch");
+            let shift = shifts[*idx];
+            let hi = (1i64 << *bits) - 1;
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = (v.max(0) >> shift).min(hi);
+            }
+        }
+        StepKind::MaxPool { k } => maxpool_k_into(src, c, h, w, *k, dst),
+        StepKind::AvgPool { k } => avgpool_k_into(src, c, h, w, *k, dst),
+        StepKind::Conv { .. } | StepKind::Add { .. } => {
+            unreachable!("conv/add handled by dedicated arms")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_seq_eq;
+
+    fn residual_graph() -> GraphSpec {
+        let g = GraphSpec::new("res", (3, 12, 12), 4)
+            .conv("stem", 6, 3, 1, 1, 4)
+            .requant(4);
+        let saved = g.last_node();
+        g.conv("b1", 6, 3, 1, 1, 4)
+            .requant(4)
+            .add(saved)
+            .requant(4)
+            .conv("head", 8, 1, 1, 0, 4)
+    }
+
+    #[test]
+    fn fused_steps_match_the_unfused_and_reference_walks() {
+        let g = residual_graph();
+        let weights = random_graph_weights(&g, 91).unwrap();
+        let r = GraphRunner::new(g.clone(), weights, EngineConfig::named("hikonv")).unwrap();
+        let (c, h, w) = g.input;
+        let mut rng = Rng::new(0x6A1);
+        for _ in 0..3 {
+            let frame = rng.quant_unsigned_vec(4, c * h * w);
+            let fused = r.infer(&frame);
+            assert_seq_eq(&fused, &r.infer_unfused(&frame)).unwrap();
+            assert_seq_eq(&fused, &r.infer_oracle(&frame)).unwrap();
+        }
+    }
+
+    #[test]
+    fn ultranet_chain_compiles_to_fully_fused_conv_steps() {
+        use crate::models::ultranet::ultranet_tiny;
+        let g: GraphSpec = ultranet_tiny().into();
+        let info = g.validate().unwrap();
+        let (steps, flat_used) = compile(&g, &info);
+        // One step per layer: every requant/pool is absorbed.
+        assert_eq!(steps.len(), info.units.len());
+        // No flat buffer is ever materialized (pure padded-interior flow).
+        assert!(flat_used.iter().all(|&u| !u), "{flat_used:?}");
+        for step in &steps[..steps.len() - 1] {
+            match &step.kind {
+                StepKind::Conv { fuse, .. } => assert!(fuse.is_some(), "{step:?}"),
+                other => panic!("unexpected step {other:?}"),
+            }
+        }
+        // The head conv writes the caller's buffer directly.
+        assert_eq!(steps.last().unwrap().dst, Dest::Head);
+    }
+
+    #[test]
+    fn weight_mismatches_are_errors() {
+        let g = residual_graph();
+        let mut weights = random_graph_weights(&g, 92).unwrap();
+        weights.pop();
+        let err = GraphRunner::new(g.clone(), weights, EngineConfig::named("baseline"))
+            .unwrap_err();
+        assert!(err.contains("weight tensors"), "{err}");
+        // Wrong bitwidth is rejected too.
+        let mut weights = random_graph_weights(&g, 93).unwrap();
+        weights[0] = QTensor::zeros(Shape(vec![6, 3, 3, 3]), 2, true);
+        let err = GraphRunner::new(g, weights, EngineConfig::named("baseline")).unwrap_err();
+        assert!(err.contains("signed 4-bit"), "{err}");
+    }
+}

@@ -26,11 +26,14 @@ pub struct ConvLayer {
 }
 
 impl ConvLayer {
-    /// Output spatial dims of the conv (before any pool).
+    /// Output spatial dims of the conv (before any pool). Saturates to 0
+    /// instead of wrapping the `usize` subtraction when
+    /// `k > hi + 2·pad`; [`ModelSpec::validate`] rejects such degenerate
+    /// specs with an error before any engine sees them.
     pub fn conv_out(&self) -> (usize, usize) {
         (
-            self.hi + 2 * self.pad - self.k + 1,
-            self.wi + 2 * self.pad - self.k + 1,
+            (self.hi + 2 * self.pad + 1).saturating_sub(self.k),
+            (self.wi + 2 * self.pad + 1).saturating_sub(self.k),
         )
     }
 
@@ -90,10 +93,25 @@ impl ModelSpec {
         2 * self.total_macs()
     }
 
-    /// Verify inter-layer shape consistency.
+    /// Verify inter-layer shape consistency, including the degenerate
+    /// `k > hi + 2·pad` case (which would otherwise silently produce an
+    /// empty output — or, before `conv_out` saturated, wrap a `usize`
+    /// subtraction).
     pub fn validate(&self) -> Result<(), String> {
         let (mut c, mut h, mut w) = self.input;
         for l in &self.layers {
+            if l.k == 0 {
+                return Err(format!("layer {}: kernel size 0 is invalid", l.name));
+            }
+            if l.k > l.hi + 2 * l.pad || l.k > l.wi + 2 * l.pad {
+                return Err(format!(
+                    "layer {}: kernel {} exceeds padded input {}x{} (k > hi + 2*pad)",
+                    l.name,
+                    l.k,
+                    l.hi + 2 * l.pad,
+                    l.wi + 2 * l.pad
+                ));
+            }
             if (l.ci, l.hi, l.wi) != (c, h, w) {
                 return Err(format!(
                     "layer {} expects {}x{}x{}, gets {}x{}x{}",
@@ -118,23 +136,77 @@ impl ModelSpec {
 
 /// 2×2 max-pool (stride 2) over an `[c][h][w]` level tensor.
 pub fn maxpool2(input: &[i64], c: usize, h: usize, w: usize) -> Vec<i64> {
+    maxpool_k(input, c, h, w, 2)
+}
+
+/// `k×k` max-pool with stride `k` over an `[c][h][w]` level tensor
+/// (floor semantics: trailing rows/columns that do not fill a window are
+/// dropped, matching the 2×2 special case above).
+pub fn maxpool_k(input: &[i64], c: usize, h: usize, w: usize, k: usize) -> Vec<i64> {
     assert_eq!(input.len(), c * h * w);
-    let (ho, wo) = (h / 2, w / 2);
+    assert!(k >= 1, "pool window must be >= 1");
+    let (ho, wo) = (h / k, w / k);
     let mut out = vec![i64::MIN; c * ho * wo];
+    maxpool_k_into(input, c, h, w, k, &mut out);
+    out
+}
+
+/// [`maxpool_k`] into a caller-provided buffer (`c·(h/k)·(w/k)`,
+/// overwritten) — the allocation-free variant the graph runner's arena
+/// drives.
+pub fn maxpool_k_into(input: &[i64], c: usize, h: usize, w: usize, k: usize, out: &mut [i64]) {
+    assert_eq!(input.len(), c * h * w);
+    assert!(k >= 1, "pool window must be >= 1");
+    let (ho, wo) = (h / k, w / k);
+    assert_eq!(out.len(), c * ho * wo);
     for ci in 0..c {
         for y in 0..ho {
             for x in 0..wo {
                 let mut m = i64::MIN;
-                for dy in 0..2 {
-                    for dx in 0..2 {
-                        m = m.max(input[(ci * h + 2 * y + dy) * w + 2 * x + dx]);
+                for dy in 0..k {
+                    for dx in 0..k {
+                        m = m.max(input[(ci * h + k * y + dy) * w + k * x + dx]);
                     }
                 }
                 out[(ci * ho + y) * wo + x] = m;
             }
         }
     }
+}
+
+/// `k×k` average-pool with stride `k` over an `[c][h][w]` level tensor.
+/// Integer semantics: the window sum is floor-divided (`div_euclid`) by
+/// `k²`, so negative accumulator values round toward −∞ consistently.
+pub fn avgpool_k(input: &[i64], c: usize, h: usize, w: usize, k: usize) -> Vec<i64> {
+    assert_eq!(input.len(), c * h * w);
+    assert!(k >= 1, "pool window must be >= 1");
+    let (ho, wo) = (h / k, w / k);
+    let mut out = vec![0i64; c * ho * wo];
+    avgpool_k_into(input, c, h, w, k, &mut out);
     out
+}
+
+/// [`avgpool_k`] into a caller-provided buffer (`c·(h/k)·(w/k)`,
+/// overwritten).
+pub fn avgpool_k_into(input: &[i64], c: usize, h: usize, w: usize, k: usize, out: &mut [i64]) {
+    assert_eq!(input.len(), c * h * w);
+    assert!(k >= 1, "pool window must be >= 1");
+    let (ho, wo) = (h / k, w / k);
+    assert_eq!(out.len(), c * ho * wo);
+    let k2 = (k * k) as i64;
+    for ci in 0..c {
+        for y in 0..ho {
+            for x in 0..wo {
+                let mut sum = 0i64;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        sum += input[(ci * h + k * y + dy) * w + k * x + dx];
+                    }
+                }
+                out[(ci * ho + y) * wo + x] = sum.div_euclid(k2);
+            }
+        }
+    }
 }
 
 /// Zero-pad an `[c][h][w]` tensor symmetrically by `pad` on each spatial
@@ -283,6 +355,43 @@ mod tests {
         let x: Vec<i64> = (0..16).collect();
         let y = maxpool2(&x, 1, 4, 4);
         assert_eq!(y, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn degenerate_layer_is_rejected_not_wrapped() {
+        let mut l = layer(3, 4, 2, 2, 7, false);
+        l.pad = 1;
+        // conv_out saturates to 0 instead of wrapping the subtraction...
+        assert_eq!(l.conv_out(), (0, 0));
+        // ...and validation reports the degenerate kernel as an error.
+        let m = ModelSpec {
+            name: "degenerate".into(),
+            input: (3, 2, 2),
+            layers: vec![l],
+        };
+        let err = m.validate().unwrap_err();
+        assert!(err.contains("k > hi + 2*pad"), "{err}");
+    }
+
+    #[test]
+    fn general_pools_match_expectations() {
+        let x: Vec<i64> = (0..16).collect(); // 1x4x4
+        assert_eq!(maxpool_k(&x, 1, 4, 4, 2), maxpool2(&x, 1, 4, 4));
+        assert_eq!(maxpool_k(&x, 1, 4, 4, 4), vec![15]);
+        // Average of 0..=15 is 7.5 -> floor 7.
+        assert_eq!(avgpool_k(&x, 1, 4, 4, 4), vec![7]);
+        // Negative values floor toward -inf (div_euclid).
+        assert_eq!(avgpool_k(&[-1, -2, -3, -4], 1, 2, 2, 2), vec![-3]);
+        // Trailing rows/cols that do not fill a window are dropped.
+        let y: Vec<i64> = (0..9).collect(); // 1x3x3
+        assert_eq!(maxpool_k(&y, 1, 3, 3, 2), vec![4]);
+        // Into-variants overwrite stale buffers.
+        let mut out = vec![99i64; 4];
+        maxpool_k_into(&x, 1, 4, 4, 2, &mut out);
+        assert_eq!(out, maxpool2(&x, 1, 4, 4));
+        let mut out1 = vec![99i64; 1];
+        avgpool_k_into(&x, 1, 4, 4, 4, &mut out1);
+        assert_eq!(out1, vec![7]);
     }
 
     #[test]

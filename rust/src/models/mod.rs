@@ -1,12 +1,19 @@
-//! Quantized model zoo: UltraNet (the DAC-SDC 2020 champion the paper
-//! evaluates end-to-end) plus the layer descriptors and the CPU runner
-//! that executes it over registry-resolved convolution kernels, as
-//! directed by an [`EnginePlan`](crate::engine::EnginePlan).
+//! Quantized models: the layer-graph IR ([`GraphSpec`]/[`LayerOp`] with
+//! typed [`QType`] activation edges), the graph execution engine
+//! ([`GraphRunner`]) that compiles graphs into fused arena step
+//! programs, the built-in workload [`zoo`], and the legacy sequential
+//! [`ModelSpec`] API (UltraNet et al.), which is now a thin
+//! `Into<GraphSpec>` shim over the IR.
 
+pub mod graph;
+pub mod graph_runner;
 pub mod layer;
 pub mod runner;
 pub mod ultranet;
+pub mod zoo;
 
+pub use graph::{ConvUnit, GraphInfo, GraphNode, GraphSpec, LayerOp, QType};
+pub use graph_runner::{random_graph_weights, GraphRunner};
 pub use layer::{ConvLayer, ModelSpec};
 pub use runner::{random_weights, CpuRunner, EngineKind, ModelWeights};
 pub use ultranet::{ultranet, ultranet_final_layer, ULTRANET_INPUT};

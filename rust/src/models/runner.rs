@@ -1,39 +1,31 @@
-//! CPU inference runner: executes a quantized conv model over pluggable
-//! convolution kernels resolved through the engine registry — per layer,
-//! as directed by an [`EnginePlan`] (either one named kernel everywhere
-//! or the theory-driven `auto` per-layer selection).
+//! CPU inference runner for legacy sequential [`ModelSpec`] models — a
+//! thin shim over the graph execution engine.
 //!
-//! # Fused pipeline
+//! Since the layer-graph IR landed, `CpuRunner` is `ModelSpec`-flavored
+//! sugar: construction lowers the model to a [`GraphSpec`]
+//! (`Conv2d → Requant → [MaxPool 2]` per layer) and delegates to a
+//! [`GraphRunner`], which compiles the chain back into exactly the fused
+//! arena pipeline this type used to hand-roll — per-layer padded buffers
+//! with once-zeroed borders, a shared accumulator, fused
+//! ReLU+requant(+pool) epilogues written straight into the next layer's
+//! padded interior, and zero steady-state heap allocations on serial
+//! kernel plans (`tests/fused_alloc.rs` still asserts it through this
+//! shim). `ultranet()` inference through this path is bit-exact with the
+//! pre-IR pipeline: the lowering emits the same per-layer requant
+//! (calibrated on the same raw accumulator) and the same epilogue math.
 //!
-//! The seed implementation paid four full-tensor allocations/copies per
-//! layer (`pad2d` copy-in, a fresh accumulator `Vec`, a `requantize`
-//! pass, a `maxpool2` pass). [`CpuRunner::infer`] runs a *fused*
-//! pipeline instead: a per-runner arena holds every buffer a frame
-//! needs — one padded activation buffer per layer (borders zeroed once,
-//! never touched again), one shared accumulator, and one opaque
-//! [`KernelScratch`] per layer (each kernel's packed words and gather /
-//! segmentation buffers) — all sized once and reused across frames. Each
-//! layer convolves straight out of its padded buffer into the shared
-//! accumulator (via [`ConvKernel::conv_into`]), and a fused epilogue
-//! ([`fused_epilogue_into`]) applies ReLU + requant-shift + optional 2×2
-//! max-pool while writing directly into the interior of the *next*
-//! layer's padded buffer. Steady state, serial kernels perform zero heap
-//! allocations per [`infer_into`](CpuRunner::infer_into) call (asserted
-//! by `tests/fused_alloc.rs`).
-//!
-//! The seed path is retained as [`CpuRunner::infer_unfused`]: it is the
-//! bit-exactness oracle for the fused pipeline and the baseline of
-//! `benches/model.rs`.
+//! The seed per-layer path survives as
+//! [`infer_unfused`](CpuRunner::infer_unfused) (the graph's node-walk
+//! through the bound kernels) — still the bit-exactness oracle and the
+//! `benches/model.rs` baseline.
 
-use super::layer::{fused_epilogue_into, maxpool2, pad2d, pad2d_into, ModelSpec};
-use crate::engine::{
-    ConvKernel, EngineConfig, EnginePlan, KernelChoice, KernelRegistry, KernelScratch,
-};
-use crate::exec::ThreadPool;
+use super::graph::GraphSpec;
+use super::graph_runner::GraphRunner;
+use super::layer::ModelSpec;
+use crate::engine::{EngineConfig, EnginePlan};
 use crate::quant::{QTensor, Shape};
 use crate::theory::Multiplier;
 use crate::util::rng::Rng;
-use std::sync::{Arc, Mutex};
 
 /// Legacy engine selector, retained **only** as a compatibility shim so
 /// the fused-pipeline oracle tests keep compiling: every variant converts
@@ -68,28 +60,10 @@ impl From<EngineKind> for EngineConfig {
     }
 }
 
-/// Per-inference scratch: every buffer one in-flight frame needs, sized
-/// once from the [`ModelSpec`] and reused across frames. Runners keep a
-/// free-list of arenas (one per concurrent in-flight frame), so steady
-/// state allocates nothing.
-struct Arena {
-    /// One padded activation buffer per layer. The zero borders are
-    /// written here exactly once (at construction); the fused epilogue
-    /// and the frame copy-in only ever write the interior.
-    padded: Vec<Vec<i64>>,
-    /// Shared conv accumulator, sized for the largest layer output.
-    acc: Vec<i64>,
-    /// One opaque kernel scratch per layer (packed words, gather and
-    /// segmentation buffers — whatever that layer's kernel needs).
-    scratch: Vec<KernelScratch>,
-}
-
-/// Per-layer weights (+ requantization shifts calibrated at load).
+/// Per-layer weights for a sequential model.
 #[derive(Clone, Debug)]
 pub struct ModelWeights {
     pub tensors: Vec<QTensor>,
-    /// Right-shift per layer mapping accumulator -> next activation levels.
-    pub requant_shift: Vec<u32>,
 }
 
 /// Generate deterministic synthetic weights for a model (signed `w_bits`
@@ -111,318 +85,113 @@ pub fn random_weights(model: &ModelSpec, seed: u64) -> ModelWeights {
             .expect("in-range levels"),
         );
     }
-    // Requant shifts are calibrated on first inference; start conservative.
-    let requant_shift = model.layers.iter().map(|_| 0u32).collect();
-    ModelWeights {
-        tensors,
-        requant_shift,
-    }
+    ModelWeights { tensors }
 }
 
-/// The runner: owns the per-layer kernels its [`EnginePlan`] resolved,
-/// the thread pool pooled kernels shard across, and a free-list of
-/// reusable inference arenas.
+/// The `ModelSpec` runner: lowers the model to the graph IR and executes
+/// it through a [`GraphRunner`].
 pub struct CpuRunner {
     model: ModelSpec,
-    weights: ModelWeights,
-    plan: EnginePlan,
-    kernels: Vec<Box<dyn ConvKernel>>,
-    pool: Option<Arc<ThreadPool>>,
-    /// Arena free-list: `infer` checks one out per frame and returns it,
-    /// so concurrent frames (e.g. [`infer_batch`](Self::infer_batch)
-    /// workers) each get their own and steady state allocates nothing.
-    arenas: Mutex<Vec<Arena>>,
+    inner: GraphRunner,
 }
 
 impl CpuRunner {
     /// Build a runner from any engine configuration (or a legacy
-    /// [`EngineKind`], which converts into one): plans the model first,
-    /// then binds one kernel per layer from the registry.
+    /// [`EngineKind`], which converts into one): lowers the model to its
+    /// graph, plans per op, and binds one kernel per layer.
     pub fn new(
         model: ModelSpec,
         weights: ModelWeights,
         config: impl Into<EngineConfig>,
     ) -> Result<CpuRunner, String> {
-        let config = config.into();
-        let plan = EnginePlan::plan(&model, &config)?;
-        Self::with_plan(model, weights, plan)
+        model.validate()?;
+        let graph: GraphSpec = model.clone().into();
+        let inner = GraphRunner::new(graph, weights.tensors, config)?;
+        Ok(CpuRunner { model, inner })
     }
 
     /// Build a runner executing an already-resolved plan (e.g. one the
-    /// `plan` subcommand printed, or a plan built against a custom
-    /// registry and re-validated here against the built-in one).
+    /// `plan` subcommand printed).
     pub fn with_plan(
         model: ModelSpec,
         weights: ModelWeights,
         plan: EnginePlan,
     ) -> Result<CpuRunner, String> {
         model.validate()?;
-        if plan.layers.len() != model.layers.len() {
-            return Err(format!(
-                "plan has {} layers, model has {}",
-                plan.layers.len(),
-                model.layers.len()
-            ));
-        }
-        let registry = KernelRegistry::builtin();
-        let mut kernels: Vec<Box<dyn ConvKernel>> = Vec::with_capacity(model.layers.len());
-        let mut wants_pool = false;
-        for ((l, w), lp) in model.layers.iter().zip(&weights.tensors).zip(&plan.layers) {
-            let factory = registry.resolve(&lp.kernel)?;
-            wants_pool |= factory.uses_pool();
-            kernels.push(factory.build(l, &w.to_i64(), &plan.config)?);
-        }
-        // An `auto` plan owns the whole execution strategy, so it keeps a
-        // pool even when every chosen kernel is serial: frame-level
-        // parallelism (`infer_batch`) must not silently degrade to a
-        // serial loop just because intra-layer tiling didn't pay on any
-        // layer. Named serial configs keep the legacy no-pool behavior
-        // (scoped workers make an idle pool cost nothing either way).
-        wants_pool |= plan.config.kernel == KernelChoice::Auto && plan.threads > 1;
-        let pool = if wants_pool {
-            Some(Arc::new(ThreadPool::new(plan.threads)))
-        } else {
-            None
-        };
-        // Calibrate requant shifts with a mid-gray frame so all engines
-        // produce identical activation flows.
-        let mut runner = CpuRunner {
-            model,
-            weights,
-            plan,
-            kernels,
-            pool,
-            arenas: Mutex::new(Vec::new()),
-        };
-        runner.calibrate();
-        // Pre-build one arena so even the first frame runs fused without
-        // sizing work in the latency path.
-        let warm = runner.new_arena();
-        runner.arenas.lock().expect("arena pool poisoned").push(warm);
-        Ok(runner)
+        let graph: GraphSpec = model.clone().into();
+        let inner = GraphRunner::from_plan(graph, weights.tensors, plan)?;
+        Ok(CpuRunner { model, inner })
     }
 
     pub fn model(&self) -> &ModelSpec {
         &self.model
     }
 
+    /// The underlying graph runner (the real execution engine).
+    pub fn graph_runner(&self) -> &GraphRunner {
+        &self.inner
+    }
+
     /// The resolved per-layer plan this runner executes.
     pub fn plan(&self) -> &EnginePlan {
-        &self.plan
+        self.inner.plan()
     }
 
     /// The configuration the plan was derived from.
     pub fn config(&self) -> &EngineConfig {
-        &self.plan.config
+        self.inner.config()
     }
 
     /// Compact label for reports (`hikonv-tiled:threads=4`,
     /// `auto[hikonv-tiled*3+hikonv*2]`, ...).
     pub fn label(&self) -> String {
-        self.plan.summary()
+        self.inner.label()
     }
 
-    /// Length of the raw head output (`co·ho·wo` of the final layer,
-    /// before any pool) — the size [`infer_into`](Self::infer_into)
-    /// expects its output buffer to have.
+    /// Length of the raw head output (`co·ho·wo` of the final layer) —
+    /// the size [`infer_into`](Self::infer_into) expects its output
+    /// buffer to have.
     pub fn head_len(&self) -> usize {
-        let l = self.model.layers.last().expect("non-empty model");
-        let (ho, wo) = l.conv_out();
-        l.co * ho * wo
+        self.inner.head_len()
     }
 
-    /// Size a fresh arena from the model spec: padded buffers are zeroed
-    /// here once; kernel scratches are built empty and filled per frame.
-    fn new_arena(&self) -> Arena {
-        let mut padded = Vec::with_capacity(self.model.layers.len());
-        let mut scratch = Vec::with_capacity(self.model.layers.len());
-        let mut acc_len = 1usize;
-        for (l, kernel) in self.model.layers.iter().zip(&self.kernels) {
-            padded.push(vec![0i64; l.padded_shape().input_len()]);
-            let (ho, wo) = l.conv_out();
-            acc_len = acc_len.max(l.co * ho * wo);
-            scratch.push(kernel.new_scratch());
-        }
-        Arena {
-            padded,
-            acc: vec![0i64; acc_len],
-            scratch,
-        }
+    /// Calibrated requantization shifts, one per non-head layer.
+    pub fn requant_shifts(&self) -> &[u32] {
+        self.inner.requant_shifts()
     }
 
-    /// Check an arena out of the free-list (building one only if every
-    /// cached arena is in flight).
-    fn take_arena(&self) -> Arena {
-        let cached = self.arenas.lock().expect("arena pool poisoned").pop();
-        cached.unwrap_or_else(|| self.new_arena())
-    }
-
-    fn put_arena(&self, arena: Arena) {
-        self.arenas.lock().expect("arena pool poisoned").push(arena);
-    }
-
-    fn calibrate(&mut self) {
-        let (c, h, w) = self.model.input;
-        let frame = vec![8i64; c * h * w]; // mid-gray 4-bit levels
-        let mut act = frame;
-        let mut shifts = Vec::with_capacity(self.model.layers.len());
-        for (idx, l) in self.model.layers.clone().iter().enumerate() {
-            let acc = self.run_layer_raw(idx, &act);
-            let maxabs = acc.iter().map(|v| v.abs()).max().unwrap_or(1).max(1);
-            // Map the observed accumulator range onto 0..(2^a_bits - 1).
-            let target = (1i64 << l.a_bits) - 1;
-            let mut shift = 0u32;
-            while (maxabs >> shift) > target {
-                shift += 1;
-            }
-            shifts.push(shift);
-            let (ho, wo) = l.conv_out();
-            act = requantize(&acc, shift, l.a_bits);
-            if l.pool_after {
-                act = maxpool2(&act, l.co, ho, wo);
-            }
-        }
-        self.weights.requant_shift = shifts;
-    }
-
-    /// Raw accumulator output of layer `idx` on activations `act` — the
-    /// seed per-layer path (allocating); used by calibration and
-    /// [`infer_unfused`](Self::infer_unfused).
-    fn run_layer_raw(&self, idx: usize, act: &[i64]) -> Vec<i64> {
-        let l = &self.model.layers[idx];
-        let padded = pad2d(act, l.ci, l.hi, l.wi, l.pad);
-        self.kernels[idx].conv(&padded, self.pool.as_deref())
-    }
-
-    /// Full forward pass on a quantized frame (`[c][h][w]` 4-bit levels).
+    /// Full forward pass on a quantized frame (`[c][h][w]` levels).
     /// Returns the head's raw accumulator map `[co][h][w]`.
-    ///
-    /// Runs the fused arena pipeline; the only steady-state allocation is
-    /// the returned head `Vec` itself (use [`infer_into`](Self::infer_into)
-    /// to eliminate that too).
     pub fn infer(&self, frame: &[i64]) -> Vec<i64> {
-        let mut out = vec![0i64; self.head_len()];
-        self.infer_into(frame, &mut out);
-        out
+        self.inner.infer(frame)
     }
 
     /// [`infer`](Self::infer) into a caller-provided head buffer
     /// ([`head_len`](Self::head_len) values). With a warm arena and a
     /// serial kernel plan this performs **zero heap allocations** — the
-    /// steady-state serving contract (`tests/fused_alloc.rs` asserts it
-    /// with a counting allocator).
+    /// steady-state serving contract (`tests/fused_alloc.rs`).
     pub fn infer_into(&self, frame: &[i64], out: &mut [i64]) {
-        assert_eq!(out.len(), self.head_len(), "head buffer length mismatch");
-        let mut arena = self.take_arena();
-        self.infer_with_arena(frame, out, &mut arena, self.pool.as_deref());
-        self.put_arena(arena);
+        self.inner.infer_into(frame, out);
     }
 
-    /// The fused pipeline body: layer `idx` convolves from
-    /// `arena.padded[idx]` into the shared accumulator, and the fused
-    /// epilogue writes ReLU+requant(+pool) results straight into the
-    /// interior of `arena.padded[idx + 1]`. `pool` is the intra-layer
-    /// tiling pool (`None` ⇒ every layer runs serially — what
-    /// [`infer_batch`](Self::infer_batch) uses under frame-level
-    /// parallelism, where the pool is busy with whole frames).
-    fn infer_with_arena(
-        &self,
-        frame: &[i64],
-        out: &mut [i64],
-        arena: &mut Arena,
-        pool: Option<&ThreadPool>,
-    ) {
-        let (c, h, w) = self.model.input;
-        assert_eq!(frame.len(), c * h * w, "frame dims mismatch");
-        let last = self.model.layers.len() - 1;
-        pad2d_into(frame, c, h, w, self.model.layers[0].pad, &mut arena.padded[0]);
-        for (idx, l) in self.model.layers.iter().enumerate() {
-            let (ho, wo) = l.conv_out();
-            let acc = &mut arena.acc[..l.co * ho * wo];
-            self.kernels[idx].conv_into(&arena.padded[idx], acc, &mut arena.scratch[idx], pool);
-            if idx == last {
-                out.copy_from_slice(acc);
-                return;
-            }
-            fused_epilogue_into(
-                acc,
-                self.weights.requant_shift[idx],
-                l.a_bits,
-                l.co,
-                ho,
-                wo,
-                l.pool_after,
-                &mut arena.padded[idx + 1],
-                self.model.layers[idx + 1].pad,
-            );
-        }
-    }
-
-    /// Run a batch of frames, returning one head map per frame (same
-    /// order). Whole frames are sharded across the runner's thread pool:
-    /// for the small layers of a detection backbone, output-channel
-    /// tiling loses to per-layer spawn overhead, while frame-level
-    /// parallelism amortizes one spawn over an entire forward pass. Each
-    /// worker checks out its own arena, and every frame's layers run
-    /// serially inside its worker. Plans without a pooled kernel (or
-    /// single-frame batches) fall back to a serial loop. Bit-identical
-    /// to calling [`infer`](Self::infer) per frame for any thread count.
+    /// Run a batch of frames, one head map per frame (same order); whole
+    /// frames shard across the runner's pool with per-worker arenas.
+    /// Bit-identical to per-frame [`infer`](Self::infer).
     pub fn infer_batch(&self, frames: &[&[i64]]) -> Vec<Vec<i64>> {
-        match &self.pool {
-            Some(pool) if pool.threads() > 1 && frames.len() > 1 => {
-                pool.par_map(frames, |_, frame| {
-                    let mut out = vec![0i64; self.head_len()];
-                    let mut arena = self.take_arena();
-                    self.infer_with_arena(frame, &mut out, &mut arena, None);
-                    self.put_arena(arena);
-                    out
-                })
-            }
-            _ => frames.iter().map(|f| self.infer(f)).collect(),
-        }
+        self.inner.infer_batch(frames)
     }
 
-    /// The seed per-layer forward pass: `pad2d` copy-in, fresh
-    /// accumulator, separate `requantize` and `maxpool2` passes — four
-    /// full-tensor allocations per layer. Retained as the fused
-    /// pipeline's correctness oracle and the `benches/model.rs` baseline.
+    /// The seed per-layer forward pass (pad, conv, requantize, pool as
+    /// separate allocating passes) — the fused pipeline's correctness
+    /// oracle and the `benches/model.rs` baseline.
     pub fn infer_unfused(&self, frame: &[i64]) -> Vec<i64> {
-        let (c, h, w) = self.model.input;
-        assert_eq!(frame.len(), c * h * w, "frame dims mismatch");
-        let mut act = frame.to_vec();
-        for (idx, l) in self.model.layers.iter().enumerate() {
-            let acc = self.run_layer_raw(idx, &act);
-            if idx + 1 == self.model.layers.len() {
-                return acc; // raw head output
-            }
-            let (ho, wo) = l.conv_out();
-            act = requantize(&acc, self.weights.requant_shift[idx], l.a_bits);
-            if l.pool_after {
-                act = maxpool2(&act, l.co, ho, wo);
-            }
-        }
-        act
+        self.inner.infer_unfused(frame)
     }
 
     /// Detection decode: argmax cell of the head map (DAC-SDC reports a
     /// single box; we report the peak-response grid cell).
     pub fn decode(&self, head: &[i64]) -> (usize, usize) {
-        let (co, h, w) = self.model.output_dims();
-        let mut best = (0usize, 0usize);
-        let mut best_v = i64::MIN;
-        for y in 0..h {
-            for x in 0..w {
-                let mut v = 0i64;
-                for c in 0..co {
-                    v += head[(c * h + y) * w + x].abs();
-                }
-                if v > best_v {
-                    best_v = v;
-                    best = (y, x);
-                }
-            }
-        }
-        best
+        self.inner.decode(head)
     }
 }
 
@@ -481,6 +250,18 @@ mod tests {
                 assert_seq_eq(&r.infer(&frame), &r.infer_unfused(&frame)).unwrap();
             }
         }
+    }
+
+    #[test]
+    fn shim_matches_the_graph_oracle() {
+        // The ModelSpec shim executes the lowered graph: its fused path
+        // must equal the kernel-independent strided-reference oracle.
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 84);
+        let r = CpuRunner::new(model.clone(), weights, EngineConfig::named("hikonv")).unwrap();
+        let (c, h, w) = model.input;
+        let frame = Rng::new(0xBEEF).quant_unsigned_vec(4, c * h * w);
+        assert_seq_eq(&r.infer(&frame), &r.graph_runner().infer_oracle(&frame)).unwrap();
     }
 
     #[test]
@@ -617,7 +398,7 @@ mod tests {
         let model = ultranet_tiny();
         let weights = random_weights(&model, 9);
         let r = CpuRunner::new(model, weights, EngineKind::Baseline).unwrap();
-        for &s in &r.weights.requant_shift {
+        for &s in r.requant_shifts() {
             assert!(s < 32, "shift {s} unreasonable");
         }
     }

@@ -1,0 +1,179 @@
+//! Built-in graph workloads: the scenario zoo the `plan` / `run-model`
+//! subcommands, benches and tests exercise the layer-graph IR with.
+//!
+//! Beyond the two legacy UltraNet chains, these cover the §VI
+//! generalizations the IR exists for: strided downsampling (no pools),
+//! an FC classification head on the pre-packed GEMM path, a residual
+//! block with a typed `Add` edge, and a heterogeneous mixed-bitwidth
+//! backbone whose per-op `(p, q)` feed the planner separate design
+//! points.
+
+use super::graph::GraphSpec;
+use super::ultranet::{ultranet, ultranet_tiny};
+
+/// Names accepted by [`build`], in help-text order.
+pub const NAMES: [&str; 6] = [
+    "ultranet",
+    "ultranet-tiny",
+    "strided",
+    "fc-head",
+    "residual",
+    "mixed",
+];
+
+/// Resolve a built-in workload by name (listing the valid names on a
+/// miss).
+pub fn build(name: &str) -> Result<GraphSpec, String> {
+    match name {
+        "ultranet" => Ok(ultranet().into()),
+        "ultranet-tiny" => Ok(ultranet_tiny().into()),
+        "strided" => Ok(strided_downsample()),
+        "fc-head" => Ok(fc_head()),
+        "residual" => Ok(residual_block()),
+        "mixed" => Ok(mixed_ultranet()),
+        other => Err(format!(
+            "unknown model '{other}' (valid models: {})",
+            NAMES.join(", ")
+        )),
+    }
+}
+
+/// UltraNet-tiny-shaped backbone that downsamples with stride-2 convs
+/// instead of max-pools — the workload the stride-aware im2row lowering
+/// (and the planner's dense-cost charge on the overlap-add engine)
+/// exists for.
+pub fn strided_downsample() -> GraphSpec {
+    let g = GraphSpec::new("strided-downsample", (3, 40, 80), 4)
+        .conv("down1", 16, 3, 2, 1, 4) // 16 x 20 x 40
+        .requant(4)
+        .conv("down2", 32, 3, 2, 1, 4) // 32 x 10 x 20
+        .requant(4)
+        .conv("mid", 32, 3, 1, 1, 4) // 32 x 10 x 20
+        .requant(4)
+        .conv("head", 36, 1, 1, 0, 4); // 36 x 10 x 20
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// A small conv backbone with an FC classification head: the §VI
+/// "same kernel serves FC/attention" scenario — both FC ops lower onto
+/// the pre-packed GEMM as 1×1 matmuls.
+pub fn fc_head() -> GraphSpec {
+    let g = GraphSpec::new("fc-head", (3, 32, 32), 4)
+        .conv("c1", 16, 3, 1, 1, 4)
+        .requant(4)
+        .maxpool(2) // 16 x 16 x 16
+        .conv("c2", 32, 3, 1, 1, 4)
+        .requant(4)
+        .maxpool(2) // 32 x 8 x 8
+        .fc("fc1", 64, 4)
+        .requant(4)
+        .fc("logits", 10, 4); // 10 x 1 x 1
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// A residual block: the skip connection references the stem's
+/// requantized activation, the `Add` edge widens by one bit, and a
+/// final requant narrows before the head.
+pub fn residual_block() -> GraphSpec {
+    let g = GraphSpec::new("residual-block", (3, 16, 16), 4)
+        .conv("stem", 8, 3, 1, 1, 4)
+        .requant(4); // 8 x 16 x 16, saved for the skip
+    let skip = g.last_node();
+    let g = g
+        .conv("b1", 8, 3, 1, 1, 4)
+        .requant(4)
+        .conv("b2", 8, 3, 1, 1, 4)
+        .requant(4)
+        .add(skip)
+        .requant(4)
+        .conv("head", 12, 1, 1, 0, 4); // 12 x 16 x 16
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// UltraNet-tiny with heterogeneous per-layer bitwidths (8 → 6 → 4 → 3
+/// bit): each conv op gets its own theory design point, so an `auto`
+/// plan is genuinely per-op — the mixed-bitwidth deployment regime of
+/// Fromm et al. / Chin et al.
+pub fn mixed_ultranet() -> GraphSpec {
+    let g = GraphSpec::new("mixed-ultranet", (3, 40, 80), 8)
+        .conv("c1", 16, 3, 1, 1, 8)
+        .requant(6)
+        .maxpool(2) // 16 x 20 x 40, 6-bit
+        .conv("c2", 32, 3, 1, 1, 6)
+        .requant(4)
+        .maxpool(2) // 32 x 10 x 20, 4-bit
+        .conv("c3", 64, 3, 1, 1, 4)
+        .requant(3)
+        .maxpool(2) // 64 x 5 x 10, 3-bit
+        .conv("c4", 64, 3, 1, 1, 3)
+        .requant(3)
+        .conv("head", 36, 1, 1, 0, 2); // 36 x 5 x 10
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// One graph combining every IR feature at once (strided conv + FC head
+/// + residual add + mixed bitwidths) — the acceptance workload of the
+/// graph pipeline test suite.
+pub fn combo() -> GraphSpec {
+    let g = GraphSpec::new("combo", (3, 24, 24), 4)
+        .conv("down", 8, 3, 2, 1, 6) // 8 x 12 x 12, stride 2
+        .requant(4);
+    let skip = g.last_node();
+    let g = g
+        .conv("b1", 8, 3, 1, 1, 4)
+        .requant(4)
+        .add(skip)
+        .requant(3)
+        .avgpool(2) // 8 x 6 x 6, 3-bit
+        .fc("fc1", 32, 4)
+        .requant(4)
+        .fc("logits", 10, 3); // 10 x 1 x 1
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_workload_validates() {
+        for name in NAMES {
+            let g = build(name).unwrap();
+            let info = g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!info.units.is_empty(), "{name}");
+        }
+        combo().validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_workload_lists_names() {
+        let err = build("nope").unwrap_err();
+        for name in NAMES {
+            assert!(err.contains(name), "{err}");
+        }
+    }
+
+    #[test]
+    fn strided_workload_really_strides() {
+        let info = strided_downsample().validate().unwrap();
+        assert_eq!(info.units[0].stride, 2);
+        assert_eq!(info.nodes[0].dims, (16, 20, 40));
+        assert_eq!(info.output_dims(), (36, 10, 20));
+    }
+
+    #[test]
+    fn mixed_workload_is_heterogeneous() {
+        let info = mixed_ultranet().validate().unwrap();
+        let bits: Vec<(u32, u32)> = info.units.iter().map(|u| (u.a_bits, u.w_bits)).collect();
+        assert_eq!(bits[0], (8, 8));
+        assert_eq!(bits[1], (6, 6));
+        assert_eq!(bits[2], (4, 4));
+        assert_eq!(bits[3], (3, 3));
+        assert_eq!(bits[4], (3, 2));
+    }
+}

@@ -43,8 +43,25 @@ impl QTensor {
     }
 
     /// Widen levels into an i64 working buffer (what the conv engines eat).
+    ///
+    /// Allocating convenience; hot paths use
+    /// [`widen_into`](Self::widen_into) with a reused scratch buffer so a
+    /// whole graph's weights widen through **one** allocation.
     pub fn to_i64(&self) -> Vec<i64> {
         self.data.iter().map(|&v| v as i64).collect()
+    }
+
+    /// Widen levels into a caller-provided buffer (exactly
+    /// [`numel`](Shape::numel) values, overwritten) — the borrowed,
+    /// allocation-free twin of [`to_i64`](Self::to_i64). Graph
+    /// construction widens every layer's weights through one shared
+    /// scratch sized for the largest tensor instead of allocating a fresh
+    /// `Vec<i64>` per kernel build.
+    pub fn widen_into(&self, out: &mut [i64]) {
+        assert_eq!(out.len(), self.data.len(), "widen buffer length mismatch");
+        for (dst, &v) in out.iter_mut().zip(&self.data) {
+            *dst = v as i64;
+        }
     }
 
     /// Build from raw levels, checking range.
@@ -205,5 +222,22 @@ mod tests {
     fn dequantize_applies_scale() {
         let t = QTensor::from_levels(Shape(vec![2]), &[2, -2], 4, true, 0.5).unwrap();
         assert_eq!(t.dequantize(), vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn widen_into_matches_to_i64() {
+        let t = QTensor::from_levels(Shape(vec![2, 3]), &[0, -8, 7, 1, -1, 3], 4, true, 1.0)
+            .unwrap();
+        let mut buf = vec![99i64; 6];
+        t.widen_into(&mut buf);
+        assert_eq!(buf, t.to_i64());
+    }
+
+    #[test]
+    #[should_panic(expected = "widen buffer length mismatch")]
+    fn widen_into_rejects_short_buffers() {
+        let t = QTensor::zeros(Shape(vec![4]), 4, false);
+        let mut buf = vec![0i64; 3];
+        t.widen_into(&mut buf);
     }
 }

@@ -1,0 +1,149 @@
+//! Allocation accounting for the graph runner, with a counting global
+//! allocator:
+//!
+//! * graph construction widens weights through **exactly one** shared
+//!   scratch allocation (`QTensor::widen_into` instead of a per-kernel
+//!   `to_i64()` `Vec`), and
+//! * steady-state `infer_into` on a serial kernel plan performs **zero**
+//!   heap allocations — for a graph exercising strided convs, an FC
+//!   head and a residual add, not just the legacy UltraNet chain.
+//!
+//! The counter is global to the test binary, so the tests serialize on
+//! a mutex instead of relying on test threading flags.
+
+use hikonv::engine::EngineConfig;
+use hikonv::models::{random_graph_weights, GraphRunner, GraphSpec};
+use hikonv::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Allocation events of exactly [`WIDEN_BYTES`] bytes (the shared
+/// weight-widening scratch size of `sized_graph`).
+static WIDEN_SIZED: AtomicU64 = AtomicU64::new(0);
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Every conv of `sized_graph` has this weight length, so the widening
+/// scratch is exactly this many i64s — and no engine-internal buffer of
+/// the graph shares the size (packed words, activations and
+/// accumulators all differ).
+const WIDEN_LEN: usize = 6 * 5 * 3 * 3; // co=6, ci=5, k=3
+const WIDEN_BYTES: usize = WIDEN_LEN * std::mem::size_of::<i64>();
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+fn record(size: usize) {
+    if COUNTING.load(Ordering::Relaxed) {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        if size == WIDEN_BYTES {
+            WIDEN_SIZED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Three convs with identical `co·ci·k·k`, so a per-kernel `to_i64()`
+/// regression would allocate the tell-tale size three times instead of
+/// once. 5-channel 8×12 maps keep every other buffer size distinct from
+/// [`WIDEN_BYTES`].
+fn sized_graph() -> GraphSpec {
+    GraphSpec::new("alloc-probe", (5, 8, 12), 4)
+        .conv("c1", 6, 3, 1, 1, 4)
+        .requant(4)
+        .conv("c2", 5, 3, 1, 1, 4) // note: ci=6 -> co=5 keeps the product equal
+        .requant(4)
+        .conv("c3", 6, 3, 1, 1, 4)
+}
+
+/// Strided + FC + residual graph for the zero-alloc steady-state check.
+fn feature_graph() -> GraphSpec {
+    let g = GraphSpec::new("features", (3, 12, 12), 4)
+        .conv("down", 6, 3, 2, 1, 4) // stride 2 -> 6 x 6 x 6
+        .requant(4);
+    let skip = g.last_node();
+    g.conv("b1", 6, 3, 1, 1, 4)
+        .requant(4)
+        .add(skip)
+        .requant(4)
+        .fc("head", 9, 4)
+}
+
+#[test]
+fn graph_construction_widens_weights_exactly_once() {
+    let _gate = GATE.lock().unwrap();
+    let graph = sized_graph();
+    {
+        let info = graph.validate().unwrap();
+        for u in &info.units {
+            assert_eq!(u.weight_len(), WIDEN_LEN, "{}", u.name);
+        }
+    }
+    let weights = random_graph_weights(&graph, 0x11D).unwrap();
+    ALLOCS.store(0, Ordering::SeqCst);
+    WIDEN_SIZED.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    let runner = GraphRunner::new(graph, weights, EngineConfig::named("hikonv")).unwrap();
+    COUNTING.store(false, Ordering::SeqCst);
+    assert_eq!(
+        WIDEN_SIZED.load(Ordering::SeqCst),
+        1,
+        "weights must widen through one shared scratch, not per kernel"
+    );
+    drop(runner);
+}
+
+#[test]
+fn steady_state_graph_infer_performs_zero_heap_allocations() {
+    let _gate = GATE.lock().unwrap();
+    for config in [
+        EngineConfig::named("hikonv"),
+        EngineConfig::named("im2row").with_threads(1),
+    ] {
+        let graph = feature_graph();
+        let weights = random_graph_weights(&graph, 0x2AD).unwrap();
+        let runner = GraphRunner::new(graph.clone(), weights, config.clone()).unwrap();
+        let (c, h, w) = graph.input;
+        let mut rng = Rng::new(0x2AE);
+        let warm_a = rng.quant_unsigned_vec(4, c * h * w);
+        let warm_b = rng.quant_unsigned_vec(4, c * h * w);
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        let mut head = vec![0i64; runner.head_len()];
+        // Warm the arena (first frames size packed buffers).
+        runner.infer_into(&warm_a, &mut head);
+        runner.infer_into(&warm_b, &mut head);
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        runner.infer_into(&frame, &mut head);
+        COUNTING.store(false, Ordering::SeqCst);
+        let allocs = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            allocs, 0,
+            "{config}: steady-state graph infer_into allocated {allocs} times"
+        );
+    }
+}

@@ -1,0 +1,187 @@
+//! Graph-IR validation suite: edge typing, degenerate-shape rejection
+//! (the `usize`-underflow class), the `ModelSpec` → `GraphSpec` shim,
+//! and the `QTensor` typed-activation contracts (widen-into semantics,
+//! quantize→dequantize round-trip bounds) across the bitwidth grid.
+
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{ConvLayer, GraphSpec, LayerOp, ModelSpec};
+use hikonv::quant::{QTensor, Quantizer, Shape};
+use hikonv::testing::check;
+use hikonv::util::rng::Rng;
+
+#[test]
+fn degenerate_kernels_error_instead_of_underflowing() {
+    // Graph API: k > hi + 2*pad is a validation error with context.
+    let g = GraphSpec::new("bad", (1, 3, 3), 4).conv("huge", 2, 9, 1, 1, 4);
+    let err = g.validate().unwrap_err().to_string();
+    assert!(err.contains("k > hi + 2*pad"), "{err}");
+    assert!(err.contains("huge"), "{err}");
+    // Legacy API: validation catches it too (conv_out saturates, never
+    // wraps, so even pre-validation shape math cannot panic).
+    let l = ConvLayer {
+        name: "huge".into(),
+        ci: 1,
+        co: 2,
+        hi: 3,
+        wi: 3,
+        k: 9,
+        pad: 1,
+        pool_after: false,
+        a_bits: 4,
+        w_bits: 4,
+    };
+    assert_eq!(l.conv_out(), (0, 0));
+    let m = ModelSpec {
+        name: "bad".into(),
+        input: (1, 3, 3),
+        layers: vec![l],
+    };
+    let err = m.validate().unwrap_err();
+    assert!(err.contains("k > hi + 2*pad"), "{err}");
+}
+
+#[test]
+fn graph_validation_rejects_inconsistent_structures() {
+    // Conv directly on an accumulator edge.
+    let g = GraphSpec::new("g", (2, 8, 8), 4)
+        .conv("a", 2, 3, 1, 1, 4)
+        .conv("b", 2, 3, 1, 1, 4);
+    assert!(g.validate().is_err());
+    // Residual add against mismatched dims.
+    let g = GraphSpec::new("g", (2, 8, 8), 4)
+        .conv("a", 2, 3, 1, 1, 4)
+        .requant(4)
+        .maxpool(2)
+        .add(1);
+    assert!(g.validate().is_err());
+    // Forward (non-earlier) residual reference.
+    let g = GraphSpec::new("g", (2, 8, 8), 4)
+        .conv("a", 2, 3, 1, 1, 4)
+        .requant(4)
+        .add(5);
+    assert!(g.validate().is_err());
+    // Out-of-range bitwidths.
+    let g = GraphSpec::new("g", (2, 8, 8), 4).conv("a", 2, 3, 1, 1, 9);
+    assert!(g.validate().is_err());
+    let g = GraphSpec::new("g", (2, 8, 8), 4)
+        .conv("a", 2, 3, 1, 1, 4)
+        .requant(0);
+    assert!(g.validate().is_err());
+    // Pool window larger than the map.
+    let g = GraphSpec::new("g", (2, 4, 4), 4).maxpool(5);
+    assert!(g.validate().is_err());
+    // Stride 0.
+    let g = GraphSpec::new("g", (2, 8, 8), 4).conv("a", 2, 3, 0, 1, 4);
+    assert!(g.validate().is_err());
+    // Empty graph.
+    assert!(GraphSpec::new("empty", (1, 1, 1), 4).validate().is_err());
+}
+
+#[test]
+fn modelspec_shim_lowers_every_layer_faithfully() {
+    let model = ultranet_tiny();
+    let g: GraphSpec = model.clone().into();
+    let info = g.validate().unwrap();
+    assert_eq!(info.units.len(), model.layers.len());
+    assert_eq!(info.output_dims(), model.output_dims());
+    // The node chain is Conv [Requant [MaxPool]] ... Conv (head raw).
+    let mut requants = 0;
+    let mut pools = 0;
+    for node in &g.nodes {
+        match node.op {
+            LayerOp::Requant { bits } => {
+                requants += 1;
+                assert_eq!(bits, 4);
+            }
+            LayerOp::MaxPool { k } => {
+                pools += 1;
+                assert_eq!(k, 2);
+            }
+            LayerOp::Conv2d { stride, .. } => assert_eq!(stride, 1),
+            ref other => panic!("unexpected op {other:?}"),
+        }
+    }
+    assert_eq!(requants, model.layers.len() - 1);
+    assert_eq!(
+        pools,
+        model.layers.iter().filter(|l| l.pool_after).count()
+    );
+}
+
+#[test]
+fn edge_types_flow_through_the_graph() {
+    let g = GraphSpec::new("typed", (3, 8, 8), 4)
+        .conv("c1", 4, 3, 1, 1, 4)
+        .relu()
+        .requant(5)
+        .avgpool(2)
+        .fc("head", 7, 4);
+    let info = g.validate().unwrap();
+    // Conv output is a wide signed accumulator edge...
+    assert!(info.nodes[0].ty.signed);
+    assert!(!info.nodes[0].ty.is_narrow());
+    // ...relu drops the sign, requant narrows to 5 unsigned bits...
+    assert!(!info.nodes[1].ty.signed);
+    assert_eq!(info.nodes[2].ty.bits, 5);
+    assert_eq!(info.nodes[2].ty.level_range(), (0, 31));
+    // ...avgpool preserves the type, and the FC widens again.
+    assert_eq!(info.nodes[3].ty.bits, 5);
+    assert_eq!(info.nodes[3].dims, (4, 4, 4));
+    assert!(!info.nodes[4].ty.is_narrow());
+    assert_eq!(info.output_dims(), (7, 1, 1));
+}
+
+#[test]
+fn qtensor_roundtrip_error_is_bounded_across_the_grid() {
+    // quantize -> dequantize must stay within half a scale step, for
+    // every bitwidth and signedness.
+    for bits in 1..=8u32 {
+        for signed in [false, true] {
+            if bits == 1 && signed {
+                // 1-bit signed levels are {-1, 0}: the positive range is
+                // empty, so a symmetric fit has no finite scale.
+                continue;
+            }
+            check(
+                "qtensor-roundtrip",
+                0x9_0000 + bits as u64 * 2 + signed as u64,
+                64,
+                |rng, size| {
+                    (0..size.max(1))
+                        .map(|_| (rng.f64() as f32 - if signed { 0.5 } else { 0.0 }) * 20.0)
+                        .collect::<Vec<f32>>()
+                },
+                |vals| {
+                    let q = Quantizer::fit(vals, bits, signed);
+                    let t = q.quantize(vals, Shape(vec![vals.len()]));
+                    assert_eq!(t.bits, bits);
+                    assert_eq!(t.signed, signed);
+                    let rec = t.dequantize();
+                    for (&v, &r) in vals.iter().zip(&rec) {
+                        let v = if signed { v } else { v.max(0.0) };
+                        if (r - v).abs() > q.scale / 2.0 + 1e-5 {
+                            return Err(format!(
+                                "bits={bits} signed={signed}: v={v} rec={r} scale={}",
+                                q.scale
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn widen_into_is_the_borrowed_twin_of_to_i64() {
+    let mut rng = Rng::new(0x81D);
+    for bits in 1..=8u32 {
+        let levels = rng.quant_signed_vec(bits, 37);
+        let t = QTensor::from_levels(Shape(vec![37]), &levels, bits, true, 0.25).unwrap();
+        let mut buf = vec![-1i64; 37];
+        t.widen_into(&mut buf);
+        assert_eq!(buf, t.to_i64());
+        assert_eq!(buf, levels);
+    }
+}

@@ -1,0 +1,152 @@
+//! Graph pipeline acceptance suite: every built-in graph workload
+//! (strided downsampling, FC head, residual block, mixed bitwidths, and
+//! the all-features combo) runs bit-exact against the strided-reference
+//! oracle under **every** registered kernel and the `auto` planner;
+//! plans are deterministic and genuinely per-op; and the `ModelSpec`
+//! shim keeps UltraNet bit-exact with its pre-redesign fused pipeline.
+
+use hikonv::engine::{EngineConfig, EnginePlan};
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_graph_weights, random_weights, zoo};
+use hikonv::models::{CpuRunner, GraphRunner, GraphSpec};
+use hikonv::testing::assert_seq_eq;
+use hikonv::util::rng::Rng;
+
+fn workloads() -> Vec<GraphSpec> {
+    let mut v: Vec<GraphSpec> = ["strided", "fc-head", "residual", "mixed"]
+        .iter()
+        .map(|n| zoo::build(n).unwrap())
+        .collect();
+    v.push(zoo::combo());
+    v
+}
+
+fn engine_matrix() -> Vec<EngineConfig> {
+    vec![
+        EngineConfig::named("baseline"),
+        EngineConfig::named("hikonv"),
+        EngineConfig::named("hikonv-tiled").with_threads(2),
+        EngineConfig::named("im2row").with_threads(2),
+        EngineConfig::auto().with_threads(2),
+    ]
+}
+
+#[test]
+fn every_workload_is_bit_exact_under_every_registered_kernel() {
+    for graph in workloads() {
+        let weights = random_graph_weights(&graph, 0xACCE).unwrap();
+        let (c, h, w) = graph.input;
+        let mut rng = Rng::new(0x6E0 ^ graph.nodes.len() as u64);
+        let frames: Vec<Vec<i64>> = (0..2)
+            .map(|_| rng.quant_unsigned_vec(graph.input_bits, c * h * w))
+            .collect();
+        let mut truths: Vec<Option<Vec<i64>>> = vec![None; frames.len()];
+        for config in engine_matrix() {
+            let label = config.to_string();
+            let r = GraphRunner::new(graph.clone(), weights.clone(), config)
+                .unwrap_or_else(|e| panic!("{}/{label}: {e}", graph.name));
+            for (fi, frame) in frames.iter().enumerate() {
+                let fused = r.infer(frame);
+                // The kernel-independent strided-reference oracle is the
+                // ground truth for every engine...
+                let oracle = r.infer_oracle(frame);
+                assert_seq_eq(&fused, &oracle)
+                    .unwrap_or_else(|e| panic!("{}/{label} vs oracle: {e}", graph.name));
+                // ...the node-walk through the bound kernels agrees...
+                assert_seq_eq(&fused, &r.infer_unfused(frame))
+                    .unwrap_or_else(|e| panic!("{}/{label} vs unfused: {e}", graph.name));
+                // ...and every engine agrees with every other engine.
+                let existing = truths[fi].clone();
+                match existing {
+                    Some(t) => assert_seq_eq(&fused, &t)
+                        .unwrap_or_else(|e| panic!("{}/{label} cross-engine: {e}", graph.name)),
+                    None => truths[fi] = Some(fused),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_graph_inference_matches_per_frame() {
+    for graph in workloads() {
+        let weights = random_graph_weights(&graph, 0xBA7).unwrap();
+        let r = GraphRunner::new(
+            graph.clone(),
+            weights,
+            EngineConfig::auto().with_threads(3),
+        )
+        .unwrap();
+        let (c, h, w) = graph.input;
+        let mut rng = Rng::new(0xBA8);
+        let frames: Vec<Vec<i64>> = (0..4)
+            .map(|_| rng.quant_unsigned_vec(graph.input_bits, c * h * w))
+            .collect();
+        let refs: Vec<&[i64]> = frames.iter().map(|f| f.as_slice()).collect();
+        for (f, b) in frames.iter().zip(&r.infer_batch(&refs)) {
+            assert_seq_eq(b, &r.infer(f)).unwrap_or_else(|e| panic!("{}: {e}", graph.name));
+        }
+    }
+}
+
+#[test]
+fn graph_plans_are_deterministic_and_inspectable() {
+    for graph in workloads() {
+        let cfg = EngineConfig::auto().with_threads(2);
+        let first = EnginePlan::plan_graph(&graph, &cfg).unwrap();
+        let info = graph.validate().unwrap();
+        assert_eq!(first.layers.len(), info.units.len(), "{}", graph.name);
+        for _ in 0..3 {
+            let again = EnginePlan::plan_graph(&graph, &cfg).unwrap();
+            assert_eq!(again.kernel_names(), first.kernel_names(), "{}", graph.name);
+            assert_eq!(again.summary(), first.summary(), "{}", graph.name);
+        }
+        // The rendered table names every op.
+        let rendered = first.render();
+        for u in &info.units {
+            assert!(rendered.contains(&u.name), "{}: {rendered}", graph.name);
+        }
+    }
+}
+
+#[test]
+fn mixed_bitwidth_plans_are_heterogeneous_per_op() {
+    let graph = zoo::build("mixed").unwrap();
+    let plan = EnginePlan::plan_graph(&graph, &EngineConfig::auto().with_threads(1)).unwrap();
+    // Per-op operand bitwidths flow into the plan...
+    let bits: Vec<(u32, u32)> = plan.layers.iter().map(|lp| (lp.p, lp.q)).collect();
+    assert_eq!(bits[0], (8, 8), "{bits:?}");
+    assert_eq!(bits[3], (3, 3), "{bits:?}");
+    // ...and narrower ops pack strictly more equivalent ops per wide
+    // multiplication (the paper's central bitwidth-throughput tradeoff).
+    assert!(
+        plan.layers[3].ops_per_mult > plan.layers[0].ops_per_mult,
+        "{:?}",
+        plan.layers
+    );
+}
+
+#[test]
+fn ultranet_shim_stays_bit_exact_with_the_legacy_pipeline() {
+    // The ModelSpec shim and a hand-built equivalent GraphSpec must be
+    // the same machine: identical plans, identical outputs, and the
+    // fused path still equals the seed-style unfused walk.
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 0x5EED);
+    let graph: GraphSpec = model.clone().into();
+    let gweights = random_graph_weights(&graph, 0x5EED).unwrap();
+    let shim = CpuRunner::new(model.clone(), weights, EngineConfig::named("hikonv")).unwrap();
+    let direct = GraphRunner::new(graph, gweights, EngineConfig::named("hikonv")).unwrap();
+    // Same synthetic weights stream -> same calibration.
+    assert_eq!(shim.requant_shifts(), direct.requant_shifts());
+    let (c, h, w) = model.input;
+    let mut rng = Rng::new(0x5EEE);
+    for _ in 0..2 {
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        let a = shim.infer(&frame);
+        assert_seq_eq(&a, &direct.infer(&frame)).unwrap();
+        assert_seq_eq(&a, &shim.infer_unfused(&frame)).unwrap();
+        assert_seq_eq(&a, &direct.infer_oracle(&frame)).unwrap();
+        assert_eq!(shim.decode(&a), direct.decode(&a));
+    }
+}

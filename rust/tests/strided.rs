@@ -1,0 +1,160 @@
+//! Strided-window property suite: the strided im2row lowering and the
+//! kernel subsample adapters vs the new strided reference oracle,
+//! across the full (p, q) 1..=8 × signedness grid.
+
+use hikonv::conv::conv2d::Conv2dSpec;
+use hikonv::conv::im2row::Im2RowConv;
+use hikonv::conv::reference::{conv2d_ref, conv2d_ref_strided, strided_out, ConvShape};
+use hikonv::engine::{ConvKernel, EngineConfig, KernelRegistry};
+use hikonv::models::ConvUnit;
+use hikonv::testing::assert_seq_eq;
+use hikonv::theory::{Multiplier, Signedness};
+use hikonv::util::rng::Rng;
+
+fn operand(rng: &mut Rng, bits: u32, len: usize, signed: bool) -> Vec<i64> {
+    if signed {
+        rng.quant_signed_vec(bits, len)
+    } else {
+        rng.quant_unsigned_vec(bits, len)
+    }
+}
+
+/// Every (p, q) in 1..=8, every signedness, strides 1..=3: the strided
+/// im2row lowering must equal the strided reference convolution.
+#[test]
+fn strided_conv2d_matches_reference_across_the_bitwidth_grid() {
+    let mut rng = Rng::new(0x57A1D);
+    for p in 1..=8u32 {
+        for q in 1..=8u32 {
+            for signedness in [
+                Signedness::Unsigned,
+                Signedness::Signed,
+                Signedness::UnsignedBySigned,
+            ] {
+                let shape = ConvShape {
+                    ci: 2,
+                    co: 3,
+                    hi: 7,
+                    wi: 9,
+                    k: 3,
+                };
+                let signed_in = matches!(signedness, Signedness::Signed);
+                let signed_w = !matches!(signedness, Signedness::Unsigned);
+                let input = operand(&mut rng, p, shape.input_len(), signed_in);
+                let weights = operand(&mut rng, q, shape.weight_len(), signed_w);
+                let spec = Conv2dSpec {
+                    shape,
+                    mult: Multiplier::CPU32,
+                    p,
+                    q,
+                    signedness,
+                };
+                for stride in 1..=3usize {
+                    let eng = Im2RowConv::with_stride(spec, &weights, stride)
+                        .unwrap_or_else(|e| panic!("p={p} q={q} {signedness:?}: {e}"));
+                    let want = conv2d_ref_strided(&input, &weights, shape, stride);
+                    assert_seq_eq(&eng.conv(&input), &want)
+                        .unwrap_or_else(|e| panic!("p={p} q={q} {signedness:?} s={stride}: {e}"));
+                }
+            }
+        }
+    }
+}
+
+/// FC ops lower to k=1 units over a 1×1 spatial extent: the same grid,
+/// checked against the dense reference (an FC is a pure matmul).
+#[test]
+fn fc_lowering_matches_reference_across_the_bitwidth_grid() {
+    let mut rng = Rng::new(0xFC01);
+    for p in 1..=8u32 {
+        for q in 1..=8u32 {
+            for signedness in [
+                Signedness::Unsigned,
+                Signedness::Signed,
+                Signedness::UnsignedBySigned,
+            ] {
+                // Flattened 24-feature input, 5 output neurons.
+                let shape = ConvShape {
+                    ci: 24,
+                    co: 5,
+                    hi: 1,
+                    wi: 1,
+                    k: 1,
+                };
+                let signed_in = matches!(signedness, Signedness::Signed);
+                let signed_w = !matches!(signedness, Signedness::Unsigned);
+                let input = operand(&mut rng, p, shape.input_len(), signed_in);
+                let weights = operand(&mut rng, q, shape.weight_len(), signed_w);
+                let spec = Conv2dSpec {
+                    shape,
+                    mult: Multiplier::CPU32,
+                    p,
+                    q,
+                    signedness,
+                };
+                let eng = Im2RowConv::new(spec, &weights)
+                    .unwrap_or_else(|e| panic!("p={p} q={q} {signedness:?}: {e}"));
+                let want = conv2d_ref(&input, &weights, shape);
+                assert_seq_eq(&eng.conv(&input), &want)
+                    .unwrap_or_else(|e| panic!("p={p} q={q} {signedness:?}: {e}"));
+            }
+        }
+    }
+}
+
+/// Every registered kernel (including the dense-then-subsample hikonv
+/// adapters) executes strided units bit-exactly, across bitwidths.
+#[test]
+fn every_registered_kernel_is_exact_on_strided_units() {
+    let mut rng = Rng::new(0x57A2);
+    for (p, q) in [(1u32, 1u32), (2, 3), (4, 4), (5, 2), (8, 8)] {
+        let unit = ConvUnit {
+            name: format!("s2-{p}x{q}"),
+            ci: 3,
+            co: 4,
+            hi: 8,
+            wi: 10,
+            k: 3,
+            stride: 2,
+            pad: 1,
+            a_bits: p,
+            w_bits: q,
+        };
+        let cfg = EngineConfig::auto();
+        let weights = rng.quant_signed_vec(q, unit.weight_len());
+        let sh = unit.padded_shape();
+        let input = rng.quant_unsigned_vec(p, sh.input_len());
+        let want = conv2d_ref_strided(&input, &weights, sh, 2);
+        assert_eq!(want.len(), unit.out_len());
+        for f in KernelRegistry::builtin().entries() {
+            f.supports(&unit, &cfg)
+                .unwrap_or_else(|e| panic!("{} p={p} q={q}: {e}", f.name()));
+            let kernel: Box<dyn ConvKernel> = f.build(&unit, &weights, &cfg).unwrap();
+            assert_seq_eq(&kernel.conv(&input, None), &want)
+                .unwrap_or_else(|e| panic!("{} p={p} q={q}: {e}", f.name()));
+        }
+    }
+}
+
+/// The oracle itself: strided output dims follow the floor formula and
+/// stride 1 degenerates to the dense reference.
+#[test]
+fn strided_oracle_self_checks() {
+    let shape = ConvShape {
+        ci: 2,
+        co: 2,
+        hi: 11,
+        wi: 6,
+        k: 3,
+    };
+    assert_eq!(strided_out(shape, 1), (shape.ho(), shape.wo()));
+    assert_eq!(strided_out(shape, 2), (5, 2));
+    assert_eq!(strided_out(shape, 4), (3, 1));
+    let mut rng = Rng::new(0x57A3);
+    let input = rng.quant_unsigned_vec(4, shape.input_len());
+    let weights = rng.quant_signed_vec(4, shape.weight_len());
+    assert_eq!(
+        conv2d_ref_strided(&input, &weights, shape, 1),
+        conv2d_ref(&input, &weights, shape)
+    );
+}
