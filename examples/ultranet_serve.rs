@@ -12,7 +12,8 @@
 //! make artifacts && cargo run --release --example ultranet_serve
 //! ```
 
-use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
+use hikonv::artifact::{Artifact, LoadMode};
+use hikonv::coordinator::pipeline::{CpuBackend, GraphBackend, PjrtBackend};
 use hikonv::coordinator::{serve, InferBackend, ServeConfig};
 use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::ultranet_tiny;
@@ -119,6 +120,33 @@ fn main() {
             runner.label()
         );
     }
+    println!();
+
+    // --- native AOT artifact: compile once, load + serve without planning --
+    let graph = zoo::build("ultranet-tiny").unwrap();
+    let weights = random_graph_weights(&graph, 7).unwrap();
+    let (_, plan_dt) = hikonv::util::timer::time(|| {
+        GraphRunner::new(graph.clone(), weights.clone(), EngineConfig::auto()).unwrap()
+    });
+    let art = Artifact::compile(graph, weights, EngineConfig::auto()).unwrap();
+    let path = std::env::temp_dir().join("ultranet_serve_demo.hkv");
+    art.write(&path).unwrap();
+    let ((runner, mode), load_dt) =
+        hikonv::util::timer::time(|| hikonv::artifact::load_runner(&path).unwrap());
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(mode, LoadMode::Prepacked, "same host must load prepacked");
+    println!("--- native AOT artifact (compile once, serve without planning) ---");
+    println!(
+        "    startup: load-artifact {:.2} ms vs plan-at-startup {:.2} ms ({:.1}x)",
+        load_dt * 1e3,
+        plan_dt * 1e3,
+        plan_dt / load_dt.max(1e-9)
+    );
+    let report = serve(
+        Box::new(GraphBackend::new(runner, "artifact")),
+        &config(frames, None),
+    );
+    print!("{}", report.render());
     println!();
 
     // --- the ARM-feeder bottleneck (Table II's 401-vs-588 situation) -------

@@ -3,7 +3,9 @@
 //! fused + batched serving (`infer_batch`), for each single engine and
 //! the theory-planned `auto` configuration on UltraNet, plus fused
 //! `auto` rows for the graph-IR workloads (strided downsampling,
-//! FC head, residual block, mixed bitwidths).
+//! FC head, residual block, mixed bitwidths), and a startup-latency
+//! row comparing loading a compiled AOT artifact against planning,
+//! packing and calibrating from the spec at startup.
 //!
 //! Outputs are cross-checked bit-exact before any timing — the graph
 //! workloads against the kernel-independent strided-reference oracle.
@@ -12,6 +14,7 @@
 //! `HIKONV_BENCH_PLAN_OUT` to record the per-op plans of the `auto`
 //! runs — one entry per workload (BENCH_plan.json).
 
+use hikonv::artifact::{Artifact, LoadMode};
 use hikonv::bench::{fmt_ns, BenchConfig, Bencher};
 use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::{ultranet, ultranet_tiny};
@@ -170,6 +173,67 @@ fn main() {
         );
     }
     print!("{}", gtable.render());
+
+    // --- startup latency: load AOT artifact vs plan-at-startup ---------
+    // The artifact path (docs/ARTIFACT.md) deserializes the stored plan,
+    // shifts and packed weight words; the startup path re-runs the
+    // planner, packs every weight tensor and calibrates shifts. Both
+    // sides start from serialized state (bytes vs graph+weights) and end
+    // with a serviceable fused runner, checked bit-exact first.
+    let startup_workload = if quick { "ultranet-tiny" } else { "ultranet" };
+    let sgraph = zoo::build(startup_workload).expect("builtin workload");
+    let sweights = random_graph_weights(&sgraph, 7).expect("weights");
+    let art = Artifact::compile(sgraph.clone(), sweights.clone(), EngineConfig::auto())
+        .expect("compile artifact");
+    let blob = art.to_bytes();
+    {
+        let (loaded, mode) = Artifact::from_bytes(&blob)
+            .expect("decode artifact")
+            .into_runner()
+            .expect("instantiate artifact");
+        assert_eq!(mode, LoadMode::Prepacked, "same process must load prepacked");
+        let planned = GraphRunner::new(sgraph.clone(), sweights.clone(), EngineConfig::auto())
+            .expect("feasible workload");
+        let (c, h, w) = sgraph.input;
+        let frame = Rng::new(0xA07).quant_unsigned_vec(sgraph.input_bits, c * h * w);
+        assert_seq_eq(&loaded.infer(&frame), &planned.infer(&frame))
+            .expect("artifact-loaded runner mismatch");
+    }
+    let load_ns = bencher
+        .bench(&format!("startup-load-artifact/{startup_workload}"), || {
+            Artifact::from_bytes(&blob)
+                .expect("decode artifact")
+                .into_runner()
+                .expect("instantiate artifact")
+        })
+        .median_ns();
+    let plan_ns = bencher
+        .bench(&format!("startup-plan/{startup_workload}"), || {
+            GraphRunner::new(sgraph.clone(), sweights.clone(), EngineConfig::auto())
+                .expect("feasible workload")
+        })
+        .median_ns();
+    let mut stable = Table::new(
+        "startup latency: AOT artifact load vs plan-at-startup",
+        &["workload", "load artifact", "plan at startup", "speedup"],
+    );
+    stable.row(hikonv::cells!(
+        startup_workload,
+        fmt_ns(load_ns),
+        fmt_ns(plan_ns),
+        format!("{:.2}x", plan_ns / load_ns)
+    ));
+    print!("{}", stable.render());
+    json_rows.push(
+        Json::obj()
+            .set("engine", "auto")
+            .set("workload", startup_workload)
+            .set("section", "startup")
+            .set("artifact_bytes", blob.len())
+            .set("load_artifact_ns", load_ns)
+            .set("plan_at_startup_ns", plan_ns)
+            .set("speedup_load", plan_ns / load_ns),
+    );
 
     let report = Json::obj()
         .set("bench", "model")

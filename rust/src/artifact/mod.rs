@@ -1,0 +1,850 @@
+//! AOT compiled-model artifacts: everything `GraphRunner` construction
+//! computes — validated graph, resolved [`EnginePlan`], calibrated
+//! requant shifts, and each kernel's weight memory in **packed-word
+//! form** — serialized to a versioned, checksummed, host-signature-
+//! stamped binary file.
+//!
+//! The `compile` CLI subcommand writes one; `run-model --artifact`,
+//! `plan --artifact` and the serving example load it back through
+//! [`Artifact::into_runner`], which rebuilds every kernel via
+//! [`KernelFactory::build_from_packed`](crate::engine::KernelFactory::build_from_packed)
+//! — **no planner run, no weight repacking** (asserted in
+//! `tests/artifact.rs` via the [`crate::packing::weight_pack_words`]
+//! counter) **and no calibration pass** — yet the runner is bit-identical
+//! to one built from the same graph + config on the same host.
+//!
+//! # Format
+//!
+//! `docs/ARTIFACT.md` is the normative byte-level spec of the format
+//! this module ships ([`ARTIFACT_VERSION`]); this doc is the summary.
+//! The file is a 20-byte header — [`ARTIFACT_MAGIC`], a little-endian
+//! `u32` format version, and a 64-bit FNV-1a checksum of the payload —
+//! followed by the payload: host signature, [`EngineConfig`] grammar
+//! string, graph, plan, quantized weight tensors, packed weight words,
+//! and requant shifts. Everything is little-endian; strings and arrays
+//! are length-prefixed with a `u64` count. The format is
+//! **zero-dependency** (hand-rolled writer/reader, no serde) because the
+//! crate builds offline.
+//!
+//! # Integrity & compatibility
+//!
+//! Loading checks, in order: magic (is this an artifact at all?),
+//! version (exact match — the format owns no cross-version migration),
+//! checksum (corruption/truncation), then structural decode with
+//! [`RuntimeError`]s naming the exact byte offset on any inconsistency.
+//! The **host signature** (`threads=N;lane=B`, the determinism domain of
+//! the planner) is compared against this machine's resolved signature
+//! for the embedded config: on mismatch the artifact is *not* rejected —
+//! the stored graph + weights re-plan on the current host
+//! ([`LoadMode::Replanned`]), trading the instant-load benefit for plan
+//! fidelity.
+
+#![warn(missing_docs)]
+
+use crate::engine::{EngineConfig, EnginePlan, LayerPlan, PackedWeights};
+use crate::exec::default_threads;
+use crate::models::graph::{GraphNode, GraphSpec, LayerOp};
+use crate::models::GraphRunner;
+use crate::quant::{QTensor, Shape};
+use crate::runtime::RuntimeError;
+use std::path::Path;
+
+/// Leading file magic: identifies a HiKonv AOT artifact.
+pub const ARTIFACT_MAGIC: [u8; 8] = *b"HIKONVA\0";
+
+/// The artifact format version this build writes and reads. Bumped on
+/// any byte-layout change; there is no cross-version migration — a
+/// mismatch is a precise load error and callers fall back to planning
+/// from the model spec.
+pub const ARTIFACT_VERSION: u32 = 1;
+
+/// Header length in bytes: magic + version + checksum.
+const HEADER_LEN: usize = 8 + 4 + 8;
+
+/// 64-bit FNV-1a over `bytes` — the payload checksum. Not
+/// cryptographic; it guards against corruption and truncation, not
+/// tampering.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The host signature an artifact compiled under `config` on **this**
+/// machine would carry: the planner's determinism domain (resolved
+/// thread count + word-lane width), spelled exactly like
+/// [`EnginePlan::host`].
+pub fn expected_host(config: &EngineConfig) -> String {
+    let threads = if config.threads == 0 {
+        default_threads()
+    } else {
+        config.threads
+    };
+    format!("threads={};lane={}", threads, config.lane_bits)
+}
+
+/// How [`Artifact::into_runner`] produced its runner.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Host signature matched: kernels were rebuilt from the stored
+    /// packed words — no planning, repacking, or calibration ran.
+    Prepacked,
+    /// Host signature differed: the stored graph + weights were
+    /// re-planned on this host (the string says why).
+    Replanned(String),
+}
+
+/// An AOT-compiled model: the full construction state of a
+/// [`GraphRunner`], ready to serialize ([`to_bytes`](Self::to_bytes) /
+/// [`write`](Self::write)) or to instantiate
+/// ([`into_runner`](Self::into_runner)).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    /// Host signature the plan was derived under ([`EnginePlan::host`]).
+    pub host: String,
+    /// The validated layer graph.
+    pub graph: GraphSpec,
+    /// The resolved per-op plan (embeds its [`EngineConfig`]).
+    pub plan: EnginePlan,
+    /// Quantized weight tensors, one per conv/FC unit in unit order
+    /// (kept alongside the packed words so a host-mismatch load can
+    /// re-plan, and so oracle walks still work).
+    pub weights: Vec<QTensor>,
+    /// Each kernel's exported weight memory, in unit order.
+    pub packed: Vec<PackedWeights>,
+    /// Calibrated requant shifts, in slot order.
+    pub shifts: Vec<u32>,
+}
+
+impl Artifact {
+    /// Plan + build + snapshot: the `compile` subcommand's core. Runs
+    /// full [`GraphRunner`] construction once (planner, packing,
+    /// calibration) and captures every derived result.
+    pub fn compile(
+        graph: GraphSpec,
+        weights: Vec<QTensor>,
+        config: impl Into<EngineConfig>,
+    ) -> Result<Artifact, RuntimeError> {
+        let runner = GraphRunner::new(graph, weights, config).map_err(RuntimeError::new)?;
+        Artifact::from_runner(&runner)
+    }
+
+    /// Snapshot an already-built runner. Errs if a planned kernel does
+    /// not export packed weights (a backend that opted out of AOT).
+    pub fn from_runner(runner: &GraphRunner) -> Result<Artifact, RuntimeError> {
+        Ok(Artifact {
+            host: runner.plan().host(),
+            graph: runner.graph().clone(),
+            plan: runner.plan().clone(),
+            weights: runner.weights().to_vec(),
+            packed: runner.export_packed().map_err(RuntimeError::new)?,
+            shifts: runner.requant_shifts().to_vec(),
+        })
+    }
+
+    /// Instantiate the runner this artifact describes.
+    ///
+    /// If this machine's resolved host signature for the embedded config
+    /// equals the stored one, kernels rebuild from the packed words
+    /// ([`LoadMode::Prepacked`]) — near-instant, no planner / repacking /
+    /// calibration. Otherwise the stored graph + weights re-plan here
+    /// ([`LoadMode::Replanned`]): slower, but the plan stays faithful to
+    /// the planner's choices for *this* host.
+    pub fn into_runner(self) -> Result<(GraphRunner, LoadMode), RuntimeError> {
+        let expected = expected_host(&self.plan.config);
+        if expected != self.host {
+            let reason = format!(
+                "artifact host '{}' != this host '{}'",
+                self.host, expected
+            );
+            let config = self.plan.config.clone();
+            let runner = GraphRunner::new(self.graph, self.weights, config)
+                .map_err(|e| RuntimeError::new(e).context("re-planning after host mismatch"))?;
+            return Ok((runner, LoadMode::Replanned(reason)));
+        }
+        let runner =
+            GraphRunner::from_prepacked(self.graph, self.weights, self.plan, self.packed, self.shifts)
+                .map_err(|e| RuntimeError::new(e).context("rebuilding kernels from artifact"))?;
+        Ok((runner, LoadMode::Prepacked))
+    }
+
+    /// Serialize to the on-disk byte format (`docs/ARTIFACT.md`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.str(&self.host);
+        e.str(&self.plan.config.to_string());
+        enc_graph(&mut e, &self.graph);
+        enc_plan(&mut e, &self.plan);
+        e.u64(self.weights.len() as u64);
+        for t in &self.weights {
+            enc_tensor(&mut e, t);
+        }
+        e.u64(self.packed.len() as u64);
+        for p in &self.packed {
+            enc_packed(&mut e, p);
+        }
+        e.u64(self.shifts.len() as u64);
+        for &s in &self.shifts {
+            e.u32(s);
+        }
+        let payload = e.buf;
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&ARTIFACT_MAGIC);
+        out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Deserialize, verifying magic, version and checksum before any
+    /// structural decode. Every failure is a [`RuntimeError`] with a
+    /// precise reason (never a panic), so corrupt files degrade to a
+    /// clean fallback path in the CLI.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Artifact, RuntimeError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(RuntimeError::new(format!(
+                "artifact header truncated: {} bytes, want at least {HEADER_LEN}",
+                bytes.len()
+            )));
+        }
+        if bytes[..8] != ARTIFACT_MAGIC {
+            return Err(RuntimeError::new(
+                "not a HiKonv artifact (bad magic)".to_string(),
+            ));
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        if version != ARTIFACT_VERSION {
+            return Err(RuntimeError::new(format!(
+                "artifact format version {version}, this build reads version {ARTIFACT_VERSION} \
+                 — recompile the artifact"
+            )));
+        }
+        let stored = u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes"));
+        let payload = &bytes[HEADER_LEN..];
+        let computed = fnv1a64(payload);
+        if stored != computed {
+            return Err(RuntimeError::new(format!(
+                "artifact checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) \
+                 — file is corrupt or truncated"
+            )));
+        }
+        let mut d = Dec::new(payload);
+        let host = d.str("host signature")?;
+        let cfg_str = d.str("engine config")?;
+        let config: EngineConfig = cfg_str
+            .parse()
+            .map_err(|e: String| RuntimeError::new(e).context("artifact engine config"))?;
+        let graph = dec_graph(&mut d)?;
+        let plan = dec_plan(&mut d, config)?;
+        let nw = d.len("weight tensor count", 8)?;
+        let mut weights = Vec::with_capacity(nw);
+        for _ in 0..nw {
+            weights.push(dec_tensor(&mut d)?);
+        }
+        let np = d.len("packed weight count", 1)?;
+        let mut packed = Vec::with_capacity(np);
+        for _ in 0..np {
+            packed.push(dec_packed(&mut d)?);
+        }
+        let ns = d.len("requant shift count", 4)?;
+        let mut shifts = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            shifts.push(d.u32("requant shift")?);
+        }
+        if d.remaining() != 0 {
+            return Err(RuntimeError::new(format!(
+                "artifact has {} trailing bytes after the payload",
+                d.remaining()
+            )));
+        }
+        Ok(Artifact {
+            host,
+            graph,
+            plan,
+            weights,
+            packed,
+            shifts,
+        })
+    }
+
+    /// [`to_bytes`](Self::to_bytes) to a file.
+    pub fn write(&self, path: &Path) -> Result<(), RuntimeError> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| RuntimeError::new(format!("write {}: {e}", path.display())))
+    }
+
+    /// [`from_bytes`](Self::from_bytes) from a file.
+    pub fn read(path: &Path) -> Result<Artifact, RuntimeError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| RuntimeError::new(format!("read {}: {e}", path.display())))?;
+        Artifact::from_bytes(&bytes)
+            .map_err(|e| e.context(format!("load artifact {}", path.display())))
+    }
+}
+
+/// Read + instantiate in one call — the `--artifact` CLI path.
+pub fn load_runner(path: &Path) -> Result<(GraphRunner, LoadMode), RuntimeError> {
+    Artifact::read(path)?.into_runner()
+}
+
+// ---------------------------------------------------------------------
+// Byte writer.
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn vec_i64(&mut self, v: &[i64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn vec_i128(&mut self, v: &[i128]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Byte reader: every read is bounds-checked and failures carry the byte
+// offset plus the field being decoded.
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], RuntimeError> {
+        if self.remaining() < n {
+            return Err(RuntimeError::new(format!(
+                "artifact truncated at payload byte {}: want {n} bytes for {what}, {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, RuntimeError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, RuntimeError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, RuntimeError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, RuntimeError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn usize(&mut self, what: &str) -> Result<usize, RuntimeError> {
+        let v = self.u64(what)?;
+        usize::try_from(v)
+            .map_err(|_| RuntimeError::new(format!("{what} {v} does not fit in usize")))
+    }
+
+    /// A length prefix for elements of `elem` bytes each, sanity-checked
+    /// against the remaining payload so a bogus count cannot drive a
+    /// huge allocation.
+    fn len(&mut self, what: &str, elem: usize) -> Result<usize, RuntimeError> {
+        let n = self.usize(what)?;
+        if n.saturating_mul(elem) > self.remaining() {
+            return Err(RuntimeError::new(format!(
+                "artifact truncated at payload byte {}: {what} claims {n} entries \
+                 ({elem} bytes each) but only {} bytes remain",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self, what: &str) -> Result<String, RuntimeError> {
+        let n = self.len(what, 1)?;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| RuntimeError::new(format!("{what} is not valid UTF-8")))
+    }
+
+    fn vec_i64(&mut self, what: &str) -> Result<Vec<i64>, RuntimeError> {
+        let n = self.len(what, 8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(i64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")));
+        }
+        Ok(v)
+    }
+
+    fn vec_i128(&mut self, what: &str) -> Result<Vec<i128>, RuntimeError> {
+        let n = self.len(what, 16)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(i128::from_le_bytes(self.take(16, what)?.try_into().expect("16 bytes")));
+        }
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Section codecs.
+
+/// `LayerOp` wire tags (`docs/ARTIFACT.md` §nodes). Stable: new ops
+/// append new tags; existing tags never renumber.
+const OP_CONV2D: u8 = 0;
+const OP_FC: u8 = 1;
+const OP_MAXPOOL: u8 = 2;
+const OP_AVGPOOL: u8 = 3;
+const OP_RELU: u8 = 4;
+const OP_REQUANT: u8 = 5;
+const OP_ADD: u8 = 6;
+
+fn enc_graph(e: &mut Enc, g: &GraphSpec) {
+    e.str(&g.name);
+    let (c, h, w) = g.input;
+    e.u64(c as u64);
+    e.u64(h as u64);
+    e.u64(w as u64);
+    e.u32(g.input_bits);
+    e.u64(g.nodes.len() as u64);
+    for node in &g.nodes {
+        e.str(&node.name);
+        match &node.op {
+            LayerOp::Conv2d {
+                co,
+                k,
+                stride,
+                pad,
+                w_bits,
+            } => {
+                e.u8(OP_CONV2D);
+                e.u64(*co as u64);
+                e.u64(*k as u64);
+                e.u64(*stride as u64);
+                e.u64(*pad as u64);
+                e.u32(*w_bits);
+            }
+            LayerOp::Fc { co, w_bits } => {
+                e.u8(OP_FC);
+                e.u64(*co as u64);
+                e.u32(*w_bits);
+            }
+            LayerOp::MaxPool { k } => {
+                e.u8(OP_MAXPOOL);
+                e.u64(*k as u64);
+            }
+            LayerOp::AvgPool { k } => {
+                e.u8(OP_AVGPOOL);
+                e.u64(*k as u64);
+            }
+            LayerOp::Relu => e.u8(OP_RELU),
+            LayerOp::Requant { bits } => {
+                e.u8(OP_REQUANT);
+                e.u32(*bits);
+            }
+            LayerOp::Add { with } => {
+                e.u8(OP_ADD);
+                e.u64(*with as u64);
+            }
+        }
+    }
+}
+
+fn dec_graph(d: &mut Dec) -> Result<GraphSpec, RuntimeError> {
+    let name = d.str("graph name")?;
+    let input = (
+        d.usize("input channels")?,
+        d.usize("input height")?,
+        d.usize("input width")?,
+    );
+    let input_bits = d.u32("input bits")?;
+    let n = d.len("node count", 2)?;
+    let mut nodes = Vec::with_capacity(n);
+    for _ in 0..n {
+        let node_name = d.str("node name")?;
+        let tag = d.u8("op tag")?;
+        let op = match tag {
+            OP_CONV2D => LayerOp::Conv2d {
+                co: d.usize("conv co")?,
+                k: d.usize("conv k")?,
+                stride: d.usize("conv stride")?,
+                pad: d.usize("conv pad")?,
+                w_bits: d.u32("conv w_bits")?,
+            },
+            OP_FC => LayerOp::Fc {
+                co: d.usize("fc co")?,
+                w_bits: d.u32("fc w_bits")?,
+            },
+            OP_MAXPOOL => LayerOp::MaxPool {
+                k: d.usize("maxpool k")?,
+            },
+            OP_AVGPOOL => LayerOp::AvgPool {
+                k: d.usize("avgpool k")?,
+            },
+            OP_RELU => LayerOp::Relu,
+            OP_REQUANT => LayerOp::Requant {
+                bits: d.u32("requant bits")?,
+            },
+            OP_ADD => LayerOp::Add {
+                with: d.usize("add source")?,
+            },
+            other => {
+                return Err(RuntimeError::new(format!(
+                    "unknown layer-op tag {other} in node '{node_name}'"
+                )))
+            }
+        };
+        nodes.push(GraphNode {
+            name: node_name,
+            op,
+        });
+    }
+    Ok(GraphSpec {
+        name,
+        input,
+        input_bits,
+        nodes,
+    })
+}
+
+fn enc_plan(e: &mut Enc, plan: &EnginePlan) {
+    e.u64(plan.threads as u64);
+    e.u64(plan.layers.len() as u64);
+    for lp in &plan.layers {
+        e.str(&lp.layer);
+        e.str(&lp.kernel);
+        e.u64(lp.macs);
+        e.u32(lp.p);
+        e.u32(lp.q);
+        e.u64(lp.stride as u64);
+        e.u64(lp.ops_per_mult);
+        e.u64(lp.lane_bound);
+        e.f64(lp.cost);
+        match lp.probe_ns {
+            Some(ns) => {
+                e.u8(1);
+                e.f64(ns);
+            }
+            None => e.u8(0),
+        }
+    }
+}
+
+fn dec_plan(d: &mut Dec, config: EngineConfig) -> Result<EnginePlan, RuntimeError> {
+    let threads = d.usize("plan threads")?;
+    let n = d.len("plan layer count", 2)?;
+    let mut layers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let layer = d.str("plan layer name")?;
+        let kernel = d.str("plan kernel name")?;
+        let macs = d.u64("plan macs")?;
+        let p = d.u32("plan p")?;
+        let q = d.u32("plan q")?;
+        let stride = d.usize("plan stride")?;
+        let ops_per_mult = d.u64("plan ops_per_mult")?;
+        let lane_bound = d.u64("plan lane_bound")?;
+        let cost = d.f64("plan cost")?;
+        let probe_ns = match d.u8("plan probe tag")? {
+            0 => None,
+            1 => Some(d.f64("plan probe_ns")?),
+            other => {
+                return Err(RuntimeError::new(format!(
+                    "unknown probe tag {other} in plan layer '{layer}'"
+                )))
+            }
+        };
+        layers.push(LayerPlan {
+            layer,
+            kernel,
+            macs,
+            p,
+            q,
+            stride,
+            ops_per_mult,
+            lane_bound,
+            cost,
+            probe_ns,
+        });
+    }
+    Ok(EnginePlan {
+        config,
+        threads,
+        layers,
+    })
+}
+
+fn enc_tensor(e: &mut Enc, t: &QTensor) {
+    e.u64(t.shape.dims().len() as u64);
+    for &dim in t.shape.dims() {
+        e.u64(dim as u64);
+    }
+    e.u32(t.bits);
+    e.u8(t.signed as u8);
+    e.u32(t.scale.to_bits());
+    e.u64(t.data.len() as u64);
+    e.buf.extend(t.data.iter().map(|&b| b as u8));
+}
+
+fn dec_tensor(d: &mut Dec) -> Result<QTensor, RuntimeError> {
+    let nd = d.len("tensor rank", 8)?;
+    let mut dims = Vec::with_capacity(nd);
+    for _ in 0..nd {
+        dims.push(d.usize("tensor dim")?);
+    }
+    let bits = d.u32("tensor bits")?;
+    if !(1..=8).contains(&bits) {
+        return Err(RuntimeError::new(format!(
+            "tensor bits {bits} outside 1..=8"
+        )));
+    }
+    let signed = match d.u8("tensor signedness")? {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(RuntimeError::new(format!(
+                "tensor signedness byte {other} is neither 0 nor 1"
+            )))
+        }
+    };
+    let scale = f32::from_bits(d.u32("tensor scale")?);
+    let shape = Shape(dims);
+    let n = d.len("tensor data length", 1)?;
+    if n != shape.numel() {
+        return Err(RuntimeError::new(format!(
+            "tensor data length {n} does not match shape {:?} ({} elements)",
+            shape.dims(),
+            shape.numel()
+        )));
+    }
+    let data = d.take(n, "tensor data")?.iter().map(|&b| b as i8).collect();
+    Ok(QTensor {
+        shape,
+        data,
+        bits,
+        signed,
+        scale,
+    })
+}
+
+/// `PackedWeights` wire tags (`docs/ARTIFACT.md` §packed).
+const PW_RAW: u8 = 0;
+const PW_HIKONV: u8 = 1;
+const PW_GEMM: u8 = 2;
+
+fn enc_packed(e: &mut Enc, p: &PackedWeights) {
+    match p {
+        PackedWeights::Raw(w) => {
+            e.u8(PW_RAW);
+            e.vec_i64(w);
+        }
+        PackedWeights::HiKonv {
+            channel_block,
+            words64,
+            words128,
+        } => {
+            e.u8(PW_HIKONV);
+            e.u64(*channel_block as u64);
+            e.vec_i64(words64);
+            e.vec_i128(words128);
+        }
+        PackedWeights::Gemm { words64, words128 } => {
+            e.u8(PW_GEMM);
+            e.vec_i64(words64);
+            e.vec_i128(words128);
+        }
+    }
+}
+
+fn dec_packed(d: &mut Dec) -> Result<PackedWeights, RuntimeError> {
+    match d.u8("packed-weights tag")? {
+        PW_RAW => Ok(PackedWeights::Raw(d.vec_i64("raw weight levels")?)),
+        PW_HIKONV => Ok(PackedWeights::HiKonv {
+            channel_block: d.usize("hikonv channel block")?,
+            words64: d.vec_i64("hikonv i64 words")?,
+            words128: d.vec_i128("hikonv i128 words")?,
+        }),
+        PW_GEMM => Ok(PackedWeights::Gemm {
+            words64: d.vec_i64("gemm i64 words")?,
+            words128: d.vec_i128("gemm i128 words")?,
+        }),
+        other => Err(RuntimeError::new(format!(
+            "unknown packed-weights tag {other}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::graph_runner::random_graph_weights;
+
+    fn tiny_graph() -> GraphSpec {
+        GraphSpec::new("tiny", (3, 8, 8), 4)
+            .conv("c1", 4, 3, 1, 1, 4)
+            .requant(4)
+            .maxpool(2)
+            .fc("head", 5, 4)
+    }
+
+    fn tiny_artifact() -> Artifact {
+        let g = tiny_graph();
+        let w = random_graph_weights(&g, 7).unwrap();
+        Artifact::compile(g, w, EngineConfig::auto().with_threads(1)).unwrap()
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Canonical FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f737_10b0);
+    }
+
+    #[test]
+    fn bytes_round_trip_preserves_everything() {
+        let art = tiny_artifact();
+        let back = Artifact::from_bytes(&art.to_bytes()).unwrap();
+        assert_eq!(back.host, art.host);
+        assert_eq!(back.graph.name, art.graph.name);
+        assert_eq!(back.graph.input, art.graph.input);
+        assert_eq!(back.graph.nodes.len(), art.graph.nodes.len());
+        for (a, b) in art.graph.nodes.iter().zip(&back.graph.nodes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+        }
+        assert_eq!(back.plan.config, art.plan.config);
+        assert_eq!(back.plan.threads, art.plan.threads);
+        assert_eq!(back.plan.layers.len(), art.plan.layers.len());
+        for (a, b) in art.plan.layers.iter().zip(&back.plan.layers) {
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!((a.macs, a.p, a.q, a.stride), (b.macs, b.p, b.q, b.stride));
+            assert_eq!(a.ops_per_mult, b.ops_per_mult);
+            assert_eq!(a.lane_bound, b.lane_bound);
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            assert_eq!(a.probe_ns.map(f64::to_bits), b.probe_ns.map(f64::to_bits));
+        }
+        assert_eq!(back.weights.len(), art.weights.len());
+        for (a, b) in art.weights.iter().zip(&back.weights) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+            assert_eq!((a.bits, a.signed), (b.bits, b.signed));
+            assert_eq!(a.scale.to_bits(), b.scale.to_bits());
+        }
+        assert_eq!(back.shifts, art.shifts);
+        // Serialization is deterministic: same artifact, same bytes.
+        assert_eq!(art.to_bytes(), back.to_bytes());
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_precise_errors() {
+        let mut bytes = tiny_artifact().to_bytes();
+        bytes[0] = b'X';
+        let err = Artifact::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        let mut bytes = tiny_artifact().to_bytes();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = Artifact::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+        assert!(
+            err.to_string().contains(&format!("version {ARTIFACT_VERSION}")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn corruption_fails_the_checksum() {
+        let mut bytes = tiny_artifact().to_bytes();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bytes[mid] ^= 0x40;
+        let err = Artifact::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_an_error_never_a_panic() {
+        let bytes = tiny_artifact().to_bytes();
+        for cut in [0, 7, 12, 19, HEADER_LEN, bytes.len() / 2, bytes.len() - 1] {
+            let err = Artifact::from_bytes(&bytes[..cut]).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("truncated") || msg.contains("checksum"),
+                "cut={cut}: {msg}"
+            );
+        }
+        // Trailing garbage is rejected too (the checksum catches it).
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(Artifact::from_bytes(&padded).is_err());
+    }
+
+    #[test]
+    fn host_mismatch_replans_instead_of_failing() {
+        let mut art = tiny_artifact();
+        art.host = "threads=9999;lane=64".to_string();
+        let (runner, mode) = art.into_runner().unwrap();
+        match mode {
+            LoadMode::Replanned(reason) => {
+                assert!(reason.contains("threads=9999"), "{reason}")
+            }
+            other => panic!("expected Replanned, got {other:?}"),
+        }
+        assert_eq!(runner.graph().name, "tiny");
+    }
+
+    #[test]
+    fn matching_host_loads_prepacked_and_bit_exact() {
+        let art = tiny_artifact();
+        let host = art.host.clone();
+        assert_eq!(host, expected_host(&art.plan.config));
+        let frame = vec![5i64; 3 * 8 * 8];
+        let g = tiny_graph();
+        let w = random_graph_weights(&g, 7).unwrap();
+        let fresh = GraphRunner::new(g, w, EngineConfig::auto().with_threads(1)).unwrap();
+        let (runner, mode) = art.into_runner().unwrap();
+        assert_eq!(mode, LoadMode::Prepacked);
+        assert_eq!(runner.infer(&frame), fresh.infer(&frame));
+        assert_eq!(runner.requant_shifts(), fresh.requant_shifts());
+    }
+}

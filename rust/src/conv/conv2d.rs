@@ -134,6 +134,7 @@ impl Conv2dHiKonv {
                 }
             }
         }
+        crate::packing::record_weight_pack(packed_w.len() + packed_w64.len());
         Ok(Conv2dHiKonv {
             spec,
             dp,
@@ -144,6 +145,74 @@ impl Conv2dHiKonv {
             use64,
             signed,
         })
+    }
+
+    /// Rebuild an engine from weight words packed by an earlier
+    /// [`with_block`](Self::with_block)/[`new`](Self::new) construction —
+    /// the AOT-artifact load path ([`crate::artifact`]). The design point
+    /// is re-solved deterministically from `(spec, block)` (the same
+    /// `AccumMode::Extended { m = block·K }` solve construction uses), so
+    /// only the channel block and the word vectors need to be stored.
+    /// Performs **no** packing work: the words are adopted as-is after a
+    /// shape check, so the weight-pack counter
+    /// ([`crate::packing::weight_pack_words`]) does not advance. Exactly
+    /// one lane must be populated — the one `dp.fits_lane(64)` selects —
+    /// with `co·ci·k` words.
+    pub fn from_packed(
+        spec: Conv2dSpec,
+        block: usize,
+        packed_w64: Vec<i64>,
+        packed_w: Vec<i128>,
+    ) -> Result<Conv2dHiKonv, String> {
+        let sh = spec.shape;
+        if block < 1 || block > sh.ci {
+            return Err(format!(
+                "channel block {block} outside 1..={} for this layer",
+                sh.ci
+            ));
+        }
+        let m = (block * sh.k) as u64;
+        let dp = solve(
+            spec.mult,
+            spec.p,
+            spec.q,
+            spec.signedness,
+            AccumMode::Extended { m },
+        )
+        .map_err(|e| e.to_string())?;
+        let use64 = dp.fits_lane(64);
+        let want = sh.co * sh.ci * sh.k;
+        let (have, other, lane) = if use64 {
+            (packed_w64.len(), packed_w.len(), "i64")
+        } else {
+            (packed_w.len(), packed_w64.len(), "i128")
+        };
+        if have != want || other != 0 {
+            return Err(format!(
+                "packed conv2d words mismatch: want {want} {lane} words \
+                 (co·ci·k), got {} i64 + {} i128",
+                packed_w64.len(),
+                packed_w.len()
+            ));
+        }
+        Ok(Conv2dHiKonv {
+            spec,
+            dp,
+            channel_block: block,
+            packed_w,
+            packed_w64,
+            chunks_per_row: sh.wi.div_ceil(dp.n),
+            use64,
+            signed: !matches!(spec.signedness, Signedness::Unsigned),
+        })
+    }
+
+    /// The pre-packed weight words `(i64 lane, i128 lane)` — only the
+    /// lane [`uses_fast_lane`](Self::uses_fast_lane) selects is
+    /// populated. The export surface of the AOT artifact path; feed back
+    /// through [`from_packed`](Self::from_packed).
+    pub fn packed_weight_words(&self) -> (&[i64], &[i128]) {
+        (&self.packed_w64, &self.packed_w)
     }
 
     pub fn design_point(&self) -> &DesignPoint {

@@ -184,6 +184,59 @@ impl PackedGemm {
         }
     }
 
+    /// Rebuild a GEMM from right-operand words packed by an earlier
+    /// [`with_design_point`](Self::with_design_point) construction — the
+    /// AOT-artifact load path ([`crate::artifact`]). Performs **no**
+    /// packing work: the words are adopted as-is after a shape check, so
+    /// the weight-pack counter ([`crate::packing::weight_pack_words`])
+    /// does not advance. Exactly one lane must be populated — the one
+    /// `dp.fits_lane(64)` selects — with `⌈k/min(N,K)⌉·n` words.
+    pub fn from_packed_words(
+        dp: DesignPoint,
+        k_dim: usize,
+        n_dim: usize,
+        rhs64: Vec<i64>,
+        rhs128: Vec<i128>,
+    ) -> Result<PackedGemm, String> {
+        let block = dp.n.min(dp.k);
+        let words_per_row = k_dim.div_ceil(block);
+        let use64 = dp.fits_lane(64);
+        let signed = !matches!(dp.signedness, Signedness::Unsigned);
+        let want = words_per_row * n_dim;
+        let (have, other, lane) = if use64 {
+            (rhs64.len(), rhs128.len(), "i64")
+        } else {
+            (rhs128.len(), rhs64.len(), "i128")
+        };
+        if have != want || other != 0 {
+            return Err(format!(
+                "packed gemm words mismatch: want {want} {lane} words \
+                 (k={k_dim}, n={n_dim}, block={block}), got {} i64 + {} i128",
+                rhs64.len(),
+                rhs128.len()
+            ));
+        }
+        Ok(PackedGemm {
+            dp,
+            block,
+            words_per_row,
+            k_dim,
+            n_dim,
+            use64,
+            signed,
+            rhs64,
+            rhs128,
+        })
+    }
+
+    /// The pre-packed right-operand words `(i64 lane, i128 lane)` — only
+    /// the lane [`uses_fast_lane`](Self::uses_fast_lane) selects is
+    /// populated. The export surface of the AOT artifact path; feed back
+    /// through [`from_packed_words`](Self::from_packed_words).
+    pub fn packed_words(&self) -> (&[i64], &[i128]) {
+        (&self.rhs64, &self.rhs128)
+    }
+
     pub fn design_point(&self) -> &DesignPoint {
         &self.dp
     }
@@ -428,6 +481,7 @@ fn pack_rhs<W: ProdWord>(
             words[i * n_dim + col] = pack_word::<W>(&rev, s);
         }
     }
+    crate::packing::record_weight_pack(words.len());
     words
 }
 

@@ -75,6 +75,49 @@ impl Im2RowConv {
         })
     }
 
+    /// Rebuild the lowering around an already-built [`PackedGemm`] — the
+    /// AOT-artifact load path ([`crate::artifact`]). The scalar-block
+    /// fallback engine is re-derived (a deterministic solve, no packing);
+    /// the GEMM's pre-packed weight words are adopted as-is, so the
+    /// weight-pack counter ([`crate::packing::weight_pack_words`]) does
+    /// not advance. Errors if the GEMM's design point or dimensions do
+    /// not match what [`with_stride`](Self::with_stride) would build for
+    /// `spec`.
+    pub fn from_packed_gemm(
+        spec: Conv2dSpec,
+        stride: usize,
+        gemm: PackedGemm,
+    ) -> Result<Im2RowConv, String> {
+        if stride == 0 {
+            return Err("im2row stride must be >= 1".to_string());
+        }
+        let sh = spec.shape;
+        let dot = DotHiKonv::new(spec.mult, spec.p, spec.q, spec.signedness)
+            .map_err(|e| e.to_string())?;
+        if gemm.design_point() != dot.design_point() {
+            return Err(format!(
+                "prepacked gemm design point {:?} does not match the spec's {:?}",
+                gemm.design_point(),
+                dot.design_point()
+            ));
+        }
+        if gemm.k_dim() != sh.ci * sh.k * sh.k || gemm.n_dim() != sh.co {
+            return Err(format!(
+                "prepacked gemm dims {}x{} do not match the layer's {}x{}",
+                gemm.k_dim(),
+                gemm.n_dim(),
+                sh.ci * sh.k * sh.k,
+                sh.co
+            ));
+        }
+        Ok(Im2RowConv {
+            spec,
+            stride,
+            dot,
+            gemm,
+        })
+    }
+
     pub fn spec(&self) -> &Conv2dSpec {
         &self.spec
     }

@@ -21,6 +21,6 @@ pub mod source;
 pub use batcher::Batcher;
 pub use parallel::ParallelCpuBackend;
 pub use metrics::{ServeReport, StageMetrics};
-pub use pipeline::{Frame, InferBackend};
+pub use pipeline::{Frame, GraphBackend, InferBackend};
 pub use server::{serve, ServeConfig};
 pub use source::FrameSource;

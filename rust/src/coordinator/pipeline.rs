@@ -74,6 +74,47 @@ impl InferBackend for CpuBackend {
     }
 }
 
+/// Backend over the graph-IR runner — serves any [`GraphSpec`]
+/// (crate::models::graph::GraphSpec) workload, including one
+/// instantiated from an AOT artifact ([`crate::artifact`]) so serving
+/// starts without planning or repacking.
+pub struct GraphBackend {
+    runner: crate::models::GraphRunner,
+    label: String,
+}
+
+impl GraphBackend {
+    /// Wrap a built graph runner; `tag` distinguishes construction paths
+    /// in reports (e.g. `"graph"` vs `"artifact"`).
+    pub fn new(runner: crate::models::GraphRunner, tag: &str) -> GraphBackend {
+        let label = format!("{tag}-{}-{}", runner.graph().name, runner.label());
+        GraphBackend { runner, label }
+    }
+}
+
+impl InferBackend for GraphBackend {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn input_dims(&self) -> (usize, usize, usize) {
+        self.runner.graph().input
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        let levels: Vec<&[i64]> = frames.iter().map(|f| f.levels.as_slice()).collect();
+        let heads = self.runner.infer_batch(&levels);
+        frames
+            .iter()
+            .zip(&heads)
+            .map(|(f, head)| Detection {
+                frame_id: f.id,
+                cell: self.runner.decode(head),
+            })
+            .collect()
+    }
+}
+
 /// PJRT backend: runs the AOT-compiled UltraNet artifact (L2 graph with the
 /// L1 Pallas kernels lowered in). Python is *not* involved here.
 pub struct PjrtBackend {

@@ -28,6 +28,42 @@ use std::any::Any;
 /// execution allocates nothing; each kernel downcasts its own type back.
 pub type KernelScratch = Box<dyn Any + Send>;
 
+/// One kernel's weight memory in its construction-time layout — the unit
+/// of weight storage in AOT compiled-model artifacts ([`crate::artifact`]).
+///
+/// Exported from a built kernel via [`ConvKernel::packed_weights`] and
+/// fed back through
+/// [`KernelFactory::build_from_packed`](super::KernelFactory::build_from_packed),
+/// which reconstructs the kernel **without repacking** (the skipped work
+/// AOT loading exists to skip). Word lanes follow the engines' own
+/// selection: only the lane `DesignPoint::fits_lane(64)` picks is
+/// populated.
+#[derive(Clone, Debug)]
+pub enum PackedWeights {
+    /// Raw widened weight levels `[co][ci][kh][kw]` — kernels that do no
+    /// packing (the baseline 6-loop nest).
+    Raw(Vec<i64>),
+    /// Thm.-3 overlap-add engine words: the solved channel block plus one
+    /// packed (reversed) weight-row word per `(co, ci, kh)`.
+    HiKonv {
+        /// Channels accumulated per packed-domain block (the design
+        /// point is re-solved from this, so it need not be stored).
+        channel_block: usize,
+        /// `i64`-lane words (empty when the point needs the wide lane).
+        words64: Vec<i64>,
+        /// `i128`-lane words (empty on the fast lane).
+        words128: Vec<i128>,
+    },
+    /// Pre-packed GEMM right operand, word-major `[word][col]` (the
+    /// im2row / FC lowering).
+    Gemm {
+        /// `i64`-lane words (empty when the point needs the wide lane).
+        words64: Vec<i64>,
+        /// `i128`-lane words (empty on the fast lane).
+        words128: Vec<i128>,
+    },
+}
+
 /// A layer-level convolution kernel with bound weights — the one
 /// object-safe contract every backend implements.
 pub trait ConvKernel: Send + Sync {
@@ -81,6 +117,16 @@ pub trait ConvKernel: Send + Sync {
         let mut scratch = self.new_scratch();
         self.conv_into(input, &mut out, &mut scratch, pool);
         out
+    }
+
+    /// Export this kernel's weight memory for an AOT artifact
+    /// ([`crate::artifact`]), in a form its factory's
+    /// [`build_from_packed`](super::KernelFactory::build_from_packed)
+    /// reconstructs without repacking. `None` (the default) means the
+    /// backend does not participate in AOT compilation — `compile`
+    /// reports a precise error instead of silently re-planning.
+    fn packed_weights(&self) -> Option<PackedWeights> {
+        None
     }
 }
 
@@ -157,6 +203,10 @@ impl ConvKernel for BaselineKernel {
         } else {
             conv2d_ref_strided_into(input, &self.weights, self.shape, self.stride, out);
         }
+    }
+
+    fn packed_weights(&self) -> Option<PackedWeights> {
+        Some(PackedWeights::Raw(self.weights.clone()))
     }
 }
 
@@ -284,6 +334,15 @@ impl ConvKernel for HiKonvKernel {
             s.full = full;
         }
     }
+
+    fn packed_weights(&self) -> Option<PackedWeights> {
+        let (w64, w128) = self.inner.packed_weight_words();
+        Some(PackedWeights::HiKonv {
+            channel_block: self.inner.channel_block(),
+            words64: w64.to_vec(),
+            words128: w128.to_vec(),
+        })
+    }
 }
 
 /// Per-arena working state of [`Im2RowKernel`].
@@ -355,6 +414,14 @@ impl ConvKernel for Im2RowKernel {
             }
             _ => self.inner.conv_cols(&s.lhs, 0, sh.co, out),
         }
+    }
+
+    fn packed_weights(&self) -> Option<PackedWeights> {
+        let (w64, w128) = self.inner.gemm().packed_words();
+        Some(PackedWeights::Gemm {
+            words64: w64.to_vec(),
+            words128: w128.to_vec(),
+        })
     }
 }
 

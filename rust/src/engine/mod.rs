@@ -26,7 +26,9 @@ mod planner;
 mod registry;
 
 pub use config::{EngineConfig, KernelChoice};
-pub use kernel::{BaselineKernel, ConvKernel, HiKonvKernel, Im2RowKernel, KernelScratch};
+pub use kernel::{
+    BaselineKernel, ConvKernel, HiKonvKernel, Im2RowKernel, KernelScratch, PackedWeights,
+};
 pub use planner::{EnginePlan, LayerPlan};
 pub use registry::{KernelFactory, KernelRegistry};
 

@@ -22,6 +22,8 @@
 //! selects by observed nanoseconds instead — useful on unfamiliar hosts,
 //! but explicitly not deterministic.
 
+#![warn(missing_docs)]
+
 use super::config::{EngineConfig, KernelChoice};
 use super::registry::{KernelFactory, KernelRegistry};
 use crate::exec::{default_threads, ThreadPool};
@@ -42,9 +44,11 @@ pub struct LayerPlan {
     pub kernel: String,
     /// MACs per forward pass of this op (strided output resolution).
     pub macs: u64,
-    /// Operand bitwidths the design point was solved at — per-op, which
-    /// is what makes heterogeneous mixed-bitwidth plans visible here.
+    /// Activation bitwidth the design point was solved at — per-op,
+    /// which is what makes heterogeneous mixed-bitwidth plans visible
+    /// here.
     pub p: u32,
+    /// Weight bitwidth the design point was solved at (see [`Self::p`]).
     pub q: u32,
     /// Output sampling stride (1 = dense).
     pub stride: usize,

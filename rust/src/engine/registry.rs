@@ -9,9 +9,10 @@
 //! names plus a nearest-match suggestion (edit distance).
 
 use super::config::EngineConfig;
-use super::kernel::{BaselineKernel, ConvKernel, HiKonvKernel, Im2RowKernel};
+use super::kernel::{BaselineKernel, ConvKernel, HiKonvKernel, Im2RowKernel, PackedWeights};
 use super::PAR_MIN_MACS;
 use crate::conv::conv2d::{planned_design, row_pass_cost, Conv2dHiKonv, Conv2dSpec};
+use crate::conv::gemm::PackedGemm;
 use crate::conv::im2row::Im2RowConv;
 use crate::models::graph::ConvUnit;
 use crate::theory::{solve, AccumMode, DesignPoint};
@@ -63,6 +64,28 @@ pub trait KernelFactory: Send + Sync {
         weights: &[i64],
         cfg: &EngineConfig,
     ) -> Result<Box<dyn ConvKernel>, String>;
+
+    /// Rebuild a kernel from the weight memory a kernel this factory
+    /// built exported via
+    /// [`ConvKernel::packed_weights`](super::ConvKernel::packed_weights)
+    /// — the AOT-artifact load path ([`crate::artifact`]). Must perform
+    /// **no** packing work (the weight-pack counter,
+    /// [`crate::packing::weight_pack_words`], must not advance) and must
+    /// produce a kernel bit-identical to the original `build`. The
+    /// default rejects, which makes a backend opt out of AOT compilation
+    /// explicitly rather than silently.
+    fn build_from_packed(
+        &self,
+        unit: &ConvUnit,
+        cfg: &EngineConfig,
+        packed: PackedWeights,
+    ) -> Result<Box<dyn ConvKernel>, String> {
+        let _ = (unit, cfg, packed);
+        Err(format!(
+            "kernel '{}' does not support prepacked weights",
+            self.name()
+        ))
+    }
 }
 
 /// The engine-side `Conv2dSpec` for a unit under a config.
@@ -139,6 +162,30 @@ impl KernelFactory for BaselineFactory {
         Ok(Box::new(BaselineKernel::with_stride(
             unit.padded_shape(),
             weights.to_vec(),
+            unit.stride,
+        )))
+    }
+
+    fn build_from_packed(
+        &self,
+        unit: &ConvUnit,
+        _cfg: &EngineConfig,
+        packed: PackedWeights,
+    ) -> Result<Box<dyn ConvKernel>, String> {
+        let PackedWeights::Raw(weights) = packed else {
+            return Err("baseline kernel wants raw weight levels".to_string());
+        };
+        if weights.len() != unit.weight_len() {
+            return Err(format!(
+                "unit '{}': raw weights have {} values, want {}",
+                unit.name,
+                weights.len(),
+                unit.weight_len()
+            ));
+        }
+        Ok(Box::new(BaselineKernel::with_stride(
+            unit.padded_shape(),
+            weights,
             unit.stride,
         )))
     }
@@ -260,6 +307,30 @@ impl KernelFactory for HiKonvFactory {
             unit.stride,
         )))
     }
+
+    fn build_from_packed(
+        &self,
+        unit: &ConvUnit,
+        cfg: &EngineConfig,
+        packed: PackedWeights,
+    ) -> Result<Box<dyn ConvKernel>, String> {
+        let PackedWeights::HiKonv {
+            channel_block,
+            words64,
+            words128,
+        } = packed
+        else {
+            return Err("hikonv kernel wants HiKonv-packed weight words".to_string());
+        };
+        let eng = Conv2dHiKonv::from_packed(conv_spec(unit, cfg), channel_block, words64, words128)
+            .map_err(|e| format!("unit '{}': {e}", unit.name))?;
+        Ok(Box::new(HiKonvKernel::with_stride(
+            eng,
+            self.tiled,
+            cfg.tile_co,
+            unit.stride,
+        )))
+    }
 }
 
 /// The im2row/pre-packed-GEMM lowering.
@@ -339,6 +410,25 @@ impl KernelFactory for Im2RowFactory {
         cfg: &EngineConfig,
     ) -> Result<Box<dyn ConvKernel>, String> {
         let eng = Im2RowConv::with_stride(conv_spec(unit, cfg), weights, unit.stride)?;
+        Ok(Box::new(Im2RowKernel::new(eng, cfg.tile_co)))
+    }
+
+    fn build_from_packed(
+        &self,
+        unit: &ConvUnit,
+        cfg: &EngineConfig,
+        packed: PackedWeights,
+    ) -> Result<Box<dyn ConvKernel>, String> {
+        let PackedWeights::Gemm { words64, words128 } = packed else {
+            return Err("im2row kernel wants GEMM-packed weight words".to_string());
+        };
+        let spec = conv_spec(unit, cfg);
+        let dp = self.design(unit, cfg)?;
+        let sh = spec.shape;
+        let gemm = PackedGemm::from_packed_words(dp, sh.ci * sh.k * sh.k, sh.co, words64, words128)
+            .map_err(|e| format!("unit '{}': {e}", unit.name))?;
+        let eng = Im2RowConv::from_packed_gemm(spec, unit.stride, gemm)
+            .map_err(|e| format!("unit '{}': {e}", unit.name))?;
         Ok(Box::new(Im2RowKernel::new(eng, cfg.tile_co)))
     }
 }

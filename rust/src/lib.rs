@@ -32,6 +32,11 @@
 //!   trait and [`engine::KernelRegistry`] backends plug into, and the
 //!   theory-driven per-layer planner ([`engine::EnginePlan`]), plus the
 //!   tiling entry points that shard output channels across cores.
+//! * [`artifact`] — AOT compiled-model artifacts: a versioned,
+//!   checksummed, host-signature-stamped binary file holding a validated
+//!   graph, its resolved plan, calibrated shifts and pre-packed weight
+//!   words, so serving starts without re-planning or repacking
+//!   (`docs/ARTIFACT.md` is the normative format spec).
 //! * [`exec`] — self-built chunked thread pool (deterministic `par_chunks`
 //!   style API; rayon is unavailable offline).
 //! * [`runtime`] — PJRT client: loads AOT-compiled HLO artifacts from the
@@ -43,6 +48,7 @@
 //!   (criterion-lite harness, property testing, RNG/JSON/tables, CLI parsing);
 //!   the build image has no network access so these are implemented in-crate.
 
+pub mod artifact;
 pub mod bench;
 pub mod cli;
 pub mod conv;

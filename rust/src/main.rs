@@ -8,12 +8,24 @@
 //! hikonv fig5 | fig6a | fig6b | fig6c | table1 | table2
 //! hikonv plan    --engine auto [--model <workload>] [--threads N]
 //!                [--probe] [--dse] [--json]  print the per-op engine plan
+//! hikonv plan    --artifact <path> [--json]  print a compiled artifact's
+//!                                            embedded plan
+//! hikonv compile --model <workload> [--engine auto] [--threads N]
+//!                [--seed N] [--out <path>]    AOT-compile to a .hkv artifact
 //! hikonv serve   --backend <engine-spec>|pjrt
 //!                --frames 64 [--fps-cap 401] [--workers N] [--threads N]
 //!                [--batch N] [--linger-ms MS] [--queue-depth N]
 //! hikonv run-model --engine <engine-spec> [--model <workload>]
-//!                [--threads N] [--batch N]    one graph-workload inference
+//!                [--threads N] [--batch N] [--artifact <path>]
+//!                                             one graph-workload inference
 //! ```
+//!
+//! `compile` writes a versioned binary artifact (`docs/ARTIFACT.md`)
+//! holding the validated graph, the resolved plan, calibrated shifts and
+//! the packed weight words; `run-model --artifact` / `plan --artifact`
+//! load it without re-planning or repacking (falling back to re-planning
+//! with a warning on a host-signature mismatch, and — for `run-model`
+//! with a `--model` spec — on a corrupt file).
 //!
 //! `<workload>` is a built-in graph model (`hikonv::models::zoo`):
 //! `ultranet`, `ultranet-tiny` (default), `strided` (stride-2
@@ -35,6 +47,7 @@
 //! (batches are executed as batches by the fused runner). They all
 //! compose.
 
+use hikonv::artifact::{self, Artifact, LoadMode};
 use hikonv::bench::BenchConfig;
 use hikonv::cli::{render_help, Args, OptSpec};
 use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
@@ -50,6 +63,7 @@ use hikonv::theory::{
     explore, pareto_points, solve, AccumMode, Multiplier, Signedness,
 };
 use hikonv::util::table::Table;
+use std::path::Path;
 use std::time::Duration;
 
 fn main() {
@@ -109,6 +123,7 @@ fn run(args: &Args) -> Result<(), String> {
         "plan" => cmd_plan(args),
         "serve" => cmd_serve(args),
         "run-model" => cmd_run_model(args),
+        "compile" => cmd_compile(args),
         other => Err(format!("unknown subcommand '{other}'\n\n{}", help())),
     }
 }
@@ -274,11 +289,42 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_run_model(args: &Args) -> Result<(), String> {
+/// The `run-model` spec-path runner: plan + build from the `--model`
+/// workload (also the fallback when a corrupt `--artifact` is paired
+/// with an explicit model spec).
+fn build_spec_runner(args: &Args) -> Result<GraphRunner, String> {
     let engine = parse_engine_spec(args, "engine", "hikonv")?;
     let graph = parse_model(args)?;
     let weights = random_graph_weights(&graph, args.get_u64("seed", 7)?)?;
-    let runner = GraphRunner::new(graph.clone(), weights, engine)?;
+    GraphRunner::new(graph, weights, engine)
+}
+
+/// Load a compiled artifact into a runner. Host-signature mismatches
+/// re-plan with a warning (the artifact stays usable); corrupt files are
+/// a hard error unless an explicit `--model`/`--full-model` spec offers
+/// a fallback build.
+fn load_artifact_runner(args: &Args, path: &str) -> Result<GraphRunner, String> {
+    match artifact::load_runner(Path::new(path)) {
+        Ok((runner, mode)) => {
+            if let LoadMode::Replanned(reason) = mode {
+                eprintln!("warning: {reason}; re-planned on this host");
+            }
+            Ok(runner)
+        }
+        Err(e) if args.get("model").is_some() || args.has("full-model") => {
+            eprintln!("warning: {e}; falling back to planning from the --model spec");
+            build_spec_runner(args)
+        }
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+fn cmd_run_model(args: &Args) -> Result<(), String> {
+    let runner = match args.get("artifact") {
+        Some(path) => load_artifact_runner(args, path)?,
+        None => build_spec_runner(args)?,
+    };
+    let graph = runner.graph().clone();
     let label = runner.label();
     let (c, h, w) = graph.input;
     let mut rng = hikonv::util::rng::Rng::new(1);
@@ -315,9 +361,44 @@ fn cmd_run_model(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// AOT-compile a graph workload: plan + build + calibrate once, then
+/// write the whole construction state (plan, packed weights, shifts) as
+/// a versioned binary artifact `run-model --artifact` loads instantly.
+fn cmd_compile(args: &Args) -> Result<(), String> {
+    let engine = parse_engine_spec(args, "engine", "auto")?;
+    let graph = parse_model(args)?;
+    let name = graph.name.clone();
+    let weights = random_graph_weights(&graph, args.get_u64("seed", 7)?)?;
+    let out = args.get_or("out", &format!("{name}.hkv"));
+    let (art, dt) = hikonv::util::timer::time(|| Artifact::compile(graph, weights, engine));
+    let art = art.map_err(|e| e.to_string())?;
+    let blob = art.to_bytes();
+    let path = Path::new(&out);
+    std::fs::write(path, &blob).map_err(|e| format!("write {}: {e}", path.display()))?;
+    println!(
+        "compiled {name} -> {} ({} bytes, format v{}, host {}, plan {}) in {:.1} ms",
+        path.display(),
+        blob.len(),
+        hikonv::artifact::ARTIFACT_VERSION,
+        art.host,
+        art.plan.summary(),
+        dt * 1e3
+    );
+    Ok(())
+}
+
 /// Print the per-op engine plan (kernel choice + predicted ops/mult
-/// from the theory solver) for a graph workload under an engine spec.
+/// from the theory solver) for a graph workload under an engine spec —
+/// or, with `--artifact`, the plan embedded in a compiled artifact.
 fn cmd_plan(args: &Args) -> Result<(), String> {
+    if let Some(path) = args.get("artifact") {
+        let art = Artifact::read(Path::new(path)).map_err(|e| e.to_string())?;
+        print!("{}", art.plan.render());
+        if args.has("json") {
+            println!("{}", art.plan.to_json().to_string_pretty());
+        }
+        return Ok(());
+    }
     let engine = parse_engine_spec(args, "engine", "auto")?;
     let graph = parse_model(args)?;
     let plan = EnginePlan::plan_graph(&graph, &engine)?;
@@ -381,6 +462,44 @@ fn help() -> String {
             help: "also print the plan as JSON (BENCH_plan.json schema)",
             default: None,
             is_switch: true,
+        },
+        OptSpec {
+            name: "artifact",
+            help: "print the plan embedded in a compiled .hkv artifact instead",
+            default: None,
+            is_switch: false,
+        },
+    ];
+    let compile_opts: &[OptSpec] = &[
+        OptSpec {
+            name: "model",
+            help: "graph workload: ultranet | ultranet-tiny | strided | fc-head | residual | mixed",
+            default: Some("ultranet-tiny"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "engine",
+            help: "engine spec: auto | <kernel>[@AxB][:k=v,...]",
+            default: Some("auto"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "threads",
+            help: "intra-layer tiling threads baked into the host signature (0 = auto)",
+            default: Some("0"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "seed",
+            help: "synthetic-weight RNG seed (must match run-model's)",
+            default: Some("7"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "out",
+            help: "output path (default <model>.hkv)",
+            default: None,
+            is_switch: false,
         },
     ];
     let serve_opts: &[OptSpec] = &[
@@ -458,6 +577,12 @@ fn help() -> String {
             default: Some("1"),
             is_switch: false,
         },
+        OptSpec {
+            name: "artifact",
+            help: "load a compiled .hkv artifact instead of planning at startup",
+            default: None,
+            is_switch: false,
+        },
     ];
     render_help(
         "hikonv",
@@ -471,6 +596,7 @@ fn help() -> String {
             ("table1", "BNN resource comparison (paper Table I)", none),
             ("table2", "UltraNet fps / DSP efficiency (paper Table II)", none),
             ("plan", "print the per-op engine plan (theory-driven)", plan_opts),
+            ("compile", "AOT-compile a workload to a .hkv artifact", compile_opts),
             ("serve", "run the streaming serving pipeline", serve_opts),
             ("run-model", "single graph-workload inference on CPU engines", run_model_opts),
         ],

@@ -31,6 +31,8 @@
 //! (`Conv2d → Requant → [MaxPool 2]` per layer), so the legacy API is a
 //! thin shim over this IR.
 
+#![warn(missing_docs)]
+
 use super::layer::ModelSpec;
 use crate::conv::reference::{strided_out, ConvShape};
 use crate::runtime::RuntimeError;
@@ -45,8 +47,11 @@ pub const ACC_BITS: u32 = 62;
 /// requantization shifts are calibrated at runtime, which refines it.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QType {
+    /// Level bitwidth ([`ACC_BITS`] marks a wide accumulator edge).
     pub bits: u32,
+    /// Whether levels are two's-complement signed.
     pub signed: bool,
+    /// Best-effort real-value scale per level (informational).
     pub scale: f32,
 }
 
@@ -95,29 +100,51 @@ pub enum LayerOp {
     /// Weights are signed `w_bits`-bit levels; the incoming edge must
     /// carry narrow unsigned levels (requantize first).
     Conv2d {
+        /// Output channels.
         co: usize,
+        /// Square kernel size.
         k: usize,
+        /// Output sampling stride.
         stride: usize,
+        /// Symmetric zero padding.
         pad: usize,
+        /// Signed weight bitwidth.
         w_bits: u32,
     },
     /// Fully-connected layer over the flattened input (`ci = c·h·w`),
     /// lowered onto the conv kernels as a 1×1 conv at 1×1 spatial extent
     /// — the pre-packed GEMM serves it as a pure matmul.
-    Fc { co: usize, w_bits: u32 },
+    Fc {
+        /// Output features.
+        co: usize,
+        /// Signed weight bitwidth.
+        w_bits: u32,
+    },
     /// `k×k` max-pool, stride `k` (floor semantics on ragged edges).
-    MaxPool { k: usize },
+    MaxPool {
+        /// Window size and stride.
+        k: usize,
+    },
     /// `k×k` average-pool, stride `k`; window sums floor-divide by `k²`.
-    AvgPool { k: usize },
+    AvgPool {
+        /// Window size and stride.
+        k: usize,
+    },
     /// Elementwise `max(v, 0)`.
     Relu,
     /// ReLU + calibrated right-shift + clamp to unsigned `bits` levels:
     /// `v ↦ (max(v, 0) >> shift) min (2^bits - 1)`. The shift is
     /// calibrated per node at runner construction.
-    Requant { bits: u32 },
+    Requant {
+        /// Unsigned output level bitwidth.
+        bits: u32,
+    },
     /// Residual addition with the output of earlier node `with`
     /// (same dims required; output widens by one bit).
-    Add { with: usize },
+    Add {
+        /// Absolute index of the (earlier) source node.
+        with: usize,
+    },
 }
 
 impl LayerOp {
@@ -138,7 +165,9 @@ impl LayerOp {
 /// One named node of a [`GraphSpec`].
 #[derive(Clone, Debug)]
 pub struct GraphNode {
+    /// Node name (table rows, plan entries, error messages).
     pub name: String,
+    /// The operation this node performs.
     pub op: LayerOp,
 }
 
@@ -150,15 +179,19 @@ pub struct GraphNode {
 /// [`add`](Self::add), ...) and check with [`validate`](Self::validate).
 #[derive(Clone, Debug)]
 pub struct GraphSpec {
+    /// Workload name.
     pub name: String,
     /// Input planes × H × W.
     pub input: (usize, usize, usize),
     /// Bitwidth of the (unsigned) quantized input levels.
     pub input_bits: u32,
+    /// The node list, in execution order.
     pub nodes: Vec<GraphNode>,
 }
 
 impl GraphSpec {
+    /// An empty graph over `input` (planes × H × W) at `input_bits`-bit
+    /// unsigned input levels; append nodes with the chainable helpers.
     pub fn new(name: &str, input: (usize, usize, usize), input_bits: u32) -> GraphSpec {
         GraphSpec {
             name: name.to_string(),
@@ -482,14 +515,21 @@ impl GraphInfo {
 /// points (and kernels) for different-precision ops in one graph.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ConvUnit {
+    /// Originating graph-node name.
     pub name: String,
+    /// Input channels (for FC units: the flattened input length).
     pub ci: usize,
+    /// Output channels.
     pub co: usize,
-    /// Unpadded input spatial dims.
+    /// Unpadded input height.
     pub hi: usize,
+    /// Unpadded input width.
     pub wi: usize,
+    /// Square kernel size.
     pub k: usize,
+    /// Output sampling stride.
     pub stride: usize,
+    /// Symmetric zero padding.
     pub pad: usize,
     /// Activation (input-edge) bitwidth — unsigned levels.
     pub a_bits: u32,
@@ -532,6 +572,7 @@ impl ConvUnit {
         self.padded_shape().macs()
     }
 
+    /// Number of weight levels this unit consumes (`co·ci·k·k`).
     pub fn weight_len(&self) -> usize {
         self.co * self.ci * self.k * self.k
     }

@@ -35,7 +35,7 @@
 //! strided reference convolution — the kernel-independent ground truth
 //! every engine configuration is tested against.
 
-use super::graph::{GraphInfo, GraphSpec, LayerOp};
+use super::graph::{ConvUnit, GraphInfo, GraphSpec, LayerOp};
 use super::layer::{avgpool_k, avgpool_k_into, fused_epilogue_into, maxpool_k, maxpool_k_into};
 use super::layer::{pad2d, pad2d_into};
 use super::runner::requantize;
@@ -249,6 +249,25 @@ fn compile(graph: &GraphSpec, info: &GraphInfo) -> (Vec<Step>, Vec<bool>) {
     (steps, flat_used)
 }
 
+/// The per-unit weight-tensor invariants every build path enforces.
+fn check_unit_weights(u: &ConvUnit, t: &QTensor) -> Result<(), String> {
+    if t.shape.numel() != u.weight_len() {
+        return Err(format!(
+            "unit '{}': weight tensor has {} values, wants {}",
+            u.name,
+            t.shape.numel(),
+            u.weight_len()
+        ));
+    }
+    if t.bits != u.w_bits || !t.signed {
+        return Err(format!(
+            "unit '{}': weights must be signed {}-bit levels (got {}-bit, signed={})",
+            u.name, u.w_bits, t.bits, t.signed
+        ));
+    }
+    Ok(())
+}
+
 fn add_slices(a: &[i64], b: &[i64], dst: &mut [i64]) {
     assert_eq!(a.len(), b.len(), "residual add length mismatch");
     assert_eq!(a.len(), dst.len(), "residual add output length mismatch");
@@ -323,6 +342,95 @@ impl GraphRunner {
         Self::with_plan(graph, info, weights, plan)
     }
 
+    /// Build a runner from an AOT-compiled artifact's parts: a resolved
+    /// plan, the weight memory each kernel exported via
+    /// [`ConvKernel::packed_weights`](crate::engine::ConvKernel::packed_weights)
+    /// (one entry per conv/FC unit), and already-calibrated requant
+    /// shifts (slot order). This is the [`crate::artifact`] load path:
+    /// kernels rebuild through
+    /// [`KernelFactory::build_from_packed`](crate::engine::KernelFactory::build_from_packed)
+    /// — no planning, no weight repacking (the
+    /// [`crate::packing::weight_pack_words`] counter does not advance)
+    /// and no calibration pass — yet the runner is bit-identical to one
+    /// built by [`new`](Self::new) under the same config on the same
+    /// host.
+    pub fn from_prepacked(
+        graph: GraphSpec,
+        weights: Vec<QTensor>,
+        plan: EnginePlan,
+        packed: Vec<crate::engine::PackedWeights>,
+        shifts: Vec<u32>,
+    ) -> Result<GraphRunner, String> {
+        let info = graph.validate().map_err(|e| e.to_string())?;
+        if plan.layers.len() != info.units.len() {
+            return Err(format!(
+                "plan has {} ops, graph '{}' has {} conv/FC units",
+                plan.layers.len(),
+                graph.name,
+                info.units.len()
+            ));
+        }
+        if weights.len() != info.units.len() {
+            return Err(format!(
+                "graph '{}' has {} conv/FC units, got {} weight tensors",
+                graph.name,
+                info.units.len(),
+                weights.len()
+            ));
+        }
+        if packed.len() != info.units.len() {
+            return Err(format!(
+                "graph '{}' has {} conv/FC units, got {} packed weight blocks",
+                graph.name,
+                info.units.len(),
+                packed.len()
+            ));
+        }
+        if shifts.len() != info.requant_count {
+            return Err(format!(
+                "graph '{}' has {} requant nodes, got {} calibrated shifts",
+                graph.name, info.requant_count, shifts.len()
+            ));
+        }
+        let registry = KernelRegistry::builtin();
+        let mut kernels: Vec<Box<dyn ConvKernel>> = Vec::with_capacity(info.units.len());
+        let mut wants_pool = false;
+        for (((u, t), lp), pw) in info
+            .units
+            .iter()
+            .zip(&weights)
+            .zip(&plan.layers)
+            .zip(packed)
+        {
+            check_unit_weights(u, t)?;
+            let f = registry.resolve(&lp.kernel)?;
+            wants_pool |= f.uses_pool();
+            kernels.push(f.build_from_packed(u, &plan.config, pw)?);
+        }
+        wants_pool |= plan.config.kernel == KernelChoice::Auto && plan.threads > 1;
+        let pool = if wants_pool {
+            Some(Arc::new(ThreadPool::new(plan.threads)))
+        } else {
+            None
+        };
+        let (steps, flat_used) = compile(&graph, &info);
+        let runner = GraphRunner {
+            graph,
+            info,
+            weights,
+            plan,
+            kernels,
+            shifts,
+            steps,
+            flat_used,
+            pool,
+            arenas: Mutex::new(Vec::new()),
+        };
+        let warm = runner.new_arena();
+        runner.arenas.lock().expect("arena pool poisoned").push(warm);
+        Ok(runner)
+    }
+
     fn with_plan(
         graph: GraphSpec,
         info: GraphInfo,
@@ -346,20 +454,7 @@ impl GraphRunner {
         let max_w = info.units.iter().map(|u| u.weight_len()).max().unwrap_or(0);
         let mut wide = vec![0i64; max_w];
         for ((u, t), lp) in info.units.iter().zip(&weights).zip(&plan.layers) {
-            if t.shape.numel() != u.weight_len() {
-                return Err(format!(
-                    "unit '{}': weight tensor has {} values, wants {}",
-                    u.name,
-                    t.shape.numel(),
-                    u.weight_len()
-                ));
-            }
-            if t.bits != u.w_bits || !t.signed {
-                return Err(format!(
-                    "unit '{}': weights must be signed {}-bit levels (got {}-bit, signed={})",
-                    u.name, u.w_bits, t.bits, t.signed
-                ));
-            }
+            check_unit_weights(u, t)?;
             let f = registry.resolve(&lp.kernel)?;
             wants_pool |= f.uses_pool();
             let w = &mut wide[..u.weight_len()];
@@ -428,6 +523,32 @@ impl GraphRunner {
     /// Calibrated right-shift per requant node, in node order.
     pub fn requant_shifts(&self) -> &[u32] {
         &self.shifts
+    }
+
+    /// The quantized weight tensors this runner was built from, in unit
+    /// order.
+    pub fn weights(&self) -> &[QTensor] {
+        &self.weights
+    }
+
+    /// Snapshot every kernel's packed weight memory, in unit order — the
+    /// payload an AOT artifact ([`crate::artifact`]) stores so
+    /// [`from_prepacked`](Self::from_prepacked) can rebuild the kernels
+    /// without repacking. Errs if a planned kernel does not export its
+    /// weights (a backend that opted out of AOT compilation).
+    pub fn export_packed(&self) -> Result<Vec<crate::engine::PackedWeights>, String> {
+        self.kernels
+            .iter()
+            .zip(&self.plan.layers)
+            .map(|(k, lp)| {
+                k.packed_weights().ok_or_else(|| {
+                    format!(
+                        "kernel '{}' (op '{}') does not export packed weights",
+                        lp.kernel, lp.layer
+                    )
+                })
+            })
+            .collect()
     }
 
     /// Size a fresh arena from the compiled program: padded buffers are

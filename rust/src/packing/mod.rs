@@ -20,6 +20,30 @@ mod unsigned;
 pub use signed::{pack_signed, pack_signed_recursive, segment_signed, segment_signed_into};
 pub use unsigned::{pack_unsigned, segment_unsigned, segment_unsigned_into};
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of weight words packed by engine construction
+/// (`Conv2dHiKonv` weight rows, `PackedGemm` right-operand words).
+static WEIGHT_PACK_WORDS: AtomicU64 = AtomicU64::new(0);
+
+/// Record `words` weight words packed during engine construction.
+/// Called by the weight-packing loops only — activation packing (per
+/// frame, by design) is not counted.
+pub(crate) fn record_weight_pack(words: usize) {
+    WEIGHT_PACK_WORDS.fetch_add(words as u64, Ordering::Relaxed);
+}
+
+/// Monotonic process-wide count of weight words packed so far.
+///
+/// The observable behind the AOT artifact contract: loading a compiled
+/// artifact ([`crate::artifact`]) rebuilds every kernel from its stored
+/// packed words, so the count must not advance — asserted in
+/// `tests/artifact.rs`. Reads are `Relaxed`; take a before/after delta
+/// on a single thread for exact accounting.
+pub fn weight_pack_words() -> u64 {
+    WEIGHT_PACK_WORDS.load(Ordering::Relaxed)
+}
+
 /// Wrapping-sum packing specification: `Σ v[i]·2^(S·i) mod 2^128`.
 ///
 /// This is the *mathematical definition* both packers must agree with

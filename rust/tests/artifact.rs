@@ -1,0 +1,186 @@
+//! AOT-artifact acceptance suite: `compile` → serialize → load must be
+//! bit-identical to plan-at-startup for **every** zoo workload, must
+//! perform zero weight packing on the load path (asserted via the
+//! process-wide pack counter), and must reject corrupt/truncated/
+//! mismatched files with precise errors — never panics — while a
+//! host-signature mismatch degrades to re-planning, not failure.
+
+use hikonv::artifact::{expected_host, load_runner, Artifact, LoadMode, ARTIFACT_VERSION};
+use hikonv::engine::{EngineConfig, EnginePlan};
+use hikonv::models::{random_graph_weights, zoo, GraphRunner};
+use hikonv::packing::weight_pack_words;
+use hikonv::testing::assert_seq_eq;
+use hikonv::util::rng::Rng;
+
+/// A deterministic engine config: explicit thread count keeps the host
+/// signature machine-independent, so loads stay on the prepacked path.
+fn engine() -> EngineConfig {
+    EngineConfig::auto().with_threads(2)
+}
+
+#[test]
+fn every_zoo_workload_round_trips_bit_exact() {
+    for name in zoo::NAMES {
+        let graph = zoo::build(name).unwrap();
+        let weights = random_graph_weights(&graph, 0xA07).unwrap();
+        let fresh = GraphRunner::new(graph.clone(), weights.clone(), engine())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let art = Artifact::compile(graph.clone(), weights, engine())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let bytes = art.to_bytes();
+        let (loaded, mode) = Artifact::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .into_runner()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(mode, LoadMode::Prepacked, "{name}");
+        // The loaded runner executes the identical plan...
+        assert_eq!(loaded.plan().kernel_names(), fresh.plan().kernel_names(), "{name}");
+        assert_eq!(loaded.plan().threads, fresh.plan().threads, "{name}");
+        // ...with the identical calibrated shifts (stored, not re-derived)...
+        assert_eq!(loaded.requant_shifts(), fresh.requant_shifts(), "{name}");
+        // ...and is bit-identical to plan-at-startup, fused and unfused.
+        let (c, h, w) = loaded.graph().input;
+        let frames = if name == "ultranet" { 1 } else { 2 };
+        let mut rng = Rng::new(0xF00D ^ c as u64);
+        for _ in 0..frames {
+            let frame = rng.quant_unsigned_vec(loaded.graph().input_bits, c * h * w);
+            let got = loaded.infer(&frame);
+            assert_seq_eq(&got, &fresh.infer_unfused(&frame))
+                .unwrap_or_else(|e| panic!("{name} vs unfused: {e}"));
+            assert_seq_eq(&got, &fresh.infer(&frame))
+                .unwrap_or_else(|e| panic!("{name} vs fused: {e}"));
+        }
+    }
+}
+
+#[test]
+fn loading_skips_the_planner_and_all_weight_packing() {
+    let graph = zoo::build("fc-head").unwrap();
+    let weights = random_graph_weights(&graph, 0xA07).unwrap();
+    // Compiling packs (that is the point: pay it once, offline)...
+    let before_compile = weight_pack_words();
+    let art = Artifact::compile(graph, weights, engine()).unwrap();
+    assert!(
+        weight_pack_words() > before_compile,
+        "compile must go through the packing path"
+    );
+    let bytes = art.to_bytes();
+    // ...and loading must not pack a single word.
+    let before_load = weight_pack_words();
+    let (runner, mode) = Artifact::from_bytes(&bytes).unwrap().into_runner().unwrap();
+    assert_eq!(mode, LoadMode::Prepacked);
+    assert_eq!(
+        weight_pack_words(),
+        before_load,
+        "prepacked load must not repack weights"
+    );
+    // The runner is immediately serviceable.
+    let (c, h, w) = runner.graph().input;
+    let frame = vec![3i64; c * h * w];
+    assert_eq!(runner.infer(&frame).len(), runner.head_len());
+}
+
+#[test]
+fn embedded_plan_matches_a_fresh_plan_byte_for_byte() {
+    for name in ["ultranet-tiny", "strided", "mixed"] {
+        let graph = zoo::build(name).unwrap();
+        let weights = random_graph_weights(&graph, 0xA07).unwrap();
+        let art = Artifact::compile(graph.clone(), weights, engine()).unwrap();
+        let replanned = EnginePlan::plan_graph(&graph, &engine()).unwrap();
+        assert_eq!(
+            art.plan.to_json().to_string_pretty(),
+            replanned.to_json().to_string_pretty(),
+            "{name}"
+        );
+        assert_eq!(art.host, expected_host(&engine()), "{name}");
+    }
+}
+
+#[test]
+fn every_truncated_prefix_is_an_error_never_a_panic() {
+    let graph = zoo::build("residual").unwrap();
+    let weights = random_graph_weights(&graph, 5).unwrap();
+    let bytes = Artifact::compile(graph, weights, engine()).unwrap().to_bytes();
+    // Every header prefix, then a stride through the payload, then the
+    // one-byte-short file: all must fail cleanly.
+    let mut cuts: Vec<usize> = (0..20.min(bytes.len())).collect();
+    cuts.extend((20..bytes.len()).step_by(97));
+    cuts.push(bytes.len() - 1);
+    for cut in cuts {
+        match Artifact::from_bytes(&bytes[..cut]) {
+            Err(_) => {}
+            Ok(_) => panic!("truncation to {cut}/{} bytes decoded", bytes.len()),
+        }
+    }
+}
+
+#[test]
+fn every_single_byte_flip_is_detected() {
+    let graph = zoo::build("residual").unwrap();
+    let weights = random_graph_weights(&graph, 5).unwrap();
+    let bytes = Artifact::compile(graph, weights, engine()).unwrap().to_bytes();
+    // Header bytes exhaustively, payload on a stride: the magic, version
+    // and checksum checks must catch every flip.
+    let mut positions: Vec<usize> = (0..20).collect();
+    positions.extend((20..bytes.len()).step_by(61));
+    for pos in positions {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0x01;
+        assert!(
+            Artifact::from_bytes(&corrupt).is_err(),
+            "flip at byte {pos} went undetected"
+        );
+    }
+}
+
+#[test]
+fn version_mismatch_is_a_precise_error() {
+    let graph = zoo::build("ultranet-tiny").unwrap();
+    let weights = random_graph_weights(&graph, 5).unwrap();
+    let mut bytes = Artifact::compile(graph, weights, engine()).unwrap().to_bytes();
+    bytes[8..12].copy_from_slice(&(ARTIFACT_VERSION + 1).to_le_bytes());
+    let err = Artifact::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(
+        err.contains(&format!("version {}", ARTIFACT_VERSION + 1)),
+        "{err}"
+    );
+    assert!(err.contains("recompile"), "{err}");
+}
+
+#[test]
+fn host_mismatch_falls_back_to_replanning_and_stays_exact() {
+    let graph = zoo::build("fc-head").unwrap();
+    let weights = random_graph_weights(&graph, 0xA07).unwrap();
+    let fresh = GraphRunner::new(graph.clone(), weights.clone(), engine()).unwrap();
+    let mut art = Artifact::compile(graph, weights, engine()).unwrap();
+    art.host = "threads=511;lane=64".to_string();
+    // Round-trip through bytes so the tampered host is really on disk.
+    let (runner, mode) = Artifact::from_bytes(&art.to_bytes())
+        .unwrap()
+        .into_runner()
+        .unwrap();
+    match mode {
+        LoadMode::Replanned(reason) => assert!(reason.contains("threads=511"), "{reason}"),
+        other => panic!("expected Replanned, got {other:?}"),
+    }
+    let (c, h, w) = runner.graph().input;
+    let mut rng = Rng::new(0xCAFE);
+    let frame = rng.quant_unsigned_vec(runner.graph().input_bits, c * h * w);
+    assert_seq_eq(&runner.infer(&frame), &fresh.infer(&frame)).unwrap();
+}
+
+#[test]
+fn file_round_trip_and_load_runner_helper() {
+    let graph = zoo::build("mixed").unwrap();
+    let weights = random_graph_weights(&graph, 11).unwrap();
+    let art = Artifact::compile(graph, weights, engine()).unwrap();
+    let path = std::env::temp_dir().join(format!("hikonv_artifact_test_{}.hkv", std::process::id()));
+    art.write(&path).unwrap();
+    let (runner, mode) = load_runner(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(mode, LoadMode::Prepacked);
+    assert_eq!(runner.graph().name, "mixed-ultranet");
+    // A missing file is a readable error, not a panic.
+    let err = load_runner(&path).unwrap_err().to_string();
+    assert!(err.contains("read"), "{err}");
+}
