@@ -14,7 +14,9 @@
 
 use hikonv::artifact::{Artifact, LoadMode};
 use hikonv::coordinator::pipeline::{CpuBackend, GraphBackend, PjrtBackend};
-use hikonv::coordinator::{serve, InferBackend, ServeConfig};
+use hikonv::coordinator::{
+    serve, AdmissionPolicy, FaultInjector, FaultPlan, InferBackend, ServeConfig,
+};
 use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::ultranet_tiny;
 use hikonv::models::{random_graph_weights, random_weights, zoo, CpuRunner, GraphRunner};
@@ -30,6 +32,7 @@ fn config(frames: u64, cap: Option<f64>) -> ServeConfig {
         linger: Duration::from_millis(1),
         seed: 7,
         bits: 4,
+        ..ServeConfig::default()
     }
 }
 
@@ -50,7 +53,7 @@ fn main() {
                 let loaded = rt.load_artifact(artifacts::ULTRANET_TINY).unwrap();
                 let backend: Box<dyn InferBackend> =
                     Box::new(PjrtBackend::new(loaded, model.input, model.output_dims()));
-                let report = serve(backend, &config(frames, None));
+                let report = serve(backend, &config(frames, None)).unwrap();
                 println!("--- PJRT (L1 Pallas kernels via L2 JAX, AOT) ---");
                 print!("{}", report.render());
                 println!();
@@ -69,7 +72,7 @@ fn main() {
     ] {
         let runner =
             CpuRunner::new(model.clone(), random_weights(&model, 7), engine).unwrap();
-        let report = serve(Box::new(CpuBackend::new(runner)), &config(frames, None));
+        let report = serve(Box::new(CpuBackend::new(runner)), &config(frames, None)).unwrap();
         println!("--- {label} ---");
         print!("{}", report.render());
         println!();
@@ -84,7 +87,7 @@ fn main() {
             workers,
         )
         .unwrap();
-        let report = serve(Box::new(pool), &config(frames, None));
+        let report = serve(Box::new(pool), &config(frames, None)).unwrap();
         println!("--- HiKonv pool, {workers} workers (scales with available cores; this");
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         println!("    host has {cores}) ---");
@@ -99,7 +102,7 @@ fn main() {
         EngineConfig::named("hikonv-tiled"),
     )
     .unwrap();
-    let report = serve(Box::new(CpuBackend::new(tiled)), &config(frames, None));
+    let report = serve(Box::new(CpuBackend::new(tiled)), &config(frames, None)).unwrap();
     println!("--- HiKonv packed+tiled engine (intra-layer, auto-sized pool) ---");
     print!("{}", report.render());
     println!();
@@ -145,7 +148,8 @@ fn main() {
     let report = serve(
         Box::new(GraphBackend::new(runner, "artifact")),
         &config(frames, None),
-    );
+    )
+    .unwrap();
     print!("{}", report.render());
     println!();
 
@@ -159,7 +163,40 @@ fn main() {
     let capped = serve(
         Box::new(CpuBackend::new(runner)),
         &config(frames, Some(30.0)),
-    );
+    )
+    .unwrap();
     println!("--- HiKonv with a 30-fps feeder cap (ARM-bottleneck analogue) ---");
     print!("{}", capped.render());
+
+    // --- overload + scripted faults: the robustness layer ------------------
+    // Open-loop shed policy at an offered load far above capacity, plus a
+    // scripted fault plan: the run must finish with every frame accounted
+    // for (admitted == shed + expired + failed + completed), not crash.
+    let runner = CpuRunner::new(
+        model.clone(),
+        random_weights(&model, 7),
+        EngineConfig::named("hikonv"),
+    )
+    .unwrap();
+    let plan: FaultPlan = "panic@2;stall@6:20ms;drop@10".parse().unwrap();
+    let faulty = FaultInjector::new(Box::new(CpuBackend::new(runner)), plan);
+    let report = serve(
+        Box::new(faulty),
+        &ServeConfig {
+            frames,
+            source_fps_cap: Some(2000.0),
+            queue_depth: 4,
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            seed: 7,
+            bits: 4,
+            policy: AdmissionPolicy::Shed,
+            deadline: Some(Duration::from_millis(250)),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    println!("--- overload (shed policy, 2000 fps offered) + scripted faults ---");
+    print!("{}", report.render());
+    assert!(report.slo.accounted(), "SLO identity must hold");
 }

@@ -1,0 +1,158 @@
+//! Bench: open-loop overload sweep of the serve path — offered load ×
+//! admission policy → goodput, shed rate, tail latency — plus one
+//! scripted-fault row exercising the supervised inference path.
+//!
+//! The backend's single-frame capacity is probed first; each sweep cell
+//! then offers 1x / 2x / 4x that capacity under `block`, `shed`, and
+//! `drop-oldest` admission. Block rows show closed-loop backpressure
+//! (goodput pins to capacity, nothing shed, latency grows with queue
+//! depth); shed/drop-oldest rows show open-loop behaviour (bounded
+//! latency, nonzero shed rate). Set `HIKONV_BENCH_QUICK=1` for a CI
+//! smoke pass and `HIKONV_BENCH_OUT` to record BENCH_serve.json.
+
+use hikonv::bench::{BenchConfig, Bencher};
+use hikonv::coordinator::pipeline::CpuBackend;
+use hikonv::coordinator::{
+    serve, AdmissionPolicy, FaultInjector, FaultPlan, InferBackend, ServeConfig, ServeReport,
+};
+use hikonv::engine::EngineConfig;
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_weights, CpuRunner};
+use hikonv::util::json::Json;
+use hikonv::util::table::Table;
+use std::time::Duration;
+
+fn backend() -> Box<dyn InferBackend> {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, 7);
+    let runner = CpuRunner::new(model, weights, EngineConfig::named("hikonv"))
+        .expect("feasible engine");
+    Box::new(CpuBackend::new(runner))
+}
+
+fn row(report: &ServeReport, offered_fps: f64, section: &str) -> Json {
+    Json::obj()
+        .set("section", section)
+        .set("backend", report.backend.as_str())
+        .set("policy", report.policy.as_str())
+        .set("offered_fps", offered_fps)
+        .set("admitted", report.slo.admitted as i64)
+        .set("completed", report.slo.completed as i64)
+        .set("goodput_fps", report.fps)
+        .set("shed_rate", report.slo.shed_rate())
+        .set("expired", report.slo.expired as i64)
+        .set("failed", report.slo.failed as i64)
+        .set("faults", report.slo.faults as i64)
+        .set("retried", report.slo.retried as i64)
+        .set("deadline_miss_rate", report.slo.deadline_miss_rate())
+        .set("latency_p50_us", report.latency.percentile_us(50.0) as i64)
+        .set("latency_p99_us", report.latency.percentile_us(99.0) as i64)
+        .set("queue_depth_p95", report.queue_depth.percentile(95.0) as i64)
+}
+
+fn main() {
+    let config = BenchConfig::from_env();
+    let quick = std::env::var("HIKONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let frames: u64 = if quick { 60 } else { 240 };
+
+    // Probe single-frame capacity: the reference point every sweep cell's
+    // offered load is a multiple of.
+    let mut bencher = Bencher::with_config("serve", config);
+    let mut probe = backend();
+    let (c, h, w) = probe.input_dims();
+    let mut src = hikonv::coordinator::FrameSource::new(7, (c, h, w), 4, None);
+    let frame = src.next_frame();
+    let per_frame_ns = bencher
+        .bench("capacity-probe/single-frame", || {
+            probe.infer_batch(std::slice::from_ref(&frame))
+        })
+        .median_ns();
+    let capacity_fps = 1e9 / per_frame_ns;
+    // Deadline budget: generous vs per-frame service time so only real
+    // queueing (not noise) expires frames.
+    let deadline = Duration::from_nanos((per_frame_ns as u64).saturating_mul(16).max(2_000_000));
+    eprintln!("capacity ~{capacity_fps:.0} fps, deadline budget {deadline:?}");
+
+    let mut json_rows = Vec::new();
+    let mut table = Table::new(
+        "serve overload sweep: offered load x admission policy",
+        &["policy", "offered", "goodput", "shed%", "expired", "p50 us", "p99 us", "miss%"],
+    );
+
+    for policy in [AdmissionPolicy::Block, AdmissionPolicy::Shed, AdmissionPolicy::DropOldest] {
+        for mult in [1.0f64, 2.0, 4.0] {
+            let offered = capacity_fps * mult;
+            let report = serve(
+                backend(),
+                &ServeConfig {
+                    frames,
+                    source_fps_cap: Some(offered),
+                    queue_depth: 8,
+                    max_batch: 4,
+                    linger: Duration::from_millis(1),
+                    seed: 7,
+                    bits: 4,
+                    policy,
+                    deadline: Some(deadline),
+                    ..ServeConfig::default()
+                },
+            )
+            .expect("serve run");
+            assert!(report.slo.accounted(), "identity violated: {:?}", report.slo);
+            table.row(hikonv::cells!(
+                policy.to_string(),
+                format!("{mult:.0}x"),
+                format!("{:.0}", report.fps),
+                format!("{:.1}", report.slo.shed_rate() * 100.0),
+                report.slo.expired,
+                report.latency.percentile_us(50.0),
+                report.latency.percentile_us(99.0),
+                format!("{:.1}", report.slo.deadline_miss_rate() * 100.0)
+            ));
+            json_rows.push(row(&report, offered, "overload-sweep"));
+        }
+    }
+    print!("{}", table.render());
+
+    // --- scripted-fault row: supervised inference under a fault plan ---
+    let plan: FaultPlan = "panic@4;stall@8:50ms;drop@12".parse().expect("plan");
+    let offered = capacity_fps * 2.0;
+    let report = serve(
+        Box::new(FaultInjector::new(backend(), plan)),
+        &ServeConfig {
+            frames,
+            source_fps_cap: Some(offered),
+            queue_depth: 8,
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            seed: 7,
+            bits: 4,
+            policy: AdmissionPolicy::Shed,
+            deadline: Some(deadline),
+            ..ServeConfig::default()
+        },
+    )
+    .expect("faulted serve run");
+    assert!(report.slo.accounted(), "identity violated: {:?}", report.slo);
+    assert!(report.slo.faults > 0, "fault plan must record faults");
+    println!(
+        "scripted faults: faults={} retried={} failed={} completed={}",
+        report.slo.faults, report.slo.retried, report.slo.failed, report.slo.completed
+    );
+    json_rows.push(row(&report, offered, "scripted-faults"));
+
+    let out = Json::obj()
+        .set("bench", "serve")
+        .set("quick", quick)
+        .set("frames", frames as i64)
+        .set("capacity_fps", capacity_fps)
+        .set("deadline_ms", deadline.as_secs_f64() * 1e3)
+        .set("threads", hikonv::exec::default_threads())
+        .set("rows", Json::Array(json_rows));
+    let rendered = out.to_string_pretty();
+    println!("{rendered}");
+    if let Ok(path) = std::env::var("HIKONV_BENCH_OUT") {
+        std::fs::write(&path, format!("{rendered}\n")).expect("write bench baseline");
+        eprintln!("wrote {path}");
+    }
+}

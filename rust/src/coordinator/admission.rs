@@ -1,0 +1,169 @@
+//! Admission control in front of the bounded source→inference queue.
+//!
+//! The paper's serving story (§VII) assumes the feeder never outruns the
+//! accelerator; at 4× overload that assumption breaks, and what happens
+//! next is *policy*:
+//!
+//! * [`AdmissionPolicy::Block`] — today's closed-loop benchmarking
+//!   semantics: the producer stalls on a full queue, nothing is lost,
+//!   offered load adapts to service rate.
+//! * [`AdmissionPolicy::Shed`] — open-loop drop-newest: a full queue
+//!   rejects the arriving frame so queued (older, already-aging) frames
+//!   keep their deadline budget. Bounded queue ⇒ bounded latency.
+//! * [`AdmissionPolicy::DropOldest`] — freshest-frame semantics for
+//!   video: a full queue evicts its head so the newest frame is always
+//!   served next; stale frames are never worth inference.
+
+use super::pipeline::Frame;
+use super::queue::{BoundedQueue, PushError};
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+/// What a full queue does to an arriving frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the producer until space frees (closed-loop backpressure).
+    #[default]
+    Block,
+    /// Drop the arriving frame when full (open-loop load shedding).
+    Shed,
+    /// Evict the oldest queued frame to admit the newest.
+    DropOldest,
+}
+
+impl fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Shed => "shed",
+            AdmissionPolicy::DropOldest => "drop-oldest",
+        })
+    }
+}
+
+impl FromStr for AdmissionPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<AdmissionPolicy, String> {
+        match s.trim() {
+            "block" => Ok(AdmissionPolicy::Block),
+            "shed" | "drop-newest" => Ok(AdmissionPolicy::Shed),
+            "drop-oldest" | "evict" => Ok(AdmissionPolicy::DropOldest),
+            other => Err(format!(
+                "unknown admission policy '{other}' (block | shed | drop-oldest)"
+            )),
+        }
+    }
+}
+
+/// Outcome of offering one frame to the admission controller.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Frame entered the queue.
+    Queued,
+    /// Frame was dropped at the door (`Shed` on a full queue).
+    Shed,
+    /// Frame entered the queue but evicted the oldest queued frame
+    /// (`DropOldest` on a full queue) — one frame was still lost.
+    Evicted,
+    /// The queue is closed; the pipeline is shutting down.
+    Closed,
+}
+
+/// Applies an [`AdmissionPolicy`] to a shared [`BoundedQueue`].
+pub struct AdmissionController {
+    policy: AdmissionPolicy,
+    queue: Arc<BoundedQueue<Frame>>,
+}
+
+impl AdmissionController {
+    /// Wrap `queue` with `policy`.
+    pub fn new(policy: AdmissionPolicy, queue: Arc<BoundedQueue<Frame>>) -> AdmissionController {
+        AdmissionController { policy, queue }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// Offer one frame; exactly one [`Admit`] outcome is returned and
+    /// (except for `Queued`) exactly one frame was lost.
+    pub fn offer(&self, frame: Frame) -> Admit {
+        match self.policy {
+            AdmissionPolicy::Block => match self.queue.push_block(frame) {
+                Ok(()) => Admit::Queued,
+                Err(_) => Admit::Closed,
+            },
+            AdmissionPolicy::Shed => match self.queue.try_push(frame) {
+                Ok(()) => Admit::Queued,
+                Err(PushError::Full(_)) => Admit::Shed,
+                Err(PushError::Closed(_)) => Admit::Closed,
+            },
+            AdmissionPolicy::DropOldest => match self.queue.push_evict(frame) {
+                Ok(None) => Admit::Queued,
+                Ok(Some(_evicted)) => Admit::Evicted,
+                Err(_) => Admit::Closed,
+            },
+        }
+    }
+
+    /// Close the underlying queue (producer is done).
+    pub fn close(&self) {
+        self.queue.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn frame(id: u64) -> Frame {
+        Frame {
+            id,
+            levels: vec![],
+            created: Instant::now(),
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn policy_grammar_round_trips() {
+        for p in [AdmissionPolicy::Block, AdmissionPolicy::Shed, AdmissionPolicy::DropOldest] {
+            assert_eq!(p.to_string().parse::<AdmissionPolicy>().unwrap(), p);
+        }
+        assert!("typo".parse::<AdmissionPolicy>().is_err());
+    }
+
+    #[test]
+    fn shed_drops_newest() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let a = AdmissionController::new(AdmissionPolicy::Shed, Arc::clone(&q));
+        assert_eq!(a.offer(frame(0)), Admit::Queued);
+        assert_eq!(a.offer(frame(1)), Admit::Queued);
+        assert_eq!(a.offer(frame(2)), Admit::Shed);
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn drop_oldest_keeps_freshest() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let a = AdmissionController::new(AdmissionPolicy::DropOldest, Arc::clone(&q));
+        assert_eq!(a.offer(frame(0)), Admit::Queued);
+        assert_eq!(a.offer(frame(1)), Admit::Queued);
+        assert_eq!(a.offer(frame(2)), Admit::Evicted);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn closed_queue_reports_closed() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let a = AdmissionController::new(AdmissionPolicy::Shed, Arc::clone(&q));
+        a.close();
+        assert_eq!(a.offer(frame(0)), Admit::Closed);
+    }
+}

@@ -4,10 +4,27 @@
 //! drain up to `max_batch - 1` more that are already queued (bounded by a
 //! linger deadline) — small batches under light load, full batches under
 //! backlog, no added tail latency when the queue is empty.
+//!
+//! The batcher is also the pipeline's *deadline gate*: frames whose
+//! [`Frame::deadline`] has already passed are shed here, pre-inference,
+//! instead of wasting compute on a result nobody can use. Shed frames are
+//! returned in [`BatchOutcome::expired`] so the serve loop can account
+//! them (SLO `expired` counter) rather than silently losing them.
 
 use super::pipeline::Frame;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use super::queue::{BoundedQueue, PopResult};
 use std::time::{Duration, Instant};
+
+/// One batcher pull: the live frames to infer plus the expired frames
+/// shed on the way. `batch` may be empty while `expired` is not (every
+/// queued frame had already missed its deadline).
+#[derive(Debug, Default)]
+pub struct BatchOutcome {
+    /// Frames to run inference on, in queue order.
+    pub batch: Vec<Frame>,
+    /// Frames shed pre-inference because their deadline passed.
+    pub expired: Vec<Frame>,
+}
 
 pub struct Batcher {
     pub max_batch: usize,
@@ -24,43 +41,76 @@ impl Default for Batcher {
     }
 }
 
+fn expired(f: &Frame, now: Instant) -> bool {
+    f.deadline.is_some_and(|d| now >= d)
+}
+
 impl Batcher {
     pub fn new(max_batch: usize, linger: Duration) -> Batcher {
         assert!(max_batch >= 1);
         Batcher { max_batch, linger }
     }
 
-    /// Pull the next batch. Returns `None` when the channel is closed and
-    /// drained.
-    pub fn next_batch(&self, rx: &Receiver<Frame>) -> Option<Vec<Frame>> {
-        let first = rx.recv().ok()?;
-        let mut batch = vec![first];
+    /// Pull the next batch from `queue`. Returns `None` when the queue is
+    /// closed and fully drained; otherwise at least one frame was pulled
+    /// (into `batch` or `expired`).
+    pub fn next_batch(&self, queue: &BoundedQueue<Frame>) -> Option<BatchOutcome> {
+        let mut out = BatchOutcome::default();
+
+        // Block for the first *live* frame; expired frames pulled on the
+        // way are shed. A closed, drained queue with only expired pulls
+        // still returns Some so the caller can account them.
+        loop {
+            match queue.pop() {
+                Some(f) => {
+                    if expired(&f, Instant::now()) {
+                        out.expired.push(f);
+                    } else {
+                        out.batch.push(f);
+                        break;
+                    }
+                }
+                None => {
+                    return if out.expired.is_empty() {
+                        None
+                    } else {
+                        Some(out)
+                    };
+                }
+            }
+        }
+
         let deadline = Instant::now() + self.linger;
-        while batch.len() < self.max_batch {
-            match rx.try_recv() {
-                Ok(f) => batch.push(f),
-                Err(TryRecvError::Disconnected) => break,
-                Err(TryRecvError::Empty) => {
+        while out.batch.len() < self.max_batch {
+            // Drain already-queued frames first so `linger == ZERO` still
+            // batches what is in hand, then wait out the linger budget.
+            let f = match queue.try_pop() {
+                Some(f) => f,
+                None => {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
                     }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(f) => batch.push(f),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
+                    match queue.pop_deadline(deadline) {
+                        PopResult::Item(f) => f,
+                        PopResult::TimedOut | PopResult::Closed => break,
                     }
                 }
+            };
+            if expired(&f, Instant::now()) {
+                out.expired.push(f);
+            } else {
+                out.batch.push(f);
             }
         }
-        Some(batch)
+        Some(out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
     use std::time::Instant;
 
     fn frame(id: u64) -> Frame {
@@ -68,52 +118,126 @@ mod tests {
             id,
             levels: vec![],
             created: Instant::now(),
+            deadline: None,
         }
+    }
+
+    fn expired_frame(id: u64) -> Frame {
+        let now = Instant::now();
+        Frame {
+            id,
+            levels: vec![],
+            created: now,
+            deadline: Some(now - Duration::from_millis(1)),
+        }
+    }
+
+    fn queue(frames: Vec<Frame>) -> BoundedQueue<Frame> {
+        let q = BoundedQueue::new(frames.len().max(1));
+        for f in frames {
+            q.push_block(f).unwrap();
+        }
+        q
     }
 
     #[test]
     fn drains_queued_frames_up_to_max() {
-        let (tx, rx) = sync_channel(16);
-        for i in 0..6 {
-            tx.send(frame(i)).unwrap();
-        }
+        let q = queue((0..6).map(frame).collect());
         let b = Batcher::new(4, Duration::from_millis(1));
-        let batch = b.next_batch(&rx).unwrap();
-        assert_eq!(batch.len(), 4);
-        assert_eq!(batch[0].id, 0);
-        let batch2 = b.next_batch(&rx).unwrap();
-        assert_eq!(batch2.len(), 2);
+        let out = b.next_batch(&q).unwrap();
+        assert_eq!(out.batch.len(), 4);
+        assert_eq!(out.batch[0].id, 0);
+        assert!(out.expired.is_empty());
+        let out2 = b.next_batch(&q).unwrap();
+        assert_eq!(out2.batch.len(), 2);
     }
 
     #[test]
     fn returns_none_when_closed() {
-        let (tx, rx) = sync_channel::<Frame>(4);
-        drop(tx);
+        let q = BoundedQueue::<Frame>::new(4);
+        q.close();
         let b = Batcher::default();
-        assert!(b.next_batch(&rx).is_none());
+        assert!(b.next_batch(&q).is_none());
     }
 
     #[test]
     fn single_frame_under_light_load() {
-        let (tx, rx) = sync_channel(4);
-        tx.send(frame(0)).unwrap();
+        let q = queue(vec![frame(0)]);
         let b = Batcher::new(8, Duration::from_millis(1));
-        let batch = b.next_batch(&rx).unwrap();
-        assert_eq!(batch.len(), 1);
-        drop(tx);
+        let out = b.next_batch(&q).unwrap();
+        assert_eq!(out.batch.len(), 1);
     }
 
     #[test]
     fn lingers_for_stragglers() {
-        let (tx, rx) = sync_channel(4);
-        tx.send(frame(0)).unwrap();
+        let q = Arc::new(BoundedQueue::new(4));
+        q.push_block(frame(0)).unwrap();
+        let q2 = Arc::clone(&q);
         let t = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(3));
-            let _ = tx.send(frame(1));
+            let _ = q2.push_block(frame(1));
         });
         let b = Batcher::new(4, Duration::from_millis(50));
-        let batch = b.next_batch(&rx).unwrap();
+        let out = b.next_batch(&q).unwrap();
         t.join().unwrap();
-        assert_eq!(batch.len(), 2, "straggler should make the batch");
+        assert_eq!(out.batch.len(), 2, "straggler should make the batch");
+    }
+
+    #[test]
+    fn zero_linger_still_drains_queued() {
+        let q = queue((0..3).map(frame).collect());
+        let b = Batcher::new(4, Duration::ZERO);
+        let out = b.next_batch(&q).unwrap();
+        assert_eq!(out.batch.len(), 3, "linger==ZERO must still take already-queued frames");
+    }
+
+    #[test]
+    fn max_batch_one_returns_immediately() {
+        let q = queue((0..3).map(frame).collect());
+        let b = Batcher::new(1, Duration::from_secs(5));
+        let t0 = Instant::now();
+        let out = b.next_batch(&q).unwrap();
+        assert_eq!(out.batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500), "max_batch==1 must not linger");
+    }
+
+    #[test]
+    fn producer_disconnect_mid_linger_flushes_partial_batch() {
+        let q = Arc::new(BoundedQueue::new(4));
+        q.push_block(frame(0)).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(3));
+            q2.close();
+        });
+        let b = Batcher::new(4, Duration::from_secs(5));
+        let t0 = Instant::now();
+        let out = b.next_batch(&q).unwrap();
+        t.join().unwrap();
+        assert_eq!(out.batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1), "close must cut the linger short");
+        assert!(b.next_batch(&q).is_none());
+    }
+
+    #[test]
+    fn sheds_expired_frames_preserving_order() {
+        let q = queue(vec![expired_frame(0), frame(1), expired_frame(2), frame(3)]);
+        let b = Batcher::new(4, Duration::from_millis(1));
+        let out = b.next_batch(&q).unwrap();
+        let live: Vec<u64> = out.batch.iter().map(|f| f.id).collect();
+        let shed: Vec<u64> = out.expired.iter().map(|f| f.id).collect();
+        assert_eq!(live, vec![1, 3], "live frames keep queue order");
+        assert_eq!(shed, vec![0, 2], "expired frames shed in queue order");
+    }
+
+    #[test]
+    fn all_expired_then_close_reports_expired_without_batch() {
+        let q = queue(vec![expired_frame(0), expired_frame(1)]);
+        q.close();
+        let b = Batcher::new(4, Duration::from_millis(1));
+        let out = b.next_batch(&q).unwrap();
+        assert!(out.batch.is_empty());
+        assert_eq!(out.expired.len(), 2);
+        assert!(b.next_batch(&q).is_none());
     }
 }

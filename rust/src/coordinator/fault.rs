@@ -1,0 +1,393 @@
+//! Deterministic fault injection for the serve path.
+//!
+//! A [`FaultPlan`] scripts misbehaviour at fixed frame indices — panics,
+//! stalls, dropped / duplicated / misordered detections — and
+//! [`FaultInjector`] replays it around any [`InferBackend`]. Because the
+//! plan is data (parsed from a grammar or generated from a seed), chaos
+//! tests and the `serve --fault-plan` CLI flag exercise the *exact same*
+//! failure sequence on every run: counters become assertable and two
+//! identically-seeded runs must agree.
+//!
+//! Grammar (`;`-separated events, each `kind@frame[:arg]`):
+//!
+//! ```text
+//! panic@8          panic once when frame 8 is in the batch
+//! panic@8:x3       panic the first 3 attempts (exhausts 2 retries)
+//! stall@16:50ms    sleep 50 ms before inference of frame 16's batch
+//! drop@24          drop frame 24's detection from the result
+//! dup@30           duplicate frame 30's detection
+//! misorder@40      swap frame 40's detection with its neighbour
+//! ```
+//!
+//! Every event is one-shot (consumed when it fires) except `panic@N:xK`,
+//! which fires `K` times — so a supervised retry of the same batch
+//! succeeds once the scripted panics are spent.
+
+use super::pipeline::{Detection, Frame, InferBackend};
+use crate::util::rng::Rng;
+use std::fmt;
+use std::str::FromStr;
+use std::time::Duration;
+
+/// One kind of scripted misbehaviour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic before running the wrapped backend.
+    Panic,
+    /// Sleep for the given duration before running the wrapped backend.
+    Stall(Duration),
+    /// Remove the frame's detection from the backend's result.
+    DropDetection,
+    /// Insert a second copy of the frame's detection.
+    DuplicateDetection,
+    /// Swap the frame's detection with its neighbour in the result.
+    Misorder,
+}
+
+/// A [`FaultKind`] armed at a specific frame index.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Frame index that triggers the fault (first batch containing it).
+    pub frame: u64,
+    /// What happens.
+    pub kind: FaultKind,
+    /// How many times the event still fires (0 = spent).
+    pub remaining: u32,
+}
+
+/// An ordered script of [`FaultEvent`]s.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Empty plan (injects nothing).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Add a one-shot event.
+    pub fn with(self, frame: u64, kind: FaultKind) -> FaultPlan {
+        self.with_repeats(frame, kind, 1)
+    }
+
+    /// Add an event that fires `count` times.
+    pub fn with_repeats(mut self, frame: u64, kind: FaultKind, count: u32) -> FaultPlan {
+        self.events.push(FaultEvent {
+            frame,
+            kind,
+            remaining: count,
+        });
+        self
+    }
+
+    /// Generate a seeded random plan over `frames` frames with roughly
+    /// one event per `every` frames — deterministic for a given seed, so
+    /// sweeps can randomize *which* faults fire without losing
+    /// run-to-run reproducibility.
+    pub fn random(seed: u64, frames: u64, every: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let mut plan = FaultPlan::new();
+        let n = (frames / every.max(1)).max(1);
+        for _ in 0..n {
+            let frame = rng.below(frames.max(1));
+            let kind = match rng.below(5) {
+                0 => FaultKind::Panic,
+                1 => FaultKind::Stall(Duration::from_millis(1 + rng.below(10))),
+                2 => FaultKind::DropDetection,
+                3 => FaultKind::DuplicateDetection,
+                _ => FaultKind::Misorder,
+            };
+            plan = plan.with(frame, kind);
+        }
+        plan
+    }
+
+    /// Number of scripted events (spent or not).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when no events are scripted.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The scripted events.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                f.write_str(";")?;
+            }
+            match ev.kind {
+                FaultKind::Panic if ev.remaining != 1 => {
+                    write!(f, "panic@{}:x{}", ev.frame, ev.remaining)?
+                }
+                FaultKind::Panic => write!(f, "panic@{}", ev.frame)?,
+                FaultKind::Stall(d) => write!(f, "stall@{}:{}ms", ev.frame, d.as_millis())?,
+                FaultKind::DropDetection => write!(f, "drop@{}", ev.frame)?,
+                FaultKind::DuplicateDetection => write!(f, "dup@{}", ev.frame)?,
+                FaultKind::Misorder => write!(f, "misorder@{}", ev.frame)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new();
+        for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind_s, rest) = part
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{part}': expected kind@frame[:arg]"))?;
+            let (frame_s, arg) = match rest.split_once(':') {
+                Some((fr, a)) => (fr, Some(a.trim())),
+                None => (rest, None),
+            };
+            let frame: u64 = frame_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault '{part}': bad frame index '{frame_s}'"))?;
+            let (kind, count) = match kind_s.trim() {
+                "panic" => {
+                    let count = match arg {
+                        None => 1,
+                        Some(a) => a
+                            .trim_start_matches('x')
+                            .parse()
+                            .map_err(|_| format!("fault '{part}': bad repeat count '{a}'"))?,
+                    };
+                    (FaultKind::Panic, count)
+                }
+                "stall" => {
+                    let a = arg
+                        .ok_or_else(|| format!("fault '{part}': stall needs ':<millis>ms'"))?;
+                    let ms: u64 = a
+                        .trim_end_matches("ms")
+                        .parse()
+                        .map_err(|_| format!("fault '{part}': bad stall duration '{a}'"))?;
+                    (FaultKind::Stall(Duration::from_millis(ms)), 1)
+                }
+                "drop" => (FaultKind::DropDetection, 1),
+                "dup" => (FaultKind::DuplicateDetection, 1),
+                "misorder" => (FaultKind::Misorder, 1),
+                other => {
+                    return Err(format!(
+                        "fault '{part}': unknown kind '{other}' \
+                         (panic | stall | drop | dup | misorder)"
+                    ))
+                }
+            };
+            plan = plan.with_repeats(frame, kind, count);
+        }
+        Ok(plan)
+    }
+}
+
+/// Wraps any [`InferBackend`] and replays a [`FaultPlan`] around it.
+pub struct FaultInjector {
+    inner: Box<dyn InferBackend>,
+    plan: FaultPlan,
+    label: String,
+}
+
+impl FaultInjector {
+    /// Wrap `inner`, injecting `plan`'s events as their frames stream by.
+    pub fn new(inner: Box<dyn InferBackend>, plan: FaultPlan) -> FaultInjector {
+        let label = format!("faulty-{}", inner.name());
+        FaultInjector { inner, plan, label }
+    }
+
+    /// Events not yet (fully) fired.
+    pub fn pending(&self) -> usize {
+        self.plan.events.iter().filter(|ev| ev.remaining > 0).count()
+    }
+}
+
+impl InferBackend for FaultInjector {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn input_dims(&self) -> (usize, usize, usize) {
+        self.inner.input_dims()
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        let ids: Vec<u64> = frames.iter().map(|f| f.id).collect();
+
+        // Pre-inference events: all stalls for this batch first (so a
+        // stall+panic combination stalls before it dies), then at most
+        // one panic per attempt — retries re-enter here and consume the
+        // next scripted repetition.
+        let mut stall = Duration::ZERO;
+        let mut panic_frame: Option<u64> = None;
+        for ev in self.plan.events.iter_mut() {
+            if ev.remaining == 0 || !ids.contains(&ev.frame) {
+                continue;
+            }
+            match ev.kind {
+                FaultKind::Stall(d) => {
+                    ev.remaining -= 1;
+                    stall += d;
+                }
+                FaultKind::Panic if panic_frame.is_none() => {
+                    ev.remaining -= 1;
+                    panic_frame = Some(ev.frame);
+                }
+                _ => {}
+            }
+        }
+        if stall > Duration::ZERO {
+            std::thread::sleep(stall);
+        }
+        if let Some(frame) = panic_frame {
+            panic!("injected fault: panic at frame {frame}");
+        }
+
+        let mut dets = self.inner.infer_batch(frames);
+
+        // Post-inference events mutate the detection stream.
+        for ev in self.plan.events.iter_mut() {
+            if ev.remaining == 0 || !ids.contains(&ev.frame) {
+                continue;
+            }
+            let frame = ev.frame;
+            match ev.kind {
+                FaultKind::DropDetection => {
+                    ev.remaining -= 1;
+                    dets.retain(|d| d.frame_id != frame);
+                }
+                FaultKind::DuplicateDetection => {
+                    ev.remaining -= 1;
+                    if let Some(pos) = dets.iter().position(|d| d.frame_id == frame) {
+                        let dup = dets[pos];
+                        dets.insert(pos + 1, dup);
+                    }
+                }
+                FaultKind::Misorder => {
+                    ev.remaining -= 1;
+                    if let Some(pos) = dets.iter().position(|d| d.frame_id == frame) {
+                        let other = if pos + 1 < dets.len() {
+                            pos + 1
+                        } else if pos > 0 {
+                            pos - 1
+                        } else {
+                            pos
+                        };
+                        dets.swap(pos, other);
+                    }
+                }
+                _ => {}
+            }
+        }
+        dets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    struct Echo;
+    impl InferBackend for Echo {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn input_dims(&self) -> (usize, usize, usize) {
+            (1, 1, 1)
+        }
+        fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+            frames
+                .iter()
+                .map(|f| Detection {
+                    frame_id: f.id,
+                    cell: (0, 0),
+                })
+                .collect()
+        }
+    }
+
+    fn frames(ids: &[u64]) -> Vec<Frame> {
+        ids.iter()
+            .map(|&id| Frame {
+                id,
+                levels: vec![],
+                created: Instant::now(),
+                deadline: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn grammar_round_trips() {
+        let spec = "panic@8;panic@9:x3;stall@16:50ms;drop@24;dup@30;misorder@40";
+        let plan: FaultPlan = spec.parse().unwrap();
+        assert_eq!(plan.len(), 6);
+        assert_eq!(plan.to_string(), spec);
+        assert_eq!(plan.to_string().parse::<FaultPlan>().unwrap(), plan);
+    }
+
+    #[test]
+    fn grammar_rejects_malformed() {
+        assert!("panic".parse::<FaultPlan>().is_err());
+        assert!("panic@x".parse::<FaultPlan>().is_err());
+        assert!("stall@4".parse::<FaultPlan>().is_err());
+        assert!("explode@4".parse::<FaultPlan>().is_err());
+    }
+
+    #[test]
+    fn seeded_random_plans_are_deterministic() {
+        let a = FaultPlan::random(42, 100, 10);
+        let b = FaultPlan::random(42, 100, 10);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert_ne!(a, FaultPlan::random(43, 100, 10));
+    }
+
+    #[test]
+    fn drop_and_dup_mutate_detections() {
+        let plan: FaultPlan = "drop@1;dup@2".parse().unwrap();
+        let mut inj = FaultInjector::new(Box::new(Echo), plan);
+        let dets = inj.infer_batch(&frames(&[0, 1, 2]));
+        let ids: Vec<u64> = dets.iter().map(|d| d.frame_id).collect();
+        assert_eq!(ids, vec![0, 2, 2]);
+        assert_eq!(inj.pending(), 0);
+        // Spent events do not re-fire.
+        let dets = inj.infer_batch(&frames(&[0, 1, 2]));
+        assert_eq!(dets.len(), 3);
+    }
+
+    #[test]
+    fn misorder_swaps_neighbours() {
+        let plan: FaultPlan = "misorder@0".parse().unwrap();
+        let mut inj = FaultInjector::new(Box::new(Echo), plan);
+        let dets = inj.infer_batch(&frames(&[0, 1]));
+        let ids: Vec<u64> = dets.iter().map(|d| d.frame_id).collect();
+        assert_eq!(ids, vec![1, 0]);
+    }
+
+    #[test]
+    fn panic_fires_then_clears() {
+        let plan: FaultPlan = "panic@1".parse().unwrap();
+        let mut inj = FaultInjector::new(Box::new(Echo), plan);
+        let fs = frames(&[0, 1]);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            inj.infer_batch(&fs)
+        }));
+        assert!(caught.is_err());
+        // The scripted panic is consumed: the retry succeeds.
+        assert_eq!(inj.infer_batch(&fs).len(), 2);
+    }
+}

@@ -1,6 +1,7 @@
-//! Serving metrics: throughput, end-to-end latency, per-stage timing.
+//! Serving metrics: throughput, end-to-end latency, per-stage timing,
+//! and SLO accounting for the overload-safe serve path.
 
-use crate::util::stats::LatencyHistogram;
+use crate::util::stats::{CountHistogram, LatencyHistogram};
 use std::time::Duration;
 
 /// Accumulated timing for one pipeline stage.
@@ -34,25 +35,144 @@ impl StageMetrics {
     }
 }
 
+/// SLO counters for one serve run.
+///
+/// The fundamental identity, asserted by the chaos suite and checked by
+/// CI on every serve-smoke artifact:
+///
+/// ```text
+/// admitted == shed + expired + failed + completed
+/// ```
+///
+/// Every frame the source offered is accounted for exactly once — no
+/// frame is silently lost, no frame is double-counted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SloCounters {
+    /// Frames the source offered to admission control.
+    pub admitted: u64,
+    /// Frames lost at the door: rejected (`Shed`) or evicted
+    /// (`DropOldest`), plus frames still queued at shutdown.
+    pub shed: u64,
+    /// Frames shed pre-inference because their deadline passed.
+    pub expired: u64,
+    /// Frames that reached inference but produced no usable detection
+    /// (retries exhausted, or the backend dropped them).
+    pub failed: u64,
+    /// Frames served with a detection.
+    pub completed: u64,
+    /// Inference attempts retried after a recorded fault.
+    pub retried: u64,
+    /// Faults recorded (panics, mismatches, fallback engagements).
+    pub faults: u64,
+    /// Completed frames whose detection arrived after their deadline.
+    pub deadline_misses: u64,
+    /// Times the controller halved `max_batch` under fault pressure.
+    pub degraded_steps: u64,
+    /// Whether the fallback backend was swapped in.
+    pub fallback_engaged: bool,
+}
+
+impl SloCounters {
+    /// True when every admitted frame is accounted for exactly once.
+    pub fn accounted(&self) -> bool {
+        self.admitted == self.shed + self.expired + self.failed + self.completed
+    }
+
+    /// Fraction of completed frames that missed their deadline.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.completed as f64
+        }
+    }
+
+    /// Fraction of admitted frames lost before inference (shed + expired).
+    pub fn shed_rate(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            (self.shed + self.expired) as f64 / self.admitted as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj()
+            .set("admitted", self.admitted as i64)
+            .set("shed", self.shed as i64)
+            .set("expired", self.expired as i64)
+            .set("failed", self.failed as i64)
+            .set("completed", self.completed as i64)
+            .set("retried", self.retried as i64)
+            .set("faults", self.faults as i64)
+            .set("deadline_misses", self.deadline_misses as i64)
+            .set("deadline_miss_rate", self.deadline_miss_rate())
+            .set("shed_rate", self.shed_rate())
+            .set("degraded_steps", self.degraded_steps as i64)
+            .set("fallback_engaged", self.fallback_engaged)
+    }
+}
+
+/// One recorded fault (bounded log; see `server::MAX_FAULT_RECORDS`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultRecord {
+    /// Batch index (0-based) the fault occurred in.
+    pub batch: u64,
+    /// Frame the fault is attributed to, when identifiable.
+    pub frame: Option<u64>,
+    /// Fault class: `panic`, `mismatch`, `fallback`, `source`.
+    pub kind: String,
+    /// Human-readable detail (panic message, mismatch description).
+    pub detail: String,
+}
+
+impl FaultRecord {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj()
+            .set("batch", self.batch as i64)
+            .set("kind", self.kind.as_str())
+            .set("detail", self.detail.as_str());
+        if let Some(frame) = self.frame {
+            j = j.set("frame", frame as i64);
+        }
+        j
+    }
+}
+
 /// Final report of a serve run.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub backend: String,
+    /// Active admission policy (display form: `block` | `shed` | `drop-oldest`).
+    pub policy: String,
+    /// Frames completed (kept as the legacy top-level count).
     pub frames: u64,
     pub wall_s: f64,
+    /// Goodput: completed frames per wall second.
     pub fps: f64,
     pub latency: LatencyHistogram,
     pub stages: Vec<StageMetrics>,
     pub batches: u64,
     pub mean_batch: f64,
+    /// SLO accounting (admission/shedding/faults/deadlines).
+    pub slo: SloCounters,
+    /// Queue depth observed at each batcher pull.
+    pub queue_depth: CountHistogram,
+    /// Recorded faults, bounded to the first `MAX_FAULT_RECORDS`.
+    pub faults: Vec<FaultRecord>,
+    /// Detections for completed frames, in completion order — lets the
+    /// chaos suite check bit-exactness against a fault-free run.
+    pub detections: Vec<super::pipeline::Detection>,
 }
 
 impl ServeReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "backend={} frames={} wall={:.3}s fps={:.1}\n",
-            self.backend, self.frames, self.wall_s, self.fps
+            "backend={} policy={} frames={} wall={:.3}s fps={:.1}\n",
+            self.backend, self.policy, self.frames, self.wall_s, self.fps
         ));
         out.push_str(&format!(
             "latency: mean={:.1}us p50<={}us p95<={}us p99<={}us max={}us\n",
@@ -66,6 +186,39 @@ impl ServeReport {
             "batching: {} batches, mean size {:.2}\n",
             self.batches, self.mean_batch
         ));
+        out.push_str(&format!(
+            "slo: admitted={} shed={} expired={} failed={} completed={}\n",
+            self.slo.admitted, self.slo.shed, self.slo.expired, self.slo.failed, self.slo.completed
+        ));
+        out.push_str(&format!(
+            "slo: retried={} faults={} deadline_misses={} ({:.1}%) degraded_steps={}{}\n",
+            self.slo.retried,
+            self.slo.faults,
+            self.slo.deadline_misses,
+            self.slo.deadline_miss_rate() * 100.0,
+            self.slo.degraded_steps,
+            if self.slo.fallback_engaged {
+                " fallback=engaged"
+            } else {
+                ""
+            },
+        ));
+        out.push_str(&format!(
+            "queue depth: p50={} p95={} max={} mean={:.2}\n",
+            self.queue_depth.percentile(50.0),
+            self.queue_depth.percentile(95.0),
+            self.queue_depth.max(),
+            self.queue_depth.mean(),
+        ));
+        for f in &self.faults {
+            out.push_str(&format!(
+                "fault[batch {}{}] {}: {}\n",
+                f.batch,
+                f.frame.map(|id| format!(", frame {id}")).unwrap_or_default(),
+                f.kind,
+                f.detail
+            ));
+        }
         for s in &self.stages {
             out.push_str(&format!(
                 "stage {:<12} {:>10.1} us/item over {} items\n",
@@ -77,22 +230,90 @@ impl ServeReport {
         out
     }
 
+    /// Full JSON schema — a superset of what [`render`](Self::render)
+    /// prints, so text reports and CI artifacts cannot drift.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|s| {
+                Json::obj()
+                    .set("name", s.name.as_str())
+                    .set("busy_s", s.busy.as_secs_f64())
+                    .set("items", s.items as i64)
+                    .set("mean_us", s.mean_us())
+            })
+            .collect();
+        let faults: Vec<Json> = self.faults.iter().map(|f| f.to_json()).collect();
         Json::obj()
             .set("backend", self.backend.as_str())
+            .set("policy", self.policy.as_str())
             .set("frames", self.frames as i64)
             .set("wall_s", self.wall_s)
             .set("fps", self.fps)
-            .set("latency_p50_us", self.latency.percentile_us(50.0) as i64)
-            .set("latency_p99_us", self.latency.percentile_us(99.0) as i64)
+            .set("batches", self.batches as i64)
             .set("mean_batch", self.mean_batch)
+            .set("latency_mean_us", self.latency.mean_us())
+            .set("latency_p50_us", self.latency.percentile_us(50.0) as i64)
+            .set("latency_p95_us", self.latency.percentile_us(95.0) as i64)
+            .set("latency_p99_us", self.latency.percentile_us(99.0) as i64)
+            .set("latency_max_us", self.latency.max_us() as i64)
+            .set(
+                "queue_depth",
+                Json::obj()
+                    .set("p50", self.queue_depth.percentile(50.0) as i64)
+                    .set("p95", self.queue_depth.percentile(95.0) as i64)
+                    .set("max", self.queue_depth.max() as i64)
+                    .set("mean", self.queue_depth.mean()),
+            )
+            .set("slo", self.slo.to_json())
+            .set("faults", faults)
+            .set("stages", stages)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn report() -> ServeReport {
+        let mut lat = LatencyHistogram::new();
+        lat.record_us(100);
+        let mut depth = CountHistogram::new();
+        depth.record(2);
+        ServeReport {
+            backend: "test".into(),
+            policy: "shed".into(),
+            frames: 10,
+            wall_s: 1.0,
+            fps: 10.0,
+            latency: lat,
+            stages: vec![StageMetrics::new("infer")],
+            batches: 5,
+            mean_batch: 2.0,
+            slo: SloCounters {
+                admitted: 12,
+                shed: 1,
+                expired: 1,
+                failed: 0,
+                completed: 10,
+                retried: 1,
+                faults: 1,
+                deadline_misses: 2,
+                degraded_steps: 0,
+                fallback_engaged: false,
+            },
+            queue_depth: depth,
+            faults: vec![FaultRecord {
+                batch: 3,
+                frame: Some(7),
+                kind: "panic".into(),
+                detail: "injected".into(),
+            }],
+            detections: vec![],
+        }
+    }
 
     #[test]
     fn stage_mean() {
@@ -103,20 +324,48 @@ mod tests {
     }
 
     #[test]
+    fn slo_identity_and_rates() {
+        let r = report();
+        assert!(r.slo.accounted());
+        assert!((r.slo.deadline_miss_rate() - 0.2).abs() < 1e-9);
+        assert!((r.slo.shed_rate() - 2.0 / 12.0).abs() < 1e-9);
+        let mut broken = r.slo;
+        broken.shed += 1;
+        assert!(!broken.accounted());
+    }
+
+    #[test]
     fn report_renders_and_jsons() {
-        let mut lat = LatencyHistogram::new();
-        lat.record_us(100);
-        let r = ServeReport {
-            backend: "test".into(),
-            frames: 10,
-            wall_s: 1.0,
-            fps: 10.0,
-            latency: lat,
-            stages: vec![StageMetrics::new("infer")],
-            batches: 5,
-            mean_batch: 2.0,
-        };
-        assert!(r.render().contains("fps=10.0"));
-        assert!(r.to_json().to_string().contains("\"fps\":10"));
+        let r = report();
+        let text = r.render();
+        assert!(text.contains("fps=10.0"));
+        assert!(text.contains("policy=shed"));
+        assert!(text.contains("admitted=12"));
+        assert!(text.contains("fault[batch 3, frame 7] panic: injected"));
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"fps\":10"));
+        assert!(json.contains("\"policy\":\"shed\""));
+        assert!(json.contains("\"admitted\":12"));
+        assert!(json.contains("\"faults\":["));
+    }
+
+    /// Satellite: everything `render()` prints must be in the JSON too.
+    #[test]
+    fn json_covers_rendered_fields() {
+        let json = report().to_json().to_string();
+        for key in [
+            "latency_mean_us",
+            "latency_p50_us",
+            "latency_p95_us",
+            "latency_p99_us",
+            "latency_max_us",
+            "batches",
+            "mean_batch",
+            "queue_depth",
+            "slo",
+            "stages",
+        ] {
+            assert!(json.contains(&format!("\"{key}\"")), "missing key {key}");
+        }
     }
 }

@@ -1,26 +1,37 @@
 //! L3 coordinator: the streaming serving pipeline of the paper's FPGA
-//! deployment, rebuilt as a threaded Rust runtime.
+//! deployment, rebuilt as a threaded, overload-safe Rust runtime.
 //!
 //! DAC-SDC setting: a feeder (the ARM core in the paper) produces frames;
 //! the accelerator (here: a CPU HiKonv engine or a PJRT-compiled artifact)
 //! runs quantized inference; a postprocess stage decodes detections.
-//! Stages are threads connected by bounded channels (backpressure), the
-//! feeder can be rate-capped to reproduce the paper's ARM bottleneck, and
-//! the batcher groups frames ahead of inference.
+//! Stages are threads connected by a bounded queue, the feeder can be
+//! rate-capped to reproduce the paper's ARM bottleneck, and the batcher
+//! groups frames ahead of inference.
 //!
-//! tokio is unavailable offline; std threads + `mpsc::sync_channel` provide
-//! the same bounded-queue semantics for this pipeline depth.
+//! Robustness layer (see `docs/SERVING.md`): an admission controller with
+//! pluggable overflow policy fronts the queue, frames carry deadlines the
+//! batcher enforces pre-inference, inference runs panic-supervised with
+//! bounded retries and graceful degradation, and a deterministic
+//! fault-injection layer ([`fault::FaultPlan`]) scripts failures for the
+//! chaos suite. tokio is unavailable offline; std threads + a crate-local
+//! bounded queue provide the semantics this pipeline depth needs.
 
+pub mod admission;
 pub mod batcher;
-pub mod parallel;
+pub mod fault;
 pub mod metrics;
+pub mod parallel;
 pub mod pipeline;
+pub mod queue;
 pub mod server;
 pub mod source;
 
-pub use batcher::Batcher;
+pub use admission::{Admit, AdmissionController, AdmissionPolicy};
+pub use batcher::{BatchOutcome, Batcher};
+pub use fault::{FaultInjector, FaultKind, FaultPlan};
+pub use metrics::{FaultRecord, ServeReport, SloCounters, StageMetrics};
 pub use parallel::ParallelCpuBackend;
-pub use metrics::{ServeReport, StageMetrics};
 pub use pipeline::{Frame, GraphBackend, InferBackend};
-pub use server::{serve, ServeConfig};
+pub use queue::{BoundedQueue, PopResult, PushError};
+pub use server::{serve, serve_with_fallback, ServeConfig};
 pub use source::FrameSource;

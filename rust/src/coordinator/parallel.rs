@@ -137,7 +137,10 @@ impl InferBackend for ParallelCpuBackend {
                 slots[start + j] = Some(det);
             }
         }
-        slots.into_iter().map(|d| d.expect("missing result")).collect()
+        // A missing slot (worker returned short) yields a shorter result
+        // instead of a panic: the serve supervisor records the mismatch
+        // as a fault and fails only the affected frames.
+        slots.into_iter().flatten().collect()
     }
 }
 
@@ -169,6 +172,7 @@ mod tests {
                 id: id as u64,
                 levels: rng.quant_unsigned_vec(4, c * h * w),
                 created: Instant::now(),
+                deadline: None,
             })
             .collect()
     }

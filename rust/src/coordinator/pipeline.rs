@@ -10,6 +10,10 @@ pub struct Frame {
     pub levels: Vec<i64>,
     /// Enqueue timestamp (latency measurement origin).
     pub created: Instant,
+    /// Serve-by deadline: the batcher sheds the frame pre-inference once
+    /// this passes, and the supervisor counts post-inference completions
+    /// past it as deadline misses. `None` = no SLO budget.
+    pub deadline: Option<Instant>,
 }
 
 /// A decoded detection result.
@@ -201,6 +205,7 @@ mod tests {
                 id,
                 levels: vec![(id as i64) % 16; c * h * w],
                 created: Instant::now(),
+                deadline: None,
             })
             .collect();
         let dets = backend.infer_batch(&frames);

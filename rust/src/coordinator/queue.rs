@@ -1,0 +1,278 @@
+//! Bounded MPSC queue with pluggable overflow behaviour.
+//!
+//! `std::sync::mpsc::sync_channel` only offers blocking backpressure; the
+//! admission policies of [`super::admission`] also need *drop-newest*
+//! (reject when full) and *drop-oldest* (evict the head), and the batcher
+//! needs depth observation for the queue-depth histogram. This is the
+//! same Mutex+Condvar bounded deque every serving runtime builds; it is
+//! panic-hardened (lock poisoning is absorbed, never propagated — a
+//! panicking peer must not take the queue down with it).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Why a non-blocking push was refused; the rejected item is returned.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue was at capacity.
+    Full(T),
+    /// The queue was closed.
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded pop.
+#[derive(Debug)]
+pub enum PopResult<T> {
+    /// An item arrived in time.
+    Item(T),
+    /// The deadline passed with the queue still empty.
+    TimedOut,
+    /// The queue is closed and drained.
+    Closed,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded FIFO queue connecting the frame source to the batcher.
+pub struct BoundedQueue<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create a queue holding at most `cap` items (`cap >= 1`).
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        BoundedQueue {
+            cap,
+            state: Mutex::new(State {
+                items: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        // Poison means a peer panicked mid-operation; the data structure
+        // itself is still consistent (every mutation is a single
+        // push/pop), so absorb it instead of cascading the panic.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Blocking push (the `Block` admission policy). Returns the item
+    /// back if the queue is closed.
+    pub fn push_block(&self, item: T) -> Result<(), T> {
+        let mut s = self.lock();
+        while s.items.len() >= self.cap && !s.closed {
+            s = self.not_full.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        if s.closed {
+            return Err(item);
+        }
+        s.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push (the `Shed` admission policy): refuse when full.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut s = self.lock();
+        if s.closed {
+            return Err(PushError::Closed(item));
+        }
+        if s.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        s.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Push, evicting the oldest queued item if full (the `DropOldest`
+    /// admission policy). Returns the evicted item, or the offered item
+    /// back as `Err` if the queue is closed.
+    pub fn push_evict(&self, item: T) -> Result<Option<T>, T> {
+        let mut s = self.lock();
+        if s.closed {
+            return Err(item);
+        }
+        let evicted = if s.items.len() >= self.cap {
+            s.items.pop_front()
+        } else {
+            None
+        };
+        s.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(evicted)
+    }
+
+    /// Blocking pop. `None` means closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.lock();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking pop of an already-queued item.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut s = self.lock();
+        let item = s.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Pop, waiting at most until `deadline`.
+    pub fn pop_deadline(&self, deadline: Instant) -> PopResult<T> {
+        let mut s = self.lock();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                self.not_full.notify_one();
+                return PopResult::Item(item);
+            }
+            if s.closed {
+                return PopResult::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopResult::TimedOut;
+            }
+            let (guard, _timeout) = self
+                .not_empty
+                .wait_timeout(s, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            s = guard;
+        }
+    }
+
+    /// Close the queue: producers are refused, consumers drain what's
+    /// left, every waiter wakes.
+    pub fn close(&self) {
+        let mut s = self.lock();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current number of queued items (racy snapshot; used for the
+    /// queue-depth histogram).
+    pub fn depth(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    /// Whether [`close`](Self::close) has been called.
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_push_pop() {
+        let q = BoundedQueue::new(4);
+        q.push_block(1).unwrap();
+        q.push_block(2).unwrap();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn try_push_refuses_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn push_evict_drops_oldest() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.push_evict(1).unwrap(), None);
+        assert_eq!(q.push_evict(2).unwrap(), None);
+        assert_eq!(q.push_evict(3).unwrap(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn close_wakes_blocked_pop() {
+        let q = Arc::new(BoundedQueue::<u64>::new(2));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_push() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push_block(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push_block(2));
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(2));
+        // Closed queues still drain.
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_then_delivers() {
+        let q = BoundedQueue::new(2);
+        let deadline = Instant::now() + Duration::from_millis(5);
+        match q.pop_deadline(deadline) {
+            PopResult::TimedOut => {}
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        q.push_block(9).unwrap();
+        match q.pop_deadline(Instant::now() + Duration::from_millis(50)) {
+            PopResult::Item(9) => {}
+            other => panic!("expected Item(9), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blocked_push_proceeds_after_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push_block(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push_block(2));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+}

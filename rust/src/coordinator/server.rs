@@ -1,19 +1,43 @@
-//! The serve loop: source thread → bounded queue → batcher + inference →
-//! postprocess/metrics.
+//! The overload-safe serve loop: source thread → admission control →
+//! bounded queue → deadline-checking batcher → supervised inference →
+//! reconcile/metrics.
 //!
 //! Batches assembled by the [`Batcher`] are handed to the backend whole
 //! and executed *as batches*: the CPU backends route them through the
 //! fused `CpuRunner::infer_batch` (frame-level parallelism + arena
 //! reuse), so `--batch`/`--linger-ms` genuinely amortize per-frame
 //! overheads instead of just grouping the accounting.
+//!
+//! Robustness contract (see `docs/SERVING.md`):
+//!
+//! * Admission is policy-driven ([`AdmissionPolicy`]): block, shed
+//!   drop-newest, or evict-oldest. Overload never grows the queue.
+//! * Inference runs under `catch_unwind` with bounded retry-and-backoff;
+//!   backend panics and frame-count/ordering mismatches become recorded
+//!   [`FaultRecord`]s and per-frame `failed` results, never process death.
+//! * Under sustained faults the controller degrades: `max_batch` is
+//!   halved after `degrade_after` consecutive faulted batches, and a
+//!   designated fallback backend is swapped in after `fallback_after`
+//!   recorded faults.
+//! * `serve()` returns `Result<ServeReport, RuntimeError>` and always
+//!   joins its source thread; the report's [`SloCounters`] satisfy
+//!   `admitted == shed + expired + failed + completed`.
 
+use super::admission::{Admit, AdmissionController, AdmissionPolicy};
 use super::batcher::Batcher;
-use super::metrics::{ServeReport, StageMetrics};
-use super::pipeline::{Frame, InferBackend};
+use super::metrics::{FaultRecord, ServeReport, SloCounters, StageMetrics};
+use super::pipeline::{Detection, InferBackend};
+use super::queue::BoundedQueue;
 use super::source::FrameSource;
-use crate::util::stats::LatencyHistogram;
-use std::sync::mpsc::sync_channel;
+use crate::runtime::RuntimeError;
+use crate::util::stats::{CountHistogram, LatencyHistogram};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Fault log bound: the first this-many faults are kept with full detail
+/// (counters keep counting past it).
+pub const MAX_FAULT_RECORDS: usize = 64;
 
 /// Serve-run configuration.
 #[derive(Clone, Debug)]
@@ -33,6 +57,19 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Activation bits for quantization.
     pub bits: u32,
+    /// What a full queue does to an arriving frame.
+    pub policy: AdmissionPolicy,
+    /// Per-frame deadline budget: frames not inferred within this much of
+    /// their creation are shed (`None` = no SLO budget).
+    pub deadline: Option<Duration>,
+    /// Inference retries per batch after a caught panic.
+    pub max_retries: u32,
+    /// Base backoff between retries (doubles per attempt).
+    pub retry_backoff: Duration,
+    /// Halve `max_batch` after this many *consecutive* faulted batches.
+    pub degrade_after: u32,
+    /// Swap to the fallback backend after this many recorded faults.
+    pub fallback_after: u64,
 }
 
 impl Default for ServeConfig {
@@ -45,74 +82,269 @@ impl Default for ServeConfig {
             linger: Duration::from_millis(2),
             seed: 7,
             bits: 4,
+            policy: AdmissionPolicy::Block,
+            deadline: None,
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(1),
+            degrade_after: 3,
+            fallback_after: 4,
         }
     }
 }
 
+#[derive(Default)]
+struct ProducerStats {
+    busy: Duration,
+    offered: u64,
+    shed: u64,
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+fn push_fault(faults: &mut Vec<FaultRecord>, rec: FaultRecord) {
+    if faults.len() < MAX_FAULT_RECORDS {
+        faults.push(rec);
+    }
+}
+
 /// Run the pipeline to completion and report metrics.
-pub fn serve(mut backend: Box<dyn InferBackend>, config: &ServeConfig) -> ServeReport {
+pub fn serve(
+    backend: Box<dyn InferBackend>,
+    config: &ServeConfig,
+) -> Result<ServeReport, RuntimeError> {
+    serve_with_fallback(backend, None, config)
+}
+
+/// [`serve`] with a designated fallback backend that is swapped in after
+/// `config.fallback_after` recorded faults (e.g. a `LoadMode::Replanned`
+/// artifact plan known to be conservative).
+pub fn serve_with_fallback(
+    mut backend: Box<dyn InferBackend>,
+    mut fallback: Option<Box<dyn InferBackend>>,
+    config: &ServeConfig,
+) -> Result<ServeReport, RuntimeError> {
     let dims = backend.input_dims();
-    let (tx, rx) = sync_channel::<Frame>(config.queue_depth);
+    let queue = Arc::new(BoundedQueue::new(config.queue_depth));
+    let admission = AdmissionController::new(config.policy, Arc::clone(&queue));
     let cfg = config.clone();
 
     let producer = std::thread::spawn(move || {
-        let mut src = FrameSource::new(cfg.seed, dims, cfg.bits, cfg.source_fps_cap);
-        let mut busy = Duration::ZERO;
-        for _ in 0..cfg.frames {
-            let t = Instant::now();
-            let frame = src.next_frame();
-            busy += t.elapsed();
-            if tx.send(frame).is_err() {
-                break; // consumer gone
+        // Catch panics so the queue is *always* closed: an uncaught
+        // source panic would leave the consumer blocked forever.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut src = FrameSource::new(cfg.seed, dims, cfg.bits, cfg.source_fps_cap)
+                .with_deadline(cfg.deadline);
+            let mut stats = ProducerStats::default();
+            for _ in 0..cfg.frames {
+                let t = Instant::now();
+                let frame = src.next_frame();
+                stats.busy += t.elapsed();
+                stats.offered += 1;
+                match admission.offer(frame) {
+                    Admit::Queued => {}
+                    Admit::Shed | Admit::Evicted => stats.shed += 1,
+                    Admit::Closed => {
+                        stats.shed += 1;
+                        break;
+                    }
+                }
             }
-        }
-        busy
+            stats
+        }));
+        admission.close();
+        result.map_err(panic_message)
     });
 
-    let batcher = Batcher::new(config.max_batch, config.linger);
+    let primary_name = backend.name().to_string();
+    let mut fallback_name: Option<String> = None;
+    let mut max_batch = config.max_batch;
     let mut latency = LatencyHistogram::new();
+    let mut queue_depth = CountHistogram::new();
     let mut infer_stage = StageMetrics::new("infer");
     let mut post_stage = StageMetrics::new("postprocess");
+    let mut slo = SloCounters::default();
+    let mut faults: Vec<FaultRecord> = Vec::new();
+    let mut detections: Vec<Detection> = Vec::new();
     let mut batches = 0u64;
-    let mut frames_done = 0u64;
+    let mut consecutive_pressure = 0u32;
     let t0 = Instant::now();
-    while let Some(batch) = batcher.next_batch(&rx) {
-        let t = Instant::now();
-        let detections = backend.infer_batch(&batch);
-        infer_stage.record(t.elapsed(), batch.len() as u64);
 
-        let t = Instant::now();
-        assert_eq!(detections.len(), batch.len(), "backend dropped frames");
-        for (frame, det) in batch.iter().zip(&detections) {
-            assert_eq!(frame.id, det.frame_id, "frame/detection misordered");
-            latency.record_us(frame.created.elapsed().as_micros() as u64);
+    loop {
+        let batcher = Batcher::new(max_batch, config.linger);
+        let depth_now = queue.depth() as u64;
+        let Some(outcome) = batcher.next_batch(&queue) else {
+            break;
+        };
+        queue_depth.record(depth_now);
+        let had_expired = !outcome.expired.is_empty();
+        slo.expired += outcome.expired.len() as u64;
+        let batch = outcome.batch;
+        let mut batch_faulted = false;
+
+        if !batch.is_empty() {
+            let batch_idx = batches;
+            batches += 1;
+
+            // Supervised inference: catch panics, retry with exponential
+            // backoff, and fail the whole batch only once retries are
+            // exhausted.
+            let mut result: Option<Vec<Detection>> = None;
+            for attempt in 0..=config.max_retries {
+                let t = Instant::now();
+                let caught = catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&batch)));
+                infer_stage.record(t.elapsed(), batch.len() as u64);
+                match caught {
+                    Ok(dets) => {
+                        result = Some(dets);
+                        break;
+                    }
+                    Err(payload) => {
+                        slo.faults += 1;
+                        batch_faulted = true;
+                        push_fault(
+                            &mut faults,
+                            FaultRecord {
+                                batch: batch_idx,
+                                frame: None,
+                                kind: "panic".into(),
+                                detail: panic_message(payload),
+                            },
+                        );
+                        if attempt < config.max_retries {
+                            slo.retried += 1;
+                            std::thread::sleep(config.retry_backoff * (1u32 << attempt.min(8)));
+                        }
+                    }
+                }
+            }
+
+            let t = Instant::now();
+            match result {
+                None => slo.failed += batch.len() as u64,
+                Some(dets) => {
+                    // Alignment check replaces the old hard assertions: a
+                    // backend that drops, duplicates, or misorders frames
+                    // is a recorded fault, and frames are reconciled by id.
+                    let aligned = dets.len() == batch.len()
+                        && batch.iter().zip(&dets).all(|(f, d)| f.id == d.frame_id);
+                    if !aligned {
+                        slo.faults += 1;
+                        batch_faulted = true;
+                        push_fault(
+                            &mut faults,
+                            FaultRecord {
+                                batch: batch_idx,
+                                frame: None,
+                                kind: "mismatch".into(),
+                                detail: format!(
+                                    "expected {} ordered detections, got {}",
+                                    batch.len(),
+                                    dets.len()
+                                ),
+                            },
+                        );
+                    }
+                    let now = Instant::now();
+                    for frame in &batch {
+                        match dets.iter().find(|d| d.frame_id == frame.id) {
+                            Some(det) => {
+                                slo.completed += 1;
+                                detections.push(*det);
+                                latency.record_us(frame.created.elapsed().as_micros() as u64);
+                                if frame.deadline.is_some_and(|d| now > d) {
+                                    slo.deadline_misses += 1;
+                                }
+                            }
+                            None => slo.failed += 1,
+                        }
+                    }
+                }
+            }
+            post_stage.record(t.elapsed(), batch.len() as u64);
         }
-        post_stage.record(t.elapsed(), batch.len() as u64);
-        batches += 1;
-        frames_done += batch.len() as u64;
+
+        // Graceful degradation under fault or deadline pressure.
+        if batch_faulted || had_expired {
+            consecutive_pressure += 1;
+            if consecutive_pressure >= config.degrade_after && max_batch > 1 {
+                max_batch = (max_batch / 2).max(1);
+                slo.degraded_steps += 1;
+                consecutive_pressure = 0;
+            }
+        } else {
+            consecutive_pressure = 0;
+        }
+        if batch_faulted && !slo.fallback_engaged && slo.faults >= config.fallback_after {
+            if let Some(fb) = fallback.take() {
+                let detail = format!("swapped {} -> {}", backend.name(), fb.name());
+                fallback_name = Some(fb.name().to_string());
+                backend = fb;
+                slo.fallback_engaged = true;
+                slo.faults += 1;
+                push_fault(
+                    &mut faults,
+                    FaultRecord {
+                        batch: batches.saturating_sub(1),
+                        frame: None,
+                        kind: "fallback".into(),
+                        detail,
+                    },
+                );
+            }
+        }
     }
     let wall_s = t0.elapsed().as_secs_f64();
 
-    let source_busy = producer.join().expect("source thread");
-    let mut source_stage = StageMetrics::new("source");
-    source_stage.record(source_busy, frames_done);
+    let stats = match producer.join() {
+        Ok(Ok(stats)) => stats,
+        Ok(Err(msg)) => {
+            return Err(RuntimeError::new(msg).context("source thread panicked"));
+        }
+        Err(payload) => {
+            return Err(
+                RuntimeError::new(panic_message(payload)).context("source thread panicked"),
+            );
+        }
+    };
+    slo.admitted = stats.offered;
+    slo.shed += stats.shed;
 
-    ServeReport {
-        backend: backend.name().to_string(),
-        frames: frames_done,
+    let mut source_stage = StageMetrics::new("source");
+    source_stage.record(stats.busy, stats.offered);
+
+    let backend_label = match fallback_name {
+        Some(fb) => format!("{primary_name}+fallback:{fb}"),
+        None => primary_name,
+    };
+    Ok(ServeReport {
+        backend: backend_label,
+        policy: config.policy.to_string(),
+        frames: slo.completed,
         wall_s,
-        fps: frames_done as f64 / wall_s.max(1e-9),
+        fps: slo.completed as f64 / wall_s.max(1e-9),
         latency,
         stages: vec![source_stage, infer_stage, post_stage],
         batches,
-        mean_batch: frames_done as f64 / batches.max(1) as f64,
-    }
+        mean_batch: slo.completed as f64 / batches.max(1) as f64,
+        slo,
+        queue_depth,
+        faults,
+        detections,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::pipeline::{CpuBackend, Detection};
+    use crate::coordinator::pipeline::{CpuBackend, Detection, Frame};
     use crate::models::{random_weights, ultranet::ultranet_tiny, CpuRunner, EngineKind};
     use crate::theory::Multiplier;
 
@@ -136,6 +368,64 @@ mod tests {
         }
     }
 
+    /// Drops the detection for one frame id (a misbehaving backend).
+    struct DroppingBackend {
+        drop_id: u64,
+    }
+    impl InferBackend for DroppingBackend {
+        fn name(&self) -> &str {
+            "dropping"
+        }
+        fn input_dims(&self) -> (usize, usize, usize) {
+            (1, 2, 2)
+        }
+        fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+            frames
+                .iter()
+                .filter(|f| f.id != self.drop_id)
+                .map(|f| Detection {
+                    frame_id: f.id,
+                    cell: (0, 0),
+                })
+                .collect()
+        }
+    }
+
+    /// Reverses detection order (misordered but complete).
+    struct MisorderingBackend;
+    impl InferBackend for MisorderingBackend {
+        fn name(&self) -> &str {
+            "misordering"
+        }
+        fn input_dims(&self) -> (usize, usize, usize) {
+            (1, 2, 2)
+        }
+        fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+            frames
+                .iter()
+                .rev()
+                .map(|f| Detection {
+                    frame_id: f.id,
+                    cell: (0, 0),
+                })
+                .collect()
+        }
+    }
+
+    /// Panics on every call.
+    struct PanickingBackend;
+    impl InferBackend for PanickingBackend {
+        fn name(&self) -> &str {
+            "panicking"
+        }
+        fn input_dims(&self) -> (usize, usize, usize) {
+            (1, 2, 2)
+        }
+        fn infer_batch(&mut self, _frames: &[Frame]) -> Vec<Detection> {
+            panic!("backend always panics");
+        }
+    }
+
     #[test]
     fn serves_all_frames_exactly_once() {
         let report = serve(
@@ -144,10 +434,16 @@ mod tests {
                 frames: 100,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(report.frames, 100);
         assert_eq!(report.latency.count(), 100);
         assert!(report.fps > 0.0);
+        assert!(report.slo.accounted());
+        assert_eq!(report.slo.admitted, 100);
+        assert_eq!(report.slo.completed, 100);
+        assert_eq!(report.slo.shed, 0);
+        assert_eq!(report.detections.len(), 100);
     }
 
     #[test]
@@ -159,12 +455,28 @@ mod tests {
                 source_fps_cap: Some(500.0),
                 ..Default::default()
             },
-        );
-        // Even an instant backend cannot exceed the feeder rate by much.
+        )
+        .unwrap();
+        // Assert against the source stage's own busy-time accounting
+        // instead of a wall-clock fps constant: the pacing sleeps live in
+        // the source stage, so goodput can't beat frames/source-busy by
+        // more than scheduling slack — self-consistent on any machine.
+        let src = report
+            .stages
+            .iter()
+            .find(|s| s.name == "source")
+            .expect("source stage");
         assert!(
-            report.fps < 650.0,
-            "fps {} should be feeder-bound near 500",
-            report.fps
+            src.busy >= Duration::from_millis(60),
+            "50 frames at 500 fps must spend >=60ms pacing, got {:?}",
+            src.busy
+        );
+        let feeder_bound = report.frames as f64 / src.busy.as_secs_f64();
+        assert!(
+            report.fps <= feeder_bound * 1.25,
+            "fps {} should be feeder-bound near {}",
+            report.fps,
+            feeder_bound
         );
     }
 
@@ -172,8 +484,7 @@ mod tests {
     fn hikonv_backend_end_to_end() {
         let model = ultranet_tiny();
         let weights = random_weights(&model, 5);
-        let runner =
-            CpuRunner::new(model, weights, EngineKind::HiKonv(Multiplier::CPU32)).unwrap();
+        let runner = CpuRunner::new(model, weights, EngineKind::HiKonv(Multiplier::CPU32)).unwrap();
         let report = serve(
             Box::new(CpuBackend::new(runner)),
             &ServeConfig {
@@ -181,8 +492,118 @@ mod tests {
                 max_batch: 2,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(report.frames, 4);
         assert!(report.stages.iter().any(|s| s.name == "infer" && s.items == 4));
+    }
+
+    #[test]
+    fn dropped_frame_is_recorded_fault_not_panic() {
+        let report = serve(
+            Box::new(DroppingBackend { drop_id: 3 }),
+            &ServeConfig {
+                frames: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.slo.failed, 1);
+        assert_eq!(report.slo.completed, 7);
+        assert!(report.slo.accounted());
+        assert!(report.slo.faults >= 1);
+        assert!(report.faults.iter().any(|f| f.kind == "mismatch"));
+        assert!(report.detections.iter().all(|d| d.frame_id != 3));
+    }
+
+    #[test]
+    fn misordered_detections_reconcile_by_id() {
+        let report = serve(
+            Box::new(MisorderingBackend),
+            &ServeConfig {
+                frames: 8,
+                max_batch: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Every frame completes (reconciled by id); the misordering is a
+        // recorded fault, not a crash or a loss.
+        assert_eq!(report.slo.completed, 8);
+        assert!(report.slo.accounted());
+        assert!(report.faults.iter().all(|f| f.kind == "mismatch"));
+    }
+
+    #[test]
+    fn panicking_backend_exhausts_retries_and_fails_frames() {
+        let report = serve(
+            Box::new(PanickingBackend),
+            &ServeConfig {
+                frames: 8,
+                max_batch: 4,
+                max_retries: 2,
+                retry_backoff: Duration::from_micros(100),
+                degrade_after: 100,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.slo.completed, 0);
+        assert_eq!(report.slo.failed, 8);
+        assert!(report.slo.accounted());
+        // Every batch burns 1 + max_retries attempts.
+        assert_eq!(report.slo.faults, report.batches * 3);
+        assert_eq!(report.slo.retried, report.batches * 2);
+        assert!(report.faults.iter().any(|f| f.kind == "panic"));
+    }
+
+    #[test]
+    fn repeated_faults_degrade_batch_size() {
+        let report = serve(
+            Box::new(PanickingBackend),
+            &ServeConfig {
+                frames: 16,
+                max_batch: 4,
+                max_retries: 0,
+                degrade_after: 1,
+                retry_backoff: Duration::from_micros(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            report.slo.degraded_steps >= 2,
+            "max_batch should step 4 -> 2 -> 1, got {} steps",
+            report.slo.degraded_steps
+        );
+        assert_eq!(report.slo.failed, 16);
+        assert!(report.slo.accounted());
+    }
+
+    #[test]
+    fn fallback_backend_swaps_in_after_faults() {
+        let report = serve_with_fallback(
+            Box::new(PanickingBackend),
+            Some(Box::new(EchoBackend)),
+            &ServeConfig {
+                frames: 16,
+                max_batch: 4,
+                max_retries: 0,
+                fallback_after: 1,
+                degrade_after: 100,
+                retry_backoff: Duration::from_micros(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(report.slo.fallback_engaged);
+        assert!(
+            report.backend.contains("fallback:echo"),
+            "label should name the fallback, got {}",
+            report.backend
+        );
+        assert!(report.slo.completed > 0, "fallback should serve frames");
+        assert!(report.slo.accounted());
+        assert!(report.faults.iter().any(|f| f.kind == "fallback"));
     }
 }

@@ -15,6 +15,7 @@ pub struct FrameSource {
     dims: (usize, usize, usize),
     bits: u32,
     fps_cap: Option<f64>,
+    deadline: Option<Duration>,
     next_id: u64,
     t0: Instant,
 }
@@ -26,9 +27,17 @@ impl FrameSource {
             dims,
             bits,
             fps_cap,
+            deadline: None,
             next_id: 0,
             t0: Instant::now(),
         }
+    }
+
+    /// Give every produced frame a serve-by deadline of `budget` after
+    /// its creation instant (`None` = no SLO budget).
+    pub fn with_deadline(mut self, budget: Option<Duration>) -> Self {
+        self.deadline = budget;
+        self
     }
 
     /// Produce the next frame, sleeping to honour the rate cap.
@@ -45,10 +54,12 @@ impl FrameSource {
         let (c, h, w) = self.dims;
         let pixels = self.rng.bytes(c * h * w);
         let levels = quantize_u8_image(&pixels, self.bits);
+        let created = Instant::now();
         let frame = Frame {
             id: self.next_id,
             levels,
-            created: Instant::now(),
+            created,
+            deadline: self.deadline.map(|b| created + b),
         };
         self.next_id += 1;
         frame
@@ -71,6 +82,17 @@ mod tests {
         assert!(f.levels.iter().all(|&v| (0..16).contains(&v)));
         assert_eq!(f.id, 0);
         assert_eq!(s.next_frame().id, 1);
+    }
+
+    #[test]
+    fn deadline_budget_stamps_frames() {
+        let mut s = FrameSource::new(1, (1, 2, 2), 4, None)
+            .with_deadline(Some(Duration::from_millis(40)));
+        let f = s.next_frame();
+        let d = f.deadline.expect("deadline stamped");
+        assert!(d >= f.created + Duration::from_millis(40));
+        let mut bare = FrameSource::new(1, (1, 2, 2), 4, None);
+        assert!(bare.next_frame().deadline.is_none());
     }
 
     #[test]

@@ -41,8 +41,10 @@
 //!   style API; rayon is unavailable offline).
 //! * [`runtime`] — PJRT client: loads AOT-compiled HLO artifacts from the
 //!   JAX/Pallas compile path and executes them from Rust.
-//! * [`coordinator`] — the streaming serving pipeline (frame source →
-//!   quantize → infer → postprocess) with batching and metrics.
+//! * [`coordinator`] — the overload-safe streaming serving pipeline
+//!   (frame source → admission control → bounded queue → batching →
+//!   panic-supervised inference → postprocess) with deadline budgets,
+//!   deterministic fault injection and SLO metrics (`docs/SERVING.md`).
 //! * [`experiments`] — regenerators for every table and figure of the paper.
 //! * [`bench`], [`testing`], [`util`], [`cli`] — self-built substrates
 //!   (criterion-lite harness, property testing, RNG/JSON/tables, CLI parsing);

@@ -15,6 +15,9 @@
 //! hikonv serve   --backend <engine-spec>|pjrt
 //!                --frames 64 [--fps-cap 401] [--workers N] [--threads N]
 //!                [--batch N] [--linger-ms MS] [--queue-depth N]
+//!                [--policy block|shed|drop-oldest] [--deadline-ms MS]
+//!                [--retries N] [--fault-plan "panic@8;stall@16:50ms"]
+//!                [--fallback <engine-spec>] [--json] [--json-out <path>]
 //! hikonv run-model --engine <engine-spec> [--model <workload>]
 //!                [--threads N] [--batch N] [--artifact <path>]
 //!                                             one graph-workload inference
@@ -52,7 +55,8 @@ use hikonv::bench::BenchConfig;
 use hikonv::cli::{render_help, Args, OptSpec};
 use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
 use hikonv::coordinator::ParallelCpuBackend;
-use hikonv::coordinator::{serve, ServeConfig};
+use hikonv::coordinator::{serve_with_fallback, AdmissionPolicy, ServeConfig};
+use hikonv::coordinator::{FaultInjector, FaultPlan};
 use hikonv::engine::{EngineConfig, EnginePlan, KernelRegistry};
 use hikonv::experiments::{fig5, fig6, table1, table2};
 use hikonv::models::ultranet::ultranet_tiny;
@@ -240,6 +244,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Some(v) => Some(v.parse::<f64>().map_err(|_| "bad --fps-cap")?),
         None => None,
     };
+    let policy: AdmissionPolicy = args.get_or("policy", "block").parse()?;
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
     let config = ServeConfig {
         frames,
         source_fps_cap: fps_cap,
@@ -248,6 +254,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         linger: Duration::from_millis(args.get_u64("linger-ms", 2)?),
         seed: args.get_u64("seed", 7)?,
         bits: 4,
+        policy,
+        deadline: (deadline_ms > 0).then_some(Duration::from_millis(deadline_ms)),
+        max_retries: args.get_u32("retries", 2)?,
+        ..ServeConfig::default()
     };
     let full = args.has("full-model");
     let workers = args.get_usize("workers", 1)?;
@@ -281,10 +291,36 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             )?))
         }
     };
-    let report = serve(backend, &config);
+    let backend: Box<dyn hikonv::coordinator::InferBackend> = match args.get("fault-plan") {
+        Some(spec) => {
+            let plan: FaultPlan = spec.parse()?;
+            Box::new(FaultInjector::new(backend, plan))
+        }
+        None => backend,
+    };
+    // A designated fallback plan (e.g. a conservative engine the
+    // artifact loader would pick under `LoadMode::Replanned`) that the
+    // supervisor swaps in after repeated faults.
+    let fallback: Option<Box<dyn hikonv::coordinator::InferBackend>> = match args.get("fallback") {
+        Some(_) => {
+            let engine = parse_engine_spec(args, "fallback", "baseline")?;
+            let weights = random_weights(&model, config.seed);
+            Some(Box::new(CpuBackend::new(CpuRunner::new(
+                model.clone(),
+                weights,
+                engine,
+            )?)))
+        }
+        None => None,
+    };
+    let report = serve_with_fallback(backend, fallback, &config).map_err(|e| e.to_string())?;
     print!("{}", report.render());
     if args.has("json") {
         println!("{}", report.to_json().to_string_pretty());
+    }
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, report.to_json().to_string_pretty())
+            .map_err(|e| format!("writing {path}: {e}"))?;
     }
     Ok(())
 }
@@ -549,6 +585,48 @@ fn help() -> String {
             name: "queue-depth",
             help: "bounded source→inference queue depth (backpressure)",
             default: Some("8"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "policy",
+            help: "admission policy on a full queue: block | shed | drop-oldest",
+            default: Some("block"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "deadline-ms",
+            help: "per-frame deadline budget in ms (0 = no SLO budget)",
+            default: Some("0"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "retries",
+            help: "inference retries per batch after a caught panic",
+            default: Some("2"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "fault-plan",
+            help: "scripted fault injection: kind@frame[:arg];... (panic|stall|drop|dup|misorder)",
+            default: None,
+            is_switch: false,
+        },
+        OptSpec {
+            name: "fallback",
+            help: "engine spec swapped in after repeated faults",
+            default: None,
+            is_switch: false,
+        },
+        OptSpec {
+            name: "json",
+            help: "also print the report as JSON",
+            default: None,
+            is_switch: true,
+        },
+        OptSpec {
+            name: "json-out",
+            help: "write the report JSON to this path",
+            default: None,
             is_switch: false,
         },
     ];

@@ -131,6 +131,89 @@ impl LatencyHistogram {
     }
 }
 
+/// Exact histogram over small non-negative integer values (queue depths,
+/// batch sizes): one bucket per value, so percentiles are exact rather
+/// than bucket upper bounds like [`LatencyHistogram`]'s.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CountHistogram {
+    /// `counts[v]` = number of times value `v` was recorded.
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl CountHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        CountHistogram::default()
+    }
+
+    /// Record one observation of `v`. Values are expected to be small
+    /// (bounded by a queue depth or batch limit); storage grows linearly
+    /// with the largest recorded value.
+    pub fn record(&mut self, v: u64) {
+        let idx = v as usize;
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Largest recorded value.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Exact percentile (nearest-rank) of recorded values.
+    pub fn percentile(&self, pct: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((pct / 100.0 * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (v, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return v as u64;
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &CountHistogram) {
+        for (v, c) in other.counts.iter().enumerate() {
+            if *c > 0 {
+                if v >= self.counts.len() {
+                    self.counts.resize(v + 1, 0);
+                }
+                self.counts[v] += c;
+            }
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +265,39 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.max_us(), 500);
+    }
+
+    #[test]
+    fn count_histogram_exact_percentiles() {
+        let mut h = CountHistogram::new();
+        for v in [0u64, 1, 1, 2, 2, 2, 3, 8] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max(), 8);
+        assert_eq!(h.percentile(50.0), 2);
+        assert_eq!(h.percentile(100.0), 8);
+        assert!((h.mean() - 19.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn count_histogram_empty_is_zero() {
+        let h = CountHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn count_histogram_merge() {
+        let mut a = CountHistogram::new();
+        let mut b = CountHistogram::new();
+        a.record(1);
+        b.record(4);
+        b.record(4);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 4);
+        assert_eq!(a.percentile(100.0), 4);
     }
 }

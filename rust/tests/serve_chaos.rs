@@ -1,0 +1,238 @@
+//! Chaos suite for the overload-safe serve path (ISSUE 7 acceptance):
+//! scripted fault plans + overload must leave `serve()` returning
+//! `Ok(report)` with every admitted frame accounted for exactly once
+//! (`admitted == shed + expired + failed + completed`), zero process
+//! panics, completed detections bit-exact with a fault-free run, and
+//! counters deterministic across identically-seeded runs.
+
+use hikonv::coordinator::pipeline::{CpuBackend, Detection};
+use hikonv::coordinator::{
+    serve, AdmissionPolicy, FaultInjector, FaultPlan, Frame, InferBackend, ServeConfig,
+    ServeReport,
+};
+use hikonv::models::ultranet::ultranet_tiny;
+use hikonv::models::{random_weights, CpuRunner, EngineKind};
+use hikonv::theory::Multiplier;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Trivially fast backend for schedule-focused chaos tests.
+struct Echo;
+impl InferBackend for Echo {
+    fn name(&self) -> &str {
+        "echo"
+    }
+    fn input_dims(&self) -> (usize, usize, usize) {
+        (1, 2, 2)
+    }
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        frames
+            .iter()
+            .map(|f| Detection {
+                frame_id: f.id,
+                cell: (0, 0),
+            })
+            .collect()
+    }
+}
+
+/// Slow backend: fixed service time per batch.
+struct Slow {
+    per_batch: Duration,
+}
+impl InferBackend for Slow {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn input_dims(&self) -> (usize, usize, usize) {
+        (1, 2, 2)
+    }
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        std::thread::sleep(self.per_batch);
+        frames
+            .iter()
+            .map(|f| Detection {
+                frame_id: f.id,
+                cell: (0, 0),
+            })
+            .collect()
+    }
+}
+
+fn hikonv_backend(seed: u64) -> Box<dyn InferBackend> {
+    let model = ultranet_tiny();
+    let weights = random_weights(&model, seed);
+    let runner = CpuRunner::new(model, weights, EngineKind::HiKonv(Multiplier::CPU32)).unwrap();
+    Box::new(CpuBackend::new(runner))
+}
+
+/// The scripted chaos schedule: 100 fps pacing, queue depth 8, and a
+/// 1.5 s stall on the first batch so the producer (done at ~640 ms)
+/// overflows the queue deterministically — frames 0–11 reach inference,
+/// frames 12–63 are shed at admission.
+fn chaos_config() -> ServeConfig {
+    ServeConfig {
+        frames: 64,
+        source_fps_cap: Some(100.0),
+        queue_depth: 8,
+        max_batch: 4,
+        linger: Duration::from_millis(300),
+        seed: 7,
+        bits: 4,
+        policy: AdmissionPolicy::Shed,
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(1),
+        degrade_after: 100,
+        ..ServeConfig::default()
+    }
+}
+
+fn chaos_plan() -> FaultPlan {
+    "stall@0:1500ms;panic@4;drop@8;dup@9;misorder@10".parse().unwrap()
+}
+
+fn run_chaos() -> ServeReport {
+    let faulty = FaultInjector::new(hikonv_backend(7), chaos_plan());
+    serve(Box::new(faulty), &chaos_config()).unwrap()
+}
+
+#[test]
+fn scripted_faults_account_every_frame_and_stay_bit_exact() {
+    let report = run_chaos();
+
+    // Every admitted frame accounted for exactly once.
+    assert!(report.slo.accounted(), "identity violated: {:?}", report.slo);
+    assert_eq!(report.slo.admitted, 64);
+    // The stall pins the consumer while the producer overruns the queue:
+    // most frames are shed, nothing expires (no deadline set).
+    assert!(report.slo.shed > 0, "stall must force shedding");
+    assert_eq!(report.slo.expired, 0);
+    // drop@8 is the only unrecoverable frame.
+    assert_eq!(report.slo.failed, 1);
+    assert!(report.detections.iter().all(|d| d.frame_id != 8));
+    // panic@4 is retried once and then succeeds.
+    assert_eq!(report.slo.retried, 1);
+    // Faults: one caught panic + one detection-stream mismatch.
+    assert_eq!(report.slo.faults, 2);
+    assert!(report.faults.iter().any(|f| f.kind == "panic"));
+    assert!(report.faults.iter().any(|f| f.kind == "mismatch"));
+    assert!(report.slo.completed >= 8, "slo: {:?}", report.slo);
+
+    // Bit-exactness: every completed frame's detection equals the
+    // fault-free run's detection for that frame.
+    let clean = serve(
+        hikonv_backend(7),
+        &ServeConfig {
+            frames: 64,
+            seed: 7,
+            bits: 4,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(clean.slo.completed, 64);
+    let oracle: HashMap<u64, (usize, usize)> = clean
+        .detections
+        .iter()
+        .map(|d| (d.frame_id, d.cell))
+        .collect();
+    for det in &report.detections {
+        assert_eq!(
+            oracle.get(&det.frame_id),
+            Some(&det.cell),
+            "frame {} detection drifted under faults",
+            det.frame_id
+        );
+    }
+}
+
+#[test]
+fn chaos_counters_are_deterministic_across_seeded_runs() {
+    let a = run_chaos();
+    let b = run_chaos();
+    assert_eq!(a.slo, b.slo, "SLO counters must be reproducible");
+    assert_eq!(a.detections, b.detections, "detections must be reproducible");
+    assert_eq!(a.batches, b.batches);
+}
+
+#[test]
+fn overload_4x_feeder_cap_sheds_and_returns_ok() {
+    // Service capacity ~100 fps (10 ms per single-frame batch); offered
+    // load 400 fps = 4x. The shed policy must keep the queue bounded and
+    // the run must finish cleanly with the identity intact.
+    let report = serve(
+        Box::new(Slow {
+            per_batch: Duration::from_millis(10),
+        }),
+        &ServeConfig {
+            frames: 80,
+            source_fps_cap: Some(400.0),
+            queue_depth: 4,
+            max_batch: 1,
+            linger: Duration::ZERO,
+            seed: 3,
+            bits: 4,
+            policy: AdmissionPolicy::Shed,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(report.slo.accounted(), "identity violated: {:?}", report.slo);
+    assert_eq!(report.slo.admitted, 80);
+    assert!(report.slo.shed > 0, "4x overload must shed");
+    assert!(report.slo.completed > 0, "pipeline must stay live");
+}
+
+#[test]
+fn retry_exhaustion_fails_only_the_cursed_batch() {
+    // panic@0 fires on all three attempts (1 try + 2 retries): the batch
+    // holding frame 0 fails; everything else completes.
+    let plan: FaultPlan = "panic@0:x3".parse().unwrap();
+    let report = serve(
+        Box::new(FaultInjector::new(Box::new(Echo), plan)),
+        &ServeConfig {
+            frames: 6,
+            max_batch: 1,
+            linger: Duration::ZERO,
+            max_retries: 2,
+            retry_backoff: Duration::from_micros(200),
+            degrade_after: 100,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.slo.failed, 1);
+    assert_eq!(report.slo.completed, 5);
+    assert_eq!(report.slo.faults, 3);
+    assert_eq!(report.slo.retried, 2);
+    assert!(report.slo.accounted());
+    assert!(report.detections.iter().all(|d| d.frame_id != 0));
+}
+
+#[test]
+fn drop_oldest_policy_always_serves_the_freshest_frame() {
+    let report = serve(
+        Box::new(Slow {
+            per_batch: Duration::from_millis(8),
+        }),
+        &ServeConfig {
+            frames: 30,
+            queue_depth: 2,
+            max_batch: 1,
+            linger: Duration::ZERO,
+            seed: 5,
+            bits: 4,
+            policy: AdmissionPolicy::DropOldest,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(report.slo.accounted());
+    assert_eq!(report.slo.admitted, 30);
+    // Eviction drops the *oldest* queued frame, so the newest frame is
+    // always still in the queue when the producer closes — it must serve.
+    assert!(
+        report.detections.iter().any(|d| d.frame_id == 29),
+        "freshest frame must complete under drop-oldest"
+    );
+}
