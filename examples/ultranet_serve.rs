@@ -6,7 +6,11 @@
 //! conv layers are the L1 Pallas kernels — and reports fps + latency
 //! percentiles; then repeats with the native CPU HiKonv engine and the
 //! baseline engine for comparison, including the ARM-feeder-capped run
-//! that reproduces Table II's measured-vs-potential split.
+//! that reproduces Table II's measured-vs-potential split. The final
+//! sections drive the robustness layer: overload + scripted faults
+//! through the supervised single-model path, then the multi-model
+//! registry (tenant isolation, restart-budget quarantine, mid-run
+//! artifact hot reload).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example ultranet_serve
@@ -15,7 +19,8 @@
 use hikonv::artifact::{Artifact, LoadMode};
 use hikonv::coordinator::pipeline::{CpuBackend, GraphBackend, PjrtBackend};
 use hikonv::coordinator::{
-    serve, AdmissionPolicy, FaultInjector, FaultPlan, InferBackend, ServeConfig,
+    serve, serve_registry, AdmissionPolicy, FaultInjector, FaultPlan, InferBackend, ModelRegistry,
+    MultiServeConfig, ReloadAt, ServeConfig,
 };
 use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::ultranet_tiny;
@@ -199,4 +204,57 @@ fn main() {
     println!("--- overload (shed policy, 2000 fps offered) + scripted faults ---");
     print!("{}", report.render());
     assert!(report.slo.accounted(), "SLO identity must hold");
+    println!();
+
+    // --- multi-model registry: isolation, quarantine, hot reload -----------
+    // Three tenants under one supervisor. Scripted faults kill tenant
+    // "flaky" past its restart budget (quarantine); tenant "reloads"
+    // hot-swaps a freshly compiled artifact mid-run; tenant "steady" must
+    // never notice either. Identical registrations share one compiled
+    // plan via the registry cache.
+    let graph = zoo::build("fc-head").unwrap();
+    let weights = random_graph_weights(&graph, 7).unwrap();
+    let art_path = std::env::temp_dir().join("ultranet_serve_reload_demo.hkv");
+    Artifact::compile(graph.clone(), weights.clone(), EngineConfig::auto())
+        .unwrap()
+        .write(&art_path)
+        .unwrap();
+    let mut registry = ModelRegistry::new(EngineConfig::auto());
+    for name in ["steady", "flaky", "reloads"] {
+        registry
+            .register_graph(name, graph.clone(), weights.clone())
+            .unwrap();
+    }
+    println!("--- multi-model registry (3 tenants, 1 shared compiled plan) ---");
+    println!(
+        "    plan cache: {} hits across {} registrations",
+        registry.cache_hits(),
+        registry.len()
+    );
+    let multi = serve_registry(
+        &mut registry,
+        &MultiServeConfig {
+            frames,
+            source_fps_cap: Some(400.0),
+            max_batch: 2,
+            max_retries: 0,
+            restart_budget: 1,
+            restart_backoff: Duration::from_millis(2),
+            fault_plan: "panic@2:model=flaky;panic@6:model=flaky".parse().unwrap(),
+            reload_at: Some(ReloadAt {
+                after_admitted: frames / 3,
+                tenant: "reloads".into(),
+                path: art_path.clone(),
+            }),
+            ..MultiServeConfig::default()
+        },
+    )
+    .unwrap();
+    let _ = std::fs::remove_file(&art_path);
+    print!("{}", multi.render());
+    assert!(multi.accounted(), "per-tenant SLO identity must hold");
+    let steady = multi.tenant("steady").unwrap();
+    assert!(steady.faults.is_empty(), "isolation: steady saw no faults");
+    assert_eq!(multi.tenant("flaky").unwrap().state, "quarantined");
+    assert_eq!(multi.tenant("reloads").unwrap().reloads, 1);
 }

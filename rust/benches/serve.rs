@@ -13,11 +13,12 @@
 use hikonv::bench::{BenchConfig, Bencher};
 use hikonv::coordinator::pipeline::CpuBackend;
 use hikonv::coordinator::{
-    serve, AdmissionPolicy, FaultInjector, FaultPlan, InferBackend, ServeConfig, ServeReport,
+    serve, serve_registry, AdmissionPolicy, FaultInjector, FaultPlan, InferBackend, ModelRegistry,
+    MultiServeConfig, ServeConfig, ServeReport,
 };
 use hikonv::engine::EngineConfig;
 use hikonv::models::ultranet::ultranet_tiny;
-use hikonv::models::{random_weights, CpuRunner};
+use hikonv::models::{random_graph_weights, random_weights, zoo, CpuRunner};
 use hikonv::util::json::Json;
 use hikonv::util::table::Table;
 use std::time::Duration;
@@ -140,6 +141,50 @@ fn main() {
         report.slo.faults, report.slo.retried, report.slo.failed, report.slo.completed
     );
     json_rows.push(row(&report, offered, "scripted-faults"));
+
+    // --- multi-model rows: two tenants through the supervised registry ---
+    let mut registry = ModelRegistry::new(EngineConfig::auto().with_threads(1));
+    for (i, name) in ["a", "b"].iter().enumerate() {
+        let graph = zoo::fc_head();
+        let weights = random_graph_weights(&graph, 7 + i as u64).expect("tenant weights");
+        registry
+            .register_graph(name, graph, weights)
+            .expect("register tenant");
+    }
+    let multi = serve_registry(
+        &mut registry,
+        &MultiServeConfig {
+            frames,
+            queue_depth: 8,
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            seed: 7,
+            ..MultiServeConfig::default()
+        },
+    )
+    .expect("multi-model serve run");
+    assert!(multi.accounted(), "per-tenant identity violated");
+    println!(
+        "multi-model: {} tenants, {} frames completed in {:.1} ms",
+        multi.tenants.len(),
+        multi.total_completed(),
+        multi.wall_s * 1e3
+    );
+    for t in &multi.tenants {
+        json_rows.push(
+            Json::obj()
+                .set("section", "multi-model")
+                .set("backend", t.backend.as_str())
+                .set("policy", multi.policy.as_str())
+                .set("tenant", t.name.as_str())
+                .set("state", t.state.as_str())
+                .set("admitted", t.slo.admitted as i64)
+                .set("completed", t.slo.completed as i64)
+                .set("goodput_fps", t.slo.completed as f64 / multi.wall_s.max(1e-9))
+                .set("latency_p50_us", t.latency.percentile_us(50.0) as i64)
+                .set("latency_p99_us", t.latency.percentile_us(99.0) as i64),
+        );
+    }
 
     let out = Json::obj()
         .set("bench", "serve")

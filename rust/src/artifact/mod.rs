@@ -290,6 +290,23 @@ pub fn load_runner(path: &Path) -> Result<(GraphRunner, LoadMode), RuntimeError>
     Artifact::read(path)?.into_runner()
 }
 
+/// Structural fingerprint of a (graph, weights, config) triple — the
+/// model registry's plan/pack cache key. FNV-1a over the same byte
+/// encoding the artifact format uses for these fields, so two
+/// registrations that would compile bit-identical runners collide
+/// exactly, and any difference in topology, weights, or engine config
+/// changes the key.
+pub fn fingerprint(graph: &GraphSpec, weights: &[QTensor], config: &EngineConfig) -> u64 {
+    let mut e = Enc::new();
+    e.str(&config.to_string());
+    enc_graph(&mut e, graph);
+    e.u64(weights.len() as u64);
+    for t in weights {
+        enc_tensor(&mut e, t);
+    }
+    fnv1a64(&e.buf)
+}
+
 // ---------------------------------------------------------------------
 // Byte writer.
 
@@ -730,6 +747,27 @@ mod tests {
         let g = tiny_graph();
         let w = random_graph_weights(&g, 7).unwrap();
         Artifact::compile(g, w, EngineConfig::auto().with_threads(1)).unwrap()
+    }
+
+    #[test]
+    fn fingerprint_separates_graph_weights_and_config() {
+        let g = tiny_graph();
+        let w = random_graph_weights(&g, 7).unwrap();
+        let cfg = EngineConfig::auto().with_threads(1);
+        let base = fingerprint(&g, &w, &cfg);
+        // Deterministic for identical inputs.
+        assert_eq!(base, fingerprint(&g, &w, &cfg));
+        // Any axis changing changes the key.
+        let w2 = random_graph_weights(&g, 8).unwrap();
+        assert_ne!(base, fingerprint(&g, &w2, &cfg));
+        let cfg2 = EngineConfig::auto().with_threads(2);
+        assert_ne!(base, fingerprint(&g, &w, &cfg2));
+        let g2 = GraphSpec::new("tiny2", (3, 8, 8), 4)
+            .conv("c1", 4, 3, 1, 1, 4)
+            .requant(4)
+            .maxpool(2)
+            .fc("head", 5, 4);
+        assert_ne!(base, fingerprint(&g2, &w, &cfg));
     }
 
     #[test]

@@ -123,6 +123,7 @@ mod tests {
     fn frame(id: u64) -> Frame {
         Frame {
             id,
+            model: 0,
             levels: vec![],
             created: Instant::now(),
             deadline: None,

@@ -116,6 +116,7 @@ mod tests {
     fn frame(id: u64) -> Frame {
         Frame {
             id,
+            model: 0,
             levels: vec![],
             created: Instant::now(),
             deadline: None,
@@ -126,6 +127,7 @@ mod tests {
         let now = Instant::now();
         Frame {
             id,
+            model: 0,
             levels: vec![],
             created: now,
             deadline: Some(now - Duration::from_millis(1)),

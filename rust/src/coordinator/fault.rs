@@ -53,6 +53,9 @@ pub struct FaultEvent {
     pub kind: FaultKind,
     /// How many times the event still fires (0 = spent).
     pub remaining: u32,
+    /// Restrict the event to one tenant of the multi-model registry
+    /// serve path (`panic@4:model=a`). `None` targets every model.
+    pub model: Option<String>,
 }
 
 /// An ordered script of [`FaultEvent`]s.
@@ -78,8 +81,37 @@ impl FaultPlan {
             frame,
             kind,
             remaining: count,
+            model: None,
         });
         self
+    }
+
+    /// Restrict the most recently added event to one registry tenant
+    /// (builder form of the `:model=X` grammar suffix). No-op on an
+    /// empty plan.
+    pub fn targeting(mut self, model: &str) -> FaultPlan {
+        if let Some(ev) = self.events.last_mut() {
+            ev.model = Some(model.to_string());
+        }
+        self
+    }
+
+    /// The sub-plan that applies to tenant `model`: untargeted events
+    /// plus events targeted at exactly this model. The multi-model serve
+    /// path hands each tenant worker its own filtered plan, so one
+    /// tenant's scripted faults can never leak into another's stream.
+    pub fn for_model(&self, model: &str) -> FaultPlan {
+        FaultPlan {
+            events: self
+                .events
+                .iter()
+                .filter(|ev| match &ev.model {
+                    Some(m) => m == model,
+                    None => true,
+                })
+                .cloned()
+                .collect(),
+        }
     }
 
     /// Generate a seeded random plan over `frames` frames with roughly
@@ -118,121 +150,21 @@ impl FaultPlan {
     pub fn events(&self) -> &[FaultEvent] {
         &self.events
     }
-}
-
-impl fmt::Display for FaultPlan {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        for (i, ev) in self.events.iter().enumerate() {
-            if i > 0 {
-                f.write_str(";")?;
-            }
-            match ev.kind {
-                FaultKind::Panic if ev.remaining != 1 => {
-                    write!(f, "panic@{}:x{}", ev.frame, ev.remaining)?
-                }
-                FaultKind::Panic => write!(f, "panic@{}", ev.frame)?,
-                FaultKind::Stall(d) => write!(f, "stall@{}:{}ms", ev.frame, d.as_millis())?,
-                FaultKind::DropDetection => write!(f, "drop@{}", ev.frame)?,
-                FaultKind::DuplicateDetection => write!(f, "dup@{}", ev.frame)?,
-                FaultKind::Misorder => write!(f, "misorder@{}", ev.frame)?,
-            }
-        }
-        Ok(())
-    }
-}
-
-impl FromStr for FaultPlan {
-    type Err = String;
-
-    fn from_str(s: &str) -> Result<FaultPlan, String> {
-        let mut plan = FaultPlan::new();
-        for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
-            let (kind_s, rest) = part
-                .split_once('@')
-                .ok_or_else(|| format!("fault '{part}': expected kind@frame[:arg]"))?;
-            let (frame_s, arg) = match rest.split_once(':') {
-                Some((fr, a)) => (fr, Some(a.trim())),
-                None => (rest, None),
-            };
-            let frame: u64 = frame_s
-                .trim()
-                .parse()
-                .map_err(|_| format!("fault '{part}': bad frame index '{frame_s}'"))?;
-            let (kind, count) = match kind_s.trim() {
-                "panic" => {
-                    let count = match arg {
-                        None => 1,
-                        Some(a) => a
-                            .trim_start_matches('x')
-                            .parse()
-                            .map_err(|_| format!("fault '{part}': bad repeat count '{a}'"))?,
-                    };
-                    (FaultKind::Panic, count)
-                }
-                "stall" => {
-                    let a = arg
-                        .ok_or_else(|| format!("fault '{part}': stall needs ':<millis>ms'"))?;
-                    let ms: u64 = a
-                        .trim_end_matches("ms")
-                        .parse()
-                        .map_err(|_| format!("fault '{part}': bad stall duration '{a}'"))?;
-                    (FaultKind::Stall(Duration::from_millis(ms)), 1)
-                }
-                "drop" => (FaultKind::DropDetection, 1),
-                "dup" => (FaultKind::DuplicateDetection, 1),
-                "misorder" => (FaultKind::Misorder, 1),
-                other => {
-                    return Err(format!(
-                        "fault '{part}': unknown kind '{other}' \
-                         (panic | stall | drop | dup | misorder)"
-                    ))
-                }
-            };
-            plan = plan.with_repeats(frame, kind, count);
-        }
-        Ok(plan)
-    }
-}
-
-/// Wraps any [`InferBackend`] and replays a [`FaultPlan`] around it.
-pub struct FaultInjector {
-    inner: Box<dyn InferBackend>,
-    plan: FaultPlan,
-    label: String,
-}
-
-impl FaultInjector {
-    /// Wrap `inner`, injecting `plan`'s events as their frames stream by.
-    pub fn new(inner: Box<dyn InferBackend>, plan: FaultPlan) -> FaultInjector {
-        let label = format!("faulty-{}", inner.name());
-        FaultInjector { inner, plan, label }
-    }
 
     /// Events not yet (fully) fired.
     pub fn pending(&self) -> usize {
-        self.plan.events.iter().filter(|ev| ev.remaining > 0).count()
-    }
-}
-
-impl InferBackend for FaultInjector {
-    fn name(&self) -> &str {
-        &self.label
+        self.events.iter().filter(|ev| ev.remaining > 0).count()
     }
 
-    fn input_dims(&self) -> (usize, usize, usize) {
-        self.inner.input_dims()
-    }
-
-    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
-        let ids: Vec<u64> = frames.iter().map(|f| f.id).collect();
-
-        // Pre-inference events: all stalls for this batch first (so a
-        // stall+panic combination stalls before it dies), then at most
-        // one panic per attempt — retries re-enter here and consume the
-        // next scripted repetition.
+    /// Consume this attempt's pre-inference events for a batch holding
+    /// `ids`: the total stall to sleep, and at most one armed panic (the
+    /// triggering frame). Retries re-enter here and consume the next
+    /// scripted repetition. Shared between [`FaultInjector`] and the
+    /// registry tenant workers (which drive a plan directly).
+    pub fn take_pre(&mut self, ids: &[u64]) -> (Duration, Option<u64>) {
         let mut stall = Duration::ZERO;
         let mut panic_frame: Option<u64> = None;
-        for ev in self.plan.events.iter_mut() {
+        for ev in self.events.iter_mut() {
             if ev.remaining == 0 || !ids.contains(&ev.frame) {
                 continue;
             }
@@ -248,17 +180,13 @@ impl InferBackend for FaultInjector {
                 _ => {}
             }
         }
-        if stall > Duration::ZERO {
-            std::thread::sleep(stall);
-        }
-        if let Some(frame) = panic_frame {
-            panic!("injected fault: panic at frame {frame}");
-        }
+        (stall, panic_frame)
+    }
 
-        let mut dets = self.inner.infer_batch(frames);
-
-        // Post-inference events mutate the detection stream.
-        for ev in self.plan.events.iter_mut() {
+    /// Consume this batch's post-inference events, mutating the
+    /// detection stream (drop / duplicate / misorder).
+    pub fn apply_post(&mut self, ids: &[u64], dets: &mut Vec<Detection>) {
+        for ev in self.events.iter_mut() {
             if ev.remaining == 0 || !ids.contains(&ev.frame) {
                 continue;
             }
@@ -291,6 +219,168 @@ impl InferBackend for FaultInjector {
                 _ => {}
             }
         }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                f.write_str(";")?;
+            }
+            // `kind@frame`, then comma-separated args (`x3`, `50ms`,
+            // `model=a`) after a colon — the FromStr grammar in reverse.
+            let kind = match ev.kind {
+                FaultKind::Panic => "panic",
+                FaultKind::Stall(_) => "stall",
+                FaultKind::DropDetection => "drop",
+                FaultKind::DuplicateDetection => "dup",
+                FaultKind::Misorder => "misorder",
+            };
+            write!(f, "{kind}@{}", ev.frame)?;
+            let mut args: Vec<String> = Vec::new();
+            match ev.kind {
+                FaultKind::Panic if ev.remaining != 1 => args.push(format!("x{}", ev.remaining)),
+                FaultKind::Stall(d) => args.push(format!("{}ms", d.as_millis())),
+                _ => {}
+            }
+            if let Some(m) = &ev.model {
+                args.push(format!("model={m}"));
+            }
+            if !args.is_empty() {
+                write!(f, ":{}", args.join(","))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new();
+        for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind_s, rest) = part
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{part}': expected kind@frame[:args]"))?;
+            let (frame_s, argstr) = match rest.split_once(':') {
+                Some((fr, a)) => (fr, Some(a.trim())),
+                None => (rest, None),
+            };
+            let frame: u64 = frame_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault '{part}': bad frame index '{frame_s}'"))?;
+            // Args are comma-separated; `model=X` may ride along with the
+            // kind-specific arg (`panic@4:x3,model=a`).
+            let mut model: Option<String> = None;
+            let mut arg: Option<&str> = None;
+            for a in argstr.iter().flat_map(|s| s.split(',')).map(str::trim) {
+                if let Some(m) = a.strip_prefix("model=") {
+                    if m.is_empty() {
+                        return Err(format!("fault '{part}': empty model name"));
+                    }
+                    model = Some(m.to_string());
+                } else if arg.is_none() {
+                    arg = Some(a);
+                } else {
+                    return Err(format!("fault '{part}': too many args"));
+                }
+            }
+            let (kind, count) = match kind_s.trim() {
+                "panic" => {
+                    let count = match arg {
+                        None => 1,
+                        Some(a) => a
+                            .trim_start_matches('x')
+                            .parse()
+                            .map_err(|_| format!("fault '{part}': bad repeat count '{a}'"))?,
+                    };
+                    (FaultKind::Panic, count)
+                }
+                "stall" => {
+                    let a = arg
+                        .ok_or_else(|| format!("fault '{part}': stall needs ':<millis>ms'"))?;
+                    let ms: u64 = a
+                        .trim_end_matches("ms")
+                        .parse()
+                        .map_err(|_| format!("fault '{part}': bad stall duration '{a}'"))?;
+                    (FaultKind::Stall(Duration::from_millis(ms)), 1)
+                }
+                "drop" | "dup" | "misorder" if arg.is_some() => {
+                    return Err(format!(
+                        "fault '{part}': '{}' takes no arg besides model=",
+                        kind_s.trim()
+                    ))
+                }
+                "drop" => (FaultKind::DropDetection, 1),
+                "dup" => (FaultKind::DuplicateDetection, 1),
+                "misorder" => (FaultKind::Misorder, 1),
+                other => {
+                    return Err(format!(
+                        "fault '{part}': unknown kind '{other}' \
+                         (panic | stall | drop | dup | misorder)"
+                    ))
+                }
+            };
+            plan = plan.with_repeats(frame, kind, count);
+            if let Some(m) = model {
+                plan = plan.targeting(&m);
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Wraps any [`InferBackend`] and replays a [`FaultPlan`] around it.
+pub struct FaultInjector {
+    inner: Box<dyn InferBackend>,
+    plan: FaultPlan,
+    label: String,
+}
+
+impl FaultInjector {
+    /// Wrap `inner`, injecting `plan`'s events as their frames stream by.
+    pub fn new(inner: Box<dyn InferBackend>, plan: FaultPlan) -> FaultInjector {
+        let label = format!("faulty-{}", inner.name());
+        FaultInjector { inner, plan, label }
+    }
+
+    /// Events not yet (fully) fired.
+    pub fn pending(&self) -> usize {
+        self.plan.pending()
+    }
+}
+
+impl InferBackend for FaultInjector {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn input_dims(&self) -> (usize, usize, usize) {
+        self.inner.input_dims()
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        let ids: Vec<u64> = frames.iter().map(|f| f.id).collect();
+
+        // Pre-inference events: all stalls for this batch first (so a
+        // stall+panic combination stalls before it dies), then at most
+        // one panic per attempt — retries re-enter here and consume the
+        // next scripted repetition.
+        let (stall, panic_frame) = self.plan.take_pre(&ids);
+        if stall > Duration::ZERO {
+            std::thread::sleep(stall);
+        }
+        if let Some(frame) = panic_frame {
+            panic!("injected fault: panic at frame {frame}");
+        }
+
+        let mut dets = self.inner.infer_batch(frames);
+
+        // Post-inference events mutate the detection stream.
+        self.plan.apply_post(&ids, &mut dets);
         dets
     }
 }
@@ -323,6 +413,7 @@ mod tests {
         ids.iter()
             .map(|&id| Frame {
                 id,
+                model: 0,
                 levels: vec![],
                 created: Instant::now(),
                 deadline: None,
@@ -340,11 +431,37 @@ mod tests {
     }
 
     #[test]
+    fn model_targeted_grammar_round_trips() {
+        let spec = "panic@8:model=a;panic@9:x3,model=b;stall@16:50ms,model=a;drop@24:model=b";
+        let plan: FaultPlan = spec.parse().unwrap();
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.to_string(), spec);
+        assert_eq!(plan.to_string().parse::<FaultPlan>().unwrap(), plan);
+        assert_eq!(plan.events()[0].model.as_deref(), Some("a"));
+        assert_eq!(plan.events()[1].remaining, 3);
+        assert_eq!(plan.events()[1].model.as_deref(), Some("b"));
+    }
+
+    #[test]
+    fn for_model_filters_targeted_events() {
+        let plan: FaultPlan = "panic@1:model=a;drop@2:model=b;stall@3:5ms".parse().unwrap();
+        let a = plan.for_model("a");
+        assert_eq!(a.len(), 2, "untargeted events apply to every model");
+        assert!(a.events().iter().all(|ev| ev.model.as_deref() != Some("b")));
+        let c = plan.for_model("c");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.events()[0].kind, FaultKind::Stall(Duration::from_millis(5)));
+    }
+
+    #[test]
     fn grammar_rejects_malformed() {
         assert!("panic".parse::<FaultPlan>().is_err());
         assert!("panic@x".parse::<FaultPlan>().is_err());
         assert!("stall@4".parse::<FaultPlan>().is_err());
         assert!("explode@4".parse::<FaultPlan>().is_err());
+        assert!("panic@4:model=".parse::<FaultPlan>().is_err());
+        assert!("drop@4:x3".parse::<FaultPlan>().is_err());
+        assert!("panic@4:x3,x4".parse::<FaultPlan>().is_err());
     }
 
     #[test]

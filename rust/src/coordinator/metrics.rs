@@ -121,7 +121,9 @@ pub struct FaultRecord {
     pub batch: u64,
     /// Frame the fault is attributed to, when identifiable.
     pub frame: Option<u64>,
-    /// Fault class: `panic`, `mismatch`, `fallback`, `source`.
+    /// Fault class: `panic`, `error`, `mismatch`, `fallback`, `source`
+    /// — plus, on the registry serve path, `restart`, `quarantine`,
+    /// `liveness`, and `reload`.
     pub kind: String,
     /// Human-readable detail (panic message, mismatch description).
     pub detail: String,
@@ -273,6 +275,167 @@ impl ServeReport {
     }
 }
 
+/// Per-tenant slice of a multi-model serve run: one model's SLO
+/// accounting, fault log, lifecycle counters, and supervisor verdict.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    /// Registry name of the model.
+    pub name: String,
+    /// Backend label (runner label + origin tag).
+    pub backend: String,
+    /// Supervisor verdict: `drained` (served to completion) or
+    /// `quarantined` (restart budget exhausted, tenant closed).
+    pub state: String,
+    /// Why the tenant (or its replacement artifact) was quarantined.
+    pub quarantine_reason: Option<String>,
+    /// Worker generations started beyond the first.
+    pub restarts: u64,
+    /// Times the supervisor flagged a heartbeat past the liveness
+    /// deadline.
+    pub liveness_breaches: u64,
+    /// Successful hot reloads (artifact swapped in between batches).
+    pub reloads: u64,
+    /// Reloads rejected during off-path validation (rolled back).
+    pub reload_failures: u64,
+    /// Batches inferred for this tenant.
+    pub batches: u64,
+    /// Per-tenant SLO accounting; the identity
+    /// `admitted == shed + expired + failed + completed` holds per
+    /// tenant, not just in aggregate.
+    pub slo: SloCounters,
+    /// End-to-end latency of this tenant's completed frames.
+    pub latency: LatencyHistogram,
+    /// This tenant's recorded faults (bounded like the single-model log).
+    pub faults: Vec<FaultRecord>,
+    /// Completed detections in completion order (bit-exactness checks).
+    pub detections: Vec<super::pipeline::Detection>,
+}
+
+impl TenantReport {
+    /// JSON form, mirroring [`ServeReport::to_json`]'s field names where
+    /// the concepts coincide.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let faults: Vec<Json> = self.faults.iter().map(|f| f.to_json()).collect();
+        let mut j = Json::obj()
+            .set("name", self.name.as_str())
+            .set("backend", self.backend.as_str())
+            .set("state", self.state.as_str())
+            .set("restarts", self.restarts as i64)
+            .set("liveness_breaches", self.liveness_breaches as i64)
+            .set("reloads", self.reloads as i64)
+            .set("reload_failures", self.reload_failures as i64)
+            .set("batches", self.batches as i64)
+            .set("latency_mean_us", self.latency.mean_us())
+            .set("latency_p99_us", self.latency.percentile_us(99.0) as i64)
+            .set("slo", self.slo.to_json())
+            .set("faults", faults);
+        if let Some(reason) = &self.quarantine_reason {
+            j = j.set("quarantine_reason", reason.as_str());
+        }
+        j
+    }
+}
+
+/// Final report of a multi-model registry serve run
+/// ([`serve_registry`](super::supervisor::serve_registry)): one
+/// [`TenantReport`] per registered model plus run-wide timing.
+#[derive(Clone, Debug)]
+pub struct MultiServeReport {
+    /// Wall-clock seconds for the whole run (all tenants concurrent).
+    pub wall_s: f64,
+    /// Admission policy every tenant ran under.
+    pub policy: String,
+    /// One entry per registered model, in registration order.
+    pub tenants: Vec<TenantReport>,
+}
+
+impl MultiServeReport {
+    /// True when every tenant's SLO identity holds.
+    pub fn accounted(&self) -> bool {
+        self.tenants.iter().all(|t| t.slo.accounted())
+    }
+
+    /// Completed frames across all tenants.
+    pub fn total_completed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.slo.completed).sum()
+    }
+
+    /// Look up one tenant's report by registry name.
+    pub fn tenant(&self, name: &str) -> Option<&TenantReport> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    /// Human-readable per-tenant summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "multi-model serve: {} tenants, policy={}, wall={:.3}s, completed={}\n",
+            self.tenants.len(),
+            self.policy,
+            self.wall_s,
+            self.total_completed(),
+        ));
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "tenant {:<10} [{}] backend={} restarts={} reloads={}+{}fail \
+                 liveness_breaches={}\n",
+                t.name,
+                t.state,
+                t.backend,
+                t.restarts,
+                t.reloads,
+                t.reload_failures,
+                t.liveness_breaches,
+            ));
+            if let Some(reason) = &t.quarantine_reason {
+                out.push_str(&format!("  quarantine: {reason}\n"));
+            }
+            out.push_str(&format!(
+                "  slo: admitted={} shed={} expired={} failed={} completed={} \
+                 retried={} faults={} deadline_misses={}\n",
+                t.slo.admitted,
+                t.slo.shed,
+                t.slo.expired,
+                t.slo.failed,
+                t.slo.completed,
+                t.slo.retried,
+                t.slo.faults,
+                t.slo.deadline_misses,
+            ));
+            out.push_str(&format!(
+                "  latency: mean={:.1}us p99<={}us over {} batches\n",
+                t.latency.mean_us(),
+                t.latency.percentile_us(99.0),
+                t.batches,
+            ));
+            for f in &t.faults {
+                out.push_str(&format!(
+                    "  fault[batch {}{}] {}: {}\n",
+                    f.batch,
+                    f.frame.map(|id| format!(", frame {id}")).unwrap_or_default(),
+                    f.kind,
+                    f.detail
+                ));
+            }
+        }
+        out
+    }
+
+    /// Full JSON schema — a superset of [`render`](Self::render), same
+    /// contract as [`ServeReport::to_json`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let tenants: Vec<Json> = self.tenants.iter().map(|t| t.to_json()).collect();
+        Json::obj()
+            .set("wall_s", self.wall_s)
+            .set("policy", self.policy.as_str())
+            .set("total_completed", self.total_completed() as i64)
+            .set("accounted", self.accounted())
+            .set("tenants", tenants)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,6 +510,56 @@ mod tests {
         assert!(json.contains("\"policy\":\"shed\""));
         assert!(json.contains("\"admitted\":12"));
         assert!(json.contains("\"faults\":["));
+    }
+
+    #[test]
+    fn multi_report_renders_and_jsons_per_tenant() {
+        let mut lat = LatencyHistogram::new();
+        lat.record_us(250);
+        let tenant = TenantReport {
+            name: "alpha".into(),
+            backend: "graph-x".into(),
+            state: "quarantined".into(),
+            quarantine_reason: Some("restart budget exhausted".into()),
+            restarts: 3,
+            liveness_breaches: 1,
+            reloads: 1,
+            reload_failures: 1,
+            batches: 4,
+            slo: SloCounters {
+                admitted: 10,
+                shed: 2,
+                expired: 1,
+                failed: 3,
+                completed: 4,
+                ..Default::default()
+            },
+            latency: lat,
+            faults: vec![],
+            detections: vec![],
+        };
+        let multi = MultiServeReport {
+            wall_s: 1.5,
+            policy: "shed".into(),
+            tenants: vec![tenant],
+        };
+        assert!(multi.accounted());
+        assert_eq!(multi.total_completed(), 4);
+        assert!(multi.tenant("alpha").is_some());
+        assert!(multi.tenant("beta").is_none());
+        let text = multi.render();
+        assert!(text.contains("tenant alpha"));
+        assert!(text.contains("quarantine: restart budget exhausted"));
+        assert!(text.contains("restarts=3"));
+        let json = multi.to_json().to_string();
+        for key in [
+            "\"tenants\":[",
+            "\"quarantine_reason\"",
+            "\"restarts\":3",
+            "\"accounted\":true",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
     }
 
     /// Satellite: everything `render()` prints must be in the JSON too.

@@ -15,6 +15,18 @@
 //! fault-injection layer ([`fault::FaultPlan`]) scripts failures for the
 //! chaos suite. tokio is unavailable offline; std threads + a crate-local
 //! bounded queue provide the semantics this pipeline depth needs.
+//!
+//! Multi-model serving: a [`registry::ModelRegistry`] of named tenants
+//! (each a compiled graph runner behind a hot-swappable
+//! [`registry::RunnerCell`]) served concurrently by
+//! [`supervisor::serve_registry`] — per-tenant worker lifecycle with
+//! restart budgets, liveness monitoring, quarantine, and mid-run
+//! artifact hot reload.
+
+// The serve path must never die on a recoverable failure: forbid
+// `unwrap`/`expect` in non-test coordinator code (poison is absorbed,
+// panics are caught and accounted — see docs/SERVING.md).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod admission;
 pub mod batcher;
@@ -23,15 +35,21 @@ pub mod metrics;
 pub mod parallel;
 pub mod pipeline;
 pub mod queue;
+pub mod registry;
 pub mod server;
 pub mod source;
+pub mod supervisor;
 
 pub use admission::{Admit, AdmissionController, AdmissionPolicy};
 pub use batcher::{BatchOutcome, Batcher};
 pub use fault::{FaultInjector, FaultKind, FaultPlan};
-pub use metrics::{FaultRecord, ServeReport, SloCounters, StageMetrics};
+pub use metrics::{
+    FaultRecord, MultiServeReport, ServeReport, SloCounters, StageMetrics, TenantReport,
+};
 pub use parallel::ParallelCpuBackend;
 pub use pipeline::{Frame, GraphBackend, InferBackend};
 pub use queue::{BoundedQueue, PopResult, PushError};
+pub use registry::{ModelRegistry, RunnerCell, Tenant, TenantState};
 pub use server::{serve, serve_with_fallback, ServeConfig};
 pub use source::FrameSource;
+pub use supervisor::{serve_registry, MultiServeConfig, ReloadAt};

@@ -16,6 +16,8 @@ use super::pipeline::{Detection, Frame, InferBackend};
 use crate::engine::EngineConfig;
 use crate::models::layer::ModelSpec;
 use crate::models::{CpuRunner, ModelWeights};
+use crate::runtime::RuntimeError;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -26,14 +28,32 @@ enum Job {
     Stop,
 }
 
+/// One chunk's outcome: detections, or the panic text of the task that
+/// killed it (the worker itself survives and keeps pulling jobs).
+type ChunkResult = (usize, Result<Vec<Detection>, String>);
+
 /// A pool of `workers` threads each running a [`CpuRunner`].
+///
+/// Robustness contract (ISSUE 8): a panicking or dead worker is a
+/// per-batch [`RuntimeError`] from
+/// [`try_infer_batch`](InferBackend::try_infer_batch) — never a caller
+/// panic — and dead worker threads are respawned from the stored
+/// model/weights/config before the next batch, so the pool is
+/// restartable for the life of the process.
 pub struct ParallelCpuBackend {
     label: String,
     dims: (usize, usize, usize),
     job_tx: Sender<Job>,
-    res_rx: Receiver<(usize, Vec<Detection>)>,
+    res_tx: Sender<ChunkResult>,
+    res_rx: Receiver<ChunkResult>,
+    job_rx: Arc<Mutex<Receiver<Job>>>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
+    // Construction state kept so dead workers can be respawned.
+    model: ModelSpec,
+    weights: ModelWeights,
+    config: EngineConfig,
+    respawns: u64,
 }
 
 impl ParallelCpuBackend {
@@ -57,52 +77,120 @@ impl ParallelCpuBackend {
         }
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let (res_tx, res_rx) = channel::<(usize, Vec<Detection>)>();
+        let (res_tx, res_rx) = channel::<ChunkResult>();
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let runner = CpuRunner::new(model.clone(), weights.clone(), config.clone())?;
-            let rx = Arc::clone(&job_rx);
-            let tx = res_tx.clone();
-            handles.push(std::thread::spawn(move || loop {
-                let job = {
-                    let guard = rx.lock().expect("job queue poisoned");
-                    guard.recv()
-                };
-                match job {
-                    Ok(Job::Chunk(start, frames)) => {
-                        // Run the chunk *as a batch* through the fused
-                        // runner (arena reuse across its frames).
-                        let levels: Vec<&[i64]> =
-                            frames.iter().map(|f| f.levels.as_slice()).collect();
-                        let heads = runner.infer_batch(&levels);
-                        let dets: Vec<Detection> = frames
-                            .iter()
-                            .zip(&heads)
-                            .map(|(f, head)| Detection {
-                                frame_id: f.id,
-                                cell: runner.decode(head),
-                            })
-                            .collect();
-                        if tx.send((start, dets)).is_err() {
-                            return;
-                        }
-                    }
-                    Ok(Job::Stop) | Err(_) => return,
-                }
-            }));
+            handles.push(spawn_worker(
+                &model,
+                &weights,
+                &config,
+                Arc::clone(&job_rx),
+                res_tx.clone(),
+            )?);
         }
         Ok(ParallelCpuBackend {
             label: format!("cpu-parallel-{workers}x-{config}"),
             dims: model.input,
             job_tx,
+            res_tx,
             res_rx,
+            job_rx,
             handles,
             workers,
+            model,
+            weights,
+            config,
+            respawns: 0,
         })
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Times a dead worker thread has been replaced.
+    pub fn respawns(&self) -> u64 {
+        self.respawns
+    }
+
+    /// Replace any worker threads that have exited (a panic that escaped
+    /// the chunk supervisor, or an earlier channel teardown) so the pool
+    /// is back at full strength before the next batch.
+    fn respawn_dead(&mut self) -> Result<(), RuntimeError> {
+        for h in self.handles.iter_mut() {
+            if !h.is_finished() {
+                continue;
+            }
+            let fresh = spawn_worker(
+                &self.model,
+                &self.weights,
+                &self.config,
+                Arc::clone(&self.job_rx),
+                self.res_tx.clone(),
+            )
+            .map_err(|e| RuntimeError::new(e).context("respawning dead pool worker"))?;
+            let dead = std::mem::replace(h, fresh);
+            let _ = dead.join();
+            self.respawns += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Spawn one pool worker: builds its own runner (calibration is
+/// deterministic, so every worker is bit-identical), then pulls chunk
+/// jobs until the pool is dropped. A panicking chunk task is caught and
+/// reported as that chunk's result — the worker thread survives it.
+fn spawn_worker(
+    model: &ModelSpec,
+    weights: &ModelWeights,
+    config: &EngineConfig,
+    job_rx: Arc<Mutex<Receiver<Job>>>,
+    res_tx: Sender<ChunkResult>,
+) -> Result<JoinHandle<()>, String> {
+    let runner = CpuRunner::new(model.clone(), weights.clone(), config.clone())?;
+    Ok(std::thread::spawn(move || loop {
+        let job = {
+            // Absorb poison: a sibling that died holding the lock must
+            // not wedge the remaining workers.
+            let guard = job_rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        match job {
+            Ok(Job::Chunk(start, frames)) => {
+                // Run the chunk *as a batch* through the fused runner
+                // (arena reuse across its frames), supervised so a
+                // panicking kernel becomes this chunk's error result.
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    let levels: Vec<&[i64]> =
+                        frames.iter().map(|f| f.levels.as_slice()).collect();
+                    let heads = runner.infer_batch(&levels);
+                    frames
+                        .iter()
+                        .zip(&heads)
+                        .map(|(f, head)| Detection {
+                            frame_id: f.id,
+                            cell: runner.decode(head),
+                        })
+                        .collect::<Vec<Detection>>()
+                }))
+                .map_err(|payload| worker_panic_text(payload.as_ref()));
+                if res_tx.send((start, outcome)).is_err() {
+                    return;
+                }
+            }
+            Ok(Job::Stop) | Err(_) => return,
+        }
+    }))
+}
+
+fn worker_panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -116,31 +204,68 @@ impl InferBackend for ParallelCpuBackend {
     }
 
     fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection> {
+        // Infallible form for direct callers: a pool failure degrades to
+        // an empty result (the serve supervisor records the mismatch and
+        // fails only the affected frames) instead of panicking.
+        self.try_infer_batch(frames).unwrap_or_default()
+    }
+
+    fn try_infer_batch(&mut self, frames: &[Frame]) -> Result<Vec<Detection>, RuntimeError> {
         if frames.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
+        self.respawn_dead()?;
+        // Discard any stale results a previously failed batch left behind
+        // so chunk offsets can never cross batch boundaries.
+        while self.res_rx.try_recv().is_ok() {}
         // One contiguous chunk per worker: each worker executes its share
         // as a batch (fused arenas reused across its frames) instead of
         // pulling frames one at a time.
         let chunk = frames.len().div_ceil(self.workers);
         let mut sent = 0usize;
         for (i, c) in frames.chunks(chunk).enumerate() {
-            self.job_tx
-                .send(Job::Chunk(i * chunk, c.to_vec()))
-                .expect("worker pool gone");
+            if self.job_tx.send(Job::Chunk(i * chunk, c.to_vec())).is_err() {
+                return Err(RuntimeError::new(
+                    "job channel disconnected: every pool worker has exited".to_string(),
+                )
+                .context("parallel backend dispatch"));
+            }
             sent += 1;
         }
         let mut slots: Vec<Option<Detection>> = vec![None; frames.len()];
+        let mut worker_panic: Option<String> = None;
         for _ in 0..sent {
-            let (start, dets) = self.res_rx.recv().expect("worker died mid-batch");
-            for (j, det) in dets.into_iter().enumerate() {
-                slots[start + j] = Some(det);
+            match self.res_rx.recv() {
+                Ok((start, Ok(dets))) => {
+                    for (j, det) in dets.into_iter().enumerate() {
+                        slots[start + j] = Some(det);
+                    }
+                }
+                Ok((start, Err(msg))) => {
+                    // The worker survived a panicking chunk task; keep
+                    // the first panic's context for the error.
+                    if worker_panic.is_none() {
+                        worker_panic = Some(format!("chunk at frame offset {start}: {msg}"));
+                    }
+                }
+                Err(_) => {
+                    // All result senders dropped mid-batch: workers died
+                    // without reporting. respawn_dead() restores the pool
+                    // on the next call.
+                    return Err(RuntimeError::new(
+                        "result channel disconnected: worker died mid-batch".to_string(),
+                    )
+                    .context("parallel backend collect"));
+                }
             }
+        }
+        if let Some(msg) = worker_panic {
+            return Err(RuntimeError::new(msg).context("pool worker panicked"));
         }
         // A missing slot (worker returned short) yields a shorter result
         // instead of a panic: the serve supervisor records the mismatch
         // as a fault and fails only the affected frames.
-        slots.into_iter().flatten().collect()
+        Ok(slots.into_iter().flatten().collect())
     }
 }
 
@@ -170,6 +295,7 @@ mod tests {
         (0..n)
             .map(|id| Frame {
                 id: id as u64,
+                model: 0,
                 levels: rng.quant_unsigned_vec(4, c * h * w),
                 created: Instant::now(),
                 deadline: None,
@@ -232,6 +358,42 @@ mod tests {
         .unwrap();
         let fs = frames(5, model.input);
         assert_eq!(serial.infer_batch(&fs), pool.infer_batch(&fs));
+    }
+
+    #[test]
+    fn worker_panic_is_an_error_with_context_and_pool_recovers() {
+        // Regression (ISSUE 8): a panicking worker task used to kill the
+        // caller via `expect("worker died mid-batch")`. A malformed frame
+        // (empty levels) panics the runner inside the worker; the pool
+        // must return a RuntimeError naming the panic and stay usable.
+        let model = ultranet_tiny();
+        let weights = random_weights(&model, 25);
+        let mut pool = ParallelCpuBackend::new(
+            model.clone(),
+            weights,
+            EngineKind::HiKonv(Multiplier::CPU32),
+            2,
+        )
+        .unwrap();
+        let bad = vec![Frame {
+            id: 0,
+            model: 0,
+            levels: vec![], // wrong length: the kernel's input copy panics
+            created: Instant::now(),
+            deadline: None,
+        }];
+        let err = pool
+            .try_infer_batch(&bad)
+            .expect_err("malformed frame must surface as an error");
+        assert!(
+            err.to_string().contains("pool worker panicked"),
+            "error must carry the worker's panic context, got: {err}"
+        );
+        // The same pool serves clean batches afterwards (restartable).
+        let fs = frames(4, model.input);
+        assert_eq!(pool.try_infer_batch(&fs).unwrap().len(), 4);
+        // The infallible form degrades to empty instead of panicking.
+        assert!(pool.infer_batch(&bad).is_empty());
     }
 
     #[test]

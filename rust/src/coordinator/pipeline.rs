@@ -6,6 +6,11 @@ use std::time::Instant;
 #[derive(Clone, Debug)]
 pub struct Frame {
     pub id: u64,
+    /// Tenant index in the multi-model registry serve path
+    /// ([`crate::coordinator::registry`]); `0` on the single-model path.
+    /// Tagging frames at the source keeps per-model SLO accounting and
+    /// fault attribution honest even if queues were ever shared.
+    pub model: u32,
     /// Quantized activation levels, `[c][h][w]` row-major.
     pub levels: Vec<i64>,
     /// Enqueue timestamp (latency measurement origin).
@@ -35,6 +40,17 @@ pub trait InferBackend {
     fn input_dims(&self) -> (usize, usize, usize);
     /// Run a batch, returning one detection per frame (in order).
     fn infer_batch(&mut self, frames: &[Frame]) -> Vec<Detection>;
+    /// Fallible form the serve loop prefers: backends that can detect
+    /// their own infrastructure failures (e.g. a dead pool worker)
+    /// return a [`RuntimeError`](crate::runtime::RuntimeError) carrying
+    /// the failure context instead of panicking the caller. The default
+    /// just delegates to [`infer_batch`](Self::infer_batch).
+    fn try_infer_batch(
+        &mut self,
+        frames: &[Frame],
+    ) -> Result<Vec<Detection>, crate::runtime::RuntimeError> {
+        Ok(self.infer_batch(frames))
+    }
 }
 
 /// CPU backend over the model runner (baseline or HiKonv engines).
@@ -178,7 +194,7 @@ impl InferBackend for PjrtBackend {
                 let outs = self
                     .model
                     .run_i32(&[(input, vec![c as i64, h as i64, w as i64])])
-                    .expect("pjrt execution");
+                    .unwrap_or_else(|e| panic!("pjrt execution failed: {e}"));
                 Detection {
                     frame_id: f.id,
                     cell: self.decode(&outs[0]),
@@ -203,6 +219,7 @@ mod tests {
         let frames: Vec<Frame> = (0..3)
             .map(|id| Frame {
                 id,
+                model: 0,
                 levels: vec![(id as i64) % 16; c * h * w],
                 created: Instant::now(),
                 deadline: None,

@@ -1,0 +1,508 @@
+//! Multi-model tenant registry: named, independently-served models over
+//! compiled [`GraphRunner`]s, with hot artifact reload and quarantine.
+//!
+//! Each registered tenant owns an `Arc<GraphRunner>` behind a
+//! [`RunnerCell`] — the atomic swap point hot reload uses. Workers on
+//! the serve path snapshot the `Arc` once per batch, so
+//! [`ModelRegistry::reload`] swapping the cell between batches can never
+//! drop or double-serve a frame: frames live in the tenant's queue,
+//! independent of which runner instance decodes them.
+//!
+//! Construction is cached by **(graph + weights + config fingerprint,
+//! host signature)** — registering the same model twice (or the same
+//! model under two tenant names) plans, packs, and calibrates once
+//! (observable via the [`crate::packing::weight_pack_words`] counter).
+//!
+//! Reload safety contract:
+//!
+//! * The replacement artifact is read, checksum-verified, instantiated,
+//!   and **probe-inferred off the serve path** before the swap. Any
+//!   failure — corrupt file, version/host mismatch that fails re-plan,
+//!   changed input dims, a panicking probe — rolls back to the serving
+//!   runner and records the artifact as quarantined with the reason.
+//!   The serve path never observes a half-loaded model.
+//! * Tenants whose workers exhaust the supervisor's restart budget are
+//!   quarantined (`TenantState::Quarantined`): their queue closes, the
+//!   remaining frames are accounted, and other tenants are undisturbed.
+
+use crate::artifact::{expected_host, fingerprint, load_runner, LoadMode};
+use crate::engine::EngineConfig;
+use crate::models::graph::GraphSpec;
+use crate::models::GraphRunner;
+use crate::quant::QTensor;
+use crate::runtime::RuntimeError;
+use std::collections::HashMap;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// The hot-swap point: the tenant's current runner behind a mutex.
+///
+/// Readers ([`get`](Self::get)) clone the `Arc` — a pointer copy under a
+/// short lock — once per batch; [`swap`](Self::swap) installs a fully
+/// validated replacement. In-flight batches finish on the runner they
+/// snapshotted; the next batch sees the new one.
+#[derive(Debug)]
+pub struct RunnerCell {
+    inner: Mutex<Arc<GraphRunner>>,
+}
+
+impl RunnerCell {
+    /// Wrap an initial runner.
+    pub fn new(runner: Arc<GraphRunner>) -> RunnerCell {
+        RunnerCell {
+            inner: Mutex::new(runner),
+        }
+    }
+
+    /// Snapshot the current runner (cheap: one `Arc` clone).
+    pub fn get(&self) -> Arc<GraphRunner> {
+        // Absorb poison: a panicking reader can't wedge the cell.
+        Arc::clone(&self.inner.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Atomically install `runner` as the current snapshot.
+    pub fn swap(&self, runner: Arc<GraphRunner>) {
+        *self.inner.lock().unwrap_or_else(|e| e.into_inner()) = runner;
+    }
+}
+
+/// Lifecycle state of a registered tenant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TenantState {
+    /// Registered and eligible to serve.
+    Serving,
+    /// Closed by the supervisor (restart budget exhausted) or operator;
+    /// the reason lives in [`Tenant::quarantine_reason`].
+    Quarantined,
+}
+
+impl fmt::Display for TenantState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TenantState::Serving => f.write_str("serving"),
+            TenantState::Quarantined => f.write_str("quarantined"),
+        }
+    }
+}
+
+/// One named model in the registry.
+#[derive(Debug)]
+pub struct Tenant {
+    /// Registry name (the `a` in `--models a=path`).
+    pub name: String,
+    /// The hot-swap cell holding the tenant's current runner.
+    pub cell: Arc<RunnerCell>,
+    /// Construction origin tag for report labels (`graph` | `artifact`).
+    pub origin: String,
+    /// Lifecycle state.
+    pub state: TenantState,
+    /// Why the tenant was quarantined (None while serving).
+    pub quarantine_reason: Option<String>,
+    /// Last rejected replacement artifact: `(path, reason)`. The tenant
+    /// keeps serving its previous runner — this records the rollback.
+    pub artifact_quarantine: Option<(String, String)>,
+    /// Successful hot reloads.
+    pub reloads: u64,
+    /// Reloads rejected during off-path validation.
+    pub reload_failures: u64,
+}
+
+impl Tenant {
+    /// Report label: origin + graph name + kernel-plan label of the
+    /// currently installed runner.
+    pub fn backend_label(&self) -> String {
+        let runner = self.cell.get();
+        format!("{}-{}-{}", self.origin, runner.graph().name, runner.label())
+    }
+
+    /// The quarantine reason to surface in reports: a tenant-level
+    /// quarantine wins; otherwise a rejected replacement artifact's.
+    pub fn surfaced_quarantine(&self) -> Option<String> {
+        if let Some(r) = &self.quarantine_reason {
+            return Some(r.clone());
+        }
+        self.artifact_quarantine
+            .as_ref()
+            .map(|(path, reason)| format!("artifact {path}: {reason}"))
+    }
+}
+
+/// Registry of named tenants sharing one engine configuration and one
+/// plan/pack cache.
+pub struct ModelRegistry {
+    config: EngineConfig,
+    tenants: Vec<Tenant>,
+    cache: HashMap<(u64, String), Arc<GraphRunner>>,
+    cache_hits: u64,
+}
+
+impl ModelRegistry {
+    /// An empty registry; every tenant compiles under `config`.
+    pub fn new(config: impl Into<EngineConfig>) -> ModelRegistry {
+        ModelRegistry {
+            config: config.into(),
+            tenants: Vec::new(),
+            cache: HashMap::new(),
+            cache_hits: 0,
+        }
+    }
+
+    /// The engine configuration tenants compile under.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Registered tenants in registration order.
+    pub fn tenants(&self) -> &[Tenant] {
+        &self.tenants
+    }
+
+    /// Tenant count.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// True when no tenant is registered.
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Registered names in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.name.clone()).collect()
+    }
+
+    /// Look up one tenant.
+    pub fn tenant(&self, name: &str) -> Option<&Tenant> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    fn tenant_mut(&mut self, name: &str) -> Result<&mut Tenant, RuntimeError> {
+        self.tenants
+            .iter_mut()
+            .find(|t| t.name == name)
+            .ok_or_else(|| RuntimeError::new(format!("no tenant named '{name}'")))
+    }
+
+    /// Times a registration was served from the plan/pack cache instead
+    /// of running planner + packing + calibration again.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits
+    }
+
+    fn insert(&mut self, tenant: Tenant) -> Result<(), RuntimeError> {
+        if self.tenant(&tenant.name).is_some() {
+            return Err(RuntimeError::new(format!(
+                "tenant '{}' is already registered",
+                tenant.name
+            )));
+        }
+        if tenant.name.is_empty() || tenant.name.contains([',', '=', ':']) {
+            return Err(RuntimeError::new(format!(
+                "tenant name '{}' must be non-empty and contain no ',', '=', or ':'",
+                tenant.name
+            )));
+        }
+        self.tenants.push(tenant);
+        Ok(())
+    }
+
+    /// Register a tenant compiled from a graph spec. Construction
+    /// (planner, packing, calibration) runs at most once per distinct
+    /// (graph, weights, config, host) — repeat registrations reuse the
+    /// cached runner.
+    pub fn register_graph(
+        &mut self,
+        name: &str,
+        graph: GraphSpec,
+        weights: Vec<QTensor>,
+    ) -> Result<(), RuntimeError> {
+        let key = (
+            fingerprint(&graph, &weights, &self.config),
+            expected_host(&self.config),
+        );
+        let runner = match self.cache.get(&key) {
+            Some(r) => {
+                self.cache_hits += 1;
+                Arc::clone(r)
+            }
+            None => {
+                let built = GraphRunner::new(graph, weights, self.config.clone())
+                    .map_err(|e| RuntimeError::new(e).context(format!("register '{name}'")))?;
+                let arc = Arc::new(built);
+                self.cache.insert(key, Arc::clone(&arc));
+                arc
+            }
+        };
+        self.insert(Tenant {
+            name: name.to_string(),
+            cell: Arc::new(RunnerCell::new(runner)),
+            origin: "graph".to_string(),
+            state: TenantState::Serving,
+            quarantine_reason: None,
+            artifact_quarantine: None,
+            reloads: 0,
+            reload_failures: 0,
+        })
+    }
+
+    /// Register a tenant from a `.hkv` artifact on disk, fully validated
+    /// (checksum, structural decode, probe inference) before it becomes
+    /// servable.
+    pub fn register_artifact(
+        &mut self,
+        name: &str,
+        path: &Path,
+    ) -> Result<LoadMode, RuntimeError> {
+        let (runner, mode) = load_runner(path)
+            .map_err(|e| e.context(format!("register '{name}'")))?;
+        probe(&runner).map_err(|e| e.context(format!("register '{name}'")))?;
+        self.insert(Tenant {
+            name: name.to_string(),
+            cell: Arc::new(RunnerCell::new(Arc::new(runner))),
+            origin: "artifact".to_string(),
+            state: TenantState::Serving,
+            quarantine_reason: None,
+            artifact_quarantine: None,
+            reloads: 0,
+            reload_failures: 0,
+        })?;
+        Ok(mode)
+    }
+
+    /// Hot-reload tenant `name` from a replacement artifact.
+    ///
+    /// The artifact is loaded and validated **off the serve path**:
+    /// checksum + structural decode, input-dims compatibility with the
+    /// serving runner (in-flight frames are sized for them), and a
+    /// panic-supervised probe inference. Only then is the new runner
+    /// swapped into the tenant's [`RunnerCell`] — between batches,
+    /// atomically. Any failure rolls back (the serving runner is
+    /// untouched) and quarantines the replacement artifact with the
+    /// reason; the error is also returned.
+    pub fn reload(&mut self, name: &str, path: &Path) -> Result<LoadMode, RuntimeError> {
+        let tenant = self.tenant_mut(name)?;
+        if tenant.state == TenantState::Quarantined {
+            return Err(RuntimeError::new(format!(
+                "tenant '{name}' is quarantined and cannot be reloaded"
+            )));
+        }
+        let want_dims = tenant.cell.get().graph().input;
+        // Validate fully before touching the tenant.
+        match load_and_validate(path, want_dims) {
+            Ok((runner, mode)) => {
+                tenant.cell.swap(Arc::new(runner));
+                tenant.origin = "artifact".to_string();
+                tenant.reloads += 1;
+                Ok(mode)
+            }
+            Err(e) => {
+                tenant.reload_failures += 1;
+                tenant.artifact_quarantine = Some((path.display().to_string(), e.to_string()));
+                Err(e.context(format!("reload '{name}' (rolled back to serving runner)")))
+            }
+        }
+    }
+
+    /// Quarantine a tenant: mark it closed with `reason`. The serve
+    /// path's supervisor calls this when a tenant exhausts its restart
+    /// budget; the tenant's queue is closed by the caller.
+    pub fn quarantine(&mut self, name: &str, reason: &str) -> Result<(), RuntimeError> {
+        let tenant = self.tenant_mut(name)?;
+        tenant.state = TenantState::Quarantined;
+        tenant.quarantine_reason = Some(reason.to_string());
+        Ok(())
+    }
+}
+
+/// Load + full off-path validation of a replacement artifact.
+fn load_and_validate(
+    path: &Path,
+    want_dims: (usize, usize, usize),
+) -> Result<(GraphRunner, LoadMode), RuntimeError> {
+    let (runner, mode) = load_runner(path)?;
+    let got = runner.graph().input;
+    if got != want_dims {
+        return Err(RuntimeError::new(format!(
+            "input dims changed: serving {want_dims:?}, replacement {got:?} \
+             (in-flight frames would be malformed)"
+        )));
+    }
+    probe(&runner)?;
+    Ok((runner, mode))
+}
+
+/// Probe inference under `catch_unwind`: one mid-gray frame through the
+/// candidate runner, checking the head comes back at the declared
+/// length. Catches artifacts that decode cleanly but execute wrong.
+fn probe(runner: &GraphRunner) -> Result<(), RuntimeError> {
+    let (c, h, w) = runner.graph().input;
+    let level = 1i64 << (runner.graph().input_bits.saturating_sub(1));
+    let frame = vec![level; c * h * w];
+    let head = catch_unwind(AssertUnwindSafe(|| runner.infer(&frame))).map_err(|payload| {
+        let msg = if let Some(s) = payload.downcast_ref::<&'static str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "opaque panic payload".to_string()
+        };
+        RuntimeError::new(msg).context("probe inference panicked")
+    })?;
+    if head.len() != runner.head_len() {
+        return Err(RuntimeError::new(format!(
+            "probe inference returned {} head values, runner declares {}",
+            head.len(),
+            runner.head_len()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::graph_runner::random_graph_weights;
+    use crate::models::zoo;
+
+    fn cfg() -> EngineConfig {
+        EngineConfig::auto().with_threads(1)
+    }
+
+    fn graph_and_weights(seed: u64) -> (GraphSpec, Vec<QTensor>) {
+        let g = zoo::fc_head();
+        let w = random_graph_weights(&g, seed).unwrap();
+        (g, w)
+    }
+
+    #[test]
+    fn identical_registrations_share_one_compiled_runner() {
+        let mut reg = ModelRegistry::new(cfg());
+        let (g, w) = graph_and_weights(3);
+        let packed_before = crate::packing::weight_pack_words();
+        reg.register_graph("a", g.clone(), w.clone()).unwrap();
+        let packed_after_first = crate::packing::weight_pack_words();
+        reg.register_graph("b", g, w).unwrap();
+        let packed_after_second = crate::packing::weight_pack_words();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.cache_hits(), 1);
+        assert!(
+            packed_after_first > packed_before,
+            "first registration must pack weights"
+        );
+        assert_eq!(
+            packed_after_second, packed_after_first,
+            "second registration must reuse the cached runner (no repacking)"
+        );
+        // Both tenants snapshot the *same* runner instance.
+        assert!(Arc::ptr_eq(
+            &reg.tenant("a").unwrap().cell.get(),
+            &reg.tenant("b").unwrap().cell.get()
+        ));
+    }
+
+    #[test]
+    fn distinct_weights_miss_the_cache() {
+        let mut reg = ModelRegistry::new(cfg());
+        let (g, w) = graph_and_weights(3);
+        let (_, w2) = graph_and_weights(4);
+        reg.register_graph("a", g.clone(), w).unwrap();
+        reg.register_graph("b", g, w2).unwrap();
+        assert_eq!(reg.cache_hits(), 0);
+    }
+
+    #[test]
+    fn duplicate_and_malformed_names_are_rejected() {
+        let mut reg = ModelRegistry::new(cfg());
+        let (g, w) = graph_and_weights(5);
+        reg.register_graph("a", g.clone(), w.clone()).unwrap();
+        assert!(reg.register_graph("a", g.clone(), w.clone()).is_err());
+        assert!(reg.register_graph("x=y", g.clone(), w.clone()).is_err());
+        assert!(reg.register_graph("", g, w).is_err());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn reload_swaps_the_cell_between_snapshots() {
+        let dir = std::env::temp_dir().join("hikonv_registry_reload_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("swap.hkv");
+        let (g, w) = graph_and_weights(6);
+        let art = crate::artifact::Artifact::compile(g.clone(), w.clone(), cfg()).unwrap();
+        art.write(&path).unwrap();
+
+        let mut reg = ModelRegistry::new(cfg());
+        reg.register_graph("a", g, w).unwrap();
+        let before = reg.tenant("a").unwrap().cell.get();
+        reg.reload("a", &path).unwrap();
+        let after = reg.tenant("a").unwrap().cell.get();
+        assert!(!Arc::ptr_eq(&before, &after), "reload must install a new runner");
+        assert_eq!(reg.tenant("a").unwrap().reloads, 1);
+        // Old snapshots keep working (in-flight batches finish).
+        let (c, h, wd) = before.graph().input;
+        assert_eq!(before.infer(&vec![1; c * h * wd]).len(), before.head_len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_reload_rolls_back_and_quarantines_the_artifact() {
+        let dir = std::env::temp_dir().join("hikonv_registry_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.hkv");
+        let (g, w) = graph_and_weights(7);
+        let art = crate::artifact::Artifact::compile(g.clone(), w.clone(), cfg()).unwrap();
+        let mut bytes = art.to_bytes();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff; // corrupt the payload: checksum must catch it
+        std::fs::write(&path, &bytes).unwrap();
+
+        let mut reg = ModelRegistry::new(cfg());
+        reg.register_graph("a", g, w).unwrap();
+        let before = reg.tenant("a").unwrap().cell.get();
+        let err = reg.reload("a", &path).expect_err("corrupt artifact must fail");
+        assert!(err.to_string().contains("rolled back"), "{err}");
+        let t = reg.tenant("a").unwrap();
+        assert!(Arc::ptr_eq(&before, &t.cell.get()), "serving runner untouched");
+        assert_eq!(t.reload_failures, 1);
+        assert_eq!(t.state, TenantState::Serving, "tenant keeps serving");
+        let reason = t.surfaced_quarantine().expect("artifact quarantine recorded");
+        assert!(reason.contains("checksum"), "reason must name the failure: {reason}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reload_rejects_changed_input_dims() {
+        let dir = std::env::temp_dir().join("hikonv_registry_dims_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dims.hkv");
+        let other = zoo::strided_downsample();
+        let ow = random_graph_weights(&other, 8).unwrap();
+        crate::artifact::Artifact::compile(other, ow, cfg())
+            .unwrap()
+            .write(&path)
+            .unwrap();
+
+        let mut reg = ModelRegistry::new(cfg());
+        let (g, w) = graph_and_weights(9);
+        reg.register_graph("a", g, w).unwrap();
+        let err = reg.reload("a", &path).expect_err("dims change must fail");
+        assert!(err.to_string().contains("input dims changed"), "{err}");
+        assert_eq!(reg.tenant("a").unwrap().reload_failures, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quarantined_tenant_refuses_reload() {
+        let mut reg = ModelRegistry::new(cfg());
+        let (g, w) = graph_and_weights(10);
+        reg.register_graph("a", g, w).unwrap();
+        reg.quarantine("a", "restart budget exhausted").unwrap();
+        let t = reg.tenant("a").unwrap();
+        assert_eq!(t.state, TenantState::Quarantined);
+        assert_eq!(t.surfaced_quarantine().as_deref(), Some("restart budget exhausted"));
+        assert!(reg.reload("a", Path::new("/nonexistent.hkv")).is_err());
+        assert!(reg.quarantine("ghost", "x").is_err());
+    }
+}

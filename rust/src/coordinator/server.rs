@@ -99,7 +99,7 @@ struct ProducerStats {
     shed: u64,
 }
 
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&'static str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -109,7 +109,7 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-fn push_fault(faults: &mut Vec<FaultRecord>, rec: FaultRecord) {
+pub(crate) fn push_fault(faults: &mut Vec<FaultRecord>, rec: FaultRecord) {
     if faults.len() < MAX_FAULT_RECORDS {
         faults.push(rec);
     }
@@ -193,36 +193,37 @@ pub fn serve_with_fallback(
             let batch_idx = batches;
             batches += 1;
 
-            // Supervised inference: catch panics, retry with exponential
-            // backoff, and fail the whole batch only once retries are
-            // exhausted.
+            // Supervised inference: catch panics *and* backend-reported
+            // errors (`try_infer_batch` — e.g. a dead pool worker), retry
+            // with exponential backoff, and fail the whole batch only
+            // once retries are exhausted.
             let mut result: Option<Vec<Detection>> = None;
             for attempt in 0..=config.max_retries {
                 let t = Instant::now();
-                let caught = catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&batch)));
+                let caught = catch_unwind(AssertUnwindSafe(|| backend.try_infer_batch(&batch)));
                 infer_stage.record(t.elapsed(), batch.len() as u64);
-                match caught {
-                    Ok(dets) => {
+                let fault = match caught {
+                    Ok(Ok(dets)) => {
                         result = Some(dets);
                         break;
                     }
-                    Err(payload) => {
-                        slo.faults += 1;
-                        batch_faulted = true;
-                        push_fault(
-                            &mut faults,
-                            FaultRecord {
-                                batch: batch_idx,
-                                frame: None,
-                                kind: "panic".into(),
-                                detail: panic_message(payload),
-                            },
-                        );
-                        if attempt < config.max_retries {
-                            slo.retried += 1;
-                            std::thread::sleep(config.retry_backoff * (1u32 << attempt.min(8)));
-                        }
-                    }
+                    Ok(Err(e)) => ("error", e.to_string()),
+                    Err(payload) => ("panic", panic_message(payload)),
+                };
+                slo.faults += 1;
+                batch_faulted = true;
+                push_fault(
+                    &mut faults,
+                    FaultRecord {
+                        batch: batch_idx,
+                        frame: None,
+                        kind: fault.0.into(),
+                        detail: fault.1,
+                    },
+                );
+                if attempt < config.max_retries {
+                    slo.retried += 1;
+                    std::thread::sleep(config.retry_backoff * (1u32 << attempt.min(8)));
                 }
             }
 
@@ -424,6 +425,48 @@ mod tests {
         fn infer_batch(&mut self, _frames: &[Frame]) -> Vec<Detection> {
             panic!("backend always panics");
         }
+    }
+
+    /// Reports an infrastructure error (never panics).
+    struct ErroringBackend;
+    impl InferBackend for ErroringBackend {
+        fn name(&self) -> &str {
+            "erroring"
+        }
+        fn input_dims(&self) -> (usize, usize, usize) {
+            (1, 2, 2)
+        }
+        fn infer_batch(&mut self, _frames: &[Frame]) -> Vec<Detection> {
+            Vec::new()
+        }
+        fn try_infer_batch(
+            &mut self,
+            _frames: &[Frame],
+        ) -> Result<Vec<Detection>, crate::runtime::RuntimeError> {
+            Err(crate::runtime::RuntimeError::new("backend infrastructure down"))
+        }
+    }
+
+    #[test]
+    fn backend_errors_are_recorded_faults_with_kind_error() {
+        let report = serve(
+            Box::new(ErroringBackend),
+            &ServeConfig {
+                frames: 4,
+                max_batch: 4,
+                max_retries: 1,
+                retry_backoff: Duration::from_micros(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.slo.completed, 0);
+        assert_eq!(report.slo.failed, 4);
+        assert!(report.slo.accounted());
+        assert!(report
+            .faults
+            .iter()
+            .any(|f| f.kind == "error" && f.detail.contains("infrastructure down")));
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub struct FrameSource {
     bits: u32,
     fps_cap: Option<f64>,
     deadline: Option<Duration>,
+    model: u32,
     next_id: u64,
     t0: Instant,
 }
@@ -28,6 +29,7 @@ impl FrameSource {
             bits,
             fps_cap,
             deadline: None,
+            model: 0,
             next_id: 0,
             t0: Instant::now(),
         }
@@ -37,6 +39,12 @@ impl FrameSource {
     /// its creation instant (`None` = no SLO budget).
     pub fn with_deadline(mut self, budget: Option<Duration>) -> Self {
         self.deadline = budget;
+        self
+    }
+
+    /// Tag every produced frame with a tenant index (multi-model serve).
+    pub fn with_model(mut self, model: u32) -> Self {
+        self.model = model;
         self
     }
 
@@ -57,6 +65,7 @@ impl FrameSource {
         let created = Instant::now();
         let frame = Frame {
             id: self.next_id,
+            model: self.model,
             levels,
             created,
             deadline: self.deadline.map(|b| created + b),

@@ -1,0 +1,793 @@
+//! Supervised multi-model serving over a [`ModelRegistry`].
+//!
+//! Every tenant gets its own isolated lane — source thread, admission
+//! controller, bounded queue, and a supervised worker thread driving the
+//! tenant's [`GraphRunner`](crate::models::GraphRunner) snapshot — so a
+//! panicking or stalled backend for one model never disturbs another
+//! tenant's SLOs. The supervisor thread (the caller of
+//! [`serve_registry`]) polls worker health and owns the lifecycle:
+//!
+//! * **Restart with backoff.** A worker that exhausts its per-batch
+//!   retries exits with the failure context; the supervisor restarts it
+//!   after an exponentially growing backoff. The scripted fault plan and
+//!   all SLO counters live in shared state, so restarts lose nothing.
+//! * **Restart budget → quarantine.** After `restart_budget` restarts
+//!   the tenant is quarantined: its queue closes, frames still queued
+//!   are accounted as shed (the identity
+//!   `admitted == shed + expired + failed + completed` holds per
+//!   tenant), and the reason is recorded in the registry and the report.
+//! * **Liveness.** Workers heartbeat at every batch boundary. When
+//!   frames are waiting and the heartbeat is older than the liveness
+//!   deadline, the supervisor records a breach and flags the worker
+//!   stale; it exits at the next batch boundary and is restarted.
+//!   (Threads cannot be killed: a worker wedged *forever* inside a
+//!   single inference call is detected and reported, but its thread
+//!   only exits when the call returns — see `docs/SERVING.md`.)
+//! * **Hot reload.** [`MultiServeConfig::reload_at`] triggers
+//!   [`ModelRegistry::reload`] mid-run: the replacement artifact is
+//!   validated off the serve path and atomically swapped between
+//!   batches, or rolled back with the reason recorded — either way no
+//!   frame is dropped or double-served.
+//!
+//! Frame ids (and therefore fault-plan frame indices) are **per
+//! tenant**: each tenant's source numbers its own stream from 0, and
+//! `panic@9:model=b` targets frame 9 *of tenant b's stream*.
+
+use super::admission::{Admit, AdmissionController, AdmissionPolicy};
+use super::batcher::Batcher;
+use super::fault::FaultPlan;
+use super::metrics::{FaultRecord, MultiServeReport, SloCounters, TenantReport};
+use super::pipeline::Detection;
+use super::queue::BoundedQueue;
+use super::registry::{ModelRegistry, RunnerCell, TenantState};
+use super::server::{panic_message, push_fault};
+use super::source::FrameSource;
+use crate::artifact::LoadMode;
+use crate::runtime::RuntimeError;
+use crate::util::stats::LatencyHistogram;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A scripted mid-run hot reload: once the target tenant's source has
+/// offered `after_admitted` frames, swap in the artifact at `path`.
+#[derive(Clone, Debug)]
+pub struct ReloadAt {
+    /// Trigger threshold on the tenant's admitted count.
+    pub after_admitted: u64,
+    /// Registry name of the tenant to reload.
+    pub tenant: String,
+    /// Replacement `.hkv` artifact.
+    pub path: PathBuf,
+}
+
+/// Configuration for a registry serve run. Per-tenant knobs apply to
+/// every tenant identically; streams are seeded per tenant
+/// (`seed + index * 7919`) so two runs with the same registration order
+/// are frame-for-frame reproducible.
+#[derive(Clone, Debug)]
+pub struct MultiServeConfig {
+    /// Frames each tenant's source streams.
+    pub frames: u64,
+    /// Per-source rate cap in fps (`None` = as fast as possible).
+    pub source_fps_cap: Option<f64>,
+    /// Bounded queue depth per tenant.
+    pub queue_depth: usize,
+    /// Dynamic batching limit.
+    pub max_batch: usize,
+    /// Batch linger.
+    pub linger: Duration,
+    /// Base RNG seed for the synthetic sources.
+    pub seed: u64,
+    /// What a full queue does to an arriving frame.
+    pub policy: AdmissionPolicy,
+    /// Per-frame deadline budget (`None` = no SLO budget).
+    pub deadline: Option<Duration>,
+    /// Inference retries per batch before the worker gives up and exits.
+    pub max_retries: u32,
+    /// Base backoff between in-batch retries (doubles per attempt).
+    pub retry_backoff: Duration,
+    /// Worker restarts allowed per tenant before quarantine.
+    pub restart_budget: u32,
+    /// Base backoff before a worker restart (doubles per restart).
+    pub restart_backoff: Duration,
+    /// Heartbeat staleness (with frames waiting) that counts as a
+    /// liveness breach (`None` = no liveness monitoring).
+    pub liveness: Option<Duration>,
+    /// Scripted faults; events tagged `model=X` fire only in tenant X's
+    /// lane ([`FaultPlan::for_model`]).
+    pub fault_plan: FaultPlan,
+    /// Optional scripted hot reload.
+    pub reload_at: Option<ReloadAt>,
+}
+
+impl Default for MultiServeConfig {
+    fn default() -> Self {
+        MultiServeConfig {
+            frames: 64,
+            source_fps_cap: None,
+            queue_depth: 8,
+            max_batch: 4,
+            linger: Duration::from_millis(2),
+            seed: 7,
+            policy: AdmissionPolicy::Block,
+            deadline: None,
+            max_retries: 1,
+            retry_backoff: Duration::from_millis(1),
+            restart_budget: 3,
+            restart_backoff: Duration::from_millis(5),
+            liveness: None,
+            fault_plan: FaultPlan::new(),
+            reload_at: None,
+        }
+    }
+}
+
+/// Why a worker generation ended (returned to the supervisor via the
+/// thread's join value).
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum WorkerExit {
+    /// Queue closed and drained: the tenant served to completion.
+    Drained,
+    /// A batch exhausted its retries; the frames were failed and the
+    /// worker handed its fate to the supervisor.
+    BatchFailed(String),
+    /// The supervisor flagged the worker stale (liveness breach); it
+    /// exited at the next batch boundary.
+    Stale,
+}
+
+/// Mutable per-tenant counters, written by the producer and worker,
+/// read by the supervisor and the final report.
+#[derive(Default)]
+struct TenantStats {
+    slo: SloCounters,
+    latency: LatencyHistogram,
+    faults: Vec<FaultRecord>,
+    detections: Vec<Detection>,
+    batches: u64,
+}
+
+/// State shared between one tenant's producer, worker generations, and
+/// the supervisor.
+struct TenantShared {
+    name: String,
+    queue: Arc<BoundedQueue<super::pipeline::Frame>>,
+    cell: Arc<RunnerCell>,
+    /// This tenant's filtered fault script. Lives here (not in the
+    /// worker) so scripted state survives worker restarts.
+    plan: Mutex<FaultPlan>,
+    stats: Mutex<TenantStats>,
+    /// Worker heartbeat: ms since `t0`, stored at every batch boundary.
+    heartbeat_ms: AtomicU64,
+    /// Set by the supervisor on a liveness breach; the worker exits at
+    /// the next batch boundary when it observes it.
+    stale: AtomicBool,
+    t0: Instant,
+}
+
+impl TenantShared {
+    fn stats(&self) -> MutexGuard<'_, TenantStats> {
+        self.stats.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn plan(&self) -> MutexGuard<'_, FaultPlan> {
+        self.plan.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn beat(&self) {
+        self.heartbeat_ms
+            .store(self.t0.elapsed().as_millis() as u64, Ordering::Relaxed);
+    }
+
+    fn heartbeat_age(&self) -> Duration {
+        let last = Duration::from_millis(self.heartbeat_ms.load(Ordering::Relaxed));
+        self.t0.elapsed().saturating_sub(last)
+    }
+}
+
+/// Supervisor-side view of one tenant's lifecycle.
+struct Supervision {
+    shared: Arc<TenantShared>,
+    producer: Option<JoinHandle<()>>,
+    worker: Option<JoinHandle<WorkerExit>>,
+    restarts: u64,
+    liveness_breaches: u64,
+    restart_due: Option<Instant>,
+    breach_flagged: bool,
+    quarantined: bool,
+    done: bool,
+}
+
+/// One worker generation: pull batches, run supervised inference on the
+/// current runner snapshot, reconcile by id, account everything.
+fn worker_loop(shared: &TenantShared, cfg: &MultiServeConfig) -> WorkerExit {
+    let batcher = Batcher::new(cfg.max_batch, cfg.linger);
+    loop {
+        shared.beat();
+        if shared.stale.swap(false, Ordering::Relaxed) {
+            return WorkerExit::Stale;
+        }
+        let Some(outcome) = batcher.next_batch(&shared.queue) else {
+            return WorkerExit::Drained;
+        };
+        shared.beat();
+        if !outcome.expired.is_empty() {
+            shared.stats().slo.expired += outcome.expired.len() as u64;
+        }
+        let batch = outcome.batch;
+        if batch.is_empty() {
+            continue;
+        }
+        let batch_idx = {
+            let mut st = shared.stats();
+            st.batches += 1;
+            st.batches - 1
+        };
+        let ids: Vec<u64> = batch.iter().map(|f| f.id).collect();
+
+        // Supervised inference with bounded retry. Scripted pre-events
+        // are consumed per attempt (a `panic@N:x3` burns one repetition
+        // each retry, exactly like the single-model fault injector).
+        let mut result: Option<Vec<Detection>> = None;
+        let mut last_fault = String::new();
+        for attempt in 0..=cfg.max_retries {
+            let (stall, panic_frame) = shared.plan().take_pre(&ids);
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if stall > Duration::ZERO {
+                    std::thread::sleep(stall);
+                }
+                if let Some(frame) = panic_frame {
+                    panic!("injected fault: panic at frame {frame}");
+                }
+                // Snapshot the runner *per batch*: a concurrent hot
+                // reload swaps the cell, never the batch under our feet.
+                let runner = shared.cell.get();
+                let levels: Vec<&[i64]> = batch.iter().map(|f| f.levels.as_slice()).collect();
+                let heads = runner.infer_batch(&levels);
+                batch
+                    .iter()
+                    .zip(&heads)
+                    .map(|(f, head)| Detection {
+                        frame_id: f.id,
+                        cell: runner.decode(head),
+                    })
+                    .collect::<Vec<Detection>>()
+            }));
+            match caught {
+                Ok(dets) => {
+                    result = Some(dets);
+                    break;
+                }
+                Err(payload) => {
+                    let msg = panic_message(payload);
+                    last_fault.clone_from(&msg);
+                    let mut st = shared.stats();
+                    st.slo.faults += 1;
+                    push_fault(
+                        &mut st.faults,
+                        FaultRecord {
+                            batch: batch_idx,
+                            frame: None,
+                            kind: "panic".into(),
+                            detail: msg,
+                        },
+                    );
+                    if attempt < cfg.max_retries {
+                        st.slo.retried += 1;
+                        drop(st);
+                        std::thread::sleep(cfg.retry_backoff * (1u32 << attempt.min(8)));
+                    }
+                }
+            }
+        }
+        shared.beat();
+
+        let Some(mut dets) = result else {
+            // Retries exhausted: fail this batch's frames and escalate to
+            // the supervisor (restart-with-backoff or quarantine).
+            shared.stats().slo.failed += batch.len() as u64;
+            return WorkerExit::BatchFailed(last_fault);
+        };
+        shared.plan().apply_post(&ids, &mut dets);
+
+        let mut st = shared.stats();
+        let aligned =
+            dets.len() == batch.len() && batch.iter().zip(&dets).all(|(f, d)| f.id == d.frame_id);
+        if !aligned {
+            st.slo.faults += 1;
+            push_fault(
+                &mut st.faults,
+                FaultRecord {
+                    batch: batch_idx,
+                    frame: None,
+                    kind: "mismatch".into(),
+                    detail: format!(
+                        "expected {} ordered detections, got {}",
+                        batch.len(),
+                        dets.len()
+                    ),
+                },
+            );
+        }
+        let now = Instant::now();
+        for frame in &batch {
+            match dets.iter().find(|d| d.frame_id == frame.id) {
+                Some(det) => {
+                    st.slo.completed += 1;
+                    st.detections.push(*det);
+                    st.latency.record_us(frame.created.elapsed().as_micros() as u64);
+                    if frame.deadline.is_some_and(|d| now > d) {
+                        st.slo.deadline_misses += 1;
+                    }
+                }
+                None => st.slo.failed += 1,
+            }
+        }
+    }
+}
+
+fn spawn_worker(shared: Arc<TenantShared>, cfg: Arc<MultiServeConfig>) -> JoinHandle<WorkerExit> {
+    std::thread::spawn(move || worker_loop(&shared, &cfg))
+}
+
+fn spawn_producer(
+    shared: Arc<TenantShared>,
+    cfg: Arc<MultiServeConfig>,
+    model_idx: u32,
+    dims: (usize, usize, usize),
+    bits: u32,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let admission = AdmissionController::new(cfg.policy, Arc::clone(&shared.queue));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let seed = cfg.seed.wrapping_add(model_idx as u64 * 7919);
+            let mut src = FrameSource::new(seed, dims, bits, cfg.source_fps_cap)
+                .with_deadline(cfg.deadline)
+                .with_model(model_idx);
+            for _ in 0..cfg.frames {
+                let frame = src.next_frame();
+                shared.stats().slo.admitted += 1;
+                match admission.offer(frame) {
+                    Admit::Queued => {}
+                    Admit::Shed | Admit::Evicted => shared.stats().slo.shed += 1,
+                    Admit::Closed => {
+                        // Quarantined mid-stream: this frame was offered
+                        // and refused; the rest are never produced.
+                        shared.stats().slo.shed += 1;
+                        break;
+                    }
+                }
+            }
+        }));
+        admission.close();
+        if let Err(payload) = result {
+            let mut st = shared.stats();
+            st.slo.faults += 1;
+            push_fault(
+                &mut st.faults,
+                FaultRecord {
+                    batch: 0,
+                    frame: None,
+                    kind: "source".into(),
+                    detail: panic_message(payload),
+                },
+            );
+        }
+    })
+}
+
+/// Serve every registered tenant concurrently under supervision and
+/// report per-tenant SLOs, faults, and lifecycle verdicts.
+///
+/// Takes the registry mutably: hot reload and quarantine are registry
+/// state transitions, so the run's verdicts persist on the registry
+/// after the report is returned.
+pub fn serve_registry(
+    registry: &mut ModelRegistry,
+    config: &MultiServeConfig,
+) -> Result<MultiServeReport, RuntimeError> {
+    if registry.is_empty() {
+        return Err(RuntimeError::new("registry has no tenants to serve"));
+    }
+    let cfg = Arc::new(config.clone());
+    let t0 = Instant::now();
+
+    let mut sup: Vec<Supervision> = Vec::with_capacity(registry.len());
+    for (idx, tenant) in registry.tenants().iter().enumerate() {
+        let shared = Arc::new(TenantShared {
+            name: tenant.name.clone(),
+            queue: Arc::new(BoundedQueue::new(cfg.queue_depth)),
+            cell: Arc::clone(&tenant.cell),
+            plan: Mutex::new(cfg.fault_plan.for_model(&tenant.name)),
+            stats: Mutex::new(TenantStats::default()),
+            heartbeat_ms: AtomicU64::new(0),
+            stale: AtomicBool::new(false),
+            t0,
+        });
+        let mut s = Supervision {
+            shared: Arc::clone(&shared),
+            producer: None,
+            worker: None,
+            restarts: 0,
+            liveness_breaches: 0,
+            restart_due: None,
+            breach_flagged: false,
+            quarantined: tenant.state == TenantState::Quarantined,
+            done: tenant.state == TenantState::Quarantined,
+        };
+        if !s.done {
+            let runner = shared.cell.get();
+            let dims = runner.graph().input;
+            let bits = runner.graph().input_bits;
+            shared.beat();
+            s.producer = Some(spawn_producer(
+                Arc::clone(&shared),
+                Arc::clone(&cfg),
+                idx as u32,
+                dims,
+                bits,
+            ));
+            s.worker = Some(spawn_worker(Arc::clone(&shared), Arc::clone(&cfg)));
+        }
+        sup.push(s);
+    }
+
+    let mut reload = cfg.reload_at.clone();
+    loop {
+        let mut all_done = true;
+        for s in sup.iter_mut() {
+            if s.done {
+                continue;
+            }
+            all_done = false;
+
+            // Harvest a finished worker generation.
+            if s.worker.as_ref().is_some_and(|h| h.is_finished()) {
+                let exit = match s.worker.take() {
+                    Some(h) => h
+                        .join()
+                        .unwrap_or_else(|p| WorkerExit::BatchFailed(panic_message(p))),
+                    None => WorkerExit::Drained,
+                };
+                match exit {
+                    WorkerExit::Drained => {
+                        s.done = true;
+                        continue;
+                    }
+                    WorkerExit::BatchFailed(msg) => {
+                        schedule_restart(s, &cfg, &format!("batch failed: {msg}"), registry);
+                    }
+                    WorkerExit::Stale => {
+                        schedule_restart(s, &cfg, "stalled past liveness deadline", registry);
+                    }
+                }
+                continue;
+            }
+
+            // Restart a worker whose backoff has elapsed.
+            if s.worker.is_none() {
+                let due = match s.restart_due {
+                    Some(t) => Instant::now() >= t,
+                    None => true,
+                };
+                if due {
+                    s.restart_due = None;
+                    s.breach_flagged = false;
+                    s.shared.stale.store(false, Ordering::Relaxed);
+                    s.shared.beat();
+                    s.worker = Some(spawn_worker(Arc::clone(&s.shared), Arc::clone(&cfg)));
+                }
+                continue;
+            }
+
+            // Liveness: frames waiting + stale heartbeat = breach.
+            if let Some(liveness) = cfg.liveness {
+                if !s.breach_flagged && s.shared.queue.depth() > 0 {
+                    let age = s.shared.heartbeat_age();
+                    if age > liveness {
+                        s.liveness_breaches += 1;
+                        s.breach_flagged = true;
+                        s.shared.stale.store(true, Ordering::Relaxed);
+                        let mut st = s.shared.stats();
+                        st.slo.faults += 1;
+                        push_fault(
+                            &mut st.faults,
+                            FaultRecord {
+                                batch: st.batches,
+                                frame: None,
+                                kind: "liveness".into(),
+                                detail: format!(
+                                    "heartbeat {}ms old with frames queued (deadline {}ms)",
+                                    age.as_millis(),
+                                    liveness.as_millis()
+                                ),
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        if all_done {
+            break;
+        }
+
+        // Scripted hot reload: trigger once the target tenant's source
+        // has offered enough frames.
+        let trigger = reload.as_ref().is_some_and(|r| {
+            sup.iter()
+                .find(|s| s.shared.name == r.tenant)
+                .is_some_and(|s| s.shared.stats().slo.admitted >= r.after_admitted)
+        });
+        if trigger {
+            if let Some(r) = reload.take() {
+                let outcome = registry.reload(&r.tenant, &r.path);
+                if let Some(s) = sup.iter().find(|s| s.shared.name == r.tenant) {
+                    let mut st = s.shared.stats();
+                    let batch = st.batches;
+                    match outcome {
+                        Ok(mode) => {
+                            let how = match mode {
+                                LoadMode::Prepacked => "prepacked".to_string(),
+                                LoadMode::Replanned(why) => format!("replanned: {why}"),
+                            };
+                            push_fault(
+                                &mut st.faults,
+                                FaultRecord {
+                                    batch,
+                                    frame: None,
+                                    kind: "reload".into(),
+                                    detail: format!("swapped in {} ({how})", r.path.display()),
+                                },
+                            );
+                        }
+                        Err(e) => {
+                            st.slo.faults += 1;
+                            push_fault(
+                                &mut st.faults,
+                                FaultRecord {
+                                    batch,
+                                    frame: None,
+                                    kind: "reload".into(),
+                                    detail: e.to_string(),
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    for s in sup.iter_mut() {
+        if let Some(p) = s.producer.take() {
+            let _ = p.join();
+        }
+    }
+
+    let mut tenants = Vec::with_capacity(sup.len());
+    for s in &sup {
+        let reg_tenant = registry.tenant(&s.shared.name).ok_or_else(|| {
+            RuntimeError::new(format!("tenant '{}' vanished from registry", s.shared.name))
+        })?;
+        let st = s.shared.stats();
+        tenants.push(TenantReport {
+            name: s.shared.name.clone(),
+            backend: reg_tenant.backend_label(),
+            state: if s.quarantined || reg_tenant.state == TenantState::Quarantined {
+                "quarantined".to_string()
+            } else {
+                "drained".to_string()
+            },
+            quarantine_reason: reg_tenant.surfaced_quarantine(),
+            restarts: s.restarts,
+            liveness_breaches: s.liveness_breaches,
+            reloads: reg_tenant.reloads,
+            reload_failures: reg_tenant.reload_failures,
+            batches: st.batches,
+            slo: st.slo,
+            latency: st.latency.clone(),
+            faults: st.faults.clone(),
+            detections: st.detections.clone(),
+        });
+    }
+    Ok(MultiServeReport {
+        wall_s,
+        policy: cfg.policy.to_string(),
+        tenants,
+    })
+}
+
+/// Restart a failed worker under the budget, or quarantine the tenant
+/// once the budget is spent: close the queue, account the frames still
+/// inside it as shed, and record the reason on the registry.
+fn schedule_restart(
+    s: &mut Supervision,
+    cfg: &MultiServeConfig,
+    reason: &str,
+    registry: &mut ModelRegistry,
+) {
+    if s.restarts >= cfg.restart_budget as u64 {
+        let why = format!(
+            "restart budget ({}) exhausted; last worker exit: {reason}",
+            cfg.restart_budget
+        );
+        let _ = registry.quarantine(&s.shared.name, &why);
+        s.shared.queue.close();
+        let mut drained = 0u64;
+        while s.shared.queue.try_pop().is_some() {
+            drained += 1;
+        }
+        let mut st = s.shared.stats();
+        st.slo.shed += drained;
+        st.slo.faults += 1;
+        let batch = st.batches;
+        push_fault(
+            &mut st.faults,
+            FaultRecord {
+                batch,
+                frame: None,
+                kind: "quarantine".into(),
+                detail: why,
+            },
+        );
+        s.quarantined = true;
+        s.done = true;
+        return;
+    }
+    s.restarts += 1;
+    let backoff = cfg.restart_backoff * (1u32 << (s.restarts - 1).min(8) as u32);
+    s.restart_due = Some(Instant::now() + backoff);
+    let mut st = s.shared.stats();
+    let batch = st.batches;
+    push_fault(
+        &mut st.faults,
+        FaultRecord {
+            batch,
+            frame: None,
+            kind: "restart".into(),
+            detail: format!(
+                "worker restart {}/{} in {}ms: {reason}",
+                s.restarts,
+                cfg.restart_budget,
+                backoff.as_millis()
+            ),
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use crate::models::graph_runner::random_graph_weights;
+    use crate::models::zoo;
+
+    fn registry_with(names: &[&str]) -> ModelRegistry {
+        let mut reg = ModelRegistry::new(EngineConfig::auto().with_threads(1));
+        for name in names {
+            let g = zoo::fc_head();
+            let w = random_graph_weights(&g, 11).unwrap();
+            reg.register_graph(name, g, w).unwrap();
+        }
+        reg
+    }
+
+    #[test]
+    fn clean_run_serves_every_tenant_to_completion() {
+        let mut reg = registry_with(&["a", "b"]);
+        let report = serve_registry(
+            &mut reg,
+            &MultiServeConfig {
+                frames: 12,
+                max_batch: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(report.accounted());
+        assert_eq!(report.total_completed(), 24);
+        for name in ["a", "b"] {
+            let t = report.tenant(name).unwrap();
+            assert_eq!(t.state, "drained");
+            assert_eq!(t.slo.admitted, 12);
+            assert_eq!(t.slo.completed, 12);
+            assert_eq!(t.restarts, 0);
+            assert!(t.faults.is_empty(), "{name}: {:?}", t.faults);
+        }
+    }
+
+    #[test]
+    fn empty_registry_is_an_error() {
+        let mut reg = ModelRegistry::new(EngineConfig::auto().with_threads(1));
+        assert!(serve_registry(&mut reg, &MultiServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn targeted_panic_restarts_only_that_tenant() {
+        let mut reg = registry_with(&["a", "b"]);
+        let report = serve_registry(
+            &mut reg,
+            &MultiServeConfig {
+                frames: 12,
+                max_batch: 1,
+                max_retries: 0,
+                restart_budget: 5,
+                restart_backoff: Duration::from_millis(1),
+                fault_plan: "panic@3:model=a".parse().unwrap(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(report.accounted());
+        let a = report.tenant("a").unwrap();
+        assert_eq!(a.state, "drained");
+        assert_eq!(a.restarts, 1, "one failed batch, one restart");
+        assert_eq!(a.slo.failed, 1);
+        assert_eq!(a.slo.completed, 11);
+        assert!(a.faults.iter().any(|f| f.kind == "restart"));
+        let b = report.tenant("b").unwrap();
+        assert_eq!(b.restarts, 0);
+        assert_eq!(b.slo.completed, 12);
+        assert!(b.faults.is_empty(), "faults must not leak: {:?}", b.faults);
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_quarantines_and_keeps_the_identity() {
+        let mut reg = registry_with(&["a"]);
+        let report = serve_registry(
+            &mut reg,
+            &MultiServeConfig {
+                frames: 32,
+                queue_depth: 4,
+                max_batch: 1,
+                max_retries: 0,
+                restart_budget: 2,
+                restart_backoff: Duration::from_millis(1),
+                // Three cursed batches: the third exceeds the budget.
+                fault_plan: "panic@1:model=a;panic@2:model=a;panic@3:model=a"
+                    .parse()
+                    .unwrap(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let a = report.tenant("a").unwrap();
+        assert_eq!(a.state, "quarantined");
+        assert_eq!(a.restarts, 2);
+        let reason = a.quarantine_reason.as_deref().unwrap();
+        assert!(reason.contains("restart budget (2) exhausted"), "{reason}");
+        assert!(a.slo.accounted(), "identity must hold: {:?}", a.slo);
+        assert!(a.slo.shed > 0, "queued + unproduced frames count as shed");
+        assert!(a.faults.iter().any(|f| f.kind == "quarantine"));
+        // The registry carries the verdict after the run.
+        assert_eq!(reg.tenant("a").unwrap().state, TenantState::Quarantined);
+    }
+
+    #[test]
+    fn stall_past_liveness_deadline_is_breached_and_restarted() {
+        let mut reg = registry_with(&["a"]);
+        let report = serve_registry(
+            &mut reg,
+            &MultiServeConfig {
+                frames: 16,
+                queue_depth: 4,
+                max_batch: 1,
+                liveness: Some(Duration::from_millis(40)),
+                fault_plan: "stall@2:250ms,model=a".parse().unwrap(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let a = report.tenant("a").unwrap();
+        assert!(a.liveness_breaches >= 1, "stall must breach liveness");
+        assert!(a.faults.iter().any(|f| f.kind == "liveness"));
+        assert!(a.slo.accounted());
+        assert_eq!(a.state, "drained", "tenant recovers after the stall");
+    }
+}

@@ -11,7 +11,9 @@
 //! are bit-identical for any thread count — the property the tiled conv2d
 //! engines rely on (and the determinism tests assert).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::runtime::RuntimeError;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// A chunked work-sharing pool of `threads` workers.
@@ -55,34 +57,58 @@ impl ThreadPool {
     /// Run `tasks` index-addressed jobs across the pool (dynamic
     /// work-sharing via an atomic cursor). `f(i)` is called exactly once
     /// for every `i in 0..tasks`, in unspecified order and thread.
+    ///
+    /// A panicking task aborts the run and re-raises on the calling
+    /// thread (see [`try_run`](Self::try_run) for the error-returning
+    /// form); the pool itself stays usable afterwards.
     pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
-        if self.threads == 1 || tasks <= 1 {
-            for i in 0..tasks {
-                f(i);
-            }
-            return;
+        if let Err(e) = self.try_run(tasks, f) {
+            panic!("{e}");
         }
+    }
+
+    /// [`run`](Self::run), surfacing the first task panic as a
+    /// [`RuntimeError`] instead of unwinding. Remaining queued tasks are
+    /// cancelled (tasks already started finish); the pool is reusable
+    /// after an error — a panicking task can neither wedge the pool nor
+    /// poison shared state.
+    pub fn try_run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) -> Result<(), RuntimeError> {
         let next = AtomicUsize::new(0);
-        let workers = self.threads.min(tasks);
-        std::thread::scope(|s| {
-            for _ in 1..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= tasks {
-                        break;
-                    }
-                    f(i);
-                });
+        let abort = AtomicBool::new(false);
+        let first_panic: Mutex<Option<String>> = Mutex::new(None);
+        let step = || loop {
+            if abort.load(Ordering::Relaxed) {
+                break;
             }
-            // The calling thread is worker 0.
-            loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= tasks {
-                    break;
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                abort.store(true, Ordering::Relaxed);
+                let mut slot = first_panic.lock().unwrap_or_else(|e| e.into_inner());
+                if slot.is_none() {
+                    *slot = Some(format!("task {i}: {}", panic_text(payload)));
                 }
-                f(i);
+                break;
             }
-        });
+        };
+        if self.threads == 1 || tasks <= 1 {
+            step();
+        } else {
+            let workers = self.threads.min(tasks);
+            std::thread::scope(|s| {
+                for _ in 1..workers {
+                    s.spawn(step);
+                }
+                // The calling thread is worker 0.
+                step();
+            });
+        }
+        match first_panic.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            Some(msg) => Err(RuntimeError::new(msg).context("exec task panicked")),
+            None => Ok(()),
+        }
     }
 
     /// Split `data` into `chunk_len`-sized tiles and process them across
@@ -95,24 +121,48 @@ impl ThreadPool {
         T: Send,
         F: Fn(usize, &mut [T]) + Sync,
     {
-        assert!(chunk_len > 0, "chunk_len must be positive");
-        if self.threads == 1 || data.len() <= chunk_len {
-            for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
-                f(i, chunk);
-            }
-            return;
+        if let Err(e) = self.try_par_chunks_mut(data, chunk_len, f) {
+            panic!("{e}");
         }
+    }
+
+    /// [`par_chunks_mut`](Self::par_chunks_mut), surfacing the first
+    /// task panic as a [`RuntimeError`]: the chunk queue's mutex absorbs
+    /// poison (like `coordinator::queue`), pending chunks are cancelled,
+    /// and `run`/`par_chunks_mut` can never hang on a poisoned lock.
+    pub fn try_par_chunks_mut<T, F>(
+        &self,
+        data: &mut [T],
+        chunk_len: usize,
+        f: F,
+    ) -> Result<(), RuntimeError>
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        let abort = AtomicBool::new(false);
+        let first_panic: Mutex<Option<String>> = Mutex::new(None);
+        let chunks = data.len().div_ceil(chunk_len);
         // Chunks are queued in reverse so workers pop them in order; never
         // spawn more workers than there are chunks to pop.
-        let workers = self.threads.min(data.len().div_ceil(chunk_len));
         let queue: Mutex<Vec<(usize, &mut [T])>> =
             Mutex::new(data.chunks_mut(chunk_len).enumerate().rev().collect());
-        std::thread::scope(|s| {
-            for _ in 1..workers {
-                s.spawn(|| drain_queue(&queue, &f));
-            }
-            drain_queue(&queue, &f);
-        });
+        if self.threads == 1 || chunks <= 1 {
+            drain_queue(&queue, &f, &abort, &first_panic);
+        } else {
+            let workers = self.threads.min(chunks);
+            std::thread::scope(|s| {
+                for _ in 1..workers {
+                    s.spawn(|| drain_queue(&queue, &f, &abort, &first_panic));
+                }
+                drain_queue(&queue, &f, &abort, &first_panic);
+            });
+        }
+        match first_panic.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            Some(msg) => Err(RuntimeError::new(msg).context("exec chunk task panicked")),
+            None => Ok(()),
+        }
     }
 
     /// Map `items` to a same-order `Vec` across the pool. Slot `i` is
@@ -141,17 +191,45 @@ impl Default for ThreadPool {
     }
 }
 
-fn drain_queue<T, F>(queue: &Mutex<Vec<(usize, &mut [T])>>, f: &F)
-where
+fn drain_queue<T, F>(
+    queue: &Mutex<Vec<(usize, &mut [T])>>,
+    f: &F,
+    abort: &AtomicBool,
+    first_panic: &Mutex<Option<String>>,
+) where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
     loop {
-        let job = queue.lock().expect("exec queue poisoned").pop();
+        if abort.load(Ordering::Relaxed) {
+            break;
+        }
+        // Absorb poison: a panicking sibling can't wedge the queue.
+        let job = queue.lock().unwrap_or_else(|e| e.into_inner()).pop();
         match job {
-            Some((i, chunk)) => f(i, chunk),
+            Some((i, chunk)) => {
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i, chunk))) {
+                    abort.store(true, Ordering::Relaxed);
+                    let mut slot = first_panic.lock().unwrap_or_else(|e| e.into_inner());
+                    if slot.is_none() {
+                        *slot = Some(format!("chunk {i}: {}", panic_text(payload)));
+                    }
+                    break;
+                }
+            }
             None => break,
         }
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` / `String`, else opaque).
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -243,6 +321,54 @@ mod tests {
     fn zero_threads_clamps_to_one() {
         assert_eq!(ThreadPool::new(0).threads(), 1);
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn panicking_task_is_an_error_not_a_hang() {
+        // Regression (ISSUE 8): a panicking chunk task used to poison the
+        // queue mutex and wedge `run`/`par_chunks_mut`; now the first
+        // panic is surfaced as a RuntimeError and the pool stays usable.
+        let pool = ThreadPool::new(4);
+        let err = pool
+            .try_run(16, |i| {
+                if i == 3 {
+                    panic!("scripted task failure");
+                }
+            })
+            .expect_err("task panic must surface");
+        assert!(err.to_string().contains("scripted task failure"), "{err}");
+
+        let mut data = vec![0u8; 64];
+        let err = pool
+            .try_par_chunks_mut(&mut data, 8, |i, _chunk| {
+                if i == 2 {
+                    panic!("scripted chunk failure");
+                }
+            })
+            .expect_err("chunk panic must surface");
+        assert!(err.to_string().contains("scripted chunk failure"), "{err}");
+
+        // The pool is reusable after both failures.
+        let mut data = vec![0i64; 32];
+        pool.try_par_chunks_mut(&mut data, 4, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v = i as i64;
+            }
+        })
+        .expect("pool must stay usable after a task panic");
+        assert_eq!(data[31], 7);
+        pool.try_run(8, |_| {}).expect("run must stay usable");
+    }
+
+    #[test]
+    fn run_reraises_task_panics_on_the_caller() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(|| pool.run(4, |_| panic!("boom")));
+        let msg = match caught {
+            Err(payload) => panic_text(payload),
+            Ok(()) => panic!("run must re-raise"),
+        };
+        assert!(msg.contains("boom"), "panic context lost: {msg}");
     }
 
     #[test]

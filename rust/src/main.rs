@@ -18,6 +18,10 @@
 //!                [--policy block|shed|drop-oldest] [--deadline-ms MS]
 //!                [--retries N] [--fault-plan "panic@8;stall@16:50ms"]
 //!                [--fallback <engine-spec>] [--json] [--json-out <path>]
+//! hikonv serve   --models a=zoo:fc-head,b=model.hkv   supervised multi-model
+//!                [--reload-at N:a:new.hkv] [--restart-budget N]
+//!                [--restart-backoff-ms MS] [--liveness-ms MS]
+//!                [--fault-plan "panic@3:model=a"]  (+ the flags above)
 //! hikonv run-model --engine <engine-spec> [--model <workload>]
 //!                [--threads N] [--batch N] [--artifact <path>]
 //!                                             one graph-workload inference
@@ -55,6 +59,7 @@ use hikonv::bench::BenchConfig;
 use hikonv::cli::{render_help, Args, OptSpec};
 use hikonv::coordinator::pipeline::{CpuBackend, PjrtBackend};
 use hikonv::coordinator::ParallelCpuBackend;
+use hikonv::coordinator::{serve_registry, ModelRegistry, MultiServeConfig, ReloadAt};
 use hikonv::coordinator::{serve_with_fallback, AdmissionPolicy, ServeConfig};
 use hikonv::coordinator::{FaultInjector, FaultPlan};
 use hikonv::engine::{EngineConfig, EnginePlan, KernelRegistry};
@@ -67,7 +72,7 @@ use hikonv::theory::{
     explore, pareto_points, solve, AccumMode, Multiplier, Signedness,
 };
 use hikonv::util::table::Table;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 fn main() {
@@ -238,6 +243,9 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
+    if args.get("models").is_some() {
+        return cmd_serve_registry(args);
+    }
     let backend_name = args.get_or("backend", "hikonv");
     let frames = args.get_u64("frames", 64)?;
     let fps_cap = match args.get("fps-cap") {
@@ -323,6 +331,100 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             .map_err(|e| format!("writing {path}: {e}"))?;
     }
     Ok(())
+}
+
+/// `serve --models`: the supervised multi-model runtime
+/// ([`serve_registry`]). Each entry is `name=zoo:<workload>` (compiled
+/// through the registry's plan cache — identical specs share one
+/// compiled runner) or `name=<path.hkv>` (checksum-validated + probed
+/// artifact). Fault plans target tenants via the `model=` arg, and
+/// `--reload-at` hot-swaps a tenant's artifact mid-run.
+fn cmd_serve_registry(args: &Args) -> Result<(), String> {
+    if args.get_or("backend", "auto") == "pjrt" {
+        return Err("--models drives CPU graph runners; pjrt is single-model serve only".into());
+    }
+    let engine = parse_engine_spec(args, "backend", "auto")?;
+    let seed = args.get_u64("seed", 7)?;
+    let mut registry = ModelRegistry::new(engine);
+    let models = args.get("models").unwrap_or("");
+    for entry in models.split(',').filter(|e| !e.is_empty()) {
+        let (name, source) = entry.split_once('=').ok_or_else(|| {
+            format!("--models entry '{entry}': expected name=zoo:<workload> or name=<path.hkv>")
+        })?;
+        if let Some(workload) = source.strip_prefix("zoo:") {
+            let graph = zoo::build(workload)?;
+            let weights = random_graph_weights(&graph, seed)?;
+            registry
+                .register_graph(name, graph, weights)
+                .map_err(|e| e.to_string())?;
+        } else {
+            let mode = registry
+                .register_artifact(name, Path::new(source))
+                .map_err(|e| e.to_string())?;
+            if let LoadMode::Replanned(reason) = mode {
+                eprintln!("warning: {name}: {reason}; re-planned on this host");
+            }
+        }
+    }
+    let reload_at = match args.get("reload-at") {
+        Some(spec) => Some(parse_reload_at(spec)?),
+        None => None,
+    };
+    let fault_plan: FaultPlan = match args.get("fault-plan") {
+        Some(spec) => spec.parse()?,
+        None => FaultPlan::default(),
+    };
+    let fps_cap = match args.get("fps-cap") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| "bad --fps-cap")?),
+        None => None,
+    };
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let liveness_ms = args.get_u64("liveness-ms", 0)?;
+    let config = MultiServeConfig {
+        frames: args.get_u64("frames", 64)?,
+        source_fps_cap: fps_cap,
+        queue_depth: args.get_usize("queue-depth", 8)?,
+        max_batch: args.get_usize("batch", 4)?,
+        linger: Duration::from_millis(args.get_u64("linger-ms", 2)?),
+        seed,
+        policy: args.get_or("policy", "block").parse()?,
+        deadline: (deadline_ms > 0).then_some(Duration::from_millis(deadline_ms)),
+        max_retries: args.get_u32("retries", 2)?,
+        restart_budget: args.get_u32("restart-budget", 3)?,
+        restart_backoff: Duration::from_millis(args.get_u64("restart-backoff-ms", 5)?),
+        liveness: (liveness_ms > 0).then_some(Duration::from_millis(liveness_ms)),
+        fault_plan,
+        reload_at,
+        ..MultiServeConfig::default()
+    };
+    let report = serve_registry(&mut registry, &config).map_err(|e| e.to_string())?;
+    print!("{}", report.render());
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, report.to_json().to_string_pretty())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Parse `--reload-at <frames>:<model>:<path.hkv>`: after `<frames>`
+/// admissions, hot-reload tenant `<model>` from the artifact.
+fn parse_reload_at(spec: &str) -> Result<ReloadAt, String> {
+    let mut parts = spec.splitn(3, ':');
+    match (parts.next(), parts.next(), parts.next()) {
+        (Some(n), Some(tenant), Some(path)) if !tenant.is_empty() && !path.is_empty() => {
+            Ok(ReloadAt {
+                after_admitted: n
+                    .parse()
+                    .map_err(|_| format!("--reload-at '{spec}': bad frame count '{n}'"))?,
+                tenant: tenant.to_string(),
+                path: PathBuf::from(path),
+            })
+        }
+        _ => Err(format!("--reload-at '{spec}': expected <frames>:<model>:<path.hkv>")),
+    }
 }
 
 /// The `run-model` spec-path runner: plan + build from the `--model`
@@ -607,7 +709,8 @@ fn help() -> String {
         },
         OptSpec {
             name: "fault-plan",
-            help: "scripted fault injection: kind@frame[:arg];... (panic|stall|drop|dup|misorder)",
+            help: "scripted faults: kind@frame[:args];... (panic|stall|drop|dup|misorder), args \
+                   take x<count>, <ms>ms, model=<name>",
             default: None,
             is_switch: false,
         },
@@ -615,6 +718,36 @@ fn help() -> String {
             name: "fallback",
             help: "engine spec swapped in after repeated faults",
             default: None,
+            is_switch: false,
+        },
+        OptSpec {
+            name: "models",
+            help: "multi-model registry: name=zoo:<workload>|<path.hkv>,... (supervised runtime)",
+            default: None,
+            is_switch: false,
+        },
+        OptSpec {
+            name: "reload-at",
+            help: "hot reload: <frames>:<model>:<path.hkv> after that many admissions",
+            default: None,
+            is_switch: false,
+        },
+        OptSpec {
+            name: "restart-budget",
+            help: "worker restarts per tenant before quarantine (--models)",
+            default: Some("3"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "restart-backoff-ms",
+            help: "base worker restart backoff in ms, doubled per restart (--models)",
+            default: Some("5"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "liveness-ms",
+            help: "heartbeat staleness budget in ms before a worker restart (0 = off)",
+            default: Some("0"),
             is_switch: false,
         },
         OptSpec {

@@ -1,0 +1,235 @@
+//! Acceptance suite for the supervised multi-model serving runtime
+//! (ISSUE 8): tenant isolation under scripted faults, restart budgets
+//! escalating to quarantine, and hot artifact reload — atomic swap on
+//! success, rollback with a recorded reason on a corrupt replacement.
+//!
+//! The oracle pattern mirrors `serve_chaos.rs`: a fault-free run of the
+//! same seeded configuration is the ground truth, and the healthy
+//! tenant's detections must match it bit-for-bit.
+
+use hikonv::artifact::Artifact;
+use hikonv::coordinator::{
+    serve_registry, ModelRegistry, MultiServeConfig, ReloadAt, TenantState,
+};
+use hikonv::engine::EngineConfig;
+use hikonv::models::{random_graph_weights, zoo};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn cfg() -> EngineConfig {
+    EngineConfig::auto().with_threads(1)
+}
+
+/// Two-tenant registry with per-tenant weights; registration order is
+/// part of the oracle (it fixes each tenant's source seed).
+fn two_tenants() -> ModelRegistry {
+    let mut reg = ModelRegistry::new(cfg());
+    for (i, name) in ["a", "b"].iter().enumerate() {
+        let g = zoo::fc_head();
+        let w = random_graph_weights(&g, 20 + i as u64).unwrap();
+        reg.register_graph(name, g, w).unwrap();
+    }
+    reg
+}
+
+fn tmp_artifact(tag: &str, seed: u64) -> PathBuf {
+    let dir = std::env::temp_dir().join("hikonv_registry_serve_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}.hkv"));
+    let g = zoo::fc_head();
+    let w = random_graph_weights(&g, seed).unwrap();
+    Artifact::compile(g, w, cfg()).unwrap().write(&path).unwrap();
+    path
+}
+
+#[test]
+fn faulty_tenant_quarantines_while_the_other_stays_bit_exact() {
+    let chaos = MultiServeConfig {
+        frames: 24,
+        queue_depth: 4,
+        max_batch: 1,
+        max_retries: 0,
+        restart_budget: 2,
+        restart_backoff: Duration::from_millis(2),
+        // Three cursed single-frame batches for tenant a: two restarts,
+        // then the budget is spent and a is quarantined. Tenant b is
+        // never targeted.
+        fault_plan: "panic@1:model=a;panic@2:model=a;panic@3:model=a"
+            .parse()
+            .unwrap(),
+        ..MultiServeConfig::default()
+    };
+    let mut reg = two_tenants();
+    let report = serve_registry(&mut reg, &chaos).unwrap();
+
+    // Tenant a: restarted under backoff, then quarantined with the
+    // reason surfaced — and every admitted frame still accounted for.
+    let a = report.tenant("a").unwrap();
+    assert_eq!(a.state, "quarantined");
+    assert_eq!(a.restarts, 2);
+    assert!(a.slo.accounted(), "a identity violated: {:?}", a.slo);
+    let reason = a.quarantine_reason.as_deref().unwrap();
+    assert!(reason.contains("restart budget (2) exhausted"), "{reason}");
+    assert!(a.faults.iter().any(|f| f.kind == "panic"));
+    assert!(a.faults.iter().any(|f| f.kind == "restart"));
+    assert!(a.faults.iter().any(|f| f.kind == "quarantine"));
+    assert_eq!(reg.tenant("a").unwrap().state, TenantState::Quarantined);
+
+    // Tenant b: untouched — full completion, zero faults, zero restarts.
+    let b = report.tenant("b").unwrap();
+    assert_eq!(b.state, "drained");
+    assert_eq!(b.restarts, 0);
+    assert_eq!(b.slo.completed, 24);
+    assert!(b.slo.accounted(), "b identity violated: {:?}", b.slo);
+    assert!(b.faults.is_empty(), "faults leaked into b: {:?}", b.faults);
+
+    // Bit-exactness: b's detections equal a fault-free run's.
+    let mut clean_reg = two_tenants();
+    let clean = serve_registry(
+        &mut clean_reg,
+        &MultiServeConfig {
+            fault_plan: Default::default(),
+            ..chaos
+        },
+    )
+    .unwrap();
+    let clean_b = clean.tenant("b").unwrap();
+    assert_eq!(clean_b.slo.completed, 24);
+    assert_eq!(
+        b.detections, clean_b.detections,
+        "tenant b's detections drifted under tenant a's faults"
+    );
+}
+
+#[test]
+fn hot_reload_swaps_atomically_with_no_dropped_or_double_served_frames() {
+    // The replacement artifact is compiled from the same graph + weights
+    // the tenant is serving, so a correct swap is invisible in the
+    // detections — any drop, duplicate, or drift is the runtime's fault.
+    let g = zoo::fc_head();
+    let w = random_graph_weights(&g, 33).unwrap();
+    let path = std::env::temp_dir().join("hikonv_registry_serve_tests");
+    std::fs::create_dir_all(&path).unwrap();
+    let path = path.join("same_model.hkv");
+    Artifact::compile(g.clone(), w.clone(), cfg())
+        .unwrap()
+        .write(&path)
+        .unwrap();
+
+    let base = MultiServeConfig {
+        frames: 24,
+        source_fps_cap: Some(500.0), // ~48 ms run: the trigger fires mid-stream
+        queue_depth: 4,
+        max_batch: 2,
+        ..MultiServeConfig::default()
+    };
+
+    let mut reg = ModelRegistry::new(cfg());
+    reg.register_graph("a", g.clone(), w.clone()).unwrap();
+    let report = serve_registry(
+        &mut reg,
+        &MultiServeConfig {
+            reload_at: Some(ReloadAt {
+                after_admitted: 8,
+                tenant: "a".into(),
+                path: path.clone(),
+            }),
+            ..base.clone()
+        },
+    )
+    .unwrap();
+
+    let a = report.tenant("a").unwrap();
+    assert_eq!(a.reloads, 1, "reload must have fired: {:?}", a.faults);
+    assert_eq!(a.reload_failures, 0);
+    assert_eq!(a.state, "drained");
+    assert!(a.slo.accounted(), "identity violated: {:?}", a.slo);
+    assert_eq!(a.slo.completed, 24, "no frame dropped across the swap");
+    let mut ids: Vec<u64> = a.detections.iter().map(|d| d.frame_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 24, "no frame double-served across the swap");
+    assert!(a.faults.iter().any(|f| f.kind == "reload"));
+
+    // Bit-exact against a no-reload run of the same configuration.
+    let mut clean_reg = ModelRegistry::new(cfg());
+    clean_reg.register_graph("a", g, w).unwrap();
+    let clean = serve_registry(&mut clean_reg, &base).unwrap();
+    assert_eq!(
+        report.tenant("a").unwrap().detections,
+        clean.tenant("a").unwrap().detections,
+        "detections drifted across an identical-model hot reload"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupt_replacement_artifact_rolls_back_with_recorded_reason() {
+    let good = tmp_artifact("corrupt_src", 44);
+    let mut bytes = std::fs::read(&good).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff; // payload corruption: the checksum must catch it
+    let bad = good.with_file_name("corrupt.hkv");
+    std::fs::write(&bad, &bytes).unwrap();
+
+    let g = zoo::fc_head();
+    let w = random_graph_weights(&g, 44).unwrap();
+    let mut reg = ModelRegistry::new(cfg());
+    reg.register_graph("a", g, w).unwrap();
+    let report = serve_registry(
+        &mut reg,
+        &MultiServeConfig {
+            frames: 24,
+            source_fps_cap: Some(500.0),
+            queue_depth: 4,
+            reload_at: Some(ReloadAt {
+                after_admitted: 8,
+                tenant: "a".into(),
+                path: bad.clone(),
+            }),
+            ..MultiServeConfig::default()
+        },
+    )
+    .unwrap();
+
+    // Never a panic: the run completes on the old runner, the rejected
+    // artifact is quarantined with the reason recorded.
+    let a = report.tenant("a").unwrap();
+    assert_eq!(a.state, "drained", "tenant keeps serving the old runner");
+    assert_eq!(a.reloads, 0);
+    assert_eq!(a.reload_failures, 1);
+    assert_eq!(a.slo.completed, 24);
+    assert!(a.slo.accounted(), "identity violated: {:?}", a.slo);
+    let reason = a.quarantine_reason.as_deref().unwrap();
+    assert!(
+        reason.contains("checksum") && reason.contains("corrupt.hkv"),
+        "quarantine reason must name the artifact and failure: {reason}"
+    );
+    assert!(a
+        .faults
+        .iter()
+        .any(|f| f.kind == "reload" && f.detail.contains("checksum")));
+    std::fs::remove_file(&good).ok();
+    std::fs::remove_file(&bad).ok();
+}
+
+#[test]
+fn repeat_registrations_reuse_the_compiled_plan() {
+    let g = zoo::fc_head();
+    let w = random_graph_weights(&g, 55).unwrap();
+    let mut reg = ModelRegistry::new(cfg());
+    reg.register_graph("a", g.clone(), w.clone()).unwrap();
+    reg.register_graph("b", g, w).unwrap();
+    assert_eq!(reg.cache_hits(), 1, "identical model must hit the plan cache");
+    // Both tenants still serve independently.
+    let report = serve_registry(
+        &mut reg,
+        &MultiServeConfig {
+            frames: 8,
+            ..MultiServeConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(report.accounted());
+    assert_eq!(report.total_completed(), 16);
+}

@@ -210,6 +210,47 @@ fn retry_exhaustion_fails_only_the_cursed_batch() {
 }
 
 #[test]
+fn stall_expires_queued_frames_as_expired_not_failed() {
+    // A 400 ms stall on the first batch pins the consumer while every
+    // other frame's 60 ms deadline lapses in the queue. Those frames
+    // must be accounted as `expired` (shed pre-inference by the
+    // batcher), never as `failed` — and the identity must hold.
+    let plan: FaultPlan = "stall@0:400ms".parse().unwrap();
+    let report = serve(
+        Box::new(FaultInjector::new(Box::new(Echo), plan)),
+        &ServeConfig {
+            frames: 12,
+            queue_depth: 16, // deep enough that Block never waits
+            max_batch: 1,
+            linger: Duration::ZERO,
+            policy: AdmissionPolicy::Block,
+            deadline: Some(Duration::from_millis(60)),
+            degrade_after: 100,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(report.slo.accounted(), "identity violated: {:?}", report.slo);
+    assert_eq!(report.slo.admitted, 12);
+    assert_eq!(
+        report.slo.failed, 0,
+        "expiry must never masquerade as failure: {:?}",
+        report.slo
+    );
+    assert_eq!(report.slo.shed, 0, "Block admission sheds nothing at the door");
+    assert!(
+        report.slo.expired >= 10,
+        "stall must expire queued frames: {:?}",
+        report.slo
+    );
+    assert_eq!(report.slo.completed + report.slo.expired, 12);
+    // Frame 0 itself completes (stalled, not expired): its lateness is a
+    // deadline miss, not an expiry.
+    assert!(report.detections.iter().any(|d| d.frame_id == 0));
+    assert!(report.slo.deadline_misses >= 1);
+}
+
+#[test]
 fn drop_oldest_policy_always_serves_the_freshest_frame() {
     let report = serve(
         Box::new(Slow {
