@@ -1,0 +1,308 @@
+//! Abstract domains for the packing-soundness verifier.
+//!
+//! Two cooperating domains, both deliberately tiny:
+//!
+//! * [`Interval`] — closed integer intervals `[lo, hi]` over `i128`, the
+//!   value domain every graph edge and accumulator is abstracted into.
+//!   `i128` gives headroom for the widest products the solver can emit
+//!   (a [`Multiplier::CPU64`](crate::theory::Multiplier::CPU64) product
+//!   is 128 bits) without any of the transfer functions overflowing on
+//!   realistic inputs; the constructors saturate rather than wrap.
+//! * [`BitRange`] — the bit-width abstraction of an interval: how many
+//!   two's-complement (or plain unsigned) bits a value needs. This is
+//!   what the guard-bit and lane checks compare against slice widths.
+//!
+//! The transfer functions mirror the runner's concrete semantics
+//! (`models::graph_runner::apply_elementwise` and the conv engines), so
+//! a proof over the abstract state is a proof over every execution.
+
+#![warn(missing_docs)]
+
+use crate::util::bits_for;
+
+/// `2^exp` as `i128`, or `None` when it would not fit (treated by the
+/// checks as "unbounded capacity" — a 127-bit slice holds anything the
+/// value domain can represent).
+pub fn pow2(exp: u32) -> Option<i128> {
+    if exp >= 127 {
+        None
+    } else {
+        Some(1i128 << exp)
+    }
+}
+
+/// A closed integer interval `[lo, hi]` (`lo <= hi` always holds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    /// Inclusive lower bound.
+    pub lo: i128,
+    /// Inclusive upper bound.
+    pub hi: i128,
+}
+
+impl Interval {
+    /// The interval `[lo, hi]`. Panics if `lo > hi` (a verifier bug, not
+    /// a verification failure).
+    pub fn new(lo: i128, hi: i128) -> Interval {
+        assert!(lo <= hi, "interval [{lo}, {hi}] is empty");
+        Interval { lo, hi }
+    }
+
+    /// The single value `v`.
+    pub fn point(v: i128) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+
+    /// The value range of unsigned `bits`-bit levels: `[0, 2^bits - 1]`.
+    pub fn unsigned_bits(bits: u32) -> Interval {
+        let hi = pow2(bits).map(|p| p - 1).unwrap_or(i128::MAX);
+        Interval { lo: 0, hi }
+    }
+
+    /// The value range of two's-complement signed `bits`-bit levels:
+    /// `[-2^(bits-1), 2^(bits-1) - 1]`.
+    pub fn signed_bits(bits: u32) -> Interval {
+        assert!(bits >= 1, "signed range needs at least one bit");
+        match pow2(bits - 1) {
+            Some(p) => Interval { lo: -p, hi: p - 1 },
+            None => Interval {
+                lo: i128::MIN,
+                hi: i128::MAX,
+            },
+        }
+    }
+
+    /// Interval union (smallest interval containing both).
+    pub fn hull(self, other: Interval) -> Interval {
+        Interval {
+            lo: self.lo.min(other.lo),
+            hi: self.hi.max(other.hi),
+        }
+    }
+
+    /// Sum of two independent values (saturating at the `i128` rails).
+    pub fn add(self, other: Interval) -> Interval {
+        Interval {
+            lo: self.lo.saturating_add(other.lo),
+            hi: self.hi.saturating_add(other.hi),
+        }
+    }
+
+    /// Product of two independent values: the extrema lie on the four
+    /// corner products (saturating at the `i128` rails).
+    pub fn mul(self, other: Interval) -> Interval {
+        let corners = [
+            self.lo.saturating_mul(other.lo),
+            self.lo.saturating_mul(other.hi),
+            self.hi.saturating_mul(other.lo),
+            self.hi.saturating_mul(other.hi),
+        ];
+        let mut lo = corners[0];
+        let mut hi = corners[0];
+        for c in corners {
+            lo = lo.min(c);
+            hi = hi.max(c);
+        }
+        Interval { lo, hi }
+    }
+
+    /// Sum of up to `count` independent values from this interval, each
+    /// of which may also be absent (contribute 0) — the worst case of an
+    /// accumulation of `count` terms.
+    pub fn accumulate(self, count: u64) -> Interval {
+        let count = count as i128;
+        Interval {
+            lo: self.lo.min(0).saturating_mul(count),
+            hi: self.hi.max(0).saturating_mul(count),
+        }
+    }
+
+    /// The runner's ReLU floor: `v -> max(v, 0)`.
+    pub fn relu(self) -> Interval {
+        Interval {
+            lo: self.lo.max(0),
+            hi: self.hi.max(0),
+        }
+    }
+
+    /// Largest absolute value in the interval.
+    pub fn max_abs(&self) -> u128 {
+        (self.hi.unsigned_abs()).max(self.lo.unsigned_abs())
+    }
+
+    /// Whether every value of `other` also lies in `self`.
+    pub fn contains(&self, other: &Interval) -> bool {
+        self.lo <= other.lo && other.hi <= self.hi
+    }
+
+    /// Whether every value of this interval fits one packed segment of
+    /// `s` bits, under the solver's segment conventions
+    /// ([`DesignPoint::required_slice_bits`](crate::theory::DesignPoint)):
+    /// a never-negative segment is stored unsigned (`hi <= 2^s - 1`), a
+    /// possibly-negative one two's-complement (`-2^(s-1) <= lo` and
+    /// `hi <= 2^(s-1) - 1`).
+    pub fn fits_segment(&self, s: u32) -> bool {
+        if s == 0 {
+            return false;
+        }
+        if self.lo >= 0 {
+            match pow2(s) {
+                Some(p) => self.hi <= p - 1,
+                None => true,
+            }
+        } else {
+            match pow2(s - 1) {
+                Some(p) => self.lo >= -p && self.hi <= p - 1,
+                None => true,
+            }
+        }
+    }
+
+    /// The bit-range abstraction of this interval.
+    pub fn bit_range(&self) -> BitRange {
+        BitRange::of(self)
+    }
+
+    /// Compact `[lo, hi]` rendering for diagnostics.
+    pub fn render(&self) -> String {
+        format!("[{}, {}]", self.lo, self.hi)
+    }
+}
+
+/// The bit-width abstraction of an [`Interval`]: the number of bits a
+/// value needs, and whether those bits are two's-complement signed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitRange {
+    /// Minimal container width in bits (including the sign bit when
+    /// `signed`).
+    pub bits: u32,
+    /// Whether the container must be two's-complement signed.
+    pub signed: bool,
+}
+
+impl BitRange {
+    /// The minimal container for `iv`: unsigned `bits_for(hi)` when the
+    /// interval is never negative, otherwise the smallest signed width
+    /// holding both rails.
+    pub fn of(iv: &Interval) -> BitRange {
+        if iv.lo >= 0 {
+            BitRange {
+                bits: bits_for(iv.hi as u128),
+                signed: false,
+            }
+        } else {
+            // Smallest b with -2^(b-1) <= lo and hi <= 2^(b-1) - 1.
+            let m = iv.lo.unsigned_abs();
+            let neg = if m == 1 { 1 } else { bits_for(m - 1) + 1 };
+            let pos = if iv.hi <= 0 {
+                1
+            } else {
+                bits_for(iv.hi as u128) + 1
+            };
+            BitRange {
+                bits: neg.max(pos),
+                signed: true,
+            }
+        }
+    }
+
+    /// Whether a value of this range fits a container of `width` bits
+    /// (an unsigned range fits a signed container one bit wider).
+    pub fn fits_in(&self, width: u32, container_signed: bool) -> bool {
+        if self.signed && !container_signed {
+            return false;
+        }
+        let need = if !self.signed && container_signed {
+            self.bits + 1
+        } else {
+            self.bits
+        };
+        need <= width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ranges_match_qtype_semantics() {
+        assert_eq!(Interval::unsigned_bits(4), Interval::new(0, 15));
+        assert_eq!(Interval::signed_bits(4), Interval::new(-8, 7));
+        assert_eq!(Interval::unsigned_bits(1), Interval::new(0, 1));
+        assert_eq!(Interval::signed_bits(1), Interval::new(-1, 0));
+    }
+
+    #[test]
+    fn mul_takes_corner_extrema() {
+        let a = Interval::new(0, 15); // unsigned 4-bit activations
+        let s = Interval::new(-8, 7); // signed 4-bit weights
+        let p = a.mul(s);
+        assert_eq!(p, Interval::new(15 * -8, 15 * 7));
+        let neg = Interval::new(-3, -2).mul(Interval::new(-5, -4));
+        assert_eq!(neg, Interval::new(8, 15));
+    }
+
+    #[test]
+    fn accumulate_matches_solver_segment_bounds() {
+        // 4x4 unsigned, 3 terms: the paper CPU point's 675 segment max.
+        let prod = Interval::new(0, 15).mul(Interval::new(0, 15));
+        let seg = prod.accumulate(3);
+        assert_eq!(seg, Interval::new(0, 675));
+        assert!(seg.fits_segment(10));
+        assert!(!seg.fits_segment(9));
+    }
+
+    #[test]
+    fn fits_segment_signed_rule() {
+        // Signed segment [-120, 105] needs 8 bits: -128 <= -120, 105 <= 127.
+        let seg = Interval::new(-120, 105);
+        assert!(seg.fits_segment(8));
+        assert!(!seg.fits_segment(7));
+        // Exactly -2^(s-1) fits; -2^(s-1) - 1 does not.
+        assert!(Interval::new(-128, 0).fits_segment(8));
+        assert!(!Interval::new(-129, 0).fits_segment(8));
+        // Degenerate and huge slice widths never panic.
+        assert!(!Interval::new(0, 1).fits_segment(0));
+        assert!(Interval::new(i128::MIN, i128::MAX).fits_segment(128));
+    }
+
+    #[test]
+    fn bit_range_minimal_containers() {
+        assert_eq!(
+            Interval::new(0, 255).bit_range(),
+            BitRange {
+                bits: 8,
+                signed: false
+            }
+        );
+        assert_eq!(
+            Interval::new(-128, 127).bit_range(),
+            BitRange {
+                bits: 8,
+                signed: true
+            }
+        );
+        assert_eq!(
+            Interval::new(-129, 0).bit_range(),
+            BitRange {
+                bits: 9,
+                signed: true
+            }
+        );
+        assert!(Interval::new(0, 255).bit_range().fits_in(8, false));
+        assert!(!Interval::new(0, 255).bit_range().fits_in(8, true));
+        assert!(Interval::new(0, 255).bit_range().fits_in(9, true));
+        assert!(!Interval::new(-1, 0).bit_range().fits_in(8, false));
+    }
+
+    #[test]
+    fn saturation_never_wraps() {
+        let huge = Interval::new(i128::MIN / 2, i128::MAX / 2);
+        let sq = huge.mul(huge);
+        assert!(sq.lo <= 0 && sq.hi > 0);
+        let acc = sq.accumulate(u64::MAX);
+        assert_eq!(acc.hi, i128::MAX);
+        assert!(acc.lo <= sq.lo);
+    }
+}

@@ -1,0 +1,1026 @@
+//! Static packing-soundness verifier: abstract interpretation over a
+//! validated [`GraphSpec`] and a resolved [`EnginePlan`], with **no
+//! inference executed**.
+//!
+//! The planner's feasibility hooks trust the solver's closed-form
+//! guard-bit sizing (`theory::solver`, Thms. 1–3). This module is the
+//! independent cross-examination: every value that can flow along a
+//! graph edge is abstracted into an [`Interval`], every conv/FC unit's
+//! worst-case accumulator is derived from its [`QType`] value ranges,
+//! kernel dims, channel depth and accumulation depth, and the packed
+//! layout is re-proved segment by segment with plain interval
+//! arithmetic ([`Interval::fits_segment`]) rather than the solver's own
+//! `required_slice_bits` formula. A disagreement between the two proofs
+//! is a bug in one of them — which is exactly what the verifier exists
+//! to catch before a plan executes.
+//!
+//! Per unit the verifier re-proves:
+//!
+//! * **guard bits** — the deepest per-segment accumulation stays inside
+//!   its `S`-bit slice and never carries into the neighbour (`V-GUARD`),
+//!   and the packed operands obey the Eq. 7/8 port layout;
+//! * **signedness** — the operand value ranges the design point assumes
+//!   contain the ranges the graph actually produces (unsigned
+//!   activations × signed weights), so the sign-extension/cross-term
+//!   correction applies (`V-SIGN`);
+//! * **requantization** — the proven accumulator interval maps into the
+//!   output [`QType`] through an existing (and, when an artifact
+//!   supplies them, the recorded) shift without saturation
+//!   (`V-REQUANT`);
+//! * **lanes** — the packed product fits the widest software lane the
+//!   engines can execute, and any narrower configured host word
+//!   (`V-LANE`);
+//! * **accumulators** — every wide edge fits the [`ACC_BITS`] i64
+//!   budget, residual adds included (`V-ACC`);
+//! * **plan integrity** — the plan rows agree with what this verifier
+//!   re-derives from the graph (`V-PLAN`), and an artifact's embedded
+//!   host signature agrees with its embedded plan (`V-HOST`).
+//!
+//! Three call sites consume this module (`docs/ANALYSIS.md`): the
+//! `hikonv verify` subcommand / `plan --verify` flag, the mandatory
+//! cross-check inside [`EnginePlan::plan_units`], and the artifact
+//! loader's pre-execution re-verification.
+
+#![warn(missing_docs)]
+
+mod domain;
+
+pub use domain::{BitRange, Interval};
+
+use crate::conv::conv2d::{planned_design, Conv2dSpec};
+use crate::engine::{EngineConfig, EnginePlan, KernelRegistry, LayerPlan};
+use crate::models::graph::{ConvUnit, GraphSpec, LayerOp, QType, ACC_BITS};
+use crate::runtime::RuntimeError;
+use crate::theory::{solve, AccumMode, DesignPoint, Signedness, FAST_LANE_BITS, WIDE_LANE_BITS};
+use crate::util::json::Json;
+
+/// Machine-readable verifier error codes (stable strings — the CLI JSON
+/// schema and the CI verify step key on them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Code {
+    /// Segment accumulation exceeds its slice: guard bits would carry
+    /// into the neighbouring segment (or the Eq. 7/8 port layout is
+    /// violated).
+    Guard,
+    /// The design point's signedness convention does not cover the
+    /// operand value ranges the graph actually produces.
+    Sign,
+    /// A config bitwidth override is narrower than the unit's levels.
+    Range,
+    /// A requant shift cannot (or, per its calibration record, does
+    /// not) map the proven accumulator interval into the output type.
+    Requant,
+    /// The packed product does not fit the executable software lane
+    /// (or a narrower configured host word).
+    Lane,
+    /// A wide edge exceeds the i64 accumulator budget ([`ACC_BITS`]).
+    Acc,
+    /// A plan row disagrees with what the verifier re-derives.
+    Plan,
+    /// An artifact's host signature disagrees with its embedded plan.
+    Host,
+}
+
+impl Code {
+    /// The stable wire spelling (`V-...`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Code::Guard => "V-GUARD",
+            Code::Sign => "V-SIGN",
+            Code::Range => "V-RANGE",
+            Code::Requant => "V-REQUANT",
+            Code::Lane => "V-LANE",
+            Code::Acc => "V-ACC",
+            Code::Plan => "V-PLAN",
+            Code::Host => "V-HOST",
+        }
+    }
+}
+
+impl std::fmt::Display for Code {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One structured verifier finding: error code, offending layer (graph
+/// node or plan row), human detail, and the offending interval when the
+/// violation is about a value range.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// The machine-readable error code.
+    pub code: Code,
+    /// Graph node / plan row the finding is anchored to.
+    pub layer: String,
+    /// Human-readable detail.
+    pub detail: String,
+    /// The offending interval, when the violation is about a range.
+    pub interval: Option<Interval>,
+}
+
+impl Diagnostic {
+    fn new(code: Code, layer: &str, detail: String, interval: Option<Interval>) -> Diagnostic {
+        Diagnostic {
+            code,
+            layer: layer.to_string(),
+            detail,
+            interval,
+        }
+    }
+
+    /// One-line human rendering (`V-CODE layer: detail [lo, hi]`).
+    pub fn render(&self) -> String {
+        match &self.interval {
+            Some(iv) => format!("{} {}: {} {}", self.code, self.layer, self.detail, iv.render()),
+            None => format!("{} {}: {}", self.code, self.layer, self.detail),
+        }
+    }
+
+    /// JSON form (interval rails clamp to i64 for the emitter).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .set("code", self.code.as_str())
+            .set("layer", self.layer.as_str())
+            .set("detail", self.detail.as_str());
+        if let Some(iv) = &self.interval {
+            o = o.set("lo", clamp_i64(iv.lo)).set("hi", clamp_i64(iv.hi));
+        }
+        o
+    }
+}
+
+fn clamp_i64(v: i128) -> i64 {
+    v.clamp(i64::MIN as i128, i64::MAX as i128) as i64
+}
+
+/// The verifier's proof state for one conv/FC unit.
+#[derive(Clone, Debug)]
+pub struct UnitReport {
+    /// Unit (graph node) name.
+    pub layer: String,
+    /// Kernel the plan binds to this unit.
+    pub kernel: String,
+    /// Operand bitwidths the design point is solved at.
+    pub p: u32,
+    /// Weight-side bitwidth (see [`Self::p`]).
+    pub q: u32,
+    /// Proven worst-case accumulator interval of one output value.
+    pub acc: Interval,
+    /// Worst-case per-segment interval of the packed layout (`None`
+    /// for unpacked kernels).
+    pub segment: Option<Interval>,
+    /// The re-derived design point (`None` for unpacked kernels).
+    pub design: Option<DesignPoint>,
+    /// Findings against this unit (empty = proven sound).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl UnitReport {
+    /// Whether this unit carried no findings.
+    pub fn is_sound(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .set("layer", self.layer.as_str())
+            .set("kernel", self.kernel.as_str())
+            .set("p", self.p)
+            .set("q", self.q)
+            .set("acc_lo", clamp_i64(self.acc.lo))
+            .set("acc_hi", clamp_i64(self.acc.hi))
+            .set("sound", self.is_sound());
+        if let Some(dp) = &self.design {
+            o = o
+                .set("s", dp.s)
+                .set("n", dp.n)
+                .set("k", dp.k)
+                .set("gb", dp.gb);
+        }
+        if let Some(seg) = &self.segment {
+            o = o
+                .set("segment_lo", clamp_i64(seg.lo))
+                .set("segment_hi", clamp_i64(seg.hi));
+        }
+        o.set(
+            "diagnostics",
+            Json::Array(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+        )
+    }
+}
+
+/// The full verification report for one workload + plan.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    /// Workload (graph) name.
+    pub workload: String,
+    /// Canonical config spelling the plan was derived from.
+    pub config: String,
+    /// Host signature of the verified plan.
+    pub host: String,
+    /// Per-unit proof state, in execution order.
+    pub units: Vec<UnitReport>,
+    /// Findings not anchored to a single unit (requant nodes, residual
+    /// adds, plan-shape and host-signature checks).
+    pub graph_diagnostics: Vec<Diagnostic>,
+}
+
+impl VerifyReport {
+    /// Whether every check passed.
+    pub fn is_sound(&self) -> bool {
+        self.graph_diagnostics.is_empty() && self.units.iter().all(|u| u.is_sound())
+    }
+
+    /// Every finding, unit-anchored and graph-level, in report order.
+    pub fn diagnostics(&self) -> Vec<&Diagnostic> {
+        self.units
+            .iter()
+            .flat_map(|u| u.diagnostics.iter())
+            .chain(self.graph_diagnostics.iter())
+            .collect()
+    }
+
+    /// Multi-line human rendering of every finding (empty when sound).
+    pub fn render_diagnostics(&self) -> String {
+        self.diagnostics()
+            .iter()
+            .map(|d| d.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// The machine-readable report (the `hikonv verify` JSON schema).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("workload", self.workload.as_str())
+            .set("config", self.config.as_str())
+            .set("host", self.host.as_str())
+            .set("sound", self.is_sound())
+            .set("violations", self.diagnostics().len())
+            .set(
+                "units",
+                Json::Array(self.units.iter().map(|u| u.to_json()).collect()),
+            )
+            .set(
+                "diagnostics",
+                Json::Array(self.diagnostics().iter().map(|d| d.to_json()).collect()),
+            )
+    }
+}
+
+/// Runtime evidence an artifact supplies alongside its plan: concrete
+/// weight levels (per unit), calibrated requant shifts, the calibration
+/// records those shifts were derived from, and the artifact's claimed
+/// host signature. All optional — static (`plan`/`verify --model`)
+/// verification passes [`Evidence::none`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Evidence<'a> {
+    /// Per-unit weight levels (`co·ci·k·k` each), unit order.
+    pub weights: Option<&'a [Vec<i64>]>,
+    /// Calibrated requant shifts, requant-slot order.
+    pub shifts: Option<&'a [u32]>,
+    /// Calibration-observed `max |accumulator|` per requant slot (the
+    /// value each shift was derived from).
+    pub calib: Option<&'a [i64]>,
+    /// The host signature the artifact claims (checked against the
+    /// embedded plan's own signature).
+    pub host: Option<&'a str>,
+}
+
+impl Evidence<'static> {
+    /// No runtime evidence: purely static verification.
+    pub fn none() -> Evidence<'static> {
+        Evidence::default()
+    }
+}
+
+/// The operand value ranges a design point's signedness convention
+/// assumes for `(f, g)` at bitwidths `(p, q)`.
+pub fn assumed_operands(p: u32, q: u32, signedness: Signedness) -> (Interval, Interval) {
+    match signedness {
+        Signedness::Unsigned => (Interval::unsigned_bits(p), Interval::unsigned_bits(q)),
+        Signedness::Signed => (Interval::signed_bits(p), Interval::signed_bits(q)),
+        Signedness::UnsignedBySigned => (Interval::unsigned_bits(p), Interval::signed_bits(q)),
+    }
+}
+
+/// Re-derive the design point (and its per-segment accumulation depth)
+/// the named builtin kernel binds for `unit` under `cfg` — the same
+/// derivation the factories perform, so a doctored plan row cannot
+/// smuggle a different point past the verifier. `Ok(None)` for the
+/// scalar baseline and for unknown (custom) kernels, which pack
+/// nothing.
+pub fn kernel_design(
+    kernel: &str,
+    unit: &ConvUnit,
+    cfg: &EngineConfig,
+) -> Result<Option<(u64, DesignPoint)>, String> {
+    let (p, q) = cfg.layer_bits(unit.a_bits, unit.w_bits);
+    let spec = Conv2dSpec {
+        shape: unit.padded_shape(),
+        mult: cfg.mult,
+        p,
+        q,
+        signedness: cfg.signedness,
+    };
+    let dp = match kernel {
+        "hikonv" | "hikonv-tiled" => match cfg.channel_block {
+            Some(b) => {
+                let block = b.clamp(1, spec.shape.ci);
+                let m = (block * spec.shape.k) as u64;
+                solve(spec.mult, p, q, cfg.signedness, AccumMode::Extended { m })
+                    .map_err(|e| e.to_string())?
+            }
+            None => planned_design(&spec)?.1,
+        },
+        "im2row" => solve(spec.mult, p, q, cfg.signedness, AccumMode::Single)
+            .map_err(|e| e.to_string())?,
+        _ => return Ok(None),
+    };
+    Ok(Some((dp.accum.terms(dp.n, dp.k), dp)))
+}
+
+/// Interval re-proof of one design point against the actual operand
+/// intervals `f`/`g`, accumulated `terms` products deep per segment.
+/// This is the independent check: it uses only interval arithmetic and
+/// the Eq. 7/8 layout, never the solver's `required_slice_bits`.
+pub fn check_design(
+    dp: &DesignPoint,
+    f: Interval,
+    g: Interval,
+    terms: u64,
+    layer: &str,
+) -> (Interval, Vec<Diagnostic>) {
+    let mut diags = Vec::new();
+    let (af, ag) = assumed_operands(dp.p, dp.q, dp.signedness);
+    if !af.contains(&f) {
+        diags.push(Diagnostic::new(
+            Code::Sign,
+            layer,
+            format!(
+                "activation levels exceed the {} design point's assumed range {}",
+                dp.signedness,
+                af.render()
+            ),
+            Some(f),
+        ));
+    }
+    if !ag.contains(&g) {
+        diags.push(Diagnostic::new(
+            Code::Sign,
+            layer,
+            format!(
+                "weight levels exceed the {} design point's assumed range {}",
+                dp.signedness,
+                ag.render()
+            ),
+            Some(g),
+        ));
+    }
+    // Segment proof: the worst accumulation of `terms` products must
+    // stay inside one S-bit slice — over the union of the actual and
+    // the assumed operand ranges, so a too-narrow sign assumption also
+    // surfaces as the overflow it would cause.
+    let worst_f = f.hull(af);
+    let worst_g = g.hull(ag);
+    let segment = worst_f.mul(worst_g).accumulate(terms);
+    if !segment.fits_segment(dp.s) {
+        diags.push(Diagnostic::new(
+            Code::Guard,
+            layer,
+            format!(
+                "worst-case segment accumulation of {terms} products overflows the \
+                 {}-bit slice (guard bits {})",
+                dp.s, dp.gb
+            ),
+            Some(segment),
+        ));
+    }
+    // Eq. 7/8: packed operands may not overlap inside the ports.
+    if dp.n == 0 || dp.k == 0 {
+        diags.push(Diagnostic::new(
+            Code::Guard,
+            layer,
+            format!("degenerate packing counts N={} K={}", dp.n, dp.k),
+            None,
+        ));
+    } else {
+        if dp.p + (dp.n as u32 - 1) * dp.s > dp.mult.bit_a {
+            diags.push(Diagnostic::new(
+                Code::Guard,
+                layer,
+                format!(
+                    "Eq. 7 layout violated: p + (N-1)S = {} exceeds port A ({} bits)",
+                    dp.p + (dp.n as u32 - 1) * dp.s,
+                    dp.mult.bit_a
+                ),
+                None,
+            ));
+        }
+        if dp.q + (dp.k as u32 - 1) * dp.s > dp.mult.bit_b {
+            diags.push(Diagnostic::new(
+                Code::Guard,
+                layer,
+                format!(
+                    "Eq. 8 layout violated: q + (K-1)S = {} exceeds port B ({} bits)",
+                    dp.q + (dp.k as u32 - 1) * dp.s,
+                    dp.mult.bit_b
+                ),
+                None,
+            ));
+        }
+    }
+    // The packed product must fit the widest executable software lane;
+    // a point past WIDE_LANE_BITS cannot run at all.
+    if !dp.fits_lane(WIDE_LANE_BITS) {
+        diags.push(Diagnostic::new(
+            Code::Lane,
+            layer,
+            format!(
+                "packed product needs {} bits, beyond the {}-bit i128 lane",
+                dp.s as usize * dp.segments() + 1,
+                WIDE_LANE_BITS
+            ),
+            None,
+        ));
+    }
+    (segment, diags)
+}
+
+/// Worst-case accumulator interval of one output value of `unit`:
+/// weight-aware (per-output-channel signed column sums) when concrete
+/// weights are supplied, the static `QType`-range bound otherwise.
+pub fn unit_acc_interval(unit: &ConvUnit, weights: Option<&[i64]>) -> Interval {
+    let taps = (unit.ci * unit.k * unit.k) as u64;
+    let f = Interval::unsigned_bits(unit.a_bits);
+    match weights {
+        Some(w) if w.len() == unit.weight_len() => {
+            let per = unit.ci * unit.k * unit.k;
+            let mut lo = 0i128;
+            let mut hi = 0i128;
+            for row in w.chunks(per) {
+                let pos: i128 = row.iter().map(|&v| (v as i128).max(0)).sum();
+                let neg: i128 = row.iter().map(|&v| (v as i128).min(0)).sum();
+                lo = lo.min(neg.saturating_mul(f.hi));
+                hi = hi.max(pos.saturating_mul(f.hi));
+            }
+            Interval::new(lo, hi)
+        }
+        _ => f.mul(Interval::signed_bits(unit.w_bits)).accumulate(taps),
+    }
+}
+
+/// Verify one conv/FC unit against the kernel its plan binds: the
+/// packing proof ([`check_design`]), the configured-lane check, the
+/// bitwidth-override range check and the accumulator-budget check.
+/// Pass concrete `weights` to tighten the accumulator bound to the
+/// artifact's real weight tensors.
+pub fn verify_unit_with(
+    unit: &ConvUnit,
+    kernel: &str,
+    cfg: &EngineConfig,
+    weights: Option<&[i64]>,
+) -> UnitReport {
+    let (p, q) = cfg.layer_bits(unit.a_bits, unit.w_bits);
+    let mut diags = Vec::new();
+    if p < unit.a_bits || q < unit.w_bits {
+        diags.push(Diagnostic::new(
+            Code::Range,
+            &unit.name,
+            format!(
+                "config override p={p},q={q} is narrower than the unit's \
+                 {}/{}-bit levels",
+                unit.a_bits, unit.w_bits
+            ),
+            None,
+        ));
+    }
+    let f = Interval::unsigned_bits(unit.a_bits);
+    let g = Interval::signed_bits(unit.w_bits);
+    let mut segment = None;
+    let mut design = None;
+    match kernel_design(kernel, unit, cfg) {
+        Ok(Some((terms, dp))) => {
+            let (seg, mut dd) = check_design(&dp, f, g, terms, &unit.name);
+            diags.append(&mut dd);
+            // A host word configured narrower than the i64 fast lane is
+            // a hard budget: the engines would still run i64, silently
+            // past the declared word.
+            if cfg.lane_bits < FAST_LANE_BITS && !dp.fits_lane(cfg.lane_bits) {
+                diags.push(Diagnostic::new(
+                    Code::Lane,
+                    &unit.name,
+                    format!(
+                        "packed product needs {} bits, beyond the configured \
+                         {}-bit host word",
+                        dp.s as usize * dp.segments() + 1,
+                        cfg.lane_bits
+                    ),
+                    None,
+                ));
+            }
+            segment = Some(seg);
+            design = Some(dp);
+        }
+        Ok(None) => {}
+        Err(e) => diags.push(Diagnostic::new(
+            Code::Plan,
+            &unit.name,
+            format!("kernel '{kernel}' has no feasible design point: {e}"),
+            None,
+        )),
+    }
+    let acc = unit_acc_interval(unit, weights);
+    if !acc.bit_range().fits_in(ACC_BITS, true) {
+        diags.push(Diagnostic::new(
+            Code::Acc,
+            &unit.name,
+            format!("accumulator exceeds the {ACC_BITS}-bit i64 budget"),
+            Some(acc),
+        ));
+    }
+    UnitReport {
+        layer: unit.name.clone(),
+        kernel: kernel.to_string(),
+        p,
+        q,
+        acc,
+        segment,
+        design,
+        diagnostics: diags,
+    }
+}
+
+/// [`verify_unit_with`] without runtime evidence — the planner's
+/// mandatory cross-check entry point.
+pub fn verify_unit(unit: &ConvUnit, kernel: &str, cfg: &EngineConfig) -> UnitReport {
+    verify_unit_with(unit, kernel, cfg, None)
+}
+
+/// The smallest right-shift mapping `maxabs` into unsigned `bits`
+/// levels — exactly the runner's calibration rule.
+pub fn minimal_shift(maxabs: i128, bits: u32) -> u32 {
+    let target = (1i128 << bits.min(62)) - 1;
+    let mut v = maxabs.max(1);
+    let mut s = 0u32;
+    while v > target {
+        v >>= 1;
+        s += 1;
+    }
+    s
+}
+
+/// Check one plan row against the unit and design the verifier
+/// re-derived (`V-PLAN` on any disagreement).
+fn check_plan_row(lp: &LayerPlan, unit: &ConvUnit, cfg: &EngineConfig, rep: &mut UnitReport) {
+    let (p, q) = cfg.layer_bits(unit.a_bits, unit.w_bits);
+    if lp.layer != unit.name {
+        rep.diagnostics.push(Diagnostic::new(
+            Code::Plan,
+            &unit.name,
+            format!("plan row is for '{}', graph unit is '{}'", lp.layer, unit.name),
+            None,
+        ));
+    }
+    if (lp.p, lp.q) != (p, q) {
+        rep.diagnostics.push(Diagnostic::new(
+            Code::Plan,
+            &unit.name,
+            format!(
+                "plan row solved at p={}/q={}, unit requires p={p}/q={q}",
+                lp.p, lp.q
+            ),
+            None,
+        ));
+    }
+    if lp.stride != unit.stride {
+        rep.diagnostics.push(Diagnostic::new(
+            Code::Plan,
+            &unit.name,
+            format!("plan stride {} != unit stride {}", lp.stride, unit.stride),
+            None,
+        ));
+    }
+    let registry = KernelRegistry::builtin();
+    if registry.get(&lp.kernel).is_none() {
+        rep.diagnostics.push(Diagnostic::new(
+            Code::Plan,
+            &unit.name,
+            format!("plan kernel '{}' is not a builtin registry entry", lp.kernel),
+            None,
+        ));
+        return;
+    }
+    let derived = match &rep.design {
+        Some(dp) => dp.ops_per_mult(),
+        None => 1, // baseline packs nothing
+    };
+    if lp.ops_per_mult != derived {
+        rep.diagnostics.push(Diagnostic::new(
+            Code::Plan,
+            &unit.name,
+            format!(
+                "plan claims {} ops/mult, verifier re-derives {derived}",
+                lp.ops_per_mult
+            ),
+            None,
+        ));
+    }
+}
+
+/// Verify a resolved plan against its graph with optional runtime
+/// [`Evidence`]: plan-shape and per-row integrity, every unit's packing
+/// proof, then one abstract-interpretation pass over the node list
+/// propagating value intervals through pools/ReLU/requant/residual adds
+/// to prove every requant shift and wide edge sound.
+///
+/// `Err` only when the graph itself fails validation (there is nothing
+/// to interpret); all verification findings land in the report.
+pub fn verify_plan(
+    graph: &GraphSpec,
+    plan: &EnginePlan,
+    ev: &Evidence<'_>,
+) -> Result<VerifyReport, RuntimeError> {
+    let info = graph.validate()?;
+    let cfg = &plan.config;
+    let mut graph_diags = Vec::new();
+    if plan.layers.len() != info.units.len() {
+        graph_diags.push(Diagnostic::new(
+            Code::Plan,
+            &graph.name,
+            format!(
+                "plan has {} rows for {} conv/FC units",
+                plan.layers.len(),
+                info.units.len()
+            ),
+            None,
+        ));
+    }
+    if let Some(host) = ev.host {
+        if host != plan.host() {
+            graph_diags.push(Diagnostic::new(
+                Code::Host,
+                &graph.name,
+                format!(
+                    "artifact claims host '{host}', embedded plan resolves to '{}'",
+                    plan.host()
+                ),
+                None,
+            ));
+        }
+    }
+    let mut units = Vec::with_capacity(info.units.len());
+    let mut node_iv: Vec<Interval> = Vec::with_capacity(graph.nodes.len());
+    let mut iv = Interval::unsigned_bits(graph.input_bits);
+    let acc_budget = Interval::signed_bits(ACC_BITS);
+    for (i, node) in graph.nodes.iter().enumerate() {
+        match &node.op {
+            LayerOp::Conv2d { .. } | LayerOp::Fc { .. } => {
+                if let Some(ui) = info.unit_of_node[i] {
+                    let unit = &info.units[ui];
+                    let lp = plan.layers.get(ui);
+                    let kernel = lp.map(|l| l.kernel.as_str()).unwrap_or("baseline");
+                    let weights = ev
+                        .weights
+                        .and_then(|w| w.get(ui))
+                        .map(|v| v.as_slice());
+                    let mut rep = verify_unit_with(unit, kernel, cfg, weights);
+                    if let Some(lp) = lp {
+                        check_plan_row(lp, unit, cfg, &mut rep);
+                    }
+                    iv = rep.acc;
+                    units.push(rep);
+                }
+            }
+            LayerOp::MaxPool { .. } | LayerOp::AvgPool { .. } => {
+                // Max keeps values; a floored mean of values in [lo, hi]
+                // stays in [lo, hi]. Interval preserved.
+            }
+            LayerOp::Relu => iv = iv.relu(),
+            LayerOp::Requant { bits } => {
+                if let Some(slot) = info.requant_of_node[i] {
+                    check_requant(&node.name, slot, *bits, iv, ev, &mut graph_diags);
+                }
+                iv = Interval::unsigned_bits(*bits);
+            }
+            LayerOp::Add { with } => {
+                iv = iv.add(node_iv[*with]);
+                if !acc_budget.contains(&iv) {
+                    graph_diags.push(Diagnostic::new(
+                        Code::Acc,
+                        &node.name,
+                        format!("residual sum exceeds the {ACC_BITS}-bit i64 budget"),
+                        Some(iv),
+                    ));
+                }
+            }
+        }
+        node_iv.push(iv);
+    }
+    Ok(VerifyReport {
+        workload: graph.name.clone(),
+        config: cfg.to_string(),
+        host: plan.host(),
+        units,
+        graph_diagnostics: graph_diags,
+    })
+}
+
+/// Requant-node checks: existence of a sound shift against the proven
+/// incoming interval, plus (with artifact evidence) consistency of the
+/// concrete shift with its calibration record and of the record with
+/// the proven bound.
+fn check_requant(
+    node: &str,
+    slot: usize,
+    bits: u32,
+    incoming: Interval,
+    ev: &Evidence<'_>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    // Requant floors at 0 first, so only the non-negative side shifts.
+    let hi = incoming.relu().hi;
+    let needed = minimal_shift(hi, bits);
+    if needed > 63 {
+        diags.push(Diagnostic::new(
+            Code::Requant,
+            node,
+            format!("no i64 shift maps the proven interval into u{bits} (needs {needed})"),
+            Some(incoming),
+        ));
+    }
+    let Some(shift) = ev.shifts.and_then(|s| s.get(slot).copied()) else {
+        return;
+    };
+    if shift > 63 {
+        diags.push(Diagnostic::new(
+            Code::Requant,
+            node,
+            format!("requant shift {shift} is not a valid i64 shift"),
+            None,
+        ));
+        return;
+    }
+    if shift > needed {
+        diags.push(Diagnostic::new(
+            Code::Requant,
+            node,
+            format!(
+                "shift {shift} exceeds the worst-case requirement {needed}: even \
+                 all-max-magnitude input could not have calibrated it"
+            ),
+            Some(incoming),
+        ));
+    }
+    if let Some(record) = ev.calib.and_then(|c| c.get(slot).copied()) {
+        if record < 0 || (record as i128) > hi {
+            diags.push(Diagnostic::new(
+                Code::Requant,
+                node,
+                format!(
+                    "calibration record {record} lies outside the proven \
+                     accumulator bound"
+                ),
+                Some(incoming),
+            ));
+        }
+        let derived = minimal_shift(record.max(0) as i128, bits);
+        if shift != derived {
+            diags.push(Diagnostic::new(
+                Code::Requant,
+                node,
+                format!(
+                    "shift {shift} disagrees with its calibration record \
+                     {record} (calibration derives {derived})"
+                ),
+                None,
+            ));
+        }
+    }
+}
+
+/// Plan a graph workload (without the planner's own cross-check, so an
+/// unsound configuration still yields a full report) and verify it
+/// statically — the `hikonv verify --model` entry point.
+pub fn verify_graph(graph: &GraphSpec, cfg: &EngineConfig) -> Result<VerifyReport, RuntimeError> {
+    let plan = EnginePlan::plan_graph_unverified(graph, cfg).map_err(RuntimeError::new)?;
+    verify_plan(graph, &plan, &Evidence::none())
+}
+
+/// The QType value range as an [`Interval`] (convenience for callers
+/// relating edge types to proofs).
+pub fn qtype_interval(ty: &QType) -> Interval {
+    let (lo, hi) = ty.level_range();
+    Interval::new(lo as i128, hi as i128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::theory::Multiplier;
+
+    fn unit(a_bits: u32, w_bits: u32) -> ConvUnit {
+        ConvUnit {
+            name: "t".into(),
+            ci: 8,
+            co: 8,
+            hi: 16,
+            wi: 16,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            a_bits,
+            w_bits,
+        }
+    }
+
+    #[test]
+    fn default_config_units_verify_sound() {
+        let cfg = EngineConfig::auto();
+        for kernel in ["baseline", "hikonv", "hikonv-tiled", "im2row"] {
+            for (a, w) in [(2, 2), (4, 4), (8, 8), (3, 5)] {
+                let rep = verify_unit(&unit(a, w), kernel, &cfg);
+                assert!(rep.is_sound(), "{kernel} {a}/{w}: {:?}", rep.diagnostics);
+            }
+        }
+    }
+
+    #[test]
+    fn unsigned_convention_on_signed_weights_is_v_sign() {
+        let cfg = EngineConfig::auto().with_signedness(Signedness::Unsigned);
+        let rep = verify_unit(&unit(4, 4), "hikonv", &cfg);
+        assert!(!rep.is_sound());
+        assert!(
+            rep.diagnostics.iter().any(|d| d.code == Code::Sign),
+            "{:?}",
+            rep.diagnostics
+        );
+    }
+
+    #[test]
+    fn narrow_bit_override_is_v_range() {
+        let cfg = EngineConfig::auto().with_bits(2, 2);
+        let rep = verify_unit(&unit(4, 4), "hikonv", &cfg);
+        assert!(rep.diagnostics.iter().any(|d| d.code == Code::Range));
+    }
+
+    #[test]
+    fn tampered_design_point_is_v_guard() {
+        let cfg = EngineConfig::auto();
+        let u = unit(4, 4);
+        let Some((terms, mut dp)) = kernel_design("hikonv", &u, &cfg).unwrap() else {
+            panic!("hikonv has a design point");
+        };
+        let f = Interval::unsigned_bits(4);
+        let g = Interval::signed_bits(4);
+        let (_, clean) = check_design(&dp, f, g, terms, "t");
+        assert!(clean.is_empty(), "{clean:?}");
+        // Undersize the slice (equivalently: steal its guard bits).
+        dp.s -= 1;
+        dp.gb = dp.gb.saturating_sub(1);
+        let (_, diags) = check_design(&dp, f, g, terms, "t");
+        assert!(diags.iter().any(|d| d.code == Code::Guard), "{diags:?}");
+    }
+
+    #[test]
+    fn narrow_configured_lane_is_v_lane() {
+        let cfg = EngineConfig::auto().with_lane_bits(16);
+        let rep = verify_unit(&unit(4, 4), "hikonv", &cfg);
+        assert!(
+            rep.diagnostics.iter().any(|d| d.code == Code::Lane),
+            "{:?}",
+            rep.diagnostics
+        );
+    }
+
+    #[test]
+    fn oversized_packing_breaks_the_wide_lane() {
+        // A fabricated point whose packed product exceeds even i128.
+        let dp = DesignPoint {
+            mult: Multiplier::CPU64,
+            p: 4,
+            q: 4,
+            signedness: Signedness::UnsignedBySigned,
+            accum: AccumMode::Single,
+            s: 12,
+            n: 6,
+            k: 6,
+            gb: 4,
+        };
+        assert!(!dp.fits_lane(WIDE_LANE_BITS));
+        let (_, diags) = check_design(
+            &dp,
+            Interval::unsigned_bits(4),
+            Interval::signed_bits(4),
+            6,
+            "t",
+        );
+        assert!(diags.iter().any(|d| d.code == Code::Lane), "{diags:?}");
+    }
+
+    #[test]
+    fn every_zoo_workload_verifies_sound() {
+        for name in zoo::NAMES {
+            let g = zoo::build(name).unwrap();
+            let report = verify_graph(&g, &EngineConfig::auto().with_threads(2)).unwrap();
+            assert!(
+                report.is_sound(),
+                "{name}: {}",
+                report.render_diagnostics()
+            );
+            assert_eq!(report.units.len(), g.validate().unwrap().units.len());
+            let json = report.to_json();
+            assert!(json.get("sound").is_some());
+        }
+    }
+
+    #[test]
+    fn doctored_plan_rows_are_v_plan() {
+        let g = zoo::build("fc-head").unwrap();
+        let cfg = EngineConfig::auto().with_threads(1);
+        let mut plan = EnginePlan::plan_graph(&g, &cfg).unwrap();
+        plan.layers[0].ops_per_mult += 5;
+        let report = verify_plan(&g, &plan, &Evidence::none()).unwrap();
+        assert!(report
+            .diagnostics()
+            .iter()
+            .any(|d| d.code == Code::Plan && d.detail.contains("ops/mult")));
+    }
+
+    #[test]
+    fn minimal_shift_matches_calibration_rule() {
+        // target for 4 bits is 15: 100 >> 3 = 12 <= 15, 100 >> 2 = 25 > 15.
+        assert_eq!(minimal_shift(100, 4), 3);
+        assert_eq!(minimal_shift(15, 4), 0);
+        assert_eq!(minimal_shift(16, 4), 1);
+        assert_eq!(minimal_shift(0, 4), 0);
+        assert_eq!(minimal_shift(1 << 40, 1), 40);
+    }
+
+    #[test]
+    fn corrupted_shift_evidence_is_v_requant() {
+        let g = zoo::build("fc-head").unwrap();
+        let cfg = EngineConfig::auto().with_threads(1);
+        let plan = EnginePlan::plan_graph(&g, &cfg).unwrap();
+        let info = g.validate().unwrap();
+        // Honest evidence: every record at 100, shifts derived from it.
+        let calib: Vec<i64> = vec![100; info.requant_count];
+        let honest: Vec<u32> = g
+            .nodes
+            .iter()
+            .filter_map(|n| match n.op {
+                LayerOp::Requant { bits } => Some(minimal_shift(100, bits)),
+                _ => None,
+            })
+            .collect();
+        let ev = Evidence {
+            shifts: Some(&honest),
+            calib: Some(&calib),
+            ..Default::default()
+        };
+        let report = verify_plan(&g, &plan, &ev).unwrap();
+        assert!(report.is_sound(), "{}", report.render_diagnostics());
+        // Shift too small for its record: rejected.
+        let mut small = honest.clone();
+        small[0] = small[0].saturating_sub(1);
+        let bad = Evidence {
+            shifts: Some(&small),
+            calib: Some(&calib),
+            ..Default::default()
+        };
+        let report = verify_plan(&g, &plan, &bad).unwrap();
+        let has = |r: &VerifyReport| r.diagnostics().iter().any(|d| d.code == Code::Requant);
+        // A zero shift can't go smaller; only assert when it moved.
+        if small != honest {
+            assert!(has(&report), "{}", report.render_diagnostics());
+        }
+        // Shift far too large: rejected even without consulting records.
+        let mut big = honest.clone();
+        big[0] = 62;
+        let bad = Evidence {
+            shifts: Some(&big),
+            calib: None,
+            ..Default::default()
+        };
+        let report = verify_plan(&g, &plan, &bad).unwrap();
+        assert!(has(&report), "{}", report.render_diagnostics());
+    }
+
+    #[test]
+    fn host_mismatch_is_v_host() {
+        let g = zoo::build("fc-head").unwrap();
+        let cfg = EngineConfig::auto().with_threads(2);
+        let plan = EnginePlan::plan_graph(&g, &cfg).unwrap();
+        let ev = Evidence {
+            host: Some("threads=9999;lane=64"),
+            ..Default::default()
+        };
+        let report = verify_plan(&g, &plan, &ev).unwrap();
+        assert!(report
+            .diagnostics()
+            .iter()
+            .any(|d| d.code == Code::Host));
+    }
+}

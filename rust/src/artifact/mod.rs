@@ -21,8 +21,9 @@
 //! `u32` format version, and a 64-bit FNV-1a checksum of the payload —
 //! followed by the payload: host signature, [`EngineConfig`] grammar
 //! string, graph, plan, quantized weight tensors, packed weight words,
-//! and requant shifts. Everything is little-endian; strings and arrays
-//! are length-prefixed with a `u64` count. The format is
+//! requant shifts, and (since version 2) the calibration records those
+//! shifts were derived from. Everything is little-endian; strings and
+//! arrays are length-prefixed with a `u64` count. The format is
 //! **zero-dependency** (hand-rolled writer/reader, no serde) because the
 //! crate builds offline.
 //!
@@ -38,6 +39,16 @@
 //! the stored graph + weights re-plan on the current host
 //! ([`LoadMode::Replanned`]), trading the instant-load benefit for plan
 //! fidelity.
+//!
+//! Decoding well-formed bytes is not the end of it: before a prepacked
+//! runner is built, [`Artifact::into_runner`] hands the embedded graph,
+//! plan, weights, shifts and calibration records to the static
+//! packing-soundness verifier ([`crate::analysis::verify_plan`]). The
+//! checksum only guards against accidental damage — the verifier is what
+//! guarantees a stale or hand-edited `.hkv` (doctored plan rows, shifts
+//! inconsistent with their calibration records, a host/plan signature
+//! mismatch) can never execute an unsound plan; it is rejected with the
+//! structured `V-*` diagnostics in the error.
 
 #![warn(missing_docs)]
 
@@ -56,7 +67,12 @@ pub const ARTIFACT_MAGIC: [u8; 8] = *b"HIKONVA\0";
 /// any byte-layout change; there is no cross-version migration — a
 /// mismatch is a precise load error and callers fall back to planning
 /// from the model spec.
-pub const ARTIFACT_VERSION: u32 = 1;
+///
+/// Version history: 1 = initial format; 2 = appended per-requant
+/// calibration records (the observed `max |accumulator|` each shift was
+/// derived from), which the load-time verifier proves the shifts
+/// consistent against.
+pub const ARTIFACT_VERSION: u32 = 2;
 
 /// Header length in bytes: magic + version + checksum.
 const HEADER_LEN: usize = 8 + 4 + 8;
@@ -64,6 +80,33 @@ const HEADER_LEN: usize = 8 + 4 + 8;
 /// 64-bit FNV-1a over `bytes` — the payload checksum. Not
 /// cryptographic; it guards against corruption and truncation, not
 /// tampering.
+/// Infallible little-endian reads from exactly-sized slices (the
+/// callers always slice the right byte count first; `copy_from_slice`
+/// enforces it without `expect`).
+fn le_u32(b: &[u8]) -> u32 {
+    let mut a = [0u8; 4];
+    a.copy_from_slice(b);
+    u32::from_le_bytes(a)
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(b);
+    u64::from_le_bytes(a)
+}
+
+fn le_i64(b: &[u8]) -> i64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(b);
+    i64::from_le_bytes(a)
+}
+
+fn le_i128(b: &[u8]) -> i128 {
+    let mut a = [0u8; 16];
+    a.copy_from_slice(b);
+    i128::from_le_bytes(a)
+}
+
 fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
@@ -117,6 +160,12 @@ pub struct Artifact {
     pub packed: Vec<PackedWeights>,
     /// Calibrated requant shifts, in slot order.
     pub shifts: Vec<u32>,
+    /// Calibration record per requant slot: the observed
+    /// `max |accumulator|` each shift was derived from. The load-time
+    /// verifier proves each shift is exactly what the calibration rule
+    /// derives from its record, and each record lies within the
+    /// statically-proven accumulator bound.
+    pub calib: Vec<i64>,
 }
 
 impl Artifact {
@@ -142,6 +191,7 @@ impl Artifact {
             weights: runner.weights().to_vec(),
             packed: runner.export_packed().map_err(RuntimeError::new)?,
             shifts: runner.requant_shifts().to_vec(),
+            calib: runner.requant_calibration().to_vec(),
         })
     }
 
@@ -153,6 +203,12 @@ impl Artifact {
     /// calibration. Otherwise the stored graph + weights re-plan here
     /// ([`LoadMode::Replanned`]): slower, but the plan stays faithful to
     /// the planner's choices for *this* host.
+    ///
+    /// Either way, no embedded plan executes unverified: the prepacked
+    /// path runs [`verify`](Self::verify) first (rejecting with the
+    /// structured `V-*` diagnostics), and the replanned path goes back
+    /// through the planner, whose own mandatory cross-check re-proves
+    /// every fresh kernel binding.
     pub fn into_runner(self) -> Result<(GraphRunner, LoadMode), RuntimeError> {
         let expected = expected_host(&self.plan.config);
         if expected != self.host {
@@ -165,10 +221,40 @@ impl Artifact {
                 .map_err(|e| RuntimeError::new(e).context("re-planning after host mismatch"))?;
             return Ok((runner, LoadMode::Replanned(reason)));
         }
-        let runner =
-            GraphRunner::from_prepacked(self.graph, self.weights, self.plan, self.packed, self.shifts)
-                .map_err(|e| RuntimeError::new(e).context("rebuilding kernels from artifact"))?;
+        let report = self.verify()?;
+        if !report.is_sound() {
+            return Err(RuntimeError::new(format!(
+                "artifact failed packing-soundness verification ({} violation(s)):\n{}",
+                report.diagnostics().len(),
+                report.render_diagnostics()
+            )));
+        }
+        let runner = GraphRunner::from_prepacked(
+            self.graph,
+            self.weights,
+            self.plan,
+            self.packed,
+            self.shifts,
+            self.calib,
+        )
+        .map_err(|e| RuntimeError::new(e).context("rebuilding kernels from artifact"))?;
         Ok((runner, LoadMode::Prepacked))
+    }
+
+    /// Run the static packing-soundness verifier over the embedded plan
+    /// with this artifact's full evidence — concrete weight tensors,
+    /// calibrated shifts, their calibration records, and the claimed
+    /// host signature. `Err` only if the embedded graph itself fails
+    /// validation; verification findings land in the report.
+    pub fn verify(&self) -> Result<crate::analysis::VerifyReport, RuntimeError> {
+        let wide: Vec<Vec<i64>> = self.weights.iter().map(|t| t.to_i64()).collect();
+        let ev = crate::analysis::Evidence {
+            weights: Some(&wide),
+            shifts: Some(&self.shifts),
+            calib: Some(&self.calib),
+            host: Some(&self.host),
+        };
+        crate::analysis::verify_plan(&self.graph, &self.plan, &ev)
     }
 
     /// Serialize to the on-disk byte format (`docs/ARTIFACT.md`).
@@ -190,6 +276,7 @@ impl Artifact {
         for &s in &self.shifts {
             e.u32(s);
         }
+        e.vec_i64(&self.calib);
         let payload = e.buf;
         let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
         out.extend_from_slice(&ARTIFACT_MAGIC);
@@ -215,14 +302,14 @@ impl Artifact {
                 "not a HiKonv artifact (bad magic)".to_string(),
             ));
         }
-        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        let version = le_u32(&bytes[8..12]);
         if version != ARTIFACT_VERSION {
             return Err(RuntimeError::new(format!(
                 "artifact format version {version}, this build reads version {ARTIFACT_VERSION} \
                  — recompile the artifact"
             )));
         }
-        let stored = u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes"));
+        let stored = le_u64(&bytes[12..20]);
         let payload = &bytes[HEADER_LEN..];
         let computed = fnv1a64(payload);
         if stored != computed {
@@ -254,6 +341,14 @@ impl Artifact {
         for _ in 0..ns {
             shifts.push(d.u32("requant shift")?);
         }
+        let calib = d.vec_i64("requant calibration records")?;
+        if calib.len() != shifts.len() {
+            return Err(RuntimeError::new(format!(
+                "artifact carries {} calibration records for {} requant shifts",
+                calib.len(),
+                shifts.len()
+            )));
+        }
         if d.remaining() != 0 {
             return Err(RuntimeError::new(format!(
                 "artifact has {} trailing bytes after the payload",
@@ -267,6 +362,7 @@ impl Artifact {
             weights,
             packed,
             shifts,
+            calib,
         })
     }
 
@@ -384,11 +480,11 @@ impl<'a> Dec<'a> {
     }
 
     fn u32(&mut self, what: &str) -> Result<u32, RuntimeError> {
-        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+        Ok(le_u32(self.take(4, what)?))
     }
 
     fn u64(&mut self, what: &str) -> Result<u64, RuntimeError> {
-        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+        Ok(le_u64(self.take(8, what)?))
     }
 
     fn f64(&mut self, what: &str) -> Result<f64, RuntimeError> {
@@ -428,7 +524,7 @@ impl<'a> Dec<'a> {
         let n = self.len(what, 8)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
-            v.push(i64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")));
+            v.push(le_i64(self.take(8, what)?));
         }
         Ok(v)
     }
@@ -437,7 +533,7 @@ impl<'a> Dec<'a> {
         let n = self.len(what, 16)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
-            v.push(i128::from_le_bytes(self.take(16, what)?.try_into().expect("16 bytes")));
+            v.push(le_i128(self.take(16, what)?));
         }
         Ok(v)
     }
@@ -810,8 +906,46 @@ mod tests {
             assert_eq!(a.scale.to_bits(), b.scale.to_bits());
         }
         assert_eq!(back.shifts, art.shifts);
+        assert_eq!(back.calib, art.calib);
+        assert_eq!(back.calib.len(), back.shifts.len());
         // Serialization is deterministic: same artifact, same bytes.
         assert_eq!(art.to_bytes(), back.to_bytes());
+    }
+
+    #[test]
+    fn tampered_shift_is_rejected_at_load_with_v_requant() {
+        // A hand-edited shift no longer matches its calibration record:
+        // the load-time verifier rejects it before any kernel is built.
+        let mut art = tiny_artifact();
+        art.shifts[0] += 7;
+        let err = art.into_runner().unwrap_err();
+        assert!(err.to_string().contains("V-REQUANT"), "{err}");
+    }
+
+    #[test]
+    fn doctored_plan_row_is_rejected_at_load_with_v_plan() {
+        let mut art = tiny_artifact();
+        art.plan.layers[0].ops_per_mult += 3;
+        let err = art.into_runner().unwrap_err();
+        assert!(err.to_string().contains("V-PLAN"), "{err}");
+    }
+
+    #[test]
+    fn edited_plan_threads_is_rejected_at_load_with_v_host() {
+        // The claimed host string still matches this machine, but the
+        // embedded plan's own signature no longer agrees with it.
+        let mut art = tiny_artifact();
+        art.plan.threads += 1;
+        let err = art.into_runner().unwrap_err();
+        assert!(err.to_string().contains("V-HOST"), "{err}");
+    }
+
+    #[test]
+    fn verify_reports_sound_for_fresh_artifacts() {
+        let art = tiny_artifact();
+        let report = art.verify().unwrap();
+        assert!(report.is_sound(), "{}", report.render_diagnostics());
+        assert_eq!(report.host, art.host);
     }
 
     #[test]

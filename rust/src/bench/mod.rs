@@ -155,7 +155,9 @@ impl Bencher {
         };
         eprintln!("   {}", result.display_line());
         self.results.push(result);
-        self.results.last().unwrap()
+        self.results
+            .last()
+            .unwrap_or_else(|| unreachable!("pushed just above"))
     }
 
     pub fn results(&self) -> &[BenchResult] {

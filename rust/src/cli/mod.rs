@@ -28,10 +28,8 @@ impl Args {
     pub fn parse(argv: &[String]) -> Result<Args, String> {
         let mut out = Args::default();
         let mut it = argv.iter().peekable();
-        if let Some(first) = it.peek() {
-            if !first.starts_with('-') {
-                out.subcommand = it.next().unwrap().clone();
-            }
+        if let Some(first) = it.next_if(|s| !s.starts_with('-')) {
+            out.subcommand = first.clone();
         }
         while let Some(tok) = it.next() {
             if let Some(name) = tok.strip_prefix("--") {
@@ -42,13 +40,8 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    out.flags
-                        .insert(name.to_string(), it.next().unwrap().clone());
+                } else if let Some(value) = it.next_if(|n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), value.clone());
                 } else {
                     out.switches.push(name.to_string());
                 }

@@ -14,7 +14,7 @@
 //! extension Thm. 2 applies to `f`, applied to `g`).
 
 use super::word::{pack_word, ProdWord};
-use crate::theory::{AccumMode, DesignPoint, Signedness};
+use crate::theory::{AccumMode, DesignPoint, Signedness, FAST_LANE_BITS};
 
 /// One packed kernel chunk.
 #[derive(Clone, Debug)]
@@ -52,7 +52,7 @@ impl Conv1dHiKonv {
         let signed = !matches!(dp.signedness, Signedness::Unsigned);
         // The i64 path needs every packed word and accumulator to fit:
         // (N+K-1) segments of S bits, plus 1 sign bit headroom.
-        let use64 = dp.fits_lane(64);
+        let use64 = dp.fits_lane(FAST_LANE_BITS);
         let mut chunks64 = Vec::new();
         let mut chunks128 = Vec::new();
         for (j, ch) in kernel.chunks(dp.k).enumerate() {
@@ -282,7 +282,10 @@ pub fn fnk_block(f: &[i64], g: &[i64], dp: &DesignPoint) -> Vec<i64> {
 
 /// Convenience: one-shot HiKonv convolution (engine construction included).
 pub fn conv1d_hikonv(f: &[i64], g: &[i64], dp: &DesignPoint) -> Vec<i64> {
-    Conv1dHiKonv::new(*dp, g).expect("valid design point").conv(f)
+    match Conv1dHiKonv::new(*dp, g) {
+        Ok(eng) => eng.conv(f),
+        Err(e) => panic!("conv1d_hikonv: invalid design point: {e}"),
+    }
 }
 
 /// The baseline the paper compares against (re-export for benches).

@@ -10,7 +10,7 @@
 
 use super::reference::ConvShape;
 use super::word::{pack_word, ProdWord};
-use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness};
+use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness, FAST_LANE_BITS};
 
 /// Configuration for a HiKonv DNN layer engine.
 #[derive(Clone, Copy, Debug)]
@@ -106,7 +106,7 @@ impl Conv2dHiKonv {
         // The i64 fast path needs every packed word and accumulator to fit:
         // (N+K-1) segments of S bits, plus 1 sign bit headroom (same lane
         // criterion as the conv1d engine).
-        let use64 = dp.fits_lane(64);
+        let use64 = dp.fits_lane(FAST_LANE_BITS);
 
         // Pack reversed weight rows: g[k'] = W[co][ci][kh][K-1-k'] (Eq. 20),
         // into the active lane only (`use64` implies S <= 63, so the i64
@@ -156,7 +156,7 @@ impl Conv2dHiKonv {
     /// Performs **no** packing work: the words are adopted as-is after a
     /// shape check, so the weight-pack counter
     /// ([`crate::packing::weight_pack_words`]) does not advance. Exactly
-    /// one lane must be populated — the one `dp.fits_lane(64)` selects —
+    /// one lane must be populated — the one `dp.fits_lane(FAST_LANE_BITS)` selects —
     /// with `co·ci·k` words.
     pub fn from_packed(
         spec: Conv2dSpec,
@@ -180,7 +180,7 @@ impl Conv2dHiKonv {
             AccumMode::Extended { m },
         )
         .map_err(|e| e.to_string())?;
-        let use64 = dp.fits_lane(64);
+        let use64 = dp.fits_lane(FAST_LANE_BITS);
         let want = sh.co * sh.ci * sh.k;
         let (have, other, lane) = if use64 {
             (packed_w64.len(), packed_w.len(), "i64")

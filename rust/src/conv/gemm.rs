@@ -43,7 +43,7 @@
 
 use super::word::{pack_word, ProdWord};
 use crate::exec::ThreadPool;
-use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness, SolveError};
+use crate::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness, SolveError, FAST_LANE_BITS};
 
 /// Output columns computed per packed A-word load in the micro-kernel.
 pub const REG_COLS: usize = 4;
@@ -164,7 +164,7 @@ impl PackedGemm {
         let words_per_row = k_dim.div_ceil(block);
         // Same i64 fast-lane criterion as `Conv2dHiKonv`: every packed
         // word and product must fit S·(N+K-1) value bits plus a sign bit.
-        let use64 = dp.fits_lane(64);
+        let use64 = dp.fits_lane(FAST_LANE_BITS);
         let signed = !matches!(dp.signedness, Signedness::Unsigned);
         let (rhs64, rhs128) = if use64 {
             (pack_rhs::<i64>(b_t, k_dim, n_dim, block, dp.s), Vec::new())
@@ -190,7 +190,7 @@ impl PackedGemm {
     /// packing work: the words are adopted as-is after a shape check, so
     /// the weight-pack counter ([`crate::packing::weight_pack_words`])
     /// does not advance. Exactly one lane must be populated — the one
-    /// `dp.fits_lane(64)` selects — with `⌈k/min(N,K)⌉·n` words.
+    /// `dp.fits_lane(FAST_LANE_BITS)` selects — with `⌈k/min(N,K)⌉·n` words.
     pub fn from_packed_words(
         dp: DesignPoint,
         k_dim: usize,
@@ -200,7 +200,7 @@ impl PackedGemm {
     ) -> Result<PackedGemm, String> {
         let block = dp.n.min(dp.k);
         let words_per_row = k_dim.div_ceil(block);
-        let use64 = dp.fits_lane(64);
+        let use64 = dp.fits_lane(FAST_LANE_BITS);
         let signed = !matches!(dp.signedness, Signedness::Unsigned);
         let want = words_per_row * n_dim;
         let (have, other, lane) = if use64 {

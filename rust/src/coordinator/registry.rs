@@ -15,12 +15,16 @@
 //!
 //! Reload safety contract:
 //!
-//! * The replacement artifact is read, checksum-verified, instantiated,
-//!   and **probe-inferred off the serve path** before the swap. Any
-//!   failure — corrupt file, version/host mismatch that fails re-plan,
-//!   changed input dims, a panicking probe — rolls back to the serving
-//!   runner and records the artifact as quarantined with the reason.
-//!   The serve path never observes a half-loaded model.
+//! * The replacement artifact is read, checksum-verified,
+//!   **packing-soundness verified** (the static verifier in
+//!   [`crate::analysis`] re-proves the embedded plan against the
+//!   artifact's weights, calibrated shifts, and host signature before
+//!   any kernel is rebuilt), instantiated, and **probe-inferred off the
+//!   serve path** before the swap. Any failure — corrupt file,
+//!   version/host mismatch that fails re-plan, a `V-*` verifier
+//!   diagnostic, changed input dims, a panicking probe — rolls back to
+//!   the serving runner and records the artifact as quarantined with
+//!   the reason. The serve path never observes a half-loaded model.
 //! * Tenants whose workers exhaust the supervisor's restart budget are
 //!   quarantined (`TenantState::Quarantined`): their queue closes, the
 //!   remaining frames are accounted, and other tenants are undisturbed.
@@ -275,9 +279,11 @@ impl ModelRegistry {
     /// Hot-reload tenant `name` from a replacement artifact.
     ///
     /// The artifact is loaded and validated **off the serve path**:
-    /// checksum + structural decode, input-dims compatibility with the
-    /// serving runner (in-flight frames are sized for them), and a
-    /// panic-supervised probe inference. Only then is the new runner
+    /// checksum + structural decode, the static packing-soundness
+    /// verifier over the embedded plan (stale or hand-edited plans are
+    /// rejected with their `V-*` diagnostics), input-dims compatibility
+    /// with the serving runner (in-flight frames are sized for them),
+    /// and a panic-supervised probe inference. Only then is the new runner
     /// swapped into the tenant's [`RunnerCell`] — between batches,
     /// atomically. Any failure rolls back (the serving runner is
     /// untouched) and quarantines the replacement artifact with the
@@ -469,6 +475,32 @@ mod tests {
         assert_eq!(t.state, TenantState::Serving, "tenant keeps serving");
         let reason = t.surfaced_quarantine().expect("artifact quarantine recorded");
         assert!(reason.contains("checksum"), "reason must name the failure: {reason}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unsound_reload_is_quarantined_with_verifier_diagnostics() {
+        let dir = std::env::temp_dir().join("hikonv_registry_unsound_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unsound.hkv");
+        let (g, w) = graph_and_weights(11);
+        let mut art = crate::artifact::Artifact::compile(g.clone(), w.clone(), cfg()).unwrap();
+        assert!(!art.shifts.is_empty(), "fc-head has requant layers");
+        // A hand-edited requant shift: the file is checksum-clean and
+        // decodes fine, but the static verifier must refuse the plan.
+        art.shifts[0] += 7;
+        art.write(&path).unwrap();
+
+        let mut reg = ModelRegistry::new(cfg());
+        reg.register_graph("a", g, w).unwrap();
+        let before = reg.tenant("a").unwrap().cell.get();
+        let err = reg.reload("a", &path).expect_err("unsound artifact must fail");
+        assert!(err.to_string().contains("V-REQUANT"), "{err}");
+        let t = reg.tenant("a").unwrap();
+        assert!(Arc::ptr_eq(&before, &t.cell.get()), "serving runner untouched");
+        assert_eq!(t.state, TenantState::Serving, "tenant keeps serving");
+        let reason = t.surfaced_quarantine().expect("artifact quarantine recorded");
+        assert!(reason.contains("V-REQUANT"), "reason carries the diagnostic: {reason}");
         std::fs::remove_file(&path).ok();
     }
 

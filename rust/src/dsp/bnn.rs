@@ -74,7 +74,8 @@ pub fn bnn_hikonv_design(dsps: usize) -> (BnnDesign, DesignPoint) {
         k: taps,
         gb: s - 1,
     };
-    dp.validate().expect("BNN design point must be consistent");
+    dp.validate()
+        .unwrap_or_else(|e| unreachable!("BNN design point must be consistent: {e}"));
     let per_dsp = (n * taps) as u64;
     let concurrency = dsps * per_dsp as usize;
     // LUTs: per-DSP packing wrapper + per-chain segmentation + output lanes.
@@ -121,7 +122,9 @@ pub fn table1_rows() -> Vec<Table1Row> {
                 lut_only_luts: lut.luts,
                 hikonv_luts: hik.luts,
                 hikonv_dsps: d,
-                dsp_throughput: hik.per_dsp_macs.unwrap(),
+                dsp_throughput: hik
+                    .per_dsp_macs
+                    .unwrap_or_else(|| unreachable!("hikonv designs report per-DSP MACs")),
                 lut_per_dsp: (lut.luts as f64 - hik.luts as f64) / d as f64,
             }
         })

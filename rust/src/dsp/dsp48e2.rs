@@ -138,7 +138,7 @@ pub fn hikonv_cascade_on_dsp(
         .iter()
         .map(|(f, g)| f.len() + g.len() - 1)
         .max()
-        .unwrap();
+        .unwrap_or_else(|| unreachable!("pairs is non-empty (asserted above)"));
     let mut cascade: i64 = 0;
     for (f, g) in pairs {
         let a = pack_port(f, s);

@@ -134,8 +134,8 @@ fn allocate(muls: &[u64], budget: usize) -> (usize, f64) {
             .iter()
             .enumerate()
             .map(|(i, &d)| (i, muls[i] as f64 / d as f64))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap();
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap_or_else(|| unreachable!("the model has at least one layer"));
         alloc[worst] += 1;
         left -= 1;
     }
@@ -199,7 +199,7 @@ pub fn ultranet_perf(input: &PerfModelInput) -> PerfReport {
         Signedness::UnsignedBySigned,
         AccumMode::Single,
     )
-    .expect("4-bit DSP point");
+    .unwrap_or_else(|e| unreachable!("4-bit DSP point is feasible: {e}"));
     let hik_muls = hikonv_muls_per_layer(&input.model, dp.n, dp.k);
     let (hik_dsps, hik_cycles) = allocate(&hik_muls, input.dsp_budget);
     let hik_fps_raw = input.eta * input.freq_mhz * 1e6 / hik_cycles;

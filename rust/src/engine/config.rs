@@ -40,7 +40,7 @@
 //! Examples: `auto`, `hikonv-tiled:threads=4`, `im2row@32x32:tile-co=8`,
 //! `hikonv@27x18:p=4,q=4,sign=u`.
 
-use crate::theory::{Multiplier, Signedness};
+use crate::theory::{Multiplier, Signedness, FAST_LANE_BITS};
 use std::fmt;
 use std::str::FromStr;
 
@@ -177,6 +177,16 @@ impl EngineConfig {
     /// the config override when set, the layer's own widths otherwise.
     pub fn layer_bits(&self, a_bits: u32, w_bits: u32) -> (u32, u32) {
         self.bits.unwrap_or((a_bits, w_bits))
+    }
+
+    /// The fast-lane budget cost models and feasibility hooks select
+    /// against: the configured `lane=` bound, capped at the engines'
+    /// actual `i64` fast path ([`FAST_LANE_BITS`]). A wider configured
+    /// lane (e.g. `lane=128`) does not make the `i64` word any wider, so
+    /// the cap keeps predicted costs honest; a narrower one tightens the
+    /// budget (and the verifier enforces it as a hard `V-LANE` bound).
+    pub fn fast_lane_bits(&self) -> u32 {
+        self.lane_bits.min(FAST_LANE_BITS)
     }
 }
 

@@ -36,7 +36,7 @@ pub type KernelScratch = Box<dyn Any + Send>;
 /// [`KernelFactory::build_from_packed`](super::KernelFactory::build_from_packed),
 /// which reconstructs the kernel **without repacking** (the skipped work
 /// AOT loading exists to skip). Word lanes follow the engines' own
-/// selection: only the lane `DesignPoint::fits_lane(64)` picks is
+/// selection: only the lane `DesignPoint::fits_lane(FAST_LANE_BITS)` picks is
 /// populated.
 #[derive(Clone, Debug)]
 pub enum PackedWeights {
@@ -322,7 +322,7 @@ impl ConvKernel for HiKonvKernel {
     ) {
         let s = scratch
             .downcast_mut::<HiKonvScratch>()
-            .expect("scratch built by a different kernel");
+            .unwrap_or_else(|| unreachable!("scratch built by a different kernel"));
         self.inner.pack_input_into(input, &mut s.packed);
         if self.stride == 1 {
             self.dense_into(s, out, pool);
@@ -402,7 +402,7 @@ impl ConvKernel for Im2RowKernel {
     ) {
         let s = scratch
             .downcast_mut::<Im2RowScratch>()
-            .expect("scratch built by a different kernel");
+            .unwrap_or_else(|| unreachable!("scratch built by a different kernel"));
         let sh = self.inner.spec().shape;
         self.inner.pack_pixels_into(input, &mut s.lhs, &mut s.row);
         match pool {

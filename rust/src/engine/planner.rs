@@ -113,12 +113,37 @@ impl EnginePlan {
         Self::plan_units(&info.units, config, KernelRegistry::builtin())
     }
 
+    /// [`plan_graph`](Self::plan_graph) *without* the mandatory
+    /// packing-soundness cross-check. This exists for the verifier
+    /// itself ([`crate::analysis::verify_graph`]): when a configuration
+    /// is unsound, the CLI still needs the resolved plan so it can
+    /// report every violation, not just the first planning error.
+    pub fn plan_graph_unverified(
+        graph: &GraphSpec,
+        config: &EngineConfig,
+    ) -> Result<EnginePlan, String> {
+        let info = graph.validate().map_err(|e| e.to_string())?;
+        Self::plan_units_inner(&info.units, config, KernelRegistry::builtin(), false)
+    }
+
     /// Plan a bare unit list against a registry — the core the model and
-    /// graph entry points share.
+    /// graph entry points share. Every chosen `(unit, kernel)` binding
+    /// is re-proved by the interval verifier ([`crate::analysis`]); a
+    /// kernel whose formula feasibility disagrees with the interval
+    /// proof is rejected with both verdicts printed.
     pub fn plan_units(
         units: &[ConvUnit],
         config: &EngineConfig,
         registry: &KernelRegistry,
+    ) -> Result<EnginePlan, String> {
+        Self::plan_units_inner(units, config, registry, true)
+    }
+
+    fn plan_units_inner(
+        units: &[ConvUnit],
+        config: &EngineConfig,
+        registry: &KernelRegistry,
+        verify: bool,
     ) -> Result<EnginePlan, String> {
         let threads = if config.threads == 0 {
             default_threads()
@@ -135,6 +160,9 @@ impl EnginePlan {
                 }
                 KernelChoice::Auto => auto_pick(u, config, threads, registry)?,
             };
+            if verify {
+                cross_check(u, &lp, config)?;
+            }
             layers.push(lp);
         }
         Ok(EnginePlan {
@@ -241,6 +269,35 @@ impl EnginePlan {
             .set("host", self.host())
             .set("layers", Json::Array(rows))
     }
+}
+
+/// The mandatory packing-soundness cross-check: after formula
+/// feasibility accepts a `(unit, kernel)` binding, the interval
+/// verifier must independently re-prove it. A disagreement is reported
+/// with *both* verdicts — the formula's numbers and the interval
+/// proof's structured diagnostics — because one of the two proofs is
+/// wrong and the caller needs to see which claim each side makes.
+fn cross_check(unit: &ConvUnit, lp: &LayerPlan, config: &EngineConfig) -> Result<(), String> {
+    let report = crate::analysis::verify_unit(unit, &lp.kernel, config);
+    if report.is_sound() {
+        return Ok(());
+    }
+    let diags: Vec<String> = report
+        .diagnostics
+        .iter()
+        .map(|d| format!("  {}", d.render()))
+        .collect();
+    Err(format!(
+        "op '{}': kernel '{}' passes formula feasibility (p/q {}/{}, {} ops/mult, \
+         lane bound {}) but fails the interval proof:\n{}",
+        unit.name,
+        lp.kernel,
+        lp.p,
+        lp.q,
+        lp.ops_per_mult,
+        lp.lane_bound,
+        diags.join("\n")
+    ))
 }
 
 /// Build one op's plan entry from a resolved factory.

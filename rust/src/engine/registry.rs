@@ -100,13 +100,12 @@ fn conv_spec(unit: &ConvUnit, cfg: &EngineConfig) -> Conv2dSpec {
     }
 }
 
-/// The software word lane the built engines actually select against:
-/// `Conv2dHiKonv`, `Im2RowConv`/`PackedGemm` and the conv1d engine all
-/// take the `i64` fast path iff [`DesignPoint::fits_lane`]`(64)`. The
-/// cost models key their wide-lane penalty to this engine truth (not to
-/// `EngineConfig::lane_bits`, which only constrains the reported
-/// lane-bound column), so predicted costs track what will really run.
-const ENGINE_LANE_BITS: u32 = 64;
+// The cost models key their wide-lane penalty to
+// `EngineConfig::fast_lane_bits()`: the configured `lane=` bound capped
+// at `theory::FAST_LANE_BITS`, the `i64` word the built engines
+// (`Conv2dHiKonv`, `Im2RowConv`/`PackedGemm`, conv1d) actually select
+// against. Predicted costs therefore track what will really run, while
+// a narrower configured lane also charges the penalty it asks for.
 
 /// Cost multiplier for points forced onto the double-width (`i128`)
 /// fallback lane.
@@ -232,7 +231,7 @@ impl HiKonvFactory {
         let (block, dp) = self.design(unit, cfg)?;
         let sh = spec.shape;
         let mut cost = (sh.co * sh.ho()) as f64 * row_pass_cost(&spec, block, &dp) as f64;
-        if !dp.fits_lane(ENGINE_LANE_BITS) {
+        if !dp.fits_lane(cfg.fast_lane_bits()) {
             cost *= WIDE_LANE_PENALTY;
         }
         Ok(cost)
@@ -392,7 +391,7 @@ impl KernelFactory for Im2RowFactory {
         let terms = dp.n.min(dp.k) as f64;
         let muls = rows * sh.co as f64 * (k_dim / terms).ceil();
         let mut compute = 2.0 * muls + rows * sh.co as f64;
-        if !dp.fits_lane(ENGINE_LANE_BITS) {
+        if !dp.fits_lane(cfg.fast_lane_bits()) {
             compute *= WIDE_LANE_PENALTY;
         }
         let packing = rows * k_dim;

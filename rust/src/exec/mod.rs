@@ -180,7 +180,7 @@ impl ThreadPool {
             slot[0] = Some(f(i, &items[i]));
         });
         out.into_iter()
-            .map(|r| r.expect("every slot is filled by its task"))
+            .map(|r| r.unwrap_or_else(|| unreachable!("every slot is filled by its task")))
             .collect()
     }
 }

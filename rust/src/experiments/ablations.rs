@@ -63,8 +63,8 @@ pub fn run(config: BenchConfig) -> (Table, Vec<AblationRow>) {
         let mut rng = Rng::new(0xAB1);
         let input = rng.quant_unsigned_vec(4, shape.input_len());
         let weights = rng.quant_signed_vec(4, shape.weight_len());
-        let shallow = Conv2dHiKonv::with_block(spec, &weights, 1).unwrap();
-        let auto = Conv2dHiKonv::new(spec, &weights).unwrap();
+        let shallow = Conv2dHiKonv::with_block(spec, &weights, 1).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
+        let auto = Conv2dHiKonv::new(spec, &weights).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         assert_eq!(shallow.conv(&input), auto.conv(&input));
         let ns1 = bencher
             .bench("channel-block/1", || shallow.conv(&input))
@@ -96,7 +96,7 @@ pub fn run(config: BenchConfig) -> (Table, Vec<AblationRow>) {
             Signedness::Unsigned,
             AccumMode::Extended { m: 1 },
         )
-        .unwrap();
+        .unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         let lane = solve_for_lane(
             Multiplier::CPU32,
             2,
@@ -105,9 +105,9 @@ pub fn run(config: BenchConfig) -> (Table, Vec<AblationRow>) {
             AccumMode::Extended { m: 1 },
             64,
         )
-        .unwrap();
-        let e_wide = Conv1dHiKonv::new(wide, &g).unwrap();
-        let e_lane = Conv1dHiKonv::new(lane, &g).unwrap();
+        .unwrap_or_else(|e| panic!("experiment fixture: {e}"));
+        let e_wide = Conv1dHiKonv::new(wide, &g).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
+        let e_lane = Conv1dHiKonv::new(lane, &g).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         assert_eq!(e_wide.conv(&f), e_lane.conv(&f));
         let ns1 = bencher
             .bench(
@@ -149,7 +149,7 @@ pub fn run(config: BenchConfig) -> (Table, Vec<AblationRow>) {
             Signedness::Unsigned,
             AccumMode::Extended { m: 1 },
         )
-        .unwrap();
+        .unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         let dps = solve(
             Multiplier::CPU32,
             4,
@@ -157,9 +157,9 @@ pub fn run(config: BenchConfig) -> (Table, Vec<AblationRow>) {
             Signedness::Signed,
             AccumMode::Extended { m: 1 },
         )
-        .unwrap();
-        let eu = Conv1dHiKonv::new(dpu, &gu).unwrap();
-        let es = Conv1dHiKonv::new(dps, &gs).unwrap();
+        .unwrap_or_else(|e| panic!("experiment fixture: {e}"));
+        let eu = Conv1dHiKonv::new(dpu, &gu).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
+        let es = Conv1dHiKonv::new(dps, &gs).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         let ns1 = bencher.bench("signedness/unsigned", || eu.conv(&fu)).median_ns();
         push(&mut rows, "signedness", "unsigned (Eq. 11/12)", ns1);
         let ns2 = bencher.bench("signedness/signed", || es.conv(&fs)).median_ns();
@@ -176,7 +176,7 @@ pub fn run(config: BenchConfig) -> (Table, Vec<AblationRow>) {
         let mut rng = Rng::new(0xAB4);
         let x = rng.quant_unsigned_vec(4, 8192);
         let y = rng.quant_unsigned_vec(4, 8192);
-        let eng = DotHiKonv::new(Multiplier::CPU32, 4, 4, Signedness::Unsigned).unwrap();
+        let eng = DotHiKonv::new(Multiplier::CPU32, 4, 4, Signedness::Unsigned).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         assert_eq!(eng.dot(&x, &y), dot_ref(&x, &y));
         let ns1 = bencher
             .bench("dot/scalar", || dot_ref(&x, &y))

@@ -73,7 +73,7 @@ pub fn fig6a(config: BenchConfig) -> (Table, Vec<LatencyRow>) {
         Signedness::Unsigned,
         AccumMode::Extended { m: 1 },
     )
-    .unwrap();
+    .unwrap_or_else(|e| panic!("experiment fixture: {e}"));
     let mut bencher = Bencher::with_config("fig6a", config);
     let mut rows = Vec::new();
     for (flen, klen) in combos {
@@ -83,7 +83,7 @@ pub fn fig6a(config: BenchConfig) -> (Table, Vec<LatencyRow>) {
         let base = bencher
             .bench(&format!("baseline/{flen}x{klen}"), || conv1d_ref(&f, &g))
             .median_ns();
-        let eng = Conv1dHiKonv::new(dp, &g).unwrap();
+        let eng = Conv1dHiKonv::new(dp, &g).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         let hik = bencher
             .bench(&format!("hikonv/{flen}x{klen}"), || eng.conv(&f))
             .median_ns();
@@ -119,7 +119,7 @@ pub fn fig6b(config: BenchConfig) -> (Table, Vec<LatencyRow>) {
         },
         &weights,
     )
-    .unwrap();
+    .unwrap_or_else(|e| panic!("experiment fixture: {e}"));
     let hik = bencher
         .bench("hikonv/ultranet-final", || eng.conv(&input))
         .median_ns();
@@ -151,14 +151,14 @@ pub fn fig6c(config: BenchConfig) -> (Table, Vec<LatencyRow>) {
             AccumMode::Extended { m: 1 },
             64,
         )
-        .unwrap();
+        .unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         let mut rng = Rng::new(0xF16C + bits as u64);
         let f = rng.quant_unsigned_vec(bits, flen);
         let g = rng.quant_unsigned_vec(bits, klen);
         let base = bencher
             .bench(&format!("baseline/{bits}bit"), || conv1d_ref(&f, &g))
             .median_ns();
-        let eng = Conv1dHiKonv::new(dp, &g).unwrap();
+        let eng = Conv1dHiKonv::new(dp, &g).unwrap_or_else(|e| panic!("experiment fixture: {e}"));
         let hik = bencher
             .bench(&format!("hikonv/{bits}bit"), || eng.conv(&f))
             .median_ns();

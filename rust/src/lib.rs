@@ -45,11 +45,23 @@
 //!   (frame source → admission control → bounded queue → batching →
 //!   panic-supervised inference → postprocess) with deadline budgets,
 //!   deterministic fault injection and SLO metrics (`docs/SERVING.md`).
+//! * [`analysis`] — static packing-soundness verifier: abstract
+//!   interpretation (interval + bit-range domains) over a validated graph
+//!   and resolved plan, independently re-proving guard bits, signedness
+//!   corrections, requant shifts and lane fits with machine-readable
+//!   `V-*` diagnostics; consumed by `hikonv verify`, the planner's
+//!   mandatory cross-check and the artifact loader (`docs/ANALYSIS.md`).
 //! * [`experiments`] — regenerators for every table and figure of the paper.
 //! * [`bench`], [`testing`], [`util`], [`cli`] — self-built substrates
 //!   (criterion-lite harness, property testing, RNG/JSON/tables, CLI parsing);
 //!   the build image has no network access so these are implemented in-crate.
 
+// The whole non-test crate is an unwrap/expect-free zone: recoverable
+// failures thread `Result`/`Option`, invariants use `unreachable!` with
+// a message, poisoned locks recover via `unwrap_or_else(|e| e.into_inner())`.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod analysis;
 pub mod artifact;
 pub mod bench;
 pub mod cli;

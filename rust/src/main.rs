@@ -7,9 +7,14 @@
 //! hikonv dse     --bit-a 32 --bit-b 32            design-space exploration
 //! hikonv fig5 | fig6a | fig6b | fig6c | table1 | table2
 //! hikonv plan    --engine auto [--model <workload>] [--threads N]
-//!                [--probe] [--dse] [--json]  print the per-op engine plan
-//! hikonv plan    --artifact <path> [--json]  print a compiled artifact's
-//!                                            embedded plan
+//!                [--probe] [--dse] [--json] [--verify]
+//!                                      print the per-op engine plan
+//! hikonv plan    --artifact <path> [--json] [--verify]  print a compiled
+//!                                            artifact's embedded plan
+//! hikonv verify  [--model <workload> | --artifact <path>]
+//!                [--engine auto] [--threads N] [--out <path>]
+//!                statically prove packing soundness (JSON report; exit 1
+//!                with V-* diagnostics on any violation)
 //! hikonv compile --model <workload> [--engine auto] [--threads N]
 //!                [--seed N] [--out <path>]    AOT-compile to a .hkv artifact
 //! hikonv serve   --backend <engine-spec>|pjrt
@@ -34,6 +39,12 @@
 //! with a warning on a host-signature mismatch, and — for `run-model`
 //! with a `--model` spec — on a corrupt file).
 //!
+//! `verify` runs the static packing-soundness verifier
+//! (`hikonv::analysis`, `docs/ANALYSIS.md`): abstract interpretation over
+//! the resolved plan proving guard bits, sign handling, requant shifts
+//! and lane widths sound — no inference executed. The same proof runs
+//! inside every `plan` (planner cross-check) and on artifact load.
+//!
 //! `<workload>` is a built-in graph model (`hikonv::models::zoo`):
 //! `ultranet`, `ultranet-tiny` (default), `strided` (stride-2
 //! downsampling convs), `fc-head` (conv backbone + FC classifier),
@@ -53,7 +64,9 @@
 //! `serve`; `--batch` / `--linger-ms` are the dynamic batcher's knobs
 //! (batches are executed as batches by the fused runner). They all
 //! compose.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
+use hikonv::analysis;
 use hikonv::artifact::{self, Artifact, LoadMode};
 use hikonv::bench::BenchConfig;
 use hikonv::cli::{render_help, Args, OptSpec};
@@ -130,6 +143,7 @@ fn run(args: &Args) -> Result<(), String> {
             Ok(())
         }
         "plan" => cmd_plan(args),
+        "verify" => cmd_verify(args),
         "serve" => cmd_serve(args),
         "run-model" => cmd_run_model(args),
         "compile" => cmd_compile(args),
@@ -535,12 +549,20 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
         if args.has("json") {
             println!("{}", art.plan.to_json().to_string_pretty());
         }
+        if args.has("verify") {
+            let report = art.verify().map_err(|e| e.to_string())?;
+            report_verdict(&report)?;
+        }
         return Ok(());
     }
     let engine = parse_engine_spec(args, "engine", "auto")?;
     let graph = parse_model(args)?;
     let plan = EnginePlan::plan_graph(&graph, &engine)?;
     print!("{}", plan.render());
+    if args.has("verify") {
+        let report = analysis::verify_graph(&graph, &engine).map_err(|e| e.to_string())?;
+        report_verdict(&report)?;
+    }
     if args.has("dse") {
         // Bitwidth context: what a model/hardware co-design could pick on
         // this multiplier (§III-C).
@@ -560,6 +582,43 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
         println!("{}", plan.to_json().to_string_pretty());
     }
     Ok(())
+}
+
+/// `hikonv verify`: run the static packing-soundness verifier over a
+/// workload's resolved plan (`--model` + `--engine`) or over a compiled
+/// artifact's embedded plan, weights, and calibration (`--artifact`) —
+/// no inference executed. Prints the machine-readable JSON report
+/// (optionally also to `--out`) and exits nonzero listing the `V-*`
+/// diagnostics when any proof fails.
+fn cmd_verify(args: &Args) -> Result<(), String> {
+    let report = if let Some(path) = args.get("artifact") {
+        let art = Artifact::read(Path::new(path)).map_err(|e| e.to_string())?;
+        art.verify().map_err(|e| e.to_string())?
+    } else {
+        let engine = parse_engine_spec(args, "engine", "auto")?;
+        let graph = parse_model(args)?;
+        analysis::verify_graph(&graph, &engine).map_err(|e| e.to_string())?
+    };
+    let json = report.to_json().to_string_pretty();
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &json).map_err(|e| format!("writing {path}: {e}"))?;
+    }
+    println!("{json}");
+    report_verdict(&report)
+}
+
+/// Shared verdict tail for `verify` and `plan --verify`: quiet on a
+/// sound report, an error listing every diagnostic otherwise (which the
+/// caller turns into a nonzero exit).
+fn report_verdict(report: &analysis::VerifyReport) -> Result<(), String> {
+    if report.is_sound() {
+        return Ok(());
+    }
+    Err(format!(
+        "{} packing-soundness violation(s):\n{}",
+        report.diagnostics().len(),
+        report.render_diagnostics()
+    ))
 }
 
 fn help() -> String {
@@ -604,6 +663,44 @@ fn help() -> String {
         OptSpec {
             name: "artifact",
             help: "print the plan embedded in a compiled .hkv artifact instead",
+            default: None,
+            is_switch: false,
+        },
+        OptSpec {
+            name: "verify",
+            help: "also run the static packing-soundness verifier (exit 1 on V-*)",
+            default: None,
+            is_switch: true,
+        },
+    ];
+    let verify_opts: &[OptSpec] = &[
+        OptSpec {
+            name: "model",
+            help: "graph workload: ultranet | ultranet-tiny | strided | fc-head | residual | mixed",
+            default: Some("ultranet-tiny"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "engine",
+            help: "engine spec: auto | <kernel>[@AxB][:k=v,...]",
+            default: Some("auto"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "artifact",
+            help: "verify a compiled .hkv artifact's embedded plan + evidence instead",
+            default: None,
+            is_switch: false,
+        },
+        OptSpec {
+            name: "threads",
+            help: "intra-layer tiling threads (part of the verified host signature; 0 = auto)",
+            default: Some("0"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "out",
+            help: "also write the JSON report to this path",
             default: None,
             is_switch: false,
         },
@@ -807,6 +904,7 @@ fn help() -> String {
             ("table1", "BNN resource comparison (paper Table I)", none),
             ("table2", "UltraNet fps / DSP efficiency (paper Table II)", none),
             ("plan", "print the per-op engine plan (theory-driven)", plan_opts),
+            ("verify", "statically prove a plan packing-sound (JSON report)", verify_opts),
             ("compile", "AOT-compile a workload to a .hkv artifact", compile_opts),
             ("serve", "run the streaming serving pipeline", serve_opts),
             ("run-model", "single graph-workload inference on CPU engines", run_model_opts),

@@ -497,7 +497,10 @@ pub struct GraphInfo {
 impl GraphInfo {
     /// Output dims of the final node (the head).
     pub fn output_dims(&self) -> (usize, usize, usize) {
-        self.nodes.last().expect("validated graph is non-empty").dims
+        self.nodes
+            .last()
+            .unwrap_or_else(|| unreachable!("validated graph is non-empty"))
+            .dims
     }
 
     /// Flat length of the head output.

@@ -65,7 +65,7 @@ pub fn random_graph_weights(graph: &GraphSpec, seed: u64) -> Result<Vec<QTensor>
                 true,
                 1.0 / 64.0,
             )
-            .expect("in-range levels"),
+            .map_err(|e| format!("graph '{}', unit '{}': {e}", graph.name, u.name))?,
         );
     }
     Ok(tensors)
@@ -159,7 +159,8 @@ fn compile(graph: &GraphSpec, info: &GraphInfo) -> (Vec<Step>, Vec<bool>) {
     while i < n {
         match &graph.nodes[i].op {
             LayerOp::Conv2d { .. } | LayerOp::Fc { .. } => {
-                let unit = info.unit_of_node[i].expect("conv node has a unit");
+                let unit = info.unit_of_node[i]
+                    .unwrap_or_else(|| unreachable!("validate() assigns every conv node a unit"));
                 let mut fuse = None;
                 let mut end = i;
                 // Absorb a [Relu] Requant [MaxPool 2] suffix — but only
@@ -189,7 +190,9 @@ fn compile(graph: &GraphSpec, info: &GraphInfo) -> (Vec<Step>, Vec<bool>) {
                                 e = j + 1;
                             }
                             fuse = Some(Fuse {
-                                requant: info.requant_of_node[j].expect("requant slot"),
+                                requant: info.requant_of_node[j].unwrap_or_else(|| {
+                                    unreachable!("validate() assigns every requant node a slot")
+                                }),
                                 bits,
                                 pool,
                             });
@@ -215,7 +218,9 @@ fn compile(graph: &GraphSpec, info: &GraphInfo) -> (Vec<Step>, Vec<bool>) {
                 let kind = match op {
                     LayerOp::Relu => StepKind::Relu,
                     LayerOp::Requant { bits } => StepKind::Requant {
-                        idx: info.requant_of_node[i].expect("requant slot"),
+                        idx: info.requant_of_node[i].unwrap_or_else(|| {
+                            unreachable!("validate() assigns every requant node a slot")
+                        }),
                         bits: *bits,
                     },
                     LayerOp::MaxPool { k } => StepKind::MaxPool { k: *k },
@@ -302,6 +307,11 @@ pub struct GraphRunner {
     kernels: Vec<Box<dyn ConvKernel>>,
     /// Calibrated right-shift per requant node (slot order).
     shifts: Vec<u32>,
+    /// Calibration record per requant node (slot order): the observed
+    /// `max |accumulator|` each shift was derived from. Artifacts store
+    /// these so the verifier can re-prove shift/record consistency at
+    /// load time.
+    calib: Vec<i64>,
     steps: Vec<Step>,
     flat_used: Vec<bool>,
     pool: Option<Arc<ThreadPool>>,
@@ -360,6 +370,7 @@ impl GraphRunner {
         plan: EnginePlan,
         packed: Vec<crate::engine::PackedWeights>,
         shifts: Vec<u32>,
+        calib: Vec<i64>,
     ) -> Result<GraphRunner, String> {
         let info = graph.validate().map_err(|e| e.to_string())?;
         if plan.layers.len() != info.units.len() {
@@ -392,6 +403,12 @@ impl GraphRunner {
                 graph.name, info.requant_count, shifts.len()
             ));
         }
+        if calib.len() != info.requant_count {
+            return Err(format!(
+                "graph '{}' has {} requant nodes, got {} calibration records",
+                graph.name, info.requant_count, calib.len()
+            ));
+        }
         let registry = KernelRegistry::builtin();
         let mut kernels: Vec<Box<dyn ConvKernel>> = Vec::with_capacity(info.units.len());
         let mut wants_pool = false;
@@ -421,13 +438,14 @@ impl GraphRunner {
             plan,
             kernels,
             shifts,
+            calib,
             steps,
             flat_used,
             pool,
             arenas: Mutex::new(Vec::new()),
         };
         let warm = runner.new_arena();
-        runner.arenas.lock().expect("arena pool poisoned").push(warm);
+        runner.put_arena(warm);
         Ok(runner)
     }
 
@@ -478,6 +496,7 @@ impl GraphRunner {
             plan,
             kernels,
             shifts: Vec::new(),
+            calib: Vec::new(),
             steps,
             flat_used,
             pool,
@@ -485,7 +504,7 @@ impl GraphRunner {
         };
         runner.calibrate();
         let warm = runner.new_arena();
-        runner.arenas.lock().expect("arena pool poisoned").push(warm);
+        runner.put_arena(warm);
         Ok(runner)
     }
 
@@ -523,6 +542,13 @@ impl GraphRunner {
     /// Calibrated right-shift per requant node, in node order.
     pub fn requant_shifts(&self) -> &[u32] {
         &self.shifts
+    }
+
+    /// Calibration record per requant node, in node order: the observed
+    /// `max |accumulator|` each shift in [`requant_shifts`]
+    /// (Self::requant_shifts) was derived from.
+    pub fn requant_calibration(&self) -> &[i64] {
+        &self.calib
     }
 
     /// The quantized weight tensors this runner was built from, in unit
@@ -581,12 +607,21 @@ impl GraphRunner {
     }
 
     fn take_arena(&self) -> GraphArena {
-        let cached = self.arenas.lock().expect("arena pool poisoned").pop();
+        // A poisoned pool mutex only means a panicking thread held the
+        // free-list; the arenas themselves are still valid.
+        let cached = self
+            .arenas
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop();
         cached.unwrap_or_else(|| self.new_arena())
     }
 
     fn put_arena(&self, arena: GraphArena) {
-        self.arenas.lock().expect("arena pool poisoned").push(arena);
+        self.arenas
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(arena);
     }
 
     fn calibrate(&mut self) {
@@ -594,8 +629,10 @@ impl GraphRunner {
         let level = 1i64 << (self.graph.input_bits - 1); // mid-gray
         let frame = vec![level; c * h * w];
         let mut shifts = vec![0u32; self.info.requant_count];
-        let _ = self.eval_nodes(&frame, Some(&mut shifts[..]), false);
+        let mut records = vec![0i64; self.info.requant_count];
+        let _ = self.eval_nodes(&frame, Some((&mut shifts[..], &mut records[..])), false);
         self.shifts = shifts;
+        self.calib = records;
     }
 
     /// Full forward pass on a quantized frame (`[c][h][w]` levels of
@@ -806,11 +843,12 @@ impl GraphRunner {
 
     /// The shared node walker. `calibrating` computes (and stores) a
     /// fresh shift at every requant node from the observed accumulator
-    /// range; `reference` swaps the bound kernels for `conv2d_ref_strided`.
+    /// range — recording that observed `max |accumulator|` alongside it —
+    /// `reference` swaps the bound kernels for `conv2d_ref_strided`.
     fn eval_nodes(
         &self,
         frame: &[i64],
-        mut calibrating: Option<&mut [u32]>,
+        mut calibrating: Option<(&mut [u32], &mut [i64])>,
         reference: bool,
     ) -> Vec<i64> {
         let (c0, h0, w0) = self.graph.input;
@@ -823,7 +861,8 @@ impl GraphRunner {
             let (c, h, w) = dims;
             let next: Vec<i64> = match &node.op {
                 LayerOp::Conv2d { .. } | LayerOp::Fc { .. } => {
-                    let u = self.info.unit_of_node[i].expect("conv node has a unit");
+                    let u = self.info.unit_of_node[i]
+                        .unwrap_or_else(|| unreachable!("validate() assigns every conv node a unit"));
                     let cu = &self.info.units[u];
                     let padded = pad2d(&cur, cu.ci, cu.hi, cu.wi, cu.pad);
                     if reference {
@@ -839,9 +878,11 @@ impl GraphRunner {
                 }
                 LayerOp::Relu => cur.iter().map(|&v| v.max(0)).collect(),
                 LayerOp::Requant { bits } => {
-                    let ridx = self.info.requant_of_node[i].expect("requant slot");
-                    let shift = match calibrating.as_deref_mut() {
-                        Some(shifts) => {
+                    let ridx = self.info.requant_of_node[i].unwrap_or_else(|| {
+                        unreachable!("validate() assigns every requant node a slot")
+                    });
+                    let shift = match calibrating.as_mut() {
+                        Some((shifts, records)) => {
                             let maxabs = cur.iter().map(|&v| v.abs()).max().unwrap_or(1).max(1);
                             let target = (1i64 << *bits) - 1;
                             let mut s = 0u32;
@@ -849,6 +890,7 @@ impl GraphRunner {
                                 s += 1;
                             }
                             shifts[ridx] = s;
+                            records[ridx] = maxabs;
                             s
                         }
                         None => self.shifts[ridx],
@@ -858,7 +900,9 @@ impl GraphRunner {
                 LayerOp::MaxPool { k } => maxpool_k(&cur, c, h, w, *k),
                 LayerOp::AvgPool { k } => avgpool_k(&cur, c, h, w, *k),
                 LayerOp::Add { with } => {
-                    let other = saved[*with].as_ref().expect("residual source saved");
+                    let other = saved[*with]
+                        .as_ref()
+                        .unwrap_or_else(|| unreachable!("validate() orders residual sources first"));
                     cur.iter().zip(other).map(|(&x, &y)| x + y).collect()
                 }
             };

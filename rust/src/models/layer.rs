@@ -128,7 +128,10 @@ impl ModelSpec {
 
     /// Output dims of the final layer.
     pub fn output_dims(&self) -> (usize, usize, usize) {
-        let last = self.layers.last().expect("non-empty model");
+        let last = self
+            .layers
+            .last()
+            .unwrap_or_else(|| panic!("output_dims on an empty model"));
         let (h, w) = last.out();
         (last.co, h, w)
     }

@@ -82,7 +82,7 @@ pub fn random_weights(model: &ModelSpec, seed: u64) -> ModelWeights {
                 true,
                 1.0 / 64.0,
             )
-            .expect("in-range levels"),
+            .unwrap_or_else(|e| unreachable!("in-range levels: {e}")),
         );
     }
     ModelWeights { tensors }

@@ -24,6 +24,17 @@ pub use dse::{explore, pareto_points, DsePoint};
 pub use solver::{solve, solve_all, solve_for_lane, AccumMode, DesignPoint, Signedness, SolveError};
 pub use throughput::{paper_figure5_claims, surface, PaperClaim, Surface};
 
+/// The software fast lane every engine selects against: a packed product
+/// runs in `i64` words iff [`DesignPoint::fits_lane`]`(FAST_LANE_BITS)`.
+/// Shared by the conv engines' lane selection, the planner cost models
+/// and the packing-soundness verifier so the three can never disagree.
+pub const FAST_LANE_BITS: u32 = 64;
+
+/// The widest software lane any engine can execute: the `i128` fallback.
+/// A design point that does not fit this lane cannot run at all — the
+/// verifier rejects it (`V-LANE`) before any kernel is built.
+pub const WIDE_LANE_BITS: u32 = 128;
+
 /// A hardware multiplier description.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Multiplier {

@@ -302,7 +302,7 @@ pub fn solve(
                 .then(b.s.cmp(&a.s)) // prefer the smaller slice (denser packing)
                 .then(a.n.cmp(&b.n))
         })
-        .expect("non-empty"))
+        .unwrap_or_else(|| unreachable!("solve_all errs on an empty candidate set")))
 }
 
 /// Like [`solve`], but constrained so the packed product (all

@@ -49,7 +49,10 @@ pub fn surface(mult: Multiplier, signedness: Signedness, accum: AccumMode) -> Su
     let points = (1..=8u32)
         .map(|p| {
             (1..=8u32)
-                .map(|q| solve(mult, p, q, signedness, accum).expect("feasible for p,q<=8"))
+                .map(|q| {
+                    solve(mult, p, q, signedness, accum)
+                        .unwrap_or_else(|e| unreachable!("feasible for p,q<=8: {e}"))
+                })
                 .collect()
         })
         .collect();

@@ -19,12 +19,12 @@ impl Summary {
     pub fn from(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::from on empty sample set");
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let median = percentile_sorted(&sorted, 50.0);
         let mut devs: Vec<f64> = sorted.iter().map(|v| (v - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(f64::total_cmp);
         let mad = percentile_sorted(&devs, 50.0) * 1.4826; // normal-consistent
         Summary {
             n,

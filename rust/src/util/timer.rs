@@ -44,7 +44,7 @@ impl Stopwatch {
     pub fn report(&self) -> String {
         let total = self.total().max(1e-12);
         let mut sorted = self.spans.clone();
-        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        sorted.sort_by(|a, b| b.1.total_cmp(&a.1));
         let mut out = String::new();
         for (name, t) in sorted {
             out.push_str(&format!(

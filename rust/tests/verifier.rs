@@ -1,0 +1,300 @@
+//! Acceptance suite for the static packing-soundness verifier
+//! (`hikonv::analysis`).
+//!
+//! * **Property grid + oracle** — every solved design point over a
+//!   `(multiplier, p, q, signedness, accumulation)` grid, plus tampered
+//!   variants (undersized slice, inflated operand counts, deepened
+//!   accumulation), is checked against an independent i128 brute-force
+//!   oracle that enumerates every concrete operand value and simulates
+//!   adversarial all-max-magnitude accumulation. Soundness: the verifier
+//!   never accepts a point the oracle overflows. Tightness: the verifier
+//!   accepts every point the solver produces.
+//! * **Executable cross-check** — every accepted point is run through
+//!   the real 1-D HiKonv engine on adversarial extreme-value inputs and
+//!   must be bit-identical to the reference convolution.
+//! * **Integration points** — deliberately corrupted plans are rejected
+//!   at all three integration layers (CLI-level `verify_plan`, the
+//!   planner's mandatory cross-check, artifact load) with distinct
+//!   machine-readable `V-*` codes.
+
+use hikonv::analysis::{assumed_operands, check_design, verify_graph, verify_plan, Code, Evidence};
+use hikonv::artifact::Artifact;
+use hikonv::conv::{conv1d_hikonv, conv1d_ref};
+use hikonv::engine::{EngineConfig, EnginePlan};
+use hikonv::models::{random_graph_weights, zoo};
+use hikonv::theory::{solve, AccumMode, DesignPoint, Multiplier, Signedness};
+
+const SIGNEDNESSES: [Signedness; 3] = [
+    Signedness::Unsigned,
+    Signedness::Signed,
+    Signedness::UnsignedBySigned,
+];
+
+/// Every concrete level of a `bits`-wide operand — restated from the
+/// paper's conventions, independent of the verifier's interval code.
+fn levels(bits: u32, signed: bool) -> Vec<i128> {
+    if signed {
+        let half = 1i128 << (bits - 1);
+        (-half..half).collect()
+    } else {
+        (0..(1i128 << bits)).collect()
+    }
+}
+
+/// `(feature levels, kernel levels)` under the design's convention.
+fn operand_levels(dp: &DesignPoint) -> (Vec<i128>, Vec<i128>) {
+    match dp.signedness {
+        Signedness::Unsigned => (levels(dp.p, false), levels(dp.q, false)),
+        Signedness::Signed => (levels(dp.p, true), levels(dp.q, true)),
+        Signedness::UnsignedBySigned => (levels(dp.p, false), levels(dp.q, true)),
+    }
+}
+
+/// Does `[lo, hi]` fit an `s`-bit slice (unsigned when non-negative,
+/// two's-complement otherwise)?
+fn fits_slice(lo: i128, hi: i128, s: u32) -> bool {
+    if s == 0 {
+        return false;
+    }
+    if s >= 126 {
+        return true;
+    }
+    if lo >= 0 {
+        hi < (1i128 << s)
+    } else {
+        lo >= -(1i128 << (s - 1)) && hi < (1i128 << (s - 1))
+    }
+}
+
+/// The brute-force oracle: enumerate every concrete product of the
+/// design's operand ranges, push `terms` adversarially same-signed
+/// copies of the worst one through a segment, and check the slice,
+/// the Eq. 7/8 port layouts, and the 128-bit widest software lane.
+fn oracle_accepts(dp: &DesignPoint, terms: u64) -> bool {
+    if dp.n == 0 || dp.k == 0 || dp.s == 0 {
+        return false;
+    }
+    if dp.p + (dp.n as u32 - 1) * dp.s > dp.mult.bit_a {
+        return false;
+    }
+    if dp.q + (dp.k as u32 - 1) * dp.s > dp.mult.bit_b {
+        return false;
+    }
+    if dp.s as u128 * (dp.n + dp.k - 1) as u128 + 1 > 128 {
+        return false;
+    }
+    let (fl, gl) = operand_levels(dp);
+    let mut max_prod = i128::MIN;
+    let mut min_prod = i128::MAX;
+    for &a in &fl {
+        for &b in &gl {
+            max_prod = max_prod.max(a * b);
+            min_prod = min_prod.min(a * b);
+        }
+    }
+    let t = terms as i128;
+    let hi = max_prod.max(0).saturating_mul(t);
+    let lo = min_prod.min(0).saturating_mul(t);
+    fits_slice(lo, hi, dp.s)
+}
+
+/// The verifier's verdict on a raw design point under its own assumed
+/// operand convention.
+fn verifier_accepts(dp: &DesignPoint, terms: u64) -> bool {
+    let (f, g) = assumed_operands(dp.p, dp.q, dp.signedness);
+    check_design(dp, f, g, terms, "grid").1.is_empty()
+}
+
+/// Corruptions of a solved point: undersized slice, inflated packing
+/// counts (breaking the Eq. 7/8 port layouts or the lane), deepened
+/// accumulation.
+fn tampered(dp: &DesignPoint) -> Vec<DesignPoint> {
+    let mut out = Vec::new();
+    if dp.s > 1 {
+        let mut t = *dp;
+        t.s -= 1;
+        t.gb = t.gb.saturating_sub(1);
+        out.push(t);
+    }
+    let mut wide_n = *dp;
+    wide_n.n += 1;
+    out.push(wide_n);
+    let mut wide_k = *dp;
+    wide_k.k += 1;
+    out.push(wide_k);
+    let mut deep = *dp;
+    deep.accum = AccumMode::Extended { m: 64 };
+    out.push(deep);
+    out
+}
+
+#[test]
+fn grid_soundness_and_tightness_against_the_brute_force_oracle() {
+    let mults = [Multiplier::CPU32, Multiplier::CPU64, Multiplier::DSP48E2];
+    let mut solved = 0usize;
+    let mut caught = 0usize;
+    for mult in mults {
+        for p in 1..=6u32 {
+            for q in 1..=6u32 {
+                for sg in SIGNEDNESSES {
+                    for m in [1u64, 3] {
+                        let Ok(dp) = solve(mult, p, q, sg, AccumMode::Extended { m }) else {
+                            continue;
+                        };
+                        let terms = dp.accum.terms(dp.n, dp.k);
+                        // Tightness: solver output is accepted by both.
+                        assert!(oracle_accepts(&dp, terms), "oracle rejects solved {dp:?}");
+                        assert!(verifier_accepts(&dp, terms), "verifier rejects solved {dp:?}");
+                        solved += 1;
+                        // Soundness: every tampered variant the oracle
+                        // overflows must also fail the interval proof.
+                        for t in tampered(&dp) {
+                            let tt = t.accum.terms(t.n, t.k);
+                            if !oracle_accepts(&t, tt) {
+                                assert!(
+                                    !verifier_accepts(&t, tt),
+                                    "verifier accepted an oracle-overflowing point: {t:?}"
+                                );
+                                caught += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(solved >= 100, "grid too sparse: only {solved} solved points");
+    assert!(caught >= 100, "tampering never overflowed: only {caught} caught");
+}
+
+#[test]
+fn undersized_guard_bits_are_a_v_guard() {
+    let dp = solve(
+        Multiplier::CPU32,
+        4,
+        4,
+        Signedness::UnsignedBySigned,
+        AccumMode::Extended { m: 2 },
+    )
+    .unwrap();
+    let mut bad = dp;
+    bad.s -= 1;
+    bad.gb = bad.gb.saturating_sub(1);
+    let terms = bad.accum.terms(bad.n, bad.k);
+    let (f, g) = assumed_operands(bad.p, bad.q, bad.signedness);
+    let (_, diags) = check_design(&bad, f, g, terms, "t");
+    assert!(
+        diags.iter().any(|d| d.code == Code::Guard),
+        "expected V-GUARD, got: {diags:?}"
+    );
+}
+
+/// Adversarial all-max-magnitude operand vectors for the executable
+/// engine: unsigned ranges saturate high, signed ranges alternate
+/// between their two extremes.
+fn adversarial(bits: u32, signed: bool, len: usize) -> Vec<i64> {
+    if signed {
+        let half = 1i64 << (bits - 1);
+        (0..len).map(|i| if i % 2 == 0 { -half } else { half - 1 }).collect()
+    } else {
+        vec![(1i64 << bits) - 1; len]
+    }
+}
+
+#[test]
+fn accepted_points_run_bit_exact_on_adversarial_inputs() {
+    for mult in [Multiplier::CPU32, Multiplier::CPU64] {
+        for p in 1..=4u32 {
+            for q in 1..=4u32 {
+                for sg in SIGNEDNESSES {
+                    let Ok(dp) = solve(mult, p, q, sg, AccumMode::Extended { m: 1 }) else {
+                        continue;
+                    };
+                    let terms = dp.accum.terms(dp.n, dp.k);
+                    assert!(verifier_accepts(&dp, terms), "{dp:?}");
+                    let (f_signed, g_signed) = match sg {
+                        Signedness::Unsigned => (false, false),
+                        Signedness::Signed => (true, true),
+                        Signedness::UnsignedBySigned => (false, true),
+                    };
+                    let f = adversarial(p, f_signed, 8 * dp.n.max(1));
+                    let g = adversarial(q, g_signed, 2 * dp.k + 1);
+                    assert_eq!(
+                        conv1d_hikonv(&f, &g, &dp),
+                        conv1d_ref(&f, &g),
+                        "accepted point is not bit-exact: {dp:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_zoo_workload_passes_cli_level_verification() {
+    for name in zoo::NAMES {
+        let graph = zoo::build(name).unwrap();
+        let report = verify_graph(&graph, &EngineConfig::auto().with_threads(2)).unwrap();
+        assert!(
+            report.is_sound(),
+            "{name}: {}",
+            report.render_diagnostics()
+        );
+    }
+}
+
+#[test]
+fn corruption_is_rejected_at_all_three_integration_points_with_distinct_codes() {
+    let cfg = EngineConfig::auto().with_threads(2);
+    let graph = zoo::build("fc-head").unwrap();
+    let weights = random_graph_weights(&graph, 0xA07).unwrap();
+
+    // (1) CLI-level `verify`: a doctored plan row is a V-PLAN.
+    let mut plan = EnginePlan::plan_graph(&graph, &cfg).unwrap();
+    plan.layers[0].ops_per_mult += 5;
+    let report = verify_plan(&graph, &plan, &Evidence::none()).unwrap();
+    assert!(!report.is_sound());
+    assert!(
+        report.diagnostics().iter().any(|d| d.code == Code::Plan),
+        "{}",
+        report.render_diagnostics()
+    );
+
+    // (2) planner cross-check: a bit override narrower than the graph's
+    // levels passes the solver's formula feasibility but fails the
+    // interval proof, so `plan_graph` itself refuses with a V-RANGE —
+    // while the unverified entry point still produces a plan.
+    let narrow = cfg.clone().with_bits(2, 2);
+    assert!(EnginePlan::plan_graph_unverified(&graph, &narrow).is_ok());
+    let err = EnginePlan::plan_graph(&graph, &narrow)
+        .expect_err("cross-check must reject the narrowed override");
+    assert!(err.contains("V-RANGE"), "{err}");
+    assert!(err.contains("interval proof"), "{err}");
+
+    // (3) artifact load: a hand-edited requant shift in an otherwise
+    // checksum-clean file is a V-REQUANT at `into_runner` time.
+    let mut art = Artifact::compile(graph, weights, cfg).unwrap();
+    assert!(!art.shifts.is_empty());
+    art.shifts[0] += 7;
+    let err = Artifact::from_bytes(&art.to_bytes())
+        .unwrap()
+        .into_runner()
+        .expect_err("tampered shift must be rejected at load")
+        .to_string();
+    assert!(err.contains("V-REQUANT"), "{err}");
+}
+
+#[test]
+fn lane_overflow_is_a_v_lane_under_a_narrow_configured_lane() {
+    let graph = zoo::build("fc-head").unwrap();
+    // Force the hikonv kernel so `auto` cannot sidestep the narrow lane
+    // by planning the baseline everywhere.
+    let cfg = EngineConfig::named("hikonv").with_threads(2).with_lane_bits(16);
+    let report = verify_graph(&graph, &cfg).unwrap();
+    assert!(!report.is_sound());
+    assert!(
+        report.diagnostics().iter().any(|d| d.code == Code::Lane),
+        "{}",
+        report.render_diagnostics()
+    );
+}
