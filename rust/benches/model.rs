@@ -125,6 +125,10 @@ fn main() {
         "graph workloads (auto plan): oracle-checked fused pipeline",
         &["workload", "unfused", "fused", "speedup", "plan"],
     );
+    let mut mtable = Table::new(
+        "steady-state arena footprint: colored slot pool vs one-buffer-per-node",
+        &["workload", "arena", "baseline", "saved"],
+    );
     for name in GRAPH_WORKLOADS {
         let graph = zoo::build(name).expect("builtin workload");
         let gweights = random_graph_weights(&graph, 7).expect("weights");
@@ -171,8 +175,33 @@ fn main() {
                 .set("speedup_fused", unfused / fused)
                 .set("fps_fused", 1e9 / fused),
         );
+
+        // Steady-state arena footprint (dataflow-colored slot pool) vs
+        // the historical one-buffer-per-node layout — the per-worker
+        // memory the multi-tenant serve path holds per tenant. CI's
+        // memory regression gate keys on these `section:"memory"` rows.
+        let arena = runner.arena_bytes();
+        let baseline = runner.arena_baseline_bytes();
+        mtable.row(hikonv::cells!(
+            name,
+            format!("{arena} B"),
+            format!("{baseline} B"),
+            format!(
+                "{:.1}%",
+                100.0 * (baseline.saturating_sub(arena)) as f64 / baseline.max(1) as f64
+            )
+        ));
+        json_rows.push(
+            Json::obj()
+                .set("engine", "auto")
+                .set("workload", name)
+                .set("section", "memory")
+                .set("arena_bytes", arena)
+                .set("arena_baseline_bytes", baseline),
+        );
     }
     print!("{}", gtable.render());
+    print!("{}", mtable.render());
 
     // --- startup latency: load AOT artifact vs plan-at-startup ---------
     // The artifact path (docs/ARTIFACT.md) deserializes the stored plan,

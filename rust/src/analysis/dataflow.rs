@@ -1,0 +1,708 @@
+//! Step-program dataflow analysis: per-buffer def/use liveness,
+//! alias/ordering proofs (the `A-*` codes), and arena slot coloring.
+//!
+//! The fused step program `GraphRunner` compiles writes conv epilogues
+//! straight into the *interior* of the next conv's padded input buffer
+//! and materializes flat per-node buffers only where a later step (a
+//! residual `Add`, a standalone pool) still needs the value. Nothing in
+//! that compiler proves those in-place writes never clobber a value a
+//! later step reads — historically the safety was implicit in the
+//! one-buffer-per-node arena layout, which is also why per-worker
+//! arenas were memory-hungry at multi-tenant scale.
+//!
+//! This module makes both halves explicit:
+//!
+//! 1. [`analyze`] walks a [`BufferProgram`] (the runner's step program
+//!    abstracted to its buffer reads/writes) on a three-phase tick
+//!    clock per step — *stage* (`pad2d_into` writes), *read* (operand
+//!    consumption, plus elementwise output writes, which stream while
+//!    reading), *write* (conv epilogue output, which happens only
+//!    after the kernel fully drained its input into the shared
+//!    accumulator) — and proves every read sees a defined value
+//!    (`A-ORDER`) and no write lands on a value that is still unread
+//!    or being read (`A-ALIAS`).
+//! 2. [`color`] turns the proven live intervals into a minimal slot
+//!    assignment per pool (flat node buffers and padded conv inputs
+//!    are separate pools, so cross-pool aliasing is impossible by
+//!    construction): two buffers share a slot only when their live
+//!    intervals are disjoint. The resulting [`ArenaLayout`] is what
+//!    `GraphArena` allocates — max-concurrent-live bytes instead of
+//!    one buffer per node.
+//! 3. [`check_layout`] is the cheap linear re-verification of a stored
+//!    layout (an artifact's embedded one) against a freshly compiled
+//!    program: unmapped or undersized slots are `A-SLOT`, two
+//!    live-overlapping buffers sharing a slot are `A-LIVE`. A corrupt
+//!    layout is rejected before any kernel executes.
+//!
+//! Padded slots carry one runtime obligation the static proof relies
+//! on: interior writes assume zero borders, so when a slot's occupant
+//! changes to a different unit the runner re-zeroes the incoming
+//! geometry's border cells (`models::layer::zero_pad_border`) before
+//! the interior write. Flat slots need no such bookkeeping — every
+//! flat write covers the occupant's full length, and bytes beyond it
+//! are never read.
+
+use super::{Code, Diagnostic};
+use crate::util::json::Json;
+
+/// Identity of one arena buffer in a compiled step program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufId {
+    /// The flat output buffer of graph node `n`.
+    Flat(usize),
+    /// The padded input buffer of conv/FC unit `u`.
+    Padded(usize),
+}
+
+impl BufId {
+    fn label(&self) -> String {
+        match self {
+            BufId::Flat(n) => format!("flat[{n}]"),
+            BufId::Padded(u) => format!("padded[{u}]"),
+        }
+    }
+}
+
+/// Geometry of one padded conv-input buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PaddedGeom {
+    /// Channels.
+    pub c: usize,
+    /// Unpadded height.
+    pub h: usize,
+    /// Unpadded width.
+    pub w: usize,
+    /// Zero-border width on each side.
+    pub pad: usize,
+}
+
+impl PaddedGeom {
+    /// Total `i64` count of the padded buffer.
+    pub fn input_len(&self) -> usize {
+        self.c * (self.h + 2 * self.pad) * (self.w + 2 * self.pad)
+    }
+}
+
+/// The buffer reads/writes of one compiled step, abstracted away from
+/// the op it performs.
+#[derive(Clone, Debug, Default)]
+pub struct StepIo {
+    /// Buffers whose *pre-step* values the step consumes.
+    pub reads: Vec<BufId>,
+    /// Padded buffer the step stages its source into (`pad2d_into`)
+    /// before the kernel reads it: a def *before* the step's reads,
+    /// plus an implied read of the staged value by the kernel itself.
+    pub pad_write: Option<usize>,
+    /// Where the step's output lands (`None` = the caller's head
+    /// buffer, outside the arena).
+    pub write: Option<BufId>,
+    /// Whether the output is written *while* the reads are in flight
+    /// (elementwise ops stream src→dst and must never share a buffer)
+    /// rather than after the step fully drained its inputs into the
+    /// shared accumulator (conv epilogues, which may therefore reuse a
+    /// source buffer's slot).
+    pub write_at_read: bool,
+}
+
+/// A compiled step program abstracted to its buffer dataflow — the
+/// input both the alias proof and the coloring run on.
+#[derive(Clone, Debug)]
+pub struct BufferProgram {
+    /// `i64` length per graph-node flat buffer (0 = the program never
+    /// materializes this node).
+    pub flat_len: Vec<usize>,
+    /// Geometry per conv/FC unit padded input buffer.
+    pub padded: Vec<PaddedGeom>,
+    /// Per-step buffer IO, in program order.
+    pub steps: Vec<StepIo>,
+}
+
+impl BufferProgram {
+    /// Bytes of the historical one-buffer-per-node layout: every
+    /// materialized flat buffer plus every padded buffer, no sharing.
+    pub fn baseline_bytes(&self) -> usize {
+        let flat: usize = self.flat_len.iter().sum();
+        let padded: usize = self.padded.iter().map(|g| g.input_len()).sum();
+        (flat + padded) * std::mem::size_of::<i64>()
+    }
+}
+
+/// A verified slot assignment: which pooled allocation each program
+/// buffer lives in, and how big each slot is. Produced by [`color`],
+/// embedded in `.hkv` artifacts (format v3), re-checked at load by
+/// [`check_layout`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArenaLayout {
+    /// Per graph node: `(slot, len)` into the flat pool (`None` = the
+    /// program never materializes this node).
+    pub flat_slot: Vec<Option<(usize, usize)>>,
+    /// Per conv/FC unit: `(slot, len)` into the padded pool.
+    pub padded_slot: Vec<(usize, usize)>,
+    /// `i64` capacity of each flat slot.
+    pub flat_sizes: Vec<usize>,
+    /// `i64` capacity of each padded slot.
+    pub padded_sizes: Vec<usize>,
+}
+
+impl ArenaLayout {
+    /// Total bytes the two slot pools hold — the steady-state buffer
+    /// footprint of one arena.
+    pub fn total_bytes(&self) -> usize {
+        let units: usize =
+            self.flat_sizes.iter().sum::<usize>() + self.padded_sizes.iter().sum::<usize>();
+        units * std::mem::size_of::<i64>()
+    }
+}
+
+/// Arena footprint numbers for reports (`plan --json`, `verify`,
+/// `BENCH_model.json`).
+#[derive(Clone, Debug)]
+pub struct ArenaSummary {
+    /// Bytes each conv/FC unit's padded input requires, pre-sharing
+    /// (plan-row order).
+    pub per_layer_bytes: Vec<usize>,
+    /// Bytes of each colored flat slot.
+    pub flat_slot_bytes: Vec<usize>,
+    /// Bytes of each colored padded slot.
+    pub padded_slot_bytes: Vec<usize>,
+    /// Total bytes of the colored arena (sum of all slots).
+    pub total_bytes: usize,
+    /// Bytes of the historical one-buffer-per-node layout.
+    pub baseline_bytes: usize,
+}
+
+impl ArenaSummary {
+    /// Summarize a colored layout against its program.
+    pub fn new(program: &BufferProgram, layout: &ArenaLayout) -> ArenaSummary {
+        let w = std::mem::size_of::<i64>();
+        ArenaSummary {
+            per_layer_bytes: program.padded.iter().map(|g| g.input_len() * w).collect(),
+            flat_slot_bytes: layout.flat_sizes.iter().map(|&s| s * w).collect(),
+            padded_slot_bytes: layout.padded_sizes.iter().map(|&s| s * w).collect(),
+            total_bytes: layout.total_bytes(),
+            baseline_bytes: program.baseline_bytes(),
+        }
+    }
+
+    /// JSON form (stable keys — CI's memory regression gate keys on
+    /// `total_bytes`/`baseline_bytes`).
+    pub fn to_json(&self) -> Json {
+        let bytes_array =
+            |v: &[usize]| Json::Array(v.iter().copied().map(Json::from).collect::<Vec<_>>());
+        Json::obj()
+            .set("total_bytes", self.total_bytes)
+            .set("baseline_bytes", self.baseline_bytes)
+            .set("per_layer_bytes", bytes_array(&self.per_layer_bytes))
+            .set("flat_slot_bytes", bytes_array(&self.flat_slot_bytes))
+            .set("padded_slot_bytes", bytes_array(&self.padded_slot_bytes))
+    }
+}
+
+/// Per-buffer liveness accumulated by the event walk.
+#[derive(Clone, Copy, Default)]
+struct Life {
+    /// First def tick.
+    def: Option<usize>,
+    /// Last def-or-read tick.
+    last: usize,
+    /// The current value was written but not yet read.
+    unread: bool,
+}
+
+const PHASES: usize = 3;
+
+fn def_event(life: &mut Life, t: usize, step: usize, id: BufId, diags: &mut Vec<Diagnostic>) {
+    if life.unread {
+        diags.push(Diagnostic::new(
+            Code::Alias,
+            &format!("step {step}"),
+            format!(
+                "redefines {} before its previous value was read (in-place clobber)",
+                id.label()
+            ),
+            None,
+        ));
+    }
+    if life.def.is_none() {
+        life.def = Some(t);
+    }
+    life.last = life.last.max(t);
+    life.unread = true;
+}
+
+fn read_event(life: &mut Life, t: usize, step: usize, id: BufId, diags: &mut Vec<Diagnostic>) {
+    if life.def.is_none() {
+        diags.push(Diagnostic::new(
+            Code::Order,
+            &format!("step {step}"),
+            format!("reads {} before any step wrote it", id.label()),
+            None,
+        ));
+    }
+    life.last = life.last.max(t);
+    life.unread = false;
+}
+
+/// The shared event walk: per-buffer live intervals plus the
+/// `A-ALIAS`/`A-ORDER` findings discovered along the way.
+fn scan(p: &BufferProgram) -> (Vec<Life>, Vec<Life>, Vec<Diagnostic>) {
+    let mut flat = vec![Life::default(); p.flat_len.len()];
+    let mut padded = vec![Life::default(); p.padded.len()];
+    let mut diags = Vec::new();
+    for (i, s) in p.steps.iter().enumerate() {
+        let (t0, t1, t2) = (i * PHASES, i * PHASES + 1, i * PHASES + 2);
+        if let Some(u) = s.pad_write {
+            assert!(u < padded.len(), "step {i}: pad_write out of range");
+            if s.reads.contains(&BufId::Padded(u)) {
+                diags.push(Diagnostic::new(
+                    Code::Alias,
+                    &format!("step {i}"),
+                    format!(
+                        "stages its source into {} while also reading it",
+                        BufId::Padded(u).label()
+                    ),
+                    None,
+                ));
+            }
+            def_event(&mut padded[u], t0, i, BufId::Padded(u), &mut diags);
+        }
+        for r in &s.reads {
+            let life = match *r {
+                BufId::Flat(n) => {
+                    assert!(n < flat.len(), "step {i}: flat read out of range");
+                    &mut flat[n]
+                }
+                BufId::Padded(u) => {
+                    assert!(u < padded.len(), "step {i}: padded read out of range");
+                    &mut padded[u]
+                }
+            };
+            read_event(life, t1, i, *r, &mut diags);
+        }
+        if let Some(u) = s.pad_write {
+            // The kernel itself consumes the staged interior.
+            read_event(&mut padded[u], t1, i, BufId::Padded(u), &mut diags);
+        }
+        if let Some(w) = s.write {
+            if s.write_at_read && s.reads.contains(&w) {
+                diags.push(Diagnostic::new(
+                    Code::Alias,
+                    &format!("step {i}"),
+                    format!("writes {} in place while streaming reads from it", w.label()),
+                    None,
+                ));
+            }
+            let t = if s.write_at_read { t1 } else { t2 };
+            let life = match w {
+                BufId::Flat(n) => {
+                    assert!(n < flat.len(), "step {i}: flat write out of range");
+                    &mut flat[n]
+                }
+                BufId::Padded(u) => {
+                    assert!(u < padded.len(), "step {i}: padded write out of range");
+                    &mut padded[u]
+                }
+            };
+            def_event(life, t, i, w, &mut diags);
+        }
+    }
+    (flat, padded, diags)
+}
+
+/// Prove the program's buffer dataflow is alias-free and well-ordered.
+/// Returns every `A-ALIAS`/`A-ORDER` finding (empty = proven sound).
+pub fn analyze(p: &BufferProgram) -> Vec<Diagnostic> {
+    scan(p).2
+}
+
+/// Greedy linear-scan coloring of one pool. `lens[i] == 0` means the
+/// buffer does not exist (flat buffers the program never materializes).
+fn color_pool(lens: &[usize], lives: &[Life]) -> (Vec<Option<(usize, usize)>>, Vec<usize>) {
+    let mut order: Vec<usize> = (0..lens.len()).filter(|&i| lens[i] > 0).collect();
+    order.sort_by_key(|&i| (lives[i].def.unwrap_or(usize::MAX), i));
+    let mut sizes: Vec<usize> = Vec::new();
+    let mut active: Vec<(usize, usize)> = Vec::new(); // (end tick, slot)
+    let mut free: Vec<usize> = Vec::new();
+    let mut assign: Vec<Option<(usize, usize)>> = vec![None; lens.len()];
+    for &i in &order {
+        let slot = match lives[i].def {
+            None => {
+                // Defensive: a sized buffer the program never touches
+                // gets a dedicated slot and no reuse.
+                sizes.push(lens[i]);
+                sizes.len() - 1
+            }
+            Some(start) => {
+                let end = lives[i].last;
+                active.retain(|&(e, s)| {
+                    if e < start {
+                        free.push(s);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                // Prefer the largest already-grown free slot (ties →
+                // lowest index) so small buffers nest into big slots
+                // instead of growing fresh ones.
+                let mut best: Option<usize> = None;
+                for (pos, &s) in free.iter().enumerate() {
+                    let better = match best {
+                        None => true,
+                        Some(bp) => {
+                            let b = free[bp];
+                            sizes[s] > sizes[b] || (sizes[s] == sizes[b] && s < b)
+                        }
+                    };
+                    if better {
+                        best = Some(pos);
+                    }
+                }
+                let s = match best {
+                    Some(pos) => free.swap_remove(pos),
+                    None => {
+                        sizes.push(0);
+                        sizes.len() - 1
+                    }
+                };
+                sizes[s] = sizes[s].max(lens[i]);
+                active.push((end, s));
+                s
+            }
+        };
+        assign[i] = Some((slot, lens[i]));
+    }
+    (assign, sizes)
+}
+
+/// Color the program's buffers into minimal slot pools from their
+/// proven live intervals. Deterministic; call only on a program
+/// [`analyze`] found sound.
+pub fn color(p: &BufferProgram) -> ArenaLayout {
+    let (flat_lives, padded_lives, _) = scan(p);
+    let (flat_slot, flat_sizes) = color_pool(&p.flat_len, &flat_lives);
+    let padded_lens: Vec<usize> = p.padded.iter().map(|g| g.input_len()).collect();
+    let (padded_assign, padded_sizes) = color_pool(&padded_lens, &padded_lives);
+    let padded_slot = padded_assign
+        .into_iter()
+        .map(|a| a.unwrap_or((usize::MAX, 0)))
+        .collect();
+    ArenaLayout {
+        flat_slot,
+        padded_slot,
+        flat_sizes,
+        padded_sizes,
+    }
+}
+
+/// Verify a stored layout against a freshly compiled program: the
+/// cheap linear check artifact load runs instead of re-coloring.
+/// Returns `A-ALIAS`/`A-ORDER` findings if the program itself is
+/// unsound, `A-SLOT` for unmapped/mis-sized/out-of-range slots, and
+/// `A-LIVE` when two live-overlapping buffers share a slot.
+pub fn check_layout(p: &BufferProgram, layout: &ArenaLayout) -> Vec<Diagnostic> {
+    let (flat_lives, padded_lives, diags) = scan(p);
+    if !diags.is_empty() {
+        return diags;
+    }
+    let mut diags = Vec::new();
+    if layout.flat_slot.len() != p.flat_len.len() || layout.padded_slot.len() != p.padded.len() {
+        diags.push(Diagnostic::new(
+            Code::Slot,
+            "layout",
+            format!(
+                "layout maps {} flat / {} padded buffers, program has {} / {}",
+                layout.flat_slot.len(),
+                layout.padded_slot.len(),
+                p.flat_len.len(),
+                p.padded.len()
+            ),
+            None,
+        ));
+        return diags;
+    }
+    // (slot, start, end, id) per pool, for the overlap check below.
+    let mut flat_terms: Vec<(usize, usize, usize, BufId)> = Vec::new();
+    let mut padded_terms: Vec<(usize, usize, usize, BufId)> = Vec::new();
+    for (n, &len) in p.flat_len.iter().enumerate() {
+        if len == 0 {
+            continue;
+        }
+        let id = BufId::Flat(n);
+        match layout.flat_slot[n] {
+            None => diags.push(Diagnostic::new(
+                Code::Slot,
+                &id.label(),
+                "materialized buffer has no slot assignment".to_string(),
+                None,
+            )),
+            Some((s, l)) => {
+                if l != len || s >= layout.flat_sizes.len() || layout.flat_sizes[s] < len {
+                    diags.push(Diagnostic::new(
+                        Code::Slot,
+                        &id.label(),
+                        format!("slot {s} (len {l}) cannot hold the buffer's {len} values"),
+                        None,
+                    ));
+                } else if let Some(d) = flat_lives[n].def {
+                    flat_terms.push((s, d, flat_lives[n].last, id));
+                }
+            }
+        }
+    }
+    for (u, g) in p.padded.iter().enumerate() {
+        let id = BufId::Padded(u);
+        let len = g.input_len();
+        let (s, l) = layout.padded_slot[u];
+        if l != len || s >= layout.padded_sizes.len() || layout.padded_sizes[s] < len {
+            diags.push(Diagnostic::new(
+                Code::Slot,
+                &id.label(),
+                format!("slot {s} (len {l}) cannot hold the buffer's {len} values"),
+                None,
+            ));
+        } else if let Some(d) = padded_lives[u].def {
+            padded_terms.push((s, d, padded_lives[u].last, id));
+        }
+    }
+    for terms in [&mut flat_terms, &mut padded_terms] {
+        terms.sort();
+        for pair in terms.windows(2) {
+            let (s0, _, end0, id0) = pair[0];
+            let (s1, start1, _, id1) = pair[1];
+            if s0 == s1 && end0 >= start1 {
+                diags.push(Diagnostic::new(
+                    Code::Live,
+                    &id1.label(),
+                    format!(
+                        "shares slot {s0} with {} but both are live at tick {start1}",
+                        id0.label()
+                    ),
+                    None,
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// Analyze then color: the one-call entry the planner and runner use.
+/// Errs with the `A-*` findings when the program itself is unsound.
+pub fn plan_layout(p: &BufferProgram) -> Result<ArenaLayout, Vec<Diagnostic>> {
+    let diags = analyze(p);
+    if !diags.is_empty() {
+        return Err(diags);
+    }
+    let layout = color(p);
+    debug_assert!(check_layout(p, &layout).is_empty());
+    Ok(layout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(c: usize, h: usize, w: usize, pad: usize) -> PaddedGeom {
+        PaddedGeom { c, h, w, pad }
+    }
+
+    /// A fully fused conv chain: stage frame → P0, each conv writes the
+    /// next conv's padded interior, the last writes the head.
+    fn chain(n: usize) -> BufferProgram {
+        let padded = (0..n).map(|i| geom(2 + i, 4, 4, 1)).collect::<Vec<_>>();
+        let mut steps = Vec::new();
+        for i in 0..n {
+            steps.push(StepIo {
+                reads: if i == 0 {
+                    Vec::new()
+                } else {
+                    vec![BufId::Padded(i)]
+                },
+                pad_write: if i == 0 { Some(0) } else { None },
+                write: if i + 1 < n {
+                    Some(BufId::Padded(i + 1))
+                } else {
+                    None
+                },
+                write_at_read: false,
+            });
+        }
+        BufferProgram {
+            flat_len: Vec::new(),
+            padded,
+            steps,
+        }
+    }
+
+    #[test]
+    fn fused_chain_collapses_to_one_padded_slot() {
+        let p = chain(4);
+        assert!(analyze(&p).is_empty());
+        let layout = color(&p);
+        // Each padded buffer dies before the next is written (the conv
+        // drains into the shared accumulator first), so one slot sized
+        // for the largest geometry carries the whole chain.
+        assert_eq!(layout.padded_sizes.len(), 1);
+        let max_len = p.padded.iter().map(|g| g.input_len()).max().unwrap();
+        assert_eq!(layout.padded_sizes[0], max_len);
+        assert!(layout.total_bytes() < p.baseline_bytes());
+        assert!(check_layout(&p, &layout).is_empty());
+    }
+
+    #[test]
+    fn elementwise_src_and_dst_never_share_but_conv_src_and_dst_may() {
+        // Producer writes F0; an elementwise step streams F0 → F1.
+        let stream = BufferProgram {
+            flat_len: vec![16, 16],
+            padded: Vec::new(),
+            steps: vec![
+                StepIo {
+                    write: Some(BufId::Flat(0)),
+                    ..StepIo::default()
+                },
+                StepIo {
+                    reads: vec![BufId::Flat(0)],
+                    write: Some(BufId::Flat(1)),
+                    write_at_read: true,
+                    ..StepIo::default()
+                },
+            ],
+        };
+        assert!(analyze(&stream).is_empty());
+        assert_eq!(color(&stream).flat_sizes.len(), 2);
+        // Same shape but the consumer drains first (conv-style): the
+        // destination may reuse the source's slot.
+        let mut drained = stream.clone();
+        drained.steps[1].write_at_read = false;
+        assert_eq!(color(&drained).flat_sizes.len(), 1);
+    }
+
+    #[test]
+    fn in_place_elementwise_is_a_alias() {
+        let p = BufferProgram {
+            flat_len: vec![8],
+            padded: Vec::new(),
+            steps: vec![
+                StepIo {
+                    write: Some(BufId::Flat(0)),
+                    ..StepIo::default()
+                },
+                StepIo {
+                    reads: vec![BufId::Flat(0)],
+                    write: Some(BufId::Flat(0)),
+                    write_at_read: true,
+                    ..StepIo::default()
+                },
+            ],
+        };
+        let diags = analyze(&p);
+        assert!(
+            diags.iter().any(|d| d.code.as_str() == "A-ALIAS"),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn read_before_write_is_a_order() {
+        let p = BufferProgram {
+            flat_len: vec![8],
+            padded: Vec::new(),
+            steps: vec![StepIo {
+                reads: vec![BufId::Flat(0)],
+                ..StepIo::default()
+            }],
+        };
+        let diags = analyze(&p);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code.as_str(), "A-ORDER");
+    }
+
+    #[test]
+    fn clobbering_an_unread_value_is_a_alias() {
+        let p = BufferProgram {
+            flat_len: vec![8],
+            padded: Vec::new(),
+            steps: vec![
+                StepIo {
+                    write: Some(BufId::Flat(0)),
+                    ..StepIo::default()
+                },
+                StepIo {
+                    write: Some(BufId::Flat(0)),
+                    ..StepIo::default()
+                },
+            ],
+        };
+        let diags = analyze(&p);
+        assert!(
+            diags.iter().any(|d| d.code.as_str() == "A-ALIAS"),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn doctored_layouts_are_a_slot_and_a_live() {
+        // F0 stays live across the write of F1 (residual-style), so
+        // they must not share a slot.
+        let p = BufferProgram {
+            flat_len: vec![16, 16],
+            padded: Vec::new(),
+            steps: vec![
+                StepIo {
+                    write: Some(BufId::Flat(0)),
+                    ..StepIo::default()
+                },
+                StepIo {
+                    write: Some(BufId::Flat(1)),
+                    ..StepIo::default()
+                },
+                StepIo {
+                    reads: vec![BufId::Flat(0), BufId::Flat(1)],
+                    write_at_read: true,
+                    ..StepIo::default()
+                },
+            ],
+        };
+        let sound = color(&p);
+        assert_eq!(sound.flat_sizes.len(), 2);
+        assert!(check_layout(&p, &sound).is_empty());
+        // Fold both into slot 0 → A-LIVE.
+        let mut folded = sound.clone();
+        folded.flat_slot[1] = Some((0, 16));
+        let diags = check_layout(&p, &folded);
+        assert!(
+            diags.iter().any(|d| d.code.as_str() == "A-LIVE"),
+            "{diags:?}"
+        );
+        // Shrink a slot below its occupant → A-SLOT.
+        let mut small = sound.clone();
+        small.flat_sizes[1] = 4;
+        let diags = check_layout(&p, &small);
+        assert!(
+            diags.iter().any(|d| d.code.as_str() == "A-SLOT"),
+            "{diags:?}"
+        );
+        // Drop a mapping entirely → A-SLOT.
+        let mut unmapped = sound;
+        unmapped.flat_slot[0] = None;
+        let diags = check_layout(&p, &unmapped);
+        assert!(
+            diags.iter().any(|d| d.code.as_str() == "A-SLOT"),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn plan_layout_rejects_unsound_programs_with_the_findings() {
+        let p = BufferProgram {
+            flat_len: vec![8],
+            padded: Vec::new(),
+            steps: vec![StepIo {
+                reads: vec![BufId::Flat(0)],
+                ..StepIo::default()
+            }],
+        };
+        let err = plan_layout(&p).unwrap_err();
+        assert_eq!(err[0].code.as_str(), "A-ORDER");
+    }
+}

@@ -36,6 +36,13 @@
 //!   re-derives from the graph (`V-PLAN`), and an artifact's embedded
 //!   host signature agrees with its embedded plan (`V-HOST`).
 //!
+//! Alongside the value-range proofs, the [`dataflow`] submodule proves
+//! the *buffer* side of the same step programs: per-buffer def/use
+//! liveness, alias-freedom of every fused write-into-padded-interior
+//! and flat materialization (`A-ALIAS`/`A-ORDER`), and a verified
+//! arena coloring (`A-SLOT`/`A-LIVE`) that lets `GraphArena` hold
+//! max-concurrent-live bytes instead of one buffer per node.
+//!
 //! Three call sites consume this module (`docs/ANALYSIS.md`): the
 //! `hikonv verify` subcommand / `plan --verify` flag, the mandatory
 //! cross-check inside [`EnginePlan::plan_units`], and the artifact
@@ -43,8 +50,13 @@
 
 #![warn(missing_docs)]
 
+mod dataflow;
 mod domain;
 
+pub use dataflow::{
+    analyze, check_layout, color, plan_layout, ArenaLayout, ArenaSummary, BufId, BufferProgram,
+    PaddedGeom, StepIo,
+};
 pub use domain::{BitRange, Interval};
 
 use crate::conv::conv2d::{planned_design, Conv2dSpec};
@@ -79,6 +91,17 @@ pub enum Code {
     Plan,
     /// An artifact's host signature disagrees with its embedded plan.
     Host,
+    /// A step program writes a buffer whose current value is still
+    /// unread or being streamed from (dataflow alias violation).
+    Alias,
+    /// A step program reads a buffer before any step wrote it.
+    Order,
+    /// An arena layout leaves a buffer unmapped, or maps it to a
+    /// missing or undersized slot.
+    Slot,
+    /// An arena layout puts two buffers with overlapping live
+    /// intervals in the same slot.
+    Live,
 }
 
 impl Code {
@@ -93,6 +116,10 @@ impl Code {
             Code::Acc => "V-ACC",
             Code::Plan => "V-PLAN",
             Code::Host => "V-HOST",
+            Code::Alias => "A-ALIAS",
+            Code::Order => "A-ORDER",
+            Code::Slot => "A-SLOT",
+            Code::Live => "A-LIVE",
         }
     }
 }
@@ -222,8 +249,11 @@ pub struct VerifyReport {
     /// Per-unit proof state, in execution order.
     pub units: Vec<UnitReport>,
     /// Findings not anchored to a single unit (requant nodes, residual
-    /// adds, plan-shape and host-signature checks).
+    /// adds, plan-shape and host-signature checks, buffer dataflow).
     pub graph_diagnostics: Vec<Diagnostic>,
+    /// Colored-arena footprint of the verified step program (`None`
+    /// when the dataflow proof failed — the findings say why).
+    pub arena: Option<ArenaSummary>,
 }
 
 impl VerifyReport {
@@ -252,7 +282,7 @@ impl VerifyReport {
 
     /// The machine-readable report (the `hikonv verify` JSON schema).
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut o = Json::obj()
             .set("workload", self.workload.as_str())
             .set("config", self.config.as_str())
             .set("host", self.host.as_str())
@@ -265,7 +295,11 @@ impl VerifyReport {
             .set(
                 "diagnostics",
                 Json::Array(self.diagnostics().iter().map(|d| d.to_json()).collect()),
-            )
+            );
+        if let Some(arena) = &self.arena {
+            o = o.set("arena", arena.to_json());
+        }
+        o
     }
 }
 
@@ -718,12 +752,24 @@ pub fn verify_plan(
         }
         node_iv.push(iv);
     }
+    // Buffer-dataflow proof of the same step program the runner would
+    // compile: liveness/alias findings join the graph diagnostics, and
+    // a sound program yields the colored-arena footprint.
+    let program = crate::models::graph_runner::buffer_program(graph, &info);
+    let arena = match plan_layout(&program) {
+        Ok(layout) => Some(ArenaSummary::new(&program, &layout)),
+        Err(diags) => {
+            graph_diags.extend(diags);
+            None
+        }
+    };
     Ok(VerifyReport {
         workload: graph.name.clone(),
         config: cfg.to_string(),
         host: plan.host(),
         units,
         graph_diagnostics: graph_diags,
+        arena,
     })
 }
 

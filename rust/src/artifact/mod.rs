@@ -21,8 +21,10 @@
 //! `u32` format version, and a 64-bit FNV-1a checksum of the payload —
 //! followed by the payload: host signature, [`EngineConfig`] grammar
 //! string, graph, plan, quantized weight tensors, packed weight words,
-//! requant shifts, and (since version 2) the calibration records those
-//! shifts were derived from. Everything is little-endian; strings and
+//! requant shifts, (since version 2) the calibration records those
+//! shifts were derived from, and (since version 3) the verified colored
+//! arena layout, so `from_prepacked` checks the layout instead of
+//! re-running the coloring pass. Everything is little-endian; strings and
 //! arrays are length-prefixed with a `u64` count. The format is
 //! **zero-dependency** (hand-rolled writer/reader, no serde) because the
 //! crate builds offline.
@@ -47,8 +49,9 @@
 //! checksum only guards against accidental damage — the verifier is what
 //! guarantees a stale or hand-edited `.hkv` (doctored plan rows, shifts
 //! inconsistent with their calibration records, a host/plan signature
-//! mismatch) can never execute an unsound plan; it is rejected with the
-//! structured `V-*` diagnostics in the error.
+//! mismatch, an arena layout that aliases live buffers) can never
+//! execute an unsound plan; it is rejected with the structured `V-*` /
+//! `A-*` diagnostics in the error.
 
 #![warn(missing_docs)]
 
@@ -71,8 +74,10 @@ pub const ARTIFACT_MAGIC: [u8; 8] = *b"HIKONVA\0";
 /// Version history: 1 = initial format; 2 = appended per-requant
 /// calibration records (the observed `max |accumulator|` each shift was
 /// derived from), which the load-time verifier proves the shifts
-/// consistent against.
-pub const ARTIFACT_VERSION: u32 = 2;
+/// consistent against; 3 = appended the verified colored arena layout
+/// ([`crate::analysis::ArenaLayout`]), which the load-time dataflow
+/// check re-proves against the embedded graph's step program.
+pub const ARTIFACT_VERSION: u32 = 3;
 
 /// Header length in bytes: magic + version + checksum.
 const HEADER_LEN: usize = 8 + 4 + 8;
@@ -166,6 +171,13 @@ pub struct Artifact {
     /// derives from its record, and each record lies within the
     /// statically-proven accumulator bound.
     pub calib: Vec<i64>,
+    /// The colored arena layout the compiling host proved sound (since
+    /// version 3). Never trusted on load: [`Self::into_runner`] re-runs
+    /// [`crate::analysis::check_layout`] against the embedded graph's
+    /// step program and rejects any hand-edited layout with its `A-*`
+    /// code before a kernel executes — what it *saves* is re-running the
+    /// coloring pass, not the proof.
+    pub layout: crate::analysis::ArenaLayout,
 }
 
 impl Artifact {
@@ -192,6 +204,7 @@ impl Artifact {
             packed: runner.export_packed().map_err(RuntimeError::new)?,
             shifts: runner.requant_shifts().to_vec(),
             calib: runner.requant_calibration().to_vec(),
+            layout: runner.arena_layout().clone(),
         })
     }
 
@@ -236,6 +249,7 @@ impl Artifact {
             self.packed,
             self.shifts,
             self.calib,
+            self.layout,
         )
         .map_err(|e| RuntimeError::new(e).context("rebuilding kernels from artifact"))?;
         Ok((runner, LoadMode::Prepacked))
@@ -244,8 +258,11 @@ impl Artifact {
     /// Run the static packing-soundness verifier over the embedded plan
     /// with this artifact's full evidence — concrete weight tensors,
     /// calibrated shifts, their calibration records, and the claimed
-    /// host signature. `Err` only if the embedded graph itself fails
-    /// validation; verification findings land in the report.
+    /// host signature — plus the dataflow check of the **stored** arena
+    /// layout against the graph's step program (`A-*` findings land in
+    /// the report's graph diagnostics). `Err` only if the embedded
+    /// graph itself fails validation; verification findings land in the
+    /// report.
     pub fn verify(&self) -> Result<crate::analysis::VerifyReport, RuntimeError> {
         let wide: Vec<Vec<i64>> = self.weights.iter().map(|t| t.to_i64()).collect();
         let ev = crate::analysis::Evidence {
@@ -254,7 +271,16 @@ impl Artifact {
             calib: Some(&self.calib),
             host: Some(&self.host),
         };
-        crate::analysis::verify_plan(&self.graph, &self.plan, &ev)
+        let mut report = crate::analysis::verify_plan(&self.graph, &self.plan, &ev)?;
+        let info = self
+            .graph
+            .validate()
+            .map_err(|e| RuntimeError::new(e.to_string()))?;
+        let program = crate::models::graph_runner::buffer_program(&self.graph, &info);
+        report
+            .graph_diagnostics
+            .extend(crate::analysis::check_layout(&program, &self.layout));
+        Ok(report)
     }
 
     /// Serialize to the on-disk byte format (`docs/ARTIFACT.md`).
@@ -277,6 +303,7 @@ impl Artifact {
             e.u32(s);
         }
         e.vec_i64(&self.calib);
+        enc_layout(&mut e, &self.layout);
         let payload = e.buf;
         let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
         out.extend_from_slice(&ARTIFACT_MAGIC);
@@ -349,11 +376,21 @@ impl Artifact {
                 shifts.len()
             )));
         }
+        let layout = dec_layout(&mut d)?;
         if d.remaining() != 0 {
             return Err(RuntimeError::new(format!(
                 "artifact has {} trailing bytes after the payload",
                 d.remaining()
             )));
+        }
+        // The plan's arena summary is derived state (step program +
+        // layout), not stored bytes — recompute it so a decoded plan
+        // renders identically to a freshly planned one. Soundness of
+        // the layout itself is proven later, in `into_runner`.
+        let mut plan = plan;
+        if let Ok(info) = graph.validate() {
+            let program = crate::models::graph_runner::buffer_program(&graph, &info);
+            plan.arena = Some(crate::analysis::ArenaSummary::new(&program, &layout));
         }
         Ok(Artifact {
             host,
@@ -363,6 +400,7 @@ impl Artifact {
             packed,
             shifts,
             calib,
+            layout,
         })
     }
 
@@ -723,7 +761,85 @@ fn dec_plan(d: &mut Dec, config: EngineConfig) -> Result<EnginePlan, RuntimeErro
         config,
         threads,
         layers,
+        // The arena summary is presentation-layer (derived from the
+        // layout section below); the runner re-derives it on load.
+        arena: None,
     })
+}
+
+/// Encode the colored arena layout (`docs/ARTIFACT.md` §layout, since
+/// format version 3). Slot indices and lengths are raw `u64`s —
+/// including the `usize::MAX` sentinel a never-materialized padded
+/// buffer carries — because the load path re-proves the layout with
+/// [`crate::analysis::check_layout`] rather than trusting any field.
+fn enc_layout(e: &mut Enc, l: &crate::analysis::ArenaLayout) {
+    e.u64(l.flat_slot.len() as u64);
+    for s in &l.flat_slot {
+        match s {
+            Some((slot, len)) => {
+                e.u8(1);
+                e.u64(*slot as u64);
+                e.u64(*len as u64);
+            }
+            None => e.u8(0),
+        }
+    }
+    e.u64(l.padded_slot.len() as u64);
+    for &(slot, len) in &l.padded_slot {
+        e.u64(slot as u64);
+        e.u64(len as u64);
+    }
+    enc_usizes(e, &l.flat_sizes);
+    enc_usizes(e, &l.padded_sizes);
+}
+
+fn enc_usizes(e: &mut Enc, v: &[usize]) {
+    e.u64(v.len() as u64);
+    for &x in v {
+        e.u64(x as u64);
+    }
+}
+
+fn dec_layout(d: &mut Dec) -> Result<crate::analysis::ArenaLayout, RuntimeError> {
+    let nf = d.len("flat slot-map count", 1)?;
+    let mut flat_slot = Vec::with_capacity(nf);
+    for _ in 0..nf {
+        flat_slot.push(match d.u8("flat slot-map tag")? {
+            0 => None,
+            1 => Some((d.usize("flat slot index")?, d.usize("flat slot length")?)),
+            other => {
+                return Err(RuntimeError::new(format!(
+                    "unknown flat slot-map tag {other}"
+                )))
+            }
+        });
+    }
+    let np = d.len("padded slot-map count", 16)?;
+    let mut padded_slot = Vec::with_capacity(np);
+    for _ in 0..np {
+        // `usize::MAX` is the legitimate sentinel for a padded buffer
+        // that is never materialized, so decode via u64 and cast.
+        let slot = d.u64("padded slot index")? as usize;
+        let len = d.usize("padded slot length")?;
+        padded_slot.push((slot, len));
+    }
+    let flat_sizes = dec_usizes(d, "flat slot sizes")?;
+    let padded_sizes = dec_usizes(d, "padded slot sizes")?;
+    Ok(crate::analysis::ArenaLayout {
+        flat_slot,
+        padded_slot,
+        flat_sizes,
+        padded_sizes,
+    })
+}
+
+fn dec_usizes(d: &mut Dec, what: &str) -> Result<Vec<usize>, RuntimeError> {
+    let n = d.len(what, 8)?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(d.usize(what)?);
+    }
+    Ok(v)
 }
 
 fn enc_tensor(e: &mut Enc, t: &QTensor) {
@@ -908,6 +1024,7 @@ mod tests {
         assert_eq!(back.shifts, art.shifts);
         assert_eq!(back.calib, art.calib);
         assert_eq!(back.calib.len(), back.shifts.len());
+        assert_eq!(back.layout, art.layout);
         // Serialization is deterministic: same artifact, same bytes.
         assert_eq!(art.to_bytes(), back.to_bytes());
     }
@@ -928,6 +1045,20 @@ mod tests {
         art.plan.layers[0].ops_per_mult += 3;
         let err = art.into_runner().unwrap_err();
         assert!(err.to_string().contains("V-PLAN"), "{err}");
+    }
+
+    #[test]
+    fn doctored_arena_layout_is_rejected_at_load_with_a_slot() {
+        // Shrink the slot backing the first conv's padded staging buffer
+        // by one cell: the fused write-into-padded-interior would run
+        // past the slot's bytes into whatever lives next. The dataflow
+        // check rejects the layout before any kernel is built.
+        let mut art = tiny_artifact();
+        let (slot, len) = art.layout.padded_slot[0];
+        assert!(len > 0, "first conv stages its padded input");
+        art.layout.padded_sizes[slot] = len - 1;
+        let err = art.into_runner().unwrap_err();
+        assert!(err.to_string().contains("A-SLOT"), "{err}");
     }
 
     #[test]

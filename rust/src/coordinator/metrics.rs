@@ -114,7 +114,8 @@ impl SloCounters {
     }
 }
 
-/// One recorded fault (bounded log; see `server::MAX_FAULT_RECORDS`).
+/// One recorded fault (bounded log; see `ServeConfig::fault_log_cap`,
+/// default `server::DEFAULT_FAULT_LOG_CAP`).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct FaultRecord {
     /// Batch index (0-based) the fault occurred in.
@@ -162,7 +163,8 @@ pub struct ServeReport {
     pub slo: SloCounters,
     /// Queue depth observed at each batcher pull.
     pub queue_depth: CountHistogram,
-    /// Recorded faults, bounded to the first `MAX_FAULT_RECORDS`.
+    /// Recorded faults, bounded to the first `fault_log_cap` (the SLO
+    /// counters keep counting past the cap).
     pub faults: Vec<FaultRecord>,
     /// Detections for completed frames, in completion order — lets the
     /// chaos suite check bit-exactness against a fault-free run.

@@ -50,6 +50,6 @@ pub use parallel::ParallelCpuBackend;
 pub use pipeline::{Frame, GraphBackend, InferBackend};
 pub use queue::{BoundedQueue, PopResult, PushError};
 pub use registry::{ModelRegistry, RunnerCell, Tenant, TenantState};
-pub use server::{serve, serve_with_fallback, ServeConfig};
+pub use server::{serve, serve_with_fallback, ServeConfig, DEFAULT_FAULT_LOG_CAP};
 pub use source::FrameSource;
 pub use supervisor::{serve_registry, MultiServeConfig, ReloadAt};

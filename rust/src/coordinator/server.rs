@@ -35,9 +35,12 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Fault log bound: the first this-many faults are kept with full detail
-/// (counters keep counting past it).
-pub const MAX_FAULT_RECORDS: usize = 64;
+/// Default fault-log bound ([`ServeConfig::fault_log_cap`] /
+/// `MultiServeConfig::fault_log_cap`): the first this-many faults are
+/// kept with full detail; later faults still bump every counter but
+/// record no `FaultRecord`. See `docs/SERVING.md` for the truncation
+/// semantics.
+pub const DEFAULT_FAULT_LOG_CAP: usize = 64;
 
 /// Serve-run configuration.
 #[derive(Clone, Debug)]
@@ -70,6 +73,10 @@ pub struct ServeConfig {
     pub degrade_after: u32,
     /// Swap to the fallback backend after this many recorded faults.
     pub fallback_after: u64,
+    /// Detailed-fault-log bound: only the first this-many faults keep a
+    /// full [`FaultRecord`]; counters are never truncated
+    /// (`--fault-log-cap`, default [`DEFAULT_FAULT_LOG_CAP`]).
+    pub fault_log_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -88,6 +95,7 @@ impl Default for ServeConfig {
             retry_backoff: Duration::from_millis(1),
             degrade_after: 3,
             fallback_after: 4,
+            fault_log_cap: DEFAULT_FAULT_LOG_CAP,
         }
     }
 }
@@ -109,8 +117,8 @@ pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-pub(crate) fn push_fault(faults: &mut Vec<FaultRecord>, rec: FaultRecord) {
-    if faults.len() < MAX_FAULT_RECORDS {
+pub(crate) fn push_fault(faults: &mut Vec<FaultRecord>, cap: usize, rec: FaultRecord) {
+    if faults.len() < cap {
         faults.push(rec);
     }
 }
@@ -214,6 +222,7 @@ pub fn serve_with_fallback(
                 batch_faulted = true;
                 push_fault(
                     &mut faults,
+                    config.fault_log_cap,
                     FaultRecord {
                         batch: batch_idx,
                         frame: None,
@@ -241,6 +250,7 @@ pub fn serve_with_fallback(
                         batch_faulted = true;
                         push_fault(
                             &mut faults,
+                            config.fault_log_cap,
                             FaultRecord {
                                 batch: batch_idx,
                                 frame: None,
@@ -292,6 +302,7 @@ pub fn serve_with_fallback(
                 slo.faults += 1;
                 push_fault(
                     &mut faults,
+                    config.fault_log_cap,
                     FaultRecord {
                         batch: batches.saturating_sub(1),
                         frame: None,
@@ -598,6 +609,26 @@ mod tests {
         assert_eq!(report.slo.faults, report.batches * 3);
         assert_eq!(report.slo.retried, report.batches * 2);
         assert!(report.faults.iter().any(|f| f.kind == "panic"));
+    }
+
+    #[test]
+    fn fault_log_cap_truncates_records_but_never_counters() {
+        let report = serve(
+            Box::new(PanickingBackend),
+            &ServeConfig {
+                frames: 16,
+                max_batch: 1,
+                max_retries: 0,
+                degrade_after: 100,
+                retry_backoff: Duration::from_micros(100),
+                fault_log_cap: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.faults.len(), 3, "detail log stops at the cap");
+        assert_eq!(report.slo.faults, 16, "counters keep counting past it");
+        assert!(report.slo.accounted());
     }
 
     #[test]

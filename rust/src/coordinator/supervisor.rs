@@ -101,6 +101,11 @@ pub struct MultiServeConfig {
     pub fault_plan: FaultPlan,
     /// Optional scripted hot reload.
     pub reload_at: Option<ReloadAt>,
+    /// Per-tenant detailed-fault-log bound: only the first this-many
+    /// faults in a tenant's lane keep a full [`FaultRecord`]; SLO
+    /// counters are never truncated (`--fault-log-cap`, default
+    /// [`super::server::DEFAULT_FAULT_LOG_CAP`]).
+    pub fault_log_cap: usize,
 }
 
 impl Default for MultiServeConfig {
@@ -121,6 +126,7 @@ impl Default for MultiServeConfig {
             liveness: None,
             fault_plan: FaultPlan::new(),
             reload_at: None,
+            fault_log_cap: super::server::DEFAULT_FAULT_LOG_CAP,
         }
     }
 }
@@ -268,6 +274,7 @@ fn worker_loop(shared: &TenantShared, cfg: &MultiServeConfig) -> WorkerExit {
                     st.slo.faults += 1;
                     push_fault(
                         &mut st.faults,
+                        cfg.fault_log_cap,
                         FaultRecord {
                             batch: batch_idx,
                             frame: None,
@@ -300,6 +307,7 @@ fn worker_loop(shared: &TenantShared, cfg: &MultiServeConfig) -> WorkerExit {
             st.slo.faults += 1;
             push_fault(
                 &mut st.faults,
+                cfg.fault_log_cap,
                 FaultRecord {
                     batch: batch_idx,
                     frame: None,
@@ -368,6 +376,7 @@ fn spawn_producer(
             st.slo.faults += 1;
             push_fault(
                 &mut st.faults,
+                cfg.fault_log_cap,
                 FaultRecord {
                     batch: 0,
                     frame: None,
@@ -495,6 +504,7 @@ pub fn serve_registry(
                         st.slo.faults += 1;
                         push_fault(
                             &mut st.faults,
+                            cfg.fault_log_cap,
                             FaultRecord {
                                 batch: st.batches,
                                 frame: None,
@@ -535,6 +545,7 @@ pub fn serve_registry(
                             };
                             push_fault(
                                 &mut st.faults,
+                                cfg.fault_log_cap,
                                 FaultRecord {
                                     batch,
                                     frame: None,
@@ -547,6 +558,7 @@ pub fn serve_registry(
                             st.slo.faults += 1;
                             push_fault(
                                 &mut st.faults,
+                                cfg.fault_log_cap,
                                 FaultRecord {
                                     batch,
                                     frame: None,
@@ -629,6 +641,7 @@ fn schedule_restart(
         let batch = st.batches;
         push_fault(
             &mut st.faults,
+            cfg.fault_log_cap,
             FaultRecord {
                 batch,
                 frame: None,
@@ -647,6 +660,7 @@ fn schedule_restart(
     let batch = st.batches;
     push_fault(
         &mut st.faults,
+        cfg.fault_log_cap,
         FaultRecord {
             batch,
             frame: None,

@@ -78,6 +78,11 @@ pub struct EnginePlan {
     /// One entry per conv-shaped op (graph conv/FC node, or `ModelSpec`
     /// layer), in execution order.
     pub layers: Vec<LayerPlan>,
+    /// Colored-arena footprint summary (from the dataflow pass over the
+    /// compiled step program). Populated by the graph entry points;
+    /// `None` for bare unit-list plans, which have no step program to
+    /// analyze.
+    pub arena: Option<crate::analysis::ArenaSummary>,
 }
 
 impl EnginePlan {
@@ -110,7 +115,18 @@ impl EnginePlan {
     /// graphs get genuinely heterogeneous per-op plans.
     pub fn plan_graph(graph: &GraphSpec, config: &EngineConfig) -> Result<EnginePlan, String> {
         let info = graph.validate().map_err(|e| e.to_string())?;
-        Self::plan_units(&info.units, config, KernelRegistry::builtin())
+        let mut plan = Self::plan_units(&info.units, config, KernelRegistry::builtin())?;
+        let program = crate::models::graph_runner::buffer_program(graph, &info);
+        let layout = crate::analysis::plan_layout(&program).map_err(|diags| {
+            let rendered: Vec<String> = diags.iter().map(|d| d.render()).collect();
+            format!(
+                "graph '{}': unsound step program: {}",
+                graph.name,
+                rendered.join("; ")
+            )
+        })?;
+        plan.arena = Some(crate::analysis::ArenaSummary::new(&program, &layout));
+        Ok(plan)
     }
 
     /// [`plan_graph`](Self::plan_graph) *without* the mandatory
@@ -123,7 +139,13 @@ impl EnginePlan {
         config: &EngineConfig,
     ) -> Result<EnginePlan, String> {
         let info = graph.validate().map_err(|e| e.to_string())?;
-        Self::plan_units_inner(&info.units, config, KernelRegistry::builtin(), false)
+        let mut plan =
+            Self::plan_units_inner(&info.units, config, KernelRegistry::builtin(), false)?;
+        let program = crate::models::graph_runner::buffer_program(graph, &info);
+        if let Ok(layout) = crate::analysis::plan_layout(&program) {
+            plan.arena = Some(crate::analysis::ArenaSummary::new(&program, &layout));
+        }
+        Ok(plan)
     }
 
     /// Plan a bare unit list against a registry — the core the model and
@@ -169,6 +191,7 @@ impl EnginePlan {
             config: config.clone(),
             threads,
             layers,
+            arena: None,
         })
     }
 
@@ -240,7 +263,17 @@ impl EnginePlan {
                 },
             ]);
         }
-        t.render()
+        let mut out = t.render();
+        if let Some(a) = &self.arena {
+            out.push_str(&format!(
+                "\narena: {} B colored ({} B per-node baseline, {} flat + {} padded slots)\n",
+                a.total_bytes,
+                a.baseline_bytes,
+                a.flat_slot_bytes.len(),
+                a.padded_slot_bytes.len()
+            ));
+        }
+        out
     }
 
     /// JSON form (the `BENCH_plan.json` artifact schema).
@@ -262,12 +295,16 @@ impl EnginePlan {
             }
             rows.push(o);
         }
-        Json::obj()
+        let mut o = Json::obj()
             .set("config", self.config.to_string())
             .set("summary", self.summary())
             .set("threads", self.threads)
             .set("host", self.host())
-            .set("layers", Json::Array(rows))
+            .set("layers", Json::Array(rows));
+        if let Some(a) = &self.arena {
+            o = o.set("arena", a.to_json());
+        }
+        o
     }
 }
 

@@ -22,7 +22,8 @@
 //!                [--batch N] [--linger-ms MS] [--queue-depth N]
 //!                [--policy block|shed|drop-oldest] [--deadline-ms MS]
 //!                [--retries N] [--fault-plan "panic@8;stall@16:50ms"]
-//!                [--fallback <engine-spec>] [--json] [--json-out <path>]
+//!                [--fault-log-cap N] [--fallback <engine-spec>]
+//!                [--json] [--json-out <path>]
 //! hikonv serve   --models a=zoo:fc-head,b=model.hkv   supervised multi-model
 //!                [--reload-at N:a:new.hkv] [--restart-budget N]
 //!                [--restart-backoff-ms MS] [--liveness-ms MS]
@@ -279,6 +280,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         policy,
         deadline: (deadline_ms > 0).then_some(Duration::from_millis(deadline_ms)),
         max_retries: args.get_u32("retries", 2)?,
+        fault_log_cap: args.get_usize("fault-log-cap", hikonv::coordinator::DEFAULT_FAULT_LOG_CAP)?,
         ..ServeConfig::default()
     };
     let full = args.has("full-model");
@@ -409,6 +411,7 @@ fn cmd_serve_registry(args: &Args) -> Result<(), String> {
         liveness: (liveness_ms > 0).then_some(Duration::from_millis(liveness_ms)),
         fault_plan,
         reload_at,
+        fault_log_cap: args.get_usize("fault-log-cap", hikonv::coordinator::DEFAULT_FAULT_LOG_CAP)?,
         ..MultiServeConfig::default()
     };
     let report = serve_registry(&mut registry, &config).map_err(|e| e.to_string())?;
@@ -802,6 +805,12 @@ fn help() -> String {
             name: "retries",
             help: "inference retries per batch after a caught panic",
             default: Some("2"),
+            is_switch: false,
+        },
+        OptSpec {
+            name: "fault-log-cap",
+            help: "detailed FaultRecords kept per run/tenant; counters never truncate",
+            default: Some("64"),
             is_switch: false,
         },
         OptSpec {

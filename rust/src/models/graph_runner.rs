@@ -22,10 +22,31 @@
 //!   per-node arena buffers. Nodes referenced by a later
 //!   [`LayerOp::Add`] are materialized; everything else stays fused.
 //!
+//! # Arena coloring
+//!
+//! The compiled step program is abstracted into a
+//! [`BufferProgram`](crate::analysis::BufferProgram) and handed to the
+//! `analysis::dataflow` pass, which proves every fused
+//! write-into-padded-interior and flat materialization alias-free
+//! (`A-ALIAS`/`A-ORDER`) and colors the buffers into a minimal
+//! [`ArenaLayout`](crate::analysis::ArenaLayout): buffers whose live
+//! intervals are disjoint share one slot, so [`GraphArena`] holds
+//! max-concurrent-live bytes instead of one padded + one flat buffer
+//! per node. A fully fused chain collapses its whole padded pool into
+//! a single slot (the conv drains into the shared accumulator before
+//! its epilogue writes the next interior). Padded slots track their
+//! occupant: on an occupant change the incoming geometry's border
+//! cells are re-zeroed ([`zero_pad_border`]) so interior-only writes
+//! stay correctly padded. [`from_prepacked`](GraphRunner::from_prepacked)
+//! takes a stored layout and re-checks it
+//! ([`check_layout`](crate::analysis::check_layout)) against a freshly
+//! compiled program — a corrupt layout is rejected with its `A-*`
+//! code before any kernel executes.
+//!
 //! Steady state, serial kernels: **zero heap allocations** per
-//! [`infer_into`](GraphRunner::infer_into) — all buffers (padded conv
-//! inputs with once-zeroed borders, flat node outputs, the shared
-//! accumulator, per-kernel scratch) live in checked-out arenas.
+//! [`infer_into`](GraphRunner::infer_into) — all buffers (the colored
+//! padded and flat slot pools, the shared accumulator, per-kernel
+//! scratch) live in checked-out arenas.
 //!
 //! # Oracles
 //!
@@ -37,8 +58,9 @@
 
 use super::graph::{ConvUnit, GraphInfo, GraphSpec, LayerOp};
 use super::layer::{avgpool_k, avgpool_k_into, fused_epilogue_into, maxpool_k, maxpool_k_into};
-use super::layer::{pad2d, pad2d_into};
+use super::layer::{pad2d, pad2d_into, zero_pad_border};
 use super::runner::requantize;
+use crate::analysis::{ArenaLayout, BufId, BufferProgram, PaddedGeom, StepIo};
 use crate::conv::reference::conv2d_ref_strided;
 use crate::engine::{
     ConvKernel, EngineConfig, EnginePlan, KernelChoice, KernelRegistry, KernelScratch,
@@ -254,6 +276,100 @@ fn compile(graph: &GraphSpec, info: &GraphInfo) -> (Vec<Step>, Vec<bool>) {
     (steps, flat_used)
 }
 
+/// Compile the graph and abstract the step program to its buffer
+/// dataflow — the input the `analysis::dataflow` liveness/alias proofs
+/// and arena coloring run on (also used by the planner and verifier to
+/// report arena footprints without building a runner).
+pub(crate) fn buffer_program(graph: &GraphSpec, info: &GraphInfo) -> BufferProgram {
+    let (steps, flat_used) = compile(graph, info);
+    program_of(info, &steps, &flat_used)
+}
+
+fn program_of(info: &GraphInfo, steps: &[Step], flat_used: &[bool]) -> BufferProgram {
+    let flat_len = info
+        .nodes
+        .iter()
+        .zip(flat_used)
+        .map(|(ni, &used)| {
+            let (c, h, w) = ni.dims;
+            if used {
+                c * h * w
+            } else {
+                0
+            }
+        })
+        .collect();
+    let padded = info
+        .units
+        .iter()
+        .map(|u| PaddedGeom {
+            c: u.ci,
+            h: u.hi,
+            w: u.wi,
+            pad: u.pad,
+        })
+        .collect();
+    let mut ios = Vec::with_capacity(steps.len());
+    for step in steps {
+        let write = match step.dst {
+            Dest::Flat(e) => Some(BufId::Flat(e)),
+            Dest::Padded(u) => Some(BufId::Padded(u)),
+            Dest::Head => None,
+        };
+        let io = match &step.kind {
+            StepKind::Conv { unit, .. } => {
+                // The conv drains its padded input into the shared
+                // accumulator before the epilogue writes anything, so
+                // its output write happens strictly after its reads.
+                let (reads, pad_write) = match step.src {
+                    Src::Frame => (Vec::new(), Some(*unit)),
+                    Src::Flat(p) => (vec![BufId::Flat(p)], Some(*unit)),
+                    Src::Padded => (vec![BufId::Padded(*unit)], None),
+                };
+                StepIo {
+                    reads,
+                    pad_write,
+                    write,
+                    write_at_read: false,
+                }
+            }
+            StepKind::Add { with } => {
+                let mut reads = vec![BufId::Flat(*with)];
+                match step.src {
+                    Src::Frame => {}
+                    Src::Flat(p) => reads.push(BufId::Flat(p)),
+                    Src::Padded => unreachable!("elementwise never reads padded"),
+                }
+                StepIo {
+                    reads,
+                    pad_write: None,
+                    write,
+                    write_at_read: true,
+                }
+            }
+            _ => {
+                let reads = match step.src {
+                    Src::Frame => Vec::new(),
+                    Src::Flat(p) => vec![BufId::Flat(p)],
+                    Src::Padded => unreachable!("elementwise never reads padded"),
+                };
+                StepIo {
+                    reads,
+                    pad_write: None,
+                    write,
+                    write_at_read: true,
+                }
+            }
+        };
+        ios.push(io);
+    }
+    BufferProgram {
+        flat_len,
+        padded,
+        steps: ios,
+    }
+}
+
 /// The per-unit weight-tensor invariants every build path enforces.
 fn check_unit_weights(u: &ConvUnit, t: &QTensor) -> Result<(), String> {
     if t.shape.numel() != u.weight_len() {
@@ -282,18 +398,65 @@ fn add_slices(a: &[i64], b: &[i64], dst: &mut [i64]) {
 }
 
 /// Per-inference scratch: every buffer one in-flight frame needs, sized
-/// once from the compiled program and reused across frames.
+/// once from the runner's verified [`ArenaLayout`] and reused across
+/// frames — max-concurrent-live bytes, not one buffer per node.
 struct GraphArena {
-    /// Flat output buffer per node (empty for nodes the compiled program
-    /// never materializes — fused intermediates).
+    /// Flat slot pool: one buffer per colored slot, shared by every
+    /// materialized node the liveness proof found non-overlapping.
+    /// Every flat write covers its occupant's full length, so these
+    /// slots need no ownership tracking.
     flat: Vec<Vec<i64>>,
-    /// Padded input buffer per conv unit; zero borders are written here
-    /// exactly once, and only interiors are rewritten per frame.
+    /// Padded slot pool: interiors are rewritten per frame; borders
+    /// stay zero, restored by [`zero_pad_border`] whenever a slot
+    /// changes occupant geometry.
     padded: Vec<Vec<i64>>,
+    /// Current occupant unit of each padded slot (`usize::MAX` =
+    /// fresh, all-zero — any geometry's borders are already correct).
+    padded_owner: Vec<usize>,
     /// Shared conv accumulator, sized for the largest unit output.
     acc: Vec<i64>,
     /// Opaque kernel scratch per conv unit.
     scratch: Vec<KernelScratch>,
+}
+
+/// Hand out unit `unit`'s view of its (possibly shared) padded slot,
+/// re-zeroing the border cells first when the slot's last occupant was
+/// a different unit (whose geometry left values where `unit` needs
+/// zeros). Interior-only writers (`pad2d_into`, `fused_epilogue_into`)
+/// then fully define the buffer.
+fn claim_padded<'a>(
+    padded: &'a mut [Vec<i64>],
+    owner: &mut [usize],
+    slot: usize,
+    len: usize,
+    unit: usize,
+    cu: &ConvUnit,
+) -> &'a mut [i64] {
+    let buf = &mut padded[slot][..len];
+    if owner[slot] != unit {
+        zero_pad_border(buf, cu.ci, cu.hi, cu.wi, cu.pad);
+        owner[slot] = unit;
+    }
+    buf
+}
+
+/// Split the flat slot pool around write slot `d`: the write buffer
+/// plus the read-only remainder on each side.
+fn split_dst(pool: &mut [Vec<i64>], d: usize) -> (&mut Vec<i64>, &[Vec<i64>], &[Vec<i64>]) {
+    let (lo, rest) = pool.split_at_mut(d);
+    let (dst, hi) = rest.split_at_mut(1);
+    (&mut dst[0], lo, hi)
+}
+
+/// Index the read-only halves [`split_dst`] produced. `i != d` always:
+/// the layout verifier proves a streaming read never aliases the write
+/// slot (`A-LIVE`).
+fn pick<'a>(lo: &'a [Vec<i64>], hi: &'a [Vec<i64>], d: usize, i: usize) -> &'a Vec<i64> {
+    match i.cmp(&d) {
+        std::cmp::Ordering::Less => &lo[i],
+        std::cmp::Ordering::Greater => &hi[i - d - 1],
+        std::cmp::Ordering::Equal => unreachable!("read slot aliases the write slot"),
+    }
 }
 
 /// The graph runner: a compiled step program, one kernel per conv/FC
@@ -314,6 +477,12 @@ pub struct GraphRunner {
     calib: Vec<i64>,
     steps: Vec<Step>,
     flat_used: Vec<bool>,
+    /// Verified colored arena layout (slot per buffer, size per slot)
+    /// every [`GraphArena`] is allocated from.
+    layout: ArenaLayout,
+    /// Bytes the historical one-buffer-per-node arena would hold, for
+    /// reports.
+    arena_baseline: usize,
     pool: Option<Arc<ThreadPool>>,
     arenas: Mutex<Vec<GraphArena>>,
 }
@@ -363,7 +532,11 @@ impl GraphRunner {
     /// [`crate::packing::weight_pack_words`] counter does not advance)
     /// and no calibration pass — yet the runner is bit-identical to one
     /// built by [`new`](Self::new) under the same config on the same
-    /// host.
+    /// host. The stored [`ArenaLayout`] is not trusted either: it is
+    /// re-checked ([`crate::analysis::check_layout`]) against a freshly
+    /// compiled step program, and a layout that would alias live
+    /// buffers or undersize a slot is rejected with its `A-*` code
+    /// before any kernel executes.
     pub fn from_prepacked(
         graph: GraphSpec,
         weights: Vec<QTensor>,
@@ -371,6 +544,7 @@ impl GraphRunner {
         packed: Vec<crate::engine::PackedWeights>,
         shifts: Vec<u32>,
         calib: Vec<i64>,
+        layout: ArenaLayout,
     ) -> Result<GraphRunner, String> {
         let info = graph.validate().map_err(|e| e.to_string())?;
         if plan.layers.len() != info.units.len() {
@@ -431,6 +605,20 @@ impl GraphRunner {
             None
         };
         let (steps, flat_used) = compile(&graph, &info);
+        let program = program_of(&info, &steps, &flat_used);
+        let diags = crate::analysis::check_layout(&program, &layout);
+        if !diags.is_empty() {
+            return Err(format!(
+                "graph '{}': arena layout rejected: {}",
+                graph.name,
+                diags
+                    .iter()
+                    .map(|d| d.render())
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            ));
+        }
+        let arena_baseline = program.baseline_bytes();
         let runner = GraphRunner {
             graph,
             info,
@@ -441,6 +629,8 @@ impl GraphRunner {
             calib,
             steps,
             flat_used,
+            layout,
+            arena_baseline,
             pool,
             arenas: Mutex::new(Vec::new()),
         };
@@ -489,6 +679,19 @@ impl GraphRunner {
             None
         };
         let (steps, flat_used) = compile(&graph, &info);
+        let program = program_of(&info, &steps, &flat_used);
+        let layout = crate::analysis::plan_layout(&program).map_err(|diags| {
+            format!(
+                "graph '{}': unsound step program: {}",
+                graph.name,
+                diags
+                    .iter()
+                    .map(|d| d.render())
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            )
+        })?;
+        let arena_baseline = program.baseline_bytes();
         let mut runner = GraphRunner {
             graph,
             info,
@@ -499,6 +702,8 @@ impl GraphRunner {
             calib: Vec::new(),
             steps,
             flat_used,
+            layout,
+            arena_baseline,
             pool,
             arenas: Mutex::new(Vec::new()),
         };
@@ -577,33 +782,64 @@ impl GraphRunner {
             .collect()
     }
 
-    /// Size a fresh arena from the compiled program: padded buffers are
-    /// zeroed here once; kernel scratches are built empty and filled per
+    /// The verified colored arena layout every checked-out arena is
+    /// sized from — embedded in `.hkv` artifacts (format v3) so the
+    /// load path re-checks it instead of re-deriving it.
+    pub fn arena_layout(&self) -> &ArenaLayout {
+        &self.layout
+    }
+
+    /// Steady-state bytes of one arena's buffer pools (flat + padded
+    /// slots; the shared accumulator and kernel scratch are separate).
+    pub fn arena_bytes(&self) -> usize {
+        self.layout.total_bytes()
+    }
+
+    /// Bytes the historical one-buffer-per-node arena would have held —
+    /// the baseline the coloring is measured against in reports and
+    /// `BENCH_model.json`.
+    pub fn arena_baseline_bytes(&self) -> usize {
+        self.arena_baseline
+    }
+
+    /// Size a fresh arena from the verified colored layout: one
+    /// all-zero buffer per slot (fresh slots have correct borders for
+    /// any geometry); kernel scratches are built empty and filled per
     /// frame.
     fn new_arena(&self) -> GraphArena {
-        let mut flat = Vec::with_capacity(self.info.nodes.len());
-        for (ni, used) in self.info.nodes.iter().zip(&self.flat_used) {
-            if *used {
-                let (c, h, w) = ni.dims;
-                flat.push(vec![0i64; c * h * w]);
-            } else {
-                flat.push(Vec::new());
-            }
-        }
-        let mut padded = Vec::with_capacity(self.info.units.len());
+        let flat: Vec<Vec<i64>> = self
+            .layout
+            .flat_sizes
+            .iter()
+            .map(|&s| vec![0i64; s])
+            .collect();
+        let padded: Vec<Vec<i64>> = self
+            .layout
+            .padded_sizes
+            .iter()
+            .map(|&s| vec![0i64; s])
+            .collect();
+        let padded_owner = vec![usize::MAX; padded.len()];
         let mut scratch = Vec::with_capacity(self.info.units.len());
         let mut acc_len = 1usize;
-        for (u, kernel) in self.info.units.iter().zip(&self.kernels) {
-            padded.push(vec![0i64; u.padded_shape().input_len()]);
+        for kernel in &self.kernels {
             acc_len = acc_len.max(kernel.out_len());
             scratch.push(kernel.new_scratch());
         }
         GraphArena {
             flat,
             padded,
+            padded_owner,
             acc: vec![0i64; acc_len],
             scratch,
         }
+    }
+
+    /// Slot assignment of node `n`'s flat buffer (the compiled program
+    /// only names materialized nodes, so the mapping always exists).
+    fn flat_slot(&self, n: usize) -> (usize, usize) {
+        self.layout.flat_slot[n]
+            .unwrap_or_else(|| unreachable!("step program touches an unmaterialized node buffer"))
     }
 
     fn take_arena(&self) -> GraphArena {
@@ -684,63 +920,79 @@ impl GraphRunner {
     ) {
         let (c0, h0, w0) = self.graph.input;
         assert_eq!(frame.len(), c0 * h0 * w0, "frame dims mismatch");
+        let GraphArena {
+            flat,
+            padded,
+            padded_owner,
+            acc,
+            scratch,
+        } = arena;
         for step in &self.steps {
             match &step.kind {
                 StepKind::Conv { unit, fuse } => {
                     let u = *unit;
                     let cu = &self.info.units[u];
+                    let (ps, plen) = self.layout.padded_slot[u];
                     match step.src {
                         Src::Padded => {}
                         Src::Frame => {
-                            pad2d_into(frame, cu.ci, cu.hi, cu.wi, cu.pad, &mut arena.padded[u]);
+                            let dst = claim_padded(padded, padded_owner, ps, plen, u, cu);
+                            pad2d_into(frame, cu.ci, cu.hi, cu.wi, cu.pad, dst);
                         }
                         Src::Flat(p) => {
-                            pad2d_into(
-                                &arena.flat[p],
-                                cu.ci,
-                                cu.hi,
-                                cu.wi,
-                                cu.pad,
-                                &mut arena.padded[u],
-                            );
+                            let (fs, flen) = self.flat_slot(p);
+                            let dst = claim_padded(padded, padded_owner, ps, plen, u, cu);
+                            pad2d_into(&flat[fs][..flen], cu.ci, cu.hi, cu.wi, cu.pad, dst);
                         }
                     }
                     let out_len = self.kernels[u].out_len();
                     self.kernels[u].conv_into(
-                        &arena.padded[u],
-                        &mut arena.acc[..out_len],
-                        &mut arena.scratch[u],
+                        &padded[ps][..plen],
+                        &mut acc[..out_len],
+                        &mut scratch[u],
                         pool,
                     );
                     let (ho, wo) = cu.conv_out();
+                    // The conv has fully drained its input into `acc`,
+                    // so the epilogue may land in a slot the input (or
+                    // even this conv's own padded buffer) occupied.
                     match fuse {
                         Some(f) => {
                             let shift = self.shifts[f.requant];
                             match step.dst {
-                                Dest::Padded(u2) => fused_epilogue_into(
-                                    &arena.acc[..out_len],
-                                    shift,
-                                    f.bits,
-                                    cu.co,
-                                    ho,
-                                    wo,
-                                    f.pool,
-                                    &mut arena.padded[u2],
-                                    self.info.units[u2].pad,
-                                ),
-                                Dest::Flat(e) => fused_epilogue_into(
-                                    &arena.acc[..out_len],
-                                    shift,
-                                    f.bits,
-                                    cu.co,
-                                    ho,
-                                    wo,
-                                    f.pool,
-                                    &mut arena.flat[e],
-                                    0,
-                                ),
+                                Dest::Padded(u2) => {
+                                    let cu2 = &self.info.units[u2];
+                                    let (ds, dlen) = self.layout.padded_slot[u2];
+                                    let dst =
+                                        claim_padded(padded, padded_owner, ds, dlen, u2, cu2);
+                                    fused_epilogue_into(
+                                        &acc[..out_len],
+                                        shift,
+                                        f.bits,
+                                        cu.co,
+                                        ho,
+                                        wo,
+                                        f.pool,
+                                        dst,
+                                        cu2.pad,
+                                    );
+                                }
+                                Dest::Flat(e) => {
+                                    let (fs, flen) = self.flat_slot(e);
+                                    fused_epilogue_into(
+                                        &acc[..out_len],
+                                        shift,
+                                        f.bits,
+                                        cu.co,
+                                        ho,
+                                        wo,
+                                        f.pool,
+                                        &mut flat[fs][..flen],
+                                        0,
+                                    );
+                                }
                                 Dest::Head => fused_epilogue_into(
-                                    &arena.acc[..out_len],
+                                    &acc[..out_len],
                                     shift,
                                     f.bits,
                                     cu.co,
@@ -753,41 +1005,42 @@ impl GraphRunner {
                             }
                         }
                         None => match step.dst {
-                            Dest::Padded(u2) => pad2d_into(
-                                &arena.acc[..out_len],
-                                cu.co,
-                                ho,
-                                wo,
-                                self.info.units[u2].pad,
-                                &mut arena.padded[u2],
-                            ),
-                            Dest::Flat(e) => {
-                                arena.flat[e].copy_from_slice(&arena.acc[..out_len]);
+                            Dest::Padded(u2) => {
+                                let cu2 = &self.info.units[u2];
+                                let (ds, dlen) = self.layout.padded_slot[u2];
+                                let dst = claim_padded(padded, padded_owner, ds, dlen, u2, cu2);
+                                pad2d_into(&acc[..out_len], cu.co, ho, wo, cu2.pad, dst);
                             }
-                            Dest::Head => out.copy_from_slice(&arena.acc[..out_len]),
+                            Dest::Flat(e) => {
+                                let (fs, flen) = self.flat_slot(e);
+                                flat[fs][..flen].copy_from_slice(&acc[..out_len]);
+                            }
+                            Dest::Head => out.copy_from_slice(&acc[..out_len]),
                         },
                     }
                 }
                 StepKind::Add { with } => {
                     let (c, h, w) = step.in_dims;
                     let len = c * h * w;
+                    let (ws, _) = self.flat_slot(*with);
                     match step.dst {
                         Dest::Flat(e) => {
-                            let (lo, hi) = arena.flat.split_at_mut(e);
+                            let (ds, dlen) = self.flat_slot(e);
+                            let (dst, lo, hi) = split_dst(flat, ds);
                             let a: &[i64] = match step.src {
                                 Src::Frame => &frame[..len],
-                                Src::Flat(p) => &lo[p][..len],
+                                Src::Flat(p) => &pick(lo, hi, ds, self.flat_slot(p).0)[..len],
                                 Src::Padded => unreachable!("elementwise never reads padded"),
                             };
-                            add_slices(a, &lo[*with][..len], &mut hi[0][..len]);
+                            add_slices(a, &pick(lo, hi, ds, ws)[..len], &mut dst[..dlen]);
                         }
                         Dest::Head => {
                             let a: &[i64] = match step.src {
                                 Src::Frame => &frame[..len],
-                                Src::Flat(p) => &arena.flat[p][..len],
+                                Src::Flat(p) => &flat[self.flat_slot(p).0][..len],
                                 Src::Padded => unreachable!("elementwise never reads padded"),
                             };
-                            add_slices(a, &arena.flat[*with][..len], out);
+                            add_slices(a, &flat[ws][..len], out);
                         }
                         Dest::Padded(_) => unreachable!("add never streams into padded"),
                     }
@@ -797,10 +1050,11 @@ impl GraphRunner {
                     let in_len = c * h * w;
                     match step.dst {
                         Dest::Flat(e) => {
-                            let (lo, hi) = arena.flat.split_at_mut(e);
+                            let (ds, dlen) = self.flat_slot(e);
+                            let (dst, lo, hi) = split_dst(flat, ds);
                             let src: &[i64] = match step.src {
                                 Src::Frame => frame,
-                                Src::Flat(p) => &lo[p],
+                                Src::Flat(p) => pick(lo, hi, ds, self.flat_slot(p).0),
                                 Src::Padded => unreachable!("elementwise never reads padded"),
                             };
                             apply_elementwise(
@@ -809,14 +1063,14 @@ impl GraphRunner {
                                 c,
                                 h,
                                 w,
-                                &mut hi[0],
+                                &mut dst[..dlen],
                                 &self.shifts,
                             );
                         }
                         Dest::Head => {
                             let src: &[i64] = match step.src {
                                 Src::Frame => frame,
-                                Src::Flat(p) => &arena.flat[p],
+                                Src::Flat(p) => &flat[self.flat_slot(p).0],
                                 Src::Padded => unreachable!("elementwise never reads padded"),
                             };
                             apply_elementwise(kind, &src[..in_len], c, h, w, out, &self.shifts);
@@ -1019,6 +1273,40 @@ mod tests {
         }
         // The head conv writes the caller's buffer directly.
         assert_eq!(steps.last().unwrap().dst, Dest::Head);
+    }
+
+    #[test]
+    fn fused_chain_collapses_the_padded_pool_to_one_slot() {
+        use crate::models::ultranet::ultranet_tiny;
+        let g: GraphSpec = ultranet_tiny().into();
+        let info = g.validate().unwrap();
+        let program = buffer_program(&g, &info);
+        assert!(crate::analysis::analyze(&program).is_empty());
+        let layout = crate::analysis::plan_layout(&program).unwrap();
+        // Every conv drains into the shared accumulator before its
+        // epilogue writes the next padded interior, so one slot (sized
+        // for the largest geometry) carries the whole fused chain.
+        assert_eq!(layout.padded_sizes.len(), 1, "{:?}", layout.padded_sizes);
+        let max_len = program.padded.iter().map(|g| g.input_len()).max().unwrap();
+        assert_eq!(layout.padded_sizes[0], max_len);
+        assert!(layout.total_bytes() < program.baseline_bytes());
+    }
+
+    #[test]
+    fn residual_graph_colors_below_the_per_node_baseline() {
+        let g = residual_graph();
+        let weights = random_graph_weights(&g, 95).unwrap();
+        let r = GraphRunner::new(g, weights, EngineConfig::named("hikonv")).unwrap();
+        assert!(
+            r.arena_bytes() < r.arena_baseline_bytes(),
+            "colored {} >= baseline {}",
+            r.arena_bytes(),
+            r.arena_baseline_bytes()
+        );
+        // The layout the runner executes re-checks clean.
+        let info = r.graph().validate().unwrap();
+        let program = buffer_program(r.graph(), &info);
+        assert!(crate::analysis::check_layout(&program, r.arena_layout()).is_empty());
     }
 
     #[test]

@@ -247,6 +247,37 @@ pub fn pad2d_into(input: &[i64], c: usize, h: usize, w: usize, pad: usize, out: 
     }
 }
 
+/// Zero only the *border* cells of a padded `c × (h+2·pad) × (w+2·pad)`
+/// buffer, leaving the interior untouched. [`pad2d_into`] and
+/// [`fused_epilogue_into`] write interiors only and rely on zero
+/// borders — when a colored arena slot changes occupant to a different
+/// geometry (`GraphArena`'s padded-slot sharing), this restores that
+/// invariant without the cost (or allocation) of zeroing the whole
+/// slot. No-op for `pad == 0`.
+pub fn zero_pad_border(buf: &mut [i64], c: usize, h: usize, w: usize, pad: usize) {
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    assert_eq!(buf.len(), c * hp * wp);
+    if pad == 0 {
+        return;
+    }
+    for ci in 0..c {
+        let base = ci * hp * wp;
+        // Top and bottom border rows, full width.
+        for y in 0..pad {
+            let top = base + y * wp;
+            buf[top..top + wp].fill(0);
+            let bot = base + (hp - 1 - y) * wp;
+            buf[bot..bot + wp].fill(0);
+        }
+        // Left/right border columns of the interior rows.
+        for y in pad..hp - pad {
+            let row = base + y * wp;
+            buf[row..row + pad].fill(0);
+            buf[row + wp - pad..row + wp].fill(0);
+        }
+    }
+}
+
 /// The fused inter-layer epilogue: ReLU + right-shift requantization to
 /// unsigned `bits` levels, optionally a 2×2 max-pool (stride 2), written
 /// directly into the interior of the next layer's padded buffer (`dst` is
@@ -315,6 +346,23 @@ mod tests {
             a_bits: 4,
             w_bits: 4,
         }
+    }
+
+    #[test]
+    fn zero_pad_border_restores_the_padding_invariant() {
+        let (c, h, w, pad) = (2usize, 3usize, 4usize, 2usize);
+        let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+        // A slot full of junk from a previous occupant...
+        let mut buf = vec![77i64; c * hp * wp];
+        zero_pad_border(&mut buf, c, h, w, pad);
+        // ...then an interior write must reproduce pad2d exactly.
+        let interior: Vec<i64> = (1..=(c * h * w) as i64).collect();
+        pad2d_into(&interior, c, h, w, pad, &mut buf);
+        assert_eq!(buf, pad2d(&interior, c, h, w, pad).into_owned());
+        // pad == 0 is a no-op on any contents.
+        let mut flat = vec![5i64; c * h * w];
+        zero_pad_border(&mut flat, c, h, w, 0);
+        assert!(flat.iter().all(|&v| v == 5));
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Arena-coloring acceptance suite.
+//!
+//! The dataflow pass (`hikonv::analysis`) colors step-program buffers
+//! into a shared slot pool; these tests prove the three claims the
+//! coloring ships under:
+//!
+//! 1. **Bit-exactness.** A runner executing on the colored arena agrees
+//!    with the uncolored per-node walk (`infer_unfused`) and the
+//!    strided-reference oracle for every zoo workload under every
+//!    registered kernel and the auto planner.
+//! 2. **It actually shrinks memory.** Colored arena bytes never exceed
+//!    the one-buffer-per-node baseline, and strictly shrink on the
+//!    `residual` and `mixed` workloads (the ones `BENCH_model.json`
+//!    records).
+//! 3. **Unsound layouts never execute.** A hand-edited artifact whose
+//!    embedded layout folds concurrently-live buffers onto one slot is
+//!    rejected at load with a stable `A-*` code — the checksum passes
+//!    (the file is internally consistent), the dataflow proof does not.
+
+use hikonv::artifact::Artifact;
+use hikonv::engine::{EngineConfig, EnginePlan};
+use hikonv::models::{random_graph_weights, zoo, GraphRunner, GraphSpec};
+use hikonv::testing::assert_seq_eq;
+use hikonv::util::rng::Rng;
+
+/// Every zoo workload that the execution grid infers on (full-size
+/// `ultranet` is covered by the planner-level grid below; running its
+/// inference under the naive baseline kernel is debug-build-prohibitive).
+fn inference_workloads() -> Vec<GraphSpec> {
+    let mut v: Vec<GraphSpec> = ["ultranet-tiny", "strided", "fc-head", "residual", "mixed"]
+        .iter()
+        .map(|n| zoo::build(n).unwrap())
+        .collect();
+    v.push(zoo::combo());
+    v
+}
+
+fn engine_matrix() -> Vec<EngineConfig> {
+    vec![
+        EngineConfig::named("baseline"),
+        EngineConfig::named("hikonv"),
+        EngineConfig::named("hikonv-tiled").with_threads(2),
+        EngineConfig::named("im2row").with_threads(2),
+        EngineConfig::auto().with_threads(2),
+    ]
+}
+
+#[test]
+fn colored_arenas_are_bit_exact_for_every_workload_and_kernel() {
+    for graph in inference_workloads() {
+        let weights = random_graph_weights(&graph, 0xC01).unwrap();
+        let (c, h, w) = graph.input;
+        let mut rng = Rng::new(0xC02 ^ graph.nodes.len() as u64);
+        let frames: Vec<Vec<i64>> = (0..2)
+            .map(|_| rng.quant_unsigned_vec(graph.input_bits, c * h * w))
+            .collect();
+        for config in engine_matrix() {
+            let label = config.to_string();
+            let r = GraphRunner::new(graph.clone(), weights.clone(), config)
+                .unwrap_or_else(|e| panic!("{}/{label}: {e}", graph.name));
+            assert!(
+                r.arena_bytes() <= r.arena_baseline_bytes(),
+                "{}/{label}: colored arena ({} B) exceeds the per-node baseline ({} B)",
+                graph.name,
+                r.arena_bytes(),
+                r.arena_baseline_bytes()
+            );
+            for frame in &frames {
+                let colored = r.infer(frame);
+                // The per-node walk allocates one buffer per node — the
+                // uncolored layout the colored arena must agree with.
+                assert_seq_eq(&colored, &r.infer_unfused(frame))
+                    .unwrap_or_else(|e| panic!("{}/{label} vs unfused: {e}", graph.name));
+                assert_seq_eq(&colored, &r.infer_oracle(frame))
+                    .unwrap_or_else(|e| panic!("{}/{label} vs oracle: {e}", graph.name));
+            }
+        }
+    }
+}
+
+#[test]
+fn every_zoo_workload_plans_a_sound_colored_layout() {
+    // Planner-level grid (no weights, no inference): all six zoo names,
+    // including full-size ultranet, get an arena summary whose colored
+    // footprint never exceeds the baseline.
+    for name in zoo::NAMES {
+        let graph = zoo::build(name).unwrap();
+        let plan = EnginePlan::plan_graph(&graph, &EngineConfig::auto().with_threads(1))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let arena = plan
+            .arena
+            .unwrap_or_else(|| panic!("{name}: plan_graph must attach an arena summary"));
+        assert!(
+            arena.total_bytes <= arena.baseline_bytes,
+            "{name}: colored {} B > baseline {} B",
+            arena.total_bytes,
+            arena.baseline_bytes
+        );
+        assert_eq!(arena.per_layer_bytes.len(), graph.validate().unwrap().units.len());
+    }
+}
+
+#[test]
+fn residual_and_mixed_workloads_strictly_shrink() {
+    // The two workloads whose footprint reduction BENCH_model.json
+    // records: coloring must beat one-buffer-per-node, not just tie it.
+    for name in ["residual", "mixed"] {
+        let graph = zoo::build(name).unwrap();
+        let weights = random_graph_weights(&graph, 0xC03).unwrap();
+        let r = GraphRunner::new(graph, weights, EngineConfig::named("hikonv")).unwrap();
+        assert!(
+            r.arena_bytes() < r.arena_baseline_bytes(),
+            "{name}: colored arena ({} B) must be strictly below baseline ({} B)",
+            r.arena_bytes(),
+            r.arena_baseline_bytes()
+        );
+    }
+}
+
+#[test]
+fn artifact_with_aliasing_layout_is_rejected_at_load_with_a_live() {
+    // Hand-edit a residual artifact: fold every flat buffer onto slot 0.
+    // The residual skip connection keeps its operand live across the
+    // branch, so this layout would let a later in-place write clobber a
+    // value the `Add` still reads. Round-trip through bytes so the file
+    // is internally consistent — the checksum passes; the dataflow proof
+    // is what rejects it, before any kernel is built or executed.
+    let graph = zoo::build("residual").unwrap();
+    let weights = random_graph_weights(&graph, 0xC04).unwrap();
+    let mut art = Artifact::compile(graph, weights, EngineConfig::auto().with_threads(1)).unwrap();
+    let folded_len = art
+        .layout
+        .flat_slot
+        .iter()
+        .flatten()
+        .map(|&(_, len)| len)
+        .max()
+        .expect("residual materializes flat buffers");
+    for entry in art.layout.flat_slot.iter_mut().flatten() {
+        entry.0 = 0;
+    }
+    art.layout.flat_sizes = vec![folded_len];
+    let reloaded = Artifact::from_bytes(&art.to_bytes()).expect("checksum is self-consistent");
+    let err = reloaded.into_runner().unwrap_err();
+    assert!(err.to_string().contains("A-LIVE"), "{err}");
+}

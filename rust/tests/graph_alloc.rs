@@ -11,6 +11,7 @@
 //! The counter is global to the test binary, so the tests serialize on
 //! a mutex instead of relying on test threading flags.
 
+use hikonv::coordinator::{serve_registry, ModelRegistry, MultiServeConfig};
 use hikonv::engine::EngineConfig;
 use hikonv::models::{random_graph_weights, GraphRunner, GraphSpec};
 use hikonv::util::rng::Rng;
@@ -115,6 +116,52 @@ fn graph_construction_widens_weights_exactly_once() {
         "weights must widen through one shared scratch, not per kernel"
     );
     drop(runner);
+}
+
+#[test]
+fn multi_tenant_steady_state_runners_stay_zero_alloc_after_serving() {
+    let _gate = GATE.lock().unwrap();
+    // Two tenants serve a full supervised run (workers, queues and
+    // reports all allocate freely), then each tenant's warmed runner —
+    // the colored per-tenant arena the registry hands its workers —
+    // must perform steady-state `infer_into` without touching the heap.
+    let mut reg = ModelRegistry::new(EngineConfig::named("hikonv").with_threads(1));
+    for name in ["a", "b"] {
+        let g = feature_graph();
+        let w = random_graph_weights(&g, 0x3AD).unwrap();
+        reg.register_graph(name, g, w).unwrap();
+    }
+    let report = serve_registry(
+        &mut reg,
+        &MultiServeConfig {
+            frames: 8,
+            max_batch: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(report.accounted());
+    assert_eq!(report.total_completed(), 16);
+    for name in ["a", "b"] {
+        let runner = reg.tenant(name).unwrap().cell.get();
+        let (c, h, w) = runner.graph().input;
+        let mut rng = Rng::new(0x3AE);
+        let warm_a = rng.quant_unsigned_vec(4, c * h * w);
+        let warm_b = rng.quant_unsigned_vec(4, c * h * w);
+        let frame = rng.quant_unsigned_vec(4, c * h * w);
+        let mut head = vec![0i64; runner.head_len()];
+        runner.infer_into(&warm_a, &mut head);
+        runner.infer_into(&warm_b, &mut head);
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        runner.infer_into(&frame, &mut head);
+        COUNTING.store(false, Ordering::SeqCst);
+        let allocs = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            allocs, 0,
+            "tenant {name}: steady-state infer_into allocated {allocs} times after serving"
+        );
+    }
 }
 
 #[test]
